@@ -1,0 +1,72 @@
+//! OpenAI-style HTTP API demo: boots a disaggregated cluster, starts the
+//! REST frontend, exercises it with a loopback client, and prints the
+//! responses — the paper's §4.5 online-inference frontend.
+//!
+//! Run:  cargo run --release --example api_server
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use hydrainfer::api::ApiServer;
+use hydrainfer::instance::RealCluster;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::ClusterSpec;
+
+fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(120)))?;
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn http_get(addr: &str, path: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {addr}\r\n\r\n")?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== HydraInfer OpenAI-style API demo ==");
+    println!("loading + compiling artifacts (one-time, ~30s)...");
+    let cluster = ClusterSpec::parse("1EP1D")?;
+    let rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel)?;
+    let server = ApiServer::start(rc, "127.0.0.1:0")?;
+    let addr = server.addr.to_string();
+    println!("serving on http://{addr}");
+
+    let health = http_get(&addr, "/health")?;
+    println!("\nGET /health ->\n{}", health.lines().last().unwrap_or(""));
+
+    let reqs = [
+        r#"{"prompt": "describe the image", "max_tokens": 6, "image": true}"#,
+        r#"{"prompt": "hello", "max_tokens": 5}"#,
+        r#"{"prompt": "what color?", "max_tokens": 4, "image": 42, "temperature": 0.8, "seed": 3}"#,
+    ];
+    for body in reqs {
+        println!("\nPOST /v1/completions {body}");
+        let resp = http_post(&addr, "/v1/completions", body)?;
+        println!("-> {}", resp.lines().last().unwrap_or(""));
+        assert!(resp.contains("200 OK"), "request failed: {resp}");
+    }
+
+    // error handling: bad JSON and unknown route
+    let bad = http_post(&addr, "/v1/completions", "{nope")?;
+    assert!(bad.contains("400"), "bad json should 400");
+    let nf = http_get(&addr, "/nope")?;
+    assert!(nf.contains("404"), "unknown route should 404");
+    println!("\nerror paths OK (400 on bad JSON, 404 on unknown route)");
+
+    server.shutdown();
+    println!("api_server demo OK");
+    Ok(())
+}

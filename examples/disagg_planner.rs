@@ -1,0 +1,65 @@
+//! Hybrid EPD disaggregation planner demo (paper §4.4, Figs. 11–12).
+//!
+//! For a chosen model/dataset/SLO, enumerates disaggregation methods
+//! (E+P+D, EP+D, ED+P, colocated EPD) × node ratios, evaluates each by
+//! simulating the workload on the H800 roofline, and prints the ranked
+//! candidates — the "profile-driven approach that automatically searches
+//! for the optimal node ratio".
+//!
+//! Run:  cargo run --release --example disagg_planner [-- <model> <dataset> <gpus>]
+
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::planner::{plan, PlannerConfig};
+use hydrainfer::workload::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = args.first().map(String::as_str).unwrap_or("llava-1.5-7b");
+    let dataset_name = args.get(1).map(String::as_str).unwrap_or("textcaps");
+    let gpus: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let model = ModelSpec::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let dataset = Dataset::by_name(dataset_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_name}"))?;
+    let slo = SloSpec::paper_table3(model_name, dataset_name).unwrap_or(SloSpec::new(0.25, 0.04));
+
+    println!("== Hybrid EPD disaggregation planner ==");
+    println!(
+        "model={model_name} dataset={dataset_name} gpus={gpus} SLO=(TTFT {:.2}s, TPOT {:.3}s)",
+        slo.ttft, slo.tpot
+    );
+    println!("simulating every method x node ratio (this sweeps dozens of configs)...\n");
+
+    let pc = PlannerConfig {
+        gpus,
+        sample_requests: 120,
+        max_rate: 96.0,
+        rate_tol: 1.0,
+        ..Default::default()
+    };
+    let p = plan(&model, &dataset, slo, &pc);
+
+    println!(
+        "{:<8} {:<10} {:>12} {:>12} {:>12}",
+        "method", "cluster", "goodput r/s", "ttft mean", "tpot mean"
+    );
+    for c in &p.candidates {
+        println!(
+            "{:<8} {:<10} {:>12.2} {:>12.4} {:>12.4}",
+            c.method.name(),
+            c.cluster.label(),
+            c.goodput,
+            c.ttft_mean,
+            c.tpot_mean
+        );
+    }
+    let best = p.best();
+    println!(
+        "\nselected: {} with cluster {} (goodput {:.2} req/s under the 90% SLO target)",
+        best.method.name(),
+        best.cluster.label(),
+        best.goodput
+    );
+    Ok(())
+}

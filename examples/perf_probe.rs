@@ -1,0 +1,42 @@
+// Real-path decode breakdown probe (perf pass).
+use std::time::Instant;
+use hydrainfer::runtime::{DecodeInput, Engine};
+
+fn main() {
+    let engine = Engine::load("artifacts").unwrap();
+    let cfg = *engine.cfg();
+    let pool_len = cfg.layers * cfg.pool_blocks * cfg.block_size * cfg.hidden;
+    let k_pool: Vec<f32> = (0..pool_len).map(|i| (i % 97) as f32 / 97.0).collect();
+    let v_pool = k_pool.clone();
+    for b in [1usize, 2, 4, 8] {
+        let reqs: Vec<DecodeInput> = (0..b).map(|i| DecodeInput {
+            token: 5 + i as u32, position: 40, block_table: (0..8).map(|x| (i*8+x) as u32).collect(), seq_len: 40,
+        }).collect();
+        // warmup
+        for _ in 0..3 { engine.decode(&reqs, &k_pool, &v_pool).unwrap(); }
+        let n = 30;
+        let t0 = Instant::now();
+        for _ in 0..n { engine.decode(&reqs, &k_pool, &v_pool).unwrap(); }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        println!("decode b={b}: {:.2} ms/iter  ({:.0} tok/s)", per*1e3, b as f64/per);
+    }
+    // literal-marshalling cost alone
+    let t0 = Instant::now();
+    let n = 50;
+    for _ in 0..n {
+        let l = xla::Literal::vec1(&k_pool).reshape(&[cfg.layers as i64, cfg.pool_blocks as i64, cfg.block_size as i64, cfg.hidden as i64]).unwrap();
+        std::hint::black_box(&l);
+    }
+    println!("pool literal marshal: {:.2} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+    // prefill + encode
+    let tokens: Vec<u32> = (10..40).collect();
+    for _ in 0..2 { engine.prefill(&tokens, None).unwrap(); }
+    let t0 = Instant::now();
+    for _ in 0..20 { engine.prefill(&tokens, None).unwrap(); }
+    println!("prefill s32: {:.2} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+    let px = vec![0.1f32; cfg.img_size*cfg.img_size*cfg.channels];
+    for _ in 0..2 { engine.encode(&[px.clone()]).unwrap(); }
+    let t0 = Instant::now();
+    for _ in 0..20 { engine.encode(&[px.clone()]).unwrap(); }
+    println!("encode b1: {:.2} ms", t0.elapsed().as_secs_f64()/20.0*1e3);
+}

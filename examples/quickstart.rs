@@ -1,0 +1,51 @@
+//! Quickstart: the smallest end-to-end HydraInfer call.
+//!
+//! Boots a single colocated EPD instance over the AOT artifacts, submits
+//! one multimodal and one text request, and prints the generated tokens
+//! with their latency metrics.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use std::time::Duration;
+
+use hydrainfer::core::SamplingParams;
+use hydrainfer::instance::RealCluster;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::ClusterSpec;
+use hydrainfer::vision::Image;
+
+fn main() -> anyhow::Result<()> {
+    println!("== HydraInfer quickstart ==");
+    println!("loading + compiling artifacts (one-time, ~30s)...");
+    let cluster = ClusterSpec::parse("1EPD")?;
+    let mut rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel)?;
+
+    let image = Image::synthetic(224, 224, 1234); // preprocessed to 32x32
+    let sampling = SamplingParams { max_tokens: 8, ..Default::default() };
+
+    let id1 = rc.submit("what is in the image?", Some(&image), sampling.clone())?;
+    let id2 = rc.submit("hello world", None, sampling)?;
+    println!("submitted requests {id1} (multimodal) and {id2} (text-only)");
+
+    let results = rc.collect(2, Duration::from_secs(60));
+    for r in &results {
+        let lc = &r.lifecycle;
+        println!(
+            "\nrequest {}  ->  {} tokens {:?}\n  text: {:?}\n  TTFT {:.3}s  mean TPOT {:.4}s  e2e {:.3}s",
+            r.id,
+            r.tokens.len(),
+            r.tokens,
+            r.text,
+            lc.ttft().unwrap_or(f64::NAN),
+            {
+                let t = lc.tpots();
+                if t.is_empty() { f64::NAN } else { t.iter().sum::<f64>() / t.len() as f64 }
+            },
+            lc.e2e().unwrap_or(f64::NAN),
+        );
+    }
+    rc.shutdown();
+    println!("\nquickstart OK ({} results)", results.len());
+    Ok(())
+}

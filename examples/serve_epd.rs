@@ -1,0 +1,118 @@
+//! End-to-end validation driver (DESIGN.md §5, recorded in EXPERIMENTS.md):
+//! serve a Poisson stream of batched multimodal requests through a REAL
+//! hybrid-EPD-disaggregated cluster — tiny VLM executed via PJRT from the
+//! AOT JAX/Pallas artifacts, stage-level batching (Algorithm 1), pull-based
+//! KV/image-cache migration between instances — and report latency,
+//! throughput, and SLO attainment.
+//!
+//! Run:  cargo run --release --example serve_epd [-- <cluster> <n> <rate>]
+//! e.g.  cargo run --release --example serve_epd -- 1E1P2D 40 4.0
+
+use std::time::{Duration, Instant};
+
+use hydrainfer::core::SamplingParams;
+use hydrainfer::instance::RealCluster;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::ClusterSpec;
+use hydrainfer::util::rng::Rng;
+use hydrainfer::util::stats::Summary;
+use hydrainfer::vision::Image;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cluster_s = args.first().map(String::as_str).unwrap_or("1E1P2D");
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+
+    println!("== HydraInfer end-to-end serving driver ==");
+    println!("cluster {cluster_s}, {n} requests, Poisson rate {rate}/s");
+    println!("loading + compiling artifacts (one-time, ~30s)...");
+    let cluster = ClusterSpec::parse(cluster_s)?;
+    let mut rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel)?;
+
+    // TextCaps-like tiny workload: every request carries an image, short
+    // prompt, fixed output budget (ignore_eos, like the paper's §5.1).
+    let mut rng = Rng::new(7);
+    let prompts = [
+        "describe the image",
+        "what text is visible?",
+        "caption this picture",
+        "what is shown here?",
+    ];
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut next_arrival = 0.0f64;
+    for i in 0..n {
+        next_arrival += rng.exp(rate);
+        let wait = next_arrival - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        let with_image = rng.f64() < 0.8; // mostly multimodal
+        let image = Image::synthetic(128, 128, i as u64);
+        let sampling = SamplingParams {
+            max_tokens: 4 + rng.below(8),
+            ignore_eos: true,
+            ..Default::default()
+        };
+        rc.submit(
+            prompts[i % prompts.len()],
+            if with_image { Some(&image) } else { None },
+            sampling,
+        )?;
+        submitted += 1;
+    }
+    println!("submitted {submitted} requests in {:.1}s; draining...", t0.elapsed().as_secs_f64());
+
+    let results = rc.collect(submitted, Duration::from_secs(300));
+    let wall = t0.elapsed().as_secs_f64();
+    rc.shutdown();
+
+    let mut ttft = Summary::new();
+    let mut tpot = Summary::new();
+    let mut e2e = Summary::new();
+    let mut tokens = 0usize;
+    for r in &results {
+        let lc = &r.lifecycle;
+        if let Some(t) = lc.ttft() {
+            ttft.add(t);
+        }
+        tpot.extend(&lc.tpots());
+        if let Some(t) = lc.e2e() {
+            e2e.add(t);
+        }
+        tokens += r.tokens.len();
+    }
+    // a generous SLO for the CPU testbed; attainment uses the paper's rule
+    let (ttft_slo, tpot_slo) = (5.0, 1.0);
+    let attained = results
+        .iter()
+        .filter(|r| r.lifecycle.meets_slo(ttft_slo, tpot_slo))
+        .count();
+
+    println!("\n== results ==");
+    println!("completed {}/{} in {wall:.1}s", results.len(), submitted);
+    println!("throughput: {:.2} req/s, {:.1} tok/s", results.len() as f64 / wall, tokens as f64 / wall);
+    println!(
+        "TTFT  mean {:.3}s  p50 {:.3}s  p90 {:.3}s  p99 {:.3}s",
+        ttft.mean(),
+        ttft.p50(),
+        ttft.p90(),
+        ttft.p99()
+    );
+    println!(
+        "TPOT  mean {:.4}s  p50 {:.4}s  p90 {:.4}s  p99 {:.4}s",
+        tpot.mean(),
+        tpot.p50(),
+        tpot.p90(),
+        tpot.p99()
+    );
+    println!("E2E   mean {:.3}s  p90 {:.3}s", e2e.mean(), e2e.p90());
+    println!(
+        "SLO attainment (TTFT<{ttft_slo}s, 90% TPOT<{tpot_slo}s): {:.1}%",
+        attained as f64 / results.len().max(1) as f64 * 100.0
+    );
+    assert_eq!(results.len(), submitted, "all requests must complete");
+    println!("\nserve_epd OK");
+    Ok(())
+}

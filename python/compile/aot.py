@@ -1,0 +1,157 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`; Python never runs on the request path.
+
+HLO text (NOT `lowered.compile()` / proto `.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+The manifest carries everything the rust runtime needs: model config
+(shared constants like block size and special token ids) and, per artifact,
+the entry name, stage, bucket, and input/output shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import CFG, init_params, make_entries
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # positional bool = print_large_constants: the baked weights MUST survive
+    # the text round-trip (default printing elides them as `{...}`).
+    return comp.as_hlo_text(True)
+
+
+def _stage_of(name: str) -> str:
+    return name.split("_")[0]  # encode / prefill / decode
+
+
+def _bucket_of(name: str) -> int:
+    # encode_b2 -> 2, prefill_mm_s48 -> 48, decode_b8 -> 8
+    tail = name.rsplit("_", 1)[1]
+    return int(tail[1:])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    params = init_params(args.seed)
+    entries = make_entries(params)
+    if args.only:
+        keep = set(args.only.split(","))
+        entries = {k: v for k, v in entries.items() if k in keep}
+
+    manifest = {"config": dict(CFG), "seed": args.seed, "artifacts": []}
+    for name, (fn, example_args) in entries.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "stage": _stage_of(name),
+                "bucket": _bucket_of(name),
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": str(a.dtype)}
+                    for a in example_args
+                ],
+            }
+        )
+        print(f"  lowered {name:>18s}  {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s")
+
+    if args.only is None:  # partial (debug) runs must not clobber the manifest
+        with open(os.path.join(args.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    golden = make_golden(params)
+    with open(os.path.join(args.out, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+def make_golden(params):
+    """Deterministic input/output pairs for the rust runtime smoke test.
+
+    The rust side reconstructs the same inputs (simple ramp patterns — no
+    RNG coupling needed) and asserts the outputs below to 1e-4. This pins
+    the full AOT round-trip: jax -> HLO text -> xla_extension parse ->
+    PJRT CPU compile -> execute.
+    """
+    import numpy as np
+
+    from .model import decode_step, encode, prefill_mm
+
+    c = CFG
+    h, t, l = c["hidden"], c["img_tokens"], c["layers"]
+    nb, blk, maxb = c["pool_blocks"], c["block_size"], c["max_blocks_per_seq"]
+    out = {}
+
+    # encode_b1: pixels = ramp in [-1, 1]
+    n = c["img_size"] * c["img_size"] * c["channels"]
+    px = (np.arange(n, dtype=np.float32) / n * 2.0 - 1.0).reshape(
+        1, c["img_size"], c["img_size"], c["channels"]
+    )
+    emb = np.asarray(encode(params, px))
+    out["encode_b1"] = {
+        "sum": float(emb.sum()),
+        "head": [float(x) for x in emb.reshape(-1)[:8]],
+    }
+
+    # prefill_mm_s48: image embeds = ramp, tokens = 10,11,..., txt_len=20
+    ie = (np.arange(t * h, dtype=np.float32) / (t * h) - 0.5).reshape(1, t, h)
+    ids = np.zeros((1, 32), np.int32)
+    ids[0, :20] = np.arange(10, 30)
+    logits, k, v = prefill_mm(params, ie, ids, 20)
+    logits, k, v = np.asarray(logits), np.asarray(k), np.asarray(v)
+    valid = t + 20
+    out["prefill_mm_s48"] = {
+        "logits_head": [float(x) for x in logits[:8]],
+        "argmax": int(logits.argmax()),
+        "k_valid_sum": float(k[:, :valid].sum()),
+        "v_valid_sum": float(v[:, :valid].sum()),
+    }
+
+    # decode_b1: pools = ramp, block table = [0..maxb), seq_len = 20
+    pool = (np.arange(l * nb * blk * h, dtype=np.float32) % 997 / 997 - 0.5).reshape(
+        l, nb, blk, h
+    )
+    tok = np.asarray([42], np.int32)
+    pos = np.asarray([20], np.int32)
+    bt = np.arange(maxb, dtype=np.int32).reshape(1, maxb)
+    sl = np.asarray([20], np.int32)
+    dl, kn, vn = decode_step(params, tok, pos, pool, -pool, bt, sl)
+    dl, kn, vn = np.asarray(dl), np.asarray(kn), np.asarray(vn)
+    out["decode_b1"] = {
+        "logits_head": [float(x) for x in dl[0, :8]],
+        "argmax": int(dl[0].argmax()),
+        "k_new_sum": float(kn.sum()),
+        "v_new_sum": float(vn.sum()),
+    }
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Pallas fused write-block kernel, shared by the KV cache and image cache.
+
+Paper §4.5: "To reduce performance overhead caused by multiple small
+write-block kernel launches, we implement a unified fused kernel for both
+KV cache and image cache operations." Both caches expose the same paged
+layout [NB, BLK, H] and flat slot ids, so one scatter kernel serves both:
+the image cache is a single-layer one-token cache, the KV cache calls it
+per layer per K/V plane.
+
+Grid is (B,); each step writes one row into its slot (block = slot // BLK,
+offset = slot % BLK). Slots must be unique within a call — on real hardware
+duplicate slots would race; in interpret mode last-writer-wins.
+
+input_output_aliases donates the pool buffer so the scatter is in-place.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cache_write_kernel(new_ref, slot_ref, pool_in_ref, pool_out_ref, *, blk: int):
+    del pool_in_ref  # aliased to pool_out_ref (donated buffer)
+    slot = slot_ref[0]
+    b = slot // blk
+    off = slot % blk
+    pl.store(
+        pool_out_ref,
+        (pl.dslice(b, 1), pl.dslice(off, 1), slice(None)),
+        new_ref[...].reshape(1, 1, -1),
+    )
+
+
+def cache_write(pool, new, slots):
+    """Scatter new [B,H] into pool [NB,BLK,H] at flat slot ids [B]."""
+    nb, blk, h = pool.shape
+    bsz = new.shape[0]
+    return pl.pallas_call(
+        functools.partial(_cache_write_kernel, blk=blk),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((nb, blk, h), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((nb, blk, h), lambda b: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk, h), pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=True,
+    )(new, slots.astype(jnp.int32), pool)

@@ -1,0 +1,66 @@
+"""Pallas tiled causal-attention kernel for the prefill stage.
+
+TPU adaptation of FlashAttention: the grid is (q_block, head); each step
+streams one [BQ, dh] query tile into VMEM and walks the key/value sequence
+causally. At serving-bucket sizes (S <= 128) the full per-head K/V strip is
+a single VMEM tile, so the walk degenerates to one fused score+softmax+PV
+MXU pass; the BlockSpecs express the HBM->VMEM schedule that generalizes to
+longer S (loop over K tiles with an online-softmax accumulator).
+
+Padding contract: key/query rows >= valid_len are garbage and masked; output
+rows >= valid_len are zeroed (the rust side never reads them, but a defined
+value keeps the oracle comparison exact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, valid_ref, out_ref, *, bq: int):
+    qb = pl.program_id(0)
+    q = q_ref[:, 0, :]  # [BQ, dh]
+    k = k_ref[:, 0, :]  # [S, dh]
+    v = v_ref[:, 0, :]
+    s, dh = k.shape
+    valid = valid_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    qi = qb * bq + jnp.arange(bq)  # global query positions
+    kj = jnp.arange(s)
+    scores = (q @ k.T) * scale  # [BQ, S] one MXU pass
+    mask = (kj[None, :] <= qi[:, None]) & (kj[None, :] < valid)
+    scores = jnp.where(mask, scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = p @ v  # [BQ, dh]
+    rowvalid = (qi < valid)[:, None]
+    out_ref[:, 0, :] = jnp.where(rowvalid, out, 0.0)
+
+
+def flash_prefill(q, k, v, valid_len, *, block_q: int = 16):
+    """q,k,v [S,nh,dh]; valid_len scalar int32 -> [S,nh,dh].
+
+    Causal self-attention; rows/keys >= valid_len masked, output rows
+    >= valid_len zeroed. S must be a multiple of block_q.
+    """
+    s, nh, dh = q.shape
+    assert s % block_q == 0, (s, block_q)
+    valid = jnp.asarray(valid_len, dtype=jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_flash_prefill_kernel, bq=block_q),
+        grid=(s // block_q, nh),
+        in_specs=[
+            pl.BlockSpec((block_q, 1, dh), lambda qb, h: (qb, h, 0)),
+            pl.BlockSpec((s, 1, dh), lambda qb, h: (0, h, 0)),
+            pl.BlockSpec((s, 1, dh), lambda qb, h: (0, h, 0)),
+            pl.BlockSpec((1,), lambda qb, h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, dh), lambda qb, h: (qb, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, nh, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, valid)

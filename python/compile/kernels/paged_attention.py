@@ -1,0 +1,138 @@
+"""Pallas paged-attention decode kernel.
+
+The decode hot-spot of the paper's system: one query token per request
+attends over that request's KV scattered across a shared paged pool
+(16-token blocks, block table indirection — the TPU-native layout for
+PagedAttention: one pool block == one VMEM tile).
+
+Grid is (batch,); each step pulls its request's block-table row, gathers
+MAXB KV tiles from the pool with dynamic slices (the HBM->VMEM gather a
+GPU kernel would do with per-warp loads), appends the new token's KV, and
+runs one fused score+softmax+PV pass on the MXU. Positions >= seq_len are
+masked; the new token always attends to itself.
+
+MAXB is static per artifact bucket, so the gather loop is fully unrolled —
+no scalar control flow in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_attention_kernel(
+    q_ref, kpool_ref, vpool_ref, bt_ref, len_ref, newk_ref, newv_ref, out_ref,
+    *, maxb: int, blk: int,
+):
+    q = q_ref[0]  # [nh, dh]
+    nh, dh = q.shape
+    n = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+
+    keys = []
+    vals = []
+    for i in range(maxb):  # static unroll: MAXB gathers
+        idx = bt_ref[0, i]
+        kblk = pl.load(kpool_ref, (pl.dslice(idx, 1), slice(None), slice(None)))[0]
+        vblk = pl.load(vpool_ref, (pl.dslice(idx, 1), slice(None), slice(None)))[0]
+        keys.append(kblk)  # [BLK, H]
+        vals.append(vblk)
+    k = jnp.concatenate(keys, axis=0).reshape(maxb * blk, nh, dh)
+    v = jnp.concatenate(vals, axis=0).reshape(maxb * blk, nh, dh)
+    k = jnp.concatenate([k, newk_ref[0].reshape(1, nh, dh)], axis=0)
+    v = jnp.concatenate([v, newv_ref[0].reshape(1, nh, dh)], axis=0)
+
+    pos = jnp.arange(maxb * blk + 1)
+    mask = (pos < n) | (pos == maxb * blk)  # cached prefix + the new token
+    scores = jnp.einsum("hd,khd->hk", q, k) * scale
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out_ref[0] = jnp.einsum("hk,khd->hd", p, v)
+
+
+def _paged_attention_gathered_kernel(
+    q_ref, gk_ref, gv_ref, len_ref, newk_ref, newv_ref, out_ref, *, maxb: int, blk: int
+):
+    q = q_ref[0]  # [nh, dh]
+    nh, dh = q.shape
+    n = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    k = gk_ref[0].reshape(maxb * blk, nh, dh)
+    v = gv_ref[0].reshape(maxb * blk, nh, dh)
+    k = jnp.concatenate([k, newk_ref[0].reshape(1, nh, dh)], axis=0)
+    v = jnp.concatenate([v, newv_ref[0].reshape(1, nh, dh)], axis=0)
+    pos = jnp.arange(maxb * blk + 1)
+    mask = (pos < n) | (pos == maxb * blk)
+    scores = jnp.einsum("hd,khd->hk", q, k) * scale
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out_ref[0] = jnp.einsum("hk,khd->hd", p, v)
+
+
+def paged_attention_gathered(q, gathered_k, gathered_v, seq_lens, new_k, new_v):
+    """Decode attention over per-request pre-gathered KV blocks.
+
+    The pool gather (block-table indirection) happens OUTSIDE the kernel as
+    one XLA gather — on a real TPU this is the HBM->VMEM DMA that BlockSpec
+    would schedule; in interpret mode it avoids per-grid-step dynamic
+    slices of the whole pool, which XLA-CPU compiles catastrophically at
+    larger batch sizes (measured 8x cliff at B=8; see EXPERIMENTS.md §Perf).
+
+    q [B,nh,dh]; gathered_k/v [B,MAXB,BLK,H]; seq_lens [B];
+    new_k/new_v [B,H] -> [B,nh,dh].
+    """
+    bsz, nh, dh = q.shape
+    _, maxb, blk, h = gathered_k.shape
+    assert h == nh * dh
+    return pl.pallas_call(
+        functools.partial(_paged_attention_gathered_kernel, maxb=maxb, blk=blk),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, nh, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, maxb, blk, h), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, maxb, blk, h), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, h), lambda b: (b, 0)),
+            pl.BlockSpec((1, h), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nh, dh), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nh, dh), q.dtype),
+        interpret=True,
+    )(q, gathered_k, gathered_v, seq_lens.astype(jnp.int32), new_k, new_v)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, new_k, new_v):
+    """Decode attention over a paged pool.
+
+    q [B,nh,dh]; k_pool/v_pool [NB,BLK,H]; block_tables [B,MAXB] int32;
+    seq_lens [B] int32; new_k/new_v [B,H]  ->  [B,nh,dh].
+    """
+    bsz, nh, dh = q.shape
+    nb, blk, h = k_pool.shape
+    maxb = block_tables.shape[1]
+    assert h == nh * dh, (h, nh, dh)
+    return pl.pallas_call(
+        functools.partial(_paged_attention_kernel, maxb=maxb, blk=blk),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, nh, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((nb, blk, h), lambda b: (0, 0, 0)),
+            pl.BlockSpec((nb, blk, h), lambda b: (0, 0, 0)),
+            pl.BlockSpec((1, maxb), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, h), lambda b: (b, 0)),
+            pl.BlockSpec((1, h), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nh, dh), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nh, dh), q.dtype),
+        interpret=True,
+    )(q, k_pool, v_pool, block_tables.astype(jnp.int32),
+      seq_lens.astype(jnp.int32), new_k, new_v)

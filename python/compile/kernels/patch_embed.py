@@ -1,0 +1,49 @@
+"""Pallas patch-embedding kernel (vision tower front-end).
+
+TPU mapping of the CUDA im2col+GEMM idiom: each grid step owns one image
+(one VMEM-resident [S,S,C] tile), unfolds it into patch rows and performs a
+single MXU matmul against the projection weight. BlockSpec keeps the weight
+resident across grid steps (it is re-fetched logically but XLA hoists the
+constant); the unfold is pure layout work done in registers/VMEM.
+
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls, so
+the kernel lowers to plain HLO. The BlockSpecs still document the intended
+HBM->VMEM schedule for a real TPU build.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _patch_embed_kernel(px_ref, w_ref, b_ref, out_ref, *, patch: int):
+    x = px_ref[0]  # [S, S, C]
+    s, _, c = x.shape
+    g = s // patch
+    x = x.reshape(g, patch, g, patch, c)
+    x = x.transpose(0, 2, 1, 3, 4)  # [g, g, p, p, C]
+    x = x.reshape(g * g, patch * patch * c)
+    out_ref[0] = x @ w_ref[...] + b_ref[...][None, :]
+
+
+def patch_embed(pixels, w, b, *, patch: int):
+    """pixels [B,S,S,C], w [patch*patch*C, H], b [H] -> [B, (S/patch)^2, H]."""
+    bsz, s, _, c = pixels.shape
+    g = s // patch
+    h = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_patch_embed_kernel, patch=patch),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, s, s, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((w.shape[0], h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, g * g, h), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, g * g, h), pixels.dtype),
+        interpret=True,
+    )(pixels, w, b)

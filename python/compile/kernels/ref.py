@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with the exact same
+signature and semantics. pytest checks kernel-vs-oracle allclose across a
+hypothesis-driven sweep of shapes/dtypes; this is the CORE correctness
+signal for Layer 1 (the AOT artifacts embed the kernels, the rust runtime
+trusts them).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _softmax(scores):
+    m = scores.max(-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    return p / p.sum(-1, keepdims=True)
+
+
+def ref_patch_embed(pixels, w, b, patch: int):
+    """Patch embedding: unfold [B,S,S,C] into patch*patch tiles and project.
+
+    pixels: [B, S, S, C] with S % patch == 0
+    w:      [patch*patch*C, H]
+    b:      [H]
+    returns [B, (S//patch)**2, H]
+    """
+    bsz, s, _, c = pixels.shape
+    g = s // patch
+    x = pixels.reshape(bsz, g, patch, g, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # [B, g, g, p, p, C]
+    x = x.reshape(bsz, g * g, patch * patch * c)
+    return x @ w + b
+
+
+def ref_flash_prefill(q, k, v, valid_len):
+    """Causal self-attention with a padded tail.
+
+    q, k, v: [S, nh, dh]; key/query positions >= valid_len are padding.
+    Causal: query i attends keys j <= i; keys j >= valid_len masked.
+    returns [S, nh, dh] (rows >= valid_len zeroed).
+    """
+    s, nh, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    qt = q.transpose(1, 0, 2)  # [nh, S, dh]
+    kt = k.transpose(1, 0, 2)
+    vt = v.transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qt, kt) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) & (j < valid_len)
+    scores = jnp.where(mask[None], scores, -1e30)
+    out = jnp.einsum("hqk,hkd->hqd", _softmax(scores), vt).transpose(1, 0, 2)
+    rowvalid = (jnp.arange(s) < valid_len)[:, None, None]
+    return jnp.where(rowvalid, out, 0.0)
+
+
+def ref_paged_attention(q, k_pool, v_pool, block_tables, seq_lens, new_k, new_v):
+    """Single-token decode attention over a paged KV pool.
+
+    q:             [B, nh, dh]   query for the new token
+    k_pool/v_pool: [NB, BLK, H]  paged pool, H == nh*dh
+    block_tables:  [B, MAXB] int32 (pool block ids; only ceil(len/BLK) used)
+    seq_lens:      [B] int32     tokens already cached (positions 0..len-1)
+    new_k/new_v:   [B, H]        the new token's KV (attended, not yet in pool)
+    returns        [B, nh, dh]
+    """
+    bsz, nh, dh = q.shape
+    nb, blk, h = k_pool.shape
+    maxb = block_tables.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    outs = []
+    for b in range(bsz):
+        n = seq_lens[b]
+        keys = k_pool[block_tables[b]].reshape(maxb * blk, nh, dh)
+        vals = v_pool[block_tables[b]].reshape(maxb * blk, nh, dh)
+        keys = jnp.concatenate([keys, new_k[b].reshape(1, nh, dh)], axis=0)
+        vals = jnp.concatenate([vals, new_v[b].reshape(1, nh, dh)], axis=0)
+        pos = jnp.arange(maxb * blk + 1)
+        mask = (pos < n) | (pos == maxb * blk)  # cached prefix + self
+        scores = jnp.einsum("hd,khd->hk", q[b], keys) * scale
+        scores = jnp.where(mask[None, :], scores, -1e30)
+        outs.append(jnp.einsum("hk,khd->hd", _softmax(scores), vals))
+    return jnp.stack(outs)
+
+
+def ref_cache_write(pool, new, slots):
+    """Fused write-block: scatter new[i] into pool at flat slot ids.
+
+    pool:  [NB, BLK, H]
+    new:   [B, H]
+    slots: [B] int32 flat slot ids (block = slot // BLK, offset = slot % BLK)
+    returns updated pool. Duplicate slots: last writer wins (row order).
+    """
+    nb, blk, h = pool.shape
+    flat = pool.reshape(nb * blk, h)
+    flat = flat.at[slots].set(new)
+    return flat.reshape(nb, blk, h)

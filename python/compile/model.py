@@ -1,0 +1,266 @@
+"""Layer 2: the tiny vision-language model (JAX), calling the L1 kernels.
+
+A scaled-down LLaVA-shaped VLM — vision tower + projector + decoder LM —
+used by the *real-execution* serving path. Architecture dims are tiny so
+the whole stack runs on CPU PJRT, but the structure is the real thing:
+
+  encode:   pixels --patch_embed kernel--> ViT blocks --projector--> img embeds
+  prefill:  [img embeds ; tok embeds] --flash_prefill kernel per layer-->
+            first-token logits + contiguous per-layer KV
+  decode:   one token/request over the paged KV pool --paged_attention
+            kernel per layer--> logits + the new token's KV
+
+Weights are created deterministically (seed 0) at AOT time and baked into
+the HLO artifacts as constants: the rust runtime passes activations only.
+
+Conventions shared with the rust side (see artifacts/manifest.json):
+  * image tokens always occupy positions [0, T_IMG) of a multimodal prompt;
+  * prefill returns the FULL padded KV [L, S, H]; rust keeps the valid
+    prefix only;
+  * decode seq_lens[b] counts tokens already in the pool; the new token
+    sits at position seq_lens[b] and its KV is returned for the rust-side
+    slot write (mirroring the cache_write kernel semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.patch_embed import patch_embed
+from .kernels.flash_prefill import flash_prefill
+from .kernels.paged_attention import paged_attention_gathered
+
+# ---- model configuration (single source of truth; exported to manifest) ----
+CFG = dict(
+    vocab=272,          # 0..255 bytes + specials (BOS=256 EOS=257 IMG=258)
+    hidden=128,
+    layers=2,           # LM layers
+    heads=4,
+    head_dim=32,
+    ffn=256,
+    max_seq=128,
+    # vision tower
+    img_size=32,
+    patch=8,
+    channels=3,
+    vis_layers=2,
+    vis_hidden=128,
+    vis_heads=4,
+    vis_ffn=256,
+    img_tokens=16,      # (32/8)^2
+    # paged KV pool (per decode instance)
+    pool_blocks=128,
+    block_size=16,
+    max_blocks_per_seq=8,
+    bos_id=256,
+    eos_id=257,
+    img_id=258,
+)
+
+
+def _dense_init(key, shape, scale=0.02):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_params(seed: int = 0):
+    """Deterministic tiny-VLM parameters (baked into artifacts at AOT)."""
+    c = CFG
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 64))
+    h, f = c["hidden"], c["ffn"]
+    vh, vf = c["vis_hidden"], c["vis_ffn"]
+    pd = c["patch"] * c["patch"] * c["channels"]
+
+    def block(hh, ff):
+        return dict(
+            ln1_g=jnp.ones((hh,)), ln1_b=jnp.zeros((hh,)),
+            wq=_dense_init(next(ks), (hh, hh)), wk=_dense_init(next(ks), (hh, hh)),
+            wv=_dense_init(next(ks), (hh, hh)), wo=_dense_init(next(ks), (hh, hh)),
+            ln2_g=jnp.ones((hh,)), ln2_b=jnp.zeros((hh,)),
+            w1=_dense_init(next(ks), (hh, ff)), b1=jnp.zeros((ff,)),
+            w2=_dense_init(next(ks), (ff, hh)), b2=jnp.zeros((hh,)),
+        )
+
+    return dict(
+        # vision
+        patch_w=_dense_init(next(ks), (pd, vh)),
+        patch_b=jnp.zeros((vh,)),
+        vis_pos=_dense_init(next(ks), (c["img_tokens"], vh)),
+        vis_blocks=[block(vh, vf) for _ in range(c["vis_layers"])],
+        vis_ln_g=jnp.ones((vh,)), vis_ln_b=jnp.zeros((vh,)),
+        proj_w=_dense_init(next(ks), (vh, h)), proj_b=jnp.zeros((h,)),
+        # language model
+        tok_emb=_dense_init(next(ks), (c["vocab"], h)),
+        pos_emb=_dense_init(next(ks), (c["max_seq"], h)),
+        blocks=[block(h, f) for _ in range(c["layers"])],
+        ln_f_g=jnp.ones((h,)), ln_f_b=jnp.zeros((h,)),
+        lm_head=_dense_init(next(ks), (h, c["vocab"])),
+    )
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _ffn(x, blk):
+    return jax.nn.gelu(x @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+
+
+def _vis_attn(x, blk, nh):
+    """Bidirectional MHA for the vision tower (plain jnp)."""
+    s, h = x.shape
+    dh = h // nh
+    q = (x @ blk["wq"]).reshape(s, nh, dh).transpose(1, 0, 2)
+    k = (x @ blk["wk"]).reshape(s, nh, dh).transpose(1, 0, 2)
+    v = (x @ blk["wv"]).reshape(s, nh, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, v).transpose(1, 0, 2).reshape(s, h)
+    return o @ blk["wo"]
+
+
+# --------------------------------------------------------------------------
+# encode
+# --------------------------------------------------------------------------
+
+def encode(params, pixels):
+    """Vision tower + projector. pixels [B,S,S,C] -> img embeds [B,T,H]."""
+    c = CFG
+    x = patch_embed(pixels, params["patch_w"], params["patch_b"], patch=c["patch"])
+    x = x + params["vis_pos"][None]
+
+    def tower(img):
+        y = img
+        for blk in params["vis_blocks"]:
+            y = y + _vis_attn(_ln(y, blk["ln1_g"], blk["ln1_b"]), blk, c["vis_heads"])
+            y = y + _ffn(_ln(y, blk["ln2_g"], blk["ln2_b"]), blk)
+        y = _ln(y, params["vis_ln_g"], params["vis_ln_b"])
+        return y @ params["proj_w"] + params["proj_b"]
+
+    return jax.vmap(tower)(x)
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def _lm_prefill(params, embeds, valid_len):
+    """embeds [S,H]; valid_len scalar -> (logits [V], k [L,S,H], v [L,S,H])."""
+    c = CFG
+    s, h = embeds.shape
+    nh, dh = c["heads"], c["head_dim"]
+    x = embeds + params["pos_emb"][:s]
+    ks, vs = [], []
+    for blk in params["blocks"]:
+        xn = _ln(x, blk["ln1_g"], blk["ln1_b"])
+        q = (xn @ blk["wq"]).reshape(s, nh, dh)
+        k = (xn @ blk["wk"]).reshape(s, nh, dh)
+        v = (xn @ blk["wv"]).reshape(s, nh, dh)
+        ks.append(k.reshape(s, h))
+        vs.append(v.reshape(s, h))
+        attn = flash_prefill(q, k, v, valid_len).reshape(s, h)
+        x = x + attn @ blk["wo"]
+        x = x + _ffn(_ln(x, blk["ln2_g"], blk["ln2_b"]), blk)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    last = jax.lax.dynamic_slice(x, (valid_len - 1, 0), (1, h))[0]
+    logits = last @ params["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def prefill_mm(params, img_embeds, token_ids, txt_len):
+    """Multimodal prefill: [img ; text].
+
+    img_embeds [1,T,H]; token_ids [1,S_txt] int32 (padded); txt_len scalar.
+    Total padded seq = T + S_txt; valid = T + txt_len.
+    """
+    tok = params["tok_emb"][token_ids[0]]
+    embeds = jnp.concatenate([img_embeds[0], tok], axis=0)
+    return _lm_prefill(params, embeds, CFG["img_tokens"] + txt_len)
+
+
+def prefill_txt(params, token_ids, txt_len):
+    """Text-only prefill. token_ids [1,S] int32 padded; valid = txt_len."""
+    embeds = params["tok_emb"][token_ids[0]]
+    return _lm_prefill(params, embeds, txt_len)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode_step(params, token_ids, positions, k_pool, v_pool, block_tables, seq_lens):
+    """One decode iteration for a batch of B requests over the paged pool.
+
+    token_ids [B] int32; positions [B] int32 (== seq_lens);
+    k_pool/v_pool [L,NB,BLK,H]; block_tables [B,MAXB] int32; seq_lens [B].
+    -> (logits [B,V], k_new [B,L,H], v_new [B,L,H])
+    """
+    c = CFG
+    nh, dh = c["heads"], c["head_dim"]
+    bsz = token_ids.shape[0]
+    h = c["hidden"]
+    x = params["tok_emb"][token_ids] + params["pos_emb"][positions]  # [B,H]
+    k_out, v_out = [], []
+    for li, blk in enumerate(params["blocks"]):
+        xn = _ln(x, blk["ln1_g"], blk["ln1_b"])
+        q = (xn @ blk["wq"]).reshape(bsz, nh, dh)
+        k = xn @ blk["wk"]  # [B,H]
+        v = xn @ blk["wv"]
+        k_out.append(k)
+        v_out.append(v)
+        # block-table gather outside the kernel (one XLA gather == the
+        # HBM->VMEM DMA a TPU BlockSpec would issue; see kernels/
+        # paged_attention.py for why this beats in-kernel dynamic slices)
+        gk = k_pool[li][block_tables]  # [B, MAXB, BLK, H]
+        gv = v_pool[li][block_tables]
+        attn = paged_attention_gathered(q, gk, gv, seq_lens, k, v).reshape(bsz, h)
+        x = x + attn @ blk["wo"]
+        x = x + _ffn(_ln(x, blk["ln2_g"], blk["ln2_b"]), blk)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["lm_head"]
+    return logits, jnp.stack(k_out, axis=1), jnp.stack(v_out, axis=1)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (params closed over -> baked constants)
+# --------------------------------------------------------------------------
+
+def make_entries(params):
+    """Return {name: (fn, example_args)} for every (stage, bucket) artifact."""
+    c = CFG
+    h, t = c["hidden"], c["img_tokens"]
+    l = c["layers"]
+    nb, blk, maxb = c["pool_blocks"], c["block_size"], c["max_blocks_per_seq"]
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    entries = {}
+
+    for b in (1, 2, 4):
+        entries[f"encode_b{b}"] = (
+            functools.partial(encode, params),
+            (sds((b, c["img_size"], c["img_size"], c["channels"]), f32),),
+        )
+    for s_txt in (32, 64):
+        entries[f"prefill_mm_s{t + s_txt}"] = (
+            functools.partial(prefill_mm, params),
+            (sds((1, t, h), f32), sds((1, s_txt), i32), sds((), i32)),
+        )
+    for s in (32, 64):
+        entries[f"prefill_txt_s{s}"] = (
+            functools.partial(prefill_txt, params),
+            (sds((1, s), i32), sds((), i32)),
+        )
+    for b in (1, 2, 4, 8):
+        entries[f"decode_b{b}"] = (
+            functools.partial(decode_step, params),
+            (
+                sds((b,), i32), sds((b,), i32),
+                sds((l, nb, blk, h), f32), sds((l, nb, blk, h), f32),
+                sds((b, maxb), i32), sds((b,), i32),
+            ),
+        )
+    return entries

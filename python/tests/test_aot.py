@@ -1,0 +1,78 @@
+"""AOT pipeline tests: HLO text integrity + manifest/golden consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import _bucket_of, _stage_of, make_golden, to_hlo_text
+from compile.model import CFG, init_params, make_entries
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_stage_and_bucket_parsing():
+    assert _stage_of("encode_b2") == "encode"
+    assert _stage_of("prefill_mm_s48") == "prefill"
+    assert _bucket_of("prefill_mm_s48") == 48
+    assert _bucket_of("decode_b8") == 8
+
+
+def test_hlo_text_has_full_constants():
+    """The text round-trip must not elide baked weights as `{...}`."""
+    w = jnp.arange(4096, dtype=jnp.float32).reshape(64, 64)
+    f = lambda x: (x @ w,)
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((2, 64), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "{...}" not in text
+    assert "4095" in text  # the last ramp element survived printing
+
+
+def test_hlo_text_is_parseable_header():
+    params = init_params(0)
+    entries = make_entries(params)
+    fn, args = entries["encode_b1"]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_entries():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["config"]["vocab"] == CFG["vocab"]
+    assert manifest["config"]["block_size"] == CFG["block_size"]
+    names = {a["name"] for a in manifest["artifacts"]}
+    expected = set(make_entries(init_params(manifest["seed"])))
+    assert names == expected
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        assert a["stage"] in ("encode", "prefill", "decode")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "golden.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_golden_reproducible():
+    """Golden outputs must be deterministic across processes."""
+    with open(os.path.join(ART, "golden.json")) as f:
+        golden = json.load(f)
+    fresh = make_golden(init_params(0))
+    for name, want in golden.items():
+        got = fresh[name]
+        for key, val in want.items():
+            if isinstance(val, list):
+                for a, b in zip(val, got[key]):
+                    assert abs(a - b) < 1e-4, (name, key)
+            elif isinstance(val, float):
+                assert abs(val - got[key]) < max(1e-3, abs(val) * 1e-5), (name, key)
+            else:
+                assert val == got[key], (name, key)

@@ -1,0 +1,233 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py. This is
+the core correctness signal the AOT artifacts inherit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cache_write import cache_write
+from compile.kernels.flash_prefill import flash_prefill
+from compile.kernels.paged_attention import paged_attention, paged_attention_gathered
+from compile.kernels.patch_embed import patch_embed
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- patch_embed
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    grid=st.integers(2, 4),
+    patch=st.sampled_from([4, 8]),
+    h=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_patch_embed_matches_ref(b, grid, patch, h, seed):
+    r = _rng(seed)
+    s = grid * patch
+    px = r.standard_normal((b, s, s, 3), dtype=np.float32)
+    w = r.standard_normal((patch * patch * 3, h), dtype=np.float32) * 0.05
+    bias = r.standard_normal(h, dtype=np.float32)
+    got = patch_embed(jnp.asarray(px), jnp.asarray(w), jnp.asarray(bias), patch=patch)
+    want = ref.ref_patch_embed(jnp.asarray(px), jnp.asarray(w), jnp.asarray(bias), patch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_patch_embed_zero_input_gives_bias():
+    px = jnp.zeros((1, 16, 16, 3))
+    w = jnp.ones((4 * 4 * 3, 8))
+    b = jnp.arange(8, dtype=jnp.float32)
+    out = patch_embed(px, w, b, patch=4)
+    np.testing.assert_allclose(np.asarray(out), np.broadcast_to(np.arange(8), (1, 16, 8)))
+
+
+# -------------------------------------------------------------- flash_prefill
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 5),
+    nh=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_flash_prefill_matches_ref(nblocks, nh, dh, seed, data):
+    s = 16 * nblocks
+    valid = data.draw(st.integers(1, s))
+    r = _rng(seed)
+    q, k, v = (jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32)) for _ in range(3))
+    got = flash_prefill(q, k, v, valid)
+    want = ref.ref_flash_prefill(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_is_causal():
+    """Perturbing a future key must not change earlier rows."""
+    r = _rng(0)
+    s, nh, dh = 32, 2, 8
+    q = jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    k = np.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    v = jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    base = np.asarray(flash_prefill(q, jnp.asarray(k), v, s))
+    k2 = k.copy()
+    k2[20] += 100.0
+    out = np.asarray(flash_prefill(q, jnp.asarray(k2), v, s))
+    np.testing.assert_allclose(out[:20], base[:20], rtol=1e-6)
+    assert not np.allclose(out[20:], base[20:])
+
+
+def test_flash_prefill_padding_invariance():
+    """Garbage in the padded tail must not leak into valid rows."""
+    r = _rng(1)
+    s, nh, dh, valid = 48, 2, 8, 17
+    q = np.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    k = np.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    v = np.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    out1 = np.asarray(flash_prefill(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), valid))
+    for a in (q, k, v):
+        a[valid:] = 1e6  # poison the tail
+    out2 = np.asarray(flash_prefill(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), valid))
+    np.testing.assert_allclose(out1[:valid], out2[:valid], rtol=1e-6)
+    assert np.all(out2[valid:] == 0.0)
+
+
+# ------------------------------------------------------------ paged_attention
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    maxb=st.integers(1, 4),
+    nh=st.sampled_from([2, 4]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_paged_attention_matches_ref(b, maxb, nh, dh, seed, data):
+    blk, nb = 16, 16
+    h = nh * dh
+    r = _rng(seed)
+    lens = np.asarray(
+        [data.draw(st.integers(0, maxb * blk)) for _ in range(b)], dtype=np.int32
+    )
+    # block tables may share pool blocks between requests (prefix reuse)
+    bt = np.asarray(
+        [[data.draw(st.integers(0, nb - 1)) for _ in range(maxb)] for _ in range(b)],
+        dtype=np.int32,
+    )
+    q = jnp.asarray(r.standard_normal((b, nh, dh), dtype=np.float32))
+    kp = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    vp = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    nk = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    nv = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    got = paged_attention(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens), nk, nv)
+    want = ref.ref_paged_attention(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens), nk, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    maxb=st.integers(1, 4),
+    nh=st.sampled_from([2, 4]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_paged_attention_gathered_matches_pooled(b, maxb, nh, dh, seed, data):
+    """The production (pre-gathered) variant must equal the pooled kernel
+    and the oracle for every shape — it is what the decode artifacts use."""
+    blk, nb = 16, 16
+    h = nh * dh
+    r = _rng(seed)
+    lens = np.asarray([data.draw(st.integers(0, maxb * blk)) for _ in range(b)], np.int32)
+    bt = np.asarray(
+        [[data.draw(st.integers(0, nb - 1)) for _ in range(maxb)] for _ in range(b)],
+        np.int32,
+    )
+    q = jnp.asarray(r.standard_normal((b, nh, dh), dtype=np.float32))
+    kp = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    vp = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    nk = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    nv = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    gk = kp[jnp.asarray(bt)]
+    gv = vp[jnp.asarray(bt)]
+    got = paged_attention_gathered(q, gk, gv, jnp.asarray(lens), nk, nv)
+    want = ref.ref_paged_attention(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens), nk, nv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_empty_cache_attends_self_only():
+    """seq_len == 0: output must be exactly the new token's V."""
+    b, nh, dh, nb, blk, maxb = 2, 2, 8, 4, 16, 2
+    h = nh * dh
+    r = _rng(3)
+    q = jnp.asarray(r.standard_normal((b, nh, dh), dtype=np.float32))
+    kp = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    vp = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    nk = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    nv = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    bt = jnp.zeros((b, maxb), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, jnp.zeros(b, jnp.int32), nk, nv)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(nv).reshape(b, nh, dh), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_paged_attention_ignores_unreferenced_pool_blocks():
+    """Poisoning pool blocks outside the block table must not change output."""
+    b, nh, dh, nb, blk, maxb = 1, 2, 8, 8, 16, 2
+    h = nh * dh
+    r = _rng(4)
+    q = jnp.asarray(r.standard_normal((b, nh, dh), dtype=np.float32))
+    kp = np.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    vp = np.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    nk = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    nv = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    bt = jnp.asarray([[2, 5]], jnp.int32)
+    lens = jnp.asarray([20], jnp.int32)
+    base = np.asarray(paged_attention(q, jnp.asarray(kp), jnp.asarray(vp), bt, lens, nk, nv))
+    kp[0] = 1e6
+    vp[7] = -1e6
+    out = np.asarray(paged_attention(q, jnp.asarray(kp), jnp.asarray(vp), bt, lens, nk, nv))
+    np.testing.assert_allclose(out, base, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- cache_write
+@settings(**SETTINGS)
+@given(
+    nb=st.integers(2, 8),
+    h=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_cache_write_matches_ref(nb, h, seed, data):
+    blk = 16
+    r = _rng(seed)
+    b = data.draw(st.integers(1, min(6, nb * blk)))
+    slots = data.draw(
+        st.lists(st.integers(0, nb * blk - 1), min_size=b, max_size=b, unique=True)
+    )
+    pool = jnp.asarray(r.standard_normal((nb, blk, h), dtype=np.float32))
+    new = jnp.asarray(r.standard_normal((b, h), dtype=np.float32))
+    slots = jnp.asarray(np.asarray(slots, np.int32))
+    got = cache_write(pool, new, slots)
+    want = ref.ref_cache_write(pool, new, slots)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_cache_write_touches_only_target_slots():
+    pool = jnp.zeros((4, 16, 8))
+    new = jnp.ones((2, 8))
+    out = np.asarray(cache_write(pool, new, jnp.asarray([3, 40], jnp.int32)))
+    flat = out.reshape(64, 8)
+    assert np.all(flat[3] == 1.0) and np.all(flat[40] == 1.0)
+    untouched = np.delete(flat, [3, 40], axis=0)
+    assert np.all(untouched == 0.0)

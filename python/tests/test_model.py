@@ -1,0 +1,163 @@
+"""L2 correctness: model shapes + the prefill/decode consistency law.
+
+The key law: decoding token t at position p against a paged pool filled
+with prefill's KV must produce exactly the logits prefill would produce
+for the extended sequence. This pins the whole KV/pool/position plumbing
+the rust runtime relies on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CFG,
+    decode_step,
+    encode,
+    init_params,
+    make_entries,
+    prefill_mm,
+    prefill_txt,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(0)
+
+
+def test_encode_shapes(params):
+    c = CFG
+    px = np.random.default_rng(0).standard_normal(
+        (2, c["img_size"], c["img_size"], c["channels"])
+    ).astype(np.float32)
+    out = encode(params, px)
+    assert out.shape == (2, c["img_tokens"], c["hidden"])
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_encode_batch_rows_independent(params):
+    """encode(batch)[i] == encode(single image i): batching must not mix rows."""
+    c = CFG
+    px = np.random.default_rng(1).standard_normal(
+        (2, c["img_size"], c["img_size"], c["channels"])
+    ).astype(np.float32)
+    both = np.asarray(encode(params, px))
+    one = np.asarray(encode(params, px[1:]))
+    np.testing.assert_allclose(both[1], one[0], rtol=1e-5, atol=1e-6)
+
+
+def test_prefill_shapes(params):
+    c = CFG
+    s_txt = 32
+    ie = np.zeros((1, c["img_tokens"], c["hidden"]), np.float32)
+    ids = np.zeros((1, s_txt), np.int32)
+    logits, k, v = prefill_mm(params, ie, ids, 5)
+    s_tot = c["img_tokens"] + s_txt
+    assert logits.shape == (c["vocab"],)
+    assert k.shape == (c["layers"], s_tot, c["hidden"])
+    assert v.shape == (c["layers"], s_tot, c["hidden"])
+
+
+def test_prefill_padding_invariance(params):
+    """Same prompt at different bucket paddings -> identical logits."""
+    ids_short = np.zeros((1, 32), np.int32)
+    ids_long = np.full((1, 64), 77, np.int32)  # poison tail
+    prompt = np.arange(5, 20, dtype=np.int32)
+    ids_short[0, :15] = prompt
+    ids_long[0, :15] = prompt
+    l1, k1, _ = prefill_txt(params, ids_short, 15)
+    l2, k2, _ = prefill_txt(params, ids_long, 15)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(k1)[:, :15], np.asarray(k2)[:, :15], rtol=1e-4, atol=1e-5
+    )
+
+
+def _fill_pool(k_layers, valid):
+    """Scatter contiguous [L,S,H] KV into a paged pool with identity table."""
+    c = CFG
+    l, nb, blk, h = c["layers"], c["pool_blocks"], c["block_size"], c["hidden"]
+    pool = np.zeros((l, nb, blk, h), np.float32)
+    for li in range(l):
+        flat = pool[li].reshape(nb * blk, h)
+        flat[:valid] = np.asarray(k_layers)[li, :valid]
+    return pool
+
+
+def test_prefill_then_decode_consistency(params):
+    """decode(t, pool=prefill KV) logits == prefill(seq + t) logits."""
+    c = CFG
+    t_img, h = c["img_tokens"], c["hidden"]
+    rng = np.random.default_rng(7)
+    ie = rng.standard_normal((1, t_img, h)).astype(np.float32) * 0.1
+
+    n_txt = 20
+    prompt = rng.integers(0, 255, n_txt).astype(np.int32)
+    ids = np.zeros((1, 32), np.int32)
+    ids[0, :n_txt] = prompt
+    logits0, k, v = prefill_mm(params, ie, ids, n_txt)
+    valid = t_img + n_txt
+    next_tok = int(np.asarray(logits0).argmax())
+
+    k_pool = _fill_pool(k, valid)
+    v_pool = _fill_pool(v, valid)
+    bt = np.arange(c["max_blocks_per_seq"], dtype=np.int32).reshape(1, -1)
+    dl, kn, vn = decode_step(
+        params,
+        np.asarray([next_tok], np.int32),
+        np.asarray([valid], np.int32),
+        k_pool, v_pool, bt,
+        np.asarray([valid], np.int32),
+    )
+
+    # reference: prefill the extended sequence
+    ids2 = np.zeros((1, 32), np.int32)
+    ids2[0, :n_txt] = prompt
+    ids2[0, n_txt] = next_tok
+    logits1, k1, v1 = prefill_mm(params, ie, ids2, n_txt + 1)
+
+    np.testing.assert_allclose(
+        np.asarray(dl)[0], np.asarray(logits1), rtol=2e-4, atol=2e-4
+    )
+    # and the returned new-token KV must equal prefill's row at that position
+    np.testing.assert_allclose(
+        np.asarray(kn)[0], np.asarray(k1)[:, valid], rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(vn)[0], np.asarray(v1)[:, valid], rtol=2e-4, atol=2e-4
+    )
+
+
+def test_decode_batch_rows_independent(params):
+    """decode(batch)[i] must equal decode(single request i)."""
+    c = CFG
+    l, nb, blk, h = c["layers"], c["pool_blocks"], c["block_size"], c["hidden"]
+    maxb = c["max_blocks_per_seq"]
+    rng = np.random.default_rng(3)
+    pool_k = rng.standard_normal((l, nb, blk, h)).astype(np.float32) * 0.1
+    pool_v = rng.standard_normal((l, nb, blk, h)).astype(np.float32) * 0.1
+    toks = np.asarray([5, 9], np.int32)
+    pos = np.asarray([10, 30], np.int32)
+    bt = np.asarray([[0, 1, 2, 3, 0, 0, 0, 0], [4, 5, 6, 7, 8, 0, 0, 0]], np.int32)
+    assert bt.shape[1] == maxb
+    sl = pos.copy()
+    both, kb, vb = decode_step(params, toks, pos, pool_k, pool_v, bt, sl)
+    one, k1, v1 = decode_step(
+        params, toks[1:], pos[1:], pool_k, pool_v, bt[1:], sl[1:]
+    )
+    np.testing.assert_allclose(np.asarray(both)[1], np.asarray(one)[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kb)[1], np.asarray(k1)[0], rtol=1e-4, atol=1e-5)
+
+
+def test_make_entries_buckets(params):
+    entries = make_entries(params)
+    names = set(entries)
+    assert {"encode_b1", "encode_b2", "encode_b4"} <= names
+    assert {"decode_b1", "decode_b2", "decode_b4", "decode_b8"} <= names
+    assert {"prefill_mm_s48", "prefill_mm_s80"} <= names
+    assert {"prefill_txt_s32", "prefill_txt_s64"} <= names
+    # example args shape sanity
+    fn, args = entries["decode_b8"]
+    assert args[0].shape == (8,)
+    assert args[2].shape[0] == CFG["layers"]

@@ -1,0 +1,56 @@
+//! Reproduces Figure 5: arithmetic-intensity trend of LLaVA-1.5-7B linear
+//! operations vs LM token count, one curve per image batch size.
+//!
+//! The paper's point: at small token counts (decode regime) the work is
+//! memory-bound and adding images to the batch *raises* intensity; at
+//! large token counts (prefill regime) it is compute-bound and adding
+//! encode work *lowers* intensity toward the vision model's own ratio.
+
+use hydrainfer::benchkit::{header, row};
+use hydrainfer::config::{DeviceSpec, ModelSpec};
+use hydrainfer::costmodel::{decode_cost, encode_cost, prefill_cost, Cost};
+
+fn main() {
+    let m = ModelSpec::llava15_7b();
+    let d = DeviceSpec::h800();
+    let ridge = d.effective_flops() / d.effective_bw();
+    println!("== Figure 5: arithmetic intensity vs token count ==");
+    println!("model {}; H800 ridge point = {ridge:.0} FLOPs/byte\n", m.name);
+
+    let token_counts = [1usize, 4, 16, 64, 256, 1024, 4096];
+    let image_batches = [0usize, 1, 2, 4, 8];
+
+    let mut widths = vec![10usize];
+    widths.extend(std::iter::repeat(10).take(image_batches.len()));
+    let labels: Vec<String> = image_batches.iter().map(|b| format!("imgs={b}")).collect();
+    let mut head = vec!["tokens"];
+    head.extend(labels.iter().map(|s| s.as_str()));
+    header(&head, &widths);
+
+    for &n in &token_counts {
+        let mut cells = vec![n.to_string()];
+        for &imgs in &image_batches {
+            // LM work for n tokens: decode-like when tiny, prefill-like when
+            // large (the figure's x-axis spans both regimes)
+            let lm: Cost = if n <= 64 {
+                decode_cost(&m, &vec![1024; n])
+            } else {
+                prefill_cost(&m, &[(0, n)])
+            };
+            let total = lm + encode_cost(&m, imgs);
+            cells.push(format!("{:.1}", total.intensity()));
+        }
+        println!("{}", row(&cells, &widths));
+    }
+
+    println!("\nshape check (paper):");
+    println!("  - small token counts: intensity RISES with image batch (fills idle compute)");
+    println!("  - large token counts: intensity FALLS toward the encode ratio");
+    let lo0 = decode_cost(&m, &vec![1024; 4]).intensity();
+    let lo8 = (decode_cost(&m, &vec![1024; 4]) + encode_cost(&m, 8)).intensity();
+    let hi0 = prefill_cost(&m, &[(0, 4096)]).intensity();
+    let hi8 = (prefill_cost(&m, &[(0, 4096)]) + encode_cost(&m, 8)).intensity();
+    assert!(lo8 > lo0, "images must raise intensity in the decode regime");
+    assert!(hi8 < hi0, "images must lower intensity in the prefill regime");
+    println!("  verified: {lo0:.1} -> {lo8:.1} (rise), {hi0:.1} -> {hi8:.1} (fall)");
+}

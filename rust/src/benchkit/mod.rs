@@ -1,0 +1,184 @@
+//! Support for the reproduction benches (`rust/benches/bench_*.rs`): table
+//! printing and the shared engine configurations each figure compares.
+//!
+//! The offline environment has no criterion; each bench is a plain binary
+//! (harness = false) that regenerates one paper table/figure as text and
+//! exits. Absolute numbers come from the H800 roofline simulator — the
+//! claim is shape fidelity (who wins, by what factor, where crossovers
+//! fall), not testbed-exact milliseconds. See EXPERIMENTS.md.
+
+use crate::config::{ModelSpec, SloSpec};
+use crate::metrics::goodput_search;
+use crate::scheduler::Policy;
+use crate::simulator::{simulate, ClusterSpec, SimConfig, SimResult};
+use crate::workload::{Dataset, PoissonGenerator};
+
+/// Print a row of fixed-width columns.
+pub fn row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// Print a header + separator.
+pub fn header(cells: &[&str], widths: &[usize]) {
+    println!(
+        "{}",
+        row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>(), widths)
+    );
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+}
+
+/// The four "engines" of Fig. 10: ours + the three reimplemented baseline
+/// scheduling policies (same simulator, same workloads — policy is the
+/// only variable, §5.1 Baseline Method).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// HydraInfer: stage-level batching + multi-stream + hybrid EPD.
+    Hydra,
+    /// vLLM-v0-like: prefill-first FCFS, colocated, no multi-stream.
+    VllmV0,
+    /// vLLM-v1-like: decode-first, colocated, no multi-stream.
+    VllmV1,
+    /// SGLang/Sarathi-like: chunked prefill, colocated, no multi-stream.
+    Sglang,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 4] =
+        [EngineKind::Hydra, EngineKind::VllmV0, EngineKind::VllmV1, EngineKind::Sglang];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Hydra => "hydrainfer",
+            EngineKind::VllmV0 => "vllm-v0",
+            EngineKind::VllmV1 => "vllm-v1",
+            EngineKind::Sglang => "sglang",
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        match self {
+            EngineKind::Hydra => Policy::StageLevel,
+            EngineKind::VllmV0 => Policy::PrefillFirst,
+            EngineKind::VllmV1 => Policy::DecodeFirst,
+            EngineKind::Sglang => Policy::ChunkedPrefill,
+        }
+    }
+
+    /// Hybrid-EPD candidate clusters for ours; colocated for baselines.
+    pub fn clusters(&self, gpus: usize) -> Vec<ClusterSpec> {
+        match self {
+            EngineKind::Hydra => {
+                let e = 1.max(gpus / 8);
+                let p = 2.max(gpus * 3 / 8) - 1;
+                vec![
+                    ClusterSpec::parse(&format!("{e}E{}P{}D", p, gpus - e - p)).unwrap(),
+                    ClusterSpec::parse(&format!("{}EP{}D", gpus / 4, gpus - gpus / 4)).unwrap(),
+                    ClusterSpec::parse(&format!("{}ED{}P", gpus * 3 / 4, gpus - gpus * 3 / 4))
+                        .unwrap(),
+                    ClusterSpec::parse(&format!("{gpus}EPD")).unwrap(),
+                ]
+            }
+            _ => vec![ClusterSpec::parse(&format!("{gpus}EPD")).unwrap()],
+        }
+    }
+}
+
+/// One simulation run of an engine at a cluster-wide rate. `n` is a floor
+/// on the request count; the trace is stretched so the load window lasts
+/// at least ~20 seconds — attainment must reflect sustained queueing, not
+/// a sub-second burst transient.
+pub fn run_engine(
+    engine: EngineKind,
+    model: &ModelSpec,
+    dataset: &Dataset,
+    cluster: &ClusterSpec,
+    slo: SloSpec,
+    rate: f64,
+    n: usize,
+    seed: u64,
+) -> SimResult {
+    let mut cfg = SimConfig::new(model.clone(), cluster.clone(), engine.policy(), slo);
+    cfg.multistream = engine == EngineKind::Hydra;
+    cfg.seed = seed;
+    let n = n.max((rate * 20.0) as usize).min(6000);
+    let gen = PoissonGenerator::new(dataset.clone(), rate, seed);
+    let reqs = gen.generate(model, n);
+    simulate(&cfg, &reqs)
+}
+
+/// SLO attainment of an engine (best cluster for ours) at a rate.
+pub fn engine_attainment(
+    engine: EngineKind,
+    model: &ModelSpec,
+    dataset: &Dataset,
+    slo: SloSpec,
+    gpus: usize,
+    rate: f64,
+    n: usize,
+) -> f64 {
+    engine
+        .clusters(gpus)
+        .iter()
+        .map(|c| {
+            run_engine(engine, model, dataset, c, slo, rate, n, 0)
+                .metrics
+                .slo_attainment(slo)
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Goodput (cluster-wide req/s) of an engine on a workload.
+pub fn engine_goodput(
+    engine: EngineKind,
+    model: &ModelSpec,
+    dataset: &Dataset,
+    slo: SloSpec,
+    gpus: usize,
+    max_rate: f64,
+    n: usize,
+) -> f64 {
+    goodput_search(
+        |rate| engine_attainment(engine, model, dataset, slo, gpus, rate, n),
+        0.90,
+        max_rate,
+        max_rate / 64.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_metadata() {
+        assert_eq!(EngineKind::ALL.len(), 4);
+        assert_eq!(EngineKind::Hydra.policy(), Policy::StageLevel);
+        assert_eq!(EngineKind::VllmV0.policy(), Policy::PrefillFirst);
+        for e in EngineKind::ALL {
+            for c in e.clusters(8) {
+                assert_eq!(c.num_instances(), 8, "{}", c.label());
+                assert!(c.complete(), "{}", c.label());
+            }
+        }
+    }
+
+    #[test]
+    fn baselines_are_colocated() {
+        for e in [EngineKind::VllmV0, EngineKind::VllmV1, EngineKind::Sglang] {
+            let cs = e.clusters(8);
+            assert_eq!(cs.len(), 1);
+            assert_eq!(cs[0].label(), "8EPD");
+        }
+    }
+
+    #[test]
+    fn row_formatting() {
+        let s = row(&["a".into(), "bb".into()], &[3, 4]);
+        assert_eq!(s, "  a    bb");
+    }
+}

@@ -1,0 +1,270 @@
+//! Paged cache management: block allocator, page tables, and the unified
+//! KV-cache / image-cache interface (paper §4.5).
+//!
+//! The paper manages the image token cache as "one layer of a single-token
+//! cache" and the KV cache as "a multi-layer of two-token cache", both
+//! behind "a similar management interface and data transfer interface".
+//! That is exactly the shape here: [`PagedCache`] owns block accounting +
+//! page tables; [`CacheStore`] optionally owns real backing planes
+//! (`layers * planes_per_layer` float buffers of [NB, BLK, H]) for the
+//! real-execution path; both caches are instances of the same types with
+//! different plane counts.
+//!
+//! Block size matches the artifacts: 16 tokens per KV block; the image
+//! cache uses one block per image-token group (the paper's 576-token image
+//! block becomes T_IMG=16 here — one block per image).
+
+pub mod store;
+
+pub use store::CacheStore;
+
+use std::collections::HashMap;
+
+use crate::core::RequestId;
+use crate::util::ceil_div;
+
+/// Errors surfaced to the scheduler (cache pressure drives batching and
+/// migration backpressure decisions).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CacheError {
+    #[error("out of cache blocks: need {need}, free {free}")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("unknown request {0}")]
+    UnknownRequest(u64),
+    #[error("request {0} already has an allocation")]
+    AlreadyAllocated(u64),
+    #[error("sequence capacity exceeded: {len} tokens > {cap}")]
+    SequenceTooLong { len: usize, cap: usize },
+}
+
+/// Per-request page table: ordered pool block ids + token count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PageTable {
+    pub blocks: Vec<u32>,
+    pub len: usize, // tokens currently stored
+}
+
+impl PageTable {
+    /// Flat slot id for a token position (block * BLK + offset).
+    pub fn slot_of(&self, pos: usize, block_size: usize) -> Option<u32> {
+        let b = pos / block_size;
+        self.blocks
+            .get(b)
+            .map(|&blk| blk * block_size as u32 + (pos % block_size) as u32)
+    }
+}
+
+/// Paged cache: allocator + page tables. Generic over what a "token" is —
+/// the KV cache counts sequence tokens, the image cache counts image tokens.
+#[derive(Debug)]
+pub struct PagedCache {
+    block_size: usize,
+    num_blocks: usize,
+    max_blocks_per_seq: usize,
+    free: Vec<u32>,
+    tables: HashMap<u64, PageTable>,
+}
+
+impl PagedCache {
+    pub fn new(num_blocks: usize, block_size: usize, max_blocks_per_seq: usize) -> Self {
+        PagedCache {
+            block_size,
+            num_blocks,
+            max_blocks_per_seq,
+            free: (0..num_blocks as u32).rev().collect(),
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+    /// Utilization in [0,1] — drives router/migration load balancing.
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.num_blocks.max(1) as f64
+    }
+    pub fn max_seq_tokens(&self) -> usize {
+        self.max_blocks_per_seq * self.block_size
+    }
+    pub fn has_request(&self, id: RequestId) -> bool {
+        self.tables.contains_key(&id.0)
+    }
+    pub fn table(&self, id: RequestId) -> Option<&PageTable> {
+        self.tables.get(&id.0)
+    }
+    pub fn num_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Can `n_tokens` be allocated right now? (admission control)
+    pub fn can_allocate(&self, n_tokens: usize) -> bool {
+        ceil_div(n_tokens, self.block_size) <= self.free.len()
+            && n_tokens <= self.max_seq_tokens()
+    }
+
+    /// Allocate a fresh table holding `n_tokens` (e.g. a migrated-in prefix
+    /// or a full prefill's KV). `n_tokens == 0` creates an empty table.
+    pub fn allocate(&mut self, id: RequestId, n_tokens: usize) -> Result<&PageTable, CacheError> {
+        if self.tables.contains_key(&id.0) {
+            return Err(CacheError::AlreadyAllocated(id.0));
+        }
+        if n_tokens > self.max_seq_tokens() {
+            return Err(CacheError::SequenceTooLong { len: n_tokens, cap: self.max_seq_tokens() });
+        }
+        let need = ceil_div(n_tokens, self.block_size);
+        if need > self.free.len() {
+            return Err(CacheError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(id.0, PageTable { blocks, len: n_tokens });
+        Ok(self.tables.get(&id.0).unwrap())
+    }
+
+    /// Append one token; returns its flat slot id. Grows the table by one
+    /// block when crossing a block boundary.
+    pub fn append(&mut self, id: RequestId) -> Result<u32, CacheError> {
+        // Probe capacity first so errors never leave a half-updated table.
+        let (needs_block, len, cap) = {
+            let t = self.tables.get(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
+            (t.len % self.block_size == 0 && t.len / self.block_size == t.blocks.len(),
+             t.len, self.max_seq_tokens())
+        };
+        if len + 1 > cap {
+            return Err(CacheError::SequenceTooLong { len: len + 1, cap });
+        }
+        if needs_block && self.free.is_empty() {
+            return Err(CacheError::OutOfBlocks { need: 1, free: 0 });
+        }
+        let block_size = self.block_size;
+        let new_block = if needs_block { Some(self.free.pop().unwrap()) } else { None };
+        let t = self.tables.get_mut(&id.0).unwrap();
+        if let Some(b) = new_block {
+            t.blocks.push(b);
+        }
+        let pos = t.len;
+        t.len += 1;
+        Ok(t.slot_of(pos, block_size).unwrap())
+    }
+
+    /// Release a request's blocks (end of decode, or post-migration source
+    /// release — paper §4.3 step 4).
+    pub fn free(&mut self, id: RequestId) -> Result<(), CacheError> {
+        let t = self.tables.remove(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
+        self.free.extend(t.blocks);
+        Ok(())
+    }
+
+    /// Slot ids for positions [0, len) — the migration scatter plan.
+    pub fn slot_mapping(&self, id: RequestId) -> Result<Vec<u32>, CacheError> {
+        let t = self.tables.get(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
+        Ok((0..t.len)
+            .map(|p| t.slot_of(p, self.block_size).unwrap())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: u64) -> RequestId {
+        RequestId(n)
+    }
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut c = PagedCache::new(8, 16, 4);
+        assert_eq!(c.free_blocks(), 8);
+        c.allocate(id(1), 20).unwrap(); // 2 blocks
+        assert_eq!(c.free_blocks(), 6);
+        assert_eq!(c.table(id(1)).unwrap().len, 20);
+        c.free(id(1)).unwrap();
+        assert_eq!(c.free_blocks(), 8);
+    }
+
+    #[test]
+    fn append_grows_blocks_at_boundary() {
+        let mut c = PagedCache::new(4, 4, 4);
+        c.allocate(id(1), 0).unwrap();
+        assert_eq!(c.table(id(1)).unwrap().blocks.len(), 0);
+        for i in 0..4 {
+            let slot = c.append(id(1)).unwrap();
+            assert_eq!(slot % 4, i as u32);
+        }
+        assert_eq!(c.table(id(1)).unwrap().blocks.len(), 1);
+        c.append(id(1)).unwrap();
+        assert_eq!(c.table(id(1)).unwrap().blocks.len(), 2);
+    }
+
+    #[test]
+    fn out_of_blocks_error() {
+        let mut c = PagedCache::new(2, 16, 8);
+        c.allocate(id(1), 32).unwrap();
+        let err = c.allocate(id(2), 1).unwrap_err();
+        assert_eq!(err, CacheError::OutOfBlocks { need: 1, free: 0 });
+    }
+
+    #[test]
+    fn sequence_cap_enforced() {
+        let mut c = PagedCache::new(100, 16, 2); // cap 32 tokens
+        assert!(matches!(
+            c.allocate(id(1), 33),
+            Err(CacheError::SequenceTooLong { .. })
+        ));
+        c.allocate(id(1), 32).unwrap();
+        assert!(matches!(
+            c.append(id(1)),
+            Err(CacheError::SequenceTooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut c = PagedCache::new(8, 16, 4);
+        c.allocate(id(1), 4).unwrap();
+        assert_eq!(c.allocate(id(1), 4).unwrap_err(), CacheError::AlreadyAllocated(1));
+    }
+
+    #[test]
+    fn slot_mapping_is_block_strided() {
+        let mut c = PagedCache::new(8, 4, 4);
+        c.allocate(id(1), 6).unwrap();
+        let t = c.table(id(1)).unwrap().clone();
+        let slots = c.slot_mapping(id(1)).unwrap();
+        assert_eq!(slots.len(), 6);
+        assert_eq!(slots[0], t.blocks[0] * 4);
+        assert_eq!(slots[4], t.blocks[1] * 4);
+        // all slots unique
+        let mut sorted = slots.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 6);
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut c = PagedCache::new(10, 16, 8);
+        assert_eq!(c.utilization(), 0.0);
+        c.allocate(id(1), 16 * 5).unwrap();
+        assert!((c.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn can_allocate_matches_allocate() {
+        let mut c = PagedCache::new(3, 16, 8);
+        assert!(c.can_allocate(48));
+        assert!(!c.can_allocate(49));
+        c.allocate(id(1), 48).unwrap();
+        assert!(!c.can_allocate(1));
+        assert!(c.can_allocate(0));
+    }
+}

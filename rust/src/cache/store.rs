@@ -1,0 +1,167 @@
+//! Real backing storage for paged caches (the host-side analogue of GPU
+//! cache tensors).
+//!
+//! A [`CacheStore`] owns `planes` float buffers, each laid out as
+//! `[num_blocks, block_size, hidden]` flattened — exactly the pool layout
+//! the decode artifact consumes, so a D-instance hands its plane slices to
+//! PJRT without reshuffling. The KV cache of an L-layer model uses
+//! `2 * L` planes (k0, v0, k1, v1, ...); the image cache uses 1 plane —
+//! the unified interface from paper §4.5.
+//!
+//! `write_token` mirrors the Pallas `cache_write` kernel's semantics
+//! (validated against it in `python/tests/test_kernels.py`); gather/scatter
+//! are the migration data path (§4.3 steps 2–3).
+
+/// Backing float planes for one paged cache.
+#[derive(Debug, Clone)]
+pub struct CacheStore {
+    planes: Vec<Vec<f32>>,
+    num_blocks: usize,
+    block_size: usize,
+    hidden: usize,
+}
+
+impl CacheStore {
+    pub fn new(planes: usize, num_blocks: usize, block_size: usize, hidden: usize) -> Self {
+        CacheStore {
+            planes: vec![vec![0.0; num_blocks * block_size * hidden]; planes],
+            num_blocks,
+            block_size,
+            hidden,
+        }
+    }
+
+    pub fn num_planes(&self) -> usize {
+        self.planes.len()
+    }
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    /// The whole plane, pool-layout [NB*BLK*H] — fed to the decode artifact.
+    pub fn plane(&self, p: usize) -> &[f32] {
+        &self.planes[p]
+    }
+
+    /// Write one token row into a flat slot (fused cache_write semantics).
+    pub fn write_token(&mut self, plane: usize, slot: u32, row: &[f32]) {
+        assert_eq!(row.len(), self.hidden, "row width");
+        let off = slot as usize * self.hidden;
+        self.planes[plane][off..off + self.hidden].copy_from_slice(row);
+    }
+
+    /// Read one token row from a flat slot.
+    pub fn read_token(&self, plane: usize, slot: u32) -> &[f32] {
+        let off = slot as usize * self.hidden;
+        &self.planes[plane][off..off + self.hidden]
+    }
+
+    /// Gather a request's rows (per the slot mapping) into a contiguous
+    /// buffer `[len, hidden]` — the migration *send* side, and the format
+    /// prefill artifacts emit.
+    pub fn gather(&self, plane: usize, slots: &[u32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(slots.len() * self.hidden);
+        for &s in slots {
+            out.extend_from_slice(self.read_token(plane, s));
+        }
+        out
+    }
+
+    /// Scatter a contiguous buffer `[len, hidden]` into slots — the
+    /// migration *receive* side.
+    pub fn scatter(&mut self, plane: usize, slots: &[u32], data: &[f32]) {
+        assert_eq!(data.len(), slots.len() * self.hidden, "scatter size");
+        for (i, &s) in slots.iter().enumerate() {
+            let row = &data[i * self.hidden..(i + 1) * self.hidden];
+            self.write_token(plane, s, row);
+        }
+    }
+
+    /// Gather all planes into one buffer `[planes, len, hidden]` — a whole
+    /// request's cache payload for one migration transfer.
+    pub fn gather_all(&self, slots: &[u32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.planes.len() * slots.len() * self.hidden);
+        for p in 0..self.planes.len() {
+            out.extend_from_slice(&self.gather(p, slots));
+        }
+        out
+    }
+
+    /// Inverse of [`gather_all`].
+    pub fn scatter_all(&mut self, slots: &[u32], data: &[f32]) {
+        let per_plane = slots.len() * self.hidden;
+        assert_eq!(data.len(), self.planes.len() * per_plane, "payload size");
+        for p in 0..self.planes.len() {
+            self.scatter(p, slots, &data[p * per_plane..(p + 1) * per_plane]);
+        }
+    }
+
+    /// Payload bytes for `len` tokens across all planes (migration cost).
+    pub fn payload_bytes(&self, len: usize) -> usize {
+        self.planes.len() * len * self.hidden * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut s = CacheStore::new(2, 4, 4, 3);
+        s.write_token(1, 7, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.read_token(1, 7), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.read_token(0, 7), &[0.0, 0.0, 0.0]); // other plane untouched
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut a = CacheStore::new(4, 8, 4, 2); // e.g. 2-layer KV
+        let slots: Vec<u32> = vec![3, 8, 9, 30];
+        for p in 0..4 {
+            for (i, &s) in slots.iter().enumerate() {
+                a.write_token(p, s, &[p as f32, i as f32]);
+            }
+        }
+        let payload = a.gather_all(&slots);
+        assert_eq!(payload.len(), 4 * 4 * 2);
+
+        // migrate into a different slot layout on the target
+        let mut b = CacheStore::new(4, 8, 4, 2);
+        let tgt_slots: Vec<u32> = vec![0, 1, 2, 3];
+        b.scatter_all(&tgt_slots, &payload);
+        for p in 0..4 {
+            for (i, &s) in tgt_slots.iter().enumerate() {
+                assert_eq!(b.read_token(p, s), &[p as f32, i as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn plane_is_pool_layout() {
+        let mut s = CacheStore::new(1, 2, 2, 2);
+        s.write_token(0, 3, &[5.0, 6.0]); // block 1, offset 1
+        let plane = s.plane(0);
+        assert_eq!(&plane[6..8], &[5.0, 6.0]);
+        assert_eq!(plane.len(), 2 * 2 * 2);
+    }
+
+    #[test]
+    fn payload_bytes_counts_planes() {
+        let s = CacheStore::new(4, 8, 16, 128);
+        assert_eq!(s.payload_bytes(10), 4 * 10 * 128 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn wrong_row_width_panics() {
+        let mut s = CacheStore::new(1, 2, 2, 4);
+        s.write_token(0, 0, &[1.0]);
+    }
+}

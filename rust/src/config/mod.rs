@@ -1,0 +1,352 @@
+//! Configuration: model architectures, device rooflines, SLOs, cluster
+//! layouts. JSON round-trip so experiments are driven by config files.
+//!
+//! The three evaluated models carry their *real* architecture dims — the
+//! cost model (and therefore every reproduced figure) depends on the true
+//! per-stage FLOP/byte ratios of LLaVA-1.5-7B, LLaVA-NeXT-7B and
+//! Qwen2-VL-7B, not the tiny executable VLM (which only the real-execution
+//! path uses).
+
+pub mod slo;
+
+pub use slo::SloSpec;
+
+use crate::util::json::Json;
+use crate::vision::ImageTokenRule;
+
+/// Transformer stack dims (either the LM or the vision tower).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StackSpec {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// KV heads (GQA); == heads for MHA.
+    pub kv_heads: usize,
+    pub ffn: usize,
+    /// SwiGLU-style gated FFN (3 weight matrices, LLaMA/Qwen LMs) vs the
+    /// plain 2-matrix MLP of ViT towers. Affects parameter/weight-byte
+    /// accounting (decode is weight-bandwidth bound, so this matters).
+    pub gated_ffn: bool,
+}
+
+impl StackSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+    pub fn kv_hidden(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+    /// FFN weight matrices per layer (3 for gated SwiGLU, 2 for plain MLP).
+    pub fn ffn_mats(&self) -> usize {
+        if self.gated_ffn {
+            3
+        } else {
+            2
+        }
+    }
+    /// Approximate parameter count of the stack (attention + FFN blocks).
+    pub fn params(&self) -> usize {
+        let attn = self.hidden * self.hidden * 2
+            + self.hidden * self.kv_hidden() * 2;
+        let ffn = self.ffn_mats() * self.hidden * self.ffn;
+        self.layers * (attn + ffn)
+    }
+}
+
+/// A full multimodal model: vision tower + projector + language model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub lm: StackSpec,
+    pub vocab: usize,
+    pub vision: StackSpec,
+    /// Vision tower sequence length per image tile (patches + cls).
+    pub vision_seq: usize,
+    pub image_rule: ImageTokenRule,
+    /// Bytes per element (fp16 = 2, matching the paper's setup).
+    pub dtype_bytes: usize,
+    /// Default image resolution assumed by workloads (w, h).
+    pub default_image: (usize, usize),
+}
+
+impl ModelSpec {
+    /// LLaVA-1.5-7B: Vicuna-7B LM + CLIP ViT-L/14-336, fixed 576 img tokens.
+    pub fn llava15_7b() -> ModelSpec {
+        ModelSpec {
+            name: "llava-1.5-7b".into(),
+            lm: StackSpec { layers: 32, hidden: 4096, heads: 32, kv_heads: 32, ffn: 11008, gated_ffn: true },
+            vocab: 32000,
+            vision: StackSpec { layers: 24, hidden: 1024, heads: 16, kv_heads: 16, ffn: 4096, gated_ffn: false },
+            vision_seq: 577,
+            image_rule: ImageTokenRule::LlavaFixed { tokens: 576 },
+            dtype_bytes: 2,
+            default_image: (336, 336),
+        }
+    }
+
+    /// LLaVA-NeXT-7B: same backbone, AnyRes tiling (up to 5x image tokens).
+    pub fn llava_next_7b() -> ModelSpec {
+        ModelSpec {
+            name: "llava-next-7b".into(),
+            image_rule: ImageTokenRule::LlavaNextAnyRes { base: 576, max_tiles: 4 },
+            default_image: (672, 672),
+            ..ModelSpec::llava15_7b()
+        }
+    }
+
+    /// Qwen2-VL-7B: GQA LM (4 KV heads) + 675M ViT, dynamic-resolution
+    /// patch merging.
+    pub fn qwen2_vl_7b() -> ModelSpec {
+        ModelSpec {
+            name: "qwen2-vl-7b".into(),
+            lm: StackSpec { layers: 28, hidden: 3584, heads: 28, kv_heads: 4, ffn: 18944, gated_ffn: true },
+            vocab: 152064,
+            vision: StackSpec { layers: 32, hidden: 1280, heads: 16, kv_heads: 16, ffn: 5120, gated_ffn: false },
+            vision_seq: 1036, // (28*2)^2/... effective per-tile ViT sequence
+            image_rule: ImageTokenRule::Qwen2Dynamic {
+                patch: 28,
+                merge: 2,
+                min_tokens: 64,
+                max_tokens: 1280,
+            },
+            dtype_bytes: 2,
+            default_image: (1092, 1092),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "llava-1.5-7b" => Some(ModelSpec::llava15_7b()),
+            "llava-next-7b" => Some(ModelSpec::llava_next_7b()),
+            "qwen2-vl-7b" => Some(ModelSpec::qwen2_vl_7b()),
+            _ => None,
+        }
+    }
+
+    pub const ALL_NAMES: [&'static str; 3] =
+        ["llava-1.5-7b", "llava-next-7b", "qwen2-vl-7b"];
+
+    /// LM params incl. embeddings + lm_head.
+    pub fn lm_params(&self) -> usize {
+        self.lm.params() + 2 * self.vocab * self.lm.hidden
+    }
+    pub fn vision_params(&self) -> usize {
+        // + patch embed and projector (approximate)
+        self.vision.params() + self.vision.hidden * self.lm.hidden
+    }
+    /// Tokens an image of the default resolution contributes to the LM.
+    pub fn tokens_per_image(&self) -> usize {
+        self.image_rule
+            .tokens_for(self.default_image.0, self.default_image.1)
+    }
+}
+
+/// Device roofline (defaults = one NVIDIA H800 SXM).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    /// Peak dense fp16 tensor FLOP/s.
+    pub peak_flops: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub peak_bw: f64,
+    /// Achievable fraction of peak FLOPs (large-GEMM MFU).
+    pub mfu: f64,
+    /// Achievable fraction of peak bandwidth.
+    pub mem_eff: f64,
+    /// Fixed per-batch-iteration overhead, seconds (eager-mode kernel
+    /// launches; the paper runs vLLM eager with CUDA graphs off).
+    pub iter_overhead: f64,
+    /// HBM capacity available for caches after weights, bytes.
+    pub hbm_capacity: f64,
+    /// Intra-node NVLink bandwidth, bytes/s (H800: 400 GB/s).
+    pub nvlink_bw: f64,
+    /// CUDA-IPC-style copy latency floor, seconds.
+    pub ipc_latency: f64,
+    /// NCCL collective latency floor, seconds.
+    pub nccl_latency: f64,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec::h800()
+    }
+}
+
+impl DeviceSpec {
+    pub fn h800() -> DeviceSpec {
+        DeviceSpec {
+            peak_flops: 989e12,
+            peak_bw: 3.35e12,
+            mfu: 0.55,
+            mem_eff: 0.85,
+            iter_overhead: 300e-6,
+            hbm_capacity: 80e9,
+            nvlink_bw: 400e9,
+            ipc_latency: 20e-6,
+            nccl_latency: 60e-6,
+        }
+    }
+
+    pub fn effective_flops(&self) -> f64 {
+        self.peak_flops * self.mfu
+    }
+    pub fn effective_bw(&self) -> f64 {
+        self.peak_bw * self.mem_eff
+    }
+}
+
+// ------------------------------------------------------------ JSON round-trip
+
+impl ModelSpec {
+    pub fn to_json(&self) -> Json {
+        let rule = match self.image_rule {
+            ImageTokenRule::LlavaFixed { tokens } => Json::obj(vec![
+                ("kind", Json::str("fixed")),
+                ("tokens", Json::num(tokens as f64)),
+            ]),
+            ImageTokenRule::LlavaNextAnyRes { base, max_tiles } => Json::obj(vec![
+                ("kind", Json::str("anyres")),
+                ("base", Json::num(base as f64)),
+                ("max_tiles", Json::num(max_tiles as f64)),
+            ]),
+            ImageTokenRule::Qwen2Dynamic { patch, merge, min_tokens, max_tokens } => Json::obj(vec![
+                ("kind", Json::str("dynamic")),
+                ("patch", Json::num(patch as f64)),
+                ("merge", Json::num(merge as f64)),
+                ("min_tokens", Json::num(min_tokens as f64)),
+                ("max_tokens", Json::num(max_tokens as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("lm", stack_json(&self.lm)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("vision", stack_json(&self.vision)),
+            ("vision_seq", Json::num(self.vision_seq as f64)),
+            ("image_rule", rule),
+            ("dtype_bytes", Json::num(self.dtype_bytes as f64)),
+            (
+                "default_image",
+                Json::arr([
+                    Json::num(self.default_image.0 as f64),
+                    Json::num(self.default_image.1 as f64),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelSpec> {
+        let rule_j = j.get("image_rule").ok_or_else(|| anyhow::anyhow!("missing image_rule"))?;
+        let image_rule = match rule_j.req_str("kind")? {
+            "fixed" => ImageTokenRule::LlavaFixed { tokens: rule_j.req_usize("tokens")? },
+            "anyres" => ImageTokenRule::LlavaNextAnyRes {
+                base: rule_j.req_usize("base")?,
+                max_tiles: rule_j.req_usize("max_tiles")?,
+            },
+            "dynamic" => ImageTokenRule::Qwen2Dynamic {
+                patch: rule_j.req_usize("patch")?,
+                merge: rule_j.req_usize("merge")?,
+                min_tokens: rule_j.req_usize("min_tokens")?,
+                max_tokens: rule_j.req_usize("max_tokens")?,
+            },
+            k => anyhow::bail!("unknown image rule kind `{k}`"),
+        };
+        let img = j
+            .get("default_image")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing default_image"))?;
+        Ok(ModelSpec {
+            name: j.req_str("name")?.to_string(),
+            lm: stack_from_json(j.get("lm").ok_or_else(|| anyhow::anyhow!("missing lm"))?)?,
+            vocab: j.req_usize("vocab")?,
+            vision: stack_from_json(
+                j.get("vision").ok_or_else(|| anyhow::anyhow!("missing vision"))?,
+            )?,
+            vision_seq: j.req_usize("vision_seq")?,
+            image_rule,
+            dtype_bytes: j.req_usize("dtype_bytes")?,
+            default_image: (
+                img[0].as_usize().unwrap_or(336),
+                img[1].as_usize().unwrap_or(336),
+            ),
+        })
+    }
+}
+
+fn stack_json(s: &StackSpec) -> Json {
+    Json::obj(vec![
+        ("layers", Json::num(s.layers as f64)),
+        ("hidden", Json::num(s.hidden as f64)),
+        ("heads", Json::num(s.heads as f64)),
+        ("kv_heads", Json::num(s.kv_heads as f64)),
+        ("ffn", Json::num(s.ffn as f64)),
+        ("gated_ffn", Json::Bool(s.gated_ffn)),
+    ])
+}
+
+fn stack_from_json(j: &Json) -> anyhow::Result<StackSpec> {
+    Ok(StackSpec {
+        layers: j.req_usize("layers")?,
+        hidden: j.req_usize("hidden")?,
+        heads: j.req_usize("heads")?,
+        kv_heads: j.req_usize("kv_heads")?,
+        ffn: j.req_usize("ffn")?,
+        gated_ffn: j.get("gated_ffn").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llava15_param_count_near_7b() {
+        let m = ModelSpec::llava15_7b();
+        let p = m.lm_params() as f64;
+        assert!((6.0e9..8.0e9).contains(&p), "lm params = {p}");
+        let v = m.vision_params() as f64;
+        assert!((2.0e8..4.5e8).contains(&v), "vision params = {v}");
+    }
+
+    #[test]
+    fn qwen2_gqa_kv_hidden() {
+        let m = ModelSpec::qwen2_vl_7b();
+        assert_eq!(m.lm.head_dim(), 128);
+        assert_eq!(m.lm.kv_hidden(), 512); // 4 kv heads * 128
+    }
+
+    #[test]
+    fn tokens_per_image_ordering() {
+        // NeXT's AnyRes must produce more tokens than 1.5's fixed 576 (§5.1)
+        let t15 = ModelSpec::llava15_7b().tokens_per_image();
+        let tnext = ModelSpec::llava_next_7b().tokens_per_image();
+        assert_eq!(t15, 576);
+        assert!(tnext > t15, "next={tnext}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ModelSpec::ALL_NAMES {
+            assert_eq!(ModelSpec::by_name(name).unwrap().name, name);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_all_models() {
+        for name in ModelSpec::ALL_NAMES {
+            let m = ModelSpec::by_name(name).unwrap();
+            let j = m.to_json();
+            let m2 = ModelSpec::from_json(&crate::util::json::parse(&j.to_string()).unwrap())
+                .unwrap();
+            assert_eq!(m, m2);
+        }
+    }
+
+    #[test]
+    fn h800_roofline_sanity() {
+        let d = DeviceSpec::h800();
+        // ridge point (flops/byte where compute == memory time)
+        let ridge = d.effective_flops() / d.effective_bw();
+        assert!((100.0..250.0).contains(&ridge), "ridge = {ridge}");
+    }
+}

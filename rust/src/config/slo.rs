@@ -1,0 +1,63 @@
+//! SLO settings (paper Table 3): per model × dataset TTFT / TPOT targets.
+
+/// A TTFT/TPOT service-level objective pair, seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub ttft: f64,
+    pub tpot: f64,
+}
+
+impl SloSpec {
+    pub fn new(ttft: f64, tpot: f64) -> Self {
+        SloSpec { ttft, tpot }
+    }
+
+    /// Paper Table 3: the SLO used for (model, dataset) in Fig. 10.
+    pub fn paper_table3(model: &str, dataset: &str) -> Option<SloSpec> {
+        let s = |ttft: f64, tpot: f64| Some(SloSpec::new(ttft, tpot));
+        match (model, dataset) {
+            ("llava-1.5-7b", "vizwiz") => s(8.0, 0.04),
+            ("llava-1.5-7b", "textvqa") => s(0.25, 0.04),
+            ("llava-1.5-7b", "mme") => s(0.25, 0.06),
+            ("llava-1.5-7b", "pope") => s(0.25, 0.04),
+            ("llava-1.5-7b", "textcaps") => s(0.25, 0.04),
+            ("llava-next-7b", "vizwiz") => s(8.0, 0.12),
+            ("llava-next-7b", "textvqa") => s(8.0, 0.12),
+            ("llava-next-7b", "mme") => s(8.0, 0.14),
+            ("llava-next-7b", "pope") => s(8.0, 0.06),
+            ("llava-next-7b", "textcaps") => s(8.0, 0.08),
+            ("qwen2-vl-7b", "vizwiz") => s(8.0, 0.14),
+            ("qwen2-vl-7b", "textvqa") => s(1.0, 0.12),
+            ("qwen2-vl-7b", "mme") => s(1.0, 0.14),
+            ("qwen2-vl-7b", "pope") => s(1.0, 0.04),
+            ("qwen2-vl-7b", "textcaps") => s(1.0, 0.14),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_complete() {
+        for model in crate::config::ModelSpec::ALL_NAMES {
+            for ds in ["vizwiz", "textvqa", "mme", "pope", "textcaps"] {
+                let slo = SloSpec::paper_table3(model, ds);
+                assert!(slo.is_some(), "missing SLO for {model}/{ds}");
+                let slo = slo.unwrap();
+                assert!(slo.ttft > 0.0 && slo.tpot > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn table3_spot_checks() {
+        let s = SloSpec::paper_table3("llava-1.5-7b", "mme").unwrap();
+        assert_eq!((s.ttft, s.tpot), (0.25, 0.06));
+        let s = SloSpec::paper_table3("qwen2-vl-7b", "pope").unwrap();
+        assert_eq!((s.ttft, s.tpot), (1.0, 0.04));
+        assert!(SloSpec::paper_table3("x", "y").is_none());
+    }
+}

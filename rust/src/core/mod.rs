@@ -1,0 +1,260 @@
+//! Core request model: stages, lifecycle, sampling parameters.
+//!
+//! A request moves through the paper's pipeline
+//! `encode -> prefill -> decode` (text-only requests skip encode), with
+//! `migrate` as an explicit extra stage (§4.2 "to support request
+//! migration, we introduce a dedicated migrate stage"). The
+//! [`Lifecycle`] records the eight phase timestamps the latency-breakdown
+//! analysis needs (§5.5: encode queueing/execution, EP migration, prefill
+//! queueing/execution, PD migration, decode queueing/execution).
+
+pub mod sampling;
+
+pub use sampling::SamplingParams;
+
+/// Globally unique request id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+impl std::fmt::Display for RequestId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// The four schedulable stages (paper §4.1 Stage Processor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Encode,
+    Prefill,
+    Decode,
+    Migrate,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [Stage::Encode, Stage::Prefill, Stage::Decode, Stage::Migrate];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Encode => "encode",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+            Stage::Migrate => "migrate",
+        }
+    }
+}
+
+/// Static description of a request's work (what the workload generator
+/// emits and both execution paths consume).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpec {
+    pub id: RequestId,
+    /// Arrival time (seconds since experiment start).
+    pub arrival: f64,
+    /// Number of images attached (0 = text-only).
+    pub num_images: usize,
+    /// Image tokens contributed per image (model-dependent).
+    pub tokens_per_image: usize,
+    /// Text prompt length in tokens.
+    pub prompt_tokens: usize,
+    /// Output tokens to generate (the paper fixes these via ignore_eos to
+    /// equalize load across engines, §5.1).
+    pub output_tokens: usize,
+}
+
+impl RequestSpec {
+    /// Total prefill sequence length (image tokens + text tokens).
+    pub fn prefill_tokens(&self) -> usize {
+        self.num_images * self.tokens_per_image + self.prompt_tokens
+    }
+    pub fn image_tokens(&self) -> usize {
+        self.num_images * self.tokens_per_image
+    }
+    pub fn has_image(&self) -> bool {
+        self.num_images > 0
+    }
+    /// First stage this request needs.
+    pub fn first_stage(&self) -> Stage {
+        if self.has_image() {
+            Stage::Encode
+        } else {
+            Stage::Prefill
+        }
+    }
+}
+
+/// The eight measured phases of a request's life (paper Fig. 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    EncodeQueue,
+    EncodeExec,
+    EpMigration,
+    PrefillQueue,
+    PrefillExec,
+    PdMigration,
+    DecodeQueue,
+    DecodeExec,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::EncodeQueue,
+        Phase::EncodeExec,
+        Phase::EpMigration,
+        Phase::PrefillQueue,
+        Phase::PrefillExec,
+        Phase::PdMigration,
+        Phase::DecodeQueue,
+        Phase::DecodeExec,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::EncodeQueue => "encode_queue",
+            Phase::EncodeExec => "encode_exec",
+            Phase::EpMigration => "ep_migration",
+            Phase::PrefillQueue => "prefill_queue",
+            Phase::PrefillExec => "prefill_exec",
+            Phase::PdMigration => "pd_migration",
+            Phase::DecodeQueue => "decode_queue",
+            Phase::DecodeExec => "decode_exec",
+        }
+    }
+}
+
+/// Per-request latency accounting.
+#[derive(Debug, Clone, Default)]
+pub struct Lifecycle {
+    pub arrival: f64,
+    /// Accumulated seconds per phase.
+    pub phase_time: [f64; 8],
+    /// Time the first output token became available.
+    pub first_token_at: Option<f64>,
+    /// Completion time of every output token (TPOT = diffs).
+    pub token_times: Vec<f64>,
+    pub finished_at: Option<f64>,
+}
+
+impl Lifecycle {
+    pub fn new(arrival: f64) -> Self {
+        Lifecycle { arrival, ..Default::default() }
+    }
+
+    pub fn add_phase(&mut self, phase: Phase, dt: f64) {
+        debug_assert!(dt >= -1e-9, "negative phase time {dt}");
+        self.phase_time[phase as usize] += dt.max(0.0);
+    }
+
+    pub fn phase(&self, phase: Phase) -> f64 {
+        self.phase_time[phase as usize]
+    }
+
+    pub fn record_token(&mut self, now: f64) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(now);
+        }
+        self.token_times.push(now);
+    }
+
+    /// Time to first token, if produced.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Inter-token intervals after the first token.
+    pub fn tpots(&self) -> Vec<f64> {
+        self.token_times.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// End-to-end latency, if finished.
+    pub fn e2e(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.arrival)
+    }
+
+    /// SLO check per the paper §2.3: TTFT below its SLO and >= 90% of
+    /// TPOT intervals below the TPOT SLO.
+    pub fn meets_slo(&self, ttft_slo: f64, tpot_slo: f64) -> bool {
+        let Some(ttft) = self.ttft() else { return false };
+        if ttft > ttft_slo {
+            return false;
+        }
+        let tpots = self.tpots();
+        if tpots.is_empty() {
+            return true; // single-token outputs only need TTFT
+        }
+        let ok = tpots.iter().filter(|&&t| t <= tpot_slo).count();
+        ok as f64 / tpots.len() as f64 >= 0.90
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(images: usize, prompt: usize, out: usize) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(1),
+            arrival: 0.0,
+            num_images: images,
+            tokens_per_image: 576,
+            prompt_tokens: prompt,
+            output_tokens: out,
+        }
+    }
+
+    #[test]
+    fn prefill_tokens_adds_image_tokens() {
+        assert_eq!(spec(1, 40, 10).prefill_tokens(), 616);
+        assert_eq!(spec(0, 40, 10).prefill_tokens(), 40);
+    }
+
+    #[test]
+    fn first_stage_depends_on_images() {
+        assert_eq!(spec(1, 4, 2).first_stage(), Stage::Encode);
+        assert_eq!(spec(0, 4, 2).first_stage(), Stage::Prefill);
+    }
+
+    #[test]
+    fn lifecycle_ttft_and_tpot() {
+        let mut lc = Lifecycle::new(10.0);
+        lc.record_token(10.5);
+        lc.record_token(10.54);
+        lc.record_token(10.60);
+        assert_eq!(lc.ttft(), Some(0.5));
+        let tpots = lc.tpots();
+        assert_eq!(tpots.len(), 2);
+        assert!((tpots[0] - 0.04).abs() < 1e-12);
+        assert!((tpots[1] - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_requires_ttft_and_90pct_tpot() {
+        let mut lc = Lifecycle::new(0.0);
+        lc.record_token(0.2);
+        // 10 tpot intervals: 9 good, 1 bad -> exactly 90% -> meets
+        let mut t = 0.2;
+        for i in 0..10 {
+            t += if i == 0 { 0.5 } else { 0.03 };
+            lc.record_token(t);
+        }
+        assert!(lc.meets_slo(0.25, 0.04));
+        // TTFT violation fails regardless of TPOT
+        let mut lc2 = Lifecycle::new(0.0);
+        lc2.record_token(0.3);
+        assert!(!lc2.meets_slo(0.25, 0.04));
+        // never produced a token
+        let lc3 = Lifecycle::new(0.0);
+        assert!(!lc3.meets_slo(10.0, 10.0));
+    }
+
+    #[test]
+    fn phase_accumulation() {
+        let mut lc = Lifecycle::new(0.0);
+        lc.add_phase(Phase::DecodeExec, 0.1);
+        lc.add_phase(Phase::DecodeExec, 0.2);
+        lc.add_phase(Phase::EpMigration, 0.001);
+        assert!((lc.phase(Phase::DecodeExec) - 0.3).abs() < 1e-12);
+        assert!((lc.phase(Phase::EpMigration) - 0.001).abs() < 1e-12);
+        assert_eq!(lc.phase(Phase::PrefillExec), 0.0);
+    }
+}

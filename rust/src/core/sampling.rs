@@ -1,0 +1,147 @@
+//! Token sampling for the real execution path: greedy, temperature, top-k.
+//!
+//! The OpenAI-style API surfaces these per request (paper §4.5 "users can
+//! configure sampling parameters such as the maximum number of output
+//! tokens").
+
+use crate::util::rng::Rng;
+
+/// Per-request sampling configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax.
+    pub temperature: f32,
+    /// 0 = no top-k truncation.
+    pub top_k: usize,
+    pub max_tokens: usize,
+    /// Generate exactly max_tokens, never stopping at EOS — the paper's
+    /// §5.1 trick to equalize decode load across engines.
+    pub ignore_eos: bool,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, max_tokens: 16, ignore_eos: true, seed: 0 }
+    }
+}
+
+/// Stateful sampler (one per request; owns the request's RNG stream).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Self {
+        let rng = Rng::new(params.seed);
+        Sampler { params, rng }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Sample the next token id from raw logits.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        if self.params.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // temperature softmax over (optionally top-k truncated) logits
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.params.top_k > 0 && self.params.top_k < logits.len() {
+            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(self.params.top_k);
+        }
+        let inv_t = 1.0 / self.params.temperature as f64;
+        let maxl = idx
+            .iter()
+            .map(|&i| logits[i] as f64)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let weights: Vec<f64> = idx
+            .iter()
+            .map(|&i| ((logits[i] as f64 - maxl) * inv_t).exp())
+            .collect();
+        idx[self.rng.weighted(&weights)] as u32
+    }
+
+    /// Should generation stop after emitting `token` as the n-th output?
+    pub fn should_stop(&self, token: u32, n_generated: usize, eos: u32) -> bool {
+        if n_generated >= self.params.max_tokens {
+            return true;
+        }
+        !self.params.ignore_eos && token == eos
+    }
+}
+
+fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(SamplingParams::default());
+        assert_eq!(s.sample(&[0.1, 3.0, -2.0, 2.9]), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_is_seeded_deterministic() {
+        let p = SamplingParams { temperature: 1.0, seed: 9, ..Default::default() };
+        let logits = vec![1.0, 1.1, 0.9, 1.05];
+        let a: Vec<u32> = {
+            let mut s = Sampler::new(p.clone());
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        let b: Vec<u32> = {
+            let mut s = Sampler::new(p);
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let p = SamplingParams { temperature: 1.0, top_k: 2, seed: 3, ..Default::default() };
+        let mut s = Sampler::new(p);
+        let logits = vec![10.0, 9.5, -50.0, -60.0];
+        for _ in 0..50 {
+            let t = s.sample(&logits);
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let p = SamplingParams { max_tokens: 3, ignore_eos: false, ..Default::default() };
+        let s = Sampler::new(p);
+        assert!(!s.should_stop(5, 1, 257));
+        assert!(s.should_stop(5, 3, 257)); // max tokens
+        assert!(s.should_stop(257, 1, 257)); // eos respected
+        let p2 = SamplingParams { max_tokens: 3, ignore_eos: true, ..Default::default() };
+        let s2 = Sampler::new(p2);
+        assert!(!s2.should_stop(257, 1, 257)); // eos ignored
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let p = SamplingParams { temperature: 5.0, seed: 1, ..Default::default() };
+        let mut s = Sampler::new(p);
+        let logits = vec![1.0, 0.0, 0.0, 0.0];
+        let mut seen = [0usize; 4];
+        for _ in 0..200 {
+            seen[s.sample(&logits) as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 0), "{seen:?}");
+    }
+}

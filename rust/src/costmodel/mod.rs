@@ -1,0 +1,144 @@
+//! Analytic cost model: the paper's §3.1 FLOPs / memory-access analysis
+//! (Tables 1–2) + a roofline execution-time model, used by the simulator,
+//! the budget profiler and every reproduced figure.
+//!
+//! Execution time of a batch is `max(T_comp, T_mem) + iter_overhead`
+//! (paper: "T = max(Tcomp, Tmem)"); multi-stream colocation of vision and
+//! language work shares the device roofline — the sum of both streams'
+//! FLOPs and bytes goes through the same max — which is exactly the
+//! mechanism behind the paper's Fig. 3/4 parallelism win.
+
+pub mod multistream;
+pub mod ops;
+
+pub use multistream::{parallel_time, sequential_time};
+pub use ops::{decode_cost, encode_cost, iteration_cost, prefill_cost, table2_cost, Op, StageShape};
+
+use crate::config::DeviceSpec;
+
+/// FLOPs + bytes moved for some unit of work. Additive.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl Cost {
+    pub const ZERO: Cost = Cost { flops: 0.0, bytes: 0.0 };
+
+    pub fn new(flops: f64, bytes: f64) -> Cost {
+        Cost { flops, bytes }
+    }
+
+    /// Arithmetic intensity, FLOPs per byte (Fig. 5's y-axis).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0.0 {
+            return f64::INFINITY;
+        }
+        self.flops / self.bytes
+    }
+}
+
+impl std::ops::Add for Cost {
+    type Output = Cost;
+    fn add(self, o: Cost) -> Cost {
+        Cost { flops: self.flops + o.flops, bytes: self.bytes + o.bytes }
+    }
+}
+
+impl std::ops::AddAssign for Cost {
+    fn add_assign(&mut self, o: Cost) {
+        self.flops += o.flops;
+        self.bytes += o.bytes;
+    }
+}
+
+impl std::ops::Mul<f64> for Cost {
+    type Output = Cost;
+    fn mul(self, k: f64) -> Cost {
+        Cost { flops: self.flops * k, bytes: self.bytes * k }
+    }
+}
+
+/// Roofline execution time for one batch iteration (includes the fixed
+/// per-iteration launch overhead).
+pub fn exec_time(c: Cost, d: &DeviceSpec) -> f64 {
+    raw_time(c, d) + d.iter_overhead
+}
+
+/// Roofline time without the per-iteration overhead (for composing
+/// multi-stream batches, where the overhead is paid once).
+pub fn raw_time(c: Cost, d: &DeviceSpec) -> f64 {
+    let t_comp = c.flops / d.effective_flops();
+    let t_mem = c.bytes / d.effective_bw();
+    t_comp.max(t_mem)
+}
+
+/// Is this work compute-bound on the device?
+pub fn compute_bound(c: Cost, d: &DeviceSpec) -> bool {
+    c.intensity() > d.effective_flops() / d.effective_bw()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceSpec, ModelSpec};
+
+    #[test]
+    fn cost_arithmetic() {
+        let a = Cost::new(10.0, 2.0) + Cost::new(5.0, 3.0);
+        assert_eq!(a, Cost::new(15.0, 5.0));
+        assert_eq!((a * 2.0).flops, 30.0);
+        assert_eq!(Cost::new(8.0, 2.0).intensity(), 4.0);
+    }
+
+    #[test]
+    fn exec_time_is_roofline_max() {
+        let d = DeviceSpec::h800();
+        // heavily compute-bound work
+        let c = Cost::new(1e15, 1.0);
+        let t = exec_time(c, &d);
+        assert!((t - (1e15 / d.effective_flops() + d.iter_overhead)).abs() < 1e-9);
+        // heavily memory-bound work
+        let c = Cost::new(1.0, 1e12);
+        let t = exec_time(c, &d);
+        assert!((t - (1e12 / d.effective_bw() + d.iter_overhead)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_boundedness_matches_paper() {
+        // §3.1: prefill compute-bound, decode memory-bound, encode between.
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let prefill = prefill_cost(&m, &[(0, 1024)]);
+        let decode = decode_cost(&m, &[1024]);
+        assert!(compute_bound(prefill, &d), "prefill must be compute-bound");
+        assert!(!compute_bound(decode, &d), "decode must be memory-bound");
+        let encode = encode_cost(&m, 1);
+        let ai_e = encode.intensity();
+        assert!(
+            ai_e > decode.intensity() && ai_e < prefill.intensity(),
+            "encode intensity {ai_e} should sit between decode {} and prefill {}",
+            decode.intensity(),
+            prefill.intensity()
+        );
+    }
+
+    #[test]
+    fn decode_tpot_magnitude_realistic() {
+        // 7B fp16 decode at batch 1 is weight-bandwidth bound: ~4-8 ms.
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let t = exec_time(decode_cost(&m, &[512]), &d);
+        assert!((0.003..0.012).contains(&t), "t = {t}");
+    }
+
+    #[test]
+    fn prefill_1k_magnitude_realistic() {
+        // 1024-token prefill of a 7B on H800: tens of milliseconds.
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let t = exec_time(prefill_cost(&m, &[(0, 1024)]), &d);
+        assert!((0.01..0.1).contains(&t), "t = {t}");
+    }
+}

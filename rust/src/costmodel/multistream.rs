@@ -1,0 +1,96 @@
+//! Multi-stream execution model (paper §3.1, Figs. 3–4).
+//!
+//! Sequential execution pays each stream's roofline separately; running
+//! the vision stream and the language stream concurrently on one device
+//! shares the roofline: total compute and total memory traffic each fill
+//! their own unit, so `T_par = max(sum F / peakF, sum B / peakBW)`. A
+//! compute-bound encode colocated with a memory-bound decode overlaps
+//! almost perfectly — the entire reason ED colocation can beat E+D
+//! disaggregation (Takeaway-1).
+
+use crate::config::DeviceSpec;
+use crate::costmodel::{raw_time, Cost};
+
+/// Time to run all streams back-to-back (one launch overhead each).
+pub fn sequential_time(streams: &[Cost], d: &DeviceSpec) -> f64 {
+    streams
+        .iter()
+        .map(|&c| raw_time(c, d) + d.iter_overhead)
+        .sum()
+}
+
+/// Time to run all streams concurrently on one device (shared roofline,
+/// one launch overhead). Degenerates to `exec_time` for a single stream.
+pub fn parallel_time(streams: &[Cost], d: &DeviceSpec) -> f64 {
+    let total = streams.iter().fold(Cost::ZERO, |acc, &c| acc + c);
+    if streams.is_empty() {
+        return 0.0;
+    }
+    // Concurrency cannot beat the longest single stream's own roofline.
+    let floor = streams
+        .iter()
+        .map(|&c| raw_time(c, d))
+        .fold(0.0f64, f64::max);
+    raw_time(total, d).max(floor) + d.iter_overhead
+}
+
+/// Speedup of parallel over sequential for the given streams (>1 is a win).
+pub fn parallel_speedup(streams: &[Cost], d: &DeviceSpec) -> f64 {
+    let seq = sequential_time(streams, d);
+    let par = parallel_time(streams, d);
+    if par == 0.0 {
+        return 1.0;
+    }
+    seq / par
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceSpec, ModelSpec};
+    use crate::costmodel::{decode_cost, encode_cost, prefill_cost};
+
+    #[test]
+    fn parallel_never_slower_than_best_sequential_component() {
+        let d = DeviceSpec::h800();
+        let a = Cost::new(1e12, 1e9);
+        let b = Cost::new(1e9, 1e11);
+        let par = parallel_time(&[a, b], &d);
+        assert!(par >= raw_time(a, &d) + d.iter_overhead - 1e-12);
+        assert!(par <= sequential_time(&[a, b], &d) + 1e-12);
+    }
+
+    #[test]
+    fn compute_plus_memory_bound_overlap_well() {
+        // Encode (compute-heavy) + decode (memory-heavy) on LLaVA-1.5:
+        // the paper's Fig. 4 shows parallel beats 50/50 time-sharing.
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        // size the encode stream so its compute time ~ decode's memory
+        // time (the sweet spot the paper's scheduler aims for)
+        let e = encode_cost(&m, 24);
+        let dec = decode_cost(&m, &vec![1024; 64]);
+        let speedup = parallel_speedup(&[e, dec], &d);
+        assert!(speedup > 1.2, "speedup = {speedup}");
+        assert!(speedup < 2.1, "speedup bounded by 2x: {speedup}");
+    }
+
+    #[test]
+    fn two_compute_bound_streams_do_not_overlap() {
+        // prefill + prefill: same bottleneck, parallel ~= sequential
+        // (minus one launch overhead).
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let p = prefill_cost(&m, &[(0, 1024)]);
+        let seq = sequential_time(&[p, p], &d);
+        let par = parallel_time(&[p, p], &d);
+        assert!((seq - par) <= d.iter_overhead + seq * 0.02, "seq={seq} par={par}");
+    }
+
+    #[test]
+    fn empty_streams() {
+        let d = DeviceSpec::h800();
+        assert_eq!(parallel_time(&[], &d), 0.0);
+        assert_eq!(sequential_time(&[], &d), 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Device thread: the PJRT engine is !Send (raw C pointers), so it lives
+//! on one dedicated thread and instances call it via channel RPC. On this
+//! CPU testbed that is also the honest execution model — all instances
+//! share one physical device, like the paper's per-GPU instances share a
+//! node (DESIGN.md §2).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{DecodeInput, DecodeOut, Engine, PrefillOut, VlmConfig};
+
+/// RPC messages to the device thread.
+pub enum ExecCall {
+    Encode {
+        images: Vec<Vec<f32>>,
+        reply: Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Prefill {
+        tokens: Vec<u32>,
+        img_embed: Option<Vec<f32>>,
+        reply: Sender<Result<PrefillOut>>,
+    },
+    Decode {
+        reqs: Vec<DecodeInput>,
+        k_pool: Vec<f32>,
+        v_pool: Vec<f32>,
+        reply: Sender<Result<DecodeOut>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle for instances.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Sender<ExecCall>,
+    cfg: VlmConfig,
+}
+
+impl DeviceHandle {
+    pub fn cfg(&self) -> &VlmConfig {
+        &self.cfg
+    }
+
+    pub fn encode(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ExecCall::Encode { images, reply: tx })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))?
+    }
+
+    pub fn prefill(&self, tokens: Vec<u32>, img_embed: Option<Vec<f32>>) -> Result<PrefillOut> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ExecCall::Prefill { tokens, img_embed, reply: tx })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))?
+    }
+
+    pub fn decode(
+        &self,
+        reqs: Vec<DecodeInput>,
+        k_pool: Vec<f32>,
+        v_pool: Vec<f32>,
+    ) -> Result<DecodeOut> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ExecCall::Decode { reqs, k_pool, v_pool, reply: tx })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(ExecCall::Shutdown);
+    }
+}
+
+/// Spawn the device thread; blocks until the engine finished compiling all
+/// artifacts (or failed).
+pub fn spawn_device(artifacts_dir: &str) -> Result<(DeviceHandle, JoinHandle<()>)> {
+    let dir = artifacts_dir.to_string();
+    let (tx, rx): (Sender<ExecCall>, Receiver<ExecCall>) = channel();
+    let (ready_tx, ready_rx) = channel::<Result<VlmConfig>>();
+    let join = std::thread::Builder::new()
+        .name("hydra-device".into())
+        .spawn(move || {
+            let engine = match Engine::load(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(*e.cfg()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(call) = rx.recv() {
+                match call {
+                    ExecCall::Encode { images, reply } => {
+                        let _ = reply.send(engine.encode(&images));
+                    }
+                    ExecCall::Prefill { tokens, img_embed, reply } => {
+                        let _ = reply.send(engine.prefill(&tokens, img_embed.as_deref()));
+                    }
+                    ExecCall::Decode { reqs, k_pool, v_pool, reply } => {
+                        let _ = reply.send(engine.decode(&reqs, &k_pool, &v_pool));
+                    }
+                    ExecCall::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawn device thread");
+    let cfg = ready_rx
+        .recv()
+        .map_err(|_| anyhow!("device thread died during startup"))??;
+    Ok((DeviceHandle { tx, cfg }, join))
+}

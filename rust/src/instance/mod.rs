@@ -1,0 +1,827 @@
+//! Real-execution inference instances and the serving cluster.
+//!
+//! Each instance is a worker thread owning its scheduler (Algorithm 1 by
+//! default), paged KV + image caches with real backing stores, and a mail
+//! box for request hand-off: the §4.3 pull-based migration protocol runs
+//! over these channels. Compute goes through the shared [`DeviceHandle`]
+//! (PJRT executables compiled once from the AOT artifacts). Python is
+//! never involved — this is the self-contained serving binary.
+
+pub mod device;
+
+pub use device::{spawn_device, DeviceHandle};
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{CacheStore, PagedCache};
+use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, SamplingParams, Stage};
+use crate::core::sampling::Sampler;
+use crate::migrate::{MigrationKind, Offer, Payload, Pull, Release};
+use crate::router::{RoutePolicy, Router};
+use crate::runtime::DecodeInput;
+use crate::scheduler::{Budgets, Policy, Queues, ReqState, Scheduler, StageMask, TaskWork};
+use crate::simulator::ClusterSpec;
+use crate::tokenizer::Tokenizer;
+use crate::vision::Image;
+
+/// A fully preprocessed request (the paper's §4.1 Request Processor output).
+#[derive(Debug, Clone)]
+pub struct PreparedRequest {
+    pub spec: RequestSpec,
+    pub tokens: Vec<u32>,
+    /// Normalized pixels, if multimodal.
+    pub pixels: Option<Vec<f32>>,
+    pub sampling: SamplingParams,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub lifecycle: Lifecycle,
+}
+
+enum Msg {
+    Submit(Box<PreparedRequest>),
+    Offer(Box<Offer>),
+    Pull(Pull),
+    Payload(Box<Payload>),
+    Release(Release),
+    Shutdown,
+}
+
+/// Per-request serving data living on whichever instance owns the request.
+struct ReqData {
+    tokens: Vec<u32>,
+    pixels: Option<Vec<f32>>,
+    sampler: Sampler,
+    generated: Vec<u32>,
+    lifecycle: Lifecycle,
+    /// Tokens currently materialized in this instance's KV store.
+    ctx_len: usize,
+    /// Ready-for-work timestamp (queue-time accounting).
+    ready_since: f64,
+}
+
+struct RealInstance {
+    idx: usize,
+    mask: StageMask,
+    device: DeviceHandle,
+    peers: Vec<(Sender<Msg>, StageMask)>,
+    results: Sender<ServeResult>,
+    epoch: Instant,
+    sched: Box<dyn Scheduler>,
+    budgets: Budgets,
+    queues: Queues,
+    kv: PagedCache,
+    kv_store: CacheStore,
+    img: PagedCache,
+    img_store: CacheStore,
+    data: HashMap<u64, ReqData>,
+    /// Offers waiting for local capacity (pull-based backpressure).
+    inbound: Vec<Offer>,
+    /// Offers admitted, transfer in flight (we sent Pull, awaiting Payload).
+    pending_in: HashMap<u64, Offer>,
+    router: Router,
+    tokenizer: Tokenizer,
+}
+
+impl RealInstance {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    // ---- capacity --------------------------------------------------------
+
+    fn kv_tokens_needed(&self, r: &ReqState) -> usize {
+        if !(self.mask.prefill || self.mask.decode) {
+            return 0;
+        }
+        r.spec.prefill_tokens() + if self.mask.decode { r.spec.output_tokens } else { 0 }
+    }
+
+    fn img_tokens_needed(&self, r: &ReqState) -> usize {
+        let consumes = self.mask.encode
+            || (self.mask.prefill && r.spec.has_image() && r.prefill_remaining() > 0);
+        if consumes {
+            r.spec.image_tokens()
+        } else {
+            0
+        }
+    }
+
+    fn can_admit(&self, r: &ReqState) -> bool {
+        let kv_need = crate::util::ceil_div(self.kv_tokens_needed(r), self.kv.block_size().max(1));
+        let img_need =
+            crate::util::ceil_div(self.img_tokens_needed(r), self.img.block_size().max(1));
+        kv_need <= self.kv.free_blocks() && img_need <= self.img.free_blocks()
+    }
+
+    fn reserve(&mut self, r: &ReqState) {
+        let id = r.spec.id;
+        let kv_tokens = self.kv_tokens_needed(r);
+        if kv_tokens > 0 && !self.kv.has_request(id) {
+            self.kv.allocate(id, kv_tokens).expect("kv capacity checked");
+        }
+        let img_tokens = self.img_tokens_needed(r);
+        if img_tokens > 0 && !self.img.has_request(id) {
+            self.img.allocate(id, img_tokens).expect("img capacity checked");
+        }
+    }
+
+    fn release_caches(&mut self, id: RequestId) {
+        if self.kv.has_request(id) {
+            self.kv.free(id).unwrap();
+        }
+        if self.img.has_request(id) {
+            self.img.free(id).unwrap();
+        }
+    }
+
+    // ---- message handling ------------------------------------------------
+
+    fn handle(&mut self, msg: Msg) -> bool {
+        match msg {
+            Msg::Shutdown => return false,
+            Msg::Submit(p) => {
+                let now = self.now();
+                let mut lc = Lifecycle::new(p.spec.arrival);
+                lc.arrival = p.spec.arrival;
+                self.data.insert(
+                    p.spec.id.0,
+                    ReqData {
+                        tokens: p.tokens,
+                        pixels: p.pixels,
+                        sampler: Sampler::new(p.sampling.clone()),
+                        generated: Vec::new(),
+                        lifecycle: lc,
+                        ctx_len: 0,
+                        ready_since: now,
+                    },
+                );
+                self.queues.waiting.push_back(ReqState::new(p.spec));
+            }
+            Msg::Offer(o) => self.inbound.push(*o),
+            Msg::Pull(p) => self.serve_pull(p),
+            Msg::Payload(pl) => self.receive_payload(*pl),
+            Msg::Release(r) => {
+                // step 4: target confirmed receipt; free everything local
+                self.release_caches(r.req_id);
+                self.data.remove(&r.req_id.0);
+                if let Some(pos) =
+                    self.queues.running.iter().position(|x| x.spec.id == r.req_id)
+                {
+                    self.queues.running.remove(pos);
+                }
+            }
+        }
+        true
+    }
+
+    /// Step 2 (we are the target): admit queued offers when capacity allows.
+    fn admit_offers(&mut self) {
+        let mut i = 0;
+        while i < self.inbound.len() {
+            if self.can_admit(&self.inbound[i].req) {
+                let offer = self.inbound.remove(i);
+                self.reserve(&offer.req);
+                let src = offer.src;
+                let req_id = offer.req.spec.id;
+                self.pending_in.insert(req_id.0, offer);
+                let _ = self.peers[src].0.send(Msg::Pull(Pull { req_id, dst: self.idx }));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Step 3 (we are the source): ship the payload.
+    fn serve_pull(&mut self, p: Pull) {
+        let id = p.req_id;
+        let Some(state) = self.queues.running.iter().find(|r| r.spec.id == id) else {
+            return;
+        };
+        let kind = if state.prefill_remaining() > 0 {
+            MigrationKind::EncodeToPrefill
+        } else {
+            MigrationKind::PrefillToDecode
+        };
+        let payload = match kind {
+            MigrationKind::EncodeToPrefill => {
+                let slots = self.img.slot_mapping(id).expect("img allocated");
+                Payload {
+                    req_id: id,
+                    kind,
+                    img_embed: Some(self.img_store.gather(0, &slots)),
+                    kv_planes: None,
+                    kv_tokens: 0,
+                }
+            }
+            MigrationKind::PrefillToDecode => {
+                let d = self.data.get(&id.0).expect("data present");
+                let valid = d.ctx_len;
+                let table = self.kv.table(id).expect("kv allocated").clone();
+                let slots: Vec<u32> = (0..valid)
+                    .map(|pos| table.slot_of(pos, self.kv.block_size()).unwrap())
+                    .collect();
+                let planes = (0..self.kv_store.num_planes())
+                    .map(|pl| self.kv_store.gather(pl, &slots))
+                    .collect();
+                Payload {
+                    req_id: id,
+                    kind,
+                    img_embed: None,
+                    kv_planes: Some(planes),
+                    kv_tokens: valid,
+                }
+            }
+        };
+        let _ = self.peers[p.dst].0.send(Msg::Payload(Box::new(payload)));
+    }
+
+    /// Step 3 receive + step 4 (we are the target).
+    fn receive_payload(&mut self, pl: Payload) {
+        let id = pl.req_id;
+        let Some(offer) = self.pending_in.remove(&id.0) else { return };
+        let now = self.now();
+        let mut lc = offer.lifecycle;
+        let phase = match pl.kind {
+            MigrationKind::EncodeToPrefill => Phase::EpMigration,
+            MigrationKind::PrefillToDecode => Phase::PdMigration,
+        };
+        lc.add_phase(phase, offer.offered_at.elapsed().as_secs_f64());
+
+        let mut state = offer.req;
+        state.migrating = false;
+        let mut ctx_len = 0;
+        match pl.kind {
+            MigrationKind::EncodeToPrefill => {
+                let embed = pl.img_embed.expect("ep payload has embeddings");
+                let slots = self.img.slot_mapping(id).expect("img reserved at admit");
+                let h = self.img_store.hidden();
+                for (i, &slot) in slots.iter().enumerate() {
+                    self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
+                }
+            }
+            MigrationKind::PrefillToDecode => {
+                let planes = pl.kv_planes.expect("pd payload has kv");
+                ctx_len = pl.kv_tokens;
+                let table = self.kv.table(id).expect("kv reserved at admit").clone();
+                let slots: Vec<u32> = (0..ctx_len)
+                    .map(|pos| table.slot_of(pos, self.kv.block_size()).unwrap())
+                    .collect();
+                for (p, plane) in planes.into_iter().enumerate() {
+                    self.kv_store.scatter(p, &slots, &plane);
+                }
+            }
+        }
+
+        self.data.insert(
+            id.0,
+            ReqData {
+                tokens: offer.tokens,
+                pixels: None,
+                sampler: Sampler::new(offer.sampling),
+                generated: offer.generated,
+                lifecycle: lc,
+                ctx_len,
+                ready_since: now,
+            },
+        );
+        self.queues.running.push(state);
+        // step 4: tell the source to release
+        let _ = self.peers[offer.src].0.send(Msg::Release(Release { req_id: id }));
+    }
+
+    /// Hand a request whose next stage we don't serve to a peer (step 1).
+    fn migrate_out(&mut self, id: RequestId) {
+        let Some(pos) = self.queues.running.iter().position(|r| r.spec.id == id) else {
+            return;
+        };
+        let state = self.queues.running[pos].clone();
+        let next = state.stage();
+        let candidates: Vec<usize> = self
+            .peers
+            .iter()
+            .enumerate()
+            .filter(|(i, (_, m))| *i != self.idx && m.serves(next))
+            .map(|(i, _)| i)
+            .collect();
+        let loads = vec![0.0; candidates.len()]; // round-robin across peers
+        let Some(pick) = self.router.pick(&loads) else {
+            return; // incomplete cluster: request is stranded
+        };
+        let dst = candidates[pick % candidates.len()];
+        let kind = if next == Stage::Prefill {
+            MigrationKind::EncodeToPrefill
+        } else {
+            MigrationKind::PrefillToDecode
+        };
+        self.queues.running[pos].migrating = true;
+        let d = self.data.get(&id.0).expect("data present");
+        let offer = Offer {
+            req: {
+                let mut s = state.clone();
+                s.migrating = false;
+                s
+            },
+            kind,
+            tokens: d.tokens.clone(),
+            sampling: d.sampler.params().clone(),
+            generated: d.generated.clone(),
+            img_embed_floats: state.spec.image_tokens() * self.device.cfg().hidden,
+            kv_tokens: d.ctx_len,
+            src: self.idx,
+            offered_at: Instant::now(),
+            lifecycle: d.lifecycle.clone(),
+        };
+        let _ = self.peers[dst].0.send(Msg::Offer(Box::new(offer)));
+    }
+
+    // ---- batch execution ---------------------------------------------------
+
+    /// Build and execute one batch; returns false if there was nothing to do.
+    fn step(&mut self) -> Result<bool> {
+        self.admit_offers();
+
+        let mut sched = std::mem::replace(&mut self.sched, Policy::StageLevel.make(self.mask));
+        let batch = {
+            let kv_free = self.kv.free_blocks();
+            let img_free = self.img.free_blocks();
+            let kv_bs = self.kv.block_size().max(1);
+            let img_bs = self.img.block_size().max(1);
+            let mask = self.mask;
+            let mut kv_used = 0usize;
+            let mut img_used = 0usize;
+            let mut admit = |r: &ReqState| {
+                let kv_need = crate::util::ceil_div(kv_tokens_needed_mask(mask, r), kv_bs);
+                let img_need = crate::util::ceil_div(img_tokens_needed_mask(mask, r), img_bs);
+                if kv_used + kv_need <= kv_free && img_used + img_need <= img_free {
+                    kv_used += kv_need;
+                    img_used += img_need;
+                    true
+                } else {
+                    false
+                }
+            };
+            sched.build_batch(&mut self.queues, &self.budgets, &mut admit)
+        };
+        self.sched = sched;
+
+        for i in 0..self.queues.running.len() {
+            let r = self.queues.running[i].clone();
+            self.reserve(&r);
+        }
+
+        let started = self.now();
+        let mut did_work = false;
+
+        // ---------------- encode (vision stream) ----------------
+        let encode_items: Vec<(RequestId, usize)> = batch
+            .items
+            .iter()
+            .filter_map(|(id, w)| match w {
+                TaskWork::Encode { images } => Some((*id, *images)),
+                _ => None,
+            })
+            .collect();
+        if !encode_items.is_empty() {
+            let mut pixels = Vec::new();
+            for (id, n) in &encode_items {
+                let d = self.data.get(&id.0).ok_or_else(|| anyhow!("no data for {id}"))?;
+                let px = d.pixels.clone().ok_or_else(|| anyhow!("{id} has no pixels"))?;
+                for _ in 0..*n {
+                    pixels.push(px.clone()); // one image per request here
+                }
+            }
+            let embeds = self.device.encode(pixels)?;
+            let mut k = 0;
+            let now = self.now();
+            for (id, n) in &encode_items {
+                let slots = self.img.slot_mapping(*id).expect("img reserved");
+                let h = self.img_store.hidden();
+                let embed = &embeds[k];
+                for (i, &slot) in slots.iter().enumerate() {
+                    self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
+                }
+                k += n;
+                let d = self.data.get_mut(&id.0).unwrap();
+                d.lifecycle.add_phase(Phase::EncodeQueue, (started - d.ready_since).max(0.0));
+                d.lifecycle.add_phase(Phase::EncodeExec, now - started);
+                d.ready_since = now;
+                if let Some(r) = self.queues.find_running(*id) {
+                    r.encoded_images += n;
+                }
+            }
+            did_work = true;
+        }
+
+        // ---------------- prefill (language stream) ----------------
+        let prefill_items: Vec<(RequestId, usize)> = batch
+            .items
+            .iter()
+            .filter_map(|(id, w)| match w {
+                TaskWork::PrefillChunk { tokens, .. } => Some((*id, *tokens)),
+                _ => None,
+            })
+            .collect();
+        for (id, _tokens) in &prefill_items {
+            let (spec, has_image) = {
+                let r = self
+                    .queues
+                    .find_running(*id)
+                    .ok_or_else(|| anyhow!("prefill req {id} missing"))?;
+                (r.spec.clone(), r.spec.has_image())
+            };
+            let img_embed = if has_image {
+                let slots = self.img.slot_mapping(*id)?;
+                Some(self.img_store.gather(0, &slots))
+            } else {
+                None
+            };
+            let tokens = self.data.get(&id.0).unwrap().tokens.clone();
+            let out = self.device.prefill(tokens, img_embed)?;
+            let now = self.now();
+
+            // scatter KV into our paged store
+            let table = self.kv.table(*id).expect("kv reserved").clone();
+            let slots: Vec<u32> = (0..out.valid_len)
+                .map(|p| table.slot_of(p, self.kv.block_size()).unwrap())
+                .collect();
+            let layers = self.device.cfg().layers;
+            for (l, (k, v)) in out.k.iter().zip(out.v.iter()).enumerate() {
+                self.kv_store.scatter(l, &slots, k);
+                self.kv_store.scatter(layers + l, &slots, v);
+            }
+
+            // first output token comes from the prefill logits
+            let d = self.data.get_mut(&id.0).unwrap();
+            let tok = d.sampler.sample(&out.logits);
+            d.generated.push(tok);
+            d.ctx_len = out.valid_len;
+            d.lifecycle.add_phase(Phase::PrefillQueue, (started - d.ready_since).max(0.0));
+            d.lifecycle.add_phase(Phase::PrefillExec, now - started);
+            d.lifecycle.record_token(now);
+            d.ready_since = now;
+
+            // image embeddings consumed
+            if self.img.has_request(*id) {
+                self.img.free(*id).unwrap();
+            }
+            let r = self.queues.find_running(*id).unwrap();
+            r.prefilled = spec.prefill_tokens();
+            r.decoded = 1;
+            did_work = true;
+        }
+
+        // ---------------- decode (language stream, batched) ----------------
+        let decode_ids: Vec<RequestId> = batch
+            .items
+            .iter()
+            .filter_map(|(id, w)| match w {
+                TaskWork::DecodeToken { .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        if !decode_ids.is_empty() {
+            let mut inputs = Vec::with_capacity(decode_ids.len());
+            for id in &decode_ids {
+                let d = self.data.get(&id.0).ok_or_else(|| anyhow!("no data for {id}"))?;
+                let last = *d.generated.last().expect("decode implies a prior token");
+                let table = self.kv.table(*id).expect("kv reserved");
+                inputs.push(DecodeInput {
+                    token: last,
+                    position: d.ctx_len,
+                    block_table: table.blocks.clone(),
+                    seq_len: d.ctx_len,
+                });
+            }
+            let layers = self.device.cfg().layers;
+            let mut k_pool =
+                Vec::with_capacity(layers * self.kv_store.plane(0).len());
+            let mut v_pool = Vec::with_capacity(k_pool.capacity());
+            for l in 0..layers {
+                k_pool.extend_from_slice(self.kv_store.plane(l));
+            }
+            for l in 0..layers {
+                v_pool.extend_from_slice(self.kv_store.plane(layers + l));
+            }
+            let out = self.device.decode(inputs, k_pool, v_pool)?;
+            let now = self.now();
+            for (i, id) in decode_ids.iter().enumerate() {
+                // write the input token's KV at its slot, then advance
+                let d = self.data.get_mut(&id.0).unwrap();
+                let pos = d.ctx_len;
+                let table = self.kv.table(*id).unwrap().clone();
+                let slot = table
+                    .slot_of(pos, self.kv.block_size())
+                    .expect("reserved through output length");
+                let h = self.device.cfg().hidden;
+                for l in 0..layers {
+                    self.kv_store
+                        .write_token(l, slot, &out.k_new[i][l * h..(l + 1) * h]);
+                    self.kv_store
+                        .write_token(layers + l, slot, &out.v_new[i][l * h..(l + 1) * h]);
+                }
+                let tok = d.sampler.sample(&out.logits[i]);
+                d.generated.push(tok);
+                d.ctx_len += 1;
+                d.lifecycle.add_phase(Phase::DecodeQueue, (started - d.ready_since).max(0.0));
+                d.lifecycle.add_phase(Phase::DecodeExec, now - started);
+                d.lifecycle.record_token(now);
+                d.ready_since = now;
+                let r = self.queues.find_running(*id).unwrap();
+                r.decoded += 1;
+            }
+            did_work = true;
+        }
+
+        // ---------------- post-batch transitions ----------------
+        let ids: Vec<RequestId> = self.queues.running.iter().map(|r| r.spec.id).collect();
+        for id in ids {
+            let Some(r) = self.queues.find_running(id) else { continue };
+            if r.migrating {
+                continue;
+            }
+            if r.finished() {
+                self.finish(id);
+            } else if !self.mask.serves(r.stage()) {
+                self.migrate_out(id);
+            }
+        }
+        Ok(did_work)
+    }
+
+    fn finish(&mut self, id: RequestId) {
+        let Some(pos) = self.queues.running.iter().position(|r| r.spec.id == id) else {
+            return;
+        };
+        self.queues.running.remove(pos);
+        self.release_caches(id);
+        if let Some(mut d) = self.data.remove(&id.0) {
+            d.lifecycle.finished_at = Some(self.now());
+            let text = self.tokenizer.decode(&d.generated);
+            let _ = self.results.send(ServeResult {
+                id,
+                tokens: d.generated,
+                text,
+                lifecycle: d.lifecycle,
+            });
+        }
+    }
+
+    fn run(mut self, rx: Receiver<Msg>) {
+        loop {
+            // drain everything pending
+            loop {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if !self.handle(msg) {
+                            return;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            let worked = match self.step() {
+                Ok(w) => w,
+                Err(e) => {
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        "instance",
+                        format_args!("instance {} batch failed: {e:#}", self.idx),
+                    );
+                    false
+                }
+            };
+            if !worked {
+                // idle: block for the next message (with a timeout so queued
+                // offers get re-checked for capacity)
+                match rx.recv_timeout(Duration::from_millis(5)) {
+                    Ok(msg) => {
+                        if !self.handle(msg) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            }
+        }
+    }
+}
+
+fn kv_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
+    if !(mask.prefill || mask.decode) {
+        return 0;
+    }
+    r.spec.prefill_tokens() + if mask.decode { r.spec.output_tokens } else { 0 }
+}
+
+fn img_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
+    let consumes = mask.encode || (mask.prefill && r.spec.has_image() && r.prefill_remaining() > 0);
+    if consumes {
+        r.spec.image_tokens()
+    } else {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster
+// ---------------------------------------------------------------------------
+
+/// A running disaggregated serving cluster (real execution).
+pub struct RealCluster {
+    senders: Vec<Sender<Msg>>,
+    masks: Vec<StageMask>,
+    results_rx: Option<Receiver<ServeResult>>,
+    device: DeviceHandle,
+    joins: Vec<JoinHandle<()>>,
+    device_join: Option<JoinHandle<()>>,
+    router: Router,
+    tokenizer: Tokenizer,
+    epoch: Instant,
+    next_id: u64,
+}
+
+impl RealCluster {
+    /// Boot the device thread + one worker thread per instance.
+    pub fn start(artifacts_dir: &str, cluster: &ClusterSpec, policy: Policy) -> Result<RealCluster> {
+        let (device, device_join) = spawn_device(artifacts_dir)?;
+        let cfg = *device.cfg();
+        let masks = cluster.instance_masks();
+        let epoch = Instant::now();
+        let (results_tx, results_rx) = channel();
+
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in &masks {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+
+        let budgets = Budgets {
+            token_budget: 1024, // prompts always fit one bucket: never chunked
+            image_budget: 4,    // largest encode artifact bucket
+            max_decode_batch: 8, // largest decode artifact bucket
+        };
+
+        let mut joins = Vec::new();
+        for (idx, rx) in receivers.into_iter().enumerate() {
+            let mask = masks[idx];
+            let peers: Vec<(Sender<Msg>, StageMask)> = senders
+                .iter()
+                .cloned()
+                .zip(masks.iter().copied())
+                .collect();
+            let planes = 2 * cfg.layers;
+            let inst = RealInstance {
+                idx,
+                mask,
+                device: device.clone(),
+                peers,
+                results: results_tx.clone(),
+                epoch,
+                sched: policy.make(mask),
+                budgets,
+                queues: Queues::default(),
+                kv: PagedCache::new(cfg.pool_blocks, cfg.block_size, cfg.max_blocks_per_seq),
+                kv_store: CacheStore::new(planes, cfg.pool_blocks, cfg.block_size, cfg.hidden),
+                img: PagedCache::new(64, cfg.img_tokens, 4),
+                img_store: CacheStore::new(1, 64, cfg.img_tokens, cfg.hidden),
+                data: HashMap::new(),
+                inbound: Vec::new(),
+                pending_in: HashMap::new(),
+                router: Router::new(RoutePolicy::RoundRobin, idx as u64),
+                tokenizer: Tokenizer::new(),
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("hydra-inst-{idx}"))
+                    .spawn(move || inst.run(rx))
+                    .expect("spawn instance"),
+            );
+        }
+
+        Ok(RealCluster {
+            senders,
+            masks,
+            results_rx: Some(results_rx),
+            device,
+            joins,
+            device_join: Some(device_join),
+            router: Router::new(RoutePolicy::RoundRobin, 7),
+            tokenizer: Tokenizer::new(),
+            epoch,
+            next_id: 0,
+        })
+    }
+
+    pub fn cfg(&self) -> &crate::runtime::VlmConfig {
+        self.device.cfg()
+    }
+
+    /// The id the next `submit` will assign (the API server registers its
+    /// result waiter before submitting to avoid a race).
+    pub fn peek_next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Preprocess (tokenize + image) and dispatch a request. Returns its id.
+    pub fn submit(
+        &mut self,
+        prompt: &str,
+        image: Option<&Image>,
+        sampling: SamplingParams,
+    ) -> Result<RequestId> {
+        let cfg = *self.device.cfg();
+        let tokens = self.tokenizer.apply_chat_template(prompt, image.is_some());
+        let max_txt = if image.is_some() {
+            // largest mm bucket minus image tokens
+            80 - cfg.img_tokens
+        } else {
+            64
+        };
+        if tokens.len() > max_txt {
+            anyhow::bail!("prompt too long: {} tokens > {max_txt}", tokens.len());
+        }
+        let pixels = image.map(|img| img.preprocess(cfg.img_size));
+        let prefill = tokens.len() + if image.is_some() { cfg.img_tokens } else { 0 };
+        let max_out = cfg.max_context().saturating_sub(prefill + 1);
+        let mut sampling = sampling;
+        sampling.max_tokens = sampling.max_tokens.clamp(1, max_out);
+
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        let spec = RequestSpec {
+            id,
+            arrival: self.epoch.elapsed().as_secs_f64(),
+            num_images: usize::from(image.is_some()),
+            tokens_per_image: cfg.img_tokens,
+            prompt_tokens: tokens.len(),
+            output_tokens: sampling.max_tokens,
+        };
+        let first = spec.first_stage();
+        let candidates: Vec<usize> = (0..self.masks.len())
+            .filter(|&i| self.masks[i].serves(first))
+            .collect();
+        let loads = vec![0.0; candidates.len()];
+        let pick = self
+            .router
+            .pick(&loads)
+            .ok_or_else(|| anyhow!("no instance serves {first:?}"))?;
+        let target = candidates[pick % candidates.len()];
+        self.senders[target]
+            .send(Msg::Submit(Box::new(PreparedRequest { spec, tokens, pixels, sampling })))
+            .map_err(|_| anyhow!("instance {target} is down"))?;
+        Ok(id)
+    }
+
+    /// Collect `n` results (blocking, with an overall timeout). Panics if
+    /// the results receiver was taken (API-server mode).
+    pub fn collect(&self, n: usize, timeout: Duration) -> Vec<ServeResult> {
+        let rx = self.results_rx.as_ref().expect("results receiver taken");
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => out.push(r),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Move the results receiver out (for a dispatcher thread, e.g. the
+    /// HTTP API). After this, `collect` must not be used.
+    pub fn take_results(&mut self) -> Option<Receiver<ServeResult>> {
+        self.results_rx.take()
+    }
+
+    /// Graceful shutdown: stop instances, then the device thread.
+    pub fn shutdown(mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+        self.device.shutdown();
+        if let Some(j) = self.device_join.take() {
+            let _ = j.join();
+        }
+    }
+}

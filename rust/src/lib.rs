@@ -1,0 +1,40 @@
+//! HydraInfer — Hybrid Encode-Prefill-Decode (EPD) disaggregated scheduling
+//! for multimodal LLM serving.
+//!
+//! Reproduction of "HydraInfer: Hybrid Disaggregated Scheduling for
+//! Multimodal Large Language Model Serving" (cs.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   request router, stage-level batch scheduler (Algorithm 1), paged
+//!   KV/image cache managers, pull-based migrate scheduler, and the hybrid
+//!   EPD disaggregation planner, plus a roofline-calibrated discrete-event
+//!   simulator that regenerates every table and figure in the paper's
+//!   evaluation.
+//! * **Layer 2** — a JAX vision-language model (`python/compile/model.py`)
+//!   AOT-lowered to HLO text artifacts executed here via the PJRT C API.
+//! * **Layer 1** — Pallas kernels (paged attention, flash prefill, fused
+//!   cache write, patch embed) called from the L2 graph.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once; the serving binary is self-contained afterwards.
+
+pub mod util;
+pub mod config;
+pub mod core;
+pub mod tokenizer;
+pub mod vision;
+pub mod cache;
+pub mod costmodel;
+pub mod scheduler;
+pub mod workload;
+pub mod metrics;
+pub mod simulator;
+pub mod planner;
+pub mod runtime;
+pub mod migrate;
+pub mod instance;
+pub mod router;
+pub mod api;
+pub mod testing;
+pub mod benchkit;

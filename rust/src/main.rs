@@ -1,0 +1,265 @@
+//! HydraInfer launcher.
+//!
+//! Subcommands:
+//!   serve     — boot a real disaggregated cluster over the AOT artifacts
+//!               and expose the OpenAI-style HTTP API
+//!   simulate  — run the roofline-calibrated cluster simulator on a
+//!               dataset workload and print serving metrics
+//!   plan      — hybrid EPD disaggregation search (§4.4): best method +
+//!               node ratio for a workload and SLO
+//!   budgets   — profile Algorithm 1's token/image budgets for a TPOT SLO
+//!   workload  — generate + save a reproducible request trace
+//!
+//! Examples:
+//!   hydrainfer serve --cluster 1E1P2D --port 8077
+//!   hydrainfer simulate --model llava-1.5-7b --dataset textcaps \
+//!       --cluster 1E3P4D --rate 8 --requests 200
+//!   hydrainfer plan --model llava-next-7b --dataset pope --gpus 8
+
+use anyhow::{anyhow, Result};
+
+use hydrainfer::api::ApiServer;
+use hydrainfer::config::{DeviceSpec, ModelSpec, SloSpec};
+use hydrainfer::instance::RealCluster;
+use hydrainfer::metrics::goodput_search;
+use hydrainfer::planner::{plan, PlannerConfig};
+use hydrainfer::scheduler::{
+    compute_image_budget, compute_token_budget, BudgetProfile, Policy,
+};
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig};
+use hydrainfer::util::cli::Args;
+use hydrainfer::workload::{Dataset, PoissonGenerator, Trace};
+
+fn main() {
+    let args = Args::from_env(&["help", "verbose"]);
+    if args.flag("verbose") {
+        hydrainfer::util::logging::set_level(hydrainfer::util::logging::Level::Debug);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("budgets") => cmd_budgets(&args),
+        Some("workload") => cmd_workload(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "hydrainfer — hybrid EPD disaggregated MLLM serving (paper reproduction)\n\
+         \n\
+         USAGE: hydrainfer <serve|simulate|plan|budgets|workload> [options]\n\
+         \n\
+         serve     --cluster 1E1P2D --port 8077 --artifacts artifacts\n\
+         simulate  --model llava-1.5-7b --dataset textcaps --cluster 1E3P4D\n\
+         \x20         --rate 8 --requests 200 --policy stage-level [--goodput]\n\
+         plan      --model llava-next-7b --dataset textcaps --gpus 8\n\
+         budgets   --model llava-1.5-7b --tpot 0.04\n\
+         workload  --model llava-1.5-7b --dataset mme --rate 4 --n 500\n\
+         \x20         --out trace.json"
+    );
+}
+
+fn model_arg(args: &Args) -> Result<ModelSpec> {
+    let name = args.get_or("model", "llava-1.5-7b");
+    ModelSpec::by_name(name)
+        .ok_or_else(|| anyhow!("unknown model `{name}` (try: {:?})", ModelSpec::ALL_NAMES))
+}
+
+fn dataset_arg(args: &Args) -> Result<Dataset> {
+    let name = args.get_or("dataset", "textcaps");
+    Dataset::by_name(name)
+        .ok_or_else(|| anyhow!("unknown dataset `{name}` (try: {:?})", Dataset::ALL_NAMES))
+}
+
+fn policy_arg(args: &Args) -> Result<Policy> {
+    let name = args.get_or("policy", "stage-level");
+    Policy::by_name(name).ok_or_else(|| anyhow!("unknown policy `{name}`"))
+}
+
+fn slo_arg(args: &Args, model: &ModelSpec, dataset: &Dataset) -> Result<SloSpec> {
+    let default = SloSpec::paper_table3(&model.name, dataset.name)
+        .unwrap_or(SloSpec::new(0.25, 0.04));
+    Ok(SloSpec::new(
+        args.f64_or("ttft-slo", default.ttft)?,
+        args.f64_or("tpot-slo", default.tpot)?,
+    ))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cluster = ClusterSpec::parse(args.get_or("cluster", "1E1P2D"))?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let port = args.usize_or("port", 8077)?;
+    let policy = policy_arg(args)?;
+    println!("loading artifacts from `{artifacts}` (compiles once, ~30s)...");
+    let rc = RealCluster::start(artifacts, &cluster, policy)?;
+    let server = ApiServer::start(rc, &format!("127.0.0.1:{port}"))?;
+    println!("serving cluster {} on http://{}", cluster.label(), server.addr);
+    println!("  POST /v1/completions {{\"prompt\": \"hi\", \"max_tokens\": 8, \"image\": true}}");
+    println!("  GET  /health");
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = model_arg(args)?;
+    let dataset = dataset_arg(args)?;
+    let cluster = ClusterSpec::parse(args.get_or("cluster", "8EPD"))?;
+    let policy = policy_arg(args)?;
+    let slo = slo_arg(args, &model, &dataset)?;
+    let rate = args.f64_or("rate", 8.0)?;
+    let n = args.usize_or("requests", 200)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+
+    let mut cfg = SimConfig::new(model.clone(), cluster.clone(), policy, slo);
+    cfg.seed = seed;
+    if args.flag("goodput") {
+        let g = goodput_search(
+            |r| {
+                let gen = PoissonGenerator::new(dataset.clone(), r, seed);
+                let reqs = gen.generate(&model, n);
+                simulate(&cfg, &reqs).metrics.slo_attainment(slo)
+            },
+            0.90,
+            args.f64_or("max-rate", 128.0)?,
+            0.25,
+        );
+        println!(
+            "goodput: {g:.2} req/s  (model={}, dataset={}, cluster={}, policy={}, slo {}s/{}s)",
+            model.name,
+            dataset.name,
+            cluster.label(),
+            policy.name(),
+            slo.ttft,
+            slo.tpot
+        );
+        return Ok(());
+    }
+
+    let gen = PoissonGenerator::new(dataset.clone(), rate, seed);
+    let reqs = gen.generate(&model, n);
+    let res = simulate(&cfg, &reqs);
+    let m = &res.metrics;
+    println!(
+        "model={} dataset={} cluster={} policy={} rate={rate} req/s n={n}",
+        model.name,
+        dataset.name,
+        cluster.label(),
+        policy.name()
+    );
+    println!(
+        "  finished {}/{}  batches={}  migrations={}",
+        m.num_finished(),
+        n,
+        res.batches,
+        res.migrations
+    );
+    println!(
+        "  TTFT  mean {:.4}s  p50 {:.4}s  p90 {:.4}s  p99 {:.4}s",
+        m.ttft().mean(),
+        m.ttft().p50(),
+        m.ttft().p90(),
+        m.ttft().p99()
+    );
+    println!(
+        "  TPOT  mean {:.4}s  p50 {:.4}s  p90 {:.4}s  p99 {:.4}s",
+        m.tpot().mean(),
+        m.tpot().p50(),
+        m.tpot().p90(),
+        m.tpot().p99()
+    );
+    println!(
+        "  SLO attainment {:.1}%  throughput {:.2} req/s  {:.1} tok/s",
+        m.slo_attainment(slo) * 100.0,
+        m.throughput(),
+        m.token_throughput()
+    );
+    println!("  phase breakdown (mean seconds/request):");
+    let bd = m.phase_breakdown();
+    for p in hydrainfer::core::Phase::ALL {
+        println!("    {:>14}: {:.4}", p.name(), bd[p as usize]);
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model = model_arg(args)?;
+    let dataset = dataset_arg(args)?;
+    let slo = slo_arg(args, &model, &dataset)?;
+    let pc = PlannerConfig {
+        gpus: args.usize_or("gpus", 8)?,
+        sample_requests: args.usize_or("requests", 120)?,
+        max_rate: args.f64_or("max-rate", 96.0)?,
+        rate_tol: args.f64_or("tol", 1.0)?,
+        seed: args.usize_or("seed", 0)? as u64,
+        ..Default::default()
+    };
+    println!(
+        "planning: model={} dataset={} gpus={} slo=({:.2}s, {:.3}s) ... (simulating all candidates)",
+        model.name, dataset.name, pc.gpus, slo.ttft, slo.tpot
+    );
+    let p = plan(&model, &dataset, slo, &pc);
+    println!("{:<8} {:<10} {:>10} {:>12} {:>12}", "method", "cluster", "goodput", "ttft(mean)", "tpot(mean)");
+    for c in p.candidates.iter().take(args.usize_or("top", 12)?) {
+        println!(
+            "{:<8} {:<10} {:>10.2} {:>12.4} {:>12.4}",
+            c.method.name(),
+            c.cluster.label(),
+            c.goodput,
+            c.ttft_mean,
+            c.tpot_mean
+        );
+    }
+    let best = p.best();
+    println!(
+        "\nselected: {} {} (goodput {:.2} req/s)",
+        best.method.name(),
+        best.cluster.label(),
+        best.goodput
+    );
+    Ok(())
+}
+
+fn cmd_budgets(args: &Args) -> Result<()> {
+    let model = model_arg(args)?;
+    let tpot = args.f64_or("tpot", 0.04)?;
+    let device = DeviceSpec::h800();
+    let profile = BudgetProfile::default();
+    let tokens = compute_token_budget(&model, &device, &profile, tpot);
+    let images = compute_image_budget(&model, &device, &profile, tpot);
+    println!(
+        "model={} TPOT SLO={tpot}s -> token budget {tokens}, image budget {images} \
+         (assuming {} decodes @ ctx {})",
+        model.name, profile.typical_decode_batch, profile.typical_context
+    );
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let model = model_arg(args)?;
+    let dataset = dataset_arg(args)?;
+    let rate = args.f64_or("rate", 4.0)?;
+    let n = args.usize_or("n", 500)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let out = args.get_or("out", "trace.json");
+    let gen = PoissonGenerator::new(dataset.clone(), rate, seed);
+    let trace = Trace::new(gen.generate(&model, n));
+    trace.save(out)?;
+    let s = hydrainfer::workload::summarize(&trace.requests);
+    println!(
+        "wrote {n} requests to {out} (rate {rate}/s): avg image tokens {:.0}, \
+         prompt {:.0}, prefill {:.0}, output {:.0}",
+        s.avg_image_tokens, s.avg_prompt_tokens, s.avg_prefill_tokens, s.avg_output_tokens
+    );
+    Ok(())
+}

@@ -1,0 +1,235 @@
+//! Serving metrics: TTFT/TPOT summaries, SLO attainment, goodput search,
+//! latency breakdown (paper §2.3 and §5.5).
+
+use std::collections::HashMap;
+
+use crate::config::SloSpec;
+use crate::core::{Lifecycle, Phase, RequestId};
+use crate::util::stats::Summary;
+
+/// All finished-request lifecycles of one experiment run.
+#[derive(Debug, Default, Clone)]
+pub struct RunMetrics {
+    pub lifecycles: HashMap<u64, Lifecycle>,
+    /// Wall-clock span of the run (first arrival to last completion).
+    pub makespan: f64,
+}
+
+impl RunMetrics {
+    pub fn insert(&mut self, id: RequestId, lc: Lifecycle) {
+        if let Some(t) = lc.finished_at {
+            self.makespan = self.makespan.max(t);
+        }
+        self.lifecycles.insert(id.0, lc);
+    }
+
+    pub fn len(&self) -> usize {
+        self.lifecycles.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.lifecycles.is_empty()
+    }
+
+    pub fn finished(&self) -> impl Iterator<Item = &Lifecycle> {
+        self.lifecycles.values().filter(|lc| lc.finished_at.is_some())
+    }
+
+    pub fn num_finished(&self) -> usize {
+        self.finished().count()
+    }
+
+    /// TTFT across finished requests.
+    pub fn ttft(&self) -> Summary {
+        let mut s = Summary::new();
+        for lc in self.finished() {
+            if let Some(t) = lc.ttft() {
+                s.add(t);
+            }
+        }
+        s
+    }
+
+    /// All inter-token intervals across finished requests.
+    pub fn tpot(&self) -> Summary {
+        let mut s = Summary::new();
+        for lc in self.finished() {
+            s.extend(&lc.tpots());
+        }
+        s
+    }
+
+    /// Per-request mean TPOT (the Fig. 11 y-axis).
+    pub fn tpot_per_request(&self) -> Summary {
+        let mut s = Summary::new();
+        for lc in self.finished() {
+            let t = lc.tpots();
+            if !t.is_empty() {
+                s.add(t.iter().sum::<f64>() / t.len() as f64);
+            }
+        }
+        s
+    }
+
+    pub fn e2e(&self) -> Summary {
+        let mut s = Summary::new();
+        for lc in self.finished() {
+            if let Some(t) = lc.e2e() {
+                s.add(t);
+            }
+        }
+        s
+    }
+
+    /// Fraction of requests meeting the SLO (unfinished requests count as
+    /// violations — they never produced their tokens in time).
+    pub fn slo_attainment(&self, slo: SloSpec) -> f64 {
+        if self.lifecycles.is_empty() {
+            return f64::NAN;
+        }
+        let ok = self
+            .lifecycles
+            .values()
+            .filter(|lc| lc.finished_at.is_some() && lc.meets_slo(slo.ttft, slo.tpot))
+            .count();
+        ok as f64 / self.lifecycles.len() as f64
+    }
+
+    /// Completed requests per second over the makespan.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.num_finished() as f64 / self.makespan
+    }
+
+    /// Output tokens per second over the makespan.
+    pub fn token_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        let tokens: usize = self.finished().map(|lc| lc.token_times.len()).sum();
+        tokens as f64 / self.makespan
+    }
+
+    /// Mean seconds spent in each of the eight phases (Fig. 13 bars).
+    pub fn phase_breakdown(&self) -> [f64; 8] {
+        let mut out = [0.0; 8];
+        let n = self.num_finished().max(1) as f64;
+        for lc in self.finished() {
+            for p in Phase::ALL {
+                out[p as usize] += lc.phase(p);
+            }
+        }
+        for v in &mut out {
+            *v /= n;
+        }
+        out
+    }
+}
+
+/// Goodput (paper §2.3): the maximum request rate at which SLO attainment
+/// stays >= `target` (0.90). `eval(rate)` runs an experiment and returns
+/// attainment; assumed monotone non-increasing in rate.
+pub fn goodput_search(
+    mut eval: impl FnMut(f64) -> f64,
+    target: f64,
+    max_rate: f64,
+    tol: f64,
+) -> f64 {
+    // exponential probe upward from a low rate
+    let mut lo = 0.0;
+    let mut hi = 0.25;
+    while hi < max_rate && eval(hi) >= target {
+        lo = hi;
+        hi *= 2.0;
+    }
+    if hi >= max_rate {
+        hi = max_rate;
+        if eval(hi) >= target {
+            return hi;
+        }
+    }
+    // bisect [lo, hi]
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if eval(mid) >= target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn lc(arrival: f64, first: f64, tpot: f64, n: usize) -> Lifecycle {
+        let mut l = Lifecycle::new(arrival);
+        let mut t = first;
+        l.record_token(t);
+        for _ in 1..n {
+            t += tpot;
+            l.record_token(t);
+        }
+        l.finished_at = Some(t);
+        l
+    }
+
+    #[test]
+    fn attainment_counts_unfinished_as_violations() {
+        let mut m = RunMetrics::default();
+        m.insert(RequestId(1), lc(0.0, 0.1, 0.02, 10));
+        let mut unfinished = Lifecycle::new(0.0);
+        unfinished.record_token(0.1);
+        m.insert(RequestId(2), unfinished);
+        let a = m.slo_attainment(SloSpec::new(0.25, 0.04));
+        assert!((a - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summaries() {
+        let mut m = RunMetrics::default();
+        m.insert(RequestId(1), lc(0.0, 0.2, 0.03, 5));
+        m.insert(RequestId(2), lc(1.0, 1.4, 0.05, 5));
+        assert_eq!(m.ttft().len(), 2);
+        assert!((m.ttft().max() - 0.4).abs() < 1e-9);
+        assert_eq!(m.tpot().len(), 8);
+        assert!(m.throughput() > 0.0);
+        assert!(m.token_throughput() > m.throughput());
+    }
+
+    #[test]
+    fn goodput_search_finds_cliff() {
+        // attainment 1.0 below rate 3.7, else 0
+        let g = goodput_search(|r| if r <= 3.7 { 1.0 } else { 0.0 }, 0.9, 64.0, 0.05);
+        assert!((g - 3.7).abs() < 0.1, "goodput = {g}");
+    }
+
+    #[test]
+    fn goodput_search_saturates_at_max() {
+        let g = goodput_search(|_| 1.0, 0.9, 16.0, 0.05);
+        assert_eq!(g, 16.0);
+    }
+
+    #[test]
+    fn goodput_zero_when_never_attained() {
+        let g = goodput_search(|_| 0.0, 0.9, 16.0, 0.05);
+        assert!(g < 0.3, "goodput = {g}");
+    }
+
+    #[test]
+    fn phase_breakdown_averages() {
+        let mut m = RunMetrics::default();
+        let mut a = lc(0.0, 0.1, 0.02, 3);
+        a.add_phase(Phase::DecodeExec, 1.0);
+        let mut b = lc(0.0, 0.1, 0.02, 3);
+        b.add_phase(Phase::DecodeExec, 3.0);
+        m.insert(RequestId(1), a);
+        m.insert(RequestId(2), b);
+        let bd = m.phase_breakdown();
+        assert!((bd[Phase::DecodeExec as usize] - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! Real-mode request migration: the paper's 4-step pull-based protocol
+//! (§4.3) over in-process channels.
+//!
+//!   step 1  source -> target: `Offer` (control info: request metadata +
+//!           payload sizes — "the page tables of the KV cache and image
+//!           cache")
+//!   step 2  target -> source: `Pull` once the target has allocated cache
+//!           space (pull-based so an overloaded receiver never overflows;
+//!           a queued Offer = backpressure that blocks the source's blocks)
+//!   step 3  source -> target: `Payload` (the actual cache bytes,
+//!           transferred asynchronously)
+//!   step 4  target -> source: `Release` — only now does the source free
+//!           the migrated request's resources
+//!
+//! The channel transport stands in for CUDA-IPC/NCCL (DESIGN.md §2); the
+//! protocol structure, ownership hand-off and backpressure are faithful.
+
+use crate::core::RequestId;
+use crate::core::SamplingParams;
+use crate::scheduler::ReqState;
+
+/// Which hop this migration is (drives latency accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationKind {
+    /// After encode: image-embedding cache moves to a prefill instance.
+    EncodeToPrefill,
+    /// After prefill: KV cache moves to a decode instance.
+    PrefillToDecode,
+}
+
+/// Step 1: control information (no payload yet).
+#[derive(Debug, Clone)]
+pub struct Offer {
+    pub req: ReqState,
+    pub kind: MigrationKind,
+    /// Serving-side data that must travel with the request.
+    pub tokens: Vec<u32>,
+    pub sampling: SamplingParams,
+    /// Output tokens already generated (first token comes from prefill).
+    pub generated: Vec<u32>,
+    /// Payload sizes, for the target's admission decision.
+    pub img_embed_floats: usize,
+    pub kv_tokens: usize,
+    /// Index of the source instance.
+    pub src: usize,
+    /// Wall-clock when the offer was made (for migration-phase latency).
+    pub offered_at: std::time::Instant,
+    /// Latency accounting travels with the request.
+    pub lifecycle: crate::core::Lifecycle,
+}
+
+/// Step 2: the target is ready; asks the source to send the bytes.
+#[derive(Debug, Clone)]
+pub struct Pull {
+    pub req_id: RequestId,
+    pub dst: usize,
+}
+
+/// Step 3: the cache bytes.
+#[derive(Debug, Clone)]
+pub struct Payload {
+    pub req_id: RequestId,
+    pub kind: MigrationKind,
+    /// Image embeddings ([img_tokens * hidden]) for EP migrations.
+    pub img_embed: Option<Vec<f32>>,
+    /// Contiguous KV per plane (k0..kL-1, v0..vL-1), each [len * hidden],
+    /// for PD migrations.
+    pub kv_planes: Option<Vec<Vec<f32>>>,
+    pub kv_tokens: usize,
+}
+
+impl Payload {
+    /// Total payload size in bytes (for metrics / the Fig. 13 story).
+    pub fn bytes(&self) -> usize {
+        let img = self.img_embed.as_ref().map_or(0, |v| v.len() * 4);
+        let kv = self
+            .kv_planes
+            .as_ref()
+            .map_or(0, |p| p.iter().map(|v| v.len() * 4).sum());
+        img + kv
+    }
+}
+
+/// Step 4: the target holds the data; the source may free its copy.
+#[derive(Debug, Clone, Copy)]
+pub struct Release {
+    pub req_id: RequestId,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{RequestId, RequestSpec};
+
+    fn state() -> ReqState {
+        ReqState::new(RequestSpec {
+            id: RequestId(9),
+            arrival: 0.0,
+            num_images: 1,
+            tokens_per_image: 16,
+            prompt_tokens: 20,
+            output_tokens: 4,
+        })
+    }
+
+    #[test]
+    fn payload_byte_accounting() {
+        let p = Payload {
+            req_id: RequestId(1),
+            kind: MigrationKind::PrefillToDecode,
+            img_embed: None,
+            kv_planes: Some(vec![vec![0.0; 36 * 128]; 4]),
+            kv_tokens: 36,
+        };
+        assert_eq!(p.bytes(), 4 * 36 * 128 * 4);
+        let p2 = Payload {
+            req_id: RequestId(2),
+            kind: MigrationKind::EncodeToPrefill,
+            img_embed: Some(vec![0.0; 16 * 128]),
+            kv_planes: None,
+            kv_tokens: 0,
+        };
+        assert_eq!(p2.bytes(), 16 * 128 * 4);
+    }
+
+    #[test]
+    fn offer_carries_request_state() {
+        let o = Offer {
+            req: state(),
+            kind: MigrationKind::EncodeToPrefill,
+            tokens: vec![1, 2, 3],
+            sampling: SamplingParams::default(),
+            generated: vec![],
+            img_embed_floats: 16 * 128,
+            kv_tokens: 0,
+            src: 0,
+            offered_at: std::time::Instant::now(),
+            lifecycle: crate::core::Lifecycle::new(0.0),
+        };
+        assert_eq!(o.req.spec.id, RequestId(9));
+        assert_eq!(o.kind, MigrationKind::EncodeToPrefill);
+    }
+}

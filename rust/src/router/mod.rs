@@ -1,0 +1,91 @@
+//! Request routing / load balancing across instances (paper §4: "The
+//! scheduler performs load balancing based on request types, dispatching
+//! them to the corresponding Encode or Prefill instances"; §4.3: the
+//! Migrate Scheduler "can adopt strategies such as round-robin or random
+//! selection").
+
+use crate::util::rng::Rng;
+
+/// Load-balancing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    Random,
+}
+
+/// Stateful router: picks one of N candidates given their current loads.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    rr: usize,
+    rng: Rng,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, seed: u64) -> Self {
+        Router { policy, rr: 0, rng: Rng::new(seed) }
+    }
+
+    /// Pick an index into `loads` (lower load = more attractive). Returns
+    /// None when `loads` is empty.
+    pub fn pick(&mut self, loads: &[f64]) -> Option<usize> {
+        if loads.is_empty() {
+            return None;
+        }
+        Some(match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr % loads.len();
+                self.rr += 1;
+                i
+            }
+            RoutePolicy::Random => self.rng.below(loads.len()),
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                for (i, &l) in loads.iter().enumerate() {
+                    if l < loads[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 0);
+        let loads = [0.0, 0.0, 0.0];
+        let picks: Vec<_> = (0..6).map(|_| r.pick(&loads).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
+        assert_eq!(r.pick(&[3.0, 1.0, 2.0]), Some(1));
+        assert_eq!(r.pick(&[0.5, 1.0, 0.5]), Some(0)); // first min wins
+    }
+
+    #[test]
+    fn random_covers_all() {
+        let mut r = Router::new(RoutePolicy::Random, 42);
+        let loads = [0.0; 4];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[r.pick(&loads).unwrap()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
+        assert_eq!(r.pick(&[]), None);
+    }
+}

@@ -1,0 +1,299 @@
+//! The compiled-executable registry + typed entry points.
+//!
+//! One `PjRtLoadedExecutable` per (stage, bucket); calls pad to the
+//! smallest fitting bucket. All marshalling (pool layout, block tables,
+//! padding contracts) matches `python/compile/model.py`'s conventions —
+//! pinned end-to-end by the golden-output smoke test
+//! (`rust/tests/runtime_smoke.rs`).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{pick_bucket, Manifest, VlmConfig};
+
+/// Inputs for one request's slot in a decode batch.
+#[derive(Debug, Clone)]
+pub struct DecodeInput {
+    pub token: u32,
+    /// Position of the new token (== tokens already cached).
+    pub position: usize,
+    /// Pool block ids for this request (<= max_blocks_per_seq).
+    pub block_table: Vec<u32>,
+    /// Tokens already cached.
+    pub seq_len: usize,
+}
+
+/// Outputs of one decode iteration.
+#[derive(Debug)]
+pub struct DecodeOut {
+    /// Per-request logits [vocab].
+    pub logits: Vec<Vec<f32>>,
+    /// Per-request new K rows, layer-major [layers * hidden].
+    pub k_new: Vec<Vec<f32>>,
+    pub v_new: Vec<Vec<f32>>,
+}
+
+/// Outputs of a prefill call.
+#[derive(Debug)]
+pub struct PrefillOut {
+    /// Last-token logits [vocab].
+    pub logits: Vec<f32>,
+    /// Valid-prefix K per layer: k[layer] is [valid_len * hidden].
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub valid_len: usize,
+}
+
+/// Compiled artifact registry over one PJRT client.
+pub struct Engine {
+    cfg: VlmConfig,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    encode_buckets: Vec<usize>,
+    prefill_mm_buckets: Vec<usize>,
+    prefill_txt_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+}
+
+impl Engine {
+    /// Load + compile every artifact in `dir`. Slow (seconds); called once.
+    pub fn load(dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for a in &manifest.artifacts {
+            let path = format!("{dir}/{}", a.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", a.name))?;
+            exes.insert(a.name.clone(), exe);
+        }
+        Ok(Engine {
+            cfg: manifest.config,
+            encode_buckets: manifest.buckets("encode_b"),
+            prefill_mm_buckets: manifest.buckets("prefill_mm_s"),
+            prefill_txt_buckets: manifest.buckets("prefill_txt_s"),
+            decode_buckets: manifest.buckets("decode_b"),
+            exes,
+        })
+    }
+
+    pub fn cfg(&self) -> &VlmConfig {
+        &self.cfg
+    }
+    pub fn decode_buckets(&self) -> &[usize] {
+        &self.decode_buckets
+    }
+    pub fn encode_buckets(&self) -> &[usize] {
+        &self.encode_buckets
+    }
+    /// Max text tokens a prefill bucket can hold for a request with/without
+    /// an image.
+    pub fn max_text_tokens(&self, has_image: bool) -> usize {
+        if has_image {
+            self.prefill_mm_buckets.last().copied().unwrap_or(0) - self.cfg.img_tokens
+        } else {
+            self.prefill_txt_buckets.last().copied().unwrap_or(0)
+        }
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    // ------------------------------------------------------------- encode
+
+    /// Encode a batch of preprocessed images (each `pixels_len()` floats).
+    /// Returns one `[img_tokens * hidden]` embedding buffer per image.
+    pub fn encode(&self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if images.is_empty() {
+            return Ok(vec![]);
+        }
+        let px = self.cfg.pixels_len();
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != px {
+                bail!("image {i}: expected {px} floats, got {}", img.len());
+            }
+        }
+        let bucket = pick_bucket(&self.encode_buckets, images.len())
+            .ok_or_else(|| anyhow!("encode batch {} exceeds buckets", images.len()))?;
+        let mut flat = Vec::with_capacity(bucket * px);
+        for img in images {
+            flat.extend_from_slice(img);
+        }
+        flat.resize(bucket * px, 0.0); // pad with blank images
+        let s = self.cfg.img_size as i64;
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[bucket as i64, s, s, self.cfg.channels as i64])
+            .context("reshape pixels")?;
+        let out = self.run(&format!("encode_b{bucket}"), &[input])?;
+        let embeds = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let per = self.cfg.img_tokens * self.cfg.hidden;
+        Ok(images
+            .iter()
+            .enumerate()
+            .map(|(i, _)| embeds[i * per..(i + 1) * per].to_vec())
+            .collect())
+    }
+
+    // ------------------------------------------------------------ prefill
+
+    /// Prefill one request. `img_embed` is the `[img_tokens * hidden]`
+    /// buffer from encode (image tokens occupy positions [0, img_tokens)).
+    pub fn prefill(&self, tokens: &[u32], img_embed: Option<&[f32]>) -> Result<PrefillOut> {
+        let t = self.cfg.img_tokens;
+        let h = self.cfg.hidden;
+        let (name, s_total, txt_cap) = match img_embed {
+            Some(e) => {
+                if e.len() != t * h {
+                    bail!("img embed len {} != {}", e.len(), t * h);
+                }
+                let bucket = pick_bucket(&self.prefill_mm_buckets, t + tokens.len())
+                    .ok_or_else(|| anyhow!("mm prompt of {} tokens too long", tokens.len()))?;
+                (format!("prefill_mm_s{bucket}"), bucket, bucket - t)
+            }
+            None => {
+                let bucket = pick_bucket(&self.prefill_txt_buckets, tokens.len())
+                    .ok_or_else(|| anyhow!("txt prompt of {} tokens too long", tokens.len()))?;
+                (format!("prefill_txt_s{bucket}"), bucket, bucket)
+            }
+        };
+        let mut ids: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        ids.resize(txt_cap, 0);
+        let ids_lit = xla::Literal::vec1(&ids)
+            .reshape(&[1, txt_cap as i64])
+            .context("reshape ids")?;
+        let len_lit = xla::Literal::from(tokens.len() as i32);
+
+        let out = match img_embed {
+            Some(e) => {
+                let emb = xla::Literal::vec1(e)
+                    .reshape(&[1, t as i64, h as i64])
+                    .context("reshape embeds")?;
+                self.run(&name, &[emb, ids_lit, len_lit])?
+            }
+            None => self.run(&name, &[ids_lit, len_lit])?,
+        };
+
+        let valid_len = tokens.len() + if img_embed.is_some() { t } else { 0 };
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let k_all = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let v_all = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        // k_all is [L, s_total, H]; keep only the valid prefix per layer
+        let l = self.cfg.layers;
+        let take = |all: &[f32]| -> Vec<Vec<f32>> {
+            (0..l)
+                .map(|li| {
+                    let base = li * s_total * h;
+                    all[base..base + valid_len * h].to_vec()
+                })
+                .collect()
+        };
+        Ok(PrefillOut { logits, k: take(&k_all), v: take(&v_all), valid_len })
+    }
+
+    // ------------------------------------------------------------- decode
+
+    /// One decode iteration over the paged pools. `k_pool`/`v_pool` are the
+    /// instance's pools in `[layers, pool_blocks, block_size, hidden]`
+    /// layout (flattened), as maintained by `cache::CacheStore`.
+    pub fn decode(
+        &self,
+        reqs: &[DecodeInput],
+        k_pool: &[f32],
+        v_pool: &[f32],
+    ) -> Result<DecodeOut> {
+        if reqs.is_empty() {
+            return Ok(DecodeOut { logits: vec![], k_new: vec![], v_new: vec![] });
+        }
+        let cfg = &self.cfg;
+        let pool_len = cfg.layers * cfg.pool_blocks * cfg.block_size * cfg.hidden;
+        if k_pool.len() != pool_len || v_pool.len() != pool_len {
+            bail!("pool len {} != expected {pool_len}", k_pool.len());
+        }
+        let bucket = pick_bucket(&self.decode_buckets, reqs.len())
+            .ok_or_else(|| anyhow!("decode batch {} exceeds buckets", reqs.len()))?;
+        let maxb = cfg.max_blocks_per_seq;
+
+        let mut tokens: Vec<i32> = Vec::with_capacity(bucket);
+        let mut positions: Vec<i32> = Vec::with_capacity(bucket);
+        let mut bt: Vec<i32> = Vec::with_capacity(bucket * maxb);
+        let mut lens: Vec<i32> = Vec::with_capacity(bucket);
+        for r in reqs {
+            if r.block_table.len() > maxb {
+                bail!("block table {} > max {maxb}", r.block_table.len());
+            }
+            if r.position >= cfg.max_seq {
+                bail!("position {} >= max_seq {}", r.position, cfg.max_seq);
+            }
+            tokens.push(r.token as i32);
+            positions.push(r.position as i32);
+            for i in 0..maxb {
+                bt.push(*r.block_table.get(i).unwrap_or(&0) as i32);
+            }
+            lens.push(r.seq_len as i32);
+        }
+        // pad slots: empty requests attend only to themselves (len 0)
+        for _ in reqs.len()..bucket {
+            tokens.push(0);
+            positions.push(0);
+            bt.extend(std::iter::repeat(0).take(maxb));
+            lens.push(0);
+        }
+
+        let inputs = [
+            xla::Literal::vec1(&tokens),
+            xla::Literal::vec1(&positions),
+            xla::Literal::vec1(k_pool)
+                .reshape(&[
+                    cfg.layers as i64,
+                    cfg.pool_blocks as i64,
+                    cfg.block_size as i64,
+                    cfg.hidden as i64,
+                ])
+                .context("reshape k_pool")?,
+            xla::Literal::vec1(v_pool)
+                .reshape(&[
+                    cfg.layers as i64,
+                    cfg.pool_blocks as i64,
+                    cfg.block_size as i64,
+                    cfg.hidden as i64,
+                ])
+                .context("reshape v_pool")?,
+            xla::Literal::vec1(&bt)
+                .reshape(&[bucket as i64, maxb as i64])
+                .context("reshape bt")?,
+            xla::Literal::vec1(&lens),
+        ];
+        let out = self.run(&format!("decode_b{bucket}"), &inputs)?;
+        let logits_all = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let k_all = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let v_all = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let v_sz = cfg.vocab;
+        let kv_sz = cfg.layers * cfg.hidden; // [B, L, H] rows
+        Ok(DecodeOut {
+            logits: (0..reqs.len())
+                .map(|i| logits_all[i * v_sz..(i + 1) * v_sz].to_vec())
+                .collect(),
+            k_new: (0..reqs.len())
+                .map(|i| k_all[i * kv_sz..(i + 1) * kv_sz].to_vec())
+                .collect(),
+            v_new: (0..reqs.len())
+                .map(|i| v_all[i * kv_sz..(i + 1) * kv_sz].to_vec())
+                .collect(),
+        })
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client — the bridge from the rust coordinator (L3) to the JAX/
+//! Pallas compute (L2/L1).
+//!
+//! `make artifacts` produces one HLO module per (stage, bucket) plus
+//! `manifest.json`; [`Engine::load`] compiles them all once at startup and
+//! the request path only marshals literals. Python never runs here.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod engine;
+
+pub use engine::{DecodeInput, DecodeOut, Engine, PrefillOut};
+
+use std::collections::HashMap;
+
+use crate::util::json::{parse, Json};
+
+/// Tiny-VLM configuration shared with `python/compile/model.py::CFG`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VlmConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub img_tokens: usize,
+    pub img_size: usize,
+    pub channels: usize,
+    pub pool_blocks: usize,
+    pub block_size: usize,
+    pub max_blocks_per_seq: usize,
+    pub max_seq: usize,
+    pub bos_id: u32,
+    pub eos_id: u32,
+}
+
+impl VlmConfig {
+    pub fn max_context(&self) -> usize {
+        self.max_blocks_per_seq * self.block_size
+    }
+    pub fn pixels_len(&self) -> usize {
+        self.img_size * self.img_size * self.channels
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub stage: String,
+    pub bucket: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: VlmConfig,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> anyhow::Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e} (run `make artifacts`)"))?;
+        Manifest::from_json(&parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let c = j.get("config").ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let config = VlmConfig {
+            vocab: c.req_usize("vocab")?,
+            hidden: c.req_usize("hidden")?,
+            layers: c.req_usize("layers")?,
+            heads: c.req_usize("heads")?,
+            head_dim: c.req_usize("head_dim")?,
+            img_tokens: c.req_usize("img_tokens")?,
+            img_size: c.req_usize("img_size")?,
+            channels: c.req_usize("channels")?,
+            pool_blocks: c.req_usize("pool_blocks")?,
+            block_size: c.req_usize("block_size")?,
+            max_blocks_per_seq: c.req_usize("max_blocks_per_seq")?,
+            max_seq: c.req_usize("max_seq")?,
+            bos_id: c.req_usize("bos_id")? as u32,
+            eos_id: c.req_usize("eos_id")? as u32,
+        };
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactInfo {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                stage: a.req_str("stage")?.to_string(),
+                bucket: a.req_usize("bucket")?,
+            });
+        }
+        Ok(Manifest { config, artifacts })
+    }
+
+    /// Buckets available per artifact-name prefix, ascending.
+    pub fn buckets(&self, prefix: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with(prefix))
+            .map(|a| a.bucket)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn by_name(&self) -> HashMap<&str, &ArtifactInfo> {
+        self.artifacts.iter().map(|a| (a.name.as_str(), a)).collect()
+    }
+}
+
+/// Pick the smallest bucket >= n (requests are padded up to it).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"vocab": 272, "hidden": 128, "layers": 2, "heads": 4,
+        "head_dim": 32, "ffn": 256, "max_seq": 128, "img_size": 32,
+        "patch": 8, "channels": 3, "vis_layers": 2, "vis_hidden": 128,
+        "vis_heads": 4, "vis_ffn": 256, "img_tokens": 16,
+        "pool_blocks": 128, "block_size": 16, "max_blocks_per_seq": 8,
+        "bos_id": 256, "eos_id": 257, "img_id": 258},
+      "seed": 0,
+      "artifacts": [
+        {"name": "encode_b1", "file": "encode_b1.hlo.txt", "stage": "encode", "bucket": 1, "inputs": []},
+        {"name": "encode_b4", "file": "encode_b4.hlo.txt", "stage": "encode", "bucket": 4, "inputs": []},
+        {"name": "decode_b2", "file": "decode_b2.hlo.txt", "stage": "decode", "bucket": 2, "inputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::from_json(&parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.config.vocab, 272);
+        assert_eq!(m.config.max_context(), 128);
+        assert_eq!(m.config.pixels_len(), 32 * 32 * 3);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.buckets("encode_b"), vec![1, 4]);
+        assert_eq!(m.buckets("decode_b"), vec![2]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = vec![1, 2, 4, 8];
+        assert_eq!(pick_bucket(&buckets, 1), Some(1));
+        assert_eq!(pick_bucket(&buckets, 3), Some(4));
+        assert_eq!(pick_bucket(&buckets, 8), Some(8));
+        assert_eq!(pick_bucket(&buckets, 9), None);
+    }
+
+    #[test]
+    fn manifest_missing_fields_rejected() {
+        assert!(Manifest::from_json(&parse("{}").unwrap()).is_err());
+        let j = parse(r#"{"config": {"vocab": 1}}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load("artifacts").unwrap();
+            assert_eq!(m.artifacts.len(), 11);
+            assert_eq!(m.buckets("decode_b"), vec![1, 2, 4, 8]);
+            assert_eq!(m.buckets("prefill_mm_s"), vec![48, 80]);
+        }
+    }
+}

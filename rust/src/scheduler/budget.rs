@@ -1,0 +1,165 @@
+//! Budget profiling (paper §4.2): "during system initialization, we use
+//! binary search to profile the maximum encode batch size and token budget
+//! that ensures the execution time of each subsequent batch iteration
+//! remains below the TPOT SLO."
+//!
+//! The profiler asks the cost model (instead of a hardware dry-run) for
+//! the iteration time of a representative batch — running decodes at a
+//! typical context plus the candidate prefill chunk / encode batch — and
+//! binary-searches the largest budget that stays under the SLO.
+
+use crate::config::{DeviceSpec, ModelSpec};
+use crate::costmodel::{decode_cost, encode_cost, exec_time, iteration_cost, parallel_time};
+
+/// Assumed steady-state decode load used while profiling budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetProfile {
+    /// Decodes co-batched in a typical iteration.
+    pub typical_decode_batch: usize,
+    /// Their typical context length.
+    pub typical_context: usize,
+    /// Prefill context assumed for chunk-cost evaluation.
+    pub typical_prefill_ctx: usize,
+    /// Per-iteration engine overhead to budget for (eager-mode scheduler +
+    /// launch CPU time; see `SimConfig::engine_overhead`).
+    pub engine_overhead: f64,
+}
+
+impl Default for BudgetProfile {
+    fn default() -> Self {
+        BudgetProfile {
+            typical_decode_batch: 32,
+            typical_context: 1024,
+            typical_prefill_ctx: 512,
+            engine_overhead: 0.020,
+        }
+    }
+}
+
+/// Largest prefill-chunk token count whose iteration (decodes + chunk)
+/// stays below `tpot_slo`. Returns 0 if even the decodes alone violate it.
+pub fn compute_token_budget(
+    m: &ModelSpec,
+    d: &DeviceSpec,
+    profile: &BudgetProfile,
+    tpot_slo: f64,
+) -> usize {
+    let decode_ctx = vec![profile.typical_context; profile.typical_decode_batch];
+    let iter_time = |chunk: usize| -> f64 {
+        let chunks: &[(usize, usize)] = if chunk > 0 {
+            &[(profile.typical_prefill_ctx, chunk)]
+        } else {
+            &[]
+        };
+        exec_time(iteration_cost(m, chunks, &decode_ctx), d) + profile.engine_overhead
+    };
+    if iter_time(0) > tpot_slo {
+        return 0;
+    }
+    binary_search_max(1, 16384, |c| iter_time(c) <= tpot_slo)
+}
+
+/// Largest encode image-batch whose iteration stays below `tpot_slo` when
+/// run on the vision stream in parallel with the typical decode batch.
+pub fn compute_image_budget(
+    m: &ModelSpec,
+    d: &DeviceSpec,
+    profile: &BudgetProfile,
+    tpot_slo: f64,
+) -> usize {
+    let decode_ctx = vec![profile.typical_context; profile.typical_decode_batch];
+    let iter_time = |imgs: usize| -> f64 {
+        parallel_time(&[decode_cost(m, &decode_ctx), encode_cost(m, imgs)], d)
+            + profile.engine_overhead
+    };
+    if iter_time(0) > tpot_slo {
+        return 0;
+    }
+    binary_search_max(1, 4096, |i| iter_time(i) <= tpot_slo)
+}
+
+/// Largest `x` in [0, hi] such that `ok(x)` (assumes monotone ok; `ok(0)`
+/// must hold).
+fn binary_search_max(lo: usize, hi: usize, ok: impl Fn(usize) -> bool) -> usize {
+    let (mut lo, mut hi) = (lo - 1, hi); // invariant: ok(lo), !ok(hi+1) unknown
+    // exponential probe first to keep the common case fast
+    let mut probe = lo + 1;
+    while probe <= hi && ok(probe) {
+        lo = probe;
+        probe = (probe * 2).max(probe + 1);
+    }
+    hi = probe.min(hi + 1).saturating_sub(1).min(hi);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if ok(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceSpec, ModelSpec};
+
+    #[test]
+    fn binary_search_exact_boundary() {
+        assert_eq!(binary_search_max(1, 1000, |x| x <= 137), 137);
+        assert_eq!(binary_search_max(1, 1000, |x| x <= 1), 1);
+        assert_eq!(binary_search_max(1, 1000, |_| true), 1000);
+        assert_eq!(binary_search_max(1, 1000, |x| x == 0), 0);
+    }
+
+    #[test]
+    fn token_budget_is_tpot_boundary() {
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let p = BudgetProfile::default();
+        let budget = compute_token_budget(&m, &d, &p, 0.04);
+        assert!(budget > 0, "0.04s TPOT must allow some chunk");
+        // the found budget is feasible and budget+1 is not
+        let ctx = vec![p.typical_context; p.typical_decode_batch];
+        let t = |c: usize| {
+            exec_time(iteration_cost(&m, &[(p.typical_prefill_ctx, c)], &ctx), &d)
+                + p.engine_overhead
+        };
+        assert!(t(budget) <= 0.04);
+        assert!(t(budget + 1) > 0.04);
+    }
+
+    #[test]
+    fn tighter_slo_means_smaller_budgets() {
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let p = BudgetProfile::default();
+        let tight = compute_token_budget(&m, &d, &p, 0.02);
+        let loose = compute_token_budget(&m, &d, &p, 0.08);
+        assert!(tight < loose, "tight={tight} loose={loose}");
+        let tight_i = compute_image_budget(&m, &d, &p, 0.02);
+        let loose_i = compute_image_budget(&m, &d, &p, 0.08);
+        assert!(tight_i <= loose_i, "tight={tight_i} loose={loose_i}");
+    }
+
+    #[test]
+    fn impossible_slo_gives_zero() {
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let p = BudgetProfile::default();
+        assert_eq!(compute_token_budget(&m, &d, &p, 1e-6), 0);
+        assert_eq!(compute_image_budget(&m, &d, &p, 1e-6), 0);
+    }
+
+    #[test]
+    fn image_budget_reasonable_scale() {
+        // 0.04s TPOT on H800 with a 64-way decode: a handful of images fits
+        // on the parallel vision stream (paper: encode saturates ~6).
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let p = BudgetProfile::default();
+        let b = compute_image_budget(&m, &d, &p, 0.04);
+        assert!((1..=64).contains(&b), "budget = {b}");
+    }
+}

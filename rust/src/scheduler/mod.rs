@@ -1,0 +1,846 @@
+//! Intra-instance batch scheduling.
+//!
+//! [`StageLevelScheduler`] implements the paper's Algorithm 1 (stage-level
+//! batching with token + image budgets). The baseline policies the paper
+//! compares against — vLLM-v0's prefill-first FCFS, vLLM-v1's
+//! decode-first, and Sarathi-style chunked prefill whose chunk triggers a
+//! full image encode (the multimodal generation-stall, §3.2) — are
+//! implemented behind the same [`Scheduler`] trait so the simulator, the
+//! real instances, and the ablation benches can swap policies freely.
+
+pub mod budget;
+
+pub use budget::{compute_image_budget, compute_token_budget, BudgetProfile};
+
+use std::collections::VecDeque;
+
+use crate::core::{RequestId, RequestSpec, Stage};
+
+/// Scheduler-visible request state (progress through the stage pipeline).
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub spec: RequestSpec,
+    /// Images encoded so far.
+    pub encoded_images: usize,
+    /// Prompt tokens prefilled so far (counting image tokens, which are
+    /// "prefilled" by splicing embeddings — they still cost KV space).
+    pub prefilled: usize,
+    /// Output tokens produced so far.
+    pub decoded: usize,
+    /// True while the request is being migrated (owns a migrate task).
+    pub migrating: bool,
+}
+
+impl ReqState {
+    pub fn new(spec: RequestSpec) -> Self {
+        ReqState { spec, encoded_images: 0, prefilled: 0, decoded: 0, migrating: false }
+    }
+
+    /// The stage this request needs next.
+    pub fn stage(&self) -> Stage {
+        if self.migrating {
+            Stage::Migrate
+        } else if self.encoded_images < self.spec.num_images {
+            Stage::Encode
+        } else if self.prefilled < self.spec.prefill_tokens() {
+            Stage::Prefill
+        } else {
+            Stage::Decode
+        }
+    }
+
+    pub fn encode_remaining(&self) -> usize {
+        self.spec.num_images - self.encoded_images
+    }
+    pub fn prefill_remaining(&self) -> usize {
+        self.spec.prefill_tokens() - self.prefilled
+    }
+    pub fn decode_remaining(&self) -> usize {
+        self.spec.output_tokens.saturating_sub(self.decoded)
+    }
+    pub fn finished(&self) -> bool {
+        self.encode_remaining() == 0 && self.prefill_remaining() == 0 && self.decode_remaining() == 0
+    }
+    /// Context length a decode step sees (prefill + produced tokens).
+    pub fn context_len(&self) -> usize {
+        self.spec.prefill_tokens() + self.decoded
+    }
+}
+
+/// One unit of work inside a batch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskWork {
+    /// Encode `images` images of this request.
+    Encode { images: usize },
+    /// Process a prefill chunk: `tokens` new tokens on top of `ctx` cached.
+    PrefillChunk { ctx: usize, tokens: usize },
+    /// One decode token with `ctx` cached tokens.
+    DecodeToken { ctx: usize },
+    /// Progress a migration (handled by the Migrate Scheduler).
+    Migrate,
+}
+
+/// A scheduled batch: the iteration's work, stage-tagged per request.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub items: Vec<(RequestId, TaskWork)>,
+}
+
+impl Batch {
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+    pub fn num_decode(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|(_, w)| matches!(w, TaskWork::DecodeToken { .. }))
+            .count()
+    }
+    pub fn num_encode_images(&self) -> usize {
+        self.items
+            .iter()
+            .map(|(_, w)| match w {
+                TaskWork::Encode { images } => *images,
+                _ => 0,
+            })
+            .sum()
+    }
+    pub fn prefill_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .map(|(_, w)| match w {
+                TaskWork::PrefillChunk { tokens, .. } => *tokens,
+                _ => 0,
+            })
+            .sum()
+    }
+    pub fn has_prefill(&self) -> bool {
+        self.items
+            .iter()
+            .any(|(_, w)| matches!(w, TaskWork::PrefillChunk { .. }))
+    }
+}
+
+/// The queues a scheduler draws from. `running` holds admitted requests
+/// (cache reserved); `waiting` holds requests not yet admitted.
+#[derive(Debug, Default)]
+pub struct Queues {
+    pub waiting: VecDeque<ReqState>,
+    pub running: Vec<ReqState>,
+}
+
+impl Queues {
+    pub fn total(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+    pub fn find_running(&mut self, id: RequestId) -> Option<&mut ReqState> {
+        self.running.iter_mut().find(|r| r.spec.id == id)
+    }
+}
+
+/// Admission callback: may the instance admit this request now? (cache
+/// capacity check — the scheduler itself is capacity-agnostic.)
+pub type AdmitFn<'a> = dyn FnMut(&ReqState) -> bool + 'a;
+
+/// Per-iteration scheduling limits.
+#[derive(Debug, Clone, Copy)]
+pub struct Budgets {
+    /// Max LM tokens (decode tokens + prefill-chunk tokens) per iteration.
+    pub token_budget: usize,
+    /// Max images encoded per iteration.
+    pub image_budget: usize,
+    /// Cap on concurrently running decodes (pool bucket limit).
+    pub max_decode_batch: usize,
+}
+
+impl Default for Budgets {
+    fn default() -> Self {
+        Budgets { token_budget: 512, image_budget: 8, max_decode_batch: 256 }
+    }
+}
+
+/// A batch-building policy.
+pub trait Scheduler: Send {
+    /// Build the next iteration's batch. May admit from `q.waiting` into
+    /// `q.running` (subject to `admit`). Returns an empty batch if there
+    /// is nothing to do.
+    fn build_batch(&mut self, q: &mut Queues, budgets: &Budgets, admit: &mut AdmitFn) -> Batch;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which stages an instance serves — drives which work a scheduler may pick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageMask {
+    pub encode: bool,
+    pub prefill: bool,
+    pub decode: bool,
+}
+
+impl StageMask {
+    pub const EPD: StageMask = StageMask { encode: true, prefill: true, decode: true };
+    pub const E: StageMask = StageMask { encode: true, prefill: false, decode: false };
+    pub const P: StageMask = StageMask { encode: false, prefill: true, decode: false };
+    pub const D: StageMask = StageMask { encode: false, prefill: false, decode: true };
+    pub const EP: StageMask = StageMask { encode: true, prefill: true, decode: false };
+    pub const ED: StageMask = StageMask { encode: true, prefill: false, decode: true };
+
+    pub fn serves(&self, s: Stage) -> bool {
+        match s {
+            Stage::Encode => self.encode,
+            Stage::Prefill => self.prefill,
+            Stage::Decode => self.decode,
+            Stage::Migrate => true,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = String::new();
+        if self.encode {
+            s.push('E');
+        }
+        if self.prefill {
+            s.push('P');
+        }
+        if self.decode {
+            s.push('D');
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 1: stage-level batching
+// ---------------------------------------------------------------------------
+
+/// The paper's Algorithm 1. Priority order inside an iteration:
+/// 1. every running decode token (keeps generation stall-free);
+/// 2. ongoing chunked prefills within the token budget, then new prefill
+///    work from the waiting queue while a prefill is in flight;
+/// 3. only when no prefill work exists: running/new encode work within the
+///    image budget (encode runs on the vision stream, parallel to decode);
+/// 4. all requests in the migrate stage.
+pub struct StageLevelScheduler {
+    mask: StageMask,
+}
+
+impl StageLevelScheduler {
+    pub fn new(mask: StageMask) -> Self {
+        StageLevelScheduler { mask }
+    }
+}
+
+impl Scheduler for StageLevelScheduler {
+    fn build_batch(&mut self, q: &mut Queues, budgets: &Budgets, admit: &mut AdmitFn) -> Batch {
+        let mut batch = Batch::default();
+        let mut n_t = 0usize; // token budget used
+        let mut n_e = 0usize; // image budget used
+        let mut has_prefill = false;
+
+        // (1) ongoing decodes
+        if self.mask.decode {
+            let mut n_d = 0;
+            for r in q.running.iter() {
+                if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
+                    batch.items.push((
+                        r.spec.id,
+                        TaskWork::DecodeToken { ctx: r.context_len() },
+                    ));
+                    n_t += 1;
+                    n_d += 1;
+                }
+            }
+        }
+
+        // (2) ongoing prefills (chunked within budget)
+        if self.mask.prefill {
+            for r in q.running.iter() {
+                if r.stage() == Stage::Prefill && n_t < budgets.token_budget {
+                    let chunk = r.prefill_remaining().min(budgets.token_budget - n_t);
+                    if chunk == 0 {
+                        continue;
+                    }
+                    has_prefill = true;
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::PrefillChunk { ctx: r.prefilled, tokens: chunk }));
+                    n_t += chunk;
+                }
+            }
+            // new prefill-ready requests from the waiting queue
+            while n_t < budgets.token_budget {
+                let Some(pos) = q
+                    .waiting
+                    .iter()
+                    .position(|r| r.stage() == Stage::Prefill)
+                else {
+                    break;
+                };
+                if !admit(&q.waiting[pos]) {
+                    break; // cache pressure: stop admitting
+                }
+                let r = q.waiting.remove(pos).unwrap();
+                let chunk = r.prefill_remaining().min(budgets.token_budget - n_t);
+                has_prefill = true;
+                batch
+                    .items
+                    .push((r.spec.id, TaskWork::PrefillChunk { ctx: r.prefilled, tokens: chunk }));
+                n_t += chunk;
+                q.running.push(r);
+            }
+        }
+
+        // (3) encode only when no prefill work is in flight (Alg. 1 line 20)
+        if self.mask.encode && !has_prefill {
+            for r in q.running.iter() {
+                if r.stage() == Stage::Encode && n_e < budgets.image_budget {
+                    let images = r.encode_remaining().min(budgets.image_budget - n_e);
+                    batch.items.push((r.spec.id, TaskWork::Encode { images }));
+                    n_e += images;
+                }
+            }
+            while n_e < budgets.image_budget {
+                let Some(pos) = q
+                    .waiting
+                    .iter()
+                    .position(|r| r.stage() == Stage::Encode)
+                else {
+                    break;
+                };
+                if !admit(&q.waiting[pos]) {
+                    break;
+                }
+                let r = q.waiting.remove(pos).unwrap();
+                let images = r.encode_remaining().min(budgets.image_budget - n_e);
+                batch.items.push((r.spec.id, TaskWork::Encode { images }));
+                n_e += images;
+                q.running.push(r);
+            }
+        }
+
+        // (4) migrate-stage requests ride along in every batch
+        for r in q.running.iter() {
+            if r.migrating {
+                batch.items.push((r.spec.id, TaskWork::Migrate));
+            }
+        }
+
+        batch
+    }
+
+    fn name(&self) -> &'static str {
+        "stage-level"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: prefill-first FCFS (vLLM-v0 style)
+// ---------------------------------------------------------------------------
+
+/// vLLM-v0: whenever any request is waiting for encode+prefill, run the
+/// whole encode+prefill for a FCFS batch of them (no chunking, encode
+/// merged with prefill), *stalling all decodes* — the generation-stall
+/// behaviour of Fig. 7. Otherwise decode everything.
+pub struct PrefillFirstScheduler {
+    mask: StageMask,
+    /// Max prefill tokens batched per iteration (vLLM max_num_batched_tokens).
+    pub max_batched_tokens: usize,
+}
+
+impl PrefillFirstScheduler {
+    pub fn new(mask: StageMask) -> Self {
+        PrefillFirstScheduler { mask, max_batched_tokens: 4096 }
+    }
+}
+
+impl Scheduler for PrefillFirstScheduler {
+    fn build_batch(&mut self, q: &mut Queues, budgets: &Budgets, admit: &mut AdmitFn) -> Batch {
+        let mut batch = Batch::default();
+
+        // admit waiting requests FCFS while capacity lasts
+        while let Some(front) = q.waiting.front() {
+            if !self.mask.serves(front.stage()) || front.stage() == Stage::Decode {
+                break;
+            }
+            if !admit(front) {
+                break;
+            }
+            let r = q.waiting.pop_front().unwrap();
+            q.running.push(r);
+        }
+
+        // full encode+prefill for every non-decode running request
+        let mut tokens = 0usize;
+        for r in q.running.iter() {
+            match r.stage() {
+                Stage::Encode if self.mask.encode => {
+                    // serial "ep": encode all images AND the full prefill
+                    // in the same scheduling unit
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::Encode { images: r.encode_remaining() }));
+                    let t = r.prefill_remaining();
+                    if self.mask.prefill && t > 0 && tokens + t <= self.max_batched_tokens {
+                        batch
+                            .items
+                            .push((r.spec.id, TaskWork::PrefillChunk { ctx: r.prefilled, tokens: t }));
+                        tokens += t;
+                    }
+                }
+                Stage::Prefill if self.mask.prefill => {
+                    let t = r.prefill_remaining();
+                    if tokens + t <= self.max_batched_tokens {
+                        batch
+                            .items
+                            .push((r.spec.id, TaskWork::PrefillChunk { ctx: r.prefilled, tokens: t }));
+                        tokens += t;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // prefill-first: decodes run only when no prefill work was scheduled
+        if batch.is_empty() && self.mask.decode {
+            let mut n_d = 0;
+            for r in q.running.iter() {
+                if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::DecodeToken { ctx: r.context_len() }));
+                    n_d += 1;
+                }
+            }
+        }
+        for r in q.running.iter() {
+            if r.migrating {
+                batch.items.push((r.spec.id, TaskWork::Migrate));
+            }
+        }
+        batch
+    }
+
+    fn name(&self) -> &'static str {
+        "prefill-first"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: decode-first (vLLM-v1 style)
+// ---------------------------------------------------------------------------
+
+/// vLLM-v1: decodes run every iteration; at most one waiting request is
+/// admitted per iteration and its *full* encode + prefill run co-batched
+/// with the decodes (decode-priority, but the un-chunked multimodal
+/// prefill still inflates that iteration).
+pub struct DecodeFirstScheduler {
+    mask: StageMask,
+}
+
+impl DecodeFirstScheduler {
+    pub fn new(mask: StageMask) -> Self {
+        DecodeFirstScheduler { mask }
+    }
+}
+
+impl Scheduler for DecodeFirstScheduler {
+    fn build_batch(&mut self, q: &mut Queues, budgets: &Budgets, admit: &mut AdmitFn) -> Batch {
+        let mut batch = Batch::default();
+        if self.mask.decode {
+            let mut n_d = 0;
+            for r in q.running.iter() {
+                if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::DecodeToken { ctx: r.context_len() }));
+                    n_d += 1;
+                }
+            }
+        }
+        // ongoing encode/prefill work continues
+        let mut busy = false;
+        for r in q.running.iter() {
+            match r.stage() {
+                Stage::Encode if self.mask.encode => {
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::Encode { images: r.encode_remaining() }));
+                    busy = true;
+                }
+                Stage::Prefill if self.mask.prefill => {
+                    batch.items.push((
+                        r.spec.id,
+                        TaskWork::PrefillChunk { ctx: r.prefilled, tokens: r.prefill_remaining() },
+                    ));
+                    busy = true;
+                }
+                _ => {}
+            }
+        }
+        // admit one new request per iteration
+        if !busy {
+            if let Some(pos) = q
+                .waiting
+                .iter()
+                .position(|r| self.mask.serves(r.stage()) && r.stage() != Stage::Decode)
+            {
+                if admit(&q.waiting[pos]) {
+                    let r = q.waiting.remove(pos).unwrap();
+                    match r.stage() {
+                        Stage::Encode => {
+                            batch
+                                .items
+                                .push((r.spec.id, TaskWork::Encode { images: r.encode_remaining() }));
+                        }
+                        Stage::Prefill => {
+                            batch.items.push((
+                                r.spec.id,
+                                TaskWork::PrefillChunk {
+                                    ctx: r.prefilled,
+                                    tokens: r.prefill_remaining(),
+                                },
+                            ));
+                        }
+                        _ => {}
+                    }
+                    q.running.push(r);
+                }
+            }
+        }
+        for r in q.running.iter() {
+            if r.migrating {
+                batch.items.push((r.spec.id, TaskWork::Migrate));
+            }
+        }
+        batch
+    }
+
+    fn name(&self) -> &'static str {
+        "decode-first"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: chunked prefill (Sarathi-Serve style)
+// ---------------------------------------------------------------------------
+
+/// Sarathi-style stall-free scheduling with chunked prefill — but, as the
+/// paper observes for multimodal models (§3.2), when the chunk reaches the
+/// image position the *full* image encode fires inside the iteration,
+/// stalling the co-batched decodes.
+pub struct ChunkedPrefillScheduler {
+    mask: StageMask,
+}
+
+impl ChunkedPrefillScheduler {
+    pub fn new(mask: StageMask) -> Self {
+        ChunkedPrefillScheduler { mask }
+    }
+}
+
+impl Scheduler for ChunkedPrefillScheduler {
+    fn build_batch(&mut self, q: &mut Queues, budgets: &Budgets, admit: &mut AdmitFn) -> Batch {
+        let mut batch = Batch::default();
+        let mut n_t = 0usize;
+
+        if self.mask.decode {
+            let mut n_d = 0;
+            for r in q.running.iter() {
+                if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::DecodeToken { ctx: r.context_len() }));
+                    n_t += 1;
+                    n_d += 1;
+                }
+            }
+        }
+
+        // admit so there is chunkable work
+        while q
+            .running
+            .iter()
+            .filter(|r| matches!(r.stage(), Stage::Encode | Stage::Prefill))
+            .count()
+            < 2
+        {
+            let Some(pos) = q
+                .waiting
+                .iter()
+                .position(|r| self.mask.serves(r.stage()) && r.stage() != Stage::Decode)
+            else {
+                break;
+            };
+            if !admit(&q.waiting[pos]) {
+                break;
+            }
+            let r = q.waiting.remove(pos).unwrap();
+            q.running.push(r);
+        }
+
+        for r in q.running.iter() {
+            if n_t >= budgets.token_budget {
+                break;
+            }
+            match r.stage() {
+                // token-count-based chunking is blind to the image: when the
+                // chunk hits the image portion, the whole encode runs now.
+                Stage::Encode if self.mask.encode => {
+                    batch
+                        .items
+                        .push((r.spec.id, TaskWork::Encode { images: r.encode_remaining() }));
+                    if self.mask.prefill {
+                        let chunk = r.prefill_remaining().min(budgets.token_budget - n_t);
+                        if chunk > 0 {
+                            batch.items.push((
+                                r.spec.id,
+                                TaskWork::PrefillChunk { ctx: r.prefilled, tokens: chunk },
+                            ));
+                            n_t += chunk;
+                        }
+                    }
+                }
+                Stage::Prefill if self.mask.prefill => {
+                    let chunk = r.prefill_remaining().min(budgets.token_budget - n_t);
+                    if chunk > 0 {
+                        batch
+                            .items
+                            .push((r.spec.id, TaskWork::PrefillChunk { ctx: r.prefilled, tokens: chunk }));
+                        n_t += chunk;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for r in q.running.iter() {
+            if r.migrating {
+                batch.items.push((r.spec.id, TaskWork::Migrate));
+            }
+        }
+        batch
+    }
+
+    fn name(&self) -> &'static str {
+        "chunked-prefill"
+    }
+}
+
+/// Policy selector used by configs/CLI/benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    StageLevel,
+    PrefillFirst,
+    DecodeFirst,
+    ChunkedPrefill,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 4] = [
+        Policy::StageLevel,
+        Policy::PrefillFirst,
+        Policy::DecodeFirst,
+        Policy::ChunkedPrefill,
+    ];
+
+    pub fn make(&self, mask: StageMask) -> Box<dyn Scheduler> {
+        match self {
+            Policy::StageLevel => Box::new(StageLevelScheduler::new(mask)),
+            Policy::PrefillFirst => Box::new(PrefillFirstScheduler::new(mask)),
+            Policy::DecodeFirst => Box::new(DecodeFirstScheduler::new(mask)),
+            Policy::ChunkedPrefill => Box::new(ChunkedPrefillScheduler::new(mask)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::StageLevel => "stage-level",
+            Policy::PrefillFirst => "prefill-first",
+            Policy::DecodeFirst => "decode-first",
+            Policy::ChunkedPrefill => "chunked-prefill",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Policy> {
+        Policy::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn spec(id: u64, images: usize, prompt: usize, out: usize) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            arrival: 0.0,
+            num_images: images,
+            tokens_per_image: 16,
+            prompt_tokens: prompt,
+            output_tokens: out,
+        }
+    }
+
+    fn always_admit() -> Box<AdmitFn<'static>> {
+        Box::new(|_: &ReqState| true)
+    }
+
+    #[test]
+    fn req_state_stage_progression() {
+        let mut r = ReqState::new(spec(1, 2, 10, 5));
+        assert_eq!(r.stage(), Stage::Encode);
+        r.encoded_images = 2;
+        assert_eq!(r.stage(), Stage::Prefill);
+        r.prefilled = r.spec.prefill_tokens();
+        assert_eq!(r.stage(), Stage::Decode);
+        r.decoded = 5;
+        assert!(r.finished());
+        r.migrating = true;
+        assert_eq!(r.stage(), Stage::Migrate);
+    }
+
+    #[test]
+    fn stage_level_decodes_always_included() {
+        let mut s = StageLevelScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        let mut d = ReqState::new(spec(1, 0, 4, 10));
+        d.prefilled = 4; // decoding
+        q.running.push(d);
+        q.waiting.push_back(ReqState::new(spec(2, 1, 8, 4))); // new mm request
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
+        assert_eq!(b.num_decode(), 1);
+        // no prefill-ready request (img not encoded) -> encode work scheduled
+        assert!(b.num_encode_images() > 0);
+    }
+
+    #[test]
+    fn stage_level_prefill_blocks_new_encode() {
+        // Alg. 1: encode only when has_prefill == false
+        let mut s = StageLevelScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        let mut p = ReqState::new(spec(1, 0, 100, 4));
+        p.prefilled = 10; // mid-prefill
+        q.running.push(p);
+        q.waiting.push_back(ReqState::new(spec(2, 1, 8, 4)));
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
+        assert!(b.has_prefill());
+        assert_eq!(b.num_encode_images(), 0, "encode must wait behind prefill");
+    }
+
+    #[test]
+    fn stage_level_respects_token_budget() {
+        let mut s = StageLevelScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        for i in 0..4 {
+            let mut r = ReqState::new(spec(i, 0, 400, 4));
+            r.prefilled = if i == 0 { 1 } else { 0 }; // one mid-prefill
+            if i == 0 {
+                q.running.push(r);
+            } else {
+                q.waiting.push_back(r);
+            }
+        }
+        let budgets = Budgets { token_budget: 512, ..Default::default() };
+        let b = s.build_batch(&mut q, &budgets, &mut *always_admit());
+        assert!(b.prefill_tokens() <= 512);
+    }
+
+    #[test]
+    fn stage_level_respects_image_budget() {
+        let mut s = StageLevelScheduler::new(StageMask::E);
+        let mut q = Queues::default();
+        for i in 0..5 {
+            q.waiting.push_back(ReqState::new(spec(i, 3, 8, 4)));
+        }
+        let budgets = Budgets { image_budget: 7, ..Default::default() };
+        let b = s.build_batch(&mut q, &budgets, &mut *always_admit());
+        assert!(b.num_encode_images() <= 7);
+        assert!(b.num_encode_images() >= 6, "should pack close to budget");
+    }
+
+    #[test]
+    fn prefill_first_stalls_decodes() {
+        let mut s = PrefillFirstScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        let mut d = ReqState::new(spec(1, 0, 4, 10));
+        d.prefilled = 4;
+        q.running.push(d);
+        q.waiting.push_back(ReqState::new(spec(2, 0, 64, 4)));
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
+        assert!(b.has_prefill());
+        assert_eq!(b.num_decode(), 0, "vLLM-v0 stalls decodes during prefill");
+    }
+
+    #[test]
+    fn decode_first_keeps_decoding() {
+        let mut s = DecodeFirstScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        let mut d = ReqState::new(spec(1, 0, 4, 10));
+        d.prefilled = 4;
+        q.running.push(d);
+        q.waiting.push_back(ReqState::new(spec(2, 0, 64, 4)));
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
+        assert_eq!(b.num_decode(), 1, "decodes continue");
+        assert!(b.has_prefill(), "one admission co-batched");
+    }
+
+    #[test]
+    fn chunked_prefill_chunks_but_encodes_whole_image() {
+        let mut s = ChunkedPrefillScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        let mut d = ReqState::new(spec(1, 0, 4, 10));
+        d.prefilled = 4;
+        q.running.push(d);
+        q.waiting.push_back(ReqState::new(spec(2, 2, 600, 4)));
+        let budgets = Budgets { token_budget: 128, ..Default::default() };
+        let b = s.build_batch(&mut q, &budgets, &mut *always_admit());
+        assert_eq!(b.num_decode(), 1);
+        assert!(b.prefill_tokens() <= 128, "prefill is chunked");
+        assert_eq!(b.num_encode_images(), 2, "but the full encode fires");
+    }
+
+    #[test]
+    fn admission_denial_stops_admitting() {
+        let mut s = StageLevelScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        q.waiting.push_back(ReqState::new(spec(1, 0, 32, 4)));
+        q.waiting.push_back(ReqState::new(spec(2, 0, 32, 4)));
+        let mut deny = |_: &ReqState| false;
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut deny);
+        assert!(b.is_empty());
+        assert_eq!(q.waiting.len(), 2);
+        assert!(q.running.is_empty());
+    }
+
+    #[test]
+    fn stage_mask_labels() {
+        assert_eq!(StageMask::EPD.label(), "EPD");
+        assert_eq!(StageMask::EP.label(), "EP");
+        assert_eq!(StageMask::D.label(), "D");
+        assert!(StageMask::E.serves(Stage::Encode));
+        assert!(!StageMask::E.serves(Stage::Decode));
+        assert!(StageMask::P.serves(Stage::Migrate));
+    }
+
+    #[test]
+    fn policy_by_name_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::by_name("nope"), None);
+    }
+
+    #[test]
+    fn e_only_instance_never_schedules_lm_work() {
+        let mut s = StageLevelScheduler::new(StageMask::E);
+        let mut q = Queues::default();
+        q.waiting.push_back(ReqState::new(spec(1, 1, 32, 4)));
+        let mut d = ReqState::new(spec(2, 0, 4, 10));
+        d.prefilled = 4;
+        q.running.push(d); // decode-stage request stuck here (mis-routed)
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
+        assert_eq!(b.num_decode(), 0);
+        assert!(!b.has_prefill());
+        assert!(b.num_encode_images() > 0);
+    }
+}

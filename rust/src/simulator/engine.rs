@@ -1,0 +1,697 @@
+//! The discrete-event engine: instances, migrations, and the event loop.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, Stage};
+use crate::costmodel::{encode_cost, iteration_cost, parallel_time, sequential_time, Cost};
+use crate::metrics::RunMetrics;
+use crate::cache::PagedCache;
+use crate::router::{RoutePolicy, Router};
+use crate::scheduler::{
+    compute_image_budget, compute_token_budget, Batch, BudgetProfile, Budgets, Queues, ReqState,
+    Scheduler, StageMask, TaskWork,
+};
+use crate::simulator::{
+    cache_blocks, img_blocks_for, kv_blocks_for, SimConfig, IMG_BLOCK, KV_BLOCK,
+};
+
+// ---------------------------------------------------------------- events
+
+#[derive(Debug, Clone, PartialEq)]
+enum EvKind {
+    Arrival(usize),
+    BatchDone(usize),
+    TransferDone { src: usize, dst: usize, req: RequestId },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap via reverse comparison
+        other
+            .t
+            .total_cmp(&self.t)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+// -------------------------------------------------------------- instances
+
+/// A migration waiting for the target to pull it (paper §4.3 step 1).
+#[derive(Debug, Clone)]
+struct PendingPull {
+    req: ReqState,
+    src: usize,
+    phase: Phase, // EpMigration or PdMigration
+    bytes: f64,
+    created: f64,
+}
+
+struct SimInstance {
+    id: usize,
+    mask: StageMask,
+    sched: Box<dyn Scheduler>,
+    queues: Queues,
+    kv: PagedCache,
+    img: PagedCache,
+    /// Batch currently executing (None = idle) + its start time.
+    current: Option<(Batch, f64)>,
+    /// Inbound migrations not yet admitted (queue = backpressure).
+    inbox: Vec<PendingPull>,
+    /// Admitted pulls whose transfer is in flight.
+    incoming: HashMap<u64, PendingPull>,
+}
+
+impl SimInstance {
+    fn load(&self) -> f64 {
+        self.queues.total() as f64
+            + self.inbox.len() as f64
+            + self.incoming.len() as f64
+            + self.kv.utilization() * 4.0
+            + self.img.utilization()
+    }
+
+    /// Blocks this request needs on an instance with our mask.
+    fn kv_tokens_needed(&self, r: &ReqState) -> usize {
+        if !(self.mask.prefill || self.mask.decode) {
+            return 0;
+        }
+        // reserve the full sequence if we'll decode here, else just prefill
+        r.spec.prefill_tokens()
+            + if self.mask.decode { r.spec.output_tokens } else { 0 }
+    }
+
+    fn img_blocks_needed(&self, r: &ReqState) -> usize {
+        let consumes_images = self.mask.encode
+            || (self.mask.prefill && r.spec.has_image() && r.prefill_remaining() > 0);
+        if consumes_images {
+            img_blocks_for(r.spec.image_tokens())
+        } else {
+            0
+        }
+    }
+
+    fn can_admit(&self, r: &ReqState) -> bool {
+        let kv_need = kv_blocks_for(self.kv_tokens_needed(r));
+        let img_need = self.img_blocks_needed(r);
+        (kv_need == 0 || kv_need <= self.kv.free_blocks())
+            && (img_need == 0 || img_need <= self.img.free_blocks())
+    }
+
+    /// Reserve blocks for an admitted request (must follow can_admit).
+    fn reserve(&mut self, r: &ReqState) {
+        let kv_tokens = self.kv_tokens_needed(r);
+        if kv_tokens > 0 && !self.kv.has_request(r.spec.id) {
+            self.kv
+                .allocate(r.spec.id, kv_tokens)
+                .expect("can_admit checked kv capacity");
+        }
+        let img_need = self.img_blocks_needed(r);
+        if img_need > 0 && !self.img.has_request(r.spec.id) {
+            self.img
+                .allocate(r.spec.id, img_need * IMG_BLOCK)
+                .expect("can_admit checked image capacity");
+        }
+    }
+
+    fn release_all(&mut self, id: RequestId) {
+        if self.kv.has_request(id) {
+            self.kv.free(id).unwrap();
+        }
+        if self.img.has_request(id) {
+            self.img.free(id).unwrap();
+        }
+    }
+}
+
+// ----------------------------------------------------------------- engine
+
+/// Simulation output: metrics + counters for sanity checks and reports.
+#[derive(Debug)]
+pub struct SimResult {
+    pub metrics: RunMetrics,
+    pub migrations: usize,
+    pub batches: usize,
+    /// Requests still unfinished at the horizon.
+    pub unfinished: usize,
+}
+
+/// Run the simulation over a request trace.
+pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
+    let masks = cfg.cluster.instance_masks();
+    let profile = BudgetProfile::default();
+    let token_budget = compute_token_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(64);
+    let image_budget = compute_image_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(1);
+    let budgets = Budgets { token_budget, image_budget, max_decode_batch: 512 };
+
+    let mut instances: Vec<SimInstance> = masks
+        .iter()
+        .enumerate()
+        .map(|(id, &mask)| {
+            let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, mask);
+            SimInstance {
+                id,
+                mask,
+                sched: cfg.policy.make(mask),
+                queues: Queues::default(),
+                kv: PagedCache::new(kv_blocks, KV_BLOCK, 1024),
+                img: PagedCache::new(img_blocks, IMG_BLOCK, 64),
+                current: None,
+                inbox: Vec::new(),
+                incoming: HashMap::new(),
+            }
+        })
+        .collect();
+
+    let mut router = Router::new(RoutePolicy::LeastLoaded, cfg.seed);
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Ev>, t: f64, kind: EvKind, seq: &mut u64| {
+        *seq += 1;
+        heap.push(Ev { t, seq: *seq, kind });
+    };
+
+    for (i, r) in requests.iter().enumerate() {
+        push(&mut heap, r.arrival, EvKind::Arrival(i), &mut seq);
+    }
+
+    let mut lifecycles: HashMap<u64, Lifecycle> = HashMap::new();
+    let mut ready_since: HashMap<u64, f64> = HashMap::new();
+    let mut migrations = 0usize;
+    let mut batches = 0usize;
+    let (link_lat, link_bw) = cfg.link();
+
+    while let Some(ev) = heap.pop() {
+        let now = ev.t;
+        if now > cfg.horizon {
+            break;
+        }
+        match ev.kind {
+            EvKind::Arrival(i) => {
+                let spec = requests[i].clone();
+                lifecycles.insert(spec.id.0, Lifecycle::new(spec.arrival));
+                ready_since.insert(spec.id.0, now);
+                // route by request type (paper §4): first needed stage
+                let first = spec.first_stage();
+                let candidates: Vec<usize> = instances
+                    .iter()
+                    .filter(|inst| inst.mask.serves(first))
+                    .map(|inst| inst.id)
+                    .collect();
+                let loads: Vec<f64> = candidates.iter().map(|&i| instances[i].load()).collect();
+                let Some(pick) = router.pick(&loads) else {
+                    // no instance can serve this request type: drop (stays
+                    // unfinished and counts as an SLO violation)
+                    continue;
+                };
+                let target = candidates[pick];
+                instances[target].queues.waiting.push_back(ReqState::new(spec));
+                try_start(&mut instances, target, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+            }
+
+            EvKind::BatchDone(iid) => {
+                let (batch, started) = instances[iid]
+                    .current
+                    .take()
+                    .expect("BatchDone for idle instance");
+                let dur = now - started;
+                apply_batch(
+                    &mut instances,
+                    iid,
+                    &batch,
+                    started,
+                    dur,
+                    now,
+                    cfg,
+                    &mut lifecycles,
+                    &mut ready_since,
+                    &mut router,
+                    &mut migrations,
+                );
+                // wake everyone: migrations may have unblocked peers
+                process_inboxes(&mut instances, now, link_lat, link_bw, &mut heap, &mut seq);
+                for i in 0..instances.len() {
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                }
+            }
+
+            EvKind::TransferDone { src, dst, req } => {
+                // step 4: target holds the data; source releases resources
+                if let Some(pos) = instances[src]
+                    .queues
+                    .running
+                    .iter()
+                    .position(|r| r.spec.id == req)
+                {
+                    instances[src].queues.running.remove(pos);
+                }
+                instances[src].release_all(req);
+                if let Some(pull) = instances[dst].incoming.remove(&req.0) {
+                    let mut r = pull.req;
+                    r.migrating = false;
+                    if let Some(lc) = lifecycles.get_mut(&req.0) {
+                        lc.add_phase(pull.phase, now - pull.created);
+                    }
+                    ready_since.insert(req.0, now);
+                    instances[dst].queues.running.push(r);
+                }
+                process_inboxes(&mut instances, now, link_lat, link_bw, &mut heap, &mut seq);
+                for i in 0..instances.len() {
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                }
+            }
+        }
+    }
+
+    // collect metrics
+    let mut metrics = RunMetrics::default();
+    let mut unfinished = 0;
+    for (id, lc) in lifecycles {
+        if lc.finished_at.is_none() {
+            unfinished += 1;
+        }
+        metrics.insert(RequestId(id), lc);
+    }
+    SimResult { metrics, migrations, batches, unfinished }
+}
+
+/// Batch duration from the cost model: the LM stream (prefill chunks +
+/// decode tokens, genuinely fused kernels) and the vision stream (encode),
+/// combined per the multi-stream setting.
+fn batch_duration(batch: &Batch, cfg: &SimConfig) -> f64 {
+    let mut chunks: Vec<(usize, usize)> = Vec::new();
+    let mut dctx: Vec<usize> = Vec::new();
+    let mut imgs = 0usize;
+    for (_, w) in &batch.items {
+        match w {
+            TaskWork::PrefillChunk { ctx, tokens } => chunks.push((*ctx, *tokens)),
+            TaskWork::DecodeToken { ctx } => dctx.push(*ctx),
+            TaskWork::Encode { images } => imgs += images,
+            TaskWork::Migrate => {}
+        }
+    }
+    // fused LM iteration: weights read once across prefill chunks + decodes
+    let lm: Cost = iteration_cost(&cfg.model, &chunks, &dctx);
+    let vis: Cost = encode_cost(&cfg.model, imgs);
+    let mut streams: Vec<Cost> = Vec::new();
+    if lm.flops > 0.0 {
+        streams.push(lm);
+    }
+    if vis.flops > 0.0 {
+        streams.push(vis);
+    }
+    if streams.is_empty() {
+        return 0.0;
+    }
+    let kernel_time = if cfg.multistream {
+        parallel_time(&streams, &cfg.device)
+    } else {
+        sequential_time(&streams, &cfg.device)
+    };
+    kernel_time + cfg.engine_overhead
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_start(
+    instances: &mut [SimInstance],
+    iid: usize,
+    now: f64,
+    budgets: &Budgets,
+    cfg: &SimConfig,
+    heap: &mut BinaryHeap<Ev>,
+    seq: &mut u64,
+    batches: &mut usize,
+) {
+    if instances[iid].current.is_some() {
+        return;
+    }
+    // split-borrow: scheduler + queues + capacity checks live on the same
+    // instance; temporarily move the scheduler out.
+    let inst = &mut instances[iid];
+    let mut sched = std::mem::replace(&mut inst.sched, Box::new(NullSched));
+    let batch = {
+        let kv_free = inst.kv.free_blocks();
+        let img_free = inst.img.free_blocks();
+        let mask = inst.mask;
+        let kv_cache_has = |id: RequestId| inst.kv.has_request(id);
+        let _ = kv_cache_has; // (admission uses fresh needs below)
+        let mut kv_used = 0usize;
+        let mut img_used = 0usize;
+        let mut admit = |r: &ReqState| -> bool {
+            let kv_need = kv_blocks_for(kv_tokens_needed_mask(mask, r));
+            let img_need = img_blocks_needed_mask(mask, r);
+            if kv_used + kv_need <= kv_free && img_used + img_need <= img_free {
+                kv_used += kv_need;
+                img_used += img_need;
+                true
+            } else {
+                false
+            }
+        };
+        sched.build_batch(&mut inst.queues, budgets, &mut admit)
+    };
+    inst.sched = sched;
+
+    // reserve blocks for any running request not yet allocated
+    for i in 0..inst.queues.running.len() {
+        let r = inst.queues.running[i].clone();
+        inst.reserve(&r);
+    }
+
+    let has_compute = batch
+        .items
+        .iter()
+        .any(|(_, w)| !matches!(w, TaskWork::Migrate));
+    if !has_compute {
+        return;
+    }
+    let dur = batch_duration(&batch, cfg);
+    *batches += 1;
+    instances[iid].current = Some((batch, now));
+    *seq += 1;
+    heap.push(Ev { t: now + dur, seq: *seq, kind: EvKind::BatchDone(iid) });
+}
+
+fn kv_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
+    if !(mask.prefill || mask.decode) {
+        return 0;
+    }
+    r.spec.prefill_tokens() + if mask.decode { r.spec.output_tokens } else { 0 }
+}
+
+fn img_blocks_needed_mask(mask: StageMask, r: &ReqState) -> usize {
+    let consumes = mask.encode || (mask.prefill && r.spec.has_image() && r.prefill_remaining() > 0);
+    if consumes {
+        img_blocks_for(r.spec.image_tokens())
+    } else {
+        0
+    }
+}
+
+/// Apply a completed batch: advance request progress, record tokens,
+/// trigger migrations, finish requests.
+#[allow(clippy::too_many_arguments)]
+fn apply_batch(
+    instances: &mut Vec<SimInstance>,
+    iid: usize,
+    batch: &Batch,
+    started: f64,
+    dur: f64,
+    now: f64,
+    cfg: &SimConfig,
+    lifecycles: &mut HashMap<u64, Lifecycle>,
+    ready_since: &mut HashMap<u64, f64>,
+    router: &mut Router,
+    migrations: &mut usize,
+) {
+    let mut to_finish: Vec<RequestId> = Vec::new();
+    let mut to_migrate: Vec<(RequestId, Stage)> = Vec::new();
+
+    for (id, work) in &batch.items {
+        let mask = instances[iid].mask;
+        let Some(r) = instances[iid].queues.find_running(*id) else {
+            continue; // migrated away mid-flight (migrate items)
+        };
+        let lc = lifecycles.get_mut(&id.0).expect("lifecycle exists");
+        let rs = ready_since.get(&id.0).copied().unwrap_or(started);
+        match work {
+            TaskWork::Encode { images } => {
+                r.encoded_images += images;
+                lc.add_phase(Phase::EncodeQueue, (started - rs).max(0.0));
+                lc.add_phase(Phase::EncodeExec, dur);
+                ready_since.insert(id.0, now);
+                if r.encode_remaining() == 0 && !mask.prefill {
+                    to_migrate.push((*id, Stage::Prefill));
+                }
+            }
+            TaskWork::PrefillChunk { tokens, .. } => {
+                r.prefilled += tokens;
+                lc.add_phase(Phase::PrefillQueue, (started - rs).max(0.0));
+                lc.add_phase(Phase::PrefillExec, dur);
+                ready_since.insert(id.0, now);
+                if r.prefill_remaining() == 0 {
+                    // prefill emits the first output token
+                    r.decoded = 1;
+                    lc.record_token(now);
+                    // image embeddings consumed: free image cache
+                    let rid = *id;
+                    let has_img = instances[iid].img.has_request(rid);
+                    if has_img {
+                        instances[iid].img.free(rid).unwrap();
+                    }
+                    let r = instances[iid].queues.find_running(rid).unwrap();
+                    if r.finished() {
+                        to_finish.push(rid);
+                    } else if !mask.decode {
+                        to_migrate.push((rid, Stage::Decode));
+                    }
+                }
+            }
+            TaskWork::DecodeToken { .. } => {
+                r.decoded += 1;
+                lc.add_phase(Phase::DecodeQueue, (started - rs).max(0.0));
+                lc.add_phase(Phase::DecodeExec, dur);
+                lc.record_token(now);
+                ready_since.insert(id.0, now);
+                if r.finished() {
+                    to_finish.push(*id);
+                }
+            }
+            TaskWork::Migrate => {}
+        }
+    }
+
+    for id in to_finish {
+        if let Some(pos) = instances[iid].queues.running.iter().position(|r| r.spec.id == id) {
+            instances[iid].queues.running.remove(pos);
+        }
+        instances[iid].release_all(id);
+        if let Some(lc) = lifecycles.get_mut(&id.0) {
+            lc.finished_at = Some(now);
+        }
+    }
+
+    // paper §4.3 step 1: notify the target; it pulls when it has capacity
+    for (id, next_stage) in to_migrate {
+        let Some(r) = instances[iid].queues.find_running(id) else { continue };
+        r.migrating = true;
+        let snapshot = r.clone();
+        let phase = match next_stage {
+            Stage::Prefill => Phase::EpMigration,
+            _ => Phase::PdMigration,
+        };
+        let bytes = match next_stage {
+            // EP migration carries the image-token embeddings
+            Stage::Prefill => {
+                crate::costmodel::ops::image_payload_bytes(&cfg.model, snapshot.spec.image_tokens())
+            }
+            // PD migration carries the prefix KV cache
+            _ => crate::costmodel::ops::kv_payload_bytes(&cfg.model, snapshot.spec.prefill_tokens()),
+        };
+        let candidates: Vec<usize> = instances
+            .iter()
+            .filter(|inst| inst.id != iid && inst.mask.serves(next_stage))
+            .map(|inst| inst.id)
+            .collect();
+        let loads: Vec<f64> = candidates.iter().map(|&i| instances[i].load()).collect();
+        if let Some(pick) = router.pick(&loads) {
+            let dst = candidates[pick];
+            *migrations += 1;
+            instances[dst].inbox.push(PendingPull {
+                req: snapshot,
+                src: iid,
+                phase,
+                bytes,
+                created: now,
+            });
+        } else {
+            // nowhere to go (incomplete cluster): request is stuck; it will
+            // count as unfinished. Un-mark so we don't spin.
+            if let Some(r) = instances[iid].queues.find_running(id) {
+                r.migrating = false;
+            }
+        }
+    }
+}
+
+/// Admit pending pulls wherever capacity allows (§4.3 step 2) and schedule
+/// their transfers (step 3).
+fn process_inboxes(
+    instances: &mut [SimInstance],
+    now: f64,
+    link_lat: f64,
+    link_bw: f64,
+    heap: &mut BinaryHeap<Ev>,
+    seq: &mut u64,
+) {
+    for iid in 0..instances.len() {
+        let mut i = 0;
+        while i < instances[iid].inbox.len() {
+            let can = instances[iid].can_admit(&instances[iid].inbox[i].req);
+            if can {
+                let pull = instances[iid].inbox.remove(i);
+                let r = pull.req.clone();
+                instances[iid].reserve(&r);
+                let dur = link_lat + pull.bytes / link_bw;
+                *seq += 1;
+                heap.push(Ev {
+                    t: now + dur,
+                    seq: *seq,
+                    kind: EvKind::TransferDone { src: pull.src, dst: iid, req: r.spec.id },
+                });
+                instances[iid].incoming.insert(r.spec.id.0, pull);
+            } else {
+                i += 1; // blocked: backpressure (source keeps its blocks)
+            }
+        }
+    }
+}
+
+/// Placeholder scheduler used during the split-borrow swap.
+struct NullSched;
+impl Scheduler for NullSched {
+    fn build_batch(
+        &mut self,
+        _q: &mut Queues,
+        _b: &Budgets,
+        _a: &mut crate::scheduler::AdmitFn,
+    ) -> Batch {
+        Batch::default()
+    }
+    fn name(&self) -> &'static str {
+        "null"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, SloSpec};
+    use crate::scheduler::Policy;
+    use crate::simulator::ClusterSpec;
+    use crate::workload::{Dataset, PoissonGenerator};
+
+    fn run(cluster: &str, policy: Policy, rate: f64, n: usize) -> SimResult {
+        let model = ModelSpec::llava15_7b();
+        let slo = SloSpec::new(0.25, 0.04);
+        let cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse(cluster).unwrap(),
+            policy,
+            slo,
+        );
+        let gen = PoissonGenerator::new(Dataset::textcaps(), rate, 42);
+        let reqs = gen.generate(&model, n);
+        simulate(&cfg, &reqs)
+    }
+
+    #[test]
+    fn colocated_low_rate_finishes_everything() {
+        let res = run("8EPD", Policy::StageLevel, 4.0, 60);
+        assert_eq!(res.unfinished, 0, "all requests should finish");
+        assert_eq!(res.metrics.num_finished(), 60);
+        assert_eq!(res.migrations, 0, "colocated EPD never migrates");
+        assert!(res.metrics.ttft().mean() > 0.0);
+    }
+
+    #[test]
+    fn disaggregated_migrates_and_finishes() {
+        let res = run("1E3P4D", Policy::StageLevel, 4.0, 60);
+        assert_eq!(res.unfinished, 0);
+        // every image request migrates E->P and P->D
+        assert!(res.migrations >= 100, "migrations = {}", res.migrations);
+        let bd = res.metrics.phase_breakdown();
+        assert!(bd[Phase::EpMigration as usize] > 0.0);
+        assert!(bd[Phase::PdMigration as usize] > 0.0);
+    }
+
+    #[test]
+    fn token_latencies_monotone() {
+        let res = run("1E3P4D", Policy::StageLevel, 2.0, 40);
+        for lc in res.metrics.finished() {
+            let t = &lc.token_times;
+            assert!(t.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+            assert!(lc.ttft().unwrap() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn output_token_counts_exact() {
+        let model = ModelSpec::llava15_7b();
+        let cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("8EPD").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        let gen = PoissonGenerator::new(Dataset::textvqa(), 2.0, 7);
+        let reqs = gen.generate(&model, 30);
+        let res = simulate(&cfg, &reqs);
+        for spec in &reqs {
+            let lc = &res.metrics.lifecycles[&spec.id.0];
+            assert_eq!(
+                lc.token_times.len(),
+                spec.output_tokens,
+                "request {} should emit exactly its output budget",
+                spec.id
+            );
+        }
+    }
+
+    #[test]
+    fn overload_degrades_attainment() {
+        let lo = run("8EPD", Policy::StageLevel, 2.0, 60);
+        let hi = run("8EPD", Policy::StageLevel, 200.0, 120);
+        let slo = SloSpec::new(0.25, 0.04);
+        let a_lo = lo.metrics.slo_attainment(slo);
+        let a_hi = hi.metrics.slo_attainment(slo);
+        assert!(
+            a_lo > a_hi || (a_lo - a_hi).abs() < 1e-9,
+            "attainment must not improve under overload: lo={a_lo} hi={a_hi}"
+        );
+        assert!(a_lo > 0.8, "low rate should mostly meet SLO, got {a_lo}");
+    }
+
+    #[test]
+    fn stage_level_beats_prefill_first_on_tpot() {
+        // the Fig. 7 story: prefill-first stalls decodes -> worse tail TPOT.
+        // Single instance under real pressure so requests actually overlap.
+        let ours = run("1EPD", Policy::StageLevel, 6.0, 80);
+        let v0 = run("1EPD", Policy::PrefillFirst, 6.0, 80);
+        let t_ours = ours.metrics.tpot().p99();
+        let t_v0 = v0.metrics.tpot().p99();
+        assert!(
+            t_ours < t_v0,
+            "stage-level p99 TPOT {t_ours} should beat prefill-first {t_v0}"
+        );
+    }
+
+    #[test]
+    fn incomplete_cluster_strands_requests() {
+        // no prefill instance: image requests can never progress
+        let res = run("4E4D", Policy::StageLevel, 2.0, 10);
+        assert_eq!(res.metrics.num_finished(), 0);
+        assert_eq!(res.unfinished, 10);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run("1E3P4D", Policy::StageLevel, 3.0, 40);
+        let b = run("1E3P4D", Policy::StageLevel, 3.0, 40);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.migrations, b.migrations);
+        assert!((a.metrics.ttft().mean() - b.metrics.ttft().mean()).abs() < 1e-12);
+    }
+}

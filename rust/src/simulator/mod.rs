@@ -1,0 +1,272 @@
+//! Roofline-calibrated discrete-event simulator of a HydraInfer cluster.
+//!
+//! This is the experiment substrate standing in for the paper's 8×H800
+//! node (see DESIGN.md §2): instances execute batches whose duration comes
+//! from the analytic cost model (`costmodel`), requests migrate between
+//! instances over a modeled interconnect using the paper's 4-step
+//! pull-based protocol, and every scheduling decision — Algorithm 1 or a
+//! baseline policy — runs the *actual* scheduler implementations from
+//! `crate::scheduler`. All of Figs. 7 and 10–14 regenerate from here.
+
+pub mod engine;
+
+pub use engine::{simulate, SimResult};
+
+use crate::config::{DeviceSpec, ModelSpec, SloSpec};
+use crate::scheduler::{Policy, StageMask};
+use crate::util::ceil_div;
+
+/// KV cache block size in tokens (matches the paper's setup, §5.1).
+pub const KV_BLOCK: usize = 16;
+/// Image cache block size in image tokens (paper: 576 — one LLaVA image).
+pub const IMG_BLOCK: usize = 576;
+
+/// Cluster layout: instance groups, e.g. `[(E,1), (P,3), (D,4)]` = "1E3P4D".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub groups: Vec<(StageMask, usize)>,
+}
+
+impl ClusterSpec {
+    pub fn new(groups: Vec<(StageMask, usize)>) -> Self {
+        ClusterSpec { groups }
+    }
+
+    /// Total instances (one GPU each).
+    pub fn num_instances(&self) -> usize {
+        self.groups.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Expand into one mask per instance.
+    pub fn instance_masks(&self) -> Vec<StageMask> {
+        let mut v = Vec::new();
+        for &(mask, n) in &self.groups {
+            for _ in 0..n {
+                v.push(mask);
+            }
+        }
+        v
+    }
+
+    /// Label like "1E3P4D" / "2EP6D" / "8EPD".
+    pub fn label(&self) -> String {
+        self.groups
+            .iter()
+            .map(|(m, n)| format!("{n}{}", m.label()))
+            .collect::<Vec<_>>()
+            .join("")
+    }
+
+    /// Parse "1E3P4D", "2EP6D", "8EPD", "1ED7P"...
+    pub fn parse(s: &str) -> anyhow::Result<ClusterSpec> {
+        let bytes = s.as_bytes();
+        let mut groups = Vec::new();
+        let mut i = 0;
+        while i < bytes.len() {
+            let start = i;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                i += 1;
+            }
+            if i == start {
+                anyhow::bail!("expected a count at `{}` in `{s}`", &s[i..]);
+            }
+            let n: usize = s[start..i].parse()?;
+            let lstart = i;
+            while i < bytes.len() && matches!(bytes[i], b'E' | b'P' | b'D') {
+                i += 1;
+            }
+            if i == lstart {
+                anyhow::bail!("expected stage letters at `{}` in `{s}`", &s[i..]);
+            }
+            let letters = &s[lstart..i];
+            let mask = StageMask {
+                encode: letters.contains('E'),
+                prefill: letters.contains('P'),
+                decode: letters.contains('D'),
+            };
+            if n == 0 {
+                anyhow::bail!("zero-count group in `{s}`");
+            }
+            groups.push((mask, n));
+        }
+        if groups.is_empty() {
+            anyhow::bail!("empty cluster spec");
+        }
+        Ok(ClusterSpec { groups })
+    }
+
+    /// Does the cluster cover all three stages?
+    pub fn complete(&self) -> bool {
+        let masks = self.instance_masks();
+        masks.iter().any(|m| m.encode)
+            && masks.iter().any(|m| m.prefill)
+            && masks.iter().any(|m| m.decode)
+    }
+}
+
+/// Interconnect backend for cache migration (paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferBackend {
+    /// CUDA-IPC-style handles: lowest latency, intra-node only.
+    CudaIpc,
+    /// NCCL: higher latency floor, intra- and inter-node.
+    Nccl,
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub model: ModelSpec,
+    pub device: DeviceSpec,
+    pub cluster: ClusterSpec,
+    pub policy: Policy,
+    /// SLO used for budget profiling (Alg. 1 line 1–2) and attainment.
+    pub slo: SloSpec,
+    /// Vision/language multi-stream colocation (ours: on; baselines: off).
+    pub multistream: bool,
+    pub backend: TransferBackend,
+    /// Simulation horizon, seconds.
+    pub horizon: f64,
+    /// Router seed.
+    pub seed: u64,
+    /// Per-scheduling-iteration engine overhead, seconds. The paper's
+    /// testbed runs Python engines in eager mode with CUDA graphs off
+    /// (§5.1), so every iteration pays ~20ms of scheduler + launch CPU
+    /// time on top of kernel time — this is what makes the TPOT SLO bind
+    /// and scheduling policy matter. Applies to ALL engines (HydraInfer
+    /// itself is a Python engine in the paper).
+    pub engine_overhead: f64,
+}
+
+impl SimConfig {
+    pub fn new(model: ModelSpec, cluster: ClusterSpec, policy: Policy, slo: SloSpec) -> Self {
+        SimConfig {
+            model,
+            device: DeviceSpec::h800(),
+            cluster,
+            policy,
+            slo,
+            multistream: policy == Policy::StageLevel,
+            backend: TransferBackend::CudaIpc,
+            horizon: 600.0,
+            seed: 0,
+            engine_overhead: 0.020,
+        }
+    }
+
+    /// Migration link parameters (latency floor, bandwidth).
+    pub fn link(&self) -> (f64, f64) {
+        match self.backend {
+            TransferBackend::CudaIpc => (self.device.ipc_latency, self.device.nvlink_bw),
+            TransferBackend::Nccl => (self.device.nccl_latency, self.device.nvlink_bw),
+        }
+    }
+}
+
+/// Per-instance cache capacity in blocks, derived from the HBM budget and
+/// which models the instance loads (paper §3.3: encode nodes skip the LM
+/// and KV cache entirely, so they support far more concurrent images).
+pub fn cache_blocks(model: &ModelSpec, device: &DeviceSpec, mask: StageMask) -> (usize, usize) {
+    let mut weights = 0.0;
+    if mask.encode {
+        weights += model.vision_params() as f64 * model.dtype_bytes as f64;
+    }
+    if mask.prefill || mask.decode {
+        weights += model.lm_params() as f64 * model.dtype_bytes as f64;
+    }
+    let usable = (device.hbm_capacity - weights).max(0.0) * 0.9; // activations margin
+
+    let kv_block_bytes =
+        (2 * model.lm.layers * KV_BLOCK * model.lm.kv_hidden() * model.dtype_bytes) as f64;
+    let img_block_bytes = (IMG_BLOCK * model.lm.hidden * model.dtype_bytes) as f64;
+
+    let needs_kv = mask.prefill || mask.decode;
+    let needs_img = mask.encode || mask.prefill;
+    match (needs_kv, needs_img) {
+        (true, true) => {
+            let kv = (usable * 0.85 / kv_block_bytes) as usize;
+            let img = (usable * 0.15 / img_block_bytes) as usize;
+            (kv.max(1), img.max(1))
+        }
+        (true, false) => (((usable / kv_block_bytes) as usize).max(1), 0),
+        (false, true) => (0, ((usable / img_block_bytes) as usize).max(1)),
+        (false, false) => (0, 0),
+    }
+}
+
+/// Image-cache blocks a request occupies.
+pub fn img_blocks_for(img_tokens: usize) -> usize {
+    ceil_div(img_tokens, IMG_BLOCK)
+}
+
+/// KV-cache blocks for `tokens` of context.
+pub fn kv_blocks_for(tokens: usize) -> usize {
+    ceil_div(tokens, KV_BLOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["1E3P4D", "2EP6D", "8EPD", "1ED7P", "4E4D"] {
+            let c = ClusterSpec::parse(s).unwrap();
+            assert_eq!(c.label(), s);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ClusterSpec::parse("").is_err());
+        assert!(ClusterSpec::parse("E3P").is_err());
+        assert!(ClusterSpec::parse("3X").is_err());
+        assert!(ClusterSpec::parse("0E1P1D").is_err());
+    }
+
+    #[test]
+    fn completeness() {
+        assert!(ClusterSpec::parse("1E3P4D").unwrap().complete());
+        assert!(ClusterSpec::parse("8EPD").unwrap().complete());
+        assert!(!ClusterSpec::parse("4E4D").unwrap().complete());
+    }
+
+    #[test]
+    fn num_instances_sums_groups() {
+        assert_eq!(ClusterSpec::parse("1E3P4D").unwrap().num_instances(), 8);
+        assert_eq!(ClusterSpec::parse("8EPD").unwrap().num_instances(), 8);
+    }
+
+    #[test]
+    fn encode_only_instances_fit_more_images() {
+        // §3.3: E nodes don't load the LM or hold KV -> far more image blocks
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let (_, img_e) = cache_blocks(&m, &d, StageMask::E);
+        let (_, img_epd) = cache_blocks(&m, &d, StageMask::EPD);
+        assert!(img_e > 4 * img_epd, "E={img_e} EPD={img_epd}");
+        let (kv_d, img_d) = cache_blocks(&m, &d, StageMask::D);
+        assert_eq!(img_d, 0);
+        assert!(kv_d > 1000, "D kv blocks = {kv_d}");
+    }
+
+    #[test]
+    fn block_math() {
+        assert_eq!(img_blocks_for(576), 1);
+        assert_eq!(img_blocks_for(577), 2);
+        assert_eq!(img_blocks_for(2880), 5); // LLaVA-NeXT max
+        assert_eq!(kv_blocks_for(0), 0);
+        assert_eq!(kv_blocks_for(17), 2);
+    }
+
+    #[test]
+    fn link_latency_orders() {
+        let m = ModelSpec::llava15_7b();
+        let c = ClusterSpec::parse("8EPD").unwrap();
+        let mut cfg = SimConfig::new(m, c, Policy::StageLevel, SloSpec::new(0.25, 0.04));
+        let (ipc_lat, _) = cfg.link();
+        cfg.backend = TransferBackend::Nccl;
+        let (nccl_lat, _) = cfg.link();
+        assert!(ipc_lat < nccl_lat);
+    }
+}

@@ -1,0 +1,239 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` runs a property over N seeded-random cases; on failure it
+//! re-runs a bounded shrink loop (halving integer magnitudes / truncating
+//! vectors) and reports the smallest failing case it found. Generators are
+//! plain closures over [`Rng`], composed ad hoc at the call site.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC0FFEE, max_shrink_iters: 200 }
+    }
+}
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate smaller values, in decreasing preference order.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        match *self {
+            0 => vec![],
+            1 => vec![0],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        match *self {
+            0 => vec![],
+            1 => vec![0],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec()); // first half
+            out.push(self[1..].to_vec()); // drop head
+            out.push(self[..self.len() - 1].to_vec()); // drop tail
+            // shrink one element
+            for (i, x) in self.iter().enumerate() {
+                for smaller in x.shrink().into_iter().take(1) {
+                    let mut v = self.clone();
+                    v[i] = smaller;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone(), self.3.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone(), self.3.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c, self.3.clone())),
+        );
+        out.extend(
+            self.3
+                .shrink()
+                .into_iter()
+                .map(|d| (self.0.clone(), self.1.clone(), self.2.clone(), d)),
+        );
+        out
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn from `gen`. Panics with the
+/// smallest failing input found.
+pub fn forall<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                for cand in best.shrink() {
+                    iters += 1;
+                    if iters > cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}): {best_msg}\n  minimal input: {best:?}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: forall with default config.
+pub fn check<T, G, P>(gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    forall(Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0usize;
+        forall(
+            Config { cases: 50, ..Default::default() },
+            |rng| rng.below(100),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 10")]
+    fn shrinks_to_boundary() {
+        // fails for x >= 10 -> shrinker should land exactly on 10
+        check(
+            |rng| rng.below(1000),
+            |&x| {
+                if x < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn vec_property_failure_panics() {
+        check(
+            |rng| {
+                let n = rng.below(20);
+                (0..n).map(|_| rng.below(50)).collect::<Vec<usize>>()
+            },
+            |v| {
+                if v.len() < 5 {
+                    Ok(())
+                } else {
+                    Err("long vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t: (usize, usize) = (4, 6);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|&(a, _)| a < 4));
+        assert!(shrunk.iter().any(|&(_, b)| b < 6));
+    }
+}

@@ -1,0 +1,102 @@
+//! Byte-level tokenizer + chat template.
+//!
+//! The tiny VLM's vocabulary is 256 byte tokens + specials, matching
+//! `python/compile/model.py::CFG` (BOS=256, EOS=257, IMG=258; vocab padded
+//! to 272). Byte-level means lossless round-trips with zero external vocab
+//! files — the right substrate for a reproduction whose experiments are
+//! about *scheduling*, not language quality.
+//!
+//! The chat template mirrors the paper's evaluation setup: every engine
+//! under comparison must see the same prompt bytes (§5.1 "All inference
+//! engines use the same chat template").
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const IMG: u32 = 258;
+pub const VOCAB: usize = 272;
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    /// Encode UTF-8 text to byte tokens (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    /// Decode tokens back to text; specials are dropped, invalid UTF-8
+    /// replaced (decode output is advisory — sampling over random weights).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Apply the chat template used by all engines in the evaluation:
+    /// `BOS [IMG] USER: <prompt> ASSISTANT:`; the IMG sentinel marks where
+    /// image embeddings splice in (positions [0, T_IMG) after BOS in the
+    /// multimodal prefill convention).
+    pub fn apply_chat_template(&self, prompt: &str, has_image: bool) -> Vec<u32> {
+        let mut out = vec![BOS];
+        if has_image {
+            out.push(IMG);
+        }
+        out.extend(self.encode("USER: "));
+        out.extend(self.encode(prompt));
+        out.extend(self.encode(" ASSISTANT:"));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new();
+        let toks = t.encode("hello, world");
+        assert_eq!(t.decode(&toks), "hello, world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::new();
+        let s = "café ✓ 多模态";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        let t = Tokenizer::new();
+        for tok in t.apply_chat_template("what is in the image? ✓", true) {
+            assert!((tok as usize) < VOCAB, "token {tok} out of vocab");
+        }
+    }
+
+    #[test]
+    fn template_structure() {
+        let t = Tokenizer::new();
+        let mm = t.apply_chat_template("q", true);
+        let txt = t.apply_chat_template("q", false);
+        assert_eq!(mm[0], BOS);
+        assert_eq!(mm[1], IMG);
+        assert_eq!(txt[0], BOS);
+        assert_ne!(txt[1], IMG);
+        assert_eq!(mm.len(), txt.len() + 1);
+    }
+
+    #[test]
+    fn decode_drops_specials() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&[BOS, b'h' as u32, b'i' as u32, EOS]), "hi");
+    }
+}

@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `cmd subcommand --flag value --bool-flag positional` with typed
+//! accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare `--flags`,
+/// and positional args.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `bool_flags` lists flag names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        args.flags.push(name.to_string());
+                    } else {
+                        args.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str_opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{s}`")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{s}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_and_options() {
+        let a = Args::parse(v(&["serve", "--port", "8080", "--verbose"]), &["verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.str_opt("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parse_eq_form() {
+        let a = Args::parse(v(&["plan", "--rate=3.5"]), &[]);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(v(&["x", "--dry-run"]), &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = Args::parse(v(&["run", "file1", "file2"]), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(v(&["x", "--n", "abc"]), &[]);
+        assert!(a.usize_or("n", 1).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(v(&["x", "--a", "--b", "val"]), &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.str_opt("b"), Some("val"));
+    }
+}

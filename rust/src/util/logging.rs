@@ -1,0 +1,95 @@
+//! Leveled stderr logger with a process-global verbosity switch.
+//!
+//! Deliberately minimal: serving-path code logs through the macros below;
+//! benches/examples flip the level via `set_level`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since process start (monotonic), for log timestamps.
+pub fn uptime() -> f64 {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{:10.4}] {} {}: {}", uptime(), tag, module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn uptime_monotonic() {
+        let a = uptime();
+        let b = uptime();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,47 @@
+//! Small self-contained substrates the coordinator is built on.
+//!
+//! The offline build environment ships only the `xla` crate closure, so the
+//! usual ecosystem pieces (serde, clap, rand, rayon, criterion) are
+//! re-implemented here at the scale this project needs. Each submodule is
+//! independently unit-tested.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Integer ceiling division (used throughout block/page math).
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 16), 0);
+        assert_eq!(ceil_div(1, 16), 1);
+        assert_eq!(ceil_div(16, 16), 1);
+        assert_eq!(ceil_div(17, 16), 2);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(5, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+}

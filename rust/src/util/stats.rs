@@ -1,0 +1,171 @@
+//! Latency statistics: online accumulators + exact percentiles.
+//!
+//! Serving metrics (TTFT, TPOT, breakdowns) are collected into `Summary`s;
+//! percentile queries sort a copy (sample counts here are small enough that
+//! exactness beats a sketch).
+
+/// A collection of f64 samples with summary queries.
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile via the nearest-rank method, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.saturating_sub(1).min(v.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fraction of samples <= threshold (SLO attainment primitive).
+    pub fn frac_below(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().filter(|&&x| x <= threshold).count() as f64
+            / self.samples.len() as f64
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Fixed-bucket histogram (for breakdown reports).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub edges: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    /// `edges` must be ascending; bucket i is [edges[i], edges[i+1]).
+    pub fn new(edges: Vec<f64>) -> Self {
+        assert!(edges.windows(2).all(|w| w[0] < w[1]), "edges must ascend");
+        let n = edges.len().saturating_sub(1);
+        Histogram { edges, counts: vec![0; n], overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        for i in 0..self.counts.len() {
+            if x >= self.edges[i] && x < self.edges[i + 1] {
+                self.counts[i] += 1;
+                return;
+            }
+        }
+        self.overflow += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s = Summary::new();
+        s.extend(&(1..=100).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p90(), 90.0);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Summary::new();
+        s.add(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn frac_below() {
+        let mut s = Summary::new();
+        s.extend(&[0.01, 0.02, 0.05, 0.2]);
+        assert_eq!(s.frac_below(0.05), 0.75);
+        assert_eq!(s.frac_below(10.0), 1.0);
+        assert_eq!(s.frac_below(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(vec![0.0, 1.0, 2.0]);
+        h.add(0.5);
+        h.add(1.5);
+        h.add(1.99);
+        h.add(5.0);
+        assert_eq!(h.counts, vec![1, 2]);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 4);
+    }
+}

@@ -1,0 +1,104 @@
+//! Fixed-size thread pool (the Request Processor's preprocessing pool,
+//! paper §4.1) — tokenization/image work is offloaded here so the
+//! autoregressive loop never blocks on CPU-bound preprocessing.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple work-stealing-free pool: one shared queue, N workers.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("hydra-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Submit a job; never blocks.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("pool workers alive");
+    }
+
+    /// Run `f` on the pool and return a handle to its result.
+    pub fn run<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(
+        &self,
+        f: F,
+    ) -> Receiver<T> {
+        let (tx, rx) = channel();
+        self.submit(move || {
+            let _ = tx.send(f());
+        });
+        rx
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_returns_result() {
+        let pool = ThreadPool::new(2);
+        let rx = pool.run(|| 6 * 7);
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn parallel_results_ordered_by_handle() {
+        let pool = ThreadPool::new(3);
+        let handles: Vec<_> = (0..10).map(|i| pool.run(move || i * i)).collect();
+        let results: Vec<usize> = handles.into_iter().map(|h| h.recv().unwrap()).collect();
+        assert_eq!(results, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+}

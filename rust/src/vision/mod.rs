@@ -1,0 +1,164 @@
+//! Image preprocessing substrate + tokens-per-image rules.
+//!
+//! Two jobs:
+//! 1. The *real path*: produce normalized pixel tensors for the tiny VLM's
+//!    encode artifacts (synthetic image generation, nearest-neighbor
+//!    resize, CHW->HWC-free float normalization).
+//! 2. The *simulation path*: the per-model tokens-per-image calculators
+//!    the paper's workloads depend on (LLaVA-1.5 fixed 576; LLaVA-NeXT
+//!    AnyRes tiling; Qwen2-VL dynamic-resolution patch merging).
+
+use crate::util::rng::Rng;
+
+/// A raw synthetic image: u8 RGB, row-major.
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>, // len = w*h*3
+}
+
+impl Image {
+    /// Deterministic synthetic image (smooth gradient + seeded noise) —
+    /// stands in for dataset images; exercises the same preprocessing path.
+    pub fn synthetic(width: usize, height: usize, seed: u64) -> Image {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(width * height * 3);
+        for y in 0..height {
+            for x in 0..width {
+                let fx = x as f64 / width.max(1) as f64;
+                let fy = y as f64 / height.max(1) as f64;
+                let noise = rng.f64() * 32.0;
+                data.push((fx * 200.0 + noise) as u8);
+                data.push((fy * 200.0 + noise) as u8);
+                data.push(((fx + fy) * 100.0 + noise) as u8);
+            }
+        }
+        Image { width, height, data }
+    }
+
+    /// Nearest-neighbor resize (the CLIP-style preprocessing resize).
+    pub fn resize(&self, w: usize, h: usize) -> Image {
+        let mut data = Vec::with_capacity(w * h * 3);
+        for y in 0..h {
+            let sy = y * self.height / h;
+            for x in 0..w {
+                let sx = x * self.width / w;
+                let idx = (sy * self.width + sx) * 3;
+                data.extend_from_slice(&self.data[idx..idx + 3]);
+            }
+        }
+        Image { width: w, height: h, data }
+    }
+
+    /// Normalize to f32 HWC in [-1, 1] — the tensor layout the encode
+    /// artifact expects ([S, S, C]).
+    pub fn normalize(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .map(|&b| b as f32 / 127.5 - 1.0)
+            .collect()
+    }
+
+    /// Full preprocessing: resize to the model's square input and normalize.
+    pub fn preprocess(&self, size: usize) -> Vec<f32> {
+        self.resize(size, size).normalize()
+    }
+}
+
+/// Tokens-per-image rules for the three evaluated model families (§5.1:
+/// "The number of tokens generated for the same image differs across these
+/// models, which in turn impacts the request load.").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImageTokenRule {
+    /// LLaVA-1.5: CLIP ViT-L/14 @ 336px -> fixed 576 tokens.
+    LlavaFixed { tokens: usize },
+    /// LLaVA-NeXT AnyRes: base 576 + up to 4 extra 336px tiles (resolution
+    /// dependent) -> 576 * (1 + tiles), tiles in 1..=4.
+    LlavaNextAnyRes { base: usize, max_tiles: usize },
+    /// Qwen2-VL dynamic resolution: 28px patches, 2x2 merged, clamped.
+    Qwen2Dynamic { patch: usize, merge: usize, min_tokens: usize, max_tokens: usize },
+}
+
+impl ImageTokenRule {
+    /// Tokens produced for an image of the given resolution.
+    pub fn tokens_for(&self, width: usize, height: usize) -> usize {
+        match *self {
+            ImageTokenRule::LlavaFixed { tokens } => tokens,
+            ImageTokenRule::LlavaNextAnyRes { base, max_tiles } => {
+                // AnyRes: number of 336px tiles needed to cover the image,
+                // clamped to the grid options {1x1 ... 2x2}.
+                let tiles_w = (width + 335) / 336;
+                let tiles_h = (height + 335) / 336;
+                let tiles = (tiles_w * tiles_h).clamp(1, max_tiles);
+                base * (1 + tiles)
+            }
+            ImageTokenRule::Qwen2Dynamic { patch, merge, min_tokens, max_tokens } => {
+                let pw = (width + patch - 1) / patch;
+                let ph = (height + patch - 1) / patch;
+                ((pw * ph) / (merge * merge)).clamp(min_tokens, max_tokens)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_deterministic() {
+        let a = Image::synthetic(16, 16, 7);
+        let b = Image::synthetic(16, 16, 7);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, Image::synthetic(16, 16, 8).data);
+    }
+
+    #[test]
+    fn resize_dimensions() {
+        let img = Image::synthetic(64, 48, 0).resize(32, 32);
+        assert_eq!((img.width, img.height), (32, 32));
+        assert_eq!(img.data.len(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn normalize_range() {
+        let v = Image::synthetic(8, 8, 1).normalize();
+        assert_eq!(v.len(), 8 * 8 * 3);
+        assert!(v.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn preprocess_shape() {
+        let v = Image::synthetic(100, 37, 2).preprocess(32);
+        assert_eq!(v.len(), 32 * 32 * 3);
+    }
+
+    #[test]
+    fn llava_fixed_tokens() {
+        let r = ImageTokenRule::LlavaFixed { tokens: 576 };
+        assert_eq!(r.tokens_for(336, 336), 576);
+        assert_eq!(r.tokens_for(1920, 1080), 576);
+    }
+
+    #[test]
+    fn llava_next_scales_with_resolution() {
+        let r = ImageTokenRule::LlavaNextAnyRes { base: 576, max_tiles: 4 };
+        assert_eq!(r.tokens_for(336, 336), 576 * 2); // 1 tile + base
+        assert_eq!(r.tokens_for(672, 672), 576 * 5); // 4 tiles + base
+        assert_eq!(r.tokens_for(4000, 4000), 576 * 5); // clamped
+    }
+
+    #[test]
+    fn qwen2_dynamic_clamps() {
+        let r = ImageTokenRule::Qwen2Dynamic {
+            patch: 28,
+            merge: 2,
+            min_tokens: 4,
+            max_tokens: 1280,
+        };
+        assert_eq!(r.tokens_for(28, 28), 4); // clamped up
+        assert_eq!(r.tokens_for(336, 336), 36); // (12*12)/4
+        assert_eq!(r.tokens_for(10000, 10000), 1280); // clamped down
+    }
+}

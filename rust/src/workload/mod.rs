@@ -1,0 +1,263 @@
+//! Workload models: the five evaluation datasets as stage-workload
+//! distributions + Poisson arrival generation (paper §5.1).
+//!
+//! The paper reduces each dataset to its stage workload (it fixes output
+//! lengths via `ignore_eos` so every engine sees identical load), so the
+//! experiment-relevant content of MME/POPE/TextCaps/TextVQA/VizWiz is the
+//! joint distribution of (images, prompt tokens, output tokens). The
+//! parameters below are fitted to the dataset descriptions and the
+//! LLaVA-NeXT workload profile of Fig. 9: perception benchmarks (MME,
+//! POPE) have short prompts and 1–5 token answers; captioning (TextCaps)
+//! has tiny prompts and long outputs; VQA datasets sit between.
+
+pub mod trace;
+
+pub use trace::Trace;
+
+use crate::config::ModelSpec;
+use crate::core::{RequestId, RequestSpec};
+use crate::util::rng::Rng;
+
+/// A clamped lognormal over token counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenDist {
+    pub mu: f64,
+    pub sigma: f64,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl TokenDist {
+    pub fn new(mu: f64, sigma: f64, min: usize, max: usize) -> Self {
+        TokenDist { mu, sigma, min, max }
+    }
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        (rng.lognormal(self.mu, self.sigma).round() as usize).clamp(self.min, self.max)
+    }
+    /// Mean of the clamped distribution, estimated analytically (unclamped
+    /// lognormal mean, then clamped) — good enough for load estimates.
+    pub fn mean_estimate(&self) -> f64 {
+        (self.mu + self.sigma * self.sigma / 2.0)
+            .exp()
+            .clamp(self.min as f64, self.max as f64)
+    }
+}
+
+/// A dataset = distributions over the three stage workloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub name: &'static str,
+    /// Probability a request carries an image (all five datasets are
+    /// image-centric; kept configurable for mixed workloads).
+    pub image_prob: f64,
+    pub prompt: TokenDist,
+    pub output: TokenDist,
+}
+
+impl Dataset {
+    /// Image captioning with reading comprehension: tiny prompt, long output
+    /// (the decode-heaviest of the five; captions with OCR content run to
+    /// a hundred-odd tokens).
+    pub fn textcaps() -> Dataset {
+        Dataset {
+            name: "textcaps",
+            image_prob: 1.0,
+            prompt: TokenDist::new(2.7, 0.3, 8, 64),    // ~15 tokens
+            output: TokenDist::new(4.4, 0.45, 16, 256), // ~90 tokens
+        }
+    }
+    /// Object-hallucination probing: short prompt, yes/no answers.
+    pub fn pope() -> Dataset {
+        Dataset {
+            name: "pope",
+            image_prob: 1.0,
+            prompt: TokenDist::new(3.4, 0.25, 12, 64),   // ~30 tokens
+            output: TokenDist::new(0.5, 0.5, 1, 8),      // ~2 tokens
+        }
+    }
+    /// Perception/cognition benchmark: medium prompt, very short answers.
+    pub fn mme() -> Dataset {
+        Dataset {
+            name: "mme",
+            image_prob: 1.0,
+            prompt: TokenDist::new(3.9, 0.3, 16, 128),   // ~50 tokens
+            output: TokenDist::new(1.0, 0.5, 1, 12),     // ~3 tokens
+        }
+    }
+    /// Text-in-image VQA: medium prompt, short reasoning answers.
+    pub fn textvqa() -> Dataset {
+        Dataset {
+            name: "textvqa",
+            image_prob: 1.0,
+            prompt: TokenDist::new(3.7, 0.3, 12, 96),    // ~40 tokens
+            output: TokenDist::new(2.4, 0.5, 2, 48),     // ~12 tokens
+        }
+    }
+    /// Photos by blind users + questions: noisy prompts, short answers.
+    pub fn vizwiz() -> Dataset {
+        Dataset {
+            name: "vizwiz",
+            image_prob: 1.0,
+            prompt: TokenDist::new(3.55, 0.4, 8, 96),    // ~35 tokens
+            output: TokenDist::new(2.1, 0.6, 1, 48),     // ~10 tokens
+        }
+    }
+
+    pub const ALL_NAMES: [&'static str; 5] =
+        ["textcaps", "pope", "mme", "textvqa", "vizwiz"];
+
+    pub fn by_name(name: &str) -> Option<Dataset> {
+        match name {
+            "textcaps" => Some(Dataset::textcaps()),
+            "pope" => Some(Dataset::pope()),
+            "mme" => Some(Dataset::mme()),
+            "textvqa" => Some(Dataset::textvqa()),
+            "vizwiz" => Some(Dataset::vizwiz()),
+            _ => None,
+        }
+    }
+
+    /// Sample one request's workload (arrival filled by the generator).
+    pub fn sample(&self, model: &ModelSpec, id: u64, rng: &mut Rng) -> RequestSpec {
+        let has_image = rng.f64() < self.image_prob;
+        RequestSpec {
+            id: RequestId(id),
+            arrival: 0.0,
+            num_images: usize::from(has_image),
+            tokens_per_image: model.tokens_per_image(),
+            prompt_tokens: self.prompt.sample(rng),
+            output_tokens: self.output.sample(rng).max(1),
+        }
+    }
+}
+
+/// Poisson-arrival workload generator (paper §5.2: "we simulate request
+/// arrivals using a Poisson process at a fixed rate").
+#[derive(Debug, Clone)]
+pub struct PoissonGenerator {
+    pub dataset: Dataset,
+    pub rate: f64, // requests per second
+    pub seed: u64,
+}
+
+impl PoissonGenerator {
+    pub fn new(dataset: Dataset, rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0);
+        PoissonGenerator { dataset, rate, seed }
+    }
+
+    /// Generate `n` requests with exponential inter-arrival times.
+    pub fn generate(&self, model: &ModelSpec, n: usize) -> Vec<RequestSpec> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        (0..n)
+            .map(|i| {
+                t += rng.exp(self.rate);
+                let mut spec = self.dataset.sample(model, i as u64, &mut rng);
+                spec.arrival = t;
+                spec
+            })
+            .collect()
+    }
+}
+
+/// Average per-request stage workload of a dataset under a model — the
+/// Fig. 9 summary rows.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSummary {
+    pub avg_image_tokens: f64,
+    pub avg_prompt_tokens: f64,
+    pub avg_prefill_tokens: f64,
+    pub avg_output_tokens: f64,
+}
+
+pub fn summarize(specs: &[RequestSpec]) -> WorkloadSummary {
+    let n = specs.len().max(1) as f64;
+    WorkloadSummary {
+        avg_image_tokens: specs.iter().map(|s| s.image_tokens() as f64).sum::<f64>() / n,
+        avg_prompt_tokens: specs.iter().map(|s| s.prompt_tokens as f64).sum::<f64>() / n,
+        avg_prefill_tokens: specs.iter().map(|s| s.prefill_tokens() as f64).sum::<f64>() / n,
+        avg_output_tokens: specs.iter().map(|s| s.output_tokens as f64).sum::<f64>() / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let m = ModelSpec::llava15_7b();
+        let g = PoissonGenerator::new(Dataset::textcaps(), 4.0, 7);
+        let a = g.generate(&m, 50);
+        let b = g.generate(&m, 50);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_correct() {
+        let m = ModelSpec::llava15_7b();
+        let g = PoissonGenerator::new(Dataset::pope(), 8.0, 3);
+        let reqs = g.generate(&m, 2000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = reqs.last().unwrap().arrival;
+        let rate = 2000.0 / span;
+        assert!((rate - 8.0).abs() < 0.8, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn dataset_workload_shapes_match_fig9() {
+        // captioning decodes much more than perception benchmarks
+        let m = ModelSpec::llava_next_7b();
+        let sample = |d: Dataset| {
+            let g = PoissonGenerator::new(d, 1.0, 11);
+            summarize(&g.generate(&m, 1000))
+        };
+        let caps = sample(Dataset::textcaps());
+        let pope = sample(Dataset::pope());
+        let mme = sample(Dataset::mme());
+        assert!(caps.avg_output_tokens > 3.0 * pope.avg_output_tokens);
+        assert!(caps.avg_output_tokens > 3.0 * mme.avg_output_tokens);
+        // all datasets are image-dominated in prefill for LLaVA-NeXT
+        assert!(caps.avg_image_tokens > caps.avg_prompt_tokens);
+        // MME prompts are longer than TextCaps prompts
+        assert!(mme.avg_prompt_tokens > caps.avg_prompt_tokens);
+    }
+
+    #[test]
+    fn tokens_per_image_follows_model() {
+        let g = PoissonGenerator::new(Dataset::textvqa(), 1.0, 0);
+        let m15 = ModelSpec::llava15_7b();
+        let mnext = ModelSpec::llava_next_7b();
+        let r15 = g.generate(&m15, 10);
+        let rnext = g.generate(&mnext, 10);
+        assert!(r15.iter().all(|r| r.tokens_per_image == 576));
+        assert!(rnext.iter().all(|r| r.tokens_per_image > 576));
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in Dataset::ALL_NAMES {
+            assert_eq!(Dataset::by_name(n).unwrap().name, n);
+        }
+        assert!(Dataset::by_name("imagenet").is_none());
+    }
+
+    #[test]
+    fn token_dist_respects_bounds() {
+        let d = TokenDist::new(3.0, 1.0, 5, 50);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = d.sample(&mut rng);
+            assert!((5..=50).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Trace record/replay: persist a generated workload to JSON so the same
+//! request sequence can be replayed across engines/configs (the paper's
+//! methodology: identical load for every engine under comparison).
+
+use crate::core::{RequestId, RequestSpec};
+use crate::util::json::{parse, Json};
+
+/// A recorded workload trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub requests: Vec<RequestSpec>,
+}
+
+impl Trace {
+    pub fn new(requests: Vec<RequestSpec>) -> Self {
+        Trace { requests }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.requests.iter().map(|r| {
+            Json::obj(vec![
+                ("id", Json::num(r.id.0 as f64)),
+                ("arrival", Json::num(r.arrival)),
+                ("images", Json::num(r.num_images as f64)),
+                ("tokens_per_image", Json::num(r.tokens_per_image as f64)),
+                ("prompt", Json::num(r.prompt_tokens as f64)),
+                ("output", Json::num(r.output_tokens as f64)),
+            ])
+        }))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("trace must be an array"))?;
+        let mut requests = Vec::with_capacity(arr.len());
+        for item in arr {
+            requests.push(RequestSpec {
+                id: RequestId(item.req_usize("id")? as u64),
+                arrival: item.req_f64("arrival")?,
+                num_images: item.req_usize("images")?,
+                tokens_per_image: item.req_usize("tokens_per_image")?,
+                prompt_tokens: item.req_usize("prompt")?,
+                output_tokens: item.req_usize("output")?,
+            });
+        }
+        Ok(Trace { requests })
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        Trace::from_json(&parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::workload::{Dataset, PoissonGenerator};
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ModelSpec::llava15_7b();
+        let g = PoissonGenerator::new(Dataset::mme(), 2.0, 5);
+        let t = Trace::new(g.generate(&m, 25));
+        let j = t.to_json().to_string();
+        let t2 = Trace::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(t.requests.len(), t2.requests.len());
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = ModelSpec::llava15_7b();
+        let g = PoissonGenerator::new(Dataset::vizwiz(), 1.0, 9);
+        let t = Trace::new(g.generate(&m, 10));
+        let path = std::env::temp_dir().join("hydra_trace_test.json");
+        let path = path.to_str().unwrap();
+        t.save(path).unwrap();
+        let t2 = Trace::load(path).unwrap();
+        assert_eq!(t.requests.len(), t2.requests.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::from_json(&parse("{}").unwrap()).is_err());
+        assert!(Trace::from_json(&parse("[{\"id\": 1}]").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! HTTP API integration over a real cluster (skips without artifacts).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use hydrainfer::api::ApiServer;
+use hydrainfer::instance::RealCluster;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::ClusterSpec;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn get(addr: &str, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn api_serves_completions_and_errors() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cluster = ClusterSpec::parse("1EPD").unwrap();
+    let rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel).unwrap();
+    let server = ApiServer::start(rc, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // health
+    let h = get(&addr, "/health");
+    assert!(h.contains("200 OK"), "{h}");
+    assert!(h.contains("\"status\":\"ok\""));
+
+    // text completion
+    let r = post(&addr, "/v1/completions", r#"{"prompt": "hi", "max_tokens": 3}"#);
+    assert!(r.contains("200 OK"), "{r}");
+    assert!(r.contains("\"completion_tokens\":3"), "{r}");
+    assert!(r.contains("text_completion"));
+
+    // multimodal completion (synthetic image)
+    let r = post(
+        &addr,
+        "/v1/completions",
+        r#"{"prompt": "what is this?", "max_tokens": 2, "image": 7}"#,
+    );
+    assert!(r.contains("200 OK"), "{r}");
+    assert!(r.contains("\"completion_tokens\":2"), "{r}");
+
+    // deterministic greedy: same request -> same text
+    let body = r#"{"prompt": "abc", "max_tokens": 4}"#;
+    let a = post(&addr, "/v1/completions", body);
+    let b = post(&addr, "/v1/completions", body);
+    let text = |resp: &str| {
+        let i = resp.find("\"text\":").unwrap();
+        resp[i..i + 60].to_string()
+    };
+    assert_eq!(text(&a), text(&b), "greedy decoding must be deterministic");
+
+    // error paths
+    assert!(post(&addr, "/v1/completions", "{bad").contains("400"));
+    assert!(post(&addr, "/v1/completions", r#"{"max_tokens": 1}"#).contains("400"));
+    assert!(get(&addr, "/nope").contains("404"));
+
+    server.shutdown();
+}

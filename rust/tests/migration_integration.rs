@@ -1,0 +1,123 @@
+//! Migration-focused integration: cache-pressure backpressure and the
+//! pull protocol's resource accounting in the simulator.
+
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::core::Phase;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig};
+use hydrainfer::workload::{Dataset, PoissonGenerator};
+
+#[test]
+fn overloaded_decode_node_backpressures_ep() {
+    // 7EP1D: the single D node is the bottleneck; pull-based migration
+    // queues offers, the EP nodes hold their KV, requests pile up in the
+    // migrate stage — the Fig. 11 "7EP1D degrades" mechanism. Under
+    // sustained overload the starved layout must attain far less.
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::paper_table3("llava-1.5-7b", "textcaps").unwrap();
+    let gen = PoissonGenerator::new(Dataset::textcaps(), 40.0, 5);
+    let reqs = gen.generate(&model, 600);
+
+    let run = |cluster: &str| {
+        let cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse(cluster).unwrap(),
+            Policy::StageLevel,
+            slo,
+        );
+        simulate(&cfg, &reqs)
+    };
+    let balanced = run("3EP5D");
+    let starved = run("7EP1D");
+    let a_balanced = balanced.metrics.slo_attainment(slo);
+    let a_starved = starved.metrics.slo_attainment(slo);
+    assert!(
+        a_starved < a_balanced,
+        "D starvation must hurt attainment: balanced={a_balanced} starved={a_starved}"
+    );
+}
+
+#[test]
+fn migrations_counted_per_hop() {
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(8.0, 0.2);
+    let gen = PoissonGenerator::new(Dataset::pope(), 2.0, 1);
+    let reqs = gen.generate(&model, 30);
+
+    // E+P+D: two hops per image request
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E1P1D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    let res = simulate(&cfg, &reqs);
+    // every request migrates E->P; requests with more than one output
+    // token also migrate P->D (single-token requests finish at prefill)
+    let needs_pd = reqs.iter().filter(|r| r.output_tokens > 1).count();
+    assert_eq!(
+        res.migrations,
+        30 + needs_pd,
+        "E->P for all + P->D for multi-token outputs"
+    );
+    assert_eq!(res.unfinished, 0);
+
+    // EP+D: one hop (P->D only)
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1EP1D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    let res = simulate(&cfg, &reqs);
+    assert_eq!(res.migrations, needs_pd);
+}
+
+#[test]
+fn migration_latency_far_below_decode_time() {
+    // paper §5.5: cache migration is <1% of request latency
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::paper_table3("llava-1.5-7b", "textcaps").unwrap();
+    let gen = PoissonGenerator::new(Dataset::textcaps(), 4.0, 2);
+    let reqs = gen.generate(&model, 100);
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E3P4D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    let res = simulate(&cfg, &reqs);
+    let bd = res.metrics.phase_breakdown();
+    let migration = bd[Phase::EpMigration as usize] + bd[Phase::PdMigration as usize];
+    let total: f64 = bd.iter().sum();
+    assert!(
+        migration / total < 0.02,
+        "migration share {:.3}% too high",
+        migration / total * 100.0
+    );
+}
+
+#[test]
+fn larger_kv_payloads_migrate_slower() {
+    // LLaVA-NeXT's ~2880-token image prefixes carry ~5x the KV of
+    // LLaVA-1.5's 576 -> PD migration time must be clearly larger.
+    let slo = SloSpec::new(8.0, 0.3);
+    let mk = |model: ModelSpec| {
+        let gen = PoissonGenerator::new(Dataset::pope(), 2.0, 3);
+        let reqs = gen.generate(&model, 40);
+        let cfg = SimConfig::new(
+            model,
+            ClusterSpec::parse("1EP1D").unwrap(),
+            Policy::StageLevel,
+            slo,
+        );
+        let res = simulate(&cfg, &reqs);
+        res.metrics.phase_breakdown()[Phase::PdMigration as usize]
+    };
+    let small = mk(ModelSpec::llava15_7b());
+    let big = mk(ModelSpec::llava_next_7b());
+    assert!(
+        big > small * 1.5,
+        "NeXT KV payload must migrate slower: llava15={small} next={big}"
+    );
+}

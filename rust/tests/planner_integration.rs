@@ -1,0 +1,95 @@
+//! Hybrid-EPD planner integration: the §4.4 search must produce sane,
+//! workload-sensitive selections.
+
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::planner::{eval_attainment, eval_goodput, plan, DisaggMethod, PlannerConfig};
+use hydrainfer::simulator::ClusterSpec;
+use hydrainfer::workload::Dataset;
+
+fn quick_pc(gpus: usize) -> PlannerConfig {
+    PlannerConfig {
+        gpus,
+        sample_requests: 60,
+        max_rate: 64.0,
+        rate_tol: 2.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn plan_ranks_descending_and_complete() {
+    let model = ModelSpec::llava15_7b();
+    let dataset = Dataset::textvqa();
+    let slo = SloSpec::paper_table3("llava-1.5-7b", "textvqa").unwrap();
+    let pc = PlannerConfig {
+        methods: vec![DisaggMethod::Colocated, DisaggMethod::EpD],
+        ..quick_pc(4)
+    };
+    let p = plan(&model, &dataset, slo, &pc);
+    assert_eq!(p.candidates.len(), 1 + 3);
+    for w in p.candidates.windows(2) {
+        assert!(w[0].goodput >= w[1].goodput, "ranking must be descending");
+    }
+    for c in &p.candidates {
+        assert!(c.cluster.complete());
+        assert_eq!(c.cluster.num_instances(), 4);
+        assert!(c.goodput >= 0.0);
+    }
+}
+
+#[test]
+fn attainment_is_monotone_nonincreasing_in_rate() {
+    let model = ModelSpec::llava15_7b();
+    let dataset = Dataset::textcaps();
+    let slo = SloSpec::paper_table3("llava-1.5-7b", "textcaps").unwrap();
+    let cluster = ClusterSpec::parse("1E1P2D").unwrap();
+    let mut prev = f64::INFINITY;
+    for rate in [2.0, 8.0, 32.0, 96.0] {
+        let a = eval_attainment(&model, &dataset, &cluster, slo, rate, 120, 0);
+        assert!(
+            a <= prev + 0.08,
+            "attainment should not rise materially with load: {prev} -> {a} at {rate}"
+        );
+        prev = a;
+    }
+}
+
+#[test]
+fn goodput_scales_with_gpu_count() {
+    // the same method with more GPUs must sustain at least as much load
+    let model = ModelSpec::llava15_7b();
+    let dataset = Dataset::pope();
+    let slo = SloSpec::paper_table3("llava-1.5-7b", "pope").unwrap();
+    let small = eval_goodput(
+        &model,
+        &dataset,
+        &ClusterSpec::parse("1EP1D").unwrap(),
+        slo,
+        &quick_pc(2),
+    );
+    let big = eval_goodput(
+        &model,
+        &dataset,
+        &ClusterSpec::parse("2EP2D").unwrap(),
+        slo,
+        &quick_pc(4),
+    );
+    assert!(
+        big >= small * 0.9,
+        "doubling GPUs must not lose goodput: 2gpu={small} 4gpu={big}"
+    );
+}
+
+#[test]
+fn loose_slo_never_reduces_goodput() {
+    let model = ModelSpec::llava_next_7b();
+    let dataset = Dataset::textcaps();
+    let cluster = ClusterSpec::parse("1E1P2D").unwrap();
+    let pc = quick_pc(4);
+    let tight = eval_goodput(&model, &dataset, &cluster, SloSpec::new(0.5, 0.06), &pc);
+    let loose = eval_goodput(&model, &dataset, &cluster, SloSpec::new(8.0, 0.24), &pc);
+    assert!(
+        loose >= tight,
+        "loosening both SLOs cannot reduce goodput: tight={tight} loose={loose}"
+    );
+}

@@ -1,0 +1,293 @@
+//! Property-based tests over L3 invariants, using the in-repo mini
+//! property harness (`hydrainfer::testing`): paged-cache conservation,
+//! scheduler budget/priority laws, router fairness, lifecycle/SLO logic,
+//! and JSON round-trips under random workloads.
+
+use hydrainfer::cache::PagedCache;
+use hydrainfer::core::{Lifecycle, RequestId, RequestSpec};
+use hydrainfer::router::{RoutePolicy, Router};
+use hydrainfer::scheduler::{Budgets, Policy, Queues, ReqState, StageMask};
+use hydrainfer::testing::{forall, Config};
+use hydrainfer::util::json::{parse, Json};
+use hydrainfer::util::rng::Rng;
+use hydrainfer::workload::Trace;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xFEED, max_shrink_iters: 100 }
+}
+
+fn spec(id: u64, images: usize, prompt: usize, out: usize) -> RequestSpec {
+    RequestSpec {
+        id: RequestId(id),
+        arrival: 0.0,
+        num_images: images,
+        tokens_per_image: 16,
+        prompt_tokens: prompt.max(1),
+        output_tokens: out.max(1),
+    }
+}
+
+#[test]
+fn prop_cache_blocks_conserved_under_random_ops() {
+    forall(
+        cfg(60),
+        |rng: &mut Rng| {
+            // a random op sequence: (request size, op kind selector)
+            let n = 3 + rng.below(40);
+            (0..n)
+                .map(|_| (rng.below(200), rng.below(3)))
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |ops| {
+            let mut cache = PagedCache::new(64, 16, 32);
+            let total = cache.free_blocks();
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next = 0u64;
+            for &(size, kind) in ops {
+                match kind {
+                    0 => {
+                        let id = RequestId(next);
+                        next += 1;
+                        if cache.allocate(id, size).is_ok() {
+                            live.push(id);
+                        }
+                    }
+                    1 => {
+                        if let Some(id) = live.pop() {
+                            cache.free(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        if let Some(&id) = live.last() {
+                            let _ = cache.append(id);
+                        }
+                    }
+                }
+                // invariant: used + free == total
+                if cache.used_blocks() + cache.free_blocks() != total {
+                    return Err(format!(
+                        "leak: used {} + free {} != {total}",
+                        cache.used_blocks(),
+                        cache.free_blocks()
+                    ));
+                }
+            }
+            for id in live {
+                cache.free(id).map_err(|e| e.to_string())?;
+            }
+            if cache.free_blocks() != total {
+                return Err("blocks not fully recovered".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_slot_mappings_never_collide_across_requests() {
+    forall(
+        cfg(40),
+        |rng: &mut Rng| {
+            let n = 2 + rng.below(8);
+            (0..n).map(|_| 1 + rng.below(120)).collect::<Vec<usize>>()
+        },
+        |sizes| {
+            let mut cache = PagedCache::new(256, 16, 16);
+            let mut all_slots = std::collections::HashSet::new();
+            for (i, &sz) in sizes.iter().enumerate() {
+                let id = RequestId(i as u64);
+                if cache.allocate(id, sz).is_err() {
+                    continue;
+                }
+                for slot in cache.slot_mapping(id).unwrap() {
+                    if !all_slots.insert(slot) {
+                        return Err(format!("slot {slot} assigned twice"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stage_level_batch_respects_budgets() {
+    forall(
+        cfg(60),
+        |rng: &mut Rng| {
+            let budget_t = 32 + rng.below(512);
+            let budget_e = 1 + rng.below(8);
+            let n = rng.below(30);
+            let reqs: Vec<(usize, usize, usize, usize)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.below(3),            // images
+                        1 + rng.below(600),      // prompt
+                        1 + rng.below(64),       // output
+                        rng.below(3),            // progress class
+                    )
+                })
+                .collect();
+            (budget_t, (budget_e, reqs))
+        },
+        |&(budget_t, (budget_e, ref reqs))| {
+            let mut q = Queues::default();
+            for (i, &(imgs, prompt, out, progress)) in reqs.iter().enumerate() {
+                let mut r = ReqState::new(spec(i as u64, imgs, prompt, out));
+                match progress {
+                    1 => {
+                        r.encoded_images = imgs;
+                        r.prefilled = r.spec.prefill_tokens() / 2;
+                        q.running.push(r);
+                    }
+                    2 => {
+                        r.encoded_images = imgs;
+                        r.prefilled = r.spec.prefill_tokens();
+                        r.decoded = 1;
+                        q.running.push(r);
+                    }
+                    _ => q.waiting.push_back(r),
+                }
+            }
+            let budgets = Budgets {
+                token_budget: budget_t,
+                image_budget: budget_e,
+                max_decode_batch: 64,
+            };
+            let mut sched = Policy::StageLevel.make(StageMask::EPD);
+            let mut admit = |_: &ReqState| true;
+            let batch = sched.build_batch(&mut q, &budgets, &mut admit);
+            // budget law: decode tokens + prefill tokens <= token budget
+            // (+ max_decode_batch decodes which are counted in n_t)
+            let lm_tokens = batch.num_decode() + batch.prefill_tokens();
+            if batch.prefill_tokens() > 0 && lm_tokens > budget_t.max(batch.num_decode() + 1) {
+                return Err(format!(
+                    "token budget violated: {} decodes + {} prefill > {budget_t}",
+                    batch.num_decode(),
+                    batch.prefill_tokens()
+                ));
+            }
+            if batch.num_encode_images() > budget_e {
+                return Err(format!(
+                    "image budget violated: {} > {budget_e}",
+                    batch.num_encode_images()
+                ));
+            }
+            // priority law: encode work only when no prefill scheduled
+            if batch.has_prefill() && batch.num_encode_images() > 0 {
+                return Err("encode scheduled alongside prefill".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_robin_is_fair() {
+    forall(
+        cfg(40),
+        |rng: &mut Rng| (2 + rng.below(7), 10 + rng.below(200)),
+        |&(n, picks)| {
+            let mut r = Router::new(RoutePolicy::RoundRobin, 1);
+            let loads = vec![0.0; n];
+            let mut counts = vec![0usize; n];
+            for _ in 0..picks {
+                counts[r.pick(&loads).unwrap()] += 1;
+            }
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            if max - min > 1 {
+                return Err(format!("unfair round robin: {counts:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lifecycle_slo_consistency() {
+    forall(
+        cfg(80),
+        |rng: &mut Rng| {
+            let n_tokens = 1 + rng.below(40);
+            let intervals: Vec<f64> = (0..n_tokens).map(|_| rng.f64() * 0.1).collect();
+            (rng.f64() * 0.5, intervals)
+        },
+        |(first, intervals)| {
+            let mut lc = Lifecycle::new(0.0);
+            let mut t = *first;
+            lc.record_token(t);
+            for dt in intervals {
+                t += dt;
+                lc.record_token(t);
+            }
+            lc.finished_at = Some(t);
+            // law: meeting a tight SLO implies meeting any looser SLO
+            let tight = lc.meets_slo(0.2, 0.04);
+            let loose = lc.meets_slo(0.4, 0.08);
+            if tight && !loose {
+                return Err("tight SLO met but loose violated".into());
+            }
+            // law: tpot count == tokens - 1
+            if lc.tpots().len() + 1 != lc.token_times.len() {
+                return Err("tpot count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_json_roundtrip_random() {
+    forall(
+        cfg(40),
+        |rng: &mut Rng| {
+            let n = rng.below(30);
+            (0..n)
+                .map(|i| {
+                    (
+                        i as u64,
+                        rng.below(3),
+                        1 + rng.below(2000),
+                        1 + rng.below(500),
+                    )
+                })
+                .collect::<Vec<(u64, usize, usize, usize)>>()
+        },
+        |reqs| {
+            let trace = Trace::new(
+                reqs.iter()
+                    .map(|&(id, imgs, prompt, out)| {
+                        let mut s = spec(id, imgs, prompt, out);
+                        s.arrival = id as f64 * 0.125;
+                        s
+                    })
+                    .collect(),
+            );
+            let j = trace.to_json().to_string();
+            let back = Trace::from_json(&parse(&j).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            if back != trace {
+                return Err("trace round-trip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_number_roundtrip() {
+    forall(
+        cfg(200),
+        |rng: &mut Rng| (rng.f64() - 0.5) * 1e9,
+        |&x| {
+            let j = Json::Num(x).to_string();
+            let back = parse(&j).map_err(|e| e.to_string())?;
+            let y = back.as_f64().ok_or("not a number")?;
+            if (x - y).abs() > 1e-6 * (1.0 + x.abs()) {
+                return Err(format!("{x} -> {j} -> {y}"));
+            }
+            Ok(())
+        },
+    );
+}

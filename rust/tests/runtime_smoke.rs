@@ -1,0 +1,139 @@
+//! End-to-end AOT round-trip test: jax -> HLO text -> xla_extension parse
+//! -> PJRT CPU compile -> execute from rust, asserted against golden
+//! outputs computed by jax at artifact-build time (`artifacts/golden.json`).
+//!
+//! Skips (passes trivially) when artifacts haven't been built.
+
+use hydrainfer::runtime::{DecodeInput, Engine};
+use hydrainfer::util::json::parse;
+
+fn golden() -> Option<hydrainfer::util::json::Json> {
+    let text = std::fs::read_to_string("artifacts/golden.json").ok()?;
+    parse(&text).ok()
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn golden_outputs_match() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::load("artifacts").expect("engine loads all artifacts");
+    let cfg = *engine.cfg();
+
+    // ---- encode_b1: pixels = ramp in [-1, 1] ----
+    let n = cfg.pixels_len();
+    let px: Vec<f32> = (0..n).map(|i| i as f32 / n as f32 * 2.0 - 1.0).collect();
+    let embeds = engine.encode(&[px]).expect("encode runs");
+    assert_eq!(embeds.len(), 1);
+    assert_eq!(embeds[0].len(), cfg.img_tokens * cfg.hidden);
+    let want = g.get("encode_b1").unwrap();
+    let got_sum: f64 = embeds[0].iter().map(|&x| x as f64).sum();
+    assert!(
+        close(got_sum, want.req_f64("sum").unwrap(), 1e-3),
+        "encode sum: got {got_sum}, want {}",
+        want.req_f64("sum").unwrap()
+    );
+    let head = want.get("head").unwrap().as_arr().unwrap();
+    for (i, h) in head.iter().enumerate() {
+        assert!(
+            close(embeds[0][i] as f64, h.as_f64().unwrap(), 1e-4),
+            "encode head[{i}]"
+        );
+    }
+
+    // ---- prefill_mm_s48: image embeds = ramp, tokens = 10..30 ----
+    let th = cfg.img_tokens * cfg.hidden;
+    let ie: Vec<f32> = (0..th).map(|i| i as f32 / th as f32 - 0.5).collect();
+    let tokens: Vec<u32> = (10..30).collect();
+    let out = engine.prefill(&tokens, Some(&ie)).expect("prefill runs");
+    assert_eq!(out.valid_len, cfg.img_tokens + 20);
+    let want = g.get("prefill_mm_s48").unwrap();
+    let head = want.get("logits_head").unwrap().as_arr().unwrap();
+    for (i, h) in head.iter().enumerate() {
+        assert!(
+            close(out.logits[i] as f64, h.as_f64().unwrap(), 1e-4),
+            "prefill logits[{i}]: got {}, want {}",
+            out.logits[i],
+            h.as_f64().unwrap()
+        );
+    }
+    let argmax = out
+        .logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(argmax as i64, want.req_f64("argmax").unwrap() as i64);
+    let k_sum: f64 = out.k.iter().flatten().map(|&x| x as f64).sum();
+    let v_sum: f64 = out.v.iter().flatten().map(|&x| x as f64).sum();
+    assert!(close(k_sum, want.req_f64("k_valid_sum").unwrap(), 1e-3), "k sum {k_sum}");
+    assert!(close(v_sum, want.req_f64("v_valid_sum").unwrap(), 1e-3), "v sum {v_sum}");
+
+    // ---- decode_b1: pools = ramp mod 997, bt = [0..maxb), len = 20 ----
+    let pool_len = cfg.layers * cfg.pool_blocks * cfg.block_size * cfg.hidden;
+    let k_pool: Vec<f32> = (0..pool_len)
+        .map(|i| (i % 997) as f32 / 997.0 - 0.5)
+        .collect();
+    let v_pool: Vec<f32> = k_pool.iter().map(|&x| -x).collect();
+    let req = DecodeInput {
+        token: 42,
+        position: 20,
+        block_table: (0..cfg.max_blocks_per_seq as u32).collect(),
+        seq_len: 20,
+    };
+    let out = engine.decode(&[req], &k_pool, &v_pool).expect("decode runs");
+    assert_eq!(out.logits.len(), 1);
+    assert_eq!(out.logits[0].len(), cfg.vocab);
+    let want = g.get("decode_b1").unwrap();
+    let head = want.get("logits_head").unwrap().as_arr().unwrap();
+    for (i, h) in head.iter().enumerate() {
+        assert!(
+            close(out.logits[0][i] as f64, h.as_f64().unwrap(), 1e-4),
+            "decode logits[{i}]: got {}, want {}",
+            out.logits[0][i],
+            h.as_f64().unwrap()
+        );
+    }
+    let argmax = out.logits[0]
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(argmax as i64, want.req_f64("argmax").unwrap() as i64);
+    let k_sum: f64 = out.k_new[0].iter().map(|&x| x as f64).sum();
+    assert!(close(k_sum, want.req_f64("k_new_sum").unwrap(), 1e-3), "k_new {k_sum}");
+}
+
+#[test]
+fn decode_batch_padding_is_harmless() {
+    let Some(_) = golden() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::load("artifacts").expect("engine loads");
+    let cfg = *engine.cfg();
+    let pool_len = cfg.layers * cfg.pool_blocks * cfg.block_size * cfg.hidden;
+    let k_pool: Vec<f32> = (0..pool_len).map(|i| ((i * 7) % 101) as f32 / 101.0).collect();
+    let v_pool = k_pool.clone();
+    let req = DecodeInput {
+        token: 99,
+        position: 5,
+        block_table: vec![3, 4],
+        seq_len: 5,
+    };
+    // bucket 1 (exact) vs bucket 2 (padded): same logits for the real slot
+    let a = engine.decode(&[req.clone()], &k_pool, &v_pool).unwrap();
+    let b = engine
+        .decode(&[req.clone(), req.clone()], &k_pool, &v_pool)
+        .unwrap();
+    for (x, y) in a.logits[0].iter().zip(&b.logits[0]) {
+        assert!((x - y).abs() < 1e-4, "padding changed logits: {x} vs {y}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Real-execution serving integration: boot disaggregated clusters over
+//! the AOT artifacts, push requests through encode -> prefill -> decode
+//! with real cache migration, and check outputs.
+//!
+//! The strongest check: a disaggregated 1E1P1D cluster must produce
+//! *bit-identical greedy tokens* to a colocated 1EPD cluster — which can
+//! only happen if the KV/image caches survive both migrations exactly.
+//!
+//! Skips when artifacts are absent.
+
+use std::time::Duration;
+
+use hydrainfer::core::SamplingParams;
+use hydrainfer::instance::RealCluster;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::ClusterSpec;
+use hydrainfer::vision::Image;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn greedy(n: usize) -> SamplingParams {
+    SamplingParams { temperature: 0.0, top_k: 0, max_tokens: n, ignore_eos: true, seed: 0 }
+}
+
+fn run_cluster(spec: &str, prompts: &[(&str, bool, usize)]) -> Vec<(u64, Vec<u32>)> {
+    let cluster = ClusterSpec::parse(spec).unwrap();
+    let mut rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel).unwrap();
+    let img = Image::synthetic(64, 64, 42);
+    for (prompt, with_image, n) in prompts {
+        rc.submit(prompt, if *with_image { Some(&img) } else { None }, greedy(*n))
+            .unwrap();
+    }
+    let results = rc.collect(prompts.len(), Duration::from_secs(120));
+    rc.shutdown();
+    let mut out: Vec<(u64, Vec<u32>)> =
+        results.into_iter().map(|r| (r.id.0, r.tokens)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn disaggregated_matches_colocated_greedy_tokens() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let prompts: [(&str, bool, usize); 3] = [
+        ("what is in the image?", true, 6),
+        ("hello", false, 5),
+        ("describe", true, 4),
+    ];
+    let colocated = run_cluster("1EPD", &prompts);
+    let disagg = run_cluster("1E1P1D", &prompts);
+    assert_eq!(colocated.len(), 3, "colocated finished all");
+    assert_eq!(disagg.len(), 3, "disaggregated finished all");
+    for ((id_a, toks_a), (id_b, toks_b)) in colocated.iter().zip(&disagg) {
+        assert_eq!(id_a, id_b);
+        assert_eq!(
+            toks_a, toks_b,
+            "migration must preserve caches exactly (req {id_a})"
+        );
+        assert!(!toks_a.is_empty());
+    }
+}
+
+#[test]
+fn ep_plus_d_serves_batch_with_lifecycle() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cluster = ClusterSpec::parse("1EP1D").unwrap();
+    let mut rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel).unwrap();
+    let img = Image::synthetic(48, 48, 7);
+    let n = 6;
+    for i in 0..n {
+        let with_img = i % 2 == 0;
+        rc.submit(
+            &format!("request {i}"),
+            if with_img { Some(&img) } else { None },
+            greedy(4),
+        )
+        .unwrap();
+    }
+    let results = rc.collect(n, Duration::from_secs(120));
+    rc.shutdown();
+    assert_eq!(results.len(), n, "all requests complete");
+    for r in &results {
+        assert_eq!(r.tokens.len(), 4, "exactly max_tokens generated");
+        let lc = &r.lifecycle;
+        assert!(lc.ttft().unwrap() > 0.0);
+        assert_eq!(lc.token_times.len(), 4);
+        assert!(lc.finished_at.is_some());
+        // tokens are monotone in time
+        assert!(lc.token_times.windows(2).all(|w| w[1] >= w[0]));
+        // PD migration must have been recorded (decode is on another node)
+        assert!(
+            lc.phase(hydrainfer::core::Phase::PdMigration) > 0.0,
+            "PD migration phase missing"
+        );
+    }
+}
+
+#[test]
+fn rejects_oversized_prompt() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cluster = ClusterSpec::parse("1EPD").unwrap();
+    let mut rc = RealCluster::start("artifacts", &cluster, Policy::StageLevel).unwrap();
+    let long = "x".repeat(500);
+    assert!(rc.submit(&long, None, greedy(2)).is_err());
+    rc.shutdown();
+}

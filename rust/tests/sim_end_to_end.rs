@@ -1,0 +1,172 @@
+//! Simulator end-to-end behaviour across engines, datasets and clusters.
+
+use hydrainfer::benchkit::{run_engine, EngineKind};
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::core::Phase;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig, TransferBackend};
+use hydrainfer::workload::{Dataset, PoissonGenerator};
+
+fn textcaps_reqs(model: &ModelSpec, rate: f64, n: usize) -> Vec<hydrainfer::core::RequestSpec> {
+    PoissonGenerator::new(Dataset::textcaps(), rate, 1).generate(model, n)
+}
+
+#[test]
+fn all_policies_complete_all_datasets() {
+    let model = ModelSpec::llava15_7b();
+    for policy in Policy::ALL {
+        for ds in Dataset::ALL_NAMES {
+            let slo = SloSpec::paper_table3(&model.name, ds).unwrap();
+            let mut cfg = SimConfig::new(
+                model.clone(),
+                ClusterSpec::parse("2EPD").unwrap(),
+                policy,
+                slo,
+            );
+            cfg.multistream = policy == Policy::StageLevel;
+            let gen = PoissonGenerator::new(Dataset::by_name(ds).unwrap(), 2.0, 3);
+            let reqs = gen.generate(&model, 40);
+            let res = simulate(&cfg, &reqs);
+            assert_eq!(
+                res.unfinished, 0,
+                "policy {} left requests unfinished on {ds}",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_disaggregation_shapes_work_for_all_models() {
+    for model_name in ModelSpec::ALL_NAMES {
+        let model = ModelSpec::by_name(model_name).unwrap();
+        for cluster in ["4EPD", "1E1P2D", "2EP2D", "2ED2P", "1E2P1D"] {
+            let slo = SloSpec::new(8.0, 0.2);
+            let cfg = SimConfig::new(
+                model.clone(),
+                ClusterSpec::parse(cluster).unwrap(),
+                Policy::StageLevel,
+                slo,
+            );
+            let reqs = textcaps_reqs(&model, 2.0, 30);
+            let res = simulate(&cfg, &reqs);
+            assert_eq!(res.unfinished, 0, "{model_name} on {cluster}");
+            assert_eq!(res.metrics.num_finished(), 30);
+        }
+    }
+}
+
+#[test]
+fn attainment_ordering_hydra_vs_prefill_first() {
+    // under a tight TPOT SLO on a single instance, stage-level scheduling
+    // must attain at least as much as vLLM-v0's prefill-first
+    let model = ModelSpec::llava15_7b();
+    let dataset = Dataset::textcaps();
+    let slo = SloSpec::new(0.25, 0.04);
+    let cluster = ClusterSpec::parse("1EPD").unwrap();
+    let rate = 6.0;
+    let ours = run_engine(EngineKind::Hydra, &model, &dataset, &cluster, slo, rate, 100, 0);
+    let v0 = run_engine(EngineKind::VllmV0, &model, &dataset, &cluster, slo, rate, 100, 0);
+    let a_ours = ours.metrics.slo_attainment(slo);
+    let a_v0 = v0.metrics.slo_attainment(slo);
+    assert!(
+        a_ours >= a_v0,
+        "stage-level attainment {a_ours} must be >= prefill-first {a_v0}"
+    );
+}
+
+#[test]
+fn migration_phases_only_on_disaggregated_paths() {
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(8.0, 0.2);
+    // EP+D: only PD migrations
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("2EP2D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    let res = simulate(&cfg, &textcaps_reqs(&model, 2.0, 40));
+    let bd = res.metrics.phase_breakdown();
+    assert_eq!(bd[Phase::EpMigration as usize], 0.0, "EP colocated: no EP migration");
+    assert!(bd[Phase::PdMigration as usize] > 0.0, "PD split: must migrate");
+
+    // ED+P: EP and PD migrations both happen (E->P then P->D)
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("2ED2P").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    let res = simulate(&cfg, &textcaps_reqs(&model, 2.0, 40));
+    let bd = res.metrics.phase_breakdown();
+    assert!(bd[Phase::EpMigration as usize] > 0.0);
+    assert!(bd[Phase::PdMigration as usize] > 0.0);
+}
+
+#[test]
+fn nccl_backend_slower_than_ipc() {
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(8.0, 0.2);
+    let mk = |backend| {
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("1E1P2D").unwrap(),
+            Policy::StageLevel,
+            slo,
+        );
+        cfg.backend = backend;
+        let res = simulate(&cfg, &textcaps_reqs(&model, 2.0, 50));
+        let bd = res.metrics.phase_breakdown();
+        bd[Phase::EpMigration as usize] + bd[Phase::PdMigration as usize]
+    };
+    let ipc = mk(TransferBackend::CudaIpc);
+    let nccl = mk(TransferBackend::Nccl);
+    assert!(
+        nccl > ipc,
+        "NCCL's higher latency floor must show up: ipc={ipc} nccl={nccl}"
+    );
+}
+
+#[test]
+fn higher_rate_never_materially_lowers_ttft() {
+    let model = ModelSpec::llava_next_7b();
+    let slo = SloSpec::paper_table3("llava-next-7b", "textcaps").unwrap();
+    let cluster = ClusterSpec::parse("1E1P2D").unwrap();
+    let mut prev_ttft = 0.0;
+    for rate in [1.0, 4.0, 16.0] {
+        let cfg = SimConfig::new(model.clone(), cluster.clone(), Policy::StageLevel, slo);
+        let res = simulate(&cfg, &textcaps_reqs(&model, rate, 80));
+        let ttft = res.metrics.ttft().mean();
+        assert!(
+            ttft >= prev_ttft * 0.9,
+            "mean TTFT should not materially improve with load: {prev_ttft} -> {ttft} at rate {rate}"
+        );
+        prev_ttft = ttft;
+    }
+}
+
+#[test]
+fn multistream_improves_colocated_encode_decode() {
+    // ED colocation benefits from the two-stream model: with multistream
+    // off, the same cluster and policy must not be faster.
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(8.0, 0.2);
+    let reqs = textcaps_reqs(&model, 6.0, 80);
+    let mk = |ms: bool| {
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("2ED2P").unwrap(),
+            Policy::StageLevel,
+            slo,
+        );
+        cfg.multistream = ms;
+        simulate(&cfg, &reqs).metrics.e2e().mean()
+    };
+    let with = mk(true);
+    let without = mk(false);
+    assert!(
+        with <= without * 1.02,
+        "multistream must not slow ED instances: with={with} without={without}"
+    );
+}
