@@ -7,6 +7,8 @@
 //!   POST /v1/completions  — {"prompt": str, "max_tokens": int,
 //!                            "temperature": float, "image": bool|seed int}
 //!   GET  /health          — liveness
+//!   GET  /status          — live instance layout + elastic-controller
+//!                           state (roles, draining flags, flip count)
 //!
 //! Built directly on `std::net::TcpListener` (no HTTP deps offline); a
 //! dispatcher thread routes [`ServeResult`]s back to per-request waiters.
@@ -132,6 +134,7 @@ fn handle_conn(
 fn route(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &Waiters) -> (u16, Json) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => (200, Json::obj(vec![("status", Json::str("ok"))])),
+        ("GET", "/status") => (200, cluster.lock().unwrap().status()),
         ("POST", "/v1/completions") => completions(req, cluster, waiters),
         _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
     }

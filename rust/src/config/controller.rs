@@ -1,0 +1,153 @@
+//! Elastic control-plane configuration (the knobs of `crate::controller`).
+//!
+//! The offline planner (§4.4) picks the *initial* instance layout; the
+//! online controller then watches per-stage load and flips instance roles
+//! when the workload drifts. Everything that governs how eagerly it reacts
+//! lives here so experiments (and the `--elastic` CLI surface) can sweep
+//! it like any other config.
+
+use crate::util::json::Json;
+
+/// Configuration of the online stage-load controller.
+///
+/// Defaults are deliberately conservative: a flip costs a drain, so the
+/// imbalance must be real (ratio trigger), sustained (`sustain_ticks`
+/// consecutive observations), and not follow another flip too closely
+/// (`cooldown`). Together these three form the hysteresis that prevents
+/// flapping under oscillating load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerConfig {
+    /// Seconds between controller evaluations.
+    pub tick: f64,
+    /// Rolling estimation window, seconds (queue samples + TTFT/TPOT tails).
+    pub window: f64,
+    /// Minimum samples in the window before the policy may act.
+    pub min_samples: usize,
+    /// Consecutive imbalanced ticks required to trigger a flip (halved when
+    /// the windowed TTFT/TPOT tails already violate the SLO).
+    pub sustain_ticks: usize,
+    /// Hot-stage pressure must exceed `imbalance_ratio` x cold-stage
+    /// pressure to count as imbalanced.
+    pub imbalance_ratio: f64,
+    /// Absolute floor on hot-stage pressure (seconds of queued work per
+    /// serving instance) — tiny absolute backlogs never trigger.
+    pub min_pressure: f64,
+    /// Cold-stage pressure is floored at this value inside the ratio test
+    /// (avoids division by ~zero when a stage is completely idle).
+    pub pressure_floor: f64,
+    /// Predicted post-flip bottleneck pressure must drop below
+    /// `accept_margin` x the current bottleneck for the flip to proceed.
+    pub accept_margin: f64,
+    /// Minimum seconds between role flips.
+    pub cooldown: f64,
+    /// A drain that has not emptied after this many seconds is cancelled
+    /// (the instance keeps its current role).
+    pub drain_timeout: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            tick: 0.5,
+            window: 10.0,
+            min_samples: 4,
+            sustain_ticks: 3,
+            imbalance_ratio: 2.0,
+            min_pressure: 0.25,
+            pressure_floor: 0.05,
+            accept_margin: 0.95,
+            cooldown: 5.0,
+            drain_timeout: 30.0,
+        }
+    }
+}
+
+impl ControllerConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tick", Json::num(self.tick)),
+            ("window", Json::num(self.window)),
+            ("min_samples", Json::num(self.min_samples as f64)),
+            ("sustain_ticks", Json::num(self.sustain_ticks as f64)),
+            ("imbalance_ratio", Json::num(self.imbalance_ratio)),
+            ("min_pressure", Json::num(self.min_pressure)),
+            ("pressure_floor", Json::num(self.pressure_floor)),
+            ("accept_margin", Json::num(self.accept_margin)),
+            ("cooldown", Json::num(self.cooldown)),
+            ("drain_timeout", Json::num(self.drain_timeout)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ControllerConfig> {
+        let d = ControllerConfig::default();
+        let f = |key: &str, def: f64| j.get(key).and_then(Json::as_f64).unwrap_or(def);
+        let u = |key: &str, def: usize| j.get(key).and_then(Json::as_usize).unwrap_or(def);
+        let cfg = ControllerConfig {
+            tick: f("tick", d.tick),
+            window: f("window", d.window),
+            min_samples: u("min_samples", d.min_samples),
+            sustain_ticks: u("sustain_ticks", d.sustain_ticks),
+            imbalance_ratio: f("imbalance_ratio", d.imbalance_ratio),
+            min_pressure: f("min_pressure", d.min_pressure),
+            pressure_floor: f("pressure_floor", d.pressure_floor),
+            accept_margin: f("accept_margin", d.accept_margin),
+            cooldown: f("cooldown", d.cooldown),
+            drain_timeout: f("drain_timeout", d.drain_timeout),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.tick > 0.0, "tick must be positive");
+        anyhow::ensure!(self.window >= self.tick, "window must cover >= one tick");
+        anyhow::ensure!(self.imbalance_ratio >= 1.0, "imbalance_ratio must be >= 1");
+        anyhow::ensure!(self.accept_margin > 0.0 && self.accept_margin <= 1.0,
+            "accept_margin must be in (0, 1]");
+        anyhow::ensure!(self.cooldown >= 0.0 && self.drain_timeout > 0.0,
+            "cooldown/drain_timeout must be non-negative/positive");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ControllerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ControllerConfig::default();
+        c.tick = 0.25;
+        c.sustain_ticks = 5;
+        c.cooldown = 2.0;
+        let j = c.to_json().to_string();
+        let c2 = ControllerConfig::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn missing_fields_fall_back_to_defaults() {
+        let j = crate::util::json::parse("{\"tick\": 1.0}").unwrap();
+        let c = ControllerConfig::from_json(&j).unwrap();
+        assert_eq!(c.tick, 1.0);
+        assert_eq!(c.window, ControllerConfig::default().window);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = ControllerConfig::default();
+        c.tick = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ControllerConfig::default();
+        c.imbalance_ratio = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = ControllerConfig::default();
+        c.accept_margin = 1.5;
+        assert!(c.validate().is_err());
+    }
+}

@@ -7,8 +7,10 @@
 //! Qwen2-VL-7B, not the tiny executable VLM (which only the real-execution
 //! path uses).
 
+pub mod controller;
 pub mod slo;
 
+pub use controller::ControllerConfig;
 pub use slo::SloSpec;
 
 use crate::util::json::Json;

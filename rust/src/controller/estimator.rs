@@ -1,0 +1,384 @@
+//! Stage-load estimation: rolling windows over per-instance queue samples
+//! plus the windowed TTFT/TPOT tails from `metrics::window_stats`.
+//!
+//! Backlogs are converted into a common unit — *seconds of single-instance
+//! service time* — via cost-model-derived per-stage service rates, so
+//! "40 queued images" and "9000 queued decode tokens" become directly
+//! comparable pressures. Pressure of a stage is its backlog divided by the
+//! number of (non-draining) instances currently serving it: the expected
+//! queueing delay a new arrival at that stage faces.
+
+use std::collections::VecDeque;
+
+use crate::config::{ControllerConfig, DeviceSpec, ModelSpec, SloSpec};
+use crate::costmodel::{decode_cost, encode_cost, exec_time, prefill_cost};
+use crate::scheduler::{ReqState, StageMask};
+
+/// Stage indices used throughout the controller ([E, P, D]).
+pub const ENC: usize = 0;
+pub const PRE: usize = 1;
+pub const DEC: usize = 2;
+
+/// Per-stage service rates of one instance (native units per second).
+#[derive(Debug, Clone, Copy)]
+pub struct StageRates {
+    /// Images encoded per second.
+    pub encode: f64,
+    /// Prefill tokens per second.
+    pub prefill: f64,
+    /// Decode tokens per second (at a typical batch).
+    pub decode: f64,
+}
+
+impl StageRates {
+    /// Roofline-derived rates for a model on a device, evaluated at the
+    /// typical operating points the budget profiler also assumes.
+    pub fn from_model(model: &ModelSpec, device: &DeviceSpec) -> StageRates {
+        let imgs = 4usize;
+        let enc_t = exec_time(encode_cost(model, imgs), device);
+        let chunk = 512usize;
+        let pre_t = exec_time(prefill_cost(model, &[(0, chunk)]), device);
+        let batch = 64usize;
+        let ctxs = vec![512usize; batch];
+        let dec_t = exec_time(decode_cost(model, &ctxs), device);
+        StageRates {
+            encode: imgs as f64 / enc_t.max(1e-9),
+            prefill: chunk as f64 / pre_t.max(1e-9),
+            decode: batch as f64 / dec_t.max(1e-9),
+        }
+    }
+
+    /// Rough rates for the tiny real-execution VLM, where only *relative*
+    /// pressure matters (the real cluster has no roofline ModelSpec).
+    pub fn default_real() -> StageRates {
+        StageRates { encode: 8.0, prefill: 2000.0, decode: 300.0 }
+    }
+
+    fn by_stage(&self, s: usize) -> f64 {
+        match s {
+            ENC => self.encode,
+            PRE => self.prefill,
+            _ => self.decode,
+        }
+    }
+}
+
+/// One instance's contribution to a controller-tick observation.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceSample {
+    pub mask: StageMask,
+    pub draining: bool,
+    /// Images pending encode across the instance's queues.
+    pub encode_backlog: f64,
+    /// Prompt tokens pending prefill.
+    pub prefill_backlog: f64,
+    /// Output tokens pending decode.
+    pub decode_backlog: f64,
+    /// Items in the currently executing batch (0 = idle; the real-mode
+    /// sampler runs between synchronous steps, so it reports 0). Counted
+    /// as in-flight work in the per-instance backlog the policy uses for
+    /// donor selection.
+    pub batch_items: usize,
+}
+
+impl InstanceSample {
+    pub fn idle(mask: StageMask, draining: bool) -> InstanceSample {
+        InstanceSample { mask, draining, ..Default::default() }
+    }
+
+    /// Attribute one queued request's remaining work to its next stage.
+    pub fn add_req(&mut self, r: &ReqState) {
+        if r.encode_remaining() > 0 {
+            self.encode_backlog += r.encode_remaining() as f64;
+        } else if r.prefill_remaining() > 0 {
+            self.prefill_backlog += r.prefill_remaining() as f64;
+        } else {
+            self.decode_backlog += r.decode_remaining() as f64;
+        }
+    }
+
+    fn backlog(&self, s: usize) -> f64 {
+        match s {
+            ENC => self.encode_backlog,
+            PRE => self.prefill_backlog,
+            _ => self.decode_backlog,
+        }
+    }
+}
+
+/// One controller-tick observation of the whole cluster.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSample {
+    pub t: f64,
+    pub instances: Vec<InstanceSample>,
+    /// Windowed p90 TTFT (None until something finished in the window).
+    pub ttft_p90: Option<f64>,
+    /// Windowed p90 inter-token latency.
+    pub tpot_p90: Option<f64>,
+}
+
+/// The estimator's output: per-stage demand, capacity and SLO headroom.
+#[derive(Debug, Clone)]
+pub struct StageLoad {
+    pub t: f64,
+    /// Mean cluster-wide backlog per stage over the window, in seconds of
+    /// single-instance service time.
+    pub backlog_secs: [f64; 3],
+    /// Non-draining instances currently serving each stage.
+    pub servers: [usize; 3],
+    /// backlog_secs / servers (infinite when a demanded stage has no
+    /// server — an emergency the policy resolves immediately).
+    pub pressure: [f64; 3],
+    /// Latest per-instance total backlog in seconds (donor selection).
+    pub per_instance_backlog: Vec<f64>,
+    /// SLO / windowed p90 (>= 1 means the tail meets the SLO; infinite
+    /// when nothing finished in the window or no SLO is configured).
+    pub ttft_headroom: f64,
+    pub tpot_headroom: f64,
+    /// Samples backing this snapshot.
+    pub samples: usize,
+}
+
+impl StageLoad {
+    pub fn stage_name(s: usize) -> &'static str {
+        match s {
+            ENC => "encode",
+            PRE => "prefill",
+            _ => "decode",
+        }
+    }
+}
+
+/// Rolling-window estimator of per-stage demand and SLO headroom.
+pub struct StageLoadEstimator {
+    cfg: ControllerConfig,
+    rates: StageRates,
+    slo: Option<SloSpec>,
+    window: VecDeque<ClusterSample>,
+}
+
+impl StageLoadEstimator {
+    pub fn new(cfg: ControllerConfig, rates: StageRates, slo: Option<SloSpec>) -> Self {
+        StageLoadEstimator { cfg, rates, slo, window: VecDeque::new() }
+    }
+
+    /// Ingest one tick's observation; evicts samples older than the window.
+    pub fn observe(&mut self, sample: ClusterSample) {
+        let horizon = sample.t - self.cfg.window;
+        self.window.push_back(sample);
+        while self.window.front().is_some_and(|s| s.t < horizon) {
+            self.window.pop_front();
+        }
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Current estimate, or None until `min_samples` observations exist.
+    pub fn snapshot(&self) -> Option<StageLoad> {
+        if self.window.len() < self.cfg.min_samples.max(1) {
+            return None;
+        }
+        let latest = self.window.back().expect("window non-empty");
+        let n = self.window.len() as f64;
+
+        // mean cluster-wide backlog per stage, converted to service seconds
+        let mut backlog_secs = [0.0f64; 3];
+        for s in &self.window {
+            for inst in &s.instances {
+                for st in 0..3 {
+                    backlog_secs[st] += inst.backlog(st) / self.rates.by_stage(st);
+                }
+            }
+        }
+        for b in &mut backlog_secs {
+            *b /= n;
+        }
+
+        // capacity from the latest layout
+        let mut servers = [0usize; 3];
+        for inst in &latest.instances {
+            if inst.draining {
+                continue;
+            }
+            if inst.mask.encode {
+                servers[ENC] += 1;
+            }
+            if inst.mask.prefill {
+                servers[PRE] += 1;
+            }
+            if inst.mask.decode {
+                servers[DEC] += 1;
+            }
+        }
+
+        let mut pressure = [0.0f64; 3];
+        for st in 0..3 {
+            pressure[st] = pressure_of(backlog_secs[st], servers[st]);
+        }
+
+        // batch occupancy counts as in-flight work (decode-equivalent):
+        // donor selection prefers instances that are not mid-batch
+        let per_instance_backlog: Vec<f64> = latest
+            .instances
+            .iter()
+            .map(|i| {
+                i.encode_backlog / self.rates.encode
+                    + i.prefill_backlog / self.rates.prefill
+                    + i.decode_backlog / self.rates.decode
+                    + i.batch_items as f64 / self.rates.decode
+            })
+            .collect();
+
+        let headroom = |slo_v: Option<f64>, p90: Option<f64>| match (slo_v, p90) {
+            (Some(s), Some(p)) if p > 0.0 => s / p,
+            _ => f64::INFINITY,
+        };
+        Some(StageLoad {
+            t: latest.t,
+            backlog_secs,
+            servers,
+            pressure,
+            per_instance_backlog,
+            ttft_headroom: headroom(self.slo.map(|s| s.ttft), latest.ttft_p90),
+            tpot_headroom: headroom(self.slo.map(|s| s.tpot), latest.tpot_p90),
+            samples: self.window.len(),
+        })
+    }
+}
+
+/// Expected queueing delay at a stage: backlog spread over its servers.
+/// A demanded stage with no server is infinitely pressured; an idle stage
+/// with no server is simply zero.
+pub fn pressure_of(backlog_secs: f64, servers: usize) -> f64 {
+    if servers == 0 {
+        if backlog_secs > 1e-9 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    } else {
+        backlog_secs / servers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceSpec, ModelSpec};
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig { window: 10.0, min_samples: 2, ..Default::default() }
+    }
+
+    fn rates() -> StageRates {
+        // round-number rates so backlog conversion is easy to check
+        StageRates { encode: 10.0, prefill: 1000.0, decode: 100.0 }
+    }
+
+    fn sample(t: f64, insts: Vec<InstanceSample>) -> ClusterSample {
+        ClusterSample { t, instances: insts, ttft_p90: None, tpot_p90: None }
+    }
+
+    fn inst(mask: StageMask, e: f64, p: f64, d: f64) -> InstanceSample {
+        InstanceSample {
+            mask,
+            draining: false,
+            encode_backlog: e,
+            prefill_backlog: p,
+            decode_backlog: d,
+            batch_items: 0,
+        }
+    }
+
+    #[test]
+    fn needs_min_samples() {
+        let mut est = StageLoadEstimator::new(cfg(), rates(), None);
+        est.observe(sample(0.0, vec![inst(StageMask::EPD, 0.0, 0.0, 0.0)]));
+        assert!(est.snapshot().is_none());
+        est.observe(sample(0.5, vec![inst(StageMask::EPD, 0.0, 0.0, 0.0)]));
+        assert!(est.snapshot().is_some());
+    }
+
+    #[test]
+    fn window_evicts_old_samples() {
+        let mut est = StageLoadEstimator::new(cfg(), rates(), None);
+        // heavy old sample, then far-future light samples: old one must
+        // fall out of the 10s window and stop influencing the mean
+        est.observe(sample(0.0, vec![inst(StageMask::EPD, 100.0, 0.0, 0.0)]));
+        est.observe(sample(20.0, vec![inst(StageMask::EPD, 0.0, 0.0, 0.0)]));
+        est.observe(sample(20.5, vec![inst(StageMask::EPD, 0.0, 0.0, 0.0)]));
+        let load = est.snapshot().unwrap();
+        assert_eq!(load.samples, 2);
+        assert!(load.backlog_secs[ENC].abs() < 1e-12, "old sample evicted");
+    }
+
+    #[test]
+    fn backlog_converts_to_service_seconds() {
+        let mut est = StageLoadEstimator::new(cfg(), rates(), None);
+        // 20 images @ 10/s = 2s; 500 prefill tokens @ 1000/s = 0.5s;
+        // 300 decode tokens @ 100/s = 3s — in both samples
+        let mk = || {
+            let mut a = inst(StageMask::E, 20.0, 0.0, 0.0);
+            a.batch_items = 10; // in-flight work: 10 items @ 100/s = 0.1s
+            vec![a, inst(StageMask::PD, 0.0, 500.0, 300.0)]
+        };
+        est.observe(sample(0.0, mk()));
+        est.observe(sample(0.5, mk()));
+        let load = est.snapshot().unwrap();
+        assert!((load.backlog_secs[ENC] - 2.0).abs() < 1e-9);
+        assert!((load.backlog_secs[PRE] - 0.5).abs() < 1e-9);
+        assert!((load.backlog_secs[DEC] - 3.0).abs() < 1e-9);
+        assert_eq!(load.servers, [1, 1, 1]);
+        assert!((load.pressure[DEC] - 3.0).abs() < 1e-9);
+        // per-instance backlog from the latest sample, incl. batch occupancy
+        assert!((load.per_instance_backlog[0] - 2.1).abs() < 1e-9);
+        assert!((load.per_instance_backlog[1] - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn draining_instances_lose_server_credit() {
+        let mut est = StageLoadEstimator::new(cfg(), rates(), None);
+        let mut a = inst(StageMask::D, 0.0, 0.0, 100.0);
+        let b = inst(StageMask::D, 0.0, 0.0, 100.0);
+        a.draining = true;
+        est.observe(sample(0.0, vec![a.clone(), b.clone()]));
+        est.observe(sample(0.5, vec![a, b]));
+        let load = est.snapshot().unwrap();
+        assert_eq!(load.servers[DEC], 1, "draining instance is not capacity");
+        // demanded stage with zero servers is an emergency
+        assert_eq!(pressure_of(1.0, 0), f64::INFINITY);
+        assert_eq!(pressure_of(0.0, 0), 0.0);
+    }
+
+    #[test]
+    fn slo_headroom_from_windowed_tails() {
+        let slo = SloSpec::new(0.25, 0.04);
+        let mut est = StageLoadEstimator::new(cfg(), rates(), Some(slo));
+        let mut s = sample(0.0, vec![inst(StageMask::EPD, 0.0, 0.0, 0.0)]);
+        s.ttft_p90 = Some(0.5); // 2x over the SLO
+        s.tpot_p90 = Some(0.02); // 2x headroom
+        est.observe(s.clone());
+        s.t = 0.5;
+        est.observe(s);
+        let load = est.snapshot().unwrap();
+        assert!((load.ttft_headroom - 0.5).abs() < 1e-9);
+        assert!((load.tpot_headroom - 2.0).abs() < 1e-9);
+        // no finishes in window -> infinite headroom
+        let mut est2 = StageLoadEstimator::new(cfg(), rates(), Some(slo));
+        est2.observe(sample(0.0, vec![]));
+        est2.observe(sample(0.5, vec![]));
+        assert!(est2.snapshot().unwrap().ttft_headroom.is_infinite());
+    }
+
+    #[test]
+    fn model_rates_are_ordered_sanely() {
+        let m = ModelSpec::llava15_7b();
+        let d = DeviceSpec::h800();
+        let r = StageRates::from_model(&m, &d);
+        assert!(r.encode > 0.0 && r.prefill > 0.0 && r.decode > 0.0);
+        // prefill processes tokens much faster than decode emits them
+        assert!(r.prefill > 5.0 * r.decode, "prefill {} decode {}", r.prefill, r.decode);
+    }
+}

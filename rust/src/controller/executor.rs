@@ -1,0 +1,145 @@
+//! Reconfiguration execution: drain-then-flip bookkeeping shared by the
+//! discrete-event simulator and the real cluster's controller thread.
+//!
+//! A flip never interrupts in-flight work. The executor marks the donor
+//! instance *draining*: the routers stop sending it new work (its load
+//! reads as infinite), its queued requests finish or migrate out through
+//! the normal §4.3 pull protocol, and only when the instance is completely
+//! empty does the role actually change. A drain that cannot empty within
+//! `drain_timeout` (e.g. the instance is the sole server of a still-loaded
+//! stage) is cancelled and the instance keeps its role — requests are
+//! never dropped to force a flip through.
+
+use crate::scheduler::StageMask;
+
+/// A completed role flip (for reports and the `/status` endpoint).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigEvent {
+    /// When the flip completed (seconds since run start).
+    pub t: f64,
+    pub instance: usize,
+    pub from: StageMask,
+    pub to: StageMask,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Drain {
+    to: StageMask,
+    began: f64,
+}
+
+/// Tracks which instances are draining toward which role.
+#[derive(Debug, Default)]
+pub struct DrainTracker {
+    drains: Vec<Option<Drain>>,
+    /// Completed flips, in order.
+    pub events: Vec<ReconfigEvent>,
+    /// Drains cancelled by timeout.
+    pub cancelled: usize,
+}
+
+impl DrainTracker {
+    pub fn new(n: usize) -> Self {
+        DrainTracker { drains: vec![None; n], events: Vec::new(), cancelled: 0 }
+    }
+
+    pub fn is_draining(&self, i: usize) -> bool {
+        self.drains.get(i).map_or(false, |d| d.is_some())
+    }
+
+    pub fn target(&self, i: usize) -> Option<StageMask> {
+        self.drains.get(i).and_then(|d| d.map(|d| d.to))
+    }
+
+    pub fn any_draining(&self) -> bool {
+        self.drains.iter().any(|d| d.is_some())
+    }
+
+    pub fn draining_flags(&self) -> Vec<bool> {
+        self.drains.iter().map(|d| d.is_some()).collect()
+    }
+
+    /// Start draining instance `i` toward `to`. Returns false (no-op) if
+    /// it is already draining.
+    pub fn begin(&mut self, now: f64, i: usize, to: StageMask) -> bool {
+        if self.drains[i].is_some() {
+            return false;
+        }
+        self.drains[i] = Some(Drain { to, began: now });
+        true
+    }
+
+    /// Has this drain exceeded its timeout?
+    pub fn expired(&self, now: f64, i: usize, timeout: f64) -> bool {
+        self.drains
+            .get(i)
+            .and_then(|d| *d)
+            .map_or(false, |d| now - d.began > timeout)
+    }
+
+    /// Abandon a drain (timeout): the instance keeps its current role.
+    pub fn cancel(&mut self, i: usize) {
+        if self.drains[i].take().is_some() {
+            self.cancelled += 1;
+        }
+    }
+
+    /// The instance emptied: record the flip and return the new mask.
+    pub fn complete(&mut self, now: f64, i: usize, from: StageMask) -> StageMask {
+        let d = self.drains[i].take().expect("complete() requires an active drain");
+        self.events.push(ReconfigEvent { t: now, instance: i, from, to: d.to });
+        d.to
+    }
+
+    pub fn num_reconfigs(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_flip_complete_lifecycle() {
+        let mut t = DrainTracker::new(3);
+        assert!(!t.any_draining());
+        assert!(t.begin(1.0, 1, StageMask::D));
+        assert!(t.is_draining(1));
+        assert!(!t.is_draining(0));
+        assert_eq!(t.target(1), Some(StageMask::D));
+        // double-begin is refused
+        assert!(!t.begin(1.5, 1, StageMask::E));
+        assert_eq!(t.target(1), Some(StageMask::D));
+        let to = t.complete(4.0, 1, StageMask::P);
+        assert_eq!(to, StageMask::D);
+        assert!(!t.is_draining(1));
+        assert_eq!(t.num_reconfigs(), 1);
+        assert_eq!(
+            t.events[0],
+            ReconfigEvent { t: 4.0, instance: 1, from: StageMask::P, to: StageMask::D }
+        );
+    }
+
+    #[test]
+    fn timeout_cancels_without_flip() {
+        let mut t = DrainTracker::new(2);
+        t.begin(0.0, 0, StageMask::ED);
+        assert!(!t.expired(5.0, 0, 30.0));
+        assert!(t.expired(31.0, 0, 30.0));
+        t.cancel(0);
+        assert!(!t.is_draining(0));
+        assert_eq!(t.cancelled, 1);
+        assert_eq!(t.num_reconfigs(), 0);
+        // cancel of a non-draining instance is a no-op
+        t.cancel(1);
+        assert_eq!(t.cancelled, 1);
+    }
+
+    #[test]
+    fn draining_flags_snapshot() {
+        let mut t = DrainTracker::new(3);
+        t.begin(0.0, 2, StageMask::D);
+        assert_eq!(t.draining_flags(), vec![false, false, true]);
+    }
+}

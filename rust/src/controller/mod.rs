@@ -1,0 +1,40 @@
+//! Elastic EPD control plane: online stage-load estimation and dynamic
+//! instance role reconfiguration.
+//!
+//! The offline planner (`crate::planner`, paper §4.4) chooses the *initial*
+//! disaggregation layout for a profiled workload. Real workloads drift —
+//! an image-heavy morning becomes a text-heavy afternoon — and a static
+//! layout then leaves one stage's instances idle while another's queue
+//! grows without bound. This module closes the loop from metrics back to
+//! layout, in three parts:
+//!
+//! * [`estimator::StageLoadEstimator`] — consumes per-instance queue
+//!   depths, batch occupancy and the windowed TTFT/TPOT tails
+//!   (`metrics::window_stats`), and converts per-stage backlogs into
+//!   comparable *pressures* (seconds of queued work per serving instance)
+//!   using cost-model-derived service rates ([`estimator::StageRates`]).
+//! * [`policy::ReconfigPolicy`] — decides when to flip an instance's role
+//!   (E↔P, P↔D, or toward hybrids such as ED) with hysteresis: ratio +
+//!   absolute-pressure triggers, a sustain requirement, a cooldown, and a
+//!   cost-model prediction that the post-flip bottleneck actually drops.
+//!   The donor keeps any stage nobody else covers, so the cluster stays
+//!   complete by construction.
+//! * [`executor::DrainTracker`] — drain-then-flip execution: the donor
+//!   stops receiving new work, empties through the normal §4.3 pull-based
+//!   migration protocol, and only then swaps roles. No request is ever
+//!   dropped or double-scheduled across a flip.
+//!
+//! Both execution substrates embed the same three parts: the
+//! discrete-event simulator (`SimConfig::controller`) for quantifying the
+//! win on phase-shifted workloads (`bench_elastic_reconfig`), and the real
+//! cluster (`RealCluster::start_with_controller`) where a controller
+//! thread drives it from live instance samples and exposes state through
+//! the HTTP `/status` endpoint.
+
+pub mod estimator;
+pub mod executor;
+pub mod policy;
+
+pub use estimator::{ClusterSample, InstanceSample, StageLoad, StageLoadEstimator, StageRates};
+pub use executor::{DrainTracker, ReconfigEvent};
+pub use policy::{ReconfigDecision, ReconfigPolicy};

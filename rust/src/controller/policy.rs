@@ -1,0 +1,388 @@
+//! Reconfiguration policy: decides *when* to flip an instance's role and
+//! *which* instance to flip, with hysteresis so an oscillating workload
+//! never makes the layout flap.
+//!
+//! A flip is proposed only when all of these hold:
+//!   1. the hot stage's pressure exceeds an absolute floor AND the
+//!      hot/cold pressure ratio exceeds `imbalance_ratio`;
+//!   2. the same (hot, cold) imbalance persisted for `sustain_ticks`
+//!      consecutive observations (halved when the windowed TTFT/TPOT tails
+//!      already violate the SLO — congestion emergencies react faster);
+//!   3. `cooldown` seconds have passed since the previous flip;
+//!   4. the cost-model prediction says the post-flip bottleneck pressure
+//!      drops below `accept_margin` x the current bottleneck.
+//!
+//! The donor keeps any stage that no other (non-draining) instance would
+//! cover — so flipping the only encode instance toward decode yields an
+//! ED hybrid (the paper's multi-stream colocation), never an uncovered
+//! stage. The cluster stays complete by construction.
+
+use crate::config::ControllerConfig;
+use crate::scheduler::StageMask;
+
+use super::estimator::{pressure_of, StageLoad, ENC, PRE};
+
+/// A role flip the executor should carry out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReconfigDecision {
+    pub instance: usize,
+    pub from: StageMask,
+    pub to: StageMask,
+}
+
+fn mask_of(stage: usize) -> StageMask {
+    match stage {
+        ENC => StageMask::E,
+        PRE => StageMask::P,
+        _ => StageMask::D,
+    }
+}
+
+fn serves(mask: StageMask, stage: usize) -> bool {
+    match stage {
+        ENC => mask.encode,
+        PRE => mask.prefill,
+        _ => mask.decode,
+    }
+}
+
+fn with_stage(mut mask: StageMask, stage: usize) -> StageMask {
+    match stage {
+        ENC => mask.encode = true,
+        PRE => mask.prefill = true,
+        _ => mask.decode = true,
+    }
+    mask
+}
+
+/// Stateful flip decider (owns the hysteresis bookkeeping).
+pub struct ReconfigPolicy {
+    cfg: ControllerConfig,
+    /// Time of the last flip (starts at 0 so the cooldown doubles as a
+    /// warm-up period before the first flip).
+    last_change: f64,
+    /// Consecutive ticks the same (hot, cold) imbalance held.
+    sustained: usize,
+    last_imbalance: Option<(usize, usize)>,
+}
+
+impl ReconfigPolicy {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        ReconfigPolicy { cfg, last_change: 0.0, sustained: 0, last_imbalance: None }
+    }
+
+    /// Evaluate one estimator snapshot. `masks`/`draining` describe the
+    /// current layout (draining instances are unavailable on both sides).
+    pub fn decide(
+        &mut self,
+        now: f64,
+        load: &StageLoad,
+        masks: &[StageMask],
+        draining: &[bool],
+    ) -> Option<ReconfigDecision> {
+        // hottest and coldest stages by pressure
+        let mut hot = 0;
+        let mut cold = 0;
+        for s in 1..3 {
+            if load.pressure[s] > load.pressure[hot] {
+                hot = s;
+            }
+            if load.pressure[s] < load.pressure[cold] {
+                cold = s;
+            }
+        }
+        let hot_p = load.pressure[hot];
+        let cold_p = load.pressure[cold];
+
+        let imbalanced = hot != cold
+            && hot_p > self.cfg.min_pressure
+            && hot_p > self.cfg.imbalance_ratio * cold_p.max(self.cfg.pressure_floor);
+
+        if !imbalanced {
+            self.sustained = 0;
+            self.last_imbalance = None;
+            return None;
+        }
+        if self.last_imbalance == Some((hot, cold)) {
+            self.sustained += 1;
+        } else {
+            self.sustained = 1;
+            self.last_imbalance = Some((hot, cold));
+        }
+
+        // SLO-violating tails halve the required persistence
+        let urgent = load.ttft_headroom < 1.0 || load.tpot_headroom < 1.0;
+        let needed = if urgent {
+            (self.cfg.sustain_ticks + 1) / 2
+        } else {
+            self.cfg.sustain_ticks
+        };
+        if self.sustained < needed.max(1) || now - self.last_change < self.cfg.cooldown {
+            return None;
+        }
+
+        // donor: an instance not serving the hot stage whose own stages are
+        // all comfortably below the hot pressure. Prefer one serving the
+        // cold stage; fall back to any eligible instance (e.g. after the
+        // sole encode server became a hybrid, a lightly-loaded prefill
+        // instance can still donate). Ties break by least own backlog.
+        let eligible = |i: usize, m: &StageMask| -> bool {
+            !draining.get(i).copied().unwrap_or(false)
+                && !serves(*m, hot)
+                && (0..3).all(|s| {
+                    !serves(*m, s) || load.pressure[s] * self.cfg.imbalance_ratio <= hot_p
+                })
+        };
+        let pick_donor = |require_cold: bool| -> Option<usize> {
+            let mut donor: Option<(usize, f64)> = None;
+            for (i, m) in masks.iter().enumerate() {
+                if !eligible(i, m) || (require_cold && !serves(*m, cold)) {
+                    continue;
+                }
+                let b = load.per_instance_backlog.get(i).copied().unwrap_or(0.0);
+                if donor.map_or(true, |(_, best)| b < best) {
+                    donor = Some((i, b));
+                }
+            }
+            donor.map(|(i, _)| i)
+        };
+        let donor = pick_donor(true).or_else(|| pick_donor(false))?;
+
+        // target mask: the hot stage, plus any stage only the donor covers
+        let mut to = mask_of(hot);
+        for s in 0..3 {
+            if !serves(masks[donor], s) {
+                continue;
+            }
+            let covered_elsewhere = masks.iter().enumerate().any(|(j, m)| {
+                j != donor && !draining.get(j).copied().unwrap_or(false) && serves(*m, s)
+            });
+            if !covered_elsewhere {
+                to = with_stage(to, s);
+            }
+        }
+        if to == masks[donor] {
+            return None; // nothing would actually change
+        }
+
+        // cost-model prediction: does the bottleneck actually improve?
+        let mut servers = load.servers;
+        for s in 0..3 {
+            if serves(masks[donor], s) {
+                servers[s] = servers[s].saturating_sub(1);
+            }
+            if serves(to, s) {
+                servers[s] += 1;
+            }
+        }
+        let cur_max = load.pressure.iter().cloned().fold(0.0f64, f64::max);
+        let new_max = (0..3)
+            .map(|s| pressure_of(load.backlog_secs[s], servers[s]))
+            .fold(0.0f64, f64::max);
+        let improves = if cur_max.is_infinite() {
+            new_max.is_finite()
+        } else {
+            new_max < cur_max * self.cfg.accept_margin
+        };
+        if !improves {
+            return None;
+        }
+
+        self.last_change = now;
+        self.sustained = 0;
+        self.last_imbalance = None;
+        Some(ReconfigDecision { instance: donor, from: masks[donor], to })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::estimator::DEC;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            sustain_ticks: 3,
+            cooldown: 5.0,
+            imbalance_ratio: 2.0,
+            min_pressure: 0.25,
+            pressure_floor: 0.05,
+            accept_margin: 0.95,
+            ..Default::default()
+        }
+    }
+
+    fn load(pressure: [f64; 3], servers: [usize; 3]) -> StageLoad {
+        let backlog: Vec<f64> = (0..3)
+            .map(|s| {
+                if pressure[s].is_finite() {
+                    pressure[s] * servers[s].max(1) as f64
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        StageLoad {
+            t: 0.0,
+            backlog_secs: [backlog[0], backlog[1], backlog[2]],
+            servers,
+            pressure,
+            per_instance_backlog: vec![0.0; 8],
+            ttft_headroom: f64::INFINITY,
+            tpot_headroom: f64::INFINITY,
+            samples: 10,
+        }
+    }
+
+    // 1E 2P 1D layout used by most tests
+    fn masks() -> Vec<StageMask> {
+        vec![StageMask::E, StageMask::P, StageMask::P, StageMask::D]
+    }
+
+    #[test]
+    fn sustained_imbalance_flips_idle_encode_to_hybrid_ed() {
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.0, 0.2, 4.0], [1, 2, 1]); // decode hot, encode idle
+        let draining = vec![false; 4];
+        let mut t = 10.0;
+        let mut flip = None;
+        for _ in 0..5 {
+            flip = pol.decide(t, &l, &masks(), &draining);
+            if flip.is_some() {
+                break;
+            }
+            t += 0.5;
+        }
+        let d = flip.expect("sustained imbalance must flip");
+        assert_eq!(d.instance, 0, "the idle encode instance donates");
+        // encode would be uncovered, so the donor keeps E: target is ED
+        assert_eq!(d.to, StageMask::ED);
+    }
+
+    #[test]
+    fn redundant_cold_server_flips_to_pure_hot_mask() {
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.1, 0.2, 4.0], [1, 2, 1]);
+        // make prefill the cold stage so a P instance donates
+        let l = StageLoad { pressure: [0.5, 0.05, 4.0], ..l };
+        let draining = vec![false; 4];
+        let mut t = 10.0;
+        let mut flip = None;
+        for _ in 0..5 {
+            flip = pol.decide(t, &l, &masks(), &draining);
+            if flip.is_some() {
+                break;
+            }
+            t += 0.5;
+        }
+        let d = flip.expect("flip expected");
+        assert!(d.instance == 1 || d.instance == 2, "a P instance donates");
+        assert_eq!(d.to, StageMask::D, "the other P still covers prefill");
+    }
+
+    #[test]
+    fn oscillating_imbalance_never_flips() {
+        // hot/cold swaps every tick: sustain counter never reaches 3
+        let mut pol = ReconfigPolicy::new(cfg());
+        let a = load([4.0, 0.2, 0.0], [1, 2, 1]); // encode hot, decode cold
+        let b = load([0.0, 0.2, 4.0], [1, 2, 1]); // decode hot, encode cold
+        let draining = vec![false; 4];
+        let mut t = 10.0;
+        for i in 0..40 {
+            let l = if i % 2 == 0 { &a } else { &b };
+            assert!(
+                pol.decide(t, l, &masks(), &draining).is_none(),
+                "oscillating load must not flip (tick {i})"
+            );
+            t += 0.5;
+        }
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_flips() {
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.0, 0.2, 4.0], [1, 2, 1]);
+        let draining = vec![false; 4];
+        let mut t = 10.0;
+        let mut first = None;
+        for _ in 0..5 {
+            first = pol.decide(t, &l, &masks(), &draining);
+            if first.is_some() {
+                break;
+            }
+            t += 0.5;
+        }
+        let first_t = t;
+        assert!(first.is_some());
+        // same pressure right after the flip: blocked by cooldown even
+        // after the sustain count rebuilds
+        for _ in 0..8 {
+            t += 0.5;
+            if t - first_t >= 5.0 {
+                break;
+            }
+            assert!(pol.decide(t, &l, &masks(), &draining).is_none(), "cooldown at t={t}");
+        }
+    }
+
+    #[test]
+    fn no_flip_below_absolute_pressure_floor() {
+        let mut pol = ReconfigPolicy::new(cfg());
+        // ratio is huge but absolute pressure is tiny: leave the layout be
+        let l = load([0.0, 0.001, 0.2], [1, 2, 1]);
+        let draining = vec![false; 4];
+        let mut t = 10.0;
+        for _ in 0..10 {
+            assert!(pol.decide(t, &l, &masks(), &draining).is_none());
+            t += 0.5;
+        }
+    }
+
+    #[test]
+    fn warmup_respects_cooldown_from_time_zero() {
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.0, 0.2, 4.0], [1, 2, 1]);
+        let draining = vec![false; 4];
+        // decisions before t=cooldown are always rejected
+        assert!(pol.decide(1.0, &l, &masks(), &draining).is_none());
+        assert!(pol.decide(1.5, &l, &masks(), &draining).is_none());
+        assert!(pol.decide(2.0, &l, &masks(), &draining).is_none());
+    }
+
+    #[test]
+    fn draining_instances_cannot_donate() {
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.0, 0.2, 4.0], [1, 2, 1]);
+        // the only eligible donor (the E instance) is already draining
+        let draining = vec![true, false, false, false];
+        let mut t = 10.0;
+        for _ in 0..10 {
+            let d = pol.decide(t, &l, &masks(), &draining);
+            if let Some(d) = d {
+                assert_ne!(d.instance, 0, "draining instance must not donate");
+            }
+            t += 0.5;
+        }
+    }
+
+    #[test]
+    fn uncovered_demanded_stage_is_an_emergency() {
+        // decode demanded but no decode server: pressure infinite; policy
+        // must resolve it by flipping someone toward decode
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.0, 0.1, f64::INFINITY], [1, 2, 0]);
+        let masks = vec![StageMask::E, StageMask::P, StageMask::P];
+        let draining = vec![false; 3];
+        let mut t = 10.0;
+        let mut flip = None;
+        for _ in 0..6 {
+            flip = pol.decide(t, &l, &masks, &draining);
+            if flip.is_some() {
+                break;
+            }
+            t += 0.5;
+        }
+        let d = flip.expect("emergency must flip");
+        assert!(serves(d.to, DEC));
+    }
+}

@@ -12,13 +12,19 @@ pub mod device;
 pub use device::{spawn_device, DeviceHandle};
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::cache::{CacheStore, PagedCache};
+use crate::config::ControllerConfig;
+use crate::controller::{
+    ClusterSample, DrainTracker, InstanceSample, ReconfigPolicy, StageLoadEstimator, StageRates,
+};
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, SamplingParams, Stage};
 use crate::core::sampling::Sampler;
 use crate::migrate::{MigrationKind, Offer, Payload, Pull, Release};
@@ -27,6 +33,7 @@ use crate::runtime::DecodeInput;
 use crate::scheduler::{Budgets, Policy, Queues, ReqState, Scheduler, StageMask, TaskWork};
 use crate::simulator::ClusterSpec;
 use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
 use crate::vision::Image;
 
 /// A fully preprocessed request (the paper's §4.1 Request Processor output).
@@ -54,7 +61,31 @@ enum Msg {
     Pull(Pull),
     Payload(Box<Payload>),
     Release(Release),
+    /// Elastic control plane: drain, then assume this role.
+    Reconfigure(StageMask),
+    /// The controller gave up on a drain that never emptied.
+    CancelDrain,
+    /// A peer finished a role flip; update the local peer table.
+    PeerMask { idx: usize, mask: StageMask },
+    /// A peer started/stopped draining; stop/resume offering it work.
+    PeerDrain { idx: usize, draining: bool },
     Shutdown,
+}
+
+/// Instance -> controller-thread events.
+enum ControlEvent {
+    /// Periodic queue-depth observation.
+    Sample { idx: usize, sample: InstanceSample },
+    /// A drain completed and the role flipped.
+    FlipDone { idx: usize, mask: StageMask },
+}
+
+/// Live layout state shared between the controller thread, `submit`
+/// routing, and the `/status` endpoint.
+struct ControlShared {
+    masks: Vec<StageMask>,
+    draining: Vec<bool>,
+    reconfigs: usize,
 }
 
 /// Per-request serving data living on whichever instance owns the request.
@@ -77,7 +108,15 @@ struct RealInstance {
     peers: Vec<(Sender<Msg>, StageMask)>,
     results: Sender<ServeResult>,
     epoch: Instant,
+    policy: Policy,
     sched: Box<dyn Scheduler>,
+    /// Target role while draining (elastic control plane).
+    drain_to: Option<StageMask>,
+    /// Which peers are mid-drain (kept current by `Msg::PeerDrain`).
+    peer_draining: Vec<bool>,
+    /// Channel to the controller thread, if elastic mode is on.
+    ctrl: Option<Sender<ControlEvent>>,
+    last_sample: f64,
     budgets: Budgets,
     queues: Queues,
     kv: PagedCache,
@@ -171,6 +210,18 @@ impl RealInstance {
             Msg::Offer(o) => self.inbound.push(*o),
             Msg::Pull(p) => self.serve_pull(p),
             Msg::Payload(pl) => self.receive_payload(*pl),
+            Msg::Reconfigure(mask) => self.drain_to = Some(mask),
+            Msg::CancelDrain => self.drain_to = None,
+            Msg::PeerMask { idx, mask } => {
+                if let Some(peer) = self.peers.get_mut(idx) {
+                    peer.1 = mask;
+                }
+            }
+            Msg::PeerDrain { idx, draining } => {
+                if let Some(f) = self.peer_draining.get_mut(idx) {
+                    *f = draining;
+                }
+            }
             Msg::Release(r) => {
                 // step 4: target confirmed receipt; free everything local
                 self.release_caches(r.req_id);
@@ -314,11 +365,9 @@ impl RealInstance {
             .filter(|(i, (_, m))| *i != self.idx && m.serves(next))
             .map(|(i, _)| i)
             .collect();
-        let loads = vec![0.0; candidates.len()]; // round-robin across peers
-        let Some(pick) = self.router.pick(&loads) else {
+        let Some(dst) = pick_peer(&mut self.router, &candidates, &self.peer_draining) else {
             return; // incomplete cluster: request is stranded
         };
-        let dst = candidates[pick % candidates.len()];
         let kind = if next == Stage::Prefill {
             MigrationKind::EncodeToPrefill
         } else {
@@ -351,7 +400,7 @@ impl RealInstance {
     fn step(&mut self) -> Result<bool> {
         self.admit_offers();
 
-        let mut sched = std::mem::replace(&mut self.sched, Policy::StageLevel.make(self.mask));
+        let mut sched = std::mem::replace(&mut self.sched, self.policy.make(self.mask));
         let batch = {
             let kv_free = self.kv.free_blocks();
             let img_free = self.img.free_blocks();
@@ -559,6 +608,115 @@ impl RealInstance {
         Ok(did_work)
     }
 
+    /// Drain-then-flip: once we hold no requests at all, assume the new
+    /// role and tell the controller (which updates peers and routing).
+    /// Caches are fixed-size pools in real mode, so no resize is needed.
+    fn maybe_flip(&mut self) {
+        let Some(to) = self.drain_to else { return };
+        let empty = self.queues.waiting.is_empty()
+            && self.queues.running.is_empty()
+            && self.inbound.is_empty()
+            && self.pending_in.is_empty();
+        if !empty {
+            return;
+        }
+        let from = self.mask;
+        self.mask = to;
+        self.sched = self.policy.make(to);
+        self.drain_to = None;
+        crate::util::logging::log(
+            crate::util::logging::Level::Info,
+            "instance",
+            format_args!(
+                "instance {} reconfigured {} -> {}",
+                self.idx,
+                from.label(),
+                to.label()
+            ),
+        );
+        if let Some(tx) = &self.ctrl {
+            let _ = tx.send(ControlEvent::FlipDone { idx: self.idx, mask: to });
+        }
+    }
+
+    /// Forward waiting requests this instance can no longer serve. Closes
+    /// the submit/flip race: `submit` routes under a snapshot of the
+    /// layout, so a request can arrive just after our role changed; the
+    /// scheduler would never admit it and it would wait forever. Only the
+    /// waiting queue needs this — running requests at an unserved stage
+    /// (e.g. an Offer admitted right after a flip) are migrated out by
+    /// `step()`'s post-batch transition loop, which runs every iteration.
+    fn reroute_unserved(&mut self) {
+        if self.ctrl.is_none() {
+            return; // static layout: masks never change, nothing can strand
+        }
+        let mut i = 0;
+        while i < self.queues.waiting.len() {
+            let stage = self.queues.waiting[i].stage();
+            if self.mask.serves(stage) {
+                i += 1;
+                continue;
+            }
+            let candidates: Vec<usize> = self
+                .peers
+                .iter()
+                .enumerate()
+                .filter(|(j, (_, m))| *j != self.idx && m.serves(stage))
+                .map(|(j, _)| j)
+                .collect();
+            if candidates.is_empty() {
+                i += 1; // incomplete cluster: nowhere better to send it
+                continue;
+            }
+            let Some(dst) = pick_peer(&mut self.router, &candidates, &self.peer_draining)
+            else {
+                i += 1;
+                continue;
+            };
+            let r = self.queues.waiting.remove(i).unwrap();
+            let Some(d) = self.data.remove(&r.spec.id.0) else { continue };
+            // a waiting request has made no progress: re-submit it whole
+            let prepared = PreparedRequest {
+                spec: r.spec,
+                tokens: d.tokens,
+                pixels: d.pixels,
+                sampling: d.sampler.params().clone(),
+            };
+            let _ = self.peers[dst].0.send(Msg::Submit(Box::new(prepared)));
+        }
+    }
+
+    /// Periodic queue-depth sample for the controller's estimator.
+    fn maybe_sample(&mut self) {
+        if self.ctrl.is_none() {
+            return;
+        }
+        let now = self.now();
+        if now - self.last_sample < 0.05 {
+            return;
+        }
+        self.last_sample = now;
+        let mut s = InstanceSample::idle(self.mask, self.drain_to.is_some());
+        // migrating requests are counted at the pulling side
+        for r in self
+            .queues
+            .waiting
+            .iter()
+            .chain(self.queues.running.iter().filter(|r| !r.migrating))
+        {
+            s.add_req(r);
+        }
+        for o in &self.inbound {
+            s.add_req(&o.req);
+        }
+        for o in self.pending_in.values() {
+            s.add_req(&o.req);
+        }
+        if let Some(tx) = &self.ctrl {
+            let _ = tx.send(ControlEvent::Sample { idx: self.idx, sample: s });
+        }
+    }
+
     fn finish(&mut self, id: RequestId) {
         let Some(pos) = self.queues.running.iter().position(|r| r.spec.id == id) else {
             return;
@@ -590,6 +748,9 @@ impl RealInstance {
                     Err(_) => break,
                 }
             }
+            self.maybe_flip();
+            self.reroute_unserved();
+            self.maybe_sample();
             let worked = match self.step() {
                 Ok(w) => w,
                 Err(e) => {
@@ -616,6 +777,31 @@ impl RealInstance {
             }
         }
     }
+}
+
+/// Round-robin over `candidates`, skipping mid-drain peers; falls back to
+/// them when no one else is eligible, so work is never dropped just
+/// because a reconfiguration is in flight. Returns the chosen instance
+/// index (the real-mode analogue of the simulator's `route_among`).
+fn pick_peer(router: &mut Router, candidates: &[usize], draining: &[bool]) -> Option<usize> {
+    if candidates.is_empty() {
+        return None;
+    }
+    let gated: Vec<f64> = candidates
+        .iter()
+        .map(|&j| {
+            if draining.get(j).copied().unwrap_or(false) {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    if let Some(p) = router.pick(&gated) {
+        return Some(candidates[p]);
+    }
+    let raw = vec![0.0; candidates.len()];
+    router.pick(&raw).map(|p| candidates[p])
 }
 
 fn kv_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
@@ -650,11 +836,29 @@ pub struct RealCluster {
     tokenizer: Tokenizer,
     epoch: Instant,
     next_id: u64,
+    /// Elastic control plane (None = static layout).
+    control: Option<Arc<Mutex<ControlShared>>>,
+    ctrl_stop: Arc<AtomicBool>,
+    ctrl_join: Option<JoinHandle<()>>,
 }
 
 impl RealCluster {
-    /// Boot the device thread + one worker thread per instance.
+    /// Boot the device thread + one worker thread per instance with a
+    /// static layout (the elastic controller off).
     pub fn start(artifacts_dir: &str, cluster: &ClusterSpec, policy: Policy) -> Result<RealCluster> {
+        RealCluster::start_with_controller(artifacts_dir, cluster, policy, None)
+    }
+
+    /// Boot the cluster, optionally with the elastic control plane: a
+    /// controller thread consumes per-instance queue samples, runs the
+    /// estimator + reconfiguration policy, and drives drain-then-flip
+    /// role changes over the instance mailboxes.
+    pub fn start_with_controller(
+        artifacts_dir: &str,
+        cluster: &ClusterSpec,
+        policy: Policy,
+        controller: Option<ControllerConfig>,
+    ) -> Result<RealCluster> {
         let (device, device_join) = spawn_device(artifacts_dir)?;
         let cfg = *device.cfg();
         let masks = cluster.instance_masks();
@@ -668,6 +872,20 @@ impl RealCluster {
             senders.push(tx);
             receivers.push(rx);
         }
+
+        let ctrl_stop = Arc::new(AtomicBool::new(false));
+        let (ctrl_tx, ctrl_rx, control) = match &controller {
+            Some(_) => {
+                let (tx, rx) = channel::<ControlEvent>();
+                let shared = Arc::new(Mutex::new(ControlShared {
+                    masks: masks.clone(),
+                    draining: vec![false; masks.len()],
+                    reconfigs: 0,
+                }));
+                (Some(tx), Some(rx), Some(shared))
+            }
+            None => (None, None, None),
+        };
 
         let budgets = Budgets {
             token_budget: 1024, // prompts always fit one bucket: never chunked
@@ -691,7 +909,12 @@ impl RealCluster {
                 peers,
                 results: results_tx.clone(),
                 epoch,
+                policy,
                 sched: policy.make(mask),
+                drain_to: None,
+                peer_draining: vec![false; masks.len()],
+                ctrl: ctrl_tx.clone(),
+                last_sample: 0.0,
                 budgets,
                 queues: Queues::default(),
                 kv: PagedCache::new(cfg.pool_blocks, cfg.block_size, cfg.max_blocks_per_seq),
@@ -712,6 +935,20 @@ impl RealCluster {
             );
         }
 
+        drop(ctrl_tx); // controller rx must disconnect when instances exit
+
+        let ctrl_join = match (controller, ctrl_rx, control.clone()) {
+            (Some(cc), Some(rx), Some(shared)) => Some(spawn_controller_thread(
+                cc,
+                rx,
+                shared,
+                senders.clone(),
+                epoch,
+                Arc::clone(&ctrl_stop),
+            )),
+            _ => None,
+        };
+
         Ok(RealCluster {
             senders,
             masks,
@@ -723,6 +960,9 @@ impl RealCluster {
             tokenizer: Tokenizer::new(),
             epoch,
             next_id: 0,
+            control,
+            ctrl_stop,
+            ctrl_join,
         })
     }
 
@@ -771,15 +1011,19 @@ impl RealCluster {
             output_tokens: sampling.max_tokens,
         };
         let first = spec.first_stage();
-        let candidates: Vec<usize> = (0..self.masks.len())
-            .filter(|&i| self.masks[i].serves(first))
-            .collect();
-        let loads = vec![0.0; candidates.len()];
-        let pick = self
-            .router
-            .pick(&loads)
+        // live layout: under the elastic controller, masks change and
+        // draining instances must not receive new work
+        let (masks, draining) = match &self.control {
+            Some(c) => {
+                let s = c.lock().unwrap();
+                (s.masks.clone(), s.draining.clone())
+            }
+            None => (self.masks.clone(), vec![false; self.masks.len()]),
+        };
+        let candidates: Vec<usize> =
+            (0..masks.len()).filter(|&i| masks[i].serves(first)).collect();
+        let target = pick_peer(&mut self.router, &candidates, &draining)
             .ok_or_else(|| anyhow!("no instance serves {first:?}"))?;
-        let target = candidates[pick % candidates.len()];
         self.senders[target]
             .send(Msg::Submit(Box::new(PreparedRequest { spec, tokens, pixels, sampling })))
             .map_err(|_| anyhow!("instance {target} is down"))?;
@@ -811,7 +1055,37 @@ impl RealCluster {
         self.results_rx.take()
     }
 
-    /// Graceful shutdown: stop instances, then the device thread.
+    /// Live layout + controller state (the `/status` endpoint's body).
+    pub fn status(&self) -> Json {
+        let (masks, draining, reconfigs, elastic) = match &self.control {
+            Some(c) => {
+                let s = c.lock().unwrap();
+                (s.masks.clone(), s.draining.clone(), s.reconfigs, true)
+            }
+            None => (self.masks.clone(), vec![false; self.masks.len()], 0, false),
+        };
+        let instances: Vec<Json> = masks
+            .iter()
+            .zip(&draining)
+            .enumerate()
+            .map(|(i, (m, d))| {
+                Json::obj(vec![
+                    ("idx", Json::num(i as f64)),
+                    ("stages", Json::str(m.label())),
+                    ("draining", Json::Bool(*d)),
+                ])
+            })
+            .collect();
+        let label = masks.iter().map(|m| m.label()).collect::<Vec<_>>().join("+");
+        Json::obj(vec![
+            ("cluster", Json::str(label)),
+            ("elastic", Json::Bool(elastic)),
+            ("reconfigs", Json::num(reconfigs as f64)),
+            ("instances", Json::arr(instances)),
+        ])
+    }
+
+    /// Graceful shutdown: stop instances, the controller, then the device.
     pub fn shutdown(mut self) {
         for tx in &self.senders {
             let _ = tx.send(Msg::Shutdown);
@@ -819,9 +1093,117 @@ impl RealCluster {
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
+        self.ctrl_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.ctrl_join.take() {
+            let _ = j.join();
+        }
         self.device.shutdown();
         if let Some(j) = self.device_join.take() {
             let _ = j.join();
         }
     }
+}
+
+/// The elastic controller thread: folds instance samples into the
+/// estimator, runs the flip policy once per tick, and finalizes flips
+/// (peer-table updates + shared layout state) when instances report done.
+fn spawn_controller_thread(
+    cc: ControllerConfig,
+    rx: Receiver<ControlEvent>,
+    shared: Arc<Mutex<ControlShared>>,
+    senders: Vec<Sender<Msg>>,
+    epoch: Instant,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("hydra-controller".into())
+        .spawn(move || {
+            let n = senders.len();
+            let mut est =
+                StageLoadEstimator::new(cc.clone(), StageRates::default_real(), None);
+            let mut pol = ReconfigPolicy::new(cc.clone());
+            let mut tracker = DrainTracker::new(n);
+            let mut latest: Vec<Option<InstanceSample>> = vec![None; n];
+            let mut last_tick = 0.0f64;
+            let poll = Duration::from_millis(((cc.tick * 500.0) as u64).max(1));
+            let broadcast_drain = |senders: &[Sender<Msg>], idx: usize, draining: bool| {
+                for tx in senders {
+                    let _ = tx.send(Msg::PeerDrain { idx, draining });
+                }
+            };
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match rx.recv_timeout(poll) {
+                    Ok(ControlEvent::Sample { idx, sample }) => {
+                        if idx < n {
+                            latest[idx] = Some(sample);
+                        }
+                    }
+                    Ok(ControlEvent::FlipDone { idx, mask }) => {
+                        let now = epoch.elapsed().as_secs_f64();
+                        let from = {
+                            let mut s = shared.lock().unwrap();
+                            let from = s.masks[idx];
+                            s.masks[idx] = mask;
+                            s.draining[idx] = false;
+                            s.reconfigs += 1;
+                            from
+                        };
+                        // may race with a just-sent CancelDrain; the flip won
+                        if tracker.is_draining(idx) {
+                            tracker.complete(now, idx, from);
+                        }
+                        for tx in &senders {
+                            let _ = tx.send(Msg::PeerMask { idx, mask });
+                        }
+                        broadcast_drain(&senders, idx, false);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                let now = epoch.elapsed().as_secs_f64();
+                if now - last_tick < cc.tick {
+                    continue;
+                }
+                last_tick = now;
+                // give up on drains that never empty (sustained inflow):
+                // the instance keeps its current role and rejoins routing
+                for i in 0..n {
+                    if tracker.is_draining(i) && tracker.expired(now, i, cc.drain_timeout) {
+                        tracker.cancel(i);
+                        shared.lock().unwrap().draining[i] = false;
+                        let _ = senders[i].send(Msg::CancelDrain);
+                        broadcast_drain(&senders, i, false);
+                    }
+                }
+                let (masks, draining) = {
+                    let s = shared.lock().unwrap();
+                    (s.masks.clone(), s.draining.clone())
+                };
+                let insts: Vec<InstanceSample> = (0..n)
+                    .map(|i| {
+                        latest[i]
+                            .clone()
+                            .unwrap_or_else(|| InstanceSample::idle(masks[i], draining[i]))
+                    })
+                    .collect();
+                est.observe(ClusterSample {
+                    t: now,
+                    instances: insts,
+                    ttft_p90: None,
+                    tpot_p90: None,
+                });
+                let Some(load) = est.snapshot() else { continue };
+                if let Some(d) = pol.decide(now, &load, &masks, &draining) {
+                    if tracker.begin(now, d.instance, d.to) {
+                        shared.lock().unwrap().draining[d.instance] = true;
+                        let _ = senders[d.instance].send(Msg::Reconfigure(d.to));
+                        broadcast_drain(&senders, d.instance, true);
+                    }
+                }
+            }
+        })
+        .expect("spawn controller")
 }

@@ -10,7 +10,12 @@
 //!   KV/image cache managers, pull-based migrate scheduler, and the hybrid
 //!   EPD disaggregation planner, plus a roofline-calibrated discrete-event
 //!   simulator that regenerates every table and figure in the paper's
-//!   evaluation.
+//!   evaluation. On top of the static planner sits an **elastic control
+//!   plane** (`controller`): a stage-load estimator over windowed queue
+//!   depths and TTFT/TPOT tails, a hysteresis reconfiguration policy, and
+//!   a drain-then-flip executor that retargets instance roles online when
+//!   the workload's encode/prefill/decode mix drifts — the planner picks
+//!   the initial layout, the controller keeps it matched to the traffic.
 //! * **Layer 2** — a JAX vision-language model (`python/compile/model.py`)
 //!   AOT-lowered to HLO text artifacts executed here via the PJRT C API.
 //! * **Layer 1** — Pallas kernels (paged attention, flash prefill, fused
@@ -31,6 +36,7 @@ pub mod workload;
 pub mod metrics;
 pub mod simulator;
 pub mod planner;
+pub mod controller;
 pub mod runtime;
 pub mod migrate;
 pub mod instance;

@@ -31,7 +31,7 @@ use hydrainfer::util::cli::Args;
 use hydrainfer::workload::{Dataset, PoissonGenerator, Trace};
 
 fn main() {
-    let args = Args::from_env(&["help", "verbose"]);
+    let args = Args::from_env(&["help", "verbose", "goodput", "elastic"]);
     if args.flag("verbose") {
         hydrainfer::util::logging::set_level(hydrainfer::util::logging::Level::Debug);
     }
@@ -58,9 +58,10 @@ fn print_usage() {
          \n\
          USAGE: hydrainfer <serve|simulate|plan|budgets|workload> [options]\n\
          \n\
-         serve     --cluster 1E1P2D --port 8077 --artifacts artifacts\n\
+         serve     --cluster 1E1P2D --port 8077 --artifacts artifacts [--elastic]\n\
          simulate  --model llava-1.5-7b --dataset textcaps --cluster 1E3P4D\n\
          \x20         --rate 8 --requests 200 --policy stage-level [--goodput]\n\
+         \x20         [--elastic]  (online role reconfiguration)\n\
          plan      --model llava-next-7b --dataset textcaps --gpus 8\n\
          budgets   --model llava-1.5-7b --tpot 0.04\n\
          workload  --model llava-1.5-7b --dataset mme --rate 4 --n 500\n\
@@ -99,12 +100,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let port = args.usize_or("port", 8077)?;
     let policy = policy_arg(args)?;
+    let elastic = args.flag("elastic").then(hydrainfer::config::ControllerConfig::default);
     println!("loading artifacts from `{artifacts}` (compiles once, ~30s)...");
-    let rc = RealCluster::start(artifacts, &cluster, policy)?;
+    let rc = RealCluster::start_with_controller(artifacts, &cluster, policy, elastic)?;
     let server = ApiServer::start(rc, &format!("127.0.0.1:{port}"))?;
-    println!("serving cluster {} on http://{}", cluster.label(), server.addr);
+    println!(
+        "serving cluster {} on http://{}{}",
+        cluster.label(),
+        server.addr,
+        if args.flag("elastic") { " (elastic controller on)" } else { "" }
+    );
     println!("  POST /v1/completions {{\"prompt\": \"hi\", \"max_tokens\": 8, \"image\": true}}");
     println!("  GET  /health");
+    println!("  GET  /status");
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -123,6 +131,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let mut cfg = SimConfig::new(model.clone(), cluster.clone(), policy, slo);
     cfg.seed = seed;
+    if args.flag("elastic") {
+        cfg.controller = Some(hydrainfer::config::ControllerConfig::default());
+    }
     if args.flag("goodput") {
         let g = goodput_search(
             |r| {
@@ -158,12 +169,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         policy.name()
     );
     println!(
-        "  finished {}/{}  batches={}  migrations={}",
+        "  finished {}/{}  batches={}  migrations={}  reconfigs={}",
         m.num_finished(),
         n,
         res.batches,
-        res.migrations
+        res.migrations,
+        res.reconfigs
     );
+    for ev in &res.reconfig_events {
+        println!(
+            "  reconfig @ {:.1}s: instance {} {} -> {}",
+            ev.t,
+            ev.instance,
+            ev.from.label(),
+            ev.to.label()
+        );
+    }
     println!(
         "  TTFT  mean {:.4}s  p50 {:.4}s  p90 {:.4}s  p99 {:.4}s",
         m.ttft().mean(),

@@ -111,6 +111,12 @@ impl RunMetrics {
         tokens as f64 / self.makespan
     }
 
+    /// Rolling view: TTFT/TPOT restricted to requests that finished after
+    /// `since` — what the online controller's estimator consumes.
+    pub fn window(&self, since: f64) -> WindowStats {
+        window_stats(self.lifecycles.values(), since)
+    }
+
     /// Mean seconds spent in each of the eight phases (Fig. 13 bars).
     pub fn phase_breakdown(&self) -> [f64; 8] {
         let mut out = [0.0; 8];
@@ -125,6 +131,49 @@ impl RunMetrics {
         }
         out
     }
+}
+
+/// Windowed latency tails: the subset of [`RunMetrics`] the elastic
+/// controller sees — only requests that *finished* inside the window, so a
+/// drifting workload shows up in the tails within one window length.
+#[derive(Debug, Default)]
+pub struct WindowStats {
+    pub ttft: Summary,
+    pub tpot: Summary,
+    /// Requests that finished inside the window.
+    pub finished: usize,
+}
+
+impl WindowStats {
+    /// p90 TTFT, if any request finished in the window.
+    pub fn ttft_p90(&self) -> Option<f64> {
+        if self.ttft.is_empty() { None } else { Some(self.ttft.p90()) }
+    }
+    /// p90 inter-token latency, if any multi-token request finished.
+    pub fn tpot_p90(&self) -> Option<f64> {
+        if self.tpot.is_empty() { None } else { Some(self.tpot.p90()) }
+    }
+}
+
+/// Compute [`WindowStats`] over any lifecycle collection (the simulator
+/// holds lifecycles in a plain map mid-run, before a `RunMetrics` exists).
+pub fn window_stats<'a>(
+    lifecycles: impl IntoIterator<Item = &'a Lifecycle>,
+    since: f64,
+) -> WindowStats {
+    let mut w = WindowStats::default();
+    for lc in lifecycles {
+        let Some(f) = lc.finished_at else { continue };
+        if f < since {
+            continue;
+        }
+        w.finished += 1;
+        if let Some(t) = lc.ttft() {
+            w.ttft.add(t);
+        }
+        w.tpot.extend(&lc.tpots());
+    }
+    w
 }
 
 /// Goodput (paper §2.3): the maximum request rate at which SLO attainment
@@ -218,6 +267,29 @@ mod tests {
     fn goodput_zero_when_never_attained() {
         let g = goodput_search(|_| 0.0, 0.9, 16.0, 0.05);
         assert!(g < 0.3, "goodput = {g}");
+    }
+
+    #[test]
+    fn window_stats_only_counts_recent_finishes() {
+        let mut m = RunMetrics::default();
+        m.insert(RequestId(1), lc(0.0, 0.2, 0.03, 5)); // finishes at 0.32
+        m.insert(RequestId(2), lc(9.0, 9.4, 0.05, 5)); // finishes at 9.6
+        let mut unfinished = Lifecycle::new(9.5);
+        unfinished.record_token(9.7);
+        m.insert(RequestId(3), unfinished);
+        let w = m.window(5.0);
+        assert_eq!(w.finished, 1, "only the late request is in the window");
+        assert_eq!(w.ttft.len(), 1);
+        assert!((w.ttft.mean() - 0.4).abs() < 1e-9);
+        assert_eq!(w.tpot.len(), 4);
+        assert!((w.tpot_p90().unwrap() - 0.05).abs() < 1e-9);
+        // the whole run
+        let all = m.window(0.0);
+        assert_eq!(all.finished, 2);
+        // empty window
+        let none = m.window(100.0);
+        assert_eq!(none.finished, 0);
+        assert!(none.ttft_p90().is_none() && none.tpot_p90().is_none());
     }
 
     #[test]

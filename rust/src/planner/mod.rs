@@ -6,6 +6,11 @@
 //! colocated EPD) and, for each, every node-ratio partition of the GPU
 //! budget; evaluates each candidate by simulating the target workload; and
 //! selects by goodput under the SLO (ties broken by mean TTFT).
+//!
+//! The planner is the *initializer* of the elastic control plane
+//! (`crate::controller`): it picks the best static layout for the profiled
+//! workload, and the online controller then drifts that layout as the
+//! live encode/prefill/decode mix changes — see [`Plan::initial_layout`].
 
 use crate::config::{ModelSpec, SloSpec};
 use crate::metrics::goodput_search;
@@ -100,6 +105,13 @@ pub struct Plan {
 impl Plan {
     pub fn best(&self) -> &PlanCandidate {
         &self.candidates[0]
+    }
+
+    /// The layout to boot the cluster with. Under the elastic controller
+    /// this is only the starting point: instance roles keep adapting to
+    /// the live workload from here.
+    pub fn initial_layout(&self) -> ClusterSpec {
+        self.best().cluster.clone()
     }
 }
 
@@ -248,6 +260,7 @@ mod tests {
         let plan = plan(&model, &dataset, slo, &pc);
         assert_eq!(plan.candidates.len(), 1 + 2);
         assert!(plan.best().goodput > 0.0, "best goodput must be positive");
+        assert_eq!(plan.initial_layout(), plan.best().cluster);
         // ranked descending
         for w in plan.candidates.windows(2) {
             assert!(w[0].goodput >= w[1].goodput);

@@ -27,23 +27,32 @@ impl Router {
         Router { policy, rr: 0, rng: Rng::new(seed) }
     }
 
-    /// Pick an index into `loads` (lower load = more attractive). Returns
-    /// None when `loads` is empty.
+    /// Pick an index into `loads` (lower load = more attractive). A
+    /// non-finite load (infinity/NaN) marks a candidate as *ineligible* —
+    /// e.g. an instance mid-drain during a role reconfiguration — and it
+    /// is never picked under any policy. Returns None when `loads` is
+    /// empty or no candidate is eligible.
     pub fn pick(&mut self, loads: &[f64]) -> Option<usize> {
-        if loads.is_empty() {
+        let eligible: Vec<usize> = loads
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_finite())
+            .map(|(i, _)| i)
+            .collect();
+        if eligible.is_empty() {
             return None;
         }
         Some(match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.rr % loads.len();
+                let i = eligible[self.rr % eligible.len()];
                 self.rr += 1;
                 i
             }
-            RoutePolicy::Random => self.rng.below(loads.len()),
+            RoutePolicy::Random => eligible[self.rng.below(eligible.len())],
             RoutePolicy::LeastLoaded => {
-                let mut best = 0;
-                for (i, &l) in loads.iter().enumerate() {
-                    if l < loads[best] {
+                let mut best = eligible[0];
+                for &i in &eligible {
+                    if loads[i] < loads[best] {
                         best = i;
                     }
                 }
@@ -87,5 +96,37 @@ mod tests {
     fn empty_candidates() {
         let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
         assert_eq!(r.pick(&[]), None);
+    }
+
+    #[test]
+    fn draining_instances_are_ineligible() {
+        // regression: a mid-drain instance advertises load = infinity and
+        // must never receive new work, under any policy
+        let inf = f64::INFINITY;
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
+        assert_eq!(r.pick(&[inf, 1.0, 2.0]), Some(1));
+        assert_eq!(r.pick(&[3.0, inf, 2.0]), Some(2));
+
+        let mut rr = Router::new(RoutePolicy::RoundRobin, 0);
+        let picks: Vec<_> = (0..4).map(|_| rr.pick(&[0.0, inf, 0.0]).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "round-robin skips the draining slot");
+
+        let mut rnd = Router::new(RoutePolicy::Random, 42);
+        for _ in 0..100 {
+            assert_ne!(rnd.pick(&[0.0, inf, 0.0]), Some(1));
+        }
+    }
+
+    #[test]
+    fn all_draining_yields_none() {
+        let inf = f64::INFINITY;
+        for policy in [RoutePolicy::LeastLoaded, RoutePolicy::RoundRobin, RoutePolicy::Random] {
+            let mut r = Router::new(policy, 7);
+            assert_eq!(r.pick(&[inf, inf]), None, "{policy:?}");
+        }
+        // NaN is also ineligible
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
+        assert_eq!(r.pick(&[f64::NAN, 1.0]), Some(1));
+        assert_eq!(r.pick(&[f64::NAN]), None);
     }
 }

@@ -177,6 +177,12 @@ pub struct StageMask {
     pub decode: bool,
 }
 
+impl Default for StageMask {
+    fn default() -> Self {
+        StageMask::EPD
+    }
+}
+
 impl StageMask {
     pub const EPD: StageMask = StageMask { encode: true, prefill: true, decode: true };
     pub const E: StageMask = StageMask { encode: true, prefill: false, decode: false };
@@ -184,6 +190,7 @@ impl StageMask {
     pub const D: StageMask = StageMask { encode: false, prefill: false, decode: true };
     pub const EP: StageMask = StageMask { encode: true, prefill: true, decode: false };
     pub const ED: StageMask = StageMask { encode: true, prefill: false, decode: true };
+    pub const PD: StageMask = StageMask { encode: false, prefill: true, decode: true };
 
     pub fn serves(&self, s: Stage) -> bool {
         match s {

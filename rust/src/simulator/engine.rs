@@ -2,6 +2,10 @@
 
 use std::collections::{BinaryHeap, HashMap};
 
+use crate::controller::{
+    ClusterSample, DrainTracker, InstanceSample, ReconfigEvent, ReconfigPolicy,
+    StageLoadEstimator, StageRates,
+};
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, Stage};
 use crate::costmodel::{encode_cost, iteration_cost, parallel_time, sequential_time, Cost};
 use crate::metrics::RunMetrics;
@@ -22,6 +26,8 @@ enum EvKind {
     Arrival(usize),
     BatchDone(usize),
     TransferDone { src: usize, dst: usize, req: RequestId },
+    /// Periodic elastic-controller evaluation (only when enabled).
+    ControllerTick,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -146,6 +152,10 @@ pub struct SimResult {
     pub batches: usize,
     /// Requests still unfinished at the horizon.
     pub unfinished: usize,
+    /// Completed online role flips (0 when the controller is off).
+    pub reconfigs: usize,
+    /// Flip history: when, which instance, from which role to which.
+    pub reconfig_events: Vec<ReconfigEvent>,
 }
 
 /// Run the simulation over a request trace.
@@ -187,6 +197,20 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         push(&mut heap, r.arrival, EvKind::Arrival(i), &mut seq);
     }
 
+    // elastic control plane (estimator -> policy -> drain tracker)
+    let mut tracker = DrainTracker::new(instances.len());
+    let mut controller = cfg.controller.as_ref().map(|cc| {
+        let rates = StageRates::from_model(&cfg.model, &cfg.device);
+        (
+            cc.clone(),
+            StageLoadEstimator::new(cc.clone(), rates, Some(cfg.slo)),
+            ReconfigPolicy::new(cc.clone()),
+        )
+    });
+    if let Some((cc, _, _)) = &controller {
+        push(&mut heap, cc.tick, EvKind::ControllerTick, &mut seq);
+    }
+
     let mut lifecycles: HashMap<u64, Lifecycle> = HashMap::new();
     let mut ready_since: HashMap<u64, f64> = HashMap::new();
     let mut migrations = 0usize;
@@ -210,13 +234,13 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     .filter(|inst| inst.mask.serves(first))
                     .map(|inst| inst.id)
                     .collect();
-                let loads: Vec<f64> = candidates.iter().map(|&i| instances[i].load()).collect();
-                let Some(pick) = router.pick(&loads) else {
+                let Some(target) =
+                    route_among(&mut router, &candidates, instances.as_slice(), &tracker)
+                else {
                     // no instance can serve this request type: drop (stays
                     // unfinished and counts as an SLO violation)
                     continue;
                 };
-                let target = candidates[pick];
                 instances[target].queues.waiting.push_back(ReqState::new(spec));
                 try_start(&mut instances, target, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
             }
@@ -238,6 +262,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     &mut lifecycles,
                     &mut ready_since,
                     &mut router,
+                    &tracker,
                     &mut migrations,
                 );
                 // wake everyone: migrations may have unblocked peers
@@ -272,6 +297,67 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
                 }
             }
+
+            EvKind::ControllerTick => {
+                let Some((cc, est, pol)) = controller.as_mut() else { continue };
+                // (1) a completed flip elsewhere may have orphaned a
+                // hand-off attempt: re-offer stranded requests first
+                retry_stranded(&mut instances, now, cfg, &mut router, &tracker, &mut migrations);
+
+                // (2) observe queue depths + windowed latency tails
+                let w = crate::metrics::window_stats(lifecycles.values(), now - cc.window);
+                est.observe(cluster_sample(&instances, &tracker, now, &w));
+
+                // (3) decide: at most one new drain per tick
+                if let Some(load) = est.snapshot() {
+                    let masks: Vec<StageMask> = instances.iter().map(|i| i.mask).collect();
+                    let draining = tracker.draining_flags();
+                    if let Some(d) = pol.decide(now, &load, &masks, &draining) {
+                        tracker.begin(now, d.instance, d.to);
+                    }
+                }
+
+                // (4) progress drains: cancel expired ones, flip emptied ones
+                for iid in 0..instances.len() {
+                    if !tracker.is_draining(iid) {
+                        continue;
+                    }
+                    if tracker.expired(now, iid, cc.drain_timeout) {
+                        tracker.cancel(iid);
+                        continue;
+                    }
+                    let inst = &instances[iid];
+                    let empty = inst.current.is_none()
+                        && inst.queues.total() == 0
+                        && inst.inbox.is_empty()
+                        && inst.incoming.is_empty();
+                    if empty {
+                        let to = tracker.complete(now, iid, inst.mask);
+                        let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, to);
+                        let inst = &mut instances[iid];
+                        inst.mask = to;
+                        inst.sched = cfg.policy.make(to);
+                        // the instance is empty: re-partition its HBM for
+                        // the new role's cache mix
+                        inst.kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
+                        inst.img = PagedCache::new(img_blocks, IMG_BLOCK, 64);
+                    }
+                }
+
+                // (5) wake the cluster (retries may have queued pulls)
+                process_inboxes(&mut instances, now, link_lat, link_bw, &mut heap, &mut seq);
+                for i in 0..instances.len() {
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                }
+
+                // (6) keep ticking while the run is live
+                let live = lifecycles.len() < requests.len()
+                    || lifecycles.values().any(|lc| lc.finished_at.is_none())
+                    || tracker.any_draining();
+                if live && now + cc.tick <= cfg.horizon {
+                    push(&mut heap, now + cc.tick, EvKind::ControllerTick, &mut seq);
+                }
+            }
         }
     }
 
@@ -284,7 +370,148 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         }
         metrics.insert(RequestId(id), lc);
     }
-    SimResult { metrics, migrations, batches, unfinished }
+    SimResult {
+        metrics,
+        migrations,
+        batches,
+        unfinished,
+        reconfigs: tracker.num_reconfigs(),
+        reconfig_events: tracker.events,
+    }
+}
+
+/// Route among `candidates`, treating mid-drain instances as ineligible
+/// (infinite load). If *every* candidate is mid-drain, fall back to their
+/// raw loads: work is never dropped just because flips are in flight.
+fn route_among(
+    router: &mut Router,
+    candidates: &[usize],
+    instances: &[SimInstance],
+    tracker: &DrainTracker,
+) -> Option<usize> {
+    if candidates.is_empty() {
+        return None;
+    }
+    let gated: Vec<f64> = candidates
+        .iter()
+        .map(|&i| if tracker.is_draining(i) { f64::INFINITY } else { instances[i].load() })
+        .collect();
+    if let Some(p) = router.pick(&gated) {
+        return Some(candidates[p]);
+    }
+    let raw: Vec<f64> = candidates.iter().map(|&i| instances[i].load()).collect();
+    router.pick(&raw).map(|p| candidates[p])
+}
+
+/// One controller-tick observation: per-instance backlogs by next stage
+/// (queues + in-flight pulls) plus the windowed latency tails.
+fn cluster_sample(
+    instances: &[SimInstance],
+    tracker: &DrainTracker,
+    now: f64,
+    w: &crate::metrics::WindowStats,
+) -> ClusterSample {
+    let mut out = ClusterSample {
+        t: now,
+        instances: Vec::with_capacity(instances.len()),
+        ttft_p90: w.ttft_p90(),
+        tpot_p90: w.tpot_p90(),
+    };
+    for inst in instances {
+        let mut s = InstanceSample::idle(inst.mask, tracker.is_draining(inst.id));
+        s.batch_items = inst.current.as_ref().map_or(0, |(b, _)| b.items.len());
+        // skip migrating requests at the source: the in-flight copy in the
+        // target's inbox/incoming already carries their backlog
+        for r in inst
+            .queues
+            .waiting
+            .iter()
+            .chain(inst.queues.running.iter().filter(|r| !r.migrating))
+        {
+            s.add_req(r);
+        }
+        for p in inst.inbox.iter().chain(inst.incoming.values()) {
+            s.add_req(&p.req);
+        }
+        out.instances.push(s);
+    }
+    out
+}
+
+/// Re-offer running requests whose next stage their host no longer serves
+/// and that own no in-flight migration — a role flip (or an earlier
+/// failed hand-off) can orphan them, and nothing else retries.
+fn retry_stranded(
+    instances: &mut Vec<SimInstance>,
+    now: f64,
+    cfg: &SimConfig,
+    router: &mut Router,
+    tracker: &DrainTracker,
+    migrations: &mut usize,
+) {
+    for iid in 0..instances.len() {
+        let mask = instances[iid].mask;
+        let stranded: Vec<(RequestId, Stage)> = instances[iid]
+            .queues
+            .running
+            .iter()
+            .filter(|r| !r.migrating && !mask.serves(r.stage()))
+            .map(|r| (r.spec.id, r.stage()))
+            .collect();
+        for (id, stage) in stranded {
+            start_migration(instances, iid, id, stage, now, cfg, router, tracker, migrations);
+        }
+    }
+}
+
+/// §4.3 step 1 for one request: snapshot it, pick a pull target for its
+/// next stage, and enqueue the offer in the target's inbox.
+#[allow(clippy::too_many_arguments)]
+fn start_migration(
+    instances: &mut Vec<SimInstance>,
+    iid: usize,
+    id: RequestId,
+    next_stage: Stage,
+    now: f64,
+    cfg: &SimConfig,
+    router: &mut Router,
+    tracker: &DrainTracker,
+    migrations: &mut usize,
+) {
+    let Some(r) = instances[iid].queues.find_running(id) else { return };
+    r.migrating = true;
+    let snapshot = r.clone();
+    let phase = match next_stage {
+        Stage::Prefill => Phase::EpMigration,
+        _ => Phase::PdMigration,
+    };
+    let bytes = match next_stage {
+        // EP migration carries the image-token embeddings
+        Stage::Prefill => {
+            crate::costmodel::ops::image_payload_bytes(&cfg.model, snapshot.spec.image_tokens())
+        }
+        // PD migration carries the prefix KV cache
+        _ => crate::costmodel::ops::kv_payload_bytes(&cfg.model, snapshot.spec.prefill_tokens()),
+    };
+    let candidates: Vec<usize> = instances
+        .iter()
+        .filter(|inst| inst.id != iid && inst.mask.serves(next_stage))
+        .map(|inst| inst.id)
+        .collect();
+    if let Some(dst) = route_among(router, &candidates, instances.as_slice(), tracker) {
+        *migrations += 1;
+        instances[dst].inbox.push(PendingPull {
+            req: snapshot,
+            src: iid,
+            phase,
+            bytes,
+            created: now,
+        });
+    } else if let Some(r) = instances[iid].queues.find_running(id) {
+        // nowhere to go (incomplete cluster): request is stuck; it will
+        // count as unfinished. Un-mark so we don't spin.
+        r.migrating = false;
+    }
 }
 
 /// Batch duration from the cost model: the LM stream (prefill chunks +
@@ -414,6 +641,7 @@ fn apply_batch(
     lifecycles: &mut HashMap<u64, Lifecycle>,
     ready_since: &mut HashMap<u64, f64>,
     router: &mut Router,
+    tracker: &DrainTracker,
     migrations: &mut usize,
 ) {
     let mut to_finish: Vec<RequestId> = Vec::new();
@@ -485,44 +713,7 @@ fn apply_batch(
 
     // paper §4.3 step 1: notify the target; it pulls when it has capacity
     for (id, next_stage) in to_migrate {
-        let Some(r) = instances[iid].queues.find_running(id) else { continue };
-        r.migrating = true;
-        let snapshot = r.clone();
-        let phase = match next_stage {
-            Stage::Prefill => Phase::EpMigration,
-            _ => Phase::PdMigration,
-        };
-        let bytes = match next_stage {
-            // EP migration carries the image-token embeddings
-            Stage::Prefill => {
-                crate::costmodel::ops::image_payload_bytes(&cfg.model, snapshot.spec.image_tokens())
-            }
-            // PD migration carries the prefix KV cache
-            _ => crate::costmodel::ops::kv_payload_bytes(&cfg.model, snapshot.spec.prefill_tokens()),
-        };
-        let candidates: Vec<usize> = instances
-            .iter()
-            .filter(|inst| inst.id != iid && inst.mask.serves(next_stage))
-            .map(|inst| inst.id)
-            .collect();
-        let loads: Vec<f64> = candidates.iter().map(|&i| instances[i].load()).collect();
-        if let Some(pick) = router.pick(&loads) {
-            let dst = candidates[pick];
-            *migrations += 1;
-            instances[dst].inbox.push(PendingPull {
-                req: snapshot,
-                src: iid,
-                phase,
-                bytes,
-                created: now,
-            });
-        } else {
-            // nowhere to go (incomplete cluster): request is stuck; it will
-            // count as unfinished. Un-mark so we don't spin.
-            if let Some(r) = instances[iid].queues.find_running(id) {
-                r.migrating = false;
-            }
-        }
+        start_migration(instances, iid, id, next_stage, now, cfg, router, tracker, migrations);
     }
 }
 

@@ -12,7 +12,7 @@ pub mod engine;
 
 pub use engine::{simulate, SimResult};
 
-use crate::config::{DeviceSpec, ModelSpec, SloSpec};
+use crate::config::{ControllerConfig, DeviceSpec, ModelSpec, SloSpec};
 use crate::scheduler::{Policy, StageMask};
 use crate::util::ceil_div;
 
@@ -136,6 +136,10 @@ pub struct SimConfig {
     /// and scheduling policy matter. Applies to ALL engines (HydraInfer
     /// itself is a Python engine in the paper).
     pub engine_overhead: f64,
+    /// Elastic control plane (`crate::controller`): when set, a periodic
+    /// controller tick estimates per-stage load and may drain-then-flip
+    /// instance roles online. None = static layout (the paper's setup).
+    pub controller: Option<ControllerConfig>,
 }
 
 impl SimConfig {
@@ -151,6 +155,7 @@ impl SimConfig {
             horizon: 600.0,
             seed: 0,
             engine_overhead: 0.020,
+            controller: None,
         }
     }
 

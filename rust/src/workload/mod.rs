@@ -161,6 +161,31 @@ impl PoissonGenerator {
     }
 }
 
+/// Concatenate per-phase Poisson traces into one drifting workload: phase
+/// k's arrivals start where phase k-1's ended, and ids stay globally
+/// unique. This is the shape the elastic controller exists for — e.g. an
+/// image-heavy first half followed by a text-heavy second half.
+pub fn phased_trace(
+    model: &ModelSpec,
+    phases: &[(Dataset, f64, usize)],
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let mut out: Vec<RequestSpec> = Vec::new();
+    let mut t0 = 0.0;
+    let mut next_id = 0u64;
+    for (k, (dataset, rate, n)) in phases.iter().enumerate() {
+        let gen = PoissonGenerator::new(dataset.clone(), *rate, seed.wrapping_add(k as u64));
+        for mut spec in gen.generate(model, *n) {
+            spec.id = RequestId(next_id);
+            next_id += 1;
+            spec.arrival += t0;
+            out.push(spec);
+        }
+        t0 = out.last().map_or(t0, |s| s.arrival);
+    }
+    out
+}
+
 /// Average per-request stage workload of a dataset under a model — the
 /// Fig. 9 summary rows.
 #[derive(Debug, Clone, Copy)]
@@ -241,6 +266,25 @@ mod tests {
         let rnext = g.generate(&mnext, 10);
         assert!(r15.iter().all(|r| r.tokens_per_image == 576));
         assert!(rnext.iter().all(|r| r.tokens_per_image > 576));
+    }
+
+    #[test]
+    fn phased_trace_is_sequential_with_unique_ids() {
+        let m = ModelSpec::llava15_7b();
+        let text_only = Dataset { name: "textonly", image_prob: 0.0, ..Dataset::textcaps() };
+        let reqs = phased_trace(&m, &[(Dataset::pope(), 4.0, 50), (text_only, 4.0, 50)], 7);
+        assert_eq!(reqs.len(), 100);
+        // arrivals monotone across the phase boundary
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // ids globally unique and sequential
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id.0, i as u64);
+        }
+        // the workload actually shifts: phase 1 all images, phase 2 none
+        assert!(reqs[..50].iter().all(|r| r.has_image()));
+        assert!(reqs[50..].iter().all(|r| !r.has_image()));
     }
 
     #[test]

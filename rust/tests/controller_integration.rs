@@ -1,0 +1,175 @@
+//! End-to-end tests of the elastic control plane on the discrete-event
+//! simulator: a phase-shifted workload must trigger role flips, flips must
+//! never lose or duplicate a request, and a steady workload must never
+//! flap.
+
+use hydrainfer::config::{ControllerConfig, ModelSpec, SloSpec};
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig, SimResult};
+use hydrainfer::workload::{phased_trace, Dataset, PoissonGenerator, TokenDist};
+
+/// Image-heavy perception phase (pope-like: 1 image, tiny decode).
+fn image_heavy() -> Dataset {
+    Dataset::pope()
+}
+
+/// Text-only long-generation phase: no encode work at all, decode-bound.
+fn text_heavy() -> Dataset {
+    Dataset {
+        name: "textheavy",
+        image_prob: 0.0,
+        prompt: TokenDist::new(3.9, 0.3, 16, 128),   // ~50 tokens
+        output: TokenDist::new(4.4, 0.45, 64, 256),  // ~90 tokens
+    }
+}
+
+fn controller_cfg() -> ControllerConfig {
+    ControllerConfig {
+        tick: 0.5,
+        window: 8.0,
+        min_samples: 4,
+        sustain_ticks: 3,
+        cooldown: 4.0,
+        ..Default::default()
+    }
+}
+
+/// Run the phase-shifted workload on a 1E2P1D layout (a sensible static
+/// plan for the image-heavy phase) with or without the controller.
+fn run_phase_shift(elastic: bool, rate: f64, n_a: usize, n_b: usize) -> SimResult {
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(0.25, 0.04);
+    let mut cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E2P1D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    if elastic {
+        cfg.controller = Some(controller_cfg());
+    }
+    let reqs = phased_trace(
+        &model,
+        &[(image_heavy(), rate, n_a), (text_heavy(), rate, n_b)],
+        11,
+    );
+    simulate(&cfg, &reqs)
+}
+
+#[test]
+fn phase_shift_triggers_reconfiguration() {
+    let res = run_phase_shift(true, 40.0, 600, 800);
+    assert!(
+        res.reconfigs >= 1,
+        "the text-heavy phase must trigger at least one role flip, got {}",
+        res.reconfigs
+    );
+    // every flip adds decode capacity (that's where the load went)
+    for ev in &res.reconfig_events {
+        assert!(ev.to.decode, "flip at {:.1}s should add decode: {:?}", ev.t, ev);
+        assert!(!ev.from.decode, "donor should not already serve decode: {:?}", ev);
+    }
+}
+
+#[test]
+fn drain_then_flip_loses_and_duplicates_nothing() {
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(0.25, 0.04);
+    let mut cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E2P1D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    cfg.controller = Some(controller_cfg());
+    let reqs = phased_trace(
+        &model,
+        &[(image_heavy(), 40.0, 600), (text_heavy(), 40.0, 800)],
+        11,
+    );
+    let res = simulate(&cfg, &reqs);
+    assert!(res.reconfigs >= 1, "test needs an actual flip to be meaningful");
+    assert_eq!(res.unfinished, 0, "no request may be lost across a role flip");
+    assert_eq!(res.metrics.num_finished(), reqs.len());
+    // exact per-request token counts: nothing double-scheduled either
+    for spec in &reqs {
+        let lc = &res.metrics.lifecycles[&spec.id.0];
+        assert_eq!(
+            lc.token_times.len(),
+            spec.output_tokens,
+            "request {} must emit exactly its output budget across flips",
+            spec.id
+        );
+    }
+}
+
+#[test]
+fn controller_beats_static_plan_on_phase_shift() {
+    let slo = SloSpec::new(0.25, 0.04);
+    let stat = run_phase_shift(false, 48.0, 700, 900);
+    let elas = run_phase_shift(true, 48.0, 700, 900);
+    let a_stat = stat.metrics.slo_attainment(slo);
+    let a_elas = elas.metrics.slo_attainment(slo);
+    let t_stat = stat.metrics.throughput();
+    let t_elas = elas.metrics.throughput();
+    assert!(
+        a_elas > a_stat || t_elas > t_stat,
+        "elastic must win on attainment ({a_elas:.3} vs {a_stat:.3}) \
+         or throughput ({t_elas:.2} vs {t_stat:.2})"
+    );
+    // and it must not trade one for a collapse of the other
+    assert!(a_elas >= a_stat * 0.95, "attainment must not regress: {a_elas} vs {a_stat}");
+    assert!(t_elas >= t_stat * 0.9, "throughput must not regress: {t_elas} vs {t_stat}");
+}
+
+#[test]
+fn steady_load_never_reconfigures() {
+    let model = ModelSpec::llava15_7b();
+    let slo = SloSpec::new(0.25, 0.04);
+    let mut cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E2P1D").unwrap(),
+        Policy::StageLevel,
+        slo,
+    );
+    cfg.controller = Some(controller_cfg());
+    let gen = PoissonGenerator::new(Dataset::textvqa(), 10.0, 3);
+    let reqs = gen.generate(&model, 400);
+    let res = simulate(&cfg, &reqs);
+    assert_eq!(res.reconfigs, 0, "a balanced steady workload must not flip roles");
+    assert_eq!(res.unfinished, 0);
+}
+
+#[test]
+fn controller_off_matches_inert_controller() {
+    // the control plane must be a pure observer until it flips something:
+    // a run with the controller disabled and a run with it enabled but
+    // untriggerable (infinite pressure floor) must behave identically
+    let model = ModelSpec::llava15_7b();
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E3P4D").unwrap(),
+        Policy::StageLevel,
+        SloSpec::new(0.25, 0.04),
+    );
+    let mut cfg_inert = cfg.clone();
+    cfg_inert.controller = Some(ControllerConfig {
+        min_pressure: f64::MAX, // never triggers
+        ..Default::default()
+    });
+    let gen = PoissonGenerator::new(Dataset::textcaps(), 4.0, 42);
+    let reqs = gen.generate(&model, 60);
+    let off = simulate(&cfg, &reqs);
+    let inert = simulate(&cfg_inert, &reqs);
+    assert_eq!(off.reconfigs, 0);
+    assert_eq!(inert.reconfigs, 0);
+    assert!(inert.reconfig_events.is_empty());
+    assert_eq!(off.batches, inert.batches, "ticks must not perturb batching");
+    assert_eq!(off.migrations, inert.migrations);
+    assert_eq!(off.unfinished, 0);
+    assert_eq!(inert.unfinished, 0);
+    assert!(
+        (off.metrics.ttft().mean() - inert.metrics.ttft().mean()).abs() < 1e-12,
+        "an inert controller must not change a single latency"
+    );
+}
