@@ -24,6 +24,7 @@ fn scenario(model: &ModelSpec) -> Vec<RequestSpec> {
         tokens_per_image: model.tokens_per_image(),
         prompt_tokens: prompt,
         output_tokens: out,
+        ..Default::default()
     };
     vec![
         mk(0, 0.0, 0, 32, 200),  // A: text-only, long decode, arrives first

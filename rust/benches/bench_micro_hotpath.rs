@@ -34,11 +34,11 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
 fn spec(id: u64) -> RequestSpec {
     RequestSpec {
         id: RequestId(id),
-        arrival: 0.0,
         num_images: 1,
         tokens_per_image: 576,
         prompt_tokens: 40,
         output_tokens: 32,
+        ..Default::default()
     }
 }
 
@@ -86,7 +86,7 @@ fn main() {
             cache2.allocate(RequestId(0), 0).unwrap();
             appended = 0;
         }
-        std::hint::black_box(cache2.append(RequestId(0)).unwrap());
+        std::hint::black_box(cache2.append(RequestId(0)).unwrap().slot);
         appended += 1;
     });
 

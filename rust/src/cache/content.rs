@@ -1,0 +1,231 @@
+//! Content identity for cache blocks.
+//!
+//! Two hashing schemes feed the [`super::PagedCache`] index:
+//!
+//! * **Chained KV hashes** ([`chain_hashes`]): block i's hash folds in
+//!   every token content id from position 0 through the end of block i, so
+//!   equal hashes imply an identical *full prefix* — exactly the property
+//!   KV reuse needs (a KV row depends on all tokens to its left). Two
+//!   prompts that diverge mid-block produce different hashes for that
+//!   block and every later one; divergence always lands on a block
+//!   boundary and sharing never needs a copy.
+//! * **Standalone image hashes** ([`image_block_hashes`] /
+//!   [`spec_img_hashes`]): an image embedding depends only on the image, so
+//!   its blocks hash the image content id directly.
+//!
+//! The real-execution path hashes *actual* content (token ids via
+//! [`token_kv_hashes`], pixel buffers via [`hash_f32s`]). The simulator
+//! has no real content, so [`spec_kv_hashes`] derives synthetic content
+//! ids from the workload's identity fields (`RequestSpec::image_hash`,
+//! `prefix_hash`, `shared_prefix_tokens`): shared regions hash identically
+//! across requests, unique regions are salted with the request id and can
+//! never collide.
+
+use crate::core::RequestSpec;
+use crate::util::ceil_div;
+
+/// Content hash of one cache block.
+pub type BlockHash = u64;
+
+const KV_SALT: u64 = 0x6b76_2d63_6861_696e; // "kv-chain"
+const IMG_SALT: u64 = 0x696d_672d_626c_6f63; // "img-bloc"
+const UNIQ_SALT: u64 = 0x756e_6971_7565_2121; // "unique!!"
+
+/// SplitMix64-style mixer: cheap, well-distributed, dependency-free.
+#[inline]
+pub fn mix(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Content hash of a float buffer (image pixels, embeddings).
+pub fn hash_f32s(data: &[f32]) -> u64 {
+    data.iter()
+        .fold(mix(IMG_SALT, data.len() as u64), |h, x| mix(h, x.to_bits() as u64))
+}
+
+/// Chained block hashes over a stream of per-position content ids. Emits
+/// one hash per *full* block (a partial tail block is not shareable).
+pub fn chain_hashes(contents: impl IntoIterator<Item = u64>, block_size: usize) -> Vec<BlockHash> {
+    let mut out = Vec::new();
+    let mut h = KV_SALT;
+    let mut n = 0usize;
+    for c in contents {
+        h = mix(h, c);
+        n += 1;
+        if n % block_size.max(1) == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// Standalone (unchained) hashes for the blocks of one image's embedding.
+pub fn image_block_hashes(image_hash: u64, num_blocks: usize) -> Vec<BlockHash> {
+    (0..num_blocks as u64).map(|j| mix(mix(IMG_SALT, image_hash), j)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Real-execution derivation (actual content)
+// ---------------------------------------------------------------------------
+
+/// Chained KV block hashes for a real request: the prefill sequence is
+/// `image_token_count` image positions (content = the image's pixel hash)
+/// followed by the prompt token ids.
+pub fn token_kv_hashes(
+    prompt_tokens: &[u32],
+    image_hash: Option<u64>,
+    image_token_count: usize,
+    block_size: usize,
+) -> Vec<BlockHash> {
+    let img_id = image_hash.unwrap_or(0);
+    let img = (0..image_token_count as u64).map(move |p| mix(mix(IMG_SALT, img_id), p));
+    let txt = prompt_tokens.iter().map(|&t| 1 + t as u64);
+    chain_hashes(img.chain(txt), block_size)
+}
+
+// ---------------------------------------------------------------------------
+// Simulator derivation (synthetic content from workload identity fields)
+// ---------------------------------------------------------------------------
+
+/// Synthetic per-position content id for a simulated request's prefill
+/// sequence: `[image tokens][shared prompt prefix][unique remainder]`.
+fn content_at(spec: &RequestSpec, pos: usize) -> u64 {
+    let img_tokens = spec.image_tokens();
+    if pos < img_tokens {
+        match spec.image_hash {
+            Some(h) => mix(mix(IMG_SALT, h), pos as u64),
+            None => mix(mix(UNIQ_SALT, spec.id.0), pos as u64),
+        }
+    } else if pos < img_tokens + spec.shared_prefix_tokens.min(spec.prompt_tokens) {
+        mix(mix(spec.prefix_hash, 1), pos as u64)
+    } else {
+        mix(mix(UNIQ_SALT ^ 0xF0F0, spec.id.0), pos as u64)
+    }
+}
+
+/// Chained KV block hashes for a simulated request's prefill region.
+pub fn spec_kv_hashes(spec: &RequestSpec, block_size: usize) -> Vec<BlockHash> {
+    chain_hashes((0..spec.prefill_tokens()).map(|p| content_at(spec, p)), block_size)
+}
+
+/// Tokens from position 0 whose content is shared (recurs verbatim across
+/// requests) — the only region worth publishing to the index. A unique
+/// image makes *everything* after it unique too (KV is context-chained).
+pub fn spec_kv_shareable_tokens(spec: &RequestSpec) -> usize {
+    if spec.num_images > 0 && spec.image_hash.is_none() {
+        return 0;
+    }
+    spec.image_tokens() + spec.shared_prefix_tokens.min(spec.prompt_tokens)
+}
+
+/// The leading KV hashes a simulated request should commit: full blocks
+/// wholly inside its shareable region.
+pub fn spec_kv_commit_hashes(spec: &RequestSpec, block_size: usize) -> Vec<BlockHash> {
+    let shareable = spec_kv_shareable_tokens(spec).min(spec.prefill_tokens());
+    let mut h = spec_kv_hashes(spec, block_size);
+    h.truncate(shareable / block_size.max(1));
+    h
+}
+
+/// Image-cache block hashes for a simulated request (standalone; unique
+/// images get id-salted hashes that can never match another request).
+pub fn spec_img_hashes(spec: &RequestSpec, block_size: usize) -> Vec<BlockHash> {
+    let n = ceil_div(spec.image_tokens(), block_size.max(1));
+    match spec.image_hash {
+        Some(h) => image_block_hashes(h, n),
+        None => (0..n as u64).map(|j| mix(mix(UNIQ_SALT, spec.id.0), j)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestId;
+
+    fn spec(id: u64, images: usize, prompt: usize) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            num_images: images,
+            tokens_per_image: 16,
+            prompt_tokens: prompt,
+            output_tokens: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn chain_emits_full_blocks_only() {
+        assert_eq!(chain_hashes(0..31, 16).len(), 1);
+        assert_eq!(chain_hashes(0..32, 16).len(), 2);
+        assert_eq!(chain_hashes(std::iter::empty(), 16).len(), 0);
+    }
+
+    #[test]
+    fn chained_hashes_commit_to_the_whole_prefix() {
+        let a = chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4);
+        let b = chain_hashes([1, 2, 3, 4, 5, 6, 7, 9], 4);
+        assert_eq!(a[0], b[0], "identical first block");
+        assert_ne!(a[1], b[1], "divergence poisons the later block");
+        let c = chain_hashes([9, 2, 3, 4, 5, 6, 7, 8], 4);
+        assert_ne!(a[0], c[0]);
+        assert_ne!(a[1], c[1], "early divergence poisons everything after");
+    }
+
+    #[test]
+    fn shared_spec_content_matches_across_requests() {
+        let mut a = spec(1, 1, 40);
+        let mut b = spec(2, 1, 40);
+        for s in [&mut a, &mut b] {
+            s.image_hash = Some(77);
+            s.shared_prefix_tokens = 32;
+            s.prefix_hash = 99;
+        }
+        let ha = spec_kv_hashes(&a, 16);
+        let hb = spec_kv_hashes(&b, 16);
+        // image (16) + shared 32 = 48 shareable tokens -> 3 matching blocks
+        assert_eq!(spec_kv_shareable_tokens(&a), 48);
+        assert_eq!(&ha[..3], &hb[..3]);
+        assert_ne!(ha[3], hb[3], "unique tails diverge");
+        assert_eq!(spec_kv_commit_hashes(&a, 16).len(), 3);
+        assert_eq!(spec_img_hashes(&a, 16), spec_img_hashes(&b, 16));
+    }
+
+    #[test]
+    fn unique_images_poison_the_chain() {
+        let a = spec(1, 1, 40);
+        let mut b = spec(2, 1, 40);
+        b.shared_prefix_tokens = 32;
+        b.prefix_hash = 5;
+        assert_eq!(spec_kv_shareable_tokens(&a), 0);
+        assert_eq!(spec_kv_shareable_tokens(&b), 0, "unique image blocks sharing");
+        assert_eq!(spec_kv_commit_hashes(&b, 16).len(), 0);
+        assert_ne!(spec_img_hashes(&a, 16), spec_img_hashes(&b, 16));
+    }
+
+    #[test]
+    fn real_token_hashes_mix_image_identity() {
+        let toks: Vec<u32> = (0..32).collect();
+        let plain = token_kv_hashes(&toks, None, 0, 16);
+        let same = token_kv_hashes(&toks, None, 0, 16);
+        assert_eq!(plain, same);
+        let with_img = token_kv_hashes(&toks, Some(7), 16, 16);
+        let other_img = token_kv_hashes(&toks, Some(8), 16, 16);
+        assert_eq!(with_img.len(), 3);
+        assert!(with_img.iter().zip(&other_img).all(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn pixel_hash_is_content_sensitive() {
+        let a = vec![0.5f32; 64];
+        let mut b = a.clone();
+        assert_eq!(hash_f32s(&a), hash_f32s(&b));
+        b[63] = 0.25;
+        assert_ne!(hash_f32s(&a), hash_f32s(&b));
+        assert_ne!(hash_f32s(&a[..32]), hash_f32s(&a));
+    }
+}

@@ -1,41 +1,99 @@
-//! Paged cache management: block allocator, page tables, and the unified
-//! KV-cache / image-cache interface (paper §4.5).
+//! Content-addressed paged cache management: block allocator, page tables,
+//! refcounted cross-request block sharing, and the unified KV-cache /
+//! image-cache interface (paper §4.5).
 //!
 //! The paper manages the image token cache as "one layer of a single-token
 //! cache" and the KV cache as "a multi-layer of two-token cache", both
 //! behind "a similar management interface and data transfer interface".
-//! That is exactly the shape here: [`PagedCache`] owns block accounting +
-//! page tables; [`CacheStore`] optionally owns real backing planes
-//! (`layers * planes_per_layer` float buffers of [NB, BLK, H]) for the
-//! real-execution path; both caches are instances of the same types with
-//! different plane counts.
+//! That is exactly the shape here — [`PagedCache`] owns block accounting +
+//! page tables, [`CacheStore`] optionally owns real backing planes — with
+//! one extension the redundant-work analysis of ElasticMM / EPD-Serve
+//! motivates: blocks are **content-addressed**. Every block can carry a
+//! [`BlockHash`] content tag; a hash → block index lets a new request
+//! *share* blocks whose content it would otherwise recompute (the encode
+//! of an already-seen image, the KV of an already-prefilled prompt
+//! prefix), and refcounting keeps shared blocks alive until the last
+//! holder releases them.
+//!
+//! Lifecycle of a block:
+//!
+//! ```text
+//!   free ──take──▶ referenced (refs ≥ 1, per-request page tables)
+//!                      │  commit_hashes: tag full blocks with content ids
+//!                      ▼
+//!   referenced ──free──▶ tagged?  ──yes──▶ cached (refs = 0, in the LRU
+//!        ▲                 │ no              queue, still in the index)
+//!        │                 ▼                   │           │
+//!        │               free            acquire_prefix   evict (pool
+//!        └──────────────────────────────── (refs 0→1) ◀─  pressure)──▶ free
+//! ```
+//!
+//! * **Hashes** are chained for KV blocks (`content::chain_hashes`): block
+//!   i's hash commits to the whole token prefix `[0, (i+1)·BLK)`, so an
+//!   index hit proves the full left context matches — divergence between
+//!   two requests always lands on a block boundary and needs no copy.
+//!   Image blocks use standalone per-image content hashes.
+//! * **Sharing** is full-block only: [`PagedCache::acquire_prefix`] pins
+//!   the longest indexed prefix of a request's hash chain (refs += 1) and
+//!   the request allocates fresh blocks for the remainder.
+//! * **Copy-on-write** covers the explicit-fork path ([`PagedCache::fork`],
+//!   the beam/speculative shape): appending into a block another table
+//!   also references allocates a private copy first and reports the
+//!   `(old, new)` pair so the caller can copy backing-plane data
+//!   ([`CacheStore::copy_block`]).
+//! * **Eviction** is LRU over *unreferenced* cached blocks only — a block
+//!   with refcount > 0 is never evicted. Admission control therefore
+//!   distinguishes "evictable cached blocks exist" (allocate evicts and
+//!   succeeds) from genuinely full (`CacheError::OutOfBlocks`, with the
+//!   `evictable` count for the scheduler's backpressure decision).
 //!
 //! Block size matches the artifacts: 16 tokens per KV block; the image
-//! cache uses one block per image-token group (the paper's 576-token image
-//! block becomes T_IMG=16 here — one block per image).
+//! cache uses one block per image-token group.
 
+pub mod content;
 pub mod store;
 
+pub use content::BlockHash;
 pub use store::CacheStore;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::core::RequestId;
 use crate::util::ceil_div;
 
 /// Errors surfaced to the scheduler (cache pressure drives batching and
 /// migration backpressure decisions).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CacheError {
-    #[error("out of cache blocks: need {need}, free {free}")]
-    OutOfBlocks { need: usize, free: usize },
-    #[error("unknown request {0}")]
+    /// Genuinely out of blocks: `free` truly-free and `evictable`
+    /// unreferenced cached blocks together cannot cover `need`. (When
+    /// evictable blocks suffice, allocation evicts and succeeds instead
+    /// of erroring — the scheduler only sees this under real pressure.)
+    OutOfBlocks { need: usize, free: usize, evictable: usize },
     UnknownRequest(u64),
-    #[error("request {0} already has an allocation")]
     AlreadyAllocated(u64),
-    #[error("sequence capacity exceeded: {len} tokens > {cap}")]
     SequenceTooLong { len: usize, cap: usize },
 }
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::OutOfBlocks { need, free, evictable } => write!(
+                f,
+                "out of cache blocks: need {need}, free {free} (+{evictable} evictable)"
+            ),
+            CacheError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            CacheError::AlreadyAllocated(id) => {
+                write!(f, "request {id} already has an allocation")
+            }
+            CacheError::SequenceTooLong { len, cap } => {
+                write!(f, "sequence capacity exceeded: {len} tokens > {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
 
 /// Per-request page table: ordered pool block ids + token count.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -54,15 +112,70 @@ impl PageTable {
     }
 }
 
-/// Paged cache: allocator + page tables. Generic over what a "token" is —
-/// the KV cache counts sequence tokens, the image cache counts image tokens.
+/// Result of an [`PagedCache::append`]: the flat slot written, plus the
+/// `(old_block, new_block)` pair when divergence forced a copy-on-write —
+/// the caller must copy the old block's backing data into the new one
+/// before writing the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Appended {
+    pub slot: u32,
+    pub cow: Option<(u32, u32)>,
+}
+
+/// Reuse / eviction counters (cumulative since construction).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `acquire_prefix` calls.
+    pub lookups: u64,
+    /// Blocks served from the content index instead of recomputed.
+    pub hit_blocks: u64,
+    /// Tokens those blocks cover.
+    pub hit_tokens: u64,
+    /// Blocks tagged + published to the index.
+    pub committed_blocks: u64,
+    /// Cached blocks reclaimed under pool pressure.
+    pub evictions: u64,
+    /// Copy-on-write block copies (fork divergence).
+    pub cow_copies: u64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.lookups += o.lookups;
+        self.hit_blocks += o.hit_blocks;
+        self.hit_tokens += o.hit_tokens;
+        self.committed_blocks += o.committed_blocks;
+        self.evictions += o.evictions;
+        self.cow_copies += o.cow_copies;
+    }
+}
+
+/// Content-addressed paged cache: allocator + page tables + refcounted
+/// sharing. Generic over what a "token" is — the KV cache counts sequence
+/// tokens, the image cache counts image tokens.
 #[derive(Debug)]
 pub struct PagedCache {
     block_size: usize,
     num_blocks: usize,
     max_blocks_per_seq: usize,
+    /// Truly free blocks (no content).
     free: Vec<u32>,
     tables: HashMap<u64, PageTable>,
+    /// Per-block reference count (page tables holding the block).
+    refs: Vec<u32>,
+    /// Per-block content tag (Some = published in `index`).
+    hash_of: Vec<Option<BlockHash>>,
+    /// Content index: hash -> block currently holding that content.
+    index: HashMap<BlockHash, u32>,
+    /// Unreferenced-but-cached blocks, least recently released first.
+    /// Lazy deletion: an entry `(block, stamp)` is live only while it
+    /// matches `lru_stamp[block]` — revival just bumps the stamp (O(1))
+    /// and stale entries are skipped at eviction / compacted on push.
+    lru: VecDeque<(u32, u64)>,
+    lru_stamp: Vec<u64>,
+    /// Live `lru` entries (kept exact so `available_blocks` is O(1)).
+    lru_len: usize,
+    stats: CacheStats,
 }
 
 impl PagedCache {
@@ -73,6 +186,13 @@ impl PagedCache {
             max_blocks_per_seq,
             free: (0..num_blocks as u32).rev().collect(),
             tables: HashMap::new(),
+            refs: vec![0; num_blocks],
+            hash_of: vec![None; num_blocks],
+            index: HashMap::new(),
+            lru: VecDeque::new(),
+            lru_stamp: vec![0; num_blocks],
+            lru_len: 0,
+            stats: CacheStats::default(),
         }
     }
 
@@ -82,13 +202,24 @@ impl PagedCache {
     pub fn num_blocks(&self) -> usize {
         self.num_blocks
     }
+    /// Truly free blocks (holding no content).
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
-    pub fn used_blocks(&self) -> usize {
-        self.num_blocks - self.free.len()
+    /// Unreferenced cached blocks (evictable on demand).
+    pub fn cached_blocks(&self) -> usize {
+        self.lru_len
     }
-    /// Utilization in [0,1] — drives router/migration load balancing.
+    /// Blocks an allocation can draw from: free + evictable cached.
+    pub fn available_blocks(&self) -> usize {
+        self.free.len() + self.lru_len
+    }
+    /// Blocks pinned by live requests.
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks - self.available_blocks()
+    }
+    /// Live utilization in [0,1] — drives router/migration load balancing.
+    /// Evictable cached blocks do not count as load.
     pub fn utilization(&self) -> f64 {
         self.used_blocks() as f64 / self.num_blocks.max(1) as f64
     }
@@ -104,11 +235,95 @@ impl PagedCache {
     pub fn num_requests(&self) -> usize {
         self.tables.len()
     }
+    /// Blocks already held by `id`'s table (0 if absent).
+    pub fn held_blocks(&self, id: RequestId) -> usize {
+        self.tables.get(&id.0).map_or(0, |t| t.blocks.len())
+    }
+    /// Reference count of a block (testing / invariants).
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refs[block as usize]
+    }
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
 
-    /// Can `n_tokens` be allocated right now? (admission control)
+    /// Can `n_tokens` be allocated right now, counting evictable cached
+    /// blocks as reclaimable? (admission control)
     pub fn can_allocate(&self, n_tokens: usize) -> bool {
-        ceil_div(n_tokens, self.block_size) <= self.free.len()
+        ceil_div(n_tokens, self.block_size) <= self.available_blocks()
             && n_tokens <= self.max_seq_tokens()
+    }
+
+    /// How many leading entries of `hashes` the index can serve (pure
+    /// lookup, no pinning) — router affinity scoring.
+    pub fn lookup_prefix(&self, hashes: &[BlockHash]) -> usize {
+        hashes
+            .iter()
+            .take_while(|h| self.index.contains_key(h))
+            .count()
+    }
+
+    /// Create `id`'s table pinned to the longest cached prefix of
+    /// `hashes`, covering at most `max_tokens` tokens. Returns the tokens
+    /// served from cache (a multiple of the block size). Shared blocks
+    /// cost no new capacity — they are already resident.
+    pub fn acquire_prefix(
+        &mut self,
+        id: RequestId,
+        hashes: &[BlockHash],
+        max_tokens: usize,
+    ) -> Result<usize, CacheError> {
+        if self.tables.contains_key(&id.0) {
+            return Err(CacheError::AlreadyAllocated(id.0));
+        }
+        self.stats.lookups += 1;
+        let cap_blocks = (max_tokens / self.block_size).min(self.max_blocks_per_seq);
+        let mut blocks = Vec::new();
+        for h in hashes.iter().take(cap_blocks) {
+            let Some(&b) = self.index.get(h) else { break };
+            if self.refs[b as usize] == 0 {
+                // revive from the cached pool (stale-stamp lazy deletion)
+                self.lru_stamp[b as usize] += 1;
+                self.lru_len -= 1;
+            }
+            self.refs[b as usize] += 1;
+            blocks.push(b);
+        }
+        let matched = blocks.len();
+        self.stats.hit_blocks += matched as u64;
+        self.stats.hit_tokens += (matched * self.block_size) as u64;
+        let len = matched * self.block_size;
+        self.tables.insert(id.0, PageTable { blocks, len });
+        Ok(len)
+    }
+
+    /// Grow `id`'s table so it covers `n_tokens` tokens, allocating fresh
+    /// blocks (evicting cached ones under pressure). Idempotent when the
+    /// table is already large enough.
+    pub fn grow(&mut self, id: RequestId, n_tokens: usize) -> Result<(), CacheError> {
+        if !self.tables.contains_key(&id.0) {
+            return Err(CacheError::UnknownRequest(id.0));
+        }
+        if n_tokens > self.max_seq_tokens() {
+            return Err(CacheError::SequenceTooLong { len: n_tokens, cap: self.max_seq_tokens() });
+        }
+        let have = self.tables[&id.0].blocks.len();
+        let need = ceil_div(n_tokens, self.block_size).saturating_sub(have);
+        if need > self.available_blocks() {
+            return Err(CacheError::OutOfBlocks {
+                need,
+                free: self.free.len(),
+                evictable: self.lru_len,
+            });
+        }
+        let fresh: Vec<u32> = (0..need).map(|_| self.take_block().unwrap()).collect();
+        for &b in &fresh {
+            self.refs[b as usize] = 1;
+        }
+        let t = self.tables.get_mut(&id.0).unwrap();
+        t.blocks.extend(fresh);
+        t.len = t.len.max(n_tokens);
+        Ok(())
     }
 
     /// Allocate a fresh table holding `n_tokens` (e.g. a migrated-in prefix
@@ -121,45 +336,128 @@ impl PagedCache {
             return Err(CacheError::SequenceTooLong { len: n_tokens, cap: self.max_seq_tokens() });
         }
         let need = ceil_div(n_tokens, self.block_size);
-        if need > self.free.len() {
-            return Err(CacheError::OutOfBlocks { need, free: self.free.len() });
+        if need > self.available_blocks() {
+            return Err(CacheError::OutOfBlocks {
+                need,
+                free: self.free.len(),
+                evictable: self.lru_len,
+            });
         }
-        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
-        self.tables.insert(id.0, PageTable { blocks, len: n_tokens });
+        self.tables.insert(id.0, PageTable::default());
+        self.grow(id, n_tokens).expect("capacity checked");
         Ok(self.tables.get(&id.0).unwrap())
     }
 
-    /// Append one token; returns its flat slot id. Grows the table by one
-    /// block when crossing a block boundary.
-    pub fn append(&mut self, id: RequestId) -> Result<u32, CacheError> {
+    /// Append one token; returns its flat slot id plus any copy-on-write
+    /// the caller must mirror in the backing store. Grows the table by one
+    /// block when crossing a block boundary; copies the tail block first
+    /// when another table shares it (fork divergence).
+    pub fn append(&mut self, id: RequestId) -> Result<Appended, CacheError> {
         // Probe capacity first so errors never leave a half-updated table.
-        let (needs_block, len, cap) = {
+        let (needs_block, shared_tail, len, cap) = {
             let t = self.tables.get(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
-            (t.len % self.block_size == 0 && t.len / self.block_size == t.blocks.len(),
-             t.len, self.max_seq_tokens())
+            let needs = t.len % self.block_size == 0 && t.len / self.block_size == t.blocks.len();
+            let shared = if needs {
+                None
+            } else {
+                let b = t.blocks[t.len / self.block_size];
+                (self.refs[b as usize] > 1).then_some(b)
+            };
+            (needs, shared, t.len, self.max_seq_tokens())
         };
         if len + 1 > cap {
             return Err(CacheError::SequenceTooLong { len: len + 1, cap });
         }
-        if needs_block && self.free.is_empty() {
-            return Err(CacheError::OutOfBlocks { need: 1, free: 0 });
+        if (needs_block || shared_tail.is_some()) && self.available_blocks() == 0 {
+            return Err(CacheError::OutOfBlocks { need: 1, free: 0, evictable: 0 });
         }
         let block_size = self.block_size;
-        let new_block = if needs_block { Some(self.free.pop().unwrap()) } else { None };
-        let t = self.tables.get_mut(&id.0).unwrap();
-        if let Some(b) = new_block {
-            t.blocks.push(b);
+        let mut cow = None;
+        if needs_block {
+            let b = self.take_block().unwrap();
+            self.refs[b as usize] = 1;
+            self.tables.get_mut(&id.0).unwrap().blocks.push(b);
+        } else if let Some(old) = shared_tail {
+            // divergence: write would hit a block another table references
+            let new = self.take_block().unwrap();
+            self.refs[new as usize] = 1;
+            self.refs[old as usize] -= 1; // still > 0: another holder exists
+            let t = self.tables.get_mut(&id.0).unwrap();
+            let idx = len / block_size;
+            t.blocks[idx] = new;
+            self.stats.cow_copies += 1;
+            cow = Some((old, new));
         }
+        let t = self.tables.get_mut(&id.0).unwrap();
         let pos = t.len;
         t.len += 1;
-        Ok(t.slot_of(pos, block_size).unwrap())
+        Ok(Appended { slot: t.slot_of(pos, block_size).unwrap(), cow })
+    }
+
+    /// Clone `src`'s table for `dst`, sharing every block (beam /
+    /// speculative fork). Divergent appends copy-on-write.
+    pub fn fork(&mut self, src: RequestId, dst: RequestId) -> Result<(), CacheError> {
+        if self.tables.contains_key(&dst.0) {
+            return Err(CacheError::AlreadyAllocated(dst.0));
+        }
+        let t = self
+            .tables
+            .get(&src.0)
+            .ok_or(CacheError::UnknownRequest(src.0))?
+            .clone();
+        for &b in &t.blocks {
+            self.refs[b as usize] += 1;
+        }
+        self.tables.insert(dst.0, t);
+        Ok(())
+    }
+
+    /// Tag `id`'s leading blocks with content hashes and publish them in
+    /// the index so later requests can share them. Only blocks whose
+    /// tokens are fully stored are tagged; blocks already tagged, and
+    /// hashes already owned by another block, are skipped.
+    pub fn commit_hashes(&mut self, id: RequestId, hashes: &[BlockHash]) {
+        let Some(t) = self.tables.get(&id.0) else { return };
+        let blocks: Vec<u32> = t.blocks.clone();
+        let len = t.len;
+        for (i, (&b, &h)) in blocks.iter().zip(hashes.iter()).enumerate() {
+            if (i + 1) * self.block_size > len {
+                break; // partially-stored block: content not final
+            }
+            if self.hash_of[b as usize].is_some() || self.index.contains_key(&h) {
+                continue;
+            }
+            self.hash_of[b as usize] = Some(h);
+            self.index.insert(h, b);
+            self.stats.committed_blocks += 1;
+        }
     }
 
     /// Release a request's blocks (end of decode, or post-migration source
-    /// release — paper §4.3 step 4).
+    /// release — paper §4.3 step 4). Tagged blocks whose last reference
+    /// drops stay cached (evictable) instead of returning to the free
+    /// list; untagged blocks free immediately.
     pub fn free(&mut self, id: RequestId) -> Result<(), CacheError> {
         let t = self.tables.remove(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
-        self.free.extend(t.blocks);
+        for b in t.blocks {
+            let r = &mut self.refs[b as usize];
+            debug_assert!(*r > 0, "double free of block {b}");
+            *r -= 1;
+            if *r == 0 {
+                if self.hash_of[b as usize].is_some() {
+                    self.lru_stamp[b as usize] += 1;
+                    self.lru.push_back((b, self.lru_stamp[b as usize]));
+                    self.lru_len += 1;
+                    // amortized compaction keeps stale entries bounded
+                    if self.lru.len() > 2 * self.lru_len.max(16) {
+                        let stamps = &self.lru_stamp;
+                        self.lru.retain(|&(x, s)| stamps[x as usize] == s);
+                    }
+                } else {
+                    self.free.push(b);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -170,14 +468,124 @@ impl PagedCache {
             .map(|p| t.slot_of(p, self.block_size).unwrap())
             .collect())
     }
+
+    /// Pop a block for writing: truly free first, else evict the
+    /// least-recently-released cached block. Never touches a block with
+    /// refcount > 0.
+    fn take_block(&mut self) -> Option<u32> {
+        if let Some(b) = self.free.pop() {
+            return Some(b);
+        }
+        while let Some((b, s)) = self.lru.pop_front() {
+            if self.lru_stamp[b as usize] != s {
+                continue; // stale entry: the block was revived meanwhile
+            }
+            self.lru_len -= 1;
+            debug_assert_eq!(self.refs[b as usize], 0, "evicting a referenced block");
+            if let Some(h) = self.hash_of[b as usize].take() {
+                self.index.remove(&h);
+            }
+            self.stats.evictions += 1;
+            return Some(b);
+        }
+        None
+    }
+
+    /// Check every structural invariant; returns a description of the
+    /// first violation. Used by the property suite after random op
+    /// sequences (leak / double-free / eviction-safety detection).
+    pub fn verify_integrity(&self) -> Result<(), String> {
+        // refcount(b) == number of tables holding b
+        let mut counted = vec![0u32; self.num_blocks];
+        for (rid, t) in &self.tables {
+            let mut seen = std::collections::HashSet::new();
+            for &b in &t.blocks {
+                if !seen.insert(b) {
+                    return Err(format!("table {rid} lists block {b} twice"));
+                }
+                counted[b as usize] += 1;
+            }
+        }
+        for b in 0..self.num_blocks {
+            if counted[b] != self.refs[b] {
+                return Err(format!(
+                    "block {b}: refcount {} but {} table references",
+                    self.refs[b], counted[b]
+                ));
+            }
+        }
+        // free / lru / referenced partition the pool
+        let mut state = vec![0u8; self.num_blocks]; // 1 free, 2 lru
+        for &b in &self.free {
+            if state[b as usize] != 0 {
+                return Err(format!("block {b} on the free list twice"));
+            }
+            state[b as usize] = 1;
+        }
+        let mut live_lru = 0usize;
+        for &(b, s) in &self.lru {
+            if self.lru_stamp[b as usize] != s {
+                continue; // stale entry awaiting compaction
+            }
+            live_lru += 1;
+            if state[b as usize] != 0 {
+                return Err(format!("block {b} both free and cached"));
+            }
+            state[b as usize] = 2;
+        }
+        if live_lru != self.lru_len {
+            return Err(format!(
+                "lru_len {} but {live_lru} live cached entries",
+                self.lru_len
+            ));
+        }
+        for b in 0..self.num_blocks {
+            let referenced = self.refs[b] > 0;
+            match state[b] {
+                0 if !referenced => return Err(format!("block {b} leaked (no owner)")),
+                1 | 2 if referenced => {
+                    return Err(format!("block {b} referenced but on a reclaim list"))
+                }
+                1 if self.hash_of[b].is_some() => {
+                    return Err(format!("block {b} free but still tagged"))
+                }
+                2 if self.hash_of[b].is_none() => {
+                    return Err(format!("block {b} cached but untagged"))
+                }
+                _ => {}
+            }
+        }
+        // index <-> tag bijection
+        for (h, &b) in &self.index {
+            if self.hash_of[b as usize] != Some(*h) {
+                return Err(format!("index maps {h:x} to block {b} with a different tag"));
+            }
+        }
+        let tagged = self.hash_of.iter().filter(|h| h.is_some()).count();
+        if tagged != self.index.len() {
+            return Err(format!(
+                "{} tagged blocks but {} index entries",
+                tagged,
+                self.index.len()
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::content::chain_hashes;
 
     fn id(n: u64) -> RequestId {
         RequestId(n)
+    }
+
+    /// Chained hashes for a synthetic token stream `[0, n)` shifted by a
+    /// content seed — two calls with the same seed model identical content.
+    fn hashes(seed: u64, n_tokens: usize, bs: usize) -> Vec<BlockHash> {
+        chain_hashes((0..n_tokens as u64).map(|p| seed.wrapping_mul(1699) ^ p), bs)
     }
 
     #[test]
@@ -189,6 +597,7 @@ mod tests {
         assert_eq!(c.table(id(1)).unwrap().len, 20);
         c.free(id(1)).unwrap();
         assert_eq!(c.free_blocks(), 8);
+        c.verify_integrity().unwrap();
     }
 
     #[test]
@@ -197,8 +606,9 @@ mod tests {
         c.allocate(id(1), 0).unwrap();
         assert_eq!(c.table(id(1)).unwrap().blocks.len(), 0);
         for i in 0..4 {
-            let slot = c.append(id(1)).unwrap();
-            assert_eq!(slot % 4, i as u32);
+            let a = c.append(id(1)).unwrap();
+            assert_eq!(a.slot % 4, i as u32);
+            assert!(a.cow.is_none());
         }
         assert_eq!(c.table(id(1)).unwrap().blocks.len(), 1);
         c.append(id(1)).unwrap();
@@ -210,7 +620,7 @@ mod tests {
         let mut c = PagedCache::new(2, 16, 8);
         c.allocate(id(1), 32).unwrap();
         let err = c.allocate(id(2), 1).unwrap_err();
-        assert_eq!(err, CacheError::OutOfBlocks { need: 1, free: 0 });
+        assert_eq!(err, CacheError::OutOfBlocks { need: 1, free: 0, evictable: 0 });
     }
 
     #[test]
@@ -266,5 +676,135 @@ mod tests {
         c.allocate(id(1), 48).unwrap();
         assert!(!c.can_allocate(1));
         assert!(c.can_allocate(0));
+    }
+
+    // ---- content-addressing ------------------------------------------------
+
+    #[test]
+    fn committed_prefix_is_shared_not_recomputed() {
+        let mut c = PagedCache::new(16, 16, 8);
+        let h = hashes(7, 48, 16); // 3 full blocks of shared content
+        c.acquire_prefix(id(1), &h, 47).unwrap(); // nothing cached yet
+        assert_eq!(c.held_blocks(id(1)), 0);
+        c.grow(id(1), 48).unwrap();
+        c.commit_hashes(id(1), &h);
+
+        // a second request with the same content pins the same blocks
+        let cached = c.acquire_prefix(id(2), &h, 100).unwrap();
+        assert_eq!(cached, 48);
+        assert_eq!(c.table(id(1)).unwrap().blocks, c.table(id(2)).unwrap().blocks);
+        for &b in &c.table(id(2)).unwrap().blocks.clone() {
+            assert_eq!(c.refcount(b), 2);
+        }
+        // growing past the shared prefix allocates private blocks
+        c.grow(id(2), 60).unwrap();
+        assert_eq!(c.held_blocks(id(2)), 4);
+        c.verify_integrity().unwrap();
+
+        let s = c.stats();
+        assert_eq!(s.hit_blocks, 3);
+        assert_eq!(s.hit_tokens, 48);
+        assert_eq!(s.committed_blocks, 3);
+    }
+
+    #[test]
+    fn max_tokens_caps_the_shared_prefix() {
+        // leave-one-token-for-prefill: max_tokens below a block boundary
+        // must not pin the block covering it
+        let mut c = PagedCache::new(16, 16, 8);
+        let h = hashes(9, 64, 16);
+        c.allocate(id(1), 64).unwrap();
+        c.commit_hashes(id(1), &h);
+        let cached = c.acquire_prefix(id(2), &h, 63).unwrap();
+        assert_eq!(cached, 48, "only 3 of 4 blocks fit under 63 tokens");
+    }
+
+    #[test]
+    fn freed_tagged_blocks_survive_as_cache_then_evict_lru() {
+        let mut c = PagedCache::new(4, 16, 8);
+        let h1 = hashes(1, 32, 16);
+        let h2 = hashes(2, 32, 16);
+        c.allocate(id(1), 32).unwrap();
+        c.commit_hashes(id(1), &h1);
+        c.free(id(1)).unwrap();
+        assert_eq!(c.free_blocks(), 2);
+        assert_eq!(c.cached_blocks(), 2);
+        assert_eq!(c.available_blocks(), 4);
+
+        // still hittable after free
+        assert_eq!(c.lookup_prefix(&h1), 2);
+        let cached = c.acquire_prefix(id(2), &h1, 32).unwrap();
+        assert_eq!(cached, 32);
+        c.free(id(2)).unwrap();
+
+        // pool pressure evicts the cached blocks (LRU) and reuses them
+        c.allocate(id(3), 64).unwrap();
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.lookup_prefix(&h1), 0, "evicted content left the index");
+        c.commit_hashes(id(3), &h2[..1]);
+        c.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn eviction_never_touches_referenced_blocks() {
+        let mut c = PagedCache::new(4, 16, 8);
+        let h = hashes(3, 32, 16);
+        c.allocate(id(1), 32).unwrap();
+        c.commit_hashes(id(1), &h);
+        // id(1) still live: its tagged blocks are referenced, not evictable
+        assert_eq!(c.available_blocks(), 2);
+        assert!(matches!(
+            c.allocate(id(2), 48),
+            Err(CacheError::OutOfBlocks { need: 3, free: 2, evictable: 0 })
+        ));
+        c.allocate(id(2), 32).unwrap();
+        c.verify_integrity().unwrap();
+        let t1 = c.table(id(1)).unwrap().blocks.clone();
+        for b in t1 {
+            assert!(c.refcount(b) == 1);
+        }
+    }
+
+    #[test]
+    fn fork_shares_and_append_copies_on_write() {
+        let mut c = PagedCache::new(8, 4, 8);
+        c.allocate(id(1), 0).unwrap();
+        for _ in 0..6 {
+            c.append(id(1)).unwrap(); // 1.5 blocks
+        }
+        c.fork(id(1), id(2)).unwrap();
+        assert_eq!(c.table(id(1)).unwrap().blocks, c.table(id(2)).unwrap().blocks);
+
+        // the fork diverges: its partial tail block must be copied
+        let a = c.append(id(2)).unwrap();
+        let (old, new) = a.cow.expect("append into a shared tail copies");
+        assert_ne!(old, new);
+        assert_eq!(c.table(id(1)).unwrap().blocks[1], old);
+        assert_eq!(c.table(id(2)).unwrap().blocks[1], new);
+        assert_eq!(c.refcount(old), 1);
+        assert_eq!(c.refcount(new), 1);
+        assert_eq!(c.stats().cow_copies, 1);
+
+        // further appends on the fork are private: no more copies
+        assert!(c.append(id(2)).unwrap().cow.is_none());
+        c.free(id(1)).unwrap();
+        c.free(id(2)).unwrap();
+        assert_eq!(c.free_blocks(), 8);
+        c.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn commit_skips_partial_blocks_and_duplicates() {
+        let mut c = PagedCache::new(8, 16, 8);
+        let h = hashes(5, 48, 16);
+        c.allocate(id(1), 40).unwrap(); // 2 full blocks + 8 tokens
+        c.commit_hashes(id(1), &h);
+        assert_eq!(c.stats().committed_blocks, 2, "partial tail not publishable");
+
+        // an identical concurrent request commits nothing new
+        c.allocate(id(2), 40).unwrap();
+        c.commit_hashes(id(2), &h);
+        assert_eq!(c.stats().committed_blocks, 2);
+        c.verify_integrity().unwrap();
     }
 }

@@ -106,6 +106,19 @@ impl CacheStore {
     pub fn payload_bytes(&self, len: usize) -> usize {
         self.planes.len() * len * self.hidden * std::mem::size_of::<f32>()
     }
+
+    /// Copy one whole block's rows from `src` to `dst` across every plane
+    /// — the data half of a paged-cache copy-on-write (the `(old, new)`
+    /// pair [`crate::cache::Appended`] reports).
+    pub fn copy_block(&mut self, src: u32, dst: u32) {
+        assert_ne!(src, dst, "copy_block onto itself");
+        let span = self.block_size * self.hidden;
+        let s = src as usize * span;
+        let d = dst as usize * span;
+        for plane in &mut self.planes {
+            plane.copy_within(s..s + span, d);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +169,22 @@ mod tests {
     fn payload_bytes_counts_planes() {
         let s = CacheStore::new(4, 8, 16, 128);
         assert_eq!(s.payload_bytes(10), 4 * 10 * 128 * 4);
+    }
+
+    #[test]
+    fn copy_block_copies_every_plane() {
+        let mut s = CacheStore::new(3, 4, 2, 2);
+        for p in 0..3 {
+            s.write_token(p, 2, &[p as f32, 1.0]); // block 1, offset 0
+            s.write_token(p, 3, &[p as f32, 2.0]); // block 1, offset 1
+        }
+        s.copy_block(1, 3);
+        for p in 0..3 {
+            assert_eq!(s.read_token(p, 6), &[p as f32, 1.0]);
+            assert_eq!(s.read_token(p, 7), &[p as f32, 2.0]);
+        }
+        // source untouched
+        assert_eq!(s.read_token(0, 2), &[0.0, 1.0]);
     }
 
     #[test]

@@ -60,6 +60,33 @@ pub struct RequestSpec {
     /// Output tokens to generate (the paper fixes these via ignore_eos to
     /// equalize load across engines, §5.1).
     pub output_tokens: usize,
+    /// Content identity of the attached image(s); `None` = unique content
+    /// (never matches another request). In real execution this is the
+    /// pixel-buffer hash; workload generators use it to model repeated
+    /// images (same image => same hash => the encoder output is reusable).
+    pub image_hash: Option<u64>,
+    /// Leading prompt tokens drawn from a shared prefix (system prompt /
+    /// conversation transcript); the remainder of the prompt is unique.
+    pub shared_prefix_tokens: usize,
+    /// Identity of that shared prefix group (meaningful when
+    /// `shared_prefix_tokens > 0`).
+    pub prefix_hash: u64,
+}
+
+impl Default for RequestSpec {
+    fn default() -> Self {
+        RequestSpec {
+            id: RequestId(0),
+            arrival: 0.0,
+            num_images: 0,
+            tokens_per_image: 0,
+            prompt_tokens: 0,
+            output_tokens: 0,
+            image_hash: None,
+            shared_prefix_tokens: 0,
+            prefix_hash: 0,
+        }
+    }
 }
 
 impl RequestSpec {
@@ -194,11 +221,11 @@ mod tests {
     fn spec(images: usize, prompt: usize, out: usize) -> RequestSpec {
         RequestSpec {
             id: RequestId(1),
-            arrival: 0.0,
             num_images: images,
             tokens_per_image: 576,
             prompt_tokens: prompt,
             output_tokens: out,
+            ..Default::default()
         }
     }
 

@@ -237,6 +237,19 @@ pub fn image_payload_bytes(m: &ModelSpec, img_tokens: usize) -> f64 {
     (img_tokens * m.lm.hidden * m.dtype_bytes) as f64
 }
 
+/// Delta-transfer payload (content-addressed migration, §4.5 extension):
+/// only the KV tokens the target's cache does not already hold cross the
+/// link. `cached` is clamped to `tokens`.
+pub fn kv_delta_payload_bytes(m: &ModelSpec, tokens: usize, cached: usize) -> f64 {
+    kv_payload_bytes(m, tokens.saturating_sub(cached))
+}
+
+/// Delta-transfer payload for an image-embedding migration; a full
+/// target-side cache hit transfers nothing (latency floor only).
+pub fn image_delta_payload_bytes(m: &ModelSpec, img_tokens: usize, cached: usize) -> f64 {
+    image_payload_bytes(m, img_tokens.saturating_sub(cached))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +310,17 @@ mod tests {
         let a = kv_payload_bytes(&llava, 1000) / llava.lm.layers as f64;
         let b = kv_payload_bytes(&qwen, 1000) / qwen.lm.layers as f64;
         assert!(b < a / 4.0, "GQA payload per layer should be much smaller");
+    }
+
+    #[test]
+    fn delta_payloads_shrink_with_cached_prefix() {
+        let m = ModelSpec::llava15_7b();
+        let full = kv_payload_bytes(&m, 640);
+        assert_eq!(kv_delta_payload_bytes(&m, 640, 0), full);
+        assert_eq!(kv_delta_payload_bytes(&m, 640, 512), kv_payload_bytes(&m, 128));
+        assert_eq!(kv_delta_payload_bytes(&m, 640, 10_000), 0.0);
+        assert_eq!(image_delta_payload_bytes(&m, 576, 576), 0.0);
+        assert!(image_delta_payload_bytes(&m, 576, 0) > 0.0);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::{CacheStore, PagedCache};
+use crate::cache::{content, CacheStore, PagedCache};
 use crate::config::ControllerConfig;
 use crate::controller::{
     ClusterSample, DrainTracker, InstanceSample, ReconfigPolicy, StageLoadEstimator, StageRates,
@@ -78,6 +78,11 @@ enum ControlEvent {
     Sample { idx: usize, sample: InstanceSample },
     /// A drain completed and the role flipped.
     FlipDone { idx: usize, mask: StageMask },
+    /// A request finished; its lifecycle feeds the controller's windowed
+    /// TTFT/TPOT tails (previously real mode only reported queue depths —
+    /// finished-request latencies went to the results channel and never
+    /// reached the estimator).
+    Finished(Box<Lifecycle>),
 }
 
 /// Live layout state shared between the controller thread, `submit`
@@ -99,6 +104,11 @@ struct ReqData {
     ctx_len: usize,
     /// Ready-for-work timestamp (queue-time accounting).
     ready_since: f64,
+    /// Chained content hashes of the prompt-region KV blocks (real token
+    /// ids + image identity) — drives prefix sharing and delta migration.
+    kv_hashes: Vec<u64>,
+    /// Content hashes of the image-embedding blocks (pixel hash).
+    img_hashes: Vec<u64>,
 }
 
 struct RealInstance {
@@ -156,23 +166,80 @@ impl RealInstance {
         }
     }
 
+    /// Admission check: blocks a request already pinned (cached prefix)
+    /// cost nothing, and evictable cached blocks count as reclaimable
+    /// capacity — only genuine pressure backpressures.
     fn can_admit(&self, r: &ReqState) -> bool {
-        let kv_need = crate::util::ceil_div(self.kv_tokens_needed(r), self.kv.block_size().max(1));
+        let kv_need = crate::util::ceil_div(self.kv_tokens_needed(r), self.kv.block_size().max(1))
+            .saturating_sub(self.kv.held_blocks(r.spec.id));
         let img_need =
-            crate::util::ceil_div(self.img_tokens_needed(r), self.img.block_size().max(1));
-        kv_need <= self.kv.free_blocks() && img_need <= self.img.free_blocks()
+            crate::util::ceil_div(self.img_tokens_needed(r), self.img.block_size().max(1))
+                .saturating_sub(self.img.held_blocks(r.spec.id));
+        kv_need <= self.kv.available_blocks() && img_need <= self.img.available_blocks()
     }
 
     fn reserve(&mut self, r: &ReqState) {
         let id = r.spec.id;
         let kv_tokens = self.kv_tokens_needed(r);
-        if kv_tokens > 0 && !self.kv.has_request(id) {
-            self.kv.allocate(id, kv_tokens).expect("kv capacity checked");
+        if kv_tokens > 0 {
+            if !self.kv.has_request(id) {
+                // pin any committed prompt-prefix blocks (identical
+                // content: prefill rewrites them with the same values)
+                let hashes =
+                    self.data.get(&id.0).map(|d| d.kv_hashes.clone()).unwrap_or_default();
+                let _ = self.kv.acquire_prefix(
+                    id,
+                    &hashes,
+                    r.spec.prefill_tokens().saturating_sub(1),
+                );
+            }
+            self.kv.grow(id, kv_tokens).expect("kv capacity checked");
         }
         let img_tokens = self.img_tokens_needed(r);
-        if img_tokens > 0 && !self.img.has_request(id) {
-            self.img.allocate(id, img_tokens).expect("img capacity checked");
+        if img_tokens > 0 {
+            if !self.img.has_request(id) {
+                let hashes =
+                    self.data.get(&id.0).map(|d| d.img_hashes.clone()).unwrap_or_default();
+                let _ = self.img.acquire_prefix(id, &hashes, img_tokens);
+            }
+            self.img.grow(id, img_tokens).expect("img capacity checked");
         }
+    }
+
+    /// Reserve for an inbound migration offer, using the offer's content
+    /// hashes; returns (KV tokens, full-image hit) already held locally —
+    /// the delta-pull credit (paper §4.3 step 2 + §4.5 reuse).
+    fn reserve_offer(&mut self, o: &Offer) -> (usize, bool) {
+        let r = &o.req;
+        let id = r.spec.id;
+        let mut kv_have = 0usize;
+        let mut img_have = false;
+        let kv_tokens = self.kv_tokens_needed(r);
+        if kv_tokens > 0 {
+            if !self.kv.has_request(id) {
+                kv_have = self
+                    .kv
+                    .acquire_prefix(
+                        id,
+                        &o.kv_block_hashes,
+                        r.spec.prefill_tokens().saturating_sub(1),
+                    )
+                    .unwrap_or(0);
+            }
+            self.kv.grow(id, kv_tokens).expect("kv capacity checked");
+        }
+        let img_tokens = self.img_tokens_needed(r);
+        if img_tokens > 0 {
+            if !self.img.has_request(id) {
+                let cached = self
+                    .img
+                    .acquire_prefix(id, &o.img_block_hashes, img_tokens)
+                    .unwrap_or(0);
+                img_have = cached >= img_tokens;
+            }
+            self.img.grow(id, img_tokens).expect("img capacity checked");
+        }
+        (kv_have, img_have)
     }
 
     fn release_caches(&mut self, id: RequestId) {
@@ -193,6 +260,31 @@ impl RealInstance {
                 let now = self.now();
                 let mut lc = Lifecycle::new(p.spec.arrival);
                 lc.arrival = p.spec.arrival;
+                let kv_hashes = content::token_kv_hashes(
+                    &p.tokens,
+                    p.spec.image_hash,
+                    p.spec.image_tokens(),
+                    self.kv.block_size(),
+                );
+                let img_hashes = match p.spec.image_hash {
+                    Some(h) => content::image_block_hashes(h, p.spec.num_images.max(1)),
+                    None => Vec::new(),
+                };
+                let mut st = ReqState::new(p.spec.clone());
+                // image-embedding reuse: pin a cached copy and skip the
+                // encode. Only when this instance can also prefill — an
+                // E-only instance re-encodes rather than stranding a
+                // prefill-stage request it cannot serve.
+                if st.spec.has_image() && self.mask.prefill && !self.img.has_request(st.spec.id)
+                {
+                    if let Ok(cached) =
+                        self.img.acquire_prefix(st.spec.id, &img_hashes, st.spec.image_tokens())
+                    {
+                        let imgs = cached / st.spec.tokens_per_image.max(1);
+                        st.cached_images = imgs;
+                        st.encoded_images = st.encoded_images.max(imgs);
+                    }
+                }
                 self.data.insert(
                     p.spec.id.0,
                     ReqData {
@@ -203,9 +295,11 @@ impl RealInstance {
                         lifecycle: lc,
                         ctx_len: 0,
                         ready_since: now,
+                        kv_hashes,
+                        img_hashes,
                     },
                 );
-                self.queues.waiting.push_back(ReqState::new(p.spec));
+                self.queues.waiting.push_back(st);
             }
             Msg::Offer(o) => self.inbound.push(*o),
             Msg::Pull(p) => self.serve_pull(p),
@@ -236,24 +330,32 @@ impl RealInstance {
         true
     }
 
-    /// Step 2 (we are the target): admit queued offers when capacity allows.
+    /// Step 2 (we are the target): admit queued offers when capacity
+    /// allows, and report whatever payload content our cache already
+    /// holds so the source only ships the delta.
     fn admit_offers(&mut self) {
         let mut i = 0;
         while i < self.inbound.len() {
             if self.can_admit(&self.inbound[i].req) {
                 let offer = self.inbound.remove(i);
-                self.reserve(&offer.req);
+                let (kv_have_tokens, img_have) = self.reserve_offer(&offer);
                 let src = offer.src;
                 let req_id = offer.req.spec.id;
                 self.pending_in.insert(req_id.0, offer);
-                let _ = self.peers[src].0.send(Msg::Pull(Pull { req_id, dst: self.idx }));
+                let _ = self.peers[src].0.send(Msg::Pull(Pull {
+                    req_id,
+                    dst: self.idx,
+                    kv_have_tokens,
+                    img_have,
+                }));
             } else {
                 i += 1;
             }
         }
     }
 
-    /// Step 3 (we are the source): ship the payload.
+    /// Step 3 (we are the source): ship only the payload the target is
+    /// missing (delta transfer).
     fn serve_pull(&mut self, p: Pull) {
         let id = p.req_id;
         let Some(state) = self.queues.running.iter().find(|r| r.spec.id == id) else {
@@ -266,20 +368,27 @@ impl RealInstance {
         };
         let payload = match kind {
             MigrationKind::EncodeToPrefill => {
-                let slots = self.img.slot_mapping(id).expect("img allocated");
+                let img_embed = if p.img_have {
+                    None // target-side cache hit: nothing to ship
+                } else {
+                    let slots = self.img.slot_mapping(id).expect("img allocated");
+                    Some(self.img_store.gather(0, &slots))
+                };
                 Payload {
                     req_id: id,
                     kind,
-                    img_embed: Some(self.img_store.gather(0, &slots)),
+                    img_embed,
                     kv_planes: None,
                     kv_tokens: 0,
+                    kv_from: 0,
                 }
             }
             MigrationKind::PrefillToDecode => {
                 let d = self.data.get(&id.0).expect("data present");
                 let valid = d.ctx_len;
+                let from = p.kv_have_tokens.min(valid);
                 let table = self.kv.table(id).expect("kv allocated").clone();
-                let slots: Vec<u32> = (0..valid)
+                let slots: Vec<u32> = (from..valid)
                     .map(|pos| table.slot_of(pos, self.kv.block_size()).unwrap())
                     .collect();
                 let planes = (0..self.kv_store.num_planes())
@@ -291,6 +400,7 @@ impl RealInstance {
                     img_embed: None,
                     kv_planes: Some(planes),
                     kv_tokens: valid,
+                    kv_from: from,
                 }
             }
         };
@@ -314,23 +424,32 @@ impl RealInstance {
         let mut ctx_len = 0;
         match pl.kind {
             MigrationKind::EncodeToPrefill => {
-                let embed = pl.img_embed.expect("ep payload has embeddings");
-                let slots = self.img.slot_mapping(id).expect("img reserved at admit");
-                let h = self.img_store.hidden();
-                for (i, &slot) in slots.iter().enumerate() {
-                    self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
+                // None = our cache already held the embedding (delta pull)
+                if let Some(embed) = pl.img_embed {
+                    let slots = self.img.slot_mapping(id).expect("img reserved at admit");
+                    let h = self.img_store.hidden();
+                    for (i, &slot) in slots.iter().enumerate() {
+                        self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
+                    }
                 }
+                // the embedding now lives here: publish it for reuse
+                self.img.commit_hashes(id, &offer.img_block_hashes);
             }
             MigrationKind::PrefillToDecode => {
                 let planes = pl.kv_planes.expect("pd payload has kv");
                 ctx_len = pl.kv_tokens;
                 let table = self.kv.table(id).expect("kv reserved at admit").clone();
-                let slots: Vec<u32> = (0..ctx_len)
+                // positions below kv_from were a local cache hit and were
+                // never transferred
+                let from = pl.kv_from.min(ctx_len);
+                let slots: Vec<u32> = (from..ctx_len)
                     .map(|pos| table.slot_of(pos, self.kv.block_size()).unwrap())
                     .collect();
                 for (p, plane) in planes.into_iter().enumerate() {
                     self.kv_store.scatter(p, &slots, &plane);
                 }
+                // the prompt-prefix KV now lives here: publish it
+                self.kv.commit_hashes(id, &offer.kv_block_hashes);
             }
         }
 
@@ -344,6 +463,8 @@ impl RealInstance {
                 lifecycle: lc,
                 ctx_len,
                 ready_since: now,
+                kv_hashes: offer.kv_block_hashes,
+                img_hashes: offer.img_block_hashes,
             },
         );
         self.queues.running.push(state);
@@ -387,6 +508,8 @@ impl RealInstance {
             generated: d.generated.clone(),
             img_embed_floats: state.spec.image_tokens() * self.device.cfg().hidden,
             kv_tokens: d.ctx_len,
+            kv_block_hashes: d.kv_hashes.clone(),
+            img_block_hashes: d.img_hashes.clone(),
             src: self.idx,
             offered_at: Instant::now(),
             lifecycle: d.lifecycle.clone(),
@@ -402,17 +525,23 @@ impl RealInstance {
 
         let mut sched = std::mem::replace(&mut self.sched, self.policy.make(self.mask));
         let batch = {
-            let kv_free = self.kv.free_blocks();
-            let img_free = self.img.free_blocks();
-            let kv_bs = self.kv.block_size().max(1);
-            let img_bs = self.img.block_size().max(1);
+            let kv = &self.kv;
+            let img = &self.img;
+            let kv_bs = kv.block_size().max(1);
+            let img_bs = img.block_size().max(1);
+            let kv_avail = kv.available_blocks();
+            let img_avail = img.available_blocks();
             let mask = self.mask;
             let mut kv_used = 0usize;
             let mut img_used = 0usize;
             let mut admit = |r: &ReqState| {
-                let kv_need = crate::util::ceil_div(kv_tokens_needed_mask(mask, r), kv_bs);
-                let img_need = crate::util::ceil_div(img_tokens_needed_mask(mask, r), img_bs);
-                if kv_used + kv_need <= kv_free && img_used + img_need <= img_free {
+                // already-pinned (cached-prefix) blocks cost nothing;
+                // evictable cached blocks count as capacity
+                let kv_need = crate::util::ceil_div(kv_tokens_needed_mask(mask, r), kv_bs)
+                    .saturating_sub(kv.held_blocks(r.spec.id));
+                let img_need = crate::util::ceil_div(img_tokens_needed_mask(mask, r), img_bs)
+                    .saturating_sub(img.held_blocks(r.spec.id));
+                if kv_used + kv_need <= kv_avail && img_used + img_need <= img_avail {
                     kv_used += kv_need;
                     img_used += img_need;
                     true
@@ -461,6 +590,10 @@ impl RealInstance {
                     self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
                 }
                 k += n;
+                // publish the fresh embedding for cross-request reuse
+                let img_hashes =
+                    self.data.get(&id.0).map(|d| d.img_hashes.clone()).unwrap_or_default();
+                self.img.commit_hashes(*id, &img_hashes);
                 let d = self.data.get_mut(&id.0).unwrap();
                 d.lifecycle.add_phase(Phase::EncodeQueue, (started - d.ready_since).max(0.0));
                 d.lifecycle.add_phase(Phase::EncodeExec, now - started);
@@ -509,6 +642,11 @@ impl RealInstance {
                 self.kv_store.scatter(l, &slots, k);
                 self.kv_store.scatter(layers + l, &slots, v);
             }
+
+            // the prompt-region KV is final: publish it for prefix reuse
+            let kv_hashes =
+                self.data.get(&id.0).map(|d| d.kv_hashes.clone()).unwrap_or_default();
+            self.kv.commit_hashes(*id, &kv_hashes);
 
             // first output token comes from the prefill logits
             let d = self.data.get_mut(&id.0).unwrap();
@@ -674,6 +812,8 @@ impl RealInstance {
                 continue;
             };
             let r = self.queues.waiting.remove(i).unwrap();
+            // drop any cache prefix pinned at submit before it leaves
+            self.release_caches(r.spec.id);
             let Some(d) = self.data.remove(&r.spec.id.0) else { continue };
             // a waiting request has made no progress: re-submit it whole
             let prepared = PreparedRequest {
@@ -725,6 +865,11 @@ impl RealInstance {
         self.release_caches(id);
         if let Some(mut d) = self.data.remove(&id.0) {
             d.lifecycle.finished_at = Some(self.now());
+            // tee the finished latencies into the controller's estimator
+            // (the results channel alone never reaches it)
+            if let Some(tx) = &self.ctrl {
+                let _ = tx.send(ControlEvent::Finished(Box::new(d.lifecycle.clone())));
+            }
             let text = self.tokenizer.decode(&d.generated);
             let _ = self.results.send(ServeResult {
                 id,
@@ -782,8 +927,20 @@ impl RealInstance {
 /// Round-robin over `candidates`, skipping mid-drain peers; falls back to
 /// them when no one else is eligible, so work is never dropped just
 /// because a reconfiguration is in flight. Returns the chosen instance
-/// index (the real-mode analogue of the simulator's `route_among`).
+/// index (the real-mode analogue of the simulator's routing).
 fn pick_peer(router: &mut Router, candidates: &[usize], draining: &[bool]) -> Option<usize> {
+    let zeros = vec![0.0; candidates.len()];
+    pick_peer_affinity(router, candidates, draining, &zeros)
+}
+
+/// [`pick_peer`] with per-candidate cache-affinity scores: a peer whose
+/// cache likely holds this request's content wins over round-robin.
+fn pick_peer_affinity(
+    router: &mut Router,
+    candidates: &[usize],
+    draining: &[bool],
+    affinity: &[f64],
+) -> Option<usize> {
     if candidates.is_empty() {
         return None;
     }
@@ -797,7 +954,7 @@ fn pick_peer(router: &mut Router, candidates: &[usize], draining: &[bool]) -> Op
             }
         })
         .collect();
-    if let Some(p) = router.pick(&gated) {
+    if let Some(p) = router.pick_affinity(&gated, affinity) {
         return Some(candidates[p]);
     }
     let raw = vec![0.0; candidates.len()];
@@ -836,6 +993,15 @@ pub struct RealCluster {
     tokenizer: Tokenizer,
     epoch: Instant,
     next_id: u64,
+    /// Content-affinity routing memory: content key (image hash or first
+    /// prompt-block hash) -> instance that last served it, plus how many
+    /// submits in a row rode that affinity. Its cache likely still holds
+    /// the blocks, so repeats route back there — but the cluster router
+    /// has no live queue depths, so stickiness is *bounded*: every
+    /// `AFFINITY_STREAK`-th repeat re-routes by the plain policy and
+    /// re-homes the key, spreading a hot key across instances instead of
+    /// herding unboundedly onto one.
+    content_affinity: HashMap<u64, (usize, u32)>,
     /// Elastic control plane (None = static layout).
     control: Option<Arc<Mutex<ControlShared>>>,
     ctrl_stop: Arc<AtomicBool>,
@@ -960,6 +1126,7 @@ impl RealCluster {
             tokenizer: Tokenizer::new(),
             epoch,
             next_id: 0,
+            content_affinity: HashMap::new(),
             control,
             ctrl_stop,
             ctrl_join,
@@ -995,6 +1162,8 @@ impl RealCluster {
             anyhow::bail!("prompt too long: {} tokens > {max_txt}", tokens.len());
         }
         let pixels = image.map(|img| img.preprocess(cfg.img_size));
+        // content identity: the pixel hash keys image-embedding reuse
+        let image_hash = pixels.as_ref().map(|p| content::hash_f32s(p));
         let prefill = tokens.len() + if image.is_some() { cfg.img_tokens } else { 0 };
         let max_out = cfg.max_context().saturating_sub(prefill + 1);
         let mut sampling = sampling;
@@ -1009,6 +1178,8 @@ impl RealCluster {
             tokens_per_image: cfg.img_tokens,
             prompt_tokens: tokens.len(),
             output_tokens: sampling.max_tokens,
+            image_hash,
+            ..Default::default()
         };
         let first = spec.first_stage();
         // live layout: under the elastic controller, masks change and
@@ -1022,8 +1193,39 @@ impl RealCluster {
         };
         let candidates: Vec<usize> =
             (0..masks.len()).filter(|&i| masks[i].serves(first)).collect();
-        let target = pick_peer(&mut self.router, &candidates, &draining)
+        // cache affinity: a repeated image / prompt goes back to the
+        // instance that served it before (its cache holds the blocks).
+        // The key only needs the first block's chain hash — no point
+        // hashing the whole prompt here.
+        let content_key = image_hash.or_else(|| {
+            let head = &tokens[..tokens.len().min(cfg.block_size)];
+            content::token_kv_hashes(head, None, 0, cfg.block_size)
+                .first()
+                .copied()
+        });
+        // Consecutive submits allowed to ride one key's affinity before a
+        // forced re-balance (the cluster router sees no queue depths).
+        const AFFINITY_STREAK: u32 = 8;
+        let sticky = content_key.and_then(|k| self.content_affinity.get(&k).copied());
+        let affinity: Vec<f64> = candidates
+            .iter()
+            .map(|&i| match sticky {
+                Some((home, streak)) if home == i && streak < AFFINITY_STREAK => 1.0,
+                _ => 0.0,
+            })
+            .collect();
+        let target = pick_peer_affinity(&mut self.router, &candidates, &draining, &affinity)
             .ok_or_else(|| anyhow!("no instance serves {first:?}"))?;
+        if let Some(k) = content_key {
+            if self.content_affinity.len() > 4096 {
+                self.content_affinity.clear(); // bounded memory
+            }
+            let streak = match sticky {
+                Some((home, s)) if home == target => s + 1,
+                _ => 0, // new or re-homed key: its cache warms on miss
+            };
+            self.content_affinity.insert(k, (target, streak));
+        }
         self.senders[target]
             .send(Msg::Submit(Box::new(PreparedRequest { spec, tokens, pixels, sampling })))
             .map_err(|_| anyhow!("instance {target} is down"))?;
@@ -1124,6 +1326,10 @@ fn spawn_controller_thread(
             let mut pol = ReconfigPolicy::new(cc.clone());
             let mut tracker = DrainTracker::new(n);
             let mut latest: Vec<Option<InstanceSample>> = vec![None; n];
+            // finished-request lifecycles inside the estimator window:
+            // the real-mode source of the TTFT/TPOT tails
+            let mut recent: std::collections::VecDeque<Lifecycle> =
+                std::collections::VecDeque::new();
             let mut last_tick = 0.0f64;
             let poll = Duration::from_millis(((cc.tick * 500.0) as u64).max(1));
             let broadcast_drain = |senders: &[Sender<Msg>], idx: usize, draining: bool| {
@@ -1141,6 +1347,7 @@ fn spawn_controller_thread(
                             latest[idx] = Some(sample);
                         }
                     }
+                    Ok(ControlEvent::Finished(lc)) => recent.push_back(*lc),
                     Ok(ControlEvent::FlipDone { idx, mask }) => {
                         let now = epoch.elapsed().as_secs_f64();
                         let from = {
@@ -1189,11 +1396,22 @@ fn spawn_controller_thread(
                             .unwrap_or_else(|| InstanceSample::idle(masks[i], draining[i]))
                     })
                     .collect();
+                // windowed latency tails from finished requests (tee'd via
+                // ControlEvent::Finished), matching the simulator's
+                // estimator input
+                let cutoff = now - cc.window;
+                while recent
+                    .front()
+                    .is_some_and(|lc| lc.finished_at.unwrap_or(0.0) < cutoff)
+                {
+                    recent.pop_front();
+                }
+                let w = crate::metrics::window_stats(recent.iter(), cutoff);
                 est.observe(ClusterSample {
                     t: now,
                     instances: insts,
-                    ttft_p90: None,
-                    tpot_p90: None,
+                    ttft_p90: w.ttft_p90(),
+                    tpot_p90: w.tpot_p90(),
                 });
                 let Some(load) = est.snapshot() else { continue };
                 if let Some(d) = pol.decide(now, &load, &masks, &draining) {

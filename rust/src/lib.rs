@@ -6,14 +6,23 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution:
-//!   request router, stage-level batch scheduler (Algorithm 1), paged
-//!   KV/image cache managers, pull-based migrate scheduler, and the hybrid
-//!   EPD disaggregation planner, plus a roofline-calibrated discrete-event
-//!   simulator that regenerates every table and figure in the paper's
-//!   evaluation. On top of the static planner sits an **elastic control
+//!   request router, stage-level batch scheduler (Algorithm 1),
+//!   **content-addressed** paged KV/image cache managers (`cache`:
+//!   refcounted cross-request block sharing keyed by chained prefix
+//!   hashes and image content hashes, copy-on-write on fork divergence,
+//!   LRU eviction of unreferenced cached blocks), pull-based migrate
+//!   scheduler with delta transfer (blocks the target already caches
+//!   never cross the wire), and the hybrid EPD disaggregation planner,
+//!   plus a roofline-calibrated discrete-event simulator that regenerates
+//!   every table and figure in the paper's evaluation. Reuse threads
+//!   through every layer: the scheduler derives request progress from
+//!   cache lookups (a cached image embedding skips encode, prefill starts
+//!   at the longest cached prefix), and the router scores cache affinity
+//!   before load. On top of the static planner sits an **elastic control
 //!   plane** (`controller`): a stage-load estimator over windowed queue
-//!   depths and TTFT/TPOT tails, a hysteresis reconfiguration policy, and
-//!   a drain-then-flip executor that retargets instance roles online when
+//!   depths and TTFT/TPOT tails (fed in real mode by finished-request
+//!   lifecycles), a hysteresis reconfiguration policy, and a
+//!   drain-then-flip executor that retargets instance roles online when
 //!   the workload's encode/prefill/decode mix drifts — the planner picks
 //!   the initial layout, the controller keeps it matched to the traffic.
 //! * **Layer 2** — a JAX vision-language model (`python/compile/model.py`)

@@ -1,20 +1,26 @@
 //! Real-mode request migration: the paper's 4-step pull-based protocol
-//! (§4.3) over in-process channels.
+//! (§4.3) over in-process channels, with content-addressed **delta
+//! transfer** layered on top.
 //!
 //!   step 1  source -> target: `Offer` (control info: request metadata +
 //!           payload sizes — "the page tables of the KV cache and image
-//!           cache")
+//!           cache" — plus the payload's *block content hashes*)
 //!   step 2  target -> source: `Pull` once the target has allocated cache
 //!           space (pull-based so an overloaded receiver never overflows;
-//!           a queued Offer = backpressure that blocks the source's blocks)
-//!   step 3  source -> target: `Payload` (the actual cache bytes,
-//!           transferred asynchronously)
+//!           a queued Offer = backpressure that blocks the source's
+//!           blocks). The target looks the offered hashes up in its own
+//!           content-addressed cache first and reports what it already
+//!           holds (`kv_have_tokens` / `img_have`) — a block the target
+//!           already caches never crosses the wire.
+//!   step 3  source -> target: `Payload` (the cache bytes the target is
+//!           actually missing, transferred asynchronously)
 //!   step 4  target -> source: `Release` — only now does the source free
 //!           the migrated request's resources
 //!
 //! The channel transport stands in for CUDA-IPC/NCCL (DESIGN.md §2); the
 //! protocol structure, ownership hand-off and backpressure are faithful.
 
+use crate::cache::BlockHash;
 use crate::core::RequestId;
 use crate::core::SamplingParams;
 use crate::scheduler::ReqState;
@@ -41,6 +47,11 @@ pub struct Offer {
     /// Payload sizes, for the target's admission decision.
     pub img_embed_floats: usize,
     pub kv_tokens: usize,
+    /// Chained content hashes of the KV blocks on offer — the target
+    /// checks these against its own cache to request a delta pull.
+    pub kv_block_hashes: Vec<BlockHash>,
+    /// Content hashes of the image-embedding blocks on offer.
+    pub img_block_hashes: Vec<BlockHash>,
     /// Index of the source instance.
     pub src: usize,
     /// Wall-clock when the offer was made (for migration-phase latency).
@@ -49,24 +60,35 @@ pub struct Offer {
     pub lifecycle: crate::core::Lifecycle,
 }
 
-/// Step 2: the target is ready; asks the source to send the bytes.
+/// Step 2: the target is ready; asks the source to send only the bytes it
+/// is missing.
 #[derive(Debug, Clone)]
 pub struct Pull {
     pub req_id: RequestId,
     pub dst: usize,
+    /// Leading KV tokens the target already holds (shared cache blocks);
+    /// the source starts its gather here.
+    pub kv_have_tokens: usize,
+    /// The target already holds the image embedding; skip that payload.
+    pub img_have: bool,
 }
 
-/// Step 3: the cache bytes.
+/// Step 3: the cache bytes the target was missing.
 #[derive(Debug, Clone)]
 pub struct Payload {
     pub req_id: RequestId,
     pub kind: MigrationKind,
-    /// Image embeddings ([img_tokens * hidden]) for EP migrations.
+    /// Image embeddings ([img_tokens * hidden]) for EP migrations (`None`
+    /// when the target reported a cache hit).
     pub img_embed: Option<Vec<f32>>,
-    /// Contiguous KV per plane (k0..kL-1, v0..vL-1), each [len * hidden],
-    /// for PD migrations.
+    /// Contiguous KV per plane (k0..kL-1, v0..vL-1), each
+    /// [(kv_tokens - kv_from) * hidden], for PD migrations.
     pub kv_planes: Option<Vec<Vec<f32>>>,
+    /// Total valid KV tokens of the sequence.
     pub kv_tokens: usize,
+    /// First token position the planes cover (everything before it was a
+    /// target-side cache hit and was never transferred).
+    pub kv_from: usize,
 }
 
 impl Payload {
@@ -95,11 +117,11 @@ mod tests {
     fn state() -> ReqState {
         ReqState::new(RequestSpec {
             id: RequestId(9),
-            arrival: 0.0,
             num_images: 1,
             tokens_per_image: 16,
             prompt_tokens: 20,
             output_tokens: 4,
+            ..Default::default()
         })
     }
 
@@ -111,6 +133,7 @@ mod tests {
             img_embed: None,
             kv_planes: Some(vec![vec![0.0; 36 * 128]; 4]),
             kv_tokens: 36,
+            kv_from: 0,
         };
         assert_eq!(p.bytes(), 4 * 36 * 128 * 4);
         let p2 = Payload {
@@ -119,12 +142,37 @@ mod tests {
             img_embed: Some(vec![0.0; 16 * 128]),
             kv_planes: None,
             kv_tokens: 0,
+            kv_from: 0,
         };
         assert_eq!(p2.bytes(), 16 * 128 * 4);
     }
 
     #[test]
-    fn offer_carries_request_state() {
+    fn delta_pull_shrinks_the_payload() {
+        // a target holding the first 32 of 36 tokens pulls only the tail
+        let delta = Payload {
+            req_id: RequestId(3),
+            kind: MigrationKind::PrefillToDecode,
+            img_embed: None,
+            kv_planes: Some(vec![vec![0.0; (36 - 32) * 128]; 4]),
+            kv_tokens: 36,
+            kv_from: 32,
+        };
+        assert_eq!(delta.bytes(), 4 * 4 * 128 * 4);
+        // a full image-cache hit pulls nothing at all
+        let hit = Payload {
+            req_id: RequestId(4),
+            kind: MigrationKind::EncodeToPrefill,
+            img_embed: None,
+            kv_planes: None,
+            kv_tokens: 0,
+            kv_from: 0,
+        };
+        assert_eq!(hit.bytes(), 0);
+    }
+
+    #[test]
+    fn offer_carries_request_state_and_content_hashes() {
         let o = Offer {
             req: state(),
             kind: MigrationKind::EncodeToPrefill,
@@ -133,11 +181,15 @@ mod tests {
             generated: vec![],
             img_embed_floats: 16 * 128,
             kv_tokens: 0,
+            kv_block_hashes: vec![0xAB, 0xCD],
+            img_block_hashes: vec![0xEF],
             src: 0,
             offered_at: std::time::Instant::now(),
             lifecycle: crate::core::Lifecycle::new(0.0),
         };
         assert_eq!(o.req.spec.id, RequestId(9));
         assert_eq!(o.kind, MigrationKind::EncodeToPrefill);
+        assert_eq!(o.kv_block_hashes.len(), 2);
+        assert_eq!(o.img_block_hashes, vec![0xEF]);
     }
 }

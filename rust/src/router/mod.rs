@@ -3,6 +3,13 @@
 //! them to the corresponding Encode or Prefill instances"; §4.3: the
 //! Migrate Scheduler "can adopt strategies such as round-robin or random
 //! selection").
+//!
+//! On top of the load policies sits **cache-affinity scoring**
+//! ([`Router::pick_affinity`]): a candidate whose content-addressed cache
+//! already holds the request's image embedding or KV prefix is preferred
+//! over a merely idle one — work it would otherwise recompute (and bytes
+//! a migration would otherwise transfer) simply don't happen. Load breaks
+//! ties, and with no affinity anywhere the configured policy decides.
 
 use crate::util::rng::Rng;
 
@@ -60,6 +67,47 @@ impl Router {
             }
         })
     }
+
+    /// Cache-affinity pick: among eligible candidates (finite load),
+    /// prefer the one whose cache already holds the most of this request
+    /// (`affinity[i]` = reusable tokens/bytes on candidate i). Load breaks
+    /// affinity ties, and — to stop all shared-content traffic herding
+    /// onto one instance past its capacity — an affinity candidate only
+    /// wins while its load stays within a slack band of the least-loaded
+    /// eligible candidate; beyond that, recomputing is cheaper than
+    /// queueing and the pick degrades to the plain load policy. With zero
+    /// affinity everywhere this is exactly [`Router::pick`]. `affinity`
+    /// must be at least as long as `loads`.
+    pub fn pick_affinity(&mut self, loads: &[f64], affinity: &[f64]) -> Option<usize> {
+        debug_assert!(affinity.len() >= loads.len(), "affinity per candidate");
+        let min_load = loads
+            .iter()
+            .copied()
+            .filter(|l| l.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        // a cached copy is worth a moderately longer queue, not an
+        // unbounded one
+        let load_cap = 4.0 + 2.0 * min_load;
+        let mut best: Option<usize> = None;
+        for (i, l) in loads.iter().enumerate() {
+            if !l.is_finite() || affinity[i] <= 0.0 || *l > load_cap {
+                continue;
+            }
+            best = match best {
+                Some(b)
+                    if affinity[b] > affinity[i]
+                        || (affinity[b] == affinity[i] && loads[b] <= loads[i]) =>
+                {
+                    Some(b)
+                }
+                _ => Some(i),
+            };
+        }
+        match best {
+            Some(b) => Some(b),
+            None => self.pick(loads),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +163,36 @@ mod tests {
         for _ in 0..100 {
             assert_ne!(rnd.pick(&[0.0, inf, 0.0]), Some(1));
         }
+    }
+
+    #[test]
+    fn affinity_beats_load_but_not_eligibility() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
+        // candidate 2 holds cached content: preferred over the idle 0
+        assert_eq!(r.pick_affinity(&[0.0, 5.0, 3.0], &[0.0, 0.0, 64.0]), Some(2));
+        // highest affinity wins; load breaks affinity ties
+        assert_eq!(r.pick_affinity(&[1.0, 2.0, 3.0], &[64.0, 576.0, 576.0]), Some(1));
+        // a draining (infinite-load) candidate is never picked, cached or not
+        let inf = f64::INFINITY;
+        assert_eq!(r.pick_affinity(&[0.0, inf], &[0.0, 576.0]), Some(0));
+        // no affinity anywhere -> plain policy pick
+        assert_eq!(r.pick_affinity(&[3.0, 1.0, 2.0], &[0.0, 0.0, 0.0]), Some(1));
+        // nothing eligible -> None
+        assert_eq!(r.pick_affinity(&[inf, inf], &[1.0, 2.0]), None);
+    }
+
+    #[test]
+    fn affinity_does_not_herd_onto_an_overloaded_instance() {
+        // the instance holding the hot content is saturated: recomputing
+        // on an idle peer beats queueing behind 50 requests
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 0);
+        assert_eq!(
+            r.pick_affinity(&[50.0, 0.0, 0.5], &[576.0, 0.0, 0.0]),
+            Some(1),
+            "fall back to load policy when the cached instance is overloaded"
+        );
+        // ...but a moderate queue is worth the cache hit
+        assert_eq!(r.pick_affinity(&[3.0, 0.0, 0.5], &[576.0, 0.0, 0.0]), Some(0));
     }
 
     #[test]

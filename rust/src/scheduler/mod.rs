@@ -17,23 +17,44 @@ use std::collections::VecDeque;
 use crate::core::{RequestId, RequestSpec, Stage};
 
 /// Scheduler-visible request state (progress through the stage pipeline).
+///
+/// Progress does not start at zero: when an instance attaches a request,
+/// it consults the content-addressed caches and pre-advances
+/// `encoded_images` / `prefilled` by whatever the cache already holds
+/// (`cached_images` / `cached_prefill` record how much came from cache,
+/// for accounting). `stage()` therefore derives the next stage from cache
+/// lookups — a request whose image embedding is cached skips encode
+/// entirely, and prefill starts at the longest cached prompt prefix.
 #[derive(Debug, Clone)]
 pub struct ReqState {
     pub spec: RequestSpec,
-    /// Images encoded so far.
+    /// Images available so far (encoded here, or served from cache).
     pub encoded_images: usize,
     /// Prompt tokens prefilled so far (counting image tokens, which are
     /// "prefilled" by splicing embeddings — they still cost KV space).
+    /// Includes cache-served prefix tokens.
     pub prefilled: usize,
     /// Output tokens produced so far.
     pub decoded: usize,
     /// True while the request is being migrated (owns a migrate task).
     pub migrating: bool,
+    /// Of `prefilled`, tokens served from the content-addressed KV cache.
+    pub cached_prefill: usize,
+    /// Of `encoded_images`, images served from the image-embedding cache.
+    pub cached_images: usize,
 }
 
 impl ReqState {
     pub fn new(spec: RequestSpec) -> Self {
-        ReqState { spec, encoded_images: 0, prefilled: 0, decoded: 0, migrating: false }
+        ReqState {
+            spec,
+            encoded_images: 0,
+            prefilled: 0,
+            decoded: 0,
+            migrating: false,
+            cached_prefill: 0,
+            cached_images: 0,
+        }
     }
 
     /// The stage this request needs next.
@@ -680,11 +701,11 @@ mod tests {
     fn spec(id: u64, images: usize, prompt: usize, out: usize) -> RequestSpec {
         RequestSpec {
             id: RequestId(id),
-            arrival: 0.0,
             num_images: images,
             tokens_per_image: 16,
             prompt_tokens: prompt,
             output_tokens: out,
+            ..Default::default()
         }
     }
 
@@ -817,6 +838,33 @@ mod tests {
         assert!(b.is_empty());
         assert_eq!(q.waiting.len(), 2);
         assert!(q.running.is_empty());
+    }
+
+    #[test]
+    fn cache_hits_pre_advance_the_stage_pipeline() {
+        // a cached image embedding skips encode; a cached KV prefix makes
+        // prefill start mid-prompt (ctx = cached tokens, not zero)
+        let mut r = ReqState::new(spec(1, 1, 100, 5));
+        r.encoded_images = 1;
+        r.cached_images = 1;
+        r.prefilled = 64;
+        r.cached_prefill = 64;
+        assert_eq!(r.stage(), Stage::Prefill);
+        assert_eq!(r.prefill_remaining(), r.spec.prefill_tokens() - 64);
+
+        let mut s = StageLevelScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        q.waiting.push_back(r);
+        let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
+        assert_eq!(b.num_encode_images(), 0, "encode skipped on cache hit");
+        let (_, w) = &b.items[0];
+        match w {
+            TaskWork::PrefillChunk { ctx, tokens } => {
+                assert_eq!(*ctx, 64, "prefill resumes at the cached prefix");
+                assert_eq!(ctx + tokens, 116);
+            }
+            other => panic!("expected a prefill chunk, got {other:?}"),
+        }
     }
 
     #[test]

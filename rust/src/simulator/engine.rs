@@ -9,7 +9,7 @@ use crate::controller::{
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, Stage};
 use crate::costmodel::{encode_cost, iteration_cost, parallel_time, sequential_time, Cost};
 use crate::metrics::RunMetrics;
-use crate::cache::PagedCache;
+use crate::cache::{content, BlockHash, CacheStats, PagedCache};
 use crate::router::{RoutePolicy, Router};
 use crate::scheduler::{
     compute_image_budget, compute_token_budget, Batch, BudgetProfile, Budgets, Queues, ReqState,
@@ -56,12 +56,19 @@ impl Ord for Ev {
 // -------------------------------------------------------------- instances
 
 /// A migration waiting for the target to pull it (paper §4.3 step 1).
+/// Transfer bytes are decided at *admit* time, when the target knows how
+/// much of the payload its content-addressed cache already holds (delta
+/// transfer — a block the target caches never crosses the link).
 #[derive(Debug, Clone)]
 struct PendingPull {
     req: ReqState,
     src: usize,
     phase: Phase, // EpMigration or PdMigration
-    bytes: f64,
+    /// Payload size in content tokens (image tokens for EP, prefill
+    /// tokens for PD) before any target-side cache credit.
+    payload_tokens: usize,
+    /// KV tokens the target already held when it admitted the pull.
+    kv_cached: usize,
     created: f64,
 }
 
@@ -109,27 +116,102 @@ impl SimInstance {
         }
     }
 
+    /// Admission check. Blocks the request already pinned (a cached
+    /// prefix acquired at attach) cost nothing; evictable cached blocks
+    /// count as reclaimable — only genuine pressure backpressures.
     fn can_admit(&self, r: &ReqState) -> bool {
-        let kv_need = kv_blocks_for(self.kv_tokens_needed(r));
+        let kv_need = kv_blocks_for(self.kv_tokens_needed(r))
+            .saturating_sub(self.kv.held_blocks(r.spec.id));
+        let img_need = self
+            .img_blocks_needed(r)
+            .saturating_sub(self.img.held_blocks(r.spec.id));
+        kv_need <= self.kv.available_blocks() && img_need <= self.img.available_blocks()
+    }
+
+    /// Pin whatever the content-addressed caches already hold for a newly
+    /// routed request, and derive its pipeline progress from the hits: a
+    /// cached embedding skips encode, a cached KV prefix starts prefill
+    /// mid-prompt (always leaving >= 1 token so prefill emits the first
+    /// output token). Must run before the scheduler first sees `r`.
+    fn attach(
+        &mut self,
+        r: &mut ReqState,
+        kv_hashes: &[BlockHash],
+        img_hashes: &[BlockHash],
+        report: &mut CacheReport,
+    ) {
+        let id = r.spec.id;
         let img_need = self.img_blocks_needed(r);
-        (kv_need == 0 || kv_need <= self.kv.free_blocks())
-            && (img_need == 0 || img_need <= self.img.free_blocks())
+        if img_need > 0 && !self.img.has_request(id) {
+            // cap in *occupied blocks*, not raw image tokens: an image
+            // smaller than IMG_BLOCK (e.g. qwen2-vl's 380 tokens) still
+            // occupies — and is cached as — one whole block
+            let cached = self
+                .img
+                .acquire_prefix(id, img_hashes, img_need * IMG_BLOCK)
+                .expect("fresh request");
+            let per = r.spec.tokens_per_image.max(1);
+            let imgs = (cached / per).min(r.spec.num_images);
+            r.cached_images = imgs;
+            r.encoded_images = r.encoded_images.max(imgs);
+            report.img_hit_images += imgs;
+            report.img_total_images += r.spec.num_images;
+        }
+        if self.kv_tokens_needed(r) > 0 && !self.kv.has_request(id) {
+            let cap = r.spec.prefill_tokens().saturating_sub(1);
+            let cached = self
+                .kv
+                .acquire_prefix(id, kv_hashes, cap)
+                .expect("fresh request");
+            r.cached_prefill = cached;
+            r.prefilled = r.prefilled.max(cached);
+            report.kv_hit_tokens += cached;
+            report.kv_lookup_tokens += cap;
+        }
     }
 
     /// Reserve blocks for an admitted request (must follow can_admit).
-    fn reserve(&mut self, r: &ReqState) {
+    /// Returns (KV tokens, image tokens) already present locally — the
+    /// delta-transfer credit for migrated-in requests.
+    fn reserve(&mut self, r: &ReqState, content_cache: bool) -> (usize, usize) {
+        let id = r.spec.id;
+        let mut kv_cached = 0;
+        let mut img_cached = 0;
         let kv_tokens = self.kv_tokens_needed(r);
-        if kv_tokens > 0 && !self.kv.has_request(r.spec.id) {
-            self.kv
-                .allocate(r.spec.id, kv_tokens)
-                .expect("can_admit checked kv capacity");
+        if kv_tokens > 0 {
+            if !self.kv.has_request(id) {
+                let hashes = if content_cache {
+                    content::spec_kv_hashes(&r.spec, KV_BLOCK)
+                } else {
+                    Vec::new()
+                };
+                kv_cached = self
+                    .kv
+                    .acquire_prefix(id, &hashes, r.spec.prefill_tokens().saturating_sub(1))
+                    .expect("fresh table");
+            }
+            self.kv.grow(id, kv_tokens).expect("can_admit checked kv capacity");
         }
         let img_need = self.img_blocks_needed(r);
-        if img_need > 0 && !self.img.has_request(r.spec.id) {
+        if img_need > 0 {
+            if !self.img.has_request(id) {
+                let hashes = if content_cache {
+                    content::spec_img_hashes(&r.spec, IMG_BLOCK)
+                } else {
+                    Vec::new()
+                };
+                // occupied-block cap (sub-block images round up, see attach)
+                img_cached = self
+                    .img
+                    .acquire_prefix(id, &hashes, img_need * IMG_BLOCK)
+                    .expect("fresh table")
+                    .min(r.spec.image_tokens());
+            }
             self.img
-                .allocate(r.spec.id, img_need * IMG_BLOCK)
+                .grow(id, img_need * IMG_BLOCK)
                 .expect("can_admit checked image capacity");
         }
+        (kv_cached, img_cached)
     }
 
     fn release_all(&mut self, id: RequestId) {
@@ -144,6 +226,45 @@ impl SimInstance {
 
 // ----------------------------------------------------------------- engine
 
+/// Cross-request reuse accounting for one simulation run.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheReport {
+    /// Prefill tokens served from cached KV prefixes at attach.
+    pub kv_hit_tokens: usize,
+    /// Prefill tokens that were eligible for prefix reuse (sum of
+    /// per-request prefill length minus the always-recomputed last token).
+    pub kv_lookup_tokens: usize,
+    /// Images whose embeddings were cache hits (encode skipped).
+    pub img_hit_images: usize,
+    pub img_total_images: usize,
+    /// Migration payload tokens never transferred (target already held
+    /// them — delta transfer).
+    pub migration_tokens_saved: usize,
+    /// Aggregated per-instance KV-cache counters.
+    pub kv_stats: CacheStats,
+    /// Aggregated per-instance image-cache counters.
+    pub img_stats: CacheStats,
+}
+
+impl CacheReport {
+    /// Fraction of reuse-eligible prefill tokens served from cache.
+    pub fn kv_hit_rate(&self) -> f64 {
+        if self.kv_lookup_tokens == 0 {
+            0.0
+        } else {
+            self.kv_hit_tokens as f64 / self.kv_lookup_tokens as f64
+        }
+    }
+    /// Fraction of images whose encode was skipped.
+    pub fn img_hit_rate(&self) -> f64 {
+        if self.img_total_images == 0 {
+            0.0
+        } else {
+            self.img_hit_images as f64 / self.img_total_images as f64
+        }
+    }
+}
+
 /// Simulation output: metrics + counters for sanity checks and reports.
 #[derive(Debug)]
 pub struct SimResult {
@@ -156,6 +277,8 @@ pub struct SimResult {
     pub reconfigs: usize,
     /// Flip history: when, which instance, from which role to which.
     pub reconfig_events: Vec<ReconfigEvent>,
+    /// Content-addressed cache reuse accounting.
+    pub cache: CacheReport,
 }
 
 /// Run the simulation over a request trace.
@@ -215,7 +338,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
     let mut ready_since: HashMap<u64, f64> = HashMap::new();
     let mut migrations = 0usize;
     let mut batches = 0usize;
-    let (link_lat, link_bw) = cfg.link();
+    let mut report = CacheReport::default();
 
     while let Some(ev) = heap.pop() {
         let now = ev.t;
@@ -234,14 +357,72 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     .filter(|inst| inst.mask.serves(first))
                     .map(|inst| inst.id)
                     .collect();
-                let Some(target) =
-                    route_among(&mut router, &candidates, instances.as_slice(), &tracker)
-                else {
+                // cache affinity: prefer the candidate already holding
+                // this request's image embedding / KV prefix (hashes are
+                // only worth computing when the content cache is on)
+                let (kv_hashes, img_hashes) = if cfg.content_cache {
+                    (
+                        content::spec_kv_hashes(&spec, KV_BLOCK),
+                        content::spec_img_hashes(&spec, IMG_BLOCK),
+                    )
+                } else {
+                    (Vec::new(), Vec::new())
+                };
+                let affinity: Vec<f64> = if cfg.content_cache {
+                    candidates
+                        .iter()
+                        .map(|&c| {
+                            (instances[c].kv.lookup_prefix(&kv_hashes) * KV_BLOCK
+                                + instances[c].img.lookup_prefix(&img_hashes) * IMG_BLOCK)
+                                as f64
+                        })
+                        .collect()
+                } else {
+                    vec![0.0; candidates.len()]
+                };
+                let Some(target) = route_among_affinity(
+                    &mut router,
+                    &candidates,
+                    instances.as_slice(),
+                    &tracker,
+                    &affinity,
+                ) else {
                     // no instance can serve this request type: drop (stays
                     // unfinished and counts as an SLO violation)
                     continue;
                 };
-                instances[target].queues.waiting.push_back(ReqState::new(spec));
+                let mut st = ReqState::new(spec);
+                if cfg.content_cache {
+                    instances[target].attach(&mut st, &kv_hashes, &img_hashes, &mut report);
+                }
+                let id = st.spec.id;
+                let stage = st.stage();
+                if instances[target].mask.serves(stage) {
+                    instances[target].queues.waiting.push_back(st);
+                } else {
+                    // cache hits advanced the request past every stage this
+                    // instance serves (e.g. a cached image on an E-only
+                    // node): admit it and hand it straight to the owner of
+                    // its next stage
+                    instances[target].queues.running.push(st);
+                    start_migration(
+                        &mut instances,
+                        target,
+                        id,
+                        stage,
+                        now,
+                        cfg,
+                        &mut router,
+                        &tracker,
+                        &mut migrations,
+                    );
+                    // no batch completion will wake the target on an
+                    // otherwise-idle cluster: admit the pull now
+                    process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
+                    for i in 0..instances.len() {
+                        try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                    }
+                }
                 try_start(&mut instances, target, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
             }
 
@@ -266,7 +447,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     &mut migrations,
                 );
                 // wake everyone: migrations may have unblocked peers
-                process_inboxes(&mut instances, now, link_lat, link_bw, &mut heap, &mut seq);
+                process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
                 for i in 0..instances.len() {
                     try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
                 }
@@ -286,13 +467,33 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                 if let Some(pull) = instances[dst].incoming.remove(&req.0) {
                     let mut r = pull.req;
                     r.migrating = false;
+                    if pull.kv_cached > 0 {
+                        // prefill resumes at the prefix the target held
+                        r.cached_prefill = r.cached_prefill.max(pull.kv_cached);
+                        r.prefilled = r.prefilled.max(pull.kv_cached);
+                    }
+                    // the target now holds this content: publish it
+                    if cfg.content_cache {
+                        match pull.phase {
+                            Phase::EpMigration => {
+                                if r.spec.image_hash.is_some() {
+                                    let h = content::spec_img_hashes(&r.spec, IMG_BLOCK);
+                                    instances[dst].img.commit_hashes(req, &h);
+                                }
+                            }
+                            _ => {
+                                let h = content::spec_kv_commit_hashes(&r.spec, KV_BLOCK);
+                                instances[dst].kv.commit_hashes(req, &h);
+                            }
+                        }
+                    }
                     if let Some(lc) = lifecycles.get_mut(&req.0) {
                         lc.add_phase(pull.phase, now - pull.created);
                     }
                     ready_since.insert(req.0, now);
                     instances[dst].queues.running.push(r);
                 }
-                process_inboxes(&mut instances, now, link_lat, link_bw, &mut heap, &mut seq);
+                process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
                 for i in 0..instances.len() {
                     try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
                 }
@@ -338,14 +539,17 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                         inst.mask = to;
                         inst.sched = cfg.policy.make(to);
                         // the instance is empty: re-partition its HBM for
-                        // the new role's cache mix
+                        // the new role's cache mix (cached content is
+                        // dropped — bank the old caches' counters first)
+                        report.kv_stats.merge(&inst.kv.stats());
+                        report.img_stats.merge(&inst.img.stats());
                         inst.kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
                         inst.img = PagedCache::new(img_blocks, IMG_BLOCK, 64);
                     }
                 }
 
                 // (5) wake the cluster (retries may have queued pulls)
-                process_inboxes(&mut instances, now, link_lat, link_bw, &mut heap, &mut seq);
+                process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
                 for i in 0..instances.len() {
                     try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
                 }
@@ -370,6 +574,10 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         }
         metrics.insert(RequestId(id), lc);
     }
+    for inst in &instances {
+        report.kv_stats.merge(&inst.kv.stats());
+        report.img_stats.merge(&inst.img.stats());
+    }
     SimResult {
         metrics,
         migrations,
@@ -377,17 +585,22 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         unfinished,
         reconfigs: tracker.num_reconfigs(),
         reconfig_events: tracker.events,
+        cache: report,
     }
 }
 
 /// Route among `candidates`, treating mid-drain instances as ineligible
-/// (infinite load). If *every* candidate is mid-drain, fall back to their
-/// raw loads: work is never dropped just because flips are in flight.
-fn route_among(
+/// (infinite load) and preferring cache affinity (reusable tokens already
+/// on each candidate): a candidate holding cached content wins over a
+/// merely idle one; zero affinity everywhere degrades to the plain load
+/// policy. If *every* candidate is mid-drain, fall back to their raw
+/// loads: work is never dropped just because flips are in flight.
+fn route_among_affinity(
     router: &mut Router,
     candidates: &[usize],
     instances: &[SimInstance],
     tracker: &DrainTracker,
+    affinity: &[f64],
 ) -> Option<usize> {
     if candidates.is_empty() {
         return None;
@@ -396,7 +609,7 @@ fn route_among(
         .iter()
         .map(|&i| if tracker.is_draining(i) { f64::INFINITY } else { instances[i].load() })
         .collect();
-    if let Some(p) = router.pick(&gated) {
+    if let Some(p) = router.pick_affinity(&gated, affinity) {
         return Some(candidates[p]);
     }
     let raw: Vec<f64> = candidates.iter().map(|&i| instances[i].load()).collect();
@@ -485,26 +698,45 @@ fn start_migration(
         Stage::Prefill => Phase::EpMigration,
         _ => Phase::PdMigration,
     };
-    let bytes = match next_stage {
+    let payload_tokens = match next_stage {
         // EP migration carries the image-token embeddings
-        Stage::Prefill => {
-            crate::costmodel::ops::image_payload_bytes(&cfg.model, snapshot.spec.image_tokens())
-        }
+        Stage::Prefill => snapshot.spec.image_tokens(),
         // PD migration carries the prefix KV cache
-        _ => crate::costmodel::ops::kv_payload_bytes(&cfg.model, snapshot.spec.prefill_tokens()),
+        _ => snapshot.spec.prefill_tokens(),
     };
     let candidates: Vec<usize> = instances
         .iter()
         .filter(|inst| inst.id != iid && inst.mask.serves(next_stage))
         .map(|inst| inst.id)
         .collect();
-    if let Some(dst) = route_among(router, &candidates, instances.as_slice(), tracker) {
+    // cache affinity: a target already holding the payload's blocks needs
+    // (almost) nothing transferred
+    let affinity: Vec<f64> = if cfg.content_cache {
+        let kv_hashes = content::spec_kv_hashes(&snapshot.spec, KV_BLOCK);
+        let img_hashes = content::spec_img_hashes(&snapshot.spec, IMG_BLOCK);
+        candidates
+            .iter()
+            .map(|&c| {
+                let mut a = instances[c].kv.lookup_prefix(&kv_hashes) * KV_BLOCK;
+                if next_stage == Stage::Prefill {
+                    a += instances[c].img.lookup_prefix(&img_hashes) * IMG_BLOCK;
+                }
+                a as f64
+            })
+            .collect()
+    } else {
+        vec![0.0; candidates.len()]
+    };
+    if let Some(dst) =
+        route_among_affinity(router, &candidates, instances.as_slice(), tracker, &affinity)
+    {
         *migrations += 1;
         instances[dst].inbox.push(PendingPull {
             req: snapshot,
             src: iid,
             phase,
-            bytes,
+            payload_tokens,
+            kv_cached: 0,
             created: now,
         });
     } else if let Some(r) = instances[iid].queues.find_running(id) {
@@ -569,17 +801,22 @@ fn try_start(
     let inst = &mut instances[iid];
     let mut sched = std::mem::replace(&mut inst.sched, Box::new(NullSched));
     let batch = {
-        let kv_free = inst.kv.free_blocks();
-        let img_free = inst.img.free_blocks();
+        let kv = &inst.kv;
+        let img = &inst.img;
         let mask = inst.mask;
-        let kv_cache_has = |id: RequestId| inst.kv.has_request(id);
-        let _ = kv_cache_has; // (admission uses fresh needs below)
+        let kv_avail = kv.available_blocks();
+        let img_avail = img.available_blocks();
         let mut kv_used = 0usize;
         let mut img_used = 0usize;
         let mut admit = |r: &ReqState| -> bool {
-            let kv_need = kv_blocks_for(kv_tokens_needed_mask(mask, r));
-            let img_need = img_blocks_needed_mask(mask, r);
-            if kv_used + kv_need <= kv_free && img_used + img_need <= img_free {
+            // blocks already pinned (cached prefix) cost nothing; evictable
+            // cached blocks count as capacity — backpressure only when
+            // genuinely full
+            let kv_need = kv_blocks_for(kv_tokens_needed_mask(mask, r))
+                .saturating_sub(kv.held_blocks(r.spec.id));
+            let img_need =
+                img_blocks_needed_mask(mask, r).saturating_sub(img.held_blocks(r.spec.id));
+            if kv_used + kv_need <= kv_avail && img_used + img_need <= img_avail {
                 kv_used += kv_need;
                 img_used += img_need;
                 true
@@ -591,10 +828,16 @@ fn try_start(
     };
     inst.sched = sched;
 
-    // reserve blocks for any running request not yet allocated
+    // reserve blocks for any running request not yet fully allocated.
+    // Skip requests that are migrating away or whose next stage we don't
+    // serve (the cache-hit bounce path admits those without a capacity
+    // check — they keep only their pinned prefix until the pull lands).
     for i in 0..inst.queues.running.len() {
         let r = inst.queues.running[i].clone();
-        inst.reserve(&r);
+        if r.migrating || !inst.mask.serves(r.stage()) {
+            continue;
+        }
+        inst.reserve(&r, cfg.content_cache);
     }
 
     let has_compute = batch
@@ -660,8 +903,17 @@ fn apply_batch(
                 lc.add_phase(Phase::EncodeQueue, (started - rs).max(0.0));
                 lc.add_phase(Phase::EncodeExec, dur);
                 ready_since.insert(id.0, now);
-                if r.encode_remaining() == 0 && !mask.prefill {
-                    to_migrate.push((*id, Stage::Prefill));
+                if r.encode_remaining() == 0 {
+                    let rid = *id;
+                    let spec = r.spec.clone();
+                    // publish the finished embedding for cross-request reuse
+                    if cfg.content_cache && spec.image_hash.is_some() {
+                        let h = content::spec_img_hashes(&spec, IMG_BLOCK);
+                        instances[iid].img.commit_hashes(rid, &h);
+                    }
+                    if !mask.prefill {
+                        to_migrate.push((rid, Stage::Prefill));
+                    }
                 }
             }
             TaskWork::PrefillChunk { tokens, .. } => {
@@ -673,8 +925,15 @@ fn apply_batch(
                     // prefill emits the first output token
                     r.decoded = 1;
                     lc.record_token(now);
-                    // image embeddings consumed: free image cache
                     let rid = *id;
+                    let spec = r.spec.clone();
+                    // publish the shareable KV prefix for cross-request reuse
+                    if cfg.content_cache {
+                        let h = content::spec_kv_commit_hashes(&spec, KV_BLOCK);
+                        instances[iid].kv.commit_hashes(rid, &h);
+                    }
+                    // image embeddings consumed: free image cache (tagged
+                    // blocks stay evictable-cached for the next hit)
                     let has_img = instances[iid].img.has_request(rid);
                     if has_img {
                         instances[iid].img.free(rid).unwrap();
@@ -718,24 +977,47 @@ fn apply_batch(
 }
 
 /// Admit pending pulls wherever capacity allows (§4.3 step 2) and schedule
-/// their transfers (step 3).
+/// their transfers (step 3). The transfer carries only the payload tokens
+/// the target's content-addressed cache does not already hold (delta
+/// transfer): reserving the pull shares any cached prefix blocks, and the
+/// remaining tokens price the link time.
 fn process_inboxes(
     instances: &mut [SimInstance],
     now: f64,
-    link_lat: f64,
-    link_bw: f64,
+    cfg: &SimConfig,
     heap: &mut BinaryHeap<Ev>,
     seq: &mut u64,
+    report: &mut CacheReport,
 ) {
+    let (link_lat, link_bw) = cfg.link();
     for iid in 0..instances.len() {
         let mut i = 0;
         while i < instances[iid].inbox.len() {
             let can = instances[iid].can_admit(&instances[iid].inbox[i].req);
             if can {
-                let pull = instances[iid].inbox.remove(i);
+                let mut pull = instances[iid].inbox.remove(i);
                 let r = pull.req.clone();
-                instances[iid].reserve(&r);
-                let dur = link_lat + pull.bytes / link_bw;
+                let (kv_cached, img_cached) = instances[iid].reserve(&r, cfg.content_cache);
+                pull.kv_cached = kv_cached;
+                let cached = match pull.phase {
+                    Phase::EpMigration => img_cached,
+                    _ => kv_cached,
+                };
+                let cached = cached.min(pull.payload_tokens);
+                report.migration_tokens_saved += cached;
+                let bytes = match pull.phase {
+                    Phase::EpMigration => crate::costmodel::ops::image_delta_payload_bytes(
+                        &cfg.model,
+                        pull.payload_tokens,
+                        cached,
+                    ),
+                    _ => crate::costmodel::ops::kv_delta_payload_bytes(
+                        &cfg.model,
+                        pull.payload_tokens,
+                        cached,
+                    ),
+                };
+                let dur = link_lat + bytes / link_bw;
                 *seq += 1;
                 heap.push(Ev {
                     t: now + dur,
@@ -884,5 +1166,148 @@ mod tests {
         assert_eq!(a.batches, b.batches);
         assert_eq!(a.migrations, b.migrations);
         assert!((a.metrics.ttft().mean() - b.metrics.ttft().mean()).abs() < 1e-12);
+    }
+
+    // ---- content-addressed reuse -----------------------------------------
+
+    /// A request whose image and prompt prefix recur across the trace.
+    fn shared_spec(id: u64, arrival: f64, prompt: usize, out: usize) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            arrival,
+            num_images: 1,
+            tokens_per_image: 576,
+            prompt_tokens: prompt,
+            output_tokens: out,
+            image_hash: Some(0xCAFE),
+            shared_prefix_tokens: prompt.min(32),
+            prefix_hash: 0x5157,
+        }
+    }
+
+    fn sim(cluster: &str, reqs: &[RequestSpec], content_cache: bool) -> SimResult {
+        let mut cfg = SimConfig::new(
+            ModelSpec::llava15_7b(),
+            ClusterSpec::parse(cluster).unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        cfg.content_cache = content_cache;
+        simulate(&cfg, reqs)
+    }
+
+    #[test]
+    fn repeated_content_hits_cache_and_cuts_latency() {
+        let reqs: Vec<RequestSpec> =
+            (0..40).map(|i| shared_spec(i, i as f64 * 0.25, 40, 4)).collect();
+        let warm = sim("1EPD", &reqs, true);
+        let cold = sim("1EPD", &reqs, false);
+        assert_eq!(warm.unfinished, 0);
+        assert_eq!(cold.unfinished, 0);
+        assert_eq!(cold.cache.img_hit_images, 0);
+        assert_eq!(cold.cache.kv_hit_tokens, 0);
+        // everything after the first request reuses the image embedding
+        // and the shared prefix KV
+        assert!(warm.cache.img_hit_images >= 35, "img hits {}", warm.cache.img_hit_images);
+        assert!(
+            warm.cache.kv_hit_tokens >= 35 * 576,
+            "kv hit tokens {}",
+            warm.cache.kv_hit_tokens
+        );
+        assert!(warm.cache.kv_hit_rate() > 0.5);
+        // skipped encode + shortened prefill must show up in TTFT
+        let (t_warm, t_cold) = (warm.metrics.ttft().mean(), cold.metrics.ttft().mean());
+        assert!(t_warm < t_cold, "warm ttft {t_warm} vs cold {t_cold}");
+        // identical token accounting either way
+        assert_eq!(warm.metrics.num_finished(), cold.metrics.num_finished());
+    }
+
+    #[test]
+    fn cold_traces_are_bit_identical_with_the_cache_enabled() {
+        // all-unique content: enabling the content cache must not change
+        // behaviour at all (zero regressions on cold traces)
+        let model = ModelSpec::llava15_7b();
+        let gen = PoissonGenerator::new(Dataset::textcaps(), 6.0, 13);
+        let reqs = gen.generate(&model, 80);
+        let on = sim("1E2P1D", &reqs, true);
+        let off = sim("1E2P1D", &reqs, false);
+        assert_eq!(on.batches, off.batches);
+        assert_eq!(on.migrations, off.migrations);
+        assert_eq!(on.unfinished, off.unfinished);
+        assert_eq!(on.cache.kv_hit_tokens, 0);
+        assert_eq!(on.cache.img_hit_images, 0);
+        assert!((on.metrics.ttft().mean() - off.metrics.ttft().mean()).abs() < 1e-12);
+        assert!((on.metrics.tpot().mean() - off.metrics.tpot().mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_transfer_skips_bytes_the_target_caches() {
+        // disaggregated: the P node commits the shared prefix, the D node
+        // commits migrated-in KV; later migrations transfer only deltas
+        let reqs: Vec<RequestSpec> =
+            (0..24).map(|i| shared_spec(i, i as f64 * 0.5, 48, 6)).collect();
+        let warm = sim("1E1P1D", &reqs, true);
+        assert_eq!(warm.unfinished, 0);
+        assert!(
+            warm.cache.migration_tokens_saved > 0,
+            "deltas must save transfer tokens"
+        );
+        let cold = sim("1E1P1D", &reqs, false);
+        assert_eq!(cold.cache.migration_tokens_saved, 0);
+        assert_eq!(warm.metrics.num_finished(), cold.metrics.num_finished());
+    }
+
+    #[test]
+    fn cached_image_on_encode_only_node_skips_straight_to_prefill() {
+        // request 0 encodes on the E node (committing the embedding);
+        // request 1 arrives later with the same image, hits the E node's
+        // cache, and must hand itself to the P node without re-encoding
+        let reqs = vec![shared_spec(0, 0.0, 40, 3), shared_spec(1, 5.0, 40, 3)];
+        let res = sim("1E1P1D", &reqs, true);
+        assert_eq!(res.unfinished, 0);
+        assert_eq!(res.cache.img_hit_images, 1);
+        let bd = res.metrics.phase_breakdown();
+        // only one encode execution across both requests
+        assert!(bd[Phase::EncodeExec as usize] > 0.0);
+        assert_eq!(res.metrics.num_finished(), 2);
+    }
+
+    #[test]
+    fn sub_block_images_still_hit_the_embedding_cache() {
+        // qwen2-vl-shaped images (380 tokens < IMG_BLOCK) occupy one
+        // rounded-up block; acquisition must cap by occupied blocks, not
+        // raw image tokens, or repeats would silently never hit
+        let reqs: Vec<RequestSpec> = (0..10)
+            .map(|i| {
+                let mut s = shared_spec(i, i as f64 * 0.4, 24, 3);
+                s.tokens_per_image = 380;
+                s
+            })
+            .collect();
+        let res = sim("1EPD", &reqs, true);
+        assert_eq!(res.unfinished, 0);
+        assert!(
+            res.cache.img_hit_images >= 8,
+            "sub-block image repeats must hit, got {}",
+            res.cache.img_hit_images
+        );
+    }
+
+    #[test]
+    fn interleaved_distinct_images_keep_correctness() {
+        // 6 distinct images cycling through one instance: constant
+        // hit/miss interleaving across concurrent requests must not
+        // corrupt accounting — everything still finishes exactly once
+        let reqs: Vec<RequestSpec> = (0..60)
+            .map(|i| {
+                let mut s = shared_spec(i, i as f64 * 0.2, 32, 3);
+                s.image_hash = Some(0x1000 + (i % 6));
+                s
+            })
+            .collect();
+        let res = sim("1EPD", &reqs, true);
+        assert_eq!(res.unfinished, 0);
+        assert_eq!(res.metrics.num_finished(), 60);
+        assert!(res.cache.img_hit_images > 40, "repeats hit after first sight");
     }
 }

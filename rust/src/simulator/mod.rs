@@ -10,7 +10,7 @@
 
 pub mod engine;
 
-pub use engine::{simulate, SimResult};
+pub use engine::{simulate, CacheReport, SimResult};
 
 use crate::config::{ControllerConfig, DeviceSpec, ModelSpec, SloSpec};
 use crate::scheduler::{Policy, StageMask};
@@ -140,6 +140,12 @@ pub struct SimConfig {
     /// controller tick estimates per-stage load and may drain-then-flip
     /// instance roles online. None = static layout (the paper's setup).
     pub controller: Option<ControllerConfig>,
+    /// Content-addressed cache reuse (§4.5 extension): share KV-prefix and
+    /// image-embedding blocks across requests, route with cache affinity,
+    /// and delta-transfer migrations. On a trace with no repeated content
+    /// this is behaviour-identical to `false`; disable it only for
+    /// cold-cache baselines (`bench_prefix_reuse`).
+    pub content_cache: bool,
 }
 
 impl SimConfig {
@@ -156,6 +162,7 @@ impl SimConfig {
             seed: 0,
             engine_overhead: 0.020,
             controller: None,
+            content_cache: true,
         }
     }
 

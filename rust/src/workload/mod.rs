@@ -118,15 +118,17 @@ impl Dataset {
     }
 
     /// Sample one request's workload (arrival filled by the generator).
+    /// Content identity defaults to unique (cold-cache): the five paper
+    /// datasets model independent users with distinct images and prompts.
     pub fn sample(&self, model: &ModelSpec, id: u64, rng: &mut Rng) -> RequestSpec {
         let has_image = rng.f64() < self.image_prob;
         RequestSpec {
             id: RequestId(id),
-            arrival: 0.0,
             num_images: usize::from(has_image),
             tokens_per_image: model.tokens_per_image(),
             prompt_tokens: self.prompt.sample(rng),
             output_tokens: self.output.sample(rng).max(1),
+            ..Default::default()
         }
     }
 }
@@ -184,6 +186,103 @@ pub fn phased_trace(
         t0 = out.last().map_or(t0, |s| s.arrival);
     }
     out
+}
+
+/// Multi-turn chat sessions — the shared-prefix, repeated-image workload
+/// the content-addressed cache exists for. Each session opens with an
+/// image and a question; every following turn re-sends the *growing
+/// conversation transcript* (and the same image) plus a new question, so
+/// turn k's prefill shares all of turn k-1's prompt as a verbatim prefix
+/// and its image embedding is a guaranteed repeat.
+///
+/// Modeling: the whole prompt of every turn is transcript content
+/// (`shared_prefix_tokens == prompt_tokens`, one `prefix_hash` per
+/// session); what limits reuse is what earlier turns actually *committed*
+/// (their prompt region — the previous answer is decode-region content
+/// and is always re-prefilled).
+pub fn multi_turn_trace(
+    model: &ModelSpec,
+    n_sessions: usize,
+    turns: usize,
+    session_rate: f64,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(session_rate > 0.0);
+    let mut rng = Rng::new(seed);
+    let question = TokenDist::new(2.9, 0.4, 6, 48); // ~18 tokens
+    let answer = TokenDist::new(2.7, 0.5, 4, 64); // ~15 tokens
+    let mut out: Vec<RequestSpec> = Vec::new();
+    let mut t0 = 0.0;
+    for s in 0..n_sessions {
+        t0 += rng.exp(session_rate);
+        let session_salt = 0x5E55_0000u64 + s as u64;
+        let mut t = t0;
+        let mut conversation = 16usize; // system prompt
+        for _k in 0..turns {
+            conversation += question.sample(&mut rng);
+            let output_tokens = answer.sample(&mut rng).max(1);
+            out.push(RequestSpec {
+                id: RequestId(0), // assigned after the arrival sort
+                arrival: t,
+                num_images: 1,
+                tokens_per_image: model.tokens_per_image(),
+                prompt_tokens: conversation,
+                output_tokens,
+                image_hash: Some(crate::cache::content::mix(0x1A6E, session_salt)),
+                shared_prefix_tokens: conversation,
+                prefix_hash: crate::cache::content::mix(0x5EFF, session_salt),
+            });
+            // next turn's context includes this turn's answer + think time
+            conversation += output_tokens;
+            t += 2.0 + rng.exp(0.5);
+        }
+    }
+    sort_and_reindex(out)
+}
+
+/// Repeated-image workload: requests draw their image from a small pool
+/// (product photos, a trending meme, a shared document page) and open
+/// with a common system prompt. Image-embedding reuse and shared-prefix
+/// KV reuse both fire. Note the pool is sampled *with replacement*, so
+/// even `unique_images == n` still collides occasionally — use the plain
+/// [`PoissonGenerator`] (unique content identity) for a true cold trace.
+pub fn shared_image_trace(
+    model: &ModelSpec,
+    dataset: &Dataset,
+    rate: f64,
+    n: usize,
+    unique_images: usize,
+    system_prompt_tokens: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(rate > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        t += rng.exp(rate);
+        let mut spec = dataset.sample(model, i as u64, &mut rng);
+        spec.arrival = t;
+        spec.prompt_tokens = spec.prompt_tokens.max(system_prompt_tokens + 1);
+        if spec.num_images > 0 {
+            let img = rng.below(unique_images.max(1)) as u64;
+            spec.image_hash = Some(crate::cache::content::mix(0x009C_0001, img));
+        }
+        spec.shared_prefix_tokens = system_prompt_tokens;
+        spec.prefix_hash = crate::cache::content::mix(0x5059_0001, seed ^ 0xABCD);
+        out.push(spec);
+    }
+    out
+}
+
+/// Sort by arrival and hand out sequential ids (generators that interleave
+/// independent streams call this so ids follow arrival order).
+fn sort_and_reindex(mut reqs: Vec<RequestSpec>) -> Vec<RequestSpec> {
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = RequestId(i as u64);
+    }
+    reqs
 }
 
 /// Average per-request stage workload of a dataset under a model — the
@@ -285,6 +384,68 @@ mod tests {
         // the workload actually shifts: phase 1 all images, phase 2 none
         assert!(reqs[..50].iter().all(|r| r.has_image()));
         assert!(reqs[50..].iter().all(|r| !r.has_image()));
+    }
+
+    #[test]
+    fn multi_turn_sessions_share_a_growing_prefix() {
+        let m = ModelSpec::llava15_7b();
+        let reqs = multi_turn_trace(&m, 5, 4, 2.0, 9);
+        assert_eq!(reqs.len(), 20);
+        // arrivals monotone, ids sequential
+        for (i, w) in reqs.windows(2).enumerate() {
+            assert!(w[1].arrival >= w[0].arrival, "arrival order at {i}");
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id.0, i as u64);
+            assert_eq!(r.num_images, 1);
+            assert_eq!(
+                r.shared_prefix_tokens, r.prompt_tokens,
+                "the whole transcript is shared content"
+            );
+        }
+        // group by session identity: prompts grow strictly within a session
+        let mut by_session: std::collections::HashMap<u64, Vec<&RequestSpec>> =
+            std::collections::HashMap::new();
+        for r in &reqs {
+            by_session.entry(r.prefix_hash).or_default().push(r);
+        }
+        assert_eq!(by_session.len(), 5);
+        for turns in by_session.values() {
+            assert_eq!(turns.len(), 4);
+            for w in turns.windows(2) {
+                assert!(w[1].prompt_tokens > w[0].prompt_tokens, "conversation grows");
+                assert_eq!(w[0].image_hash, w[1].image_hash, "same image every turn");
+            }
+        }
+        // sessions have distinct images and prefixes
+        let imgs: std::collections::HashSet<_> =
+            reqs.iter().map(|r| r.image_hash.unwrap()).collect();
+        assert_eq!(imgs.len(), 5);
+        // deterministic
+        let again = multi_turn_trace(&m, 5, 4, 2.0, 9);
+        assert_eq!(reqs, again);
+    }
+
+    #[test]
+    fn shared_image_trace_draws_from_a_small_pool() {
+        let m = ModelSpec::llava15_7b();
+        let reqs = shared_image_trace(&m, &Dataset::textvqa(), 8.0, 200, 4, 16, 3);
+        assert_eq!(reqs.len(), 200);
+        let imgs: std::collections::HashSet<_> =
+            reqs.iter().filter_map(|r| r.image_hash).collect();
+        assert!(imgs.len() <= 4 && imgs.len() >= 2, "pool of 4 images, got {}", imgs.len());
+        // everyone shares the system prompt
+        let prefixes: std::collections::HashSet<_> =
+            reqs.iter().map(|r| r.prefix_hash).collect();
+        assert_eq!(prefixes.len(), 1);
+        assert!(reqs.iter().all(|r| r.shared_prefix_tokens == 16));
+        assert!(reqs.iter().all(|r| r.prompt_tokens > 16));
+        // unique_images == n degenerates to (nearly) all-unique
+        let cold = shared_image_trace(&m, &Dataset::textvqa(), 8.0, 200, 200, 0, 3);
+        let cold_imgs: std::collections::HashSet<_> =
+            cold.iter().filter_map(|r| r.image_hash).collect();
+        assert!(cold_imgs.len() > 100);
+        assert!(cold.iter().all(|r| r.shared_prefix_tokens == 0));
     }
 
     #[test]

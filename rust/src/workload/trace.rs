@@ -18,18 +18,45 @@ impl Trace {
 
     pub fn to_json(&self) -> Json {
         Json::arr(self.requests.iter().map(|r| {
-            Json::obj(vec![
-                ("id", Json::num(r.id.0 as f64)),
-                ("arrival", Json::num(r.arrival)),
-                ("images", Json::num(r.num_images as f64)),
-                ("tokens_per_image", Json::num(r.tokens_per_image as f64)),
-                ("prompt", Json::num(r.prompt_tokens as f64)),
-                ("output", Json::num(r.output_tokens as f64)),
-            ])
+            let mut fields = vec![
+                ("id".to_string(), Json::num(r.id.0 as f64)),
+                ("arrival".to_string(), Json::num(r.arrival)),
+                ("images".to_string(), Json::num(r.num_images as f64)),
+                ("tokens_per_image".to_string(), Json::num(r.tokens_per_image as f64)),
+                ("prompt".to_string(), Json::num(r.prompt_tokens as f64)),
+                ("output".to_string(), Json::num(r.output_tokens as f64)),
+            ];
+            // content identity (optional; hashes as hex strings — f64
+            // cannot carry 64 bits losslessly)
+            if let Some(h) = r.image_hash {
+                fields.push(("image_hash".to_string(), Json::str(format!("{h:016x}"))));
+            }
+            if r.shared_prefix_tokens > 0 {
+                fields.push((
+                    "shared_prefix".to_string(),
+                    Json::num(r.shared_prefix_tokens as f64),
+                ));
+                fields
+                    .push(("prefix_hash".to_string(), Json::str(format!("{:016x}", r.prefix_hash))));
+            }
+            Json::Obj(fields)
         }))
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let hex = |item: &Json, key: &str| -> anyhow::Result<Option<u64>> {
+            match item.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a hex string"))?;
+                    Ok(Some(u64::from_str_radix(s, 16).map_err(|e| {
+                        anyhow::anyhow!("field `{key}`: bad hash `{s}`: {e}")
+                    })?))
+                }
+            }
+        };
         let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("trace must be an array"))?;
         let mut requests = Vec::with_capacity(arr.len());
         for item in arr {
@@ -40,6 +67,12 @@ impl Trace {
                 tokens_per_image: item.req_usize("tokens_per_image")?,
                 prompt_tokens: item.req_usize("prompt")?,
                 output_tokens: item.req_usize("output")?,
+                image_hash: hex(item, "image_hash")?,
+                shared_prefix_tokens: item
+                    .get("shared_prefix")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                prefix_hash: hex(item, "prefix_hash")?.unwrap_or(0),
             });
         }
         Ok(Trace { requests })
@@ -94,5 +127,23 @@ mod tests {
     fn rejects_malformed() {
         assert!(Trace::from_json(&parse("{}").unwrap()).is_err());
         assert!(Trace::from_json(&parse("[{\"id\": 1}]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn content_identity_roundtrips_losslessly() {
+        // full-width 64-bit hashes must survive (hence hex, not f64)
+        let m = ModelSpec::llava15_7b();
+        let mut reqs = PoissonGenerator::new(Dataset::mme(), 2.0, 5).generate(&m, 4);
+        reqs[0].image_hash = Some(u64::MAX - 3);
+        reqs[0].shared_prefix_tokens = 24;
+        reqs[0].prefix_hash = 0xDEAD_BEEF_DEAD_BEEF;
+        let t = Trace::new(reqs);
+        let t2 = Trace::from_json(&parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(t, t2);
+        assert_eq!(t2.requests[0].image_hash, Some(u64::MAX - 3));
+        assert_eq!(t2.requests[0].prefix_hash, 0xDEAD_BEEF_DEAD_BEEF);
+        // requests without identity stay at the unique-content defaults
+        assert_eq!(t2.requests[1].image_hash, None);
+        assert_eq!(t2.requests[1].shared_prefix_tokens, 0);
     }
 }

@@ -3,7 +3,7 @@
 //! scheduler budget/priority laws, router fairness, lifecycle/SLO logic,
 //! and JSON round-trips under random workloads.
 
-use hydrainfer::cache::PagedCache;
+use hydrainfer::cache::{content, PagedCache};
 use hydrainfer::core::{Lifecycle, RequestId, RequestSpec};
 use hydrainfer::router::{RoutePolicy, Router};
 use hydrainfer::scheduler::{Budgets, Policy, Queues, ReqState, StageMask};
@@ -19,11 +19,11 @@ fn cfg(cases: usize) -> Config {
 fn spec(id: u64, images: usize, prompt: usize, out: usize) -> RequestSpec {
     RequestSpec {
         id: RequestId(id),
-        arrival: 0.0,
         num_images: images,
         tokens_per_image: 16,
         prompt_tokens: prompt.max(1),
         output_tokens: out.max(1),
+        ..Default::default()
     }
 }
 
@@ -77,6 +77,170 @@ fn prop_cache_blocks_conserved_under_random_ops() {
             }
             if cache.free_blocks() != total {
                 return Err("blocks not fully recovered".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Content-addressed cache: random interleavings of unique allocation,
+/// prefix sharing, hash commits, forks (copy-on-write), appends, frees and
+/// pressure-driven eviction must preserve every refcount invariant — no
+/// leaked blocks, no double frees, never evicting a block with
+/// refcount > 0. `PagedCache::verify_integrity` checks the full structure
+/// (refcount == table references; free/cached/referenced partition the
+/// pool; index <-> tag bijection) after every single op.
+#[test]
+fn prop_refcount_invariants_under_random_shared_ops() {
+    forall(
+        cfg(50),
+        |rng: &mut Rng| {
+            let n = 5 + rng.below(60);
+            (0..n)
+                .map(|_| (rng.below(6), rng.below(200), rng.below(9)))
+                .collect::<Vec<(usize, usize, usize)>>()
+        },
+        |ops| {
+            // small pool so sharing + eviction pressure both happen
+            let mut cache = PagedCache::new(24, 16, 16);
+            let total = cache.available_blocks();
+            // four recurring "contents" (e.g. popular system prompts):
+            // chain c's hashes model 8 blocks of identical token content
+            let chains: Vec<Vec<u64>> = (0..4u64)
+                .map(|c| {
+                    content::chain_hashes(
+                        (0..128u64).map(move |p| content::mix(c + 1, p)),
+                        16,
+                    )
+                })
+                .collect();
+            // (id, chain used at acquire — commits must tag true content)
+            let mut live: Vec<(RequestId, Option<usize>)> = Vec::new();
+            let mut next = 0u64;
+            for &(kind, a, b) in ops {
+                match kind {
+                    // allocate unique content
+                    0 => {
+                        let id = RequestId(next);
+                        next += 1;
+                        if cache.allocate(id, a % 150).is_ok() {
+                            live.push((id, None));
+                        }
+                    }
+                    // acquire a shared prefix + grow past it
+                    1 => {
+                        let c = a % chains.len();
+                        let id = RequestId(next);
+                        next += 1;
+                        let want = (1 + b % 8) * 16 + a % 16;
+                        if cache.acquire_prefix(id, &chains[c], want).is_ok() {
+                            if cache.grow(id, want).is_err() {
+                                // genuinely full: request bounces
+                                cache.free(id).map_err(|e| e.to_string())?;
+                            } else {
+                                live.push((id, Some(c)));
+                            }
+                        }
+                    }
+                    // publish content (only hashes that match the table)
+                    2 => {
+                        if let Some(&(id, Some(c))) = live.get(a % live.len().max(1)) {
+                            cache.commit_hashes(id, &chains[c]);
+                        }
+                    }
+                    // free
+                    3 => {
+                        if !live.is_empty() {
+                            let (id, _) = live.swap_remove(a % live.len());
+                            cache.free(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    // fork (beam-style block sharing)
+                    4 => {
+                        if let Some(&(src, _)) = live.get(a % live.len().max(1)) {
+                            let id = RequestId(next);
+                            next += 1;
+                            if cache.fork(src, id).is_ok() {
+                                live.push((id, None));
+                            }
+                        }
+                    }
+                    // append (may trigger copy-on-write on forked tails)
+                    _ => {
+                        if let Some(&(id, _)) = live.get(a % live.len().max(1)) {
+                            let _ = cache.append(id);
+                        }
+                    }
+                }
+                cache
+                    .verify_integrity()
+                    .map_err(|e| format!("after op {kind}: {e}"))?;
+                let held: usize = live
+                    .iter()
+                    .map(|&(id, _)| cache.held_blocks(id))
+                    .sum::<usize>();
+                // shared blocks are counted once per holder; the pool can
+                // never hand out more references than blocks * holders,
+                // and accounting must close: pinned + reclaimable == pool
+                if cache.used_blocks() + cache.available_blocks() != total {
+                    return Err("pinned + reclaimable != pool".into());
+                }
+                if held < cache.used_blocks() {
+                    return Err(format!(
+                        "tables hold {held} block refs but {} blocks are pinned",
+                        cache.used_blocks()
+                    ));
+                }
+            }
+            // drain: every block must come back (cached blocks evict on
+            // demand, so available — not free — is the conserved quantity)
+            for (id, _) in live {
+                cache.free(id).map_err(|e| e.to_string())?;
+            }
+            cache.verify_integrity().map_err(|e| format!("after drain: {e}"))?;
+            if cache.available_blocks() != total {
+                return Err(format!(
+                    "leak: only {}/{total} blocks reclaimable after freeing everything",
+                    cache.available_blocks()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Under eviction pressure, a cached (unreferenced) block may be
+/// repurposed at any time — but a *referenced* block never is: any two
+/// live tables may only overlap on blocks whose refcount matches their
+/// holder count, and a committed-then-freed-then-reacquired prefix always
+/// yields the same blocks while they remain cached.
+#[test]
+fn prop_reacquired_prefix_is_stable_while_cached() {
+    forall(
+        cfg(40),
+        |rng: &mut Rng| (1 + rng.below(7), 1 + rng.below(5)),
+        |&(blocks, rounds)| {
+            let mut cache = PagedCache::new(64, 16, 16);
+            let hashes = content::chain_hashes((0..(blocks * 16) as u64).map(|p| p * 31 + 7), 16);
+            let seed_id = RequestId(1000);
+            cache.acquire_prefix(seed_id, &hashes, 0).map_err(|e| e.to_string())?;
+            cache.grow(seed_id, blocks * 16).map_err(|e| e.to_string())?;
+            cache.commit_hashes(seed_id, &hashes);
+            let canonical = cache.table(seed_id).unwrap().blocks.clone();
+            cache.free(seed_id).map_err(|e| e.to_string())?;
+            for r in 0..rounds {
+                let id = RequestId(r as u64);
+                let got = cache
+                    .acquire_prefix(id, &hashes, blocks * 16)
+                    .map_err(|e| e.to_string())?;
+                if got != blocks * 16 {
+                    return Err(format!("expected {} cached tokens, got {got}", blocks * 16));
+                }
+                if cache.table(id).unwrap().blocks != canonical {
+                    return Err("re-acquired prefix moved while cached".into());
+                }
+                cache.free(id).map_err(|e| e.to_string())?;
+                cache.verify_integrity().map_err(|e| e.to_string())?;
             }
             Ok(())
         },
