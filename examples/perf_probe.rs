@@ -1,6 +1,6 @@
 // Real-path decode breakdown probe (perf pass).
 use std::time::Instant;
-use hydrainfer::runtime::{DecodeInput, Engine};
+use hydrainfer::runtime::{xla, DecodeInput, Engine};
 
 fn main() {
     let engine = Engine::load("artifacts").unwrap();

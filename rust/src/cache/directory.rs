@@ -1,0 +1,281 @@
+//! Cluster-wide content directory: `BlockHash -> holder set`.
+//!
+//! PR 2 made cache blocks content-addressed, but *visibility* stayed
+//! per-instance: routing affinity was an O(candidates × hashes) loop over
+//! every candidate's private index, and a hot image cached on instance A
+//! was simply invisible to a request routed to B — B re-encoded what the
+//! cluster already held. The directory closes that gap (the
+//! cross-instance sharing direction EPD-Serve takes with its flexible
+//! cache transfer, and the cluster-level view ElasticMM argues for):
+//!
+//! * every instance **publishes** the hashes it commits to its local
+//!   content index and **retracts** them when pool pressure evicts the
+//!   block (or a role flip drops the cache wholesale);
+//! * the router answers "how much of this request's content does each
+//!   candidate hold?" with one sweep over the hash chain
+//!   ([`ContentDirectory::prefix_blocks`]) instead of per-candidate scans;
+//! * the migrate/fetch scheduler asks for the **best holder** of a chain
+//!   ([`ContentDirectory::best_holder`]) to price a cache fetch against
+//!   recomputing (fetch-over-recompute, see `simulator::engine`).
+//!
+//! Updates are **versioned**: every mutation bumps a monotone version, so
+//! replicas gossiped between real-mode instance threads can detect that
+//! they diverged from the shared view (staleness accounting — in the
+//! simulator the directory is updated synchronously and never goes
+//! stale; real-mode fetches validate against the source's actual cache
+//! and count misses as staleness).
+//!
+//! Holder sets are u64 bitmasks — the paper's clusters are 8 GPUs; 64
+//! instances is plenty of headroom for this reproduction.
+
+use std::collections::HashMap;
+
+use super::BlockHash;
+
+/// Directory operation counters (surfaced in `SimResult` / `/status`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DirectoryStats {
+    /// Prefix/holder queries answered.
+    pub queries: u64,
+    /// (hash, holder) pairs newly advertised.
+    pub publishes: u64,
+    /// (hash, holder) pairs withdrawn (eviction / role flip).
+    pub retractions: u64,
+}
+
+/// Cluster-wide map from block content hash to the set of instances whose
+/// cache currently indexes that content.
+#[derive(Debug, Clone)]
+pub struct ContentDirectory {
+    n: usize,
+    holders: HashMap<BlockHash, u64>,
+    version: u64,
+    stats: DirectoryStats,
+}
+
+impl ContentDirectory {
+    pub fn new(n_instances: usize) -> Self {
+        assert!(n_instances <= 64, "bitmask holder sets cap at 64 instances");
+        ContentDirectory {
+            n: n_instances,
+            holders: HashMap::new(),
+            version: 0,
+            stats: DirectoryStats::default(),
+        }
+    }
+
+    /// Number of advertised hashes.
+    pub fn len(&self) -> usize {
+        self.holders.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.holders.is_empty()
+    }
+    /// Monotone version, bumped by every mutating update.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+    pub fn num_instances(&self) -> usize {
+        self.n
+    }
+    pub fn stats(&self) -> DirectoryStats {
+        self.stats
+    }
+
+    /// Advertise `holder` as holding `hashes` (idempotent per pair).
+    pub fn publish(&mut self, holder: usize, hashes: &[BlockHash]) {
+        debug_assert!(holder < self.n);
+        let bit = 1u64 << holder;
+        let mut changed = false;
+        for h in hashes {
+            let m = self.holders.entry(*h).or_insert(0);
+            if *m & bit == 0 {
+                *m |= bit;
+                self.stats.publishes += 1;
+                changed = true;
+            }
+        }
+        if changed {
+            self.version += 1;
+        }
+    }
+
+    /// Withdraw `holder`'s advertisement for `hashes` (eviction).
+    pub fn retract(&mut self, holder: usize, hashes: &[BlockHash]) {
+        debug_assert!(holder < self.n);
+        let bit = 1u64 << holder;
+        let mut changed = false;
+        for h in hashes {
+            if let Some(m) = self.holders.get_mut(h) {
+                if *m & bit != 0 {
+                    *m &= !bit;
+                    self.stats.retractions += 1;
+                    changed = true;
+                    if *m == 0 {
+                        self.holders.remove(h);
+                    }
+                }
+            }
+        }
+        if changed {
+            self.version += 1;
+        }
+    }
+
+    /// Withdraw every advertisement of `holder` (role flip dropped its
+    /// whole cache).
+    pub fn retract_all(&mut self, holder: usize) {
+        let bit = 1u64 << holder;
+        let before = self.stats.retractions;
+        self.holders.retain(|_, m| {
+            if *m & bit != 0 {
+                *m &= !bit;
+                self.stats.retractions += 1;
+            }
+            *m != 0
+        });
+        if self.stats.retractions != before {
+            self.version += 1;
+        }
+    }
+
+    /// Does `holder` advertise `hash`?
+    pub fn holds(&self, holder: usize, hash: &BlockHash) -> bool {
+        self.holders.get(hash).is_some_and(|m| m & (1 << holder) != 0)
+    }
+
+    /// Bitmask of instances advertising `hash` (0 = nobody).
+    pub fn holder_mask(&self, hash: &BlockHash) -> u64 {
+        self.holders.get(hash).copied().unwrap_or(0)
+    }
+
+    /// Longest advertised prefix of `hashes`, per instance, in ONE sweep
+    /// over the chain (replaces the per-candidate `lookup_prefix` scans).
+    /// `out[i]` = number of leading hashes instance `i` holds.
+    pub fn prefix_blocks(&mut self, hashes: &[BlockHash]) -> Vec<usize> {
+        self.stats.queries += 1;
+        let mut out = vec![0usize; self.n];
+        if self.n == 0 {
+            return out;
+        }
+        let mut alive: u64 = if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 };
+        for (i, h) in hashes.iter().enumerate() {
+            let m = self.holder_mask(h);
+            let mut died = alive & !m;
+            while died != 0 {
+                let b = died.trailing_zeros() as usize;
+                out[b] = i;
+                died &= died - 1;
+            }
+            alive &= m;
+            if alive == 0 {
+                return out;
+            }
+        }
+        let mut still = alive;
+        while still != 0 {
+            let b = still.trailing_zeros() as usize;
+            out[b] = hashes.len();
+            still &= still - 1;
+        }
+        out
+    }
+
+    /// The instance (excluding `exclude`) holding the longest prefix of
+    /// `hashes`, with how many leading blocks it holds. Ties break toward
+    /// the lowest instance index (deterministic). `None` when nobody holds
+    /// even the first block.
+    pub fn best_holder(&mut self, hashes: &[BlockHash], exclude: usize) -> Option<(usize, usize)> {
+        let prefix = self.prefix_blocks(hashes);
+        let mut best: Option<(usize, usize)> = None;
+        for (i, &blocks) in prefix.iter().enumerate() {
+            if i == exclude || blocks == 0 {
+                continue;
+            }
+            if best.map_or(true, |(_, b)| blocks > b) {
+                best = Some((i, blocks));
+            }
+        }
+        best
+    }
+
+    /// All advertised (hash, holder mask) pairs — ground-truth audits.
+    pub fn entries(&self) -> impl Iterator<Item = (&BlockHash, u64)> {
+        self.holders.iter().map(|(h, m)| (h, *m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_retract_roundtrip() {
+        let mut d = ContentDirectory::new(4);
+        assert!(d.is_empty());
+        d.publish(1, &[10, 20, 30]);
+        d.publish(3, &[20]);
+        assert_eq!(d.len(), 3);
+        assert!(d.holds(1, &10) && d.holds(1, &20) && d.holds(3, &20));
+        assert!(!d.holds(0, &10) && !d.holds(3, &10));
+        assert_eq!(d.holder_mask(&20), (1 << 1) | (1 << 3));
+
+        d.retract(1, &[20]);
+        assert!(!d.holds(1, &20) && d.holds(3, &20));
+        d.retract(3, &[20]);
+        assert_eq!(d.holder_mask(&20), 0);
+        assert_eq!(d.len(), 2, "empty entries are dropped");
+    }
+
+    #[test]
+    fn versions_bump_only_on_change() {
+        let mut d = ContentDirectory::new(2);
+        let v0 = d.version();
+        d.publish(0, &[1, 2]);
+        let v1 = d.version();
+        assert!(v1 > v0);
+        d.publish(0, &[1, 2]); // idempotent: no change
+        assert_eq!(d.version(), v1);
+        d.retract(1, &[1]); // holder 1 never advertised: no change
+        assert_eq!(d.version(), v1);
+        d.retract(0, &[1]);
+        assert!(d.version() > v1);
+    }
+
+    #[test]
+    fn prefix_blocks_matches_per_instance_scan() {
+        let mut d = ContentDirectory::new(3);
+        let chain = [100u64, 101, 102, 103];
+        d.publish(0, &chain[..2]); // holds 2 leading blocks
+        d.publish(1, &chain); // holds all 4
+        d.publish(2, &[chain[1], chain[2]]); // misses block 0: prefix 0
+        assert_eq!(d.prefix_blocks(&chain), vec![2, 4, 0]);
+        assert_eq!(d.prefix_blocks(&[]), vec![0, 0, 0]);
+        assert_eq!(d.prefix_blocks(&[999]), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn best_holder_excludes_and_breaks_ties_low() {
+        let mut d = ContentDirectory::new(4);
+        let chain = [7u64, 8, 9];
+        d.publish(1, &chain[..1]);
+        d.publish(2, &chain);
+        d.publish(3, &chain);
+        assert_eq!(d.best_holder(&chain, 0), Some((2, 3)), "longest, lowest idx");
+        assert_eq!(d.best_holder(&chain, 2), Some((3, 3)));
+        assert_eq!(d.best_holder(&[555], 0), None);
+    }
+
+    #[test]
+    fn retract_all_clears_one_holder() {
+        let mut d = ContentDirectory::new(3);
+        d.publish(0, &[1, 2]);
+        d.publish(1, &[2, 3]);
+        d.retract_all(0);
+        assert!(!d.holds(0, &1) && !d.holds(0, &2));
+        assert!(d.holds(1, &2) && d.holds(1, &3));
+        assert_eq!(d.len(), 2);
+        let s = d.stats();
+        assert_eq!(s.retractions, 2);
+    }
+}

@@ -41,19 +41,36 @@
 //!   also references allocates a private copy first and reports the
 //!   `(old, new)` pair so the caller can copy backing-plane data
 //!   ([`CacheStore::copy_block`]).
-//! * **Eviction** is LRU over *unreferenced* cached blocks only — a block
-//!   with refcount > 0 is never evicted. Admission control therefore
-//!   distinguishes "evictable cached blocks exist" (allocate evicts and
-//!   succeeds) from genuinely full (`CacheError::OutOfBlocks`, with the
-//!   `evictable` count for the scheduler's backpressure decision).
+//! * **Eviction** is cost-aware over *unreferenced* cached blocks only —
+//!   a block with refcount > 0 is never evicted. Blocks carry a
+//!   recompute-cost class ([`COST_KV`] / [`COST_IMAGE`]): under pool
+//!   pressure the cheap class reclaims first (a KV block costs one
+//!   prefill chunk to rebuild; an image block costs a full vision-tower
+//!   encode), LRU within a class — so a homogeneous pool behaves exactly
+//!   like plain LRU. Admission control distinguishes "evictable cached
+//!   blocks exist" (allocate evicts and succeeds) from genuinely full
+//!   (`CacheError::OutOfBlocks`, with the `evictable` count for the
+//!   scheduler's backpressure decision).
+//! * **Cluster visibility**: commits report the hashes they newly
+//!   publish and evictions can be logged
+//!   ([`PagedCache::set_eviction_tracking`] /
+//!   [`PagedCache::drain_evicted`]) — the publish/retract feed of the
+//!   cluster-wide [`ContentDirectory`] (`directory` module), which maps
+//!   every advertised hash to the set of instances holding it. The
+//!   router reads it for one-sweep affinity scoring, and the engines use
+//!   it for **fetch-over-recompute**: a request routed away from a
+//!   holder pulls the cached blocks over the link instead of re-running
+//!   encode/prefill whenever the cost model prices the transfer cheaper.
 //!
 //! Block size matches the artifacts: 16 tokens per KV block; the image
 //! cache uses one block per image-token group.
 
 pub mod content;
+pub mod directory;
 pub mod store;
 
 pub use content::BlockHash;
+pub use directory::{ContentDirectory, DirectoryStats};
 pub use store::CacheStore;
 
 use std::collections::{HashMap, VecDeque};
@@ -150,6 +167,17 @@ impl CacheStats {
     }
 }
 
+/// Recompute-cost classes for cached blocks. Eviction under pool pressure
+/// reclaims **cheap** classes first: a KV block costs one prefill chunk to
+/// rebuild, an image-embedding block costs a full vision-tower encode —
+/// with equal recency the image block must survive (cost-aware eviction,
+/// the directory-aware default; plain LRU order is preserved inside each
+/// class, so a homogeneous pool behaves exactly as before).
+pub const COST_KV: u8 = 0;
+/// See [`COST_KV`].
+pub const COST_IMAGE: u8 = 1;
+const COST_CLASSES: usize = 2;
+
 /// Content-addressed paged cache: allocator + page tables + refcounted
 /// sharing. Generic over what a "token" is — the KV cache counts sequence
 /// tokens, the image cache counts image tokens.
@@ -165,16 +193,27 @@ pub struct PagedCache {
     refs: Vec<u32>,
     /// Per-block content tag (Some = published in `index`).
     hash_of: Vec<Option<BlockHash>>,
+    /// Per-block recompute-cost class (meaningful while tagged).
+    cost_of: Vec<u8>,
+    /// Cost class stamped on [`PagedCache::commit_hashes`] publications.
+    default_cost: u8,
     /// Content index: hash -> block currently holding that content.
     index: HashMap<BlockHash, u32>,
-    /// Unreferenced-but-cached blocks, least recently released first.
+    /// Unreferenced-but-cached blocks, least recently released first, one
+    /// queue per cost class (evict cheap classes first, LRU within).
     /// Lazy deletion: an entry `(block, stamp)` is live only while it
     /// matches `lru_stamp[block]` — revival just bumps the stamp (O(1))
     /// and stale entries are skipped at eviction / compacted on push.
-    lru: VecDeque<(u32, u64)>,
+    lru: [VecDeque<(u32, u64)>; COST_CLASSES],
     lru_stamp: Vec<u64>,
-    /// Live `lru` entries (kept exact so `available_blocks` is O(1)).
-    lru_len: usize,
+    /// Live entries per class queue (kept exact; `available_blocks` O(1)).
+    lru_live: [usize; COST_CLASSES],
+    /// When set, hashes dropped from the index by eviction accumulate in
+    /// `evicted` until [`PagedCache::drain_evicted`] — the content
+    /// directory's retraction feed. Off by default (zero overhead, and
+    /// nothing drains the log when no directory is attached).
+    track_evictions: bool,
+    evicted: Vec<BlockHash>,
     stats: CacheStats,
 }
 
@@ -188,12 +227,36 @@ impl PagedCache {
             tables: HashMap::new(),
             refs: vec![0; num_blocks],
             hash_of: vec![None; num_blocks],
+            cost_of: vec![COST_KV; num_blocks],
+            default_cost: COST_KV,
             index: HashMap::new(),
-            lru: VecDeque::new(),
+            lru: std::array::from_fn(|_| VecDeque::new()),
             lru_stamp: vec![0; num_blocks],
-            lru_len: 0,
+            lru_live: [0; COST_CLASSES],
+            track_evictions: false,
+            evicted: Vec::new(),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Builder: stamp this cost class on every future commit (e.g. the
+    /// image cache marks its blocks [`COST_IMAGE`]).
+    pub fn with_cost_class(mut self, class: u8) -> Self {
+        self.default_cost = class.min((COST_CLASSES - 1) as u8);
+        self
+    }
+
+    /// Start/stop accumulating evicted hashes for directory retraction.
+    pub fn set_eviction_tracking(&mut self, on: bool) {
+        self.track_evictions = on;
+        if !on {
+            self.evicted.clear();
+        }
+    }
+
+    /// Hashes evicted from the index since the last drain (directory feed).
+    pub fn drain_evicted(&mut self) -> Vec<BlockHash> {
+        std::mem::take(&mut self.evicted)
     }
 
     pub fn block_size(&self) -> usize {
@@ -208,11 +271,11 @@ impl PagedCache {
     }
     /// Unreferenced cached blocks (evictable on demand).
     pub fn cached_blocks(&self) -> usize {
-        self.lru_len
+        self.lru_live.iter().sum()
     }
     /// Blocks an allocation can draw from: free + evictable cached.
     pub fn available_blocks(&self) -> usize {
-        self.free.len() + self.lru_len
+        self.free.len() + self.cached_blocks()
     }
     /// Blocks pinned by live requests.
     pub fn used_blocks(&self) -> usize {
@@ -245,6 +308,19 @@ impl PagedCache {
     }
     pub fn stats(&self) -> CacheStats {
         self.stats
+    }
+    /// Is this content currently in the index (referenced or cached)?
+    pub fn has_content(&self, hash: &BlockHash) -> bool {
+        self.index.contains_key(hash)
+    }
+    /// The block currently holding `hash`'s content, if indexed (the
+    /// real-mode peer-pull gather path).
+    pub fn block_of(&self, hash: &BlockHash) -> Option<u32> {
+        self.index.get(hash).copied()
+    }
+    /// Every indexed content hash (directory ground-truth audits).
+    pub fn indexed_hashes(&self) -> impl Iterator<Item = &BlockHash> {
+        self.index.keys()
     }
 
     /// Can `n_tokens` be allocated right now, counting evictable cached
@@ -284,7 +360,7 @@ impl PagedCache {
             if self.refs[b as usize] == 0 {
                 // revive from the cached pool (stale-stamp lazy deletion)
                 self.lru_stamp[b as usize] += 1;
-                self.lru_len -= 1;
+                self.lru_live[self.cost_of[b as usize] as usize] -= 1;
             }
             self.refs[b as usize] += 1;
             blocks.push(b);
@@ -313,7 +389,7 @@ impl PagedCache {
             return Err(CacheError::OutOfBlocks {
                 need,
                 free: self.free.len(),
-                evictable: self.lru_len,
+                evictable: self.cached_blocks(),
             });
         }
         let fresh: Vec<u32> = (0..need).map(|_| self.take_block().unwrap()).collect();
@@ -340,7 +416,7 @@ impl PagedCache {
             return Err(CacheError::OutOfBlocks {
                 need,
                 free: self.free.len(),
-                evictable: self.lru_len,
+                evictable: self.cached_blocks(),
             });
         }
         self.tables.insert(id.0, PageTable::default());
@@ -415,11 +491,24 @@ impl PagedCache {
     /// Tag `id`'s leading blocks with content hashes and publish them in
     /// the index so later requests can share them. Only blocks whose
     /// tokens are fully stored are tagged; blocks already tagged, and
-    /// hashes already owned by another block, are skipped.
-    pub fn commit_hashes(&mut self, id: RequestId, hashes: &[BlockHash]) {
-        let Some(t) = self.tables.get(&id.0) else { return };
+    /// hashes already owned by another block, are skipped. Returns the
+    /// hashes **newly** published — the content directory's publish feed.
+    pub fn commit_hashes(&mut self, id: RequestId, hashes: &[BlockHash]) -> Vec<BlockHash> {
+        self.commit_hashes_class(id, hashes, self.default_cost)
+    }
+
+    /// [`PagedCache::commit_hashes`] with an explicit recompute-cost class
+    /// ([`COST_KV`] / [`COST_IMAGE`]) stamped on the published blocks.
+    pub fn commit_hashes_class(
+        &mut self,
+        id: RequestId,
+        hashes: &[BlockHash],
+        class: u8,
+    ) -> Vec<BlockHash> {
+        let Some(t) = self.tables.get(&id.0) else { return Vec::new() };
         let blocks: Vec<u32> = t.blocks.clone();
         let len = t.len;
+        let mut published = Vec::new();
         for (i, (&b, &h)) in blocks.iter().zip(hashes.iter()).enumerate() {
             if (i + 1) * self.block_size > len {
                 break; // partially-stored block: content not final
@@ -428,9 +517,12 @@ impl PagedCache {
                 continue;
             }
             self.hash_of[b as usize] = Some(h);
+            self.cost_of[b as usize] = class.min((COST_CLASSES - 1) as u8);
             self.index.insert(h, b);
             self.stats.committed_blocks += 1;
+            published.push(h);
         }
+        published
     }
 
     /// Release a request's blocks (end of decode, or post-migration source
@@ -445,13 +537,14 @@ impl PagedCache {
             *r -= 1;
             if *r == 0 {
                 if self.hash_of[b as usize].is_some() {
+                    let c = self.cost_of[b as usize] as usize;
                     self.lru_stamp[b as usize] += 1;
-                    self.lru.push_back((b, self.lru_stamp[b as usize]));
-                    self.lru_len += 1;
+                    self.lru[c].push_back((b, self.lru_stamp[b as usize]));
+                    self.lru_live[c] += 1;
                     // amortized compaction keeps stale entries bounded
-                    if self.lru.len() > 2 * self.lru_len.max(16) {
+                    if self.lru[c].len() > 2 * self.lru_live[c].max(16) {
                         let stamps = &self.lru_stamp;
-                        self.lru.retain(|&(x, s)| stamps[x as usize] == s);
+                        self.lru[c].retain(|&(x, s)| stamps[x as usize] == s);
                     }
                 } else {
                     self.free.push(b);
@@ -469,24 +562,30 @@ impl PagedCache {
             .collect())
     }
 
-    /// Pop a block for writing: truly free first, else evict the
-    /// least-recently-released cached block. Never touches a block with
-    /// refcount > 0.
+    /// Pop a block for writing: truly free first, else evict a cached
+    /// block — cheapest recompute-cost class first ([`COST_KV`] before
+    /// [`COST_IMAGE`]), least-recently-released within a class. Never
+    /// touches a block with refcount > 0.
     fn take_block(&mut self) -> Option<u32> {
         if let Some(b) = self.free.pop() {
             return Some(b);
         }
-        while let Some((b, s)) = self.lru.pop_front() {
-            if self.lru_stamp[b as usize] != s {
-                continue; // stale entry: the block was revived meanwhile
+        for c in 0..COST_CLASSES {
+            while let Some((b, s)) = self.lru[c].pop_front() {
+                if self.lru_stamp[b as usize] != s {
+                    continue; // stale entry: the block was revived meanwhile
+                }
+                self.lru_live[c] -= 1;
+                debug_assert_eq!(self.refs[b as usize], 0, "evicting a referenced block");
+                if let Some(h) = self.hash_of[b as usize].take() {
+                    self.index.remove(&h);
+                    if self.track_evictions {
+                        self.evicted.push(h);
+                    }
+                }
+                self.stats.evictions += 1;
+                return Some(b);
             }
-            self.lru_len -= 1;
-            debug_assert_eq!(self.refs[b as usize], 0, "evicting a referenced block");
-            if let Some(h) = self.hash_of[b as usize].take() {
-                self.index.remove(&h);
-            }
-            self.stats.evictions += 1;
-            return Some(b);
         }
         None
     }
@@ -522,22 +621,30 @@ impl PagedCache {
             }
             state[b as usize] = 1;
         }
-        let mut live_lru = 0usize;
-        for &(b, s) in &self.lru {
-            if self.lru_stamp[b as usize] != s {
-                continue; // stale entry awaiting compaction
+        for (c, q) in self.lru.iter().enumerate() {
+            let mut live_in_class = 0usize;
+            for &(b, s) in q {
+                if self.lru_stamp[b as usize] != s {
+                    continue; // stale entry awaiting compaction
+                }
+                live_in_class += 1;
+                if state[b as usize] != 0 {
+                    return Err(format!("block {b} both free and cached"));
+                }
+                if self.cost_of[b as usize] as usize != c {
+                    return Err(format!(
+                        "block {b} queued in class {c} but tagged class {}",
+                        self.cost_of[b as usize]
+                    ));
+                }
+                state[b as usize] = 2;
             }
-            live_lru += 1;
-            if state[b as usize] != 0 {
-                return Err(format!("block {b} both free and cached"));
+            if live_in_class != self.lru_live[c] {
+                return Err(format!(
+                    "lru_live[{c}] = {} but {live_in_class} live cached entries",
+                    self.lru_live[c]
+                ));
             }
-            state[b as usize] = 2;
-        }
-        if live_lru != self.lru_len {
-            return Err(format!(
-                "lru_len {} but {live_lru} live cached entries",
-                self.lru_len
-            ));
         }
         for b in 0..self.num_blocks {
             let referenced = self.refs[b] > 0;
@@ -806,5 +913,93 @@ mod tests {
         c.commit_hashes(id(2), &h);
         assert_eq!(c.stats().committed_blocks, 2);
         c.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn commit_reports_only_new_publications() {
+        let mut c = PagedCache::new(8, 16, 8);
+        let h = hashes(11, 32, 16);
+        c.allocate(id(1), 32).unwrap();
+        let first = c.commit_hashes(id(1), &h);
+        assert_eq!(first, h[..2].to_vec(), "both full blocks newly published");
+        c.allocate(id(2), 32).unwrap();
+        let second = c.commit_hashes(id(2), &h);
+        assert!(second.is_empty(), "duplicate content publishes nothing");
+    }
+
+    #[test]
+    fn cost_aware_eviction_reclaims_cheap_blocks_first() {
+        // one pool holding both classes: under pressure the KV-class
+        // block must go even though the image-class block is older (LRU
+        // alone would evict the image block — far costlier to recompute)
+        let mut c = PagedCache::new(4, 16, 8);
+        let img_h = hashes(1, 32, 16);
+        let kv_h = hashes(2, 32, 16);
+        c.allocate(id(1), 32).unwrap();
+        c.commit_hashes_class(id(1), &img_h, COST_IMAGE);
+        c.free(id(1)).unwrap(); // image blocks cached FIRST (older)
+        c.allocate(id(2), 32).unwrap();
+        c.commit_hashes_class(id(2), &kv_h, COST_KV);
+        c.free(id(2)).unwrap(); // kv blocks cached second (more recent)
+
+        c.allocate(id(3), 32).unwrap(); // pressure: must evict 2 blocks
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.lookup_prefix(&kv_h), 0, "cheap KV blocks evicted");
+        assert_eq!(c.lookup_prefix(&img_h), 2, "costly image blocks survive");
+        c.verify_integrity().unwrap();
+
+        // more pressure: with no cheap blocks left, image blocks go (LRU)
+        c.allocate(id(4), 32).unwrap();
+        assert_eq!(c.lookup_prefix(&img_h), 0);
+        c.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn homogeneous_pool_cost_classes_degenerate_to_lru() {
+        // all-one-class pools (the sim's separate kv/img caches) keep the
+        // exact old LRU order — the bit-for-bit compatibility guarantee
+        let mut c = PagedCache::new(4, 16, 8);
+        let h1 = hashes(1, 16, 16);
+        let h2 = hashes(2, 16, 16);
+        c.allocate(id(1), 16).unwrap();
+        c.commit_hashes(id(1), &h1);
+        c.free(id(1)).unwrap();
+        c.allocate(id(2), 16).unwrap();
+        c.commit_hashes(id(2), &h2);
+        c.free(id(2)).unwrap();
+        c.allocate(id(3), 48).unwrap(); // evicts exactly 1 of the 2 cached
+        assert_eq!(c.lookup_prefix(&h1), 0, "oldest evicted first");
+        assert_eq!(c.lookup_prefix(&h2), 1, "newer survives");
+    }
+
+    #[test]
+    fn eviction_tracking_feeds_retractions() {
+        let mut c = PagedCache::new(2, 16, 8);
+        c.set_eviction_tracking(true);
+        let h = hashes(3, 32, 16);
+        c.allocate(id(1), 32).unwrap();
+        c.commit_hashes(id(1), &h);
+        c.free(id(1)).unwrap();
+        assert!(c.drain_evicted().is_empty(), "caching is not eviction");
+        c.allocate(id(2), 32).unwrap(); // evicts both cached blocks
+        let evicted = c.drain_evicted();
+        assert_eq!(evicted.len(), 2);
+        assert!(evicted.contains(&h[0]) && evicted.contains(&h[1]));
+        assert!(c.drain_evicted().is_empty(), "drain is destructive");
+        assert!(!c.has_content(&h[0]));
+    }
+
+    #[test]
+    fn content_accessors_follow_the_index() {
+        let mut c = PagedCache::new(8, 16, 8);
+        let h = hashes(4, 16, 16);
+        assert!(!c.has_content(&h[0]));
+        assert_eq!(c.block_of(&h[0]), None);
+        c.allocate(id(1), 16).unwrap();
+        c.commit_hashes(id(1), &h);
+        assert!(c.has_content(&h[0]));
+        let b = c.block_of(&h[0]).unwrap();
+        assert_eq!(c.table(id(1)).unwrap().blocks[0], b);
+        assert_eq!(c.indexed_hashes().count(), 1);
     }
 }

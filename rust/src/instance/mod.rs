@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::{content, CacheStore, PagedCache};
+use crate::cache::{content, BlockHash, CacheStore, ContentDirectory, PagedCache, COST_IMAGE};
 use crate::config::ControllerConfig;
 use crate::controller::{
     ClusterSample, DrainTracker, InstanceSample, ReconfigPolicy, StageLoadEstimator, StageRates,
@@ -55,12 +55,33 @@ pub struct ServeResult {
     pub lifecycle: Lifecycle,
 }
 
+/// Which cache plane a directory/gossip message refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Plane {
+    Kv,
+    Img,
+}
+
 enum Msg {
     Submit(Box<PreparedRequest>),
     Offer(Box<Offer>),
     Pull(Pull),
     Payload(Box<Payload>),
     Release(Release),
+    /// Content-directory gossip: a peer committed these hashes to its
+    /// cache index. Each instance folds the update into its local
+    /// directory replica (used for peer-pull decisions).
+    PublishContent { idx: usize, plane: Plane, hashes: Vec<BlockHash> },
+    /// Content-directory gossip: pool pressure evicted these hashes from
+    /// a peer's cache index (or a role flip dropped its cache).
+    RetractContent { idx: usize, plane: Plane, hashes: Vec<BlockHash> },
+    /// Peer-pull request: `dst` wants the image-embedding blocks behind
+    /// `hashes` (fetch-over-recompute — re-encoding is far costlier than
+    /// copying the cached embedding).
+    FetchContent { req_id: RequestId, dst: usize, hashes: Vec<BlockHash> },
+    /// Peer-pull reply: the gathered embedding rows (`None` = the content
+    /// was already evicted here — a stale advertisement).
+    CacheData { req_id: RequestId, data: Option<Vec<f32>> },
     /// Elastic control plane: drain, then assume this role.
     Reconfigure(StageMask),
     /// The controller gave up on a drain that never emptied.
@@ -91,6 +112,21 @@ struct ControlShared {
     masks: Vec<StageMask>,
     draining: Vec<bool>,
     reconfigs: usize,
+}
+
+/// Cluster-wide content-directory view. Instances publish/retract into it
+/// as their cache indexes change (and gossip the same updates to every
+/// peer's local replica); the cluster router reads it to route repeated
+/// content back to its holders — replacing the old ad-hoc
+/// "content key -> last instance" affinity memory with the actual
+/// block-level truth.
+struct SharedDirectory {
+    kv: ContentDirectory,
+    img: ContentDirectory,
+    /// Image embeddings served by peer-pull instead of re-encoding.
+    peer_pulls: usize,
+    /// Peer-pulls that missed (advertisement went stale) or timed out.
+    stale_pulls: usize,
 }
 
 /// Per-request serving data living on whichever instance owns the request.
@@ -138,6 +174,18 @@ struct RealInstance {
     inbound: Vec<Offer>,
     /// Offers admitted, transfer in flight (we sent Pull, awaiting Payload).
     pending_in: HashMap<u64, Offer>,
+    /// Local content-directory replica: own commits applied directly,
+    /// peers' via `Msg::{PublishContent, RetractContent}` gossip. Drives
+    /// the peer-pull decision without touching the shared lock.
+    dir_kv: ContentDirectory,
+    dir_img: ContentDirectory,
+    /// The router's shared view (kept in sync on every publish/retract).
+    shared_dir: Arc<Mutex<SharedDirectory>>,
+    /// Requests parked while an image-embedding peer-pull is in flight:
+    /// id -> (request, give-up deadline). On `CacheData` they resume with
+    /// the embedding installed; past the deadline they fall back to
+    /// encoding locally.
+    fetch_parked: HashMap<u64, (ReqState, f64)>,
     router: Router,
     tokenizer: Tokenizer,
 }
@@ -251,6 +299,166 @@ impl RealInstance {
         }
     }
 
+    // ---- content directory ------------------------------------------------
+
+    /// Record newly committed hashes everywhere the cluster looks: the
+    /// local replica, the router's shared view, and every peer's replica
+    /// (gossip).
+    fn publish_content(&mut self, plane: Plane, hashes: Vec<BlockHash>) {
+        if hashes.is_empty() {
+            return;
+        }
+        match plane {
+            Plane::Kv => self.dir_kv.publish(self.idx, &hashes),
+            Plane::Img => self.dir_img.publish(self.idx, &hashes),
+        }
+        {
+            let mut s = self.shared_dir.lock().unwrap();
+            match plane {
+                Plane::Kv => s.kv.publish(self.idx, &hashes),
+                Plane::Img => s.img.publish(self.idx, &hashes),
+            }
+        }
+        for (i, (tx, _)) in self.peers.iter().enumerate() {
+            if i != self.idx {
+                let _ = tx.send(Msg::PublishContent {
+                    idx: self.idx,
+                    plane,
+                    hashes: hashes.clone(),
+                });
+            }
+        }
+    }
+
+    /// The retraction mirror of [`RealInstance::publish_content`].
+    fn retract_content(&mut self, plane: Plane, hashes: Vec<BlockHash>) {
+        if hashes.is_empty() {
+            return;
+        }
+        match plane {
+            Plane::Kv => self.dir_kv.retract(self.idx, &hashes),
+            Plane::Img => self.dir_img.retract(self.idx, &hashes),
+        }
+        {
+            let mut s = self.shared_dir.lock().unwrap();
+            match plane {
+                Plane::Kv => s.kv.retract(self.idx, &hashes),
+                Plane::Img => s.img.retract(self.idx, &hashes),
+            }
+        }
+        for (i, (tx, _)) in self.peers.iter().enumerate() {
+            if i != self.idx {
+                let _ = tx.send(Msg::RetractContent {
+                    idx: self.idx,
+                    plane,
+                    hashes: hashes.clone(),
+                });
+            }
+        }
+    }
+
+    /// Drain eviction logs into directory retractions (runs every loop
+    /// iteration; evictions happen inside reserve/admit grows).
+    fn sync_directory(&mut self) {
+        let kv = self.kv.drain_evicted();
+        self.retract_content(Plane::Kv, kv);
+        let img = self.img.drain_evicted();
+        self.retract_content(Plane::Img, img);
+    }
+
+    /// Give up on peer-pulls past their deadline: the request falls back
+    /// to the normal encode path (counted as a stale pull).
+    fn expire_fetches(&mut self) {
+        let now = self.now();
+        let expired: Vec<u64> = self
+            .fetch_parked
+            .iter()
+            .filter(|(_, (_, deadline))| now > *deadline)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in expired {
+            let (st, _) = self.fetch_parked.remove(&id).expect("just listed");
+            self.shared_dir.lock().unwrap().stale_pulls += 1;
+            self.queues.waiting.push_back(st);
+        }
+    }
+
+    /// Source side of a peer-pull: gather the advertised embedding blocks
+    /// for the requester, or report a miss if any were evicted meanwhile.
+    fn serve_fetch(&mut self, req_id: RequestId, dst: usize, hashes: &[BlockHash]) {
+        let mut data = Vec::new();
+        let mut ok = !hashes.is_empty();
+        for h in hashes {
+            let Some(b) = self.img.block_of(h) else {
+                ok = false;
+                break;
+            };
+            let bs = self.img.block_size() as u32;
+            let slots: Vec<u32> = (b * bs..(b + 1) * bs).collect();
+            data.extend_from_slice(&self.img_store.gather(0, &slots));
+        }
+        let _ = self.peers[dst].0.send(Msg::CacheData {
+            req_id,
+            data: ok.then_some(data),
+        });
+    }
+
+    /// Target side of a peer-pull reply: install the embedding, mark the
+    /// encode as served from cache, and release the request to the
+    /// scheduler. A miss (or a request that already moved on) falls back
+    /// to encoding.
+    fn receive_cache_data(&mut self, req_id: RequestId, data: Option<Vec<f32>>) {
+        let Some((mut st, _)) = self.fetch_parked.remove(&req_id.0) else {
+            return; // timed out earlier; already back on the encode path
+        };
+        let img_tokens = st.spec.image_tokens();
+        // distinguish a genuinely stale advertisement (the source had
+        // nothing to send) from local pool pressure (valid data arrived
+        // but our own image pool cannot hold it): only the former is
+        // directory staleness
+        let mut stale = false;
+        let installed = match data {
+            Some(rows) if rows.len() == img_tokens * self.img_store.hidden() => {
+                match self.img.grow(req_id, img_tokens) {
+                    Ok(()) => {
+                        let slots =
+                            self.img.slot_mapping(req_id).expect("table grown above");
+                        let h = self.img_store.hidden();
+                        for (i, &slot) in slots.iter().enumerate() {
+                            self.img_store.write_token(0, slot, &rows[i * h..(i + 1) * h]);
+                        }
+                        let hashes = self
+                            .data
+                            .get(&req_id.0)
+                            .map(|d| d.img_hashes.clone())
+                            .unwrap_or_default();
+                        let new = self.img.commit_hashes(req_id, &hashes);
+                        self.publish_content(Plane::Img, new);
+                        true
+                    }
+                    Err(_) => false, // genuine pool pressure: encode instead
+                }
+            }
+            _ => {
+                stale = true;
+                false
+            }
+        };
+        {
+            let mut s = self.shared_dir.lock().unwrap();
+            if installed {
+                s.peer_pulls += 1;
+            } else if stale {
+                s.stale_pulls += 1;
+            }
+        }
+        if installed {
+            st.cached_images = st.spec.num_images;
+            st.encoded_images = st.spec.num_images;
+        }
+        self.queues.waiting.push_back(st);
+    }
+
     // ---- message handling ------------------------------------------------
 
     fn handle(&mut self, msg: Msg) -> bool {
@@ -296,14 +504,54 @@ impl RealInstance {
                         ctx_len: 0,
                         ready_since: now,
                         kv_hashes,
-                        img_hashes,
+                        img_hashes: img_hashes.clone(),
                     },
                 );
+                // fetch-over-recompute: the embedding is not cached here
+                // but a peer advertises it — pull the cached blocks over
+                // the channel instead of re-running the vision tower
+                // (copying rows is orders of magnitude cheaper). The
+                // request parks until the data (or a miss) comes back.
+                if st.encoded_images < st.spec.num_images
+                    && self.mask.prefill
+                    && p.spec.image_hash.is_some()
+                {
+                    if let Some((src, blocks)) =
+                        self.dir_img.best_holder(&img_hashes, self.idx)
+                    {
+                        if blocks >= img_hashes.len() {
+                            let req_id = st.spec.id;
+                            let _ = self.peers[src].0.send(Msg::FetchContent {
+                                req_id,
+                                dst: self.idx,
+                                hashes: img_hashes,
+                            });
+                            // generous deadline: the source answers from
+                            // its single-threaded loop, so a reply can sit
+                            // behind a couple of batch steps — only give
+                            // up when it is clearly not coming
+                            self.fetch_parked.insert(req_id.0, (st, now + 1.0));
+                            return true;
+                        }
+                    }
+                }
                 self.queues.waiting.push_back(st);
             }
             Msg::Offer(o) => self.inbound.push(*o),
             Msg::Pull(p) => self.serve_pull(p),
             Msg::Payload(pl) => self.receive_payload(*pl),
+            Msg::PublishContent { idx, plane, hashes } => match plane {
+                Plane::Kv => self.dir_kv.publish(idx, &hashes),
+                Plane::Img => self.dir_img.publish(idx, &hashes),
+            },
+            Msg::RetractContent { idx, plane, hashes } => match plane {
+                Plane::Kv => self.dir_kv.retract(idx, &hashes),
+                Plane::Img => self.dir_img.retract(idx, &hashes),
+            },
+            Msg::FetchContent { req_id, dst, hashes } => {
+                self.serve_fetch(req_id, dst, &hashes)
+            }
+            Msg::CacheData { req_id, data } => self.receive_cache_data(req_id, data),
             Msg::Reconfigure(mask) => self.drain_to = Some(mask),
             Msg::CancelDrain => self.drain_to = None,
             Msg::PeerMask { idx, mask } => {
@@ -433,7 +681,8 @@ impl RealInstance {
                     }
                 }
                 // the embedding now lives here: publish it for reuse
-                self.img.commit_hashes(id, &offer.img_block_hashes);
+                let new = self.img.commit_hashes(id, &offer.img_block_hashes);
+                self.publish_content(Plane::Img, new);
             }
             MigrationKind::PrefillToDecode => {
                 let planes = pl.kv_planes.expect("pd payload has kv");
@@ -449,7 +698,8 @@ impl RealInstance {
                     self.kv_store.scatter(p, &slots, &plane);
                 }
                 // the prompt-prefix KV now lives here: publish it
-                self.kv.commit_hashes(id, &offer.kv_block_hashes);
+                let new = self.kv.commit_hashes(id, &offer.kv_block_hashes);
+                self.publish_content(Plane::Kv, new);
             }
         }
 
@@ -593,7 +843,8 @@ impl RealInstance {
                 // publish the fresh embedding for cross-request reuse
                 let img_hashes =
                     self.data.get(&id.0).map(|d| d.img_hashes.clone()).unwrap_or_default();
-                self.img.commit_hashes(*id, &img_hashes);
+                let new = self.img.commit_hashes(*id, &img_hashes);
+                self.publish_content(Plane::Img, new);
                 let d = self.data.get_mut(&id.0).unwrap();
                 d.lifecycle.add_phase(Phase::EncodeQueue, (started - d.ready_since).max(0.0));
                 d.lifecycle.add_phase(Phase::EncodeExec, now - started);
@@ -646,7 +897,8 @@ impl RealInstance {
             // the prompt-region KV is final: publish it for prefix reuse
             let kv_hashes =
                 self.data.get(&id.0).map(|d| d.kv_hashes.clone()).unwrap_or_default();
-            self.kv.commit_hashes(*id, &kv_hashes);
+            let new = self.kv.commit_hashes(*id, &kv_hashes);
+            self.publish_content(Plane::Kv, new);
 
             // first output token comes from the prefill logits
             let d = self.data.get_mut(&id.0).unwrap();
@@ -754,7 +1006,8 @@ impl RealInstance {
         let empty = self.queues.waiting.is_empty()
             && self.queues.running.is_empty()
             && self.inbound.is_empty()
-            && self.pending_in.is_empty();
+            && self.pending_in.is_empty()
+            && self.fetch_parked.is_empty();
         if !empty {
             return;
         }
@@ -852,6 +1105,9 @@ impl RealInstance {
         for o in self.pending_in.values() {
             s.add_req(&o.req);
         }
+        for (st, _) in self.fetch_parked.values() {
+            s.add_req(st);
+        }
         if let Some(tx) = &self.ctrl {
             let _ = tx.send(ControlEvent::Sample { idx: self.idx, sample: s });
         }
@@ -895,6 +1151,7 @@ impl RealInstance {
             }
             self.maybe_flip();
             self.reroute_unserved();
+            self.expire_fetches();
             self.maybe_sample();
             let worked = match self.step() {
                 Ok(w) => w,
@@ -907,6 +1164,9 @@ impl RealInstance {
                     false
                 }
             };
+            // reserving/admitting may have evicted cached blocks: retract
+            // their advertisements before peers decide on them again
+            self.sync_directory();
             if !worked {
                 // idle: block for the next message (with a timeout so queued
                 // offers get re-checked for capacity)
@@ -993,15 +1253,18 @@ pub struct RealCluster {
     tokenizer: Tokenizer,
     epoch: Instant,
     next_id: u64,
-    /// Content-affinity routing memory: content key (image hash or first
-    /// prompt-block hash) -> instance that last served it, plus how many
-    /// submits in a row rode that affinity. Its cache likely still holds
-    /// the blocks, so repeats route back there — but the cluster router
-    /// has no live queue depths, so stickiness is *bounded*: every
-    /// `AFFINITY_STREAK`-th repeat re-routes by the plain policy and
-    /// re-homes the key, spreading a hot key across instances instead of
+    /// The cluster content directory: block-level truth about which
+    /// instance holds which content, fed by instance publish/retract
+    /// gossip. Routing affinity reads it directly (replacing the old
+    /// "content key -> last instance" guess).
+    directory: Arc<Mutex<SharedDirectory>>,
+    /// Anti-herding memory: consecutive submits a content key has ridden
+    /// directory affinity. The cluster router has no live queue depths,
+    /// so stickiness is *bounded*: every `AFFINITY_STREAK`-th repeat
+    /// re-routes by the plain policy, spreading a hot key across
+    /// instances (whose caches then warm via peer-pull) instead of
     /// herding unboundedly onto one.
-    content_affinity: HashMap<u64, (usize, u32)>,
+    affinity_streak: HashMap<u64, u32>,
     /// Elastic control plane (None = static layout).
     control: Option<Arc<Mutex<ControlShared>>>,
     ctrl_stop: Arc<AtomicBool>,
@@ -1059,6 +1322,13 @@ impl RealCluster {
             max_decode_batch: 8, // largest decode artifact bucket
         };
 
+        let directory = Arc::new(Mutex::new(SharedDirectory {
+            kv: ContentDirectory::new(masks.len()),
+            img: ContentDirectory::new(masks.len()),
+            peer_pulls: 0,
+            stale_pulls: 0,
+        }));
+
         let mut joins = Vec::new();
         for (idx, rx) in receivers.into_iter().enumerate() {
             let mask = masks[idx];
@@ -1068,6 +1338,11 @@ impl RealCluster {
                 .zip(masks.iter().copied())
                 .collect();
             let planes = 2 * cfg.layers;
+            let mut kv =
+                PagedCache::new(cfg.pool_blocks, cfg.block_size, cfg.max_blocks_per_seq);
+            kv.set_eviction_tracking(true);
+            let mut img = PagedCache::new(64, cfg.img_tokens, 4).with_cost_class(COST_IMAGE);
+            img.set_eviction_tracking(true);
             let inst = RealInstance {
                 idx,
                 mask,
@@ -1083,13 +1358,17 @@ impl RealCluster {
                 last_sample: 0.0,
                 budgets,
                 queues: Queues::default(),
-                kv: PagedCache::new(cfg.pool_blocks, cfg.block_size, cfg.max_blocks_per_seq),
+                kv,
                 kv_store: CacheStore::new(planes, cfg.pool_blocks, cfg.block_size, cfg.hidden),
-                img: PagedCache::new(64, cfg.img_tokens, 4),
+                img,
                 img_store: CacheStore::new(1, 64, cfg.img_tokens, cfg.hidden),
                 data: HashMap::new(),
                 inbound: Vec::new(),
                 pending_in: HashMap::new(),
+                dir_kv: ContentDirectory::new(masks.len()),
+                dir_img: ContentDirectory::new(masks.len()),
+                shared_dir: Arc::clone(&directory),
+                fetch_parked: HashMap::new(),
                 router: Router::new(RoutePolicy::RoundRobin, idx as u64),
                 tokenizer: Tokenizer::new(),
             };
@@ -1126,7 +1405,8 @@ impl RealCluster {
             tokenizer: Tokenizer::new(),
             epoch,
             next_id: 0,
-            content_affinity: HashMap::new(),
+            directory,
+            affinity_streak: HashMap::new(),
             control,
             ctrl_stop,
             ctrl_join,
@@ -1193,38 +1473,63 @@ impl RealCluster {
         };
         let candidates: Vec<usize> =
             (0..masks.len()).filter(|&i| masks[i].serves(first)).collect();
-        // cache affinity: a repeated image / prompt goes back to the
-        // instance that served it before (its cache holds the blocks).
-        // The key only needs the first block's chain hash — no point
-        // hashing the whole prompt here.
-        let content_key = image_hash.or_else(|| {
-            let head = &tokens[..tokens.len().min(cfg.block_size)];
-            content::token_kv_hashes(head, None, 0, cfg.block_size)
-                .first()
-                .copied()
-        });
+        // cache affinity from the content directory: score every candidate
+        // by the tokens of this request's content its cache actually
+        // holds (image-embedding blocks + leading KV-prefix blocks) — the
+        // gossip-fed, block-level replacement for the old last-instance
+        // guess.
+        let img_hashes = match image_hash {
+            Some(h) => content::image_block_hashes(h, 1),
+            None => Vec::new(),
+        };
+        // only the chain's HEAD block — holding it is a reliable proxy
+        // for holding the prefix, and hashing the whole prompt here would
+        // duplicate the full chain the instance computes anyway
+        let img_head = spec.image_tokens().min(cfg.block_size);
+        let txt_head = tokens.len().min(cfg.block_size.saturating_sub(img_head));
+        let kv_head =
+            content::token_kv_hashes(&tokens[..txt_head], image_hash, img_head, cfg.block_size);
+        let affinity: Vec<f64> = {
+            let mut d = self.directory.lock().unwrap();
+            let img_pfx = d.img.prefix_blocks(&img_hashes);
+            let kv_pfx = d.kv.prefix_blocks(&kv_head);
+            candidates
+                .iter()
+                .map(|&i| {
+                    (img_pfx[i] * cfg.img_tokens + kv_pfx[i] * cfg.block_size) as f64
+                })
+                .collect()
+        };
         // Consecutive submits allowed to ride one key's affinity before a
-        // forced re-balance (the cluster router sees no queue depths).
+        // forced re-balance (the cluster router sees no queue depths):
+        // the spread instance warms via peer-pull and the directory then
+        // offers two holders.
         const AFFINITY_STREAK: u32 = 8;
-        let sticky = content_key.and_then(|k| self.content_affinity.get(&k).copied());
-        let affinity: Vec<f64> = candidates
-            .iter()
-            .map(|&i| match sticky {
-                Some((home, streak)) if home == i && streak < AFFINITY_STREAK => 1.0,
-                _ => 0.0,
-            })
-            .collect();
+        let content_key = image_hash.or_else(|| kv_head.first().copied());
+        let streak = content_key
+            .and_then(|k| self.affinity_streak.get(&k).copied())
+            .unwrap_or(0);
+        let affinity: Vec<f64> = if streak >= AFFINITY_STREAK {
+            vec![0.0; candidates.len()] // forced re-balance round
+        } else {
+            affinity
+        };
         let target = pick_peer_affinity(&mut self.router, &candidates, &draining, &affinity)
             .ok_or_else(|| anyhow!("no instance serves {first:?}"))?;
+        // the streak advances only when the CHOSEN target actually rode
+        // affinity — a submit routed away from a (e.g. draining) holder
+        // is already spread and must not burn re-balance rounds
+        let target_pos = candidates
+            .iter()
+            .position(|&c| c == target)
+            .expect("target comes from candidates");
+        let rode_affinity = affinity[target_pos] > 0.0;
         if let Some(k) = content_key {
-            if self.content_affinity.len() > 4096 {
-                self.content_affinity.clear(); // bounded memory
+            if self.affinity_streak.len() > 4096 {
+                self.affinity_streak.clear(); // bounded memory
             }
-            let streak = match sticky {
-                Some((home, s)) if home == target => s + 1,
-                _ => 0, // new or re-homed key: its cache warms on miss
-            };
-            self.content_affinity.insert(k, (target, streak));
+            let next = if rode_affinity && streak < AFFINITY_STREAK { streak + 1 } else { 0 };
+            self.affinity_streak.insert(k, next);
         }
         self.senders[target]
             .send(Msg::Submit(Box::new(PreparedRequest { spec, tokens, pixels, sampling })))
@@ -1279,10 +1584,28 @@ impl RealCluster {
             })
             .collect();
         let label = masks.iter().map(|m| m.label()).collect::<Vec<_>>().join("+");
+        let dir = {
+            let d = self.directory.lock().unwrap();
+            Json::obj(vec![
+                ("kv_entries", Json::num(d.kv.len() as f64)),
+                ("img_entries", Json::num(d.img.len() as f64)),
+                (
+                    "publishes",
+                    Json::num((d.kv.stats().publishes + d.img.stats().publishes) as f64),
+                ),
+                (
+                    "retractions",
+                    Json::num((d.kv.stats().retractions + d.img.stats().retractions) as f64),
+                ),
+                ("peer_pulls", Json::num(d.peer_pulls as f64)),
+                ("stale_pulls", Json::num(d.stale_pulls as f64)),
+            ])
+        };
         Json::obj(vec![
             ("cluster", Json::str(label)),
             ("elastic", Json::Bool(elastic)),
             ("reconfigs", Json::num(reconfigs as f64)),
+            ("directory", dir),
             ("instances", Json::arr(instances)),
         ])
     }

@@ -10,21 +10,29 @@
 //!   **content-addressed** paged KV/image cache managers (`cache`:
 //!   refcounted cross-request block sharing keyed by chained prefix
 //!   hashes and image content hashes, copy-on-write on fork divergence,
-//!   LRU eviction of unreferenced cached blocks), pull-based migrate
-//!   scheduler with delta transfer (blocks the target already caches
-//!   never cross the wire), and the hybrid EPD disaggregation planner,
-//!   plus a roofline-calibrated discrete-event simulator that regenerates
-//!   every table and figure in the paper's evaluation. Reuse threads
-//!   through every layer: the scheduler derives request progress from
-//!   cache lookups (a cached image embedding skips encode, prefill starts
-//!   at the longest cached prefix), and the router scores cache affinity
-//!   before load. On top of the static planner sits an **elastic control
-//!   plane** (`controller`): a stage-load estimator over windowed queue
-//!   depths and TTFT/TPOT tails (fed in real mode by finished-request
-//!   lifecycles), a hysteresis reconfiguration policy, and a
-//!   drain-then-flip executor that retargets instance roles online when
-//!   the workload's encode/prefill/decode mix drifts — the planner picks
-//!   the initial layout, the controller keeps it matched to the traffic.
+//!   cost-aware eviction of unreferenced cached blocks — cheap KV blocks
+//!   reclaim before expensive image embeddings of equal recency),
+//!   pull-based migrate scheduler with delta transfer (blocks the target
+//!   already caches never cross the wire), and the hybrid EPD
+//!   disaggregation planner, plus a roofline-calibrated discrete-event
+//!   simulator that regenerates every table and figure in the paper's
+//!   evaluation. Reuse threads through every layer — and across the
+//!   cluster: a gossiped **content directory**
+//!   (`cache::ContentDirectory`) maps every block hash to its holder
+//!   set, so the scheduler derives request progress from cache lookups
+//!   (a cached image embedding skips encode, prefill starts at the
+//!   longest cached prefix), the router scores cluster-wide cache
+//!   affinity in one hash-chain sweep, and a request routed away from a
+//!   holder **fetches** the content over the link instead of recomputing
+//!   it whenever the cost model prices the transfer cheaper
+//!   (fetch-over-recompute). On top of the static planner sits an
+//!   **elastic control plane** (`controller`): a stage-load estimator
+//!   over windowed queue depths and TTFT/TPOT tails (fed in real mode by
+//!   finished-request lifecycles), a hysteresis reconfiguration policy,
+//!   and a drain-then-flip executor that retargets instance roles online
+//!   when the workload's encode/prefill/decode mix drifts — the planner
+//!   picks the initial layout, the controller keeps it matched to the
+//!   traffic.
 //! * **Layer 2** — a JAX vision-language model (`python/compile/model.py`)
 //!   AOT-lowered to HLO text artifacts executed here via the PJRT C API.
 //! * **Layer 1** — Pallas kernels (paged attention, flash prefill, fused

@@ -169,13 +169,28 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         policy.name()
     );
     println!(
-        "  finished {}/{}  batches={}  migrations={}  reconfigs={}",
+        "  finished {}/{}  batches={}  migrations={}  dropped={}  reconfigs={}",
         m.num_finished(),
         n,
         res.batches,
         res.migrations,
+        res.dropped_requests,
         res.reconfigs
     );
+    let d = res.cache.directory;
+    if d.publishes > 0 || d.fetches > 0 {
+        println!(
+            "  directory: {} publishes, {} retractions, {} queries; \
+             {} fetches ({} images, {} kv tokens), {} stale",
+            d.publishes,
+            d.retractions,
+            d.queries,
+            d.fetches,
+            d.fetched_images,
+            d.fetched_kv_tokens,
+            d.stale_fetches
+        );
+    }
     for ev in &res.reconfig_events {
         println!(
             "  reconfig @ {:.1}s: instance {} {} -> {}",

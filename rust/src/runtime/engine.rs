@@ -10,6 +10,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::runtime::xla;
 use crate::runtime::{pick_bucket, Manifest, VlmConfig};
 
 /// Inputs for one request's slot in a decode batch.
@@ -91,10 +92,15 @@ impl Engine {
         &self.encode_buckets
     }
     /// Max text tokens a prefill bucket can hold for a request with/without
-    /// an image.
+    /// an image. A manifest with no multimodal buckets (text-only model)
+    /// simply has zero multimodal capacity — the subtraction must not
+    /// underflow `usize` (a bucket smaller than the image-token count is
+    /// equally unusable).
     pub fn max_text_tokens(&self, has_image: bool) -> usize {
         if has_image {
-            self.prefill_mm_buckets.last().copied().unwrap_or(0) - self.cfg.img_tokens
+            self.prefill_mm_buckets
+                .last()
+                .map_or(0, |&b| b.saturating_sub(self.cfg.img_tokens))
         } else {
             self.prefill_txt_buckets.last().copied().unwrap_or(0)
         }
@@ -295,5 +301,65 @@ impl Engine {
                 .map(|i| v_all[i * kv_sz..(i + 1) * kv_sz].to_vec())
                 .collect(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    /// An `Engine` over a manifest, with no compiled executables — enough
+    /// for the bucket-bookkeeping paths that never touch PJRT.
+    fn engine_from_manifest(json: &str) -> Engine {
+        let manifest = Manifest::from_json(&parse(json).unwrap()).unwrap();
+        Engine {
+            cfg: manifest.config,
+            encode_buckets: manifest.buckets("encode_b"),
+            prefill_mm_buckets: manifest.buckets("prefill_mm_s"),
+            prefill_txt_buckets: manifest.buckets("prefill_txt_s"),
+            decode_buckets: manifest.buckets("decode_b"),
+            exes: HashMap::new(),
+        }
+    }
+
+    const CFG: &str = r#""config": {"vocab": 272, "hidden": 128, "layers": 2, "heads": 4,
+        "head_dim": 32, "img_tokens": 16, "img_size": 32, "channels": 3,
+        "pool_blocks": 128, "block_size": 16, "max_blocks_per_seq": 8,
+        "max_seq": 128, "bos_id": 256, "eos_id": 257}"#;
+
+    #[test]
+    fn max_text_tokens_is_zero_without_mm_buckets() {
+        // regression: a text-only manifest used to hit `0 - img_tokens`
+        // and panic with a usize underflow
+        let e = engine_from_manifest(&format!(
+            r#"{{{CFG}, "artifacts": [
+                {{"name": "prefill_txt_s64", "file": "x", "stage": "prefill", "bucket": 64}}
+            ]}}"#
+        ));
+        assert_eq!(e.max_text_tokens(true), 0, "no multimodal capacity");
+        assert_eq!(e.max_text_tokens(false), 64);
+    }
+
+    #[test]
+    fn max_text_tokens_subtracts_image_tokens() {
+        let e = engine_from_manifest(&format!(
+            r#"{{{CFG}, "artifacts": [
+                {{"name": "prefill_mm_s48", "file": "x", "stage": "prefill", "bucket": 48}},
+                {{"name": "prefill_mm_s80", "file": "x", "stage": "prefill", "bucket": 80}}
+            ]}}"#
+        ));
+        assert_eq!(e.max_text_tokens(true), 80 - 16);
+        assert_eq!(e.max_text_tokens(false), 0, "no text-only buckets");
+    }
+
+    #[test]
+    fn mm_bucket_smaller_than_image_saturates_to_zero() {
+        let e = engine_from_manifest(&format!(
+            r#"{{{CFG}, "artifacts": [
+                {{"name": "prefill_mm_s8", "file": "x", "stage": "prefill", "bucket": 8}}
+            ]}}"#
+        ));
+        assert_eq!(e.max_text_tokens(true), 0);
     }
 }

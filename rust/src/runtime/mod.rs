@@ -11,6 +11,7 @@
 //! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
 
 pub mod engine;
+pub mod xla;
 
 pub use engine::{DecodeInput, DecodeOut, Engine, PrefillOut};
 

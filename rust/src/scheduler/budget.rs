@@ -46,11 +46,8 @@ pub fn compute_token_budget(
 ) -> usize {
     let decode_ctx = vec![profile.typical_context; profile.typical_decode_batch];
     let iter_time = |chunk: usize| -> f64 {
-        let chunks: &[(usize, usize)] = if chunk > 0 {
-            &[(profile.typical_prefill_ctx, chunk)]
-        } else {
-            &[]
-        };
+        let one_chunk = [(profile.typical_prefill_ctx, chunk)];
+        let chunks: &[(usize, usize)] = if chunk > 0 { &one_chunk } else { &[] };
         exec_time(iteration_cost(m, chunks, &decode_ctx), d) + profile.engine_overhead
     };
     if iter_time(0) > tpot_slo {

@@ -7,9 +7,13 @@ use crate::controller::{
     StageLoadEstimator, StageRates,
 };
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, Stage};
-use crate::costmodel::{encode_cost, iteration_cost, parallel_time, sequential_time, Cost};
+use crate::costmodel::{
+    encode_cost, exec_time, iteration_cost, parallel_time, prefill_cost, sequential_time, Cost,
+};
 use crate::metrics::RunMetrics;
-use crate::cache::{content, BlockHash, CacheStats, PagedCache};
+use crate::cache::{
+    content, BlockHash, CacheStats, ContentDirectory, PagedCache, COST_IMAGE,
+};
 use crate::router::{RoutePolicy, Router};
 use crate::scheduler::{
     compute_image_budget, compute_token_budget, Batch, BudgetProfile, Budgets, Queues, ReqState,
@@ -26,6 +30,11 @@ enum EvKind {
     Arrival(usize),
     BatchDone(usize),
     TransferDone { src: usize, dst: usize, req: RequestId },
+    /// A standalone cache fetch (fetch-over-recompute) landed at `dst`:
+    /// the request parked in `SimInstance::fetching` resumes with the
+    /// fetched content credited, or falls back to recompute when the
+    /// advertised holder no longer has it (staleness).
+    FetchDone { dst: usize, req: RequestId },
     /// Periodic elastic-controller evaluation (only when enabled).
     ControllerTick,
 }
@@ -72,6 +81,46 @@ struct PendingPull {
     created: f64,
 }
 
+/// A fetch-over-recompute transfer in flight: the routed target lacked
+/// content a peer's cache holds, and the cost model priced pulling it
+/// below recomputing (encode for image blocks, prefill for KV prefixes).
+/// Unlike a migration pull, the request never leaves the target — it is
+/// parked here until the transfer lands, blocks already reserved.
+#[derive(Debug, Clone)]
+struct PendingFetch {
+    req: ReqState,
+    /// Peer shipping the image-embedding blocks, if that part was priced
+    /// worth fetching.
+    img_src: Option<usize>,
+    /// Peer shipping the KV prefix, and the prefix length (tokens, block
+    /// aligned) the fetch extends the local cached prefix to.
+    kv_src: Option<(usize, usize)>,
+}
+
+/// The cluster-wide content directory pair (KV + image planes) plus the
+/// fetch counters accumulated while it drives decisions.
+struct DirState {
+    kv: ContentDirectory,
+    img: ContentDirectory,
+    report: DirectoryReport,
+}
+
+impl DirState {
+    /// Drain an instance's eviction log into directory retractions. Must
+    /// run after every cache-mutating step so directory answers stay
+    /// exactly equal to the per-instance index scans they replace.
+    fn sync_evictions(&mut self, inst: &mut SimInstance) {
+        let kv = inst.kv.drain_evicted();
+        if !kv.is_empty() {
+            self.kv.retract(inst.id, &kv);
+        }
+        let img = inst.img.drain_evicted();
+        if !img.is_empty() {
+            self.img.retract(inst.id, &img);
+        }
+    }
+}
+
 struct SimInstance {
     id: usize,
     mask: StageMask,
@@ -85,6 +134,8 @@ struct SimInstance {
     inbox: Vec<PendingPull>,
     /// Admitted pulls whose transfer is in flight.
     incoming: HashMap<u64, PendingPull>,
+    /// Requests parked while a cache fetch is in flight (directory mode).
+    fetching: HashMap<u64, PendingFetch>,
 }
 
 impl SimInstance {
@@ -92,6 +143,7 @@ impl SimInstance {
         self.queues.total() as f64
             + self.inbox.len() as f64
             + self.incoming.len() as f64
+            + self.fetching.len() as f64
             + self.kv.utilization() * 4.0
             + self.img.utilization()
     }
@@ -244,6 +296,30 @@ pub struct CacheReport {
     pub kv_stats: CacheStats,
     /// Aggregated per-instance image-cache counters.
     pub img_stats: CacheStats,
+    /// Cluster-wide content-directory counters (zero when disabled).
+    pub directory: DirectoryReport,
+}
+
+/// Content-directory accounting for one simulation run: how often the
+/// cluster-wide view was consulted, kept current, and converted into
+/// fetch-over-recompute transfers.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DirectoryReport {
+    /// Prefix/holder sweeps answered (routing + fetch decisions).
+    pub queries: u64,
+    /// (hash, holder) advertisements published.
+    pub publishes: u64,
+    /// (hash, holder) advertisements withdrawn (evictions, role flips).
+    pub retractions: u64,
+    /// Cache fetches taken instead of recomputing.
+    pub fetches: usize,
+    /// Image embeddings served by peer fetch (encode skipped).
+    pub fetched_images: usize,
+    /// KV prefix tokens served by peer fetch (prefill shortened).
+    pub fetched_kv_tokens: usize,
+    /// Fetches that landed after the advertised holder evicted the
+    /// content — the request fell back to recomputing (staleness).
+    pub stale_fetches: usize,
 }
 
 impl CacheReport {
@@ -273,6 +349,10 @@ pub struct SimResult {
     pub batches: usize,
     /// Requests still unfinished at the horizon.
     pub unfinished: usize,
+    /// Requests no instance could serve, dropped at arrival (they create
+    /// no lifecycle and are excluded from latency metrics — this counter
+    /// is their only trace).
+    pub dropped_requests: usize,
     /// Completed online role flips (0 when the controller is off).
     pub reconfigs: usize,
     /// Flip history: when, which instance, from which role to which.
@@ -289,21 +369,37 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
     let image_budget = compute_image_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(1);
     let budgets = Budgets { token_budget, image_budget, max_decode_batch: 512 };
 
+    // cluster-wide content directory (fetch-over-recompute) — requires the
+    // content cache; off reproduces per-instance affinity bit-for-bit
+    let mut dirs = (cfg.content_cache && cfg.cache_directory).then(|| DirState {
+        kv: ContentDirectory::new(masks.len()),
+        img: ContentDirectory::new(masks.len()),
+        report: DirectoryReport::default(),
+    });
+
     let mut instances: Vec<SimInstance> = masks
         .iter()
         .enumerate()
         .map(|(id, &mask)| {
             let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, mask);
+            let mut kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
+            let mut img =
+                PagedCache::new(img_blocks, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
+            if dirs.is_some() {
+                kv.set_eviction_tracking(true);
+                img.set_eviction_tracking(true);
+            }
             SimInstance {
                 id,
                 mask,
                 sched: cfg.policy.make(mask),
                 queues: Queues::default(),
-                kv: PagedCache::new(kv_blocks, KV_BLOCK, 1024),
-                img: PagedCache::new(img_blocks, IMG_BLOCK, 64),
+                kv,
+                img,
                 current: None,
                 inbox: Vec::new(),
                 incoming: HashMap::new(),
+                fetching: HashMap::new(),
             }
         })
         .collect();
@@ -338,6 +434,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
     let mut ready_since: HashMap<u64, f64> = HashMap::new();
     let mut migrations = 0usize;
     let mut batches = 0usize;
+    let mut dropped = 0usize;
     let mut report = CacheReport::default();
 
     while let Some(ev) = heap.pop() {
@@ -348,8 +445,6 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         match ev.kind {
             EvKind::Arrival(i) => {
                 let spec = requests[i].clone();
-                lifecycles.insert(spec.id.0, Lifecycle::new(spec.arrival));
-                ready_since.insert(spec.id.0, now);
                 // route by request type (paper §4): first needed stage
                 let first = spec.first_stage();
                 let candidates: Vec<usize> = instances
@@ -359,7 +454,10 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     .collect();
                 // cache affinity: prefer the candidate already holding
                 // this request's image embedding / KV prefix (hashes are
-                // only worth computing when the content cache is on)
+                // only worth computing when the content cache is on).
+                // With the directory, one sweep over the hash chain
+                // answers for every candidate at once; without it, each
+                // candidate's private index is scanned (PR 2 behaviour).
                 let (kv_hashes, img_hashes) = if cfg.content_cache {
                     (
                         content::spec_kv_hashes(&spec, KV_BLOCK),
@@ -368,7 +466,14 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                 } else {
                     (Vec::new(), Vec::new())
                 };
-                let affinity: Vec<f64> = if cfg.content_cache {
+                let affinity: Vec<f64> = if let Some(d) = dirs.as_mut() {
+                    let kv_pfx = d.kv.prefix_blocks(&kv_hashes);
+                    let img_pfx = d.img.prefix_blocks(&img_hashes);
+                    candidates
+                        .iter()
+                        .map(|&c| (kv_pfx[c] * KV_BLOCK + img_pfx[c] * IMG_BLOCK) as f64)
+                        .collect()
+                } else if cfg.content_cache {
                     candidates
                         .iter()
                         .map(|&c| {
@@ -387,13 +492,38 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     &tracker,
                     &affinity,
                 ) else {
-                    // no instance can serve this request type: drop (stays
-                    // unfinished and counts as an SLO violation)
+                    // no instance can serve this request type: count the
+                    // drop explicitly and leave no half-initialized state
+                    // behind (a stale Lifecycle + ready_since entry used
+                    // to leak here)
+                    dropped += 1;
                     continue;
                 };
+                lifecycles.insert(spec.id.0, Lifecycle::new(spec.arrival));
+                ready_since.insert(spec.id.0, now);
                 let mut st = ReqState::new(spec);
                 if cfg.content_cache {
                     instances[target].attach(&mut st, &kv_hashes, &img_hashes, &mut report);
+                }
+                // fetch-over-recompute: the routed target lacks content a
+                // peer advertises, and pulling it is priced below
+                // recomputing — park the request until the transfer lands
+                if let Some(d) = dirs.as_mut() {
+                    match maybe_start_fetch(
+                        &mut instances,
+                        target,
+                        st,
+                        &kv_hashes,
+                        &img_hashes,
+                        now,
+                        cfg,
+                        d,
+                        &mut heap,
+                        &mut seq,
+                    ) {
+                        None => continue, // parked; FetchDone resumes it
+                        Some(back) => st = back,
+                    }
                 }
                 let id = st.spec.id;
                 let stage = st.stage();
@@ -412,18 +542,19 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                         stage,
                         now,
                         cfg,
+                        &mut dirs,
                         &mut router,
                         &tracker,
                         &mut migrations,
                     );
                     // no batch completion will wake the target on an
                     // otherwise-idle cluster: admit the pull now
-                    process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
+                    process_inboxes(&mut instances, now, cfg, &mut dirs, &mut heap, &mut seq, &mut report);
                     for i in 0..instances.len() {
-                        try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                        try_start(&mut instances, i, now, &budgets, cfg, &mut dirs, &mut heap, &mut seq, &mut batches);
                     }
                 }
-                try_start(&mut instances, target, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                try_start(&mut instances, target, now, &budgets, cfg, &mut dirs, &mut heap, &mut seq, &mut batches);
             }
 
             EvKind::BatchDone(iid) => {
@@ -442,14 +573,15 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     cfg,
                     &mut lifecycles,
                     &mut ready_since,
+                    &mut dirs,
                     &mut router,
                     &tracker,
                     &mut migrations,
                 );
                 // wake everyone: migrations may have unblocked peers
-                process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
+                process_inboxes(&mut instances, now, cfg, &mut dirs, &mut heap, &mut seq, &mut report);
                 for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut dirs, &mut heap, &mut seq, &mut batches);
                 }
             }
 
@@ -478,12 +610,18 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                             Phase::EpMigration => {
                                 if r.spec.image_hash.is_some() {
                                     let h = content::spec_img_hashes(&r.spec, IMG_BLOCK);
-                                    instances[dst].img.commit_hashes(req, &h);
+                                    let new = instances[dst].img.commit_hashes(req, &h);
+                                    if let Some(d) = dirs.as_mut() {
+                                        d.img.publish(dst, &new);
+                                    }
                                 }
                             }
                             _ => {
                                 let h = content::spec_kv_commit_hashes(&r.spec, KV_BLOCK);
-                                instances[dst].kv.commit_hashes(req, &h);
+                                let new = instances[dst].kv.commit_hashes(req, &h);
+                                if let Some(d) = dirs.as_mut() {
+                                    d.kv.publish(dst, &new);
+                                }
                             }
                         }
                     }
@@ -493,17 +631,85 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     ready_since.insert(req.0, now);
                     instances[dst].queues.running.push(r);
                 }
-                process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
+                process_inboxes(&mut instances, now, cfg, &mut dirs, &mut heap, &mut seq, &mut report);
                 for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut dirs, &mut heap, &mut seq, &mut batches);
+                }
+            }
+
+            EvKind::FetchDone { dst, req } => {
+                let Some(f) = instances[dst].fetching.remove(&req.0) else { continue };
+                let d = dirs.as_mut().expect("fetches only run in directory mode");
+                let mut r = f.req;
+                let mut any_stale = false;
+                // image part: validate against the source's actual cache —
+                // an eviction mid-flight makes the advertisement stale and
+                // the request falls back to encoding locally
+                if let Some(src) = f.img_src {
+                    let img_hashes = content::spec_img_hashes(&r.spec, IMG_BLOCK);
+                    let needed = img_blocks_for(r.spec.image_tokens());
+                    if instances[src].img.lookup_prefix(&img_hashes) >= needed {
+                        let fetched = r.spec.num_images - r.encoded_images;
+                        let new = instances[dst].img.commit_hashes(req, &img_hashes);
+                        d.img.publish(dst, &new);
+                        r.cached_images = r.spec.num_images;
+                        r.encoded_images = r.spec.num_images;
+                        d.report.fetched_images += fetched;
+                    } else {
+                        any_stale = true;
+                    }
+                }
+                // KV-prefix part
+                if let Some((src, to_tokens)) = f.kv_src {
+                    let kv_hashes = content::spec_kv_hashes(&r.spec, KV_BLOCK);
+                    let blocks = to_tokens / KV_BLOCK;
+                    if instances[src].kv.lookup_prefix(&kv_hashes[..blocks]) >= blocks {
+                        let new =
+                            instances[dst].kv.commit_hashes(req, &kv_hashes[..blocks]);
+                        d.kv.publish(dst, &new);
+                        d.report.fetched_kv_tokens +=
+                            to_tokens.saturating_sub(r.prefilled);
+                        r.cached_prefill = r.cached_prefill.max(to_tokens);
+                        r.prefilled = r.prefilled.max(to_tokens);
+                    } else {
+                        any_stale = true;
+                    }
+                }
+                // a fetch counts stale at most once, mirroring `fetches`
+                // (one combined transfer per request)
+                if any_stale {
+                    d.report.stale_fetches += 1;
+                }
+                // resume the normal dispatch path with the credit applied
+                let stage = r.stage();
+                if instances[dst].mask.serves(stage) {
+                    instances[dst].queues.waiting.push_back(r);
+                } else {
+                    instances[dst].queues.running.push(r);
+                    start_migration(
+                        &mut instances,
+                        dst,
+                        req,
+                        stage,
+                        now,
+                        cfg,
+                        &mut dirs,
+                        &mut router,
+                        &tracker,
+                        &mut migrations,
+                    );
+                }
+                process_inboxes(&mut instances, now, cfg, &mut dirs, &mut heap, &mut seq, &mut report);
+                for i in 0..instances.len() {
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut dirs, &mut heap, &mut seq, &mut batches);
                 }
             }
 
             EvKind::ControllerTick => {
-                let Some((cc, est, pol)) = controller.as_mut() else { continue };
                 // (1) a completed flip elsewhere may have orphaned a
                 // hand-off attempt: re-offer stranded requests first
-                retry_stranded(&mut instances, now, cfg, &mut router, &tracker, &mut migrations);
+                retry_stranded(&mut instances, now, cfg, &mut dirs, &mut router, &tracker, &mut migrations);
+                let Some((cc, est, pol)) = controller.as_mut() else { continue };
 
                 // (2) observe queue depths + windowed latency tails
                 let w = crate::metrics::window_stats(lifecycles.values(), now - cc.window);
@@ -531,7 +737,8 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     let empty = inst.current.is_none()
                         && inst.queues.total() == 0
                         && inst.inbox.is_empty()
-                        && inst.incoming.is_empty();
+                        && inst.incoming.is_empty()
+                        && inst.fetching.is_empty();
                     if empty {
                         let to = tracker.complete(now, iid, inst.mask);
                         let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, to);
@@ -540,18 +747,26 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                         inst.sched = cfg.policy.make(to);
                         // the instance is empty: re-partition its HBM for
                         // the new role's cache mix (cached content is
-                        // dropped — bank the old caches' counters first)
+                        // dropped — bank the old caches' counters first,
+                        // and retract every advertisement wholesale)
                         report.kv_stats.merge(&inst.kv.stats());
                         report.img_stats.merge(&inst.img.stats());
                         inst.kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
-                        inst.img = PagedCache::new(img_blocks, IMG_BLOCK, 64);
+                        inst.img =
+                            PagedCache::new(img_blocks, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
+                        if let Some(d) = dirs.as_mut() {
+                            d.kv.retract_all(iid);
+                            d.img.retract_all(iid);
+                            inst.kv.set_eviction_tracking(true);
+                            inst.img.set_eviction_tracking(true);
+                        }
                     }
                 }
 
                 // (5) wake the cluster (retries may have queued pulls)
-                process_inboxes(&mut instances, now, cfg, &mut heap, &mut seq, &mut report);
+                process_inboxes(&mut instances, now, cfg, &mut dirs, &mut heap, &mut seq, &mut report);
                 for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &budgets, cfg, &mut heap, &mut seq, &mut batches);
+                    try_start(&mut instances, i, now, &budgets, cfg, &mut dirs, &mut heap, &mut seq, &mut batches);
                 }
 
                 // (6) keep ticking while the run is live
@@ -578,15 +793,130 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         report.kv_stats.merge(&inst.kv.stats());
         report.img_stats.merge(&inst.img.stats());
     }
+    if let Some(d) = dirs {
+        let mut dr = d.report;
+        dr.queries = d.kv.stats().queries + d.img.stats().queries;
+        dr.publishes = d.kv.stats().publishes + d.img.stats().publishes;
+        dr.retractions = d.kv.stats().retractions + d.img.stats().retractions;
+        report.directory = dr;
+    }
     SimResult {
         metrics,
         migrations,
         batches,
         unfinished,
+        dropped_requests: dropped,
         reconfigs: tracker.num_reconfigs(),
         reconfig_events: tracker.events,
         cache: report,
     }
+}
+
+/// Decide whether the freshly routed request should **fetch** content a
+/// peer advertises instead of recomputing it (the §4.5 reuse extension,
+/// taken cluster-wide): the image-embedding and KV-prefix parts are priced
+/// independently against the cost model (encode vs. transfer bytes;
+/// prefill of the missing prefix vs. its KV bytes) and only taken when the
+/// link is cheaper. On a fetch, blocks are reserved now, the request parks
+/// in `fetching`, and one `FetchDone` event carries both parts. Returns
+/// the request back when nothing is worth fetching.
+#[allow(clippy::too_many_arguments)]
+fn maybe_start_fetch(
+    instances: &mut [SimInstance],
+    target: usize,
+    st: ReqState,
+    kv_hashes: &[BlockHash],
+    img_hashes: &[BlockHash],
+    now: f64,
+    cfg: &SimConfig,
+    dirs: &mut DirState,
+    heap: &mut BinaryHeap<Ev>,
+    seq: &mut u64,
+) -> Option<ReqState> {
+    let (link_lat, link_bw) = cfg.link();
+    let id = st.spec.id;
+    let mut img_src = None;
+    let mut kv_src = None;
+    let mut bytes = 0.0f64;
+
+    // image embedding: only whole-embedding hits are useful (encode runs
+    // per image; a partial block set cannot shorten it)
+    if st.encoded_images < st.spec.num_images && st.spec.image_hash.is_some() {
+        let needed = img_blocks_for(st.spec.image_tokens());
+        if let Some((src, blocks)) = dirs.img.best_holder(img_hashes, target) {
+            if blocks >= needed {
+                let remaining = st.spec.num_images - st.encoded_images;
+                let miss_tokens = remaining * st.spec.tokens_per_image;
+                let fetch_bytes =
+                    crate::costmodel::ops::image_payload_bytes(&cfg.model, miss_tokens);
+                let fetch_t = link_lat + fetch_bytes / link_bw;
+                let recompute_t =
+                    exec_time(encode_cost(&cfg.model, remaining), &cfg.device)
+                        + cfg.engine_overhead;
+                let img_need = needed
+                    .saturating_sub(instances[target].img.held_blocks(id));
+                if fetch_t < recompute_t
+                    && instances[target].img_blocks_needed(&st) > 0
+                    && img_need <= instances[target].img.available_blocks()
+                {
+                    img_src = Some(src);
+                    bytes += fetch_bytes;
+                }
+            }
+        }
+    }
+
+    // KV prefix: fetch only the delta past what the local cache served,
+    // block-aligned and leaving >= 1 token for prefill to emit from
+    if instances[target].kv_tokens_needed(&st) > 0 && st.prefill_remaining() > 0 {
+        let cap_blocks = st.spec.prefill_tokens().saturating_sub(1) / KV_BLOCK;
+        if let Some((src, blocks)) = dirs.kv.best_holder(kv_hashes, target) {
+            let to_tokens = blocks.min(cap_blocks) * KV_BLOCK;
+            if to_tokens > st.prefilled {
+                let delta = to_tokens - st.prefilled;
+                let fetch_bytes = crate::costmodel::ops::kv_delta_payload_bytes(
+                    &cfg.model,
+                    to_tokens,
+                    st.prefilled,
+                );
+                let fetch_t = link_lat + fetch_bytes / link_bw;
+                let recompute_t =
+                    exec_time(prefill_cost(&cfg.model, &[(st.prefilled, delta)]), &cfg.device)
+                        + cfg.engine_overhead;
+                let kv_need = kv_blocks_for(to_tokens)
+                    .saturating_sub(instances[target].kv.held_blocks(id));
+                if fetch_t < recompute_t && kv_need <= instances[target].kv.available_blocks()
+                {
+                    kv_src = Some((src, to_tokens));
+                    bytes += fetch_bytes;
+                }
+            }
+        }
+    }
+
+    if img_src.is_none() && kv_src.is_none() {
+        return Some(st);
+    }
+
+    // reserve the blocks now (they are needed either way), park the
+    // request, and schedule the landing
+    let inst = &mut instances[target];
+    if img_src.is_some() {
+        let need = img_blocks_for(st.spec.image_tokens());
+        inst.img
+            .grow(id, need * IMG_BLOCK)
+            .expect("capacity checked for image fetch");
+    }
+    if let Some((_, to_tokens)) = kv_src {
+        inst.kv.grow(id, to_tokens).expect("capacity checked for kv fetch");
+    }
+    dirs.sync_evictions(inst);
+    dirs.report.fetches += 1;
+    let dur = link_lat + bytes / link_bw;
+    *seq += 1;
+    heap.push(Ev { t: now + dur, seq: *seq, kind: EvKind::FetchDone { dst: target, req: id } });
+    instances[target].fetching.insert(id.0, PendingFetch { req: st, img_src, kv_src });
+    None
 }
 
 /// Route among `candidates`, treating mid-drain instances as ineligible
@@ -646,6 +976,9 @@ fn cluster_sample(
         for p in inst.inbox.iter().chain(inst.incoming.values()) {
             s.add_req(&p.req);
         }
+        for f in inst.fetching.values() {
+            s.add_req(&f.req);
+        }
         out.instances.push(s);
     }
     out
@@ -654,10 +987,12 @@ fn cluster_sample(
 /// Re-offer running requests whose next stage their host no longer serves
 /// and that own no in-flight migration — a role flip (or an earlier
 /// failed hand-off) can orphan them, and nothing else retries.
+#[allow(clippy::too_many_arguments)]
 fn retry_stranded(
     instances: &mut Vec<SimInstance>,
     now: f64,
     cfg: &SimConfig,
+    dirs: &mut Option<DirState>,
     router: &mut Router,
     tracker: &DrainTracker,
     migrations: &mut usize,
@@ -672,7 +1007,7 @@ fn retry_stranded(
             .map(|r| (r.spec.id, r.stage()))
             .collect();
         for (id, stage) in stranded {
-            start_migration(instances, iid, id, stage, now, cfg, router, tracker, migrations);
+            start_migration(instances, iid, id, stage, now, cfg, dirs, router, tracker, migrations);
         }
     }
 }
@@ -687,6 +1022,7 @@ fn start_migration(
     next_stage: Stage,
     now: f64,
     cfg: &SimConfig,
+    dirs: &mut Option<DirState>,
     router: &mut Router,
     tracker: &DrainTracker,
     migrations: &mut usize,
@@ -710,8 +1046,22 @@ fn start_migration(
         .map(|inst| inst.id)
         .collect();
     // cache affinity: a target already holding the payload's blocks needs
-    // (almost) nothing transferred
-    let affinity: Vec<f64> = if cfg.content_cache {
+    // (almost) nothing transferred. The directory answers for every
+    // candidate in one sweep; without it each private index is scanned.
+    let affinity: Vec<f64> = if let Some(d) = dirs.as_mut() {
+        let kv_hashes = content::spec_kv_hashes(&snapshot.spec, KV_BLOCK);
+        let kv_pfx = d.kv.prefix_blocks(&kv_hashes);
+        let img_pfx = if next_stage == Stage::Prefill {
+            let img_hashes = content::spec_img_hashes(&snapshot.spec, IMG_BLOCK);
+            d.img.prefix_blocks(&img_hashes)
+        } else {
+            vec![0; instances.len()]
+        };
+        candidates
+            .iter()
+            .map(|&c| (kv_pfx[c] * KV_BLOCK + img_pfx[c] * IMG_BLOCK) as f64)
+            .collect()
+    } else if cfg.content_cache {
         let kv_hashes = content::spec_kv_hashes(&snapshot.spec, KV_BLOCK);
         let img_hashes = content::spec_img_hashes(&snapshot.spec, IMG_BLOCK);
         candidates
@@ -789,6 +1139,7 @@ fn try_start(
     now: f64,
     budgets: &Budgets,
     cfg: &SimConfig,
+    dirs: &mut Option<DirState>,
     heap: &mut BinaryHeap<Ev>,
     seq: &mut u64,
     batches: &mut usize,
@@ -839,6 +1190,11 @@ fn try_start(
         }
         inst.reserve(&r, cfg.content_cache);
     }
+    // reserving may have evicted cached blocks: retract them from the
+    // cluster directory before anyone queries it again
+    if let Some(d) = dirs.as_mut() {
+        d.sync_evictions(inst);
+    }
 
     let has_compute = batch
         .items
@@ -883,6 +1239,7 @@ fn apply_batch(
     cfg: &SimConfig,
     lifecycles: &mut HashMap<u64, Lifecycle>,
     ready_since: &mut HashMap<u64, f64>,
+    dirs: &mut Option<DirState>,
     router: &mut Router,
     tracker: &DrainTracker,
     migrations: &mut usize,
@@ -909,7 +1266,10 @@ fn apply_batch(
                     // publish the finished embedding for cross-request reuse
                     if cfg.content_cache && spec.image_hash.is_some() {
                         let h = content::spec_img_hashes(&spec, IMG_BLOCK);
-                        instances[iid].img.commit_hashes(rid, &h);
+                        let new = instances[iid].img.commit_hashes(rid, &h);
+                        if let Some(d) = dirs.as_mut() {
+                            d.img.publish(iid, &new);
+                        }
                     }
                     if !mask.prefill {
                         to_migrate.push((rid, Stage::Prefill));
@@ -930,7 +1290,10 @@ fn apply_batch(
                     // publish the shareable KV prefix for cross-request reuse
                     if cfg.content_cache {
                         let h = content::spec_kv_commit_hashes(&spec, KV_BLOCK);
-                        instances[iid].kv.commit_hashes(rid, &h);
+                        let new = instances[iid].kv.commit_hashes(rid, &h);
+                        if let Some(d) = dirs.as_mut() {
+                            d.kv.publish(iid, &new);
+                        }
                     }
                     // image embeddings consumed: free image cache (tagged
                     // blocks stay evictable-cached for the next hit)
@@ -972,7 +1335,7 @@ fn apply_batch(
 
     // paper §4.3 step 1: notify the target; it pulls when it has capacity
     for (id, next_stage) in to_migrate {
-        start_migration(instances, iid, id, next_stage, now, cfg, router, tracker, migrations);
+        start_migration(instances, iid, id, next_stage, now, cfg, dirs, router, tracker, migrations);
     }
 }
 
@@ -981,10 +1344,12 @@ fn apply_batch(
 /// the target's content-addressed cache does not already hold (delta
 /// transfer): reserving the pull shares any cached prefix blocks, and the
 /// remaining tokens price the link time.
+#[allow(clippy::too_many_arguments)]
 fn process_inboxes(
     instances: &mut [SimInstance],
     now: f64,
     cfg: &SimConfig,
+    dirs: &mut Option<DirState>,
     heap: &mut BinaryHeap<Ev>,
     seq: &mut u64,
     report: &mut CacheReport,
@@ -998,6 +1363,9 @@ fn process_inboxes(
                 let mut pull = instances[iid].inbox.remove(i);
                 let r = pull.req.clone();
                 let (kv_cached, img_cached) = instances[iid].reserve(&r, cfg.content_cache);
+                if let Some(d) = dirs.as_mut() {
+                    d.sync_evictions(&mut instances[iid]);
+                }
                 pull.kv_cached = kv_cached;
                 let cached = match pull.phase {
                     Phase::EpMigration => img_cached,
@@ -1153,10 +1521,30 @@ mod tests {
 
     #[test]
     fn incomplete_cluster_strands_requests() {
-        // no prefill instance: image requests can never progress
+        // no prefill instance: image requests encode, then strand waiting
+        // for a P node that never exists — unfinished, not dropped
         let res = run("4E4D", Policy::StageLevel, 2.0, 10);
         assert_eq!(res.metrics.num_finished(), 0);
         assert_eq!(res.unfinished, 10);
+        assert_eq!(res.dropped_requests, 0);
+
+        // text-only requests on the same cluster have NO serving candidate
+        // at arrival: they are dropped, counted, and leave no
+        // half-initialized lifecycle / ready_since state behind
+        // (regression: they used to linger as phantom lifecycles)
+        let model = ModelSpec::llava15_7b();
+        let cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("4E4D").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        let text_only = Dataset { image_prob: 0.0, ..Dataset::textcaps() };
+        let reqs = PoissonGenerator::new(text_only, 2.0, 5).generate(&model, 10);
+        let res = simulate(&cfg, &reqs);
+        assert_eq!(res.dropped_requests, 10, "every text request is dropped");
+        assert_eq!(res.unfinished, 0, "drops are not 'unfinished' work");
+        assert_eq!(res.metrics.len(), 0, "no phantom lifecycles remain");
     }
 
     #[test]
@@ -1309,5 +1697,97 @@ mod tests {
         assert_eq!(res.unfinished, 0);
         assert_eq!(res.metrics.num_finished(), 60);
         assert!(res.cache.img_hit_images > 40, "repeats hit after first sight");
+    }
+
+    // ---- cluster-wide content directory -----------------------------------
+
+    fn sim_dir(cluster: &str, reqs: &[RequestSpec], directory: bool) -> SimResult {
+        let mut cfg = SimConfig::new(
+            ModelSpec::llava15_7b(),
+            ClusterSpec::parse(cluster).unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        cfg.content_cache = true;
+        cfg.cache_directory = directory;
+        simulate(&cfg, reqs)
+    }
+
+    #[test]
+    fn directory_affinity_matches_per_instance_scans_on_warm_traces() {
+        // same warm trace, directory on vs off, on a single instance where
+        // fetch can never trigger (no peers): the directory's one-sweep
+        // affinity must reproduce the per-instance scans exactly
+        let reqs: Vec<RequestSpec> =
+            (0..40).map(|i| shared_spec(i, i as f64 * 0.25, 40, 4)).collect();
+        let on = sim_dir("1EPD", &reqs, true);
+        let off = sim_dir("1EPD", &reqs, false);
+        assert_eq!(on.batches, off.batches);
+        assert_eq!(on.migrations, off.migrations);
+        assert_eq!(on.cache.img_hit_images, off.cache.img_hit_images);
+        assert_eq!(on.cache.kv_hit_tokens, off.cache.kv_hit_tokens);
+        assert!((on.metrics.ttft().mean() - off.metrics.ttft().mean()).abs() < 1e-12);
+        assert_eq!(on.cache.directory.fetches, 0, "no peers, no fetches");
+        assert!(on.cache.directory.publishes > 0, "commits are advertised");
+    }
+
+    #[test]
+    fn directory_cold_traces_are_bit_identical() {
+        // all-unique content: the directory stays empty, so enabling it
+        // must change nothing at all — on a multi-instance cluster too
+        let model = ModelSpec::llava15_7b();
+        let gen = PoissonGenerator::new(Dataset::textcaps(), 6.0, 13);
+        let reqs = gen.generate(&model, 80);
+        let on = sim_dir("1E2P1D", &reqs, true);
+        let off = sim_dir("1E2P1D", &reqs, false);
+        assert_eq!(on.batches, off.batches);
+        assert_eq!(on.migrations, off.migrations);
+        assert_eq!(on.unfinished, off.unfinished);
+        assert_eq!(on.cache.directory.fetches, 0);
+        assert_eq!(on.cache.directory.publishes, 0, "unique content never publishes");
+        assert!((on.metrics.ttft().mean() - off.metrics.ttft().mean()).abs() < 1e-12);
+        assert!((on.metrics.tpot().mean() - off.metrics.tpot().mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hot_prefix_spillover_fetches_instead_of_reprefilling() {
+        // a hot 512-token shared prefix lives on the instance that served
+        // it first; affinity herds followers there until its queue passes
+        // the router's load cap, and the spillover lands on the cold peer
+        // — which must FETCH the prefix KV over the link (sub-ms) instead
+        // of re-prefilling 512 tokens (weight-read bound, tens of ms)
+        let mk = |id: u64, t: f64| RequestSpec {
+            id: RequestId(id),
+            arrival: t,
+            num_images: 0,
+            tokens_per_image: 0,
+            prompt_tokens: 600,
+            output_tokens: 8,
+            image_hash: None,
+            shared_prefix_tokens: 512,
+            prefix_hash: 0xBEEF,
+        };
+        // one warmup seeds the prefix on exactly one instance; the dense
+        // burst two seconds later herds onto that holder and spills over
+        let mut reqs = vec![mk(0, 0.0)];
+        for i in 1..30 {
+            reqs.push(mk(i, 2.0 + i as f64 * 0.001));
+        }
+        let res = sim_dir("2PD", &reqs, true);
+        assert_eq!(res.unfinished, 0);
+        assert_eq!(res.metrics.num_finished(), 30);
+        let d = res.cache.directory;
+        assert!(d.fetches >= 1, "spillover must fetch, got {d:?}");
+        assert!(d.fetched_kv_tokens >= KV_BLOCK);
+        assert_eq!(d.stale_fetches, 0, "nothing evicts in this run");
+        // the warm cluster must not be slower with fetch-over-recompute on
+        let off = sim_dir("2PD", &reqs, false);
+        assert_eq!(off.cache.directory.fetches, 0);
+        assert!(
+            res.metrics.ttft().mean() <= off.metrics.ttft().mean() * 1.05,
+            "fetching must not hurt TTFT: on={} off={}",
+            res.metrics.ttft().mean(),
+            off.metrics.ttft().mean()
+        );
     }
 }

@@ -10,7 +10,7 @@
 
 pub mod engine;
 
-pub use engine::{simulate, CacheReport, SimResult};
+pub use engine::{simulate, CacheReport, DirectoryReport, SimResult};
 
 use crate::config::{ControllerConfig, DeviceSpec, ModelSpec, SloSpec};
 use crate::scheduler::{Policy, StageMask};
@@ -146,6 +146,15 @@ pub struct SimConfig {
     /// this is behaviour-identical to `false`; disable it only for
     /// cold-cache baselines (`bench_prefix_reuse`).
     pub content_cache: bool,
+    /// Cluster-wide content directory (`cache::ContentDirectory`): routing
+    /// affinity comes from one hash-chain sweep instead of per-candidate
+    /// index scans, and requests **fetch** content a peer holds instead of
+    /// recomputing it whenever the cost model prices the transfer below
+    /// the encode/prefill it replaces (fetch-over-recompute). Requires
+    /// `content_cache`. Off reproduces the per-instance-affinity behaviour
+    /// bit-for-bit; on, traces with no repeated content are also
+    /// bit-identical (an empty directory never fetches).
+    pub cache_directory: bool,
 }
 
 impl SimConfig {
@@ -163,6 +172,7 @@ impl SimConfig {
             engine_overhead: 0.020,
             controller: None,
             content_cache: true,
+            cache_directory: true,
         }
     }
 

@@ -1,13 +1,21 @@
 //! Latency statistics: online accumulators + exact percentiles.
 //!
 //! Serving metrics (TTFT, TPOT, breakdowns) are collected into `Summary`s;
-//! percentile queries sort a copy (sample counts here are small enough that
-//! exactness beats a sketch).
+//! percentile queries sort lazily and cache the sorted view (the elastic
+//! controller's estimator asks for p90 every tick — re-sorting the full
+//! sample vector per query was the hot spot). Ordering uses
+//! [`f64::total_cmp`], so NaN samples (e.g. a ratio over an empty window)
+//! sort to the end instead of panicking inside `partial_cmp(..).unwrap()`.
+
+use std::cell::RefCell;
 
 /// A collection of f64 samples with summary queries.
 #[derive(Debug, Default, Clone)]
 pub struct Summary {
     samples: Vec<f64>,
+    /// Lazily maintained sorted copy. Samples only ever get appended, so
+    /// "cache is stale" is exactly "lengths differ".
+    sorted: RefCell<Vec<f64>>,
 }
 
 impl Summary {
@@ -43,12 +51,18 @@ impl Summary {
     }
 
     /// Exact percentile via the nearest-rank method, p in [0, 100].
+    /// Sorts at most once per batch of additions (cached), with a total
+    /// order — NaN samples land at the top instead of panicking.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
-        let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut v = self.sorted.borrow_mut();
+        if v.len() != self.samples.len() {
+            v.clear();
+            v.extend_from_slice(&self.samples);
+            v.sort_by(f64::total_cmp);
+        }
         let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
         v[rank.saturating_sub(1).min(v.len() - 1)]
     }
@@ -155,6 +169,31 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // regression: `partial_cmp(..).unwrap()` panicked on any NaN
+        // sample; total_cmp sorts NaN above every finite value instead
+        let mut s = Summary::new();
+        s.extend(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.p50(), 2.0, "NaN sorts last, finite order intact");
+        assert_eq!(s.percentile(1.0), 1.0);
+        assert!(s.p99().is_nan(), "the NaN itself surfaces only at the top");
+    }
+
+    #[test]
+    fn percentile_cache_tracks_appends() {
+        let mut s = Summary::new();
+        s.extend(&[3.0, 1.0]);
+        assert_eq!(s.p50(), 1.0);
+        // appending after a cached query must invalidate the sorted view
+        s.add(0.5);
+        assert_eq!(s.percentile(1.0), 0.5);
+        assert_eq!(s.percentile(100.0), 3.0);
+        // repeated queries reuse the cache (same answers, no re-sort)
+        assert_eq!(s.p50(), 1.0);
+        assert_eq!(s.p50(), 1.0);
     }
 
     #[test]

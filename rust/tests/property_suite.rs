@@ -3,7 +3,7 @@
 //! scheduler budget/priority laws, router fairness, lifecycle/SLO logic,
 //! and JSON round-trips under random workloads.
 
-use hydrainfer::cache::{content, PagedCache};
+use hydrainfer::cache::{content, ContentDirectory, PagedCache, COST_IMAGE};
 use hydrainfer::core::{Lifecycle, RequestId, RequestSpec};
 use hydrainfer::router::{RoutePolicy, Router};
 use hydrainfer::scheduler::{Budgets, Policy, Queues, ReqState, StageMask};
@@ -241,6 +241,143 @@ fn prop_reacquired_prefix_is_stable_while_cached() {
                 }
                 cache.free(id).map_err(|e| e.to_string())?;
                 cache.verify_integrity().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The cluster content directory must stay exactly equal to ground truth
+/// — every advertised holder really indexes the block, and every indexed
+/// block is advertised — under randomized interleavings of commits (with
+/// both cost classes), pressure-driven evictions, cross-instance fetches
+/// (a target committing content a peer advertised), frees, and wholesale
+/// role-flip retractions, with the eviction log drained after every op
+/// (exactly how the simulator keeps the directory current).
+#[test]
+fn prop_directory_matches_ground_truth_under_random_interleavings() {
+    const N: usize = 3;
+    forall(
+        cfg(40),
+        |rng: &mut Rng| {
+            let n = 8 + rng.below(60);
+            (0..n)
+                .map(|_| (rng.below(N), rng.below(6), rng.below(200), rng.below(8)))
+                .collect::<Vec<(usize, usize, usize, usize)>>()
+        },
+        |ops| {
+            // small pools so evictions actually happen
+            let mut caches: Vec<PagedCache> = (0..N)
+                .map(|_| {
+                    let mut c = PagedCache::new(12, 16, 12);
+                    c.set_eviction_tracking(true);
+                    c
+                })
+                .collect();
+            let mut dir = ContentDirectory::new(N);
+            // four recurring content chains (up to 6 blocks each)
+            let chains: Vec<Vec<u64>> = (0..4u64)
+                .map(|c| {
+                    content::chain_hashes((0..96u64).map(move |p| content::mix(c + 1, p)), 16)
+                })
+                .collect();
+            let mut live: Vec<Vec<RequestId>> = vec![Vec::new(); N];
+            let mut next = 0u64;
+            for &(inst, kind, a, b) in ops {
+                let cache = &mut caches[inst];
+                match kind {
+                    // commit a shared chain (sometimes as the costly class)
+                    0 | 1 => {
+                        let chain = &chains[a % chains.len()];
+                        let id = RequestId(next);
+                        next += 1;
+                        let want = (1 + b % 6) * 16;
+                        if cache.acquire_prefix(id, chain, want).is_ok() {
+                            if cache.grow(id, want).is_ok() {
+                                let new = if kind == 0 {
+                                    cache.commit_hashes(id, chain)
+                                } else {
+                                    cache.commit_hashes_class(id, chain, COST_IMAGE)
+                                };
+                                dir.publish(inst, &new);
+                                live[inst].push(id);
+                            } else {
+                                cache.free(id).map_err(|e| e.to_string())?;
+                            }
+                        }
+                    }
+                    // unique content (pressure source: evicts cached blocks)
+                    2 => {
+                        let id = RequestId(next);
+                        next += 1;
+                        if cache.allocate(id, a % 150).is_ok() {
+                            live[inst].push(id);
+                        }
+                    }
+                    // free
+                    3 => {
+                        if !live[inst].is_empty() {
+                            let id = live[inst].swap_remove(a % live[inst].len());
+                            cache.free(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    // "fetch": this instance pulls a chain a peer advertises
+                    // and commits it locally (the fetch-over-recompute
+                    // landing path)
+                    4 => {
+                        let chain = &chains[a % chains.len()];
+                        let holder = dir.best_holder(chain, inst);
+                        if let Some((_, blocks)) = holder {
+                            let id = RequestId(next);
+                            next += 1;
+                            let want = blocks * 16;
+                            if cache.acquire_prefix(id, chain, want).is_ok() {
+                                if cache.grow(id, want).is_ok() {
+                                    let new = cache.commit_hashes(id, &chain[..blocks]);
+                                    dir.publish(inst, &new);
+                                    live[inst].push(id);
+                                } else {
+                                    cache.free(id).map_err(|e| e.to_string())?;
+                                }
+                            }
+                        }
+                    }
+                    // role flip: the whole cache is dropped and re-created
+                    _ => {
+                        let mut fresh = PagedCache::new(12, 16, 12);
+                        fresh.set_eviction_tracking(true);
+                        caches[inst] = fresh;
+                        live[inst].clear();
+                        dir.retract_all(inst);
+                    }
+                }
+                // drain eviction logs into retractions (the engine's sync)
+                for (i, c) in caches.iter_mut().enumerate() {
+                    let ev = c.drain_evicted();
+                    if !ev.is_empty() {
+                        dir.retract(i, &ev);
+                    }
+                }
+                // audit: directory == ground truth, both directions
+                for (h, mask) in dir.entries() {
+                    for i in 0..N {
+                        if mask & (1 << i) != 0 && !caches[i].has_content(h) {
+                            return Err(format!(
+                                "directory advertises {h:#x} on {i} but the cache lacks it"
+                            ));
+                        }
+                    }
+                }
+                for (i, c) in caches.iter().enumerate() {
+                    for h in c.indexed_hashes() {
+                        if !dir.holds(i, h) {
+                            return Err(format!(
+                                "cache {i} indexes {h:#x} but the directory does not advertise it"
+                            ));
+                        }
+                    }
+                    c.verify_integrity().map_err(|e| format!("cache {i}: {e}"))?;
+                }
             }
             Ok(())
         },
