@@ -1,7 +1,10 @@
 //! L3 hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
 //! Algorithm 1 batch construction, paged-cache alloc/append/free, router
-//! dispatch, and the cost-model evaluation that sits inside every
-//! simulated iteration. Times are per-op means over many iterations.
+//! dispatch, the cost-model evaluation that sits inside every simulated
+//! iteration, and — since the hot-path overhaul — the content-identity
+//! primitives the hash-once rule amortizes (`chain_hashes`,
+//! `lookup_prefix`, `ContentDirectory::prefix_blocks`). Times are per-op
+//! means over many iterations.
 //!
 //! Targets: batch build and cache ops must be microseconds — far below a
 //! single decode iteration (~5ms on H800, ~15ms tiny-VLM on CPU) so the
@@ -10,15 +13,18 @@
 
 use std::time::Instant;
 
-use hydrainfer::cache::PagedCache;
+use hydrainfer::benchkit;
+use hydrainfer::cache::content::{chain_hashes, HashChains};
+use hydrainfer::cache::{ContentDirectory, PagedCache};
 use hydrainfer::config::{DeviceSpec, ModelSpec};
 use hydrainfer::core::{RequestId, RequestSpec};
 use hydrainfer::costmodel::{decode_cost, exec_time};
 use hydrainfer::router::{RoutePolicy, Router};
 use hydrainfer::scheduler::{Budgets, Policy, Queues, ReqState, StageMask};
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
-    // warmup
+/// Warmup + timed loop, per-op mean in seconds (the single measurement
+/// protocol for this file — `bench` adds the printed line).
+fn bench_quiet<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     for _ in 0..iters / 10 + 1 {
         f();
     }
@@ -26,7 +32,11 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     for _ in 0..iters {
         f();
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench<F: FnMut()>(name: &str, iters: usize, f: F) -> f64 {
+    let per = bench_quiet(iters, f);
     println!("{name:<44} {:>10.2} ns/op  ({iters} iters)", per * 1e9);
     per
 }
@@ -42,6 +52,18 @@ fn spec(id: u64) -> RequestSpec {
     }
 }
 
+/// A llava-sized shared-content spec: 576 image tokens + 40 prompt tokens
+/// = a 616-token prefill region, 38 full KV blocks — the chain length the
+/// simulator hashes once per request.
+fn shared_spec(id: u64) -> RequestSpec {
+    RequestSpec {
+        image_hash: Some(0xCAFE),
+        shared_prefix_tokens: 32,
+        prefix_hash: 0x5157,
+        ..spec(id)
+    }
+}
+
 fn main() {
     println!("== L3 hot-path micro-benchmarks ==\n");
 
@@ -54,10 +76,10 @@ fn main() {
         r.encoded_images = 1;
         r.prefilled = r.spec.prefill_tokens();
         r.decoded = 1 + (i as usize % 8);
-        queues.running.push(r);
+        queues.push_running(r);
     }
     for i in 64..80 {
-        queues.waiting.push_back(ReqState::new(spec(i)));
+        queues.push_waiting(ReqState::new(spec(i)));
     }
     let t_batch = bench("Alg.1 build_batch (64 running + 16 waiting)", 20_000, || {
         let mut admit = |_: &ReqState| false; // measure pure batch build
@@ -93,7 +115,7 @@ fn main() {
     // ---- router dispatch ----
     let mut router = Router::new(RoutePolicy::LeastLoaded, 0);
     let loads = [3.0, 1.0, 4.0, 1.5, 9.0, 2.0, 6.0, 5.0];
-    bench("router pick (least-loaded over 8)", 1_000_000, || {
+    let t_pick = bench("router pick (least-loaded over 8)", 1_000_000, || {
         std::hint::black_box(router.pick(&loads));
     });
 
@@ -104,6 +126,58 @@ fn main() {
     bench("cost model decode batch (64 reqs)", 100_000, || {
         std::hint::black_box(exec_time(decode_cost(&m, &ctx), &d));
     });
+
+    // ---- content-identity primitives (the hash-once rule's unit costs) --
+    println!("\n== content-identity primitives (hash-once amortizes these) ==\n");
+    let widths = [40, 12, 14];
+    benchkit::header(&["op", "ns/op", "iters"], &widths);
+    let mut rows: Vec<(&str, f64, usize)> = Vec::new();
+
+    // the raw chained-hash fold over a 616-token prefill region
+    let t = bench_quiet(200_000, || {
+        std::hint::black_box(chain_hashes((0..616u64).map(|p| p ^ 0x9E37), 16).len());
+    });
+    rows.push(("chain_hashes (616 tokens / 38 blocks)", t, 200_000));
+
+    // the full per-request derivation the engine now performs exactly once
+    let s0 = shared_spec(1);
+    let t = bench_quiet(100_000, || {
+        std::hint::black_box(HashChains::of_spec(&s0, 16, 576).kv.len());
+    });
+    rows.push(("HashChains::of_spec (616-token request)", t, 100_000));
+
+    // warm-index prefix scan (the directory-off affinity fallback unit)
+    let chains = HashChains::of_spec(&s0, 16, 576);
+    let mut warm = PagedCache::new(256, 16, 512);
+    warm.allocate(RequestId(0), 616).unwrap();
+    warm.commit_hashes(RequestId(0), &chains.kv);
+    let t = bench_quiet(500_000, || {
+        std::hint::black_box(warm.lookup_prefix(&chains.kv));
+    });
+    rows.push(("PagedCache::lookup_prefix (38 blocks)", t, 500_000));
+
+    // one-sweep cluster answer for all 8 instances at once
+    let mut dir = ContentDirectory::new(8);
+    for holder in 0..8usize {
+        dir.publish(holder, &chains.kv[..(holder + 1) * 4]);
+    }
+    let mut pfx = Vec::new();
+    let t = bench_quiet(500_000, || {
+        dir.prefix_blocks_into(&chains.kv, &mut pfx);
+        std::hint::black_box(pfx[7]);
+    });
+    rows.push(("ContentDirectory::prefix_blocks (8 inst)", t, 500_000));
+
+    rows.push(("Router::pick (least-loaded over 8)", t_pick, 1_000_000));
+    for (name, per, iters) in &rows {
+        println!(
+            "{}",
+            benchkit::row(
+                &[name.to_string(), format!("{:.2}", per * 1e9), iters.to_string()],
+                &widths
+            )
+        );
+    }
 
     // ---- headroom check ----
     let decode_iter = 0.005; // ~one H800 decode iteration

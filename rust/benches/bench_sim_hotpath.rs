@@ -1,0 +1,239 @@
+//! Simulator hot-path throughput harness — the tracked perf baseline.
+//!
+//! Runs seeded traces through `simulate` across the EPD cluster shapes
+//! and reports **engine** speed (events/sec, requests/sec), allocation
+//! pressure (via a counting global allocator), and a peak-RSS proxy
+//! (`VmHWM` on Linux), then writes everything to a JSON file
+//! (`BENCH_sim_hotpath.json` by default) so each commit's numbers land in
+//! the perf trajectory. Behaviour digests (`SimResult::digest`) ride
+//! along so a perf regression hunt can immediately tell "slower" apart
+//! from "different".
+//!
+//! Modes:
+//!   cargo bench --bench bench_sim_hotpath                 # full: 100k-request traces
+//!   cargo bench --bench bench_sim_hotpath -- --small      # CI smoke: ~2k requests, <30s
+//!   ... -- --out PATH                                     # where to write the JSON
+//!
+//! The events/sec on the 100k-request `8EPD` trace is the headline number
+//! perf PRs must not regress (and the hot-path overhaul must improve ≥3x
+//! over the pre-overhaul engine).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use hydrainfer::benchkit;
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig};
+use hydrainfer::util::cli::Args;
+use hydrainfer::util::json::Json;
+use hydrainfer::workload::{shared_image_trace, Dataset, PoissonGenerator};
+
+// ---------------------------------------------------------------- allocator
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapped with relaxed counters: total allocation count
+/// and bytes (the "allocation-free event loop" regression detector) plus
+/// a live/peak watermark (heap-side RSS proxy).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        let live = LIVE_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed)
+            + layout.size() as u64;
+        PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (u64, u64, u64) {
+    (
+        ALLOCS.load(Ordering::Relaxed),
+        ALLOC_BYTES.load(Ordering::Relaxed),
+        PEAK_BYTES.load(Ordering::Relaxed),
+    )
+}
+
+/// Peak resident set (kB) from /proc/self/status — 0 where unavailable.
+fn vm_hwm_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let digits: String = rest.chars().filter(|c| c.is_ascii_digit()).collect();
+            return digits.parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+// ------------------------------------------------------------------- runs
+
+struct RunResult {
+    label: String,
+    cluster: String,
+    requests: usize,
+    events: u64,
+    finished: usize,
+    wall_s: f64,
+    events_per_s: f64,
+    reqs_per_s: f64,
+    allocs: u64,
+    alloc_bytes: u64,
+    digest: u64,
+}
+
+fn run_trace(label: &str, cluster: &str, reqs_n: usize, rate: f64, shared: bool) -> RunResult {
+    let model = ModelSpec::llava15_7b();
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse(cluster).unwrap(),
+        Policy::StageLevel,
+        SloSpec::new(0.25, 0.04),
+    );
+    let reqs = if shared {
+        // hot-content trace: 32 unique images + a shared system prompt,
+        // exercising the directory / fetch-over-recompute machinery
+        shared_image_trace(&model, &Dataset::textcaps(), rate, reqs_n, 32, 64, 42)
+    } else {
+        PoissonGenerator::new(Dataset::textcaps(), rate, 42).generate(&model, reqs_n)
+    };
+    let (a0, b0, _) = alloc_snapshot();
+    let t0 = Instant::now();
+    let res = simulate(&cfg, &reqs);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let (a1, b1, _) = alloc_snapshot();
+    RunResult {
+        label: label.to_string(),
+        cluster: cluster.to_string(),
+        requests: reqs.len(),
+        events: res.events,
+        finished: res.metrics.num_finished(),
+        wall_s: wall,
+        events_per_s: res.events as f64 / wall,
+        reqs_per_s: reqs.len() as f64 / wall,
+        allocs: a1 - a0,
+        alloc_bytes: b1 - b0,
+        digest: res.digest(),
+    }
+}
+
+fn main() {
+    let args = Args::from_env(&["small"]);
+    let small = args.flag("small");
+    let out_path = args.str_opt("out").unwrap_or("BENCH_sim_hotpath.json").to_string();
+    let (n, rate) = if small { (2_000, 50.0) } else { (100_000, 200.0) };
+
+    println!(
+        "== simulator hot-path throughput ({} mode, {} requests/trace) ==\n",
+        if small { "small" } else { "full" },
+        n
+    );
+
+    let shapes: &[&str] = if small {
+        &["8EPD", "1E3P4D"]
+    } else {
+        &["8EPD", "1E3P4D", "2EP6D"]
+    };
+    let mut runs: Vec<RunResult> = Vec::new();
+    for cluster in shapes {
+        runs.push(run_trace(&format!("poisson/{cluster}"), cluster, n, rate, false));
+    }
+    // one hot-content trace: reuse + directory + fetch paths stay fast too
+    runs.push(run_trace("shared-image/1E3P4D", "1E3P4D", n / 2, rate, true));
+
+    let widths = [22, 10, 12, 14, 12, 12, 20];
+    benchkit::header(
+        &["trace", "requests", "events", "events/s", "reqs/s", "wall s", "digest"],
+        &widths,
+    );
+    for r in &runs {
+        println!(
+            "{}",
+            benchkit::row(
+                &[
+                    r.label.clone(),
+                    r.requests.to_string(),
+                    r.events.to_string(),
+                    format!("{:.0}", r.events_per_s),
+                    format!("{:.0}", r.reqs_per_s),
+                    format!("{:.3}", r.wall_s),
+                    format!("{:016x}", r.digest),
+                ],
+                &widths
+            )
+        );
+    }
+
+    let (allocs, bytes, peak) = alloc_snapshot();
+    let hwm = vm_hwm_kb();
+    println!(
+        "\nallocator: {allocs} allocations, {:.1} MiB total, {:.1} MiB peak live; VmHWM {hwm} kB",
+        bytes as f64 / (1024.0 * 1024.0),
+        peak as f64 / (1024.0 * 1024.0),
+    );
+
+    // ---- JSON artifact (the perf trajectory record) ----
+    let total_events: u64 = runs.iter().map(|r| r.events).sum();
+    let total_wall: f64 = runs.iter().map(|r| r.wall_s).sum();
+    let json = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("bench", Json::str("sim_hotpath")),
+        ("mode", Json::str(if small { "small" } else { "full" })),
+        ("requests_per_trace", Json::num(n as f64)),
+        (
+            "runs",
+            Json::arr(runs.iter().map(|r| {
+                Json::obj(vec![
+                    ("trace", Json::str(r.label.clone())),
+                    ("cluster", Json::str(r.cluster.clone())),
+                    ("requests", Json::num(r.requests as f64)),
+                    ("events", Json::num(r.events as f64)),
+                    ("finished", Json::num(r.finished as f64)),
+                    ("wall_s", Json::num(r.wall_s)),
+                    ("events_per_s", Json::num(r.events_per_s)),
+                    ("requests_per_s", Json::num(r.reqs_per_s)),
+                    ("allocs", Json::num(r.allocs as f64)),
+                    ("alloc_bytes", Json::num(r.alloc_bytes as f64)),
+                    ("digest", Json::str(format!("{:016x}", r.digest))),
+                ])
+            })),
+        ),
+        (
+            "totals",
+            Json::obj(vec![
+                ("events", Json::num(total_events as f64)),
+                ("wall_s", Json::num(total_wall)),
+                (
+                    "events_per_s",
+                    Json::num(total_events as f64 / total_wall.max(1e-9)),
+                ),
+            ]),
+        ),
+        (
+            "memory",
+            Json::obj(vec![
+                ("allocs", Json::num(allocs as f64)),
+                ("alloc_bytes", Json::num(bytes as f64)),
+                ("peak_live_bytes", Json::num(peak as f64)),
+                ("vm_hwm_kb", Json::num(hwm as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, format!("{json}\n")).expect("write bench json");
+    println!("\nwrote {out_path}");
+}

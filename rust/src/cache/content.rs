@@ -142,6 +142,58 @@ pub fn spec_img_hashes(spec: &RequestSpec, block_size: usize) -> Vec<BlockHash> 
     }
 }
 
+// ---------------------------------------------------------------------------
+// Memoized per-request chains (hash-once)
+// ---------------------------------------------------------------------------
+
+/// All content identity a request ever needs, computed **once**.
+///
+/// Hashing is O(prefill_tokens) per derivation, and the simulator used to
+/// re-derive it at every touchpoint of a request's life (arrival routing,
+/// every commit, migration targeting, fetch planning) — on large traces
+/// the event loop was dominated by redundant hashing and `Vec` churn. The
+/// hash-once rule: derive a `HashChains` when the request enters the
+/// system, share it via `Arc`, and borrow slices everywhere else.
+///
+/// Invariants (asserted by tests): `kv == spec_kv_hashes(spec)`,
+/// `img == spec_img_hashes(spec)`, and
+/// `kv_commit() == spec_kv_commit_hashes(spec)` — the commit chain is a
+/// prefix of the full chain, so it is stored as a length, not a copy.
+#[derive(Debug, Clone, Default)]
+pub struct HashChains {
+    /// Chained KV block hashes of the full prefill region.
+    pub kv: Vec<BlockHash>,
+    /// Standalone image-embedding block hashes.
+    pub img: Vec<BlockHash>,
+    /// Leading blocks of `kv` that are shareable (publishable).
+    kv_commit_blocks: usize,
+}
+
+impl HashChains {
+    /// Derive every chain for a simulated request (one hashing pass).
+    pub fn of_spec(spec: &RequestSpec, kv_block: usize, img_block: usize) -> HashChains {
+        let kv = spec_kv_hashes(spec, kv_block);
+        let shareable = spec_kv_shareable_tokens(spec).min(spec.prefill_tokens());
+        HashChains {
+            kv_commit_blocks: shareable / kv_block.max(1),
+            img: spec_img_hashes(spec, img_block),
+            kv,
+        }
+    }
+
+    /// No content identity (content cache disabled): every lookup over
+    /// these chains is a no-op, allocation-free.
+    pub fn empty() -> HashChains {
+        HashChains::default()
+    }
+
+    /// The leading KV hashes worth publishing to the index — exactly
+    /// [`spec_kv_commit_hashes`], borrowed instead of re-derived.
+    pub fn kv_commit(&self) -> &[BlockHash] {
+        &self.kv[..self.kv_commit_blocks.min(self.kv.len())]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +269,27 @@ mod tests {
         let other_img = token_kv_hashes(&toks, Some(8), 16, 16);
         assert_eq!(with_img.len(), 3);
         assert!(with_img.iter().zip(&other_img).all(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn hash_chains_match_the_per_call_derivations() {
+        // the memoized chains must be bit-identical to what the old
+        // per-touchpoint derivations produced — this equality is what
+        // makes the hash-once refactor behaviour-preserving
+        let mut specs = vec![spec(1, 1, 40), spec(2, 0, 100), spec(3, 2, 7)];
+        specs[0].image_hash = Some(77);
+        specs[0].shared_prefix_tokens = 32;
+        specs[0].prefix_hash = 99;
+        specs[1].shared_prefix_tokens = 64;
+        specs[1].prefix_hash = 5;
+        for s in &specs {
+            let ch = HashChains::of_spec(s, 16, 576);
+            assert_eq!(ch.kv, spec_kv_hashes(s, 16));
+            assert_eq!(ch.img, spec_img_hashes(s, 576));
+            assert_eq!(ch.kv_commit(), &spec_kv_commit_hashes(s, 16)[..]);
+        }
+        let e = HashChains::empty();
+        assert!(e.kv.is_empty() && e.img.is_empty() && e.kv_commit().is_empty());
     }
 
     #[test]

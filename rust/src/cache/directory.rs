@@ -28,7 +28,7 @@
 //! Holder sets are u64 bitmasks — the paper's clusters are 8 GPUs; 64
 //! instances is plenty of headroom for this reproduction.
 
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
 
 use super::BlockHash;
 
@@ -48,7 +48,7 @@ pub struct DirectoryStats {
 #[derive(Debug, Clone)]
 pub struct ContentDirectory {
     n: usize,
-    holders: HashMap<BlockHash, u64>,
+    holders: FxHashMap<BlockHash, u64>,
     version: u64,
     stats: DirectoryStats,
 }
@@ -58,7 +58,7 @@ impl ContentDirectory {
         assert!(n_instances <= 64, "bitmask holder sets cap at 64 instances");
         ContentDirectory {
             n: n_instances,
-            holders: HashMap::new(),
+            holders: FxHashMap::default(),
             version: 0,
             stats: DirectoryStats::default(),
         }
@@ -153,10 +153,21 @@ impl ContentDirectory {
     /// over the chain (replaces the per-candidate `lookup_prefix` scans).
     /// `out[i]` = number of leading hashes instance `i` holds.
     pub fn prefix_blocks(&mut self, hashes: &[BlockHash]) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.prefix_blocks_into(hashes, &mut out);
+        out
+    }
+
+    /// [`ContentDirectory::prefix_blocks`] into a caller-owned scratch
+    /// buffer (cleared and resized to `num_instances`) — the simulator's
+    /// event loop reuses one buffer per plane instead of allocating a
+    /// fresh `Vec` per routing decision.
+    pub fn prefix_blocks_into(&mut self, hashes: &[BlockHash], out: &mut Vec<usize>) {
         self.stats.queries += 1;
-        let mut out = vec![0usize; self.n];
+        out.clear();
+        out.resize(self.n, 0);
         if self.n == 0 {
-            return out;
+            return;
         }
         let mut alive: u64 = if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 };
         for (i, h) in hashes.iter().enumerate() {
@@ -169,7 +180,7 @@ impl ContentDirectory {
             }
             alive &= m;
             if alive == 0 {
-                return out;
+                return;
             }
         }
         let mut still = alive;
@@ -178,7 +189,6 @@ impl ContentDirectory {
             out[b] = hashes.len();
             still &= still - 1;
         }
-        out
     }
 
     /// The instance (excluding `exclude`) holding the longest prefix of
@@ -252,6 +262,10 @@ mod tests {
         assert_eq!(d.prefix_blocks(&chain), vec![2, 4, 0]);
         assert_eq!(d.prefix_blocks(&[]), vec![0, 0, 0]);
         assert_eq!(d.prefix_blocks(&[999]), vec![0, 0, 0]);
+        // the scratch-buffer variant clears stale contents and agrees
+        let mut scratch = vec![77usize; 8];
+        d.prefix_blocks_into(&chain, &mut scratch);
+        assert_eq!(scratch, vec![2, 4, 0]);
     }
 
     #[test]

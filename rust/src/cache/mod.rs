@@ -69,14 +69,15 @@ pub mod content;
 pub mod directory;
 pub mod store;
 
-pub use content::BlockHash;
+pub use content::{BlockHash, HashChains};
 pub use directory::{ContentDirectory, DirectoryStats};
 pub use store::CacheStore;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::core::RequestId;
 use crate::util::ceil_div;
+use crate::util::fxhash::FxHashMap;
 
 /// Errors surfaced to the scheduler (cache pressure drives batching and
 /// migration backpressure decisions).
@@ -188,7 +189,7 @@ pub struct PagedCache {
     max_blocks_per_seq: usize,
     /// Truly free blocks (no content).
     free: Vec<u32>,
-    tables: HashMap<u64, PageTable>,
+    tables: FxHashMap<u64, PageTable>,
     /// Per-block reference count (page tables holding the block).
     refs: Vec<u32>,
     /// Per-block content tag (Some = published in `index`).
@@ -198,7 +199,7 @@ pub struct PagedCache {
     /// Cost class stamped on [`PagedCache::commit_hashes`] publications.
     default_cost: u8,
     /// Content index: hash -> block currently holding that content.
-    index: HashMap<BlockHash, u32>,
+    index: FxHashMap<BlockHash, u32>,
     /// Unreferenced-but-cached blocks, least recently released first, one
     /// queue per cost class (evict cheap classes first, LRU within).
     /// Lazy deletion: an entry `(block, stamp)` is live only while it
@@ -224,12 +225,12 @@ impl PagedCache {
             num_blocks,
             max_blocks_per_seq,
             free: (0..num_blocks as u32).rev().collect(),
-            tables: HashMap::new(),
+            tables: FxHashMap::default(),
             refs: vec![0; num_blocks],
             hash_of: vec![None; num_blocks],
             cost_of: vec![COST_KV; num_blocks],
             default_cost: COST_KV,
-            index: HashMap::new(),
+            index: FxHashMap::default(),
             lru: std::array::from_fn(|_| VecDeque::new()),
             lru_stamp: vec![0; num_blocks],
             lru_live: [0; COST_CLASSES],
@@ -556,10 +557,20 @@ impl PagedCache {
 
     /// Slot ids for positions [0, len) — the migration scatter plan.
     pub fn slot_mapping(&self, id: RequestId) -> Result<Vec<u32>, CacheError> {
+        let mut out = Vec::new();
+        self.slot_mapping_into(id, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`PagedCache::slot_mapping`] into a caller-owned scratch buffer
+    /// (cleared first) — the hot paths reuse one buffer across calls
+    /// instead of allocating a fresh `Vec` per request per batch.
+    pub fn slot_mapping_into(&self, id: RequestId, out: &mut Vec<u32>) -> Result<(), CacheError> {
         let t = self.tables.get(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
-        Ok((0..t.len)
-            .map(|p| t.slot_of(p, self.block_size).unwrap())
-            .collect())
+        out.clear();
+        out.reserve(t.len);
+        out.extend((0..t.len).map(|p| t.slot_of(p, self.block_size).unwrap()));
+        Ok(())
     }
 
     /// Pop a block for writing: truly free first, else evict a cached
@@ -765,6 +776,23 @@ mod tests {
         sorted.sort();
         sorted.dedup();
         assert_eq!(sorted.len(), 6);
+    }
+
+    #[test]
+    fn slot_mapping_into_reuses_the_scratch_buffer() {
+        let mut c = PagedCache::new(8, 4, 4);
+        c.allocate(id(1), 6).unwrap();
+        c.allocate(id(2), 3).unwrap();
+        let mut scratch = vec![99u32; 32]; // stale contents must be cleared
+        c.slot_mapping_into(id(1), &mut scratch).unwrap();
+        assert_eq!(scratch, c.slot_mapping(id(1)).unwrap());
+        c.slot_mapping_into(id(2), &mut scratch).unwrap();
+        assert_eq!(scratch, c.slot_mapping(id(2)).unwrap());
+        assert_eq!(scratch.len(), 3);
+        assert!(matches!(
+            c.slot_mapping_into(id(9), &mut scratch),
+            Err(CacheError::UnknownRequest(9))
+        ));
     }
 
     #[test]

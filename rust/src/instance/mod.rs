@@ -11,7 +11,6 @@ pub mod device;
 
 pub use device::{spawn_device, DeviceHandle};
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -33,6 +32,7 @@ use crate::runtime::DecodeInput;
 use crate::scheduler::{Budgets, Policy, Queues, ReqState, Scheduler, StageMask, TaskWork};
 use crate::simulator::ClusterSpec;
 use crate::tokenizer::Tokenizer;
+use crate::util::fxhash::FxHashMap;
 use crate::util::json::Json;
 use crate::vision::Image;
 
@@ -169,11 +169,11 @@ struct RealInstance {
     kv_store: CacheStore,
     img: PagedCache,
     img_store: CacheStore,
-    data: HashMap<u64, ReqData>,
+    data: FxHashMap<u64, ReqData>,
     /// Offers waiting for local capacity (pull-based backpressure).
     inbound: Vec<Offer>,
     /// Offers admitted, transfer in flight (we sent Pull, awaiting Payload).
-    pending_in: HashMap<u64, Offer>,
+    pending_in: FxHashMap<u64, Offer>,
     /// Local content-directory replica: own commits applied directly,
     /// peers' via `Msg::{PublishContent, RetractContent}` gossip. Drives
     /// the peer-pull decision without touching the shared lock.
@@ -185,9 +185,13 @@ struct RealInstance {
     /// id -> (request, give-up deadline). On `CacheData` they resume with
     /// the embedding installed; past the deadline they fall back to
     /// encoding locally.
-    fetch_parked: HashMap<u64, (ReqState, f64)>,
+    fetch_parked: FxHashMap<u64, (ReqState, f64)>,
     router: Router,
     tokenizer: Tokenizer,
+    /// Reusable slot-id buffer for `PagedCache::slot_mapping_into` — the
+    /// per-batch gather/scatter paths must not allocate a fresh `Vec` per
+    /// request.
+    scratch_slots: Vec<u32>,
 }
 
 impl RealInstance {
@@ -232,12 +236,13 @@ impl RealInstance {
         if kv_tokens > 0 {
             if !self.kv.has_request(id) {
                 // pin any committed prompt-prefix blocks (identical
-                // content: prefill rewrites them with the same values)
-                let hashes =
-                    self.data.get(&id.0).map(|d| d.kv_hashes.clone()).unwrap_or_default();
+                // content: prefill rewrites them with the same values).
+                // Hashes were memoized at submit — borrow, never re-derive.
+                let hashes: &[BlockHash] =
+                    self.data.get(&id.0).map_or(&[], |d| d.kv_hashes.as_slice());
                 let _ = self.kv.acquire_prefix(
                     id,
-                    &hashes,
+                    hashes,
                     r.spec.prefill_tokens().saturating_sub(1),
                 );
             }
@@ -246,9 +251,9 @@ impl RealInstance {
         let img_tokens = self.img_tokens_needed(r);
         if img_tokens > 0 {
             if !self.img.has_request(id) {
-                let hashes =
-                    self.data.get(&id.0).map(|d| d.img_hashes.clone()).unwrap_or_default();
-                let _ = self.img.acquire_prefix(id, &hashes, img_tokens);
+                let hashes: &[BlockHash] =
+                    self.data.get(&id.0).map_or(&[], |d| d.img_hashes.as_slice());
+                let _ = self.img.acquire_prefix(id, hashes, img_tokens);
             }
             self.img.grow(id, img_tokens).expect("img capacity checked");
         }
@@ -291,12 +296,7 @@ impl RealInstance {
     }
 
     fn release_caches(&mut self, id: RequestId) {
-        if self.kv.has_request(id) {
-            self.kv.free(id).unwrap();
-        }
-        if self.img.has_request(id) {
-            self.img.free(id).unwrap();
-        }
+        release_cache_pair(&mut self.kv, &mut self.img, id);
     }
 
     // ---- content directory ------------------------------------------------
@@ -379,7 +379,7 @@ impl RealInstance {
         for id in expired {
             let (st, _) = self.fetch_parked.remove(&id).expect("just listed");
             self.shared_dir.lock().unwrap().stale_pulls += 1;
-            self.queues.waiting.push_back(st);
+            self.queues.push_waiting(st);
         }
     }
 
@@ -421,18 +421,18 @@ impl RealInstance {
             Some(rows) if rows.len() == img_tokens * self.img_store.hidden() => {
                 match self.img.grow(req_id, img_tokens) {
                     Ok(()) => {
-                        let slots =
-                            self.img.slot_mapping(req_id).expect("table grown above");
+                        self.img
+                            .slot_mapping_into(req_id, &mut self.scratch_slots)
+                            .expect("table grown above");
                         let h = self.img_store.hidden();
-                        for (i, &slot) in slots.iter().enumerate() {
+                        for (i, &slot) in self.scratch_slots.iter().enumerate() {
                             self.img_store.write_token(0, slot, &rows[i * h..(i + 1) * h]);
                         }
-                        let hashes = self
+                        let hashes: &[BlockHash] = self
                             .data
                             .get(&req_id.0)
-                            .map(|d| d.img_hashes.clone())
-                            .unwrap_or_default();
-                        let new = self.img.commit_hashes(req_id, &hashes);
+                            .map_or(&[], |d| d.img_hashes.as_slice());
+                        let new = self.img.commit_hashes(req_id, hashes);
                         self.publish_content(Plane::Img, new);
                         true
                     }
@@ -456,7 +456,7 @@ impl RealInstance {
             st.cached_images = st.spec.num_images;
             st.encoded_images = st.spec.num_images;
         }
-        self.queues.waiting.push_back(st);
+        self.queues.push_waiting(st);
     }
 
     // ---- message handling ------------------------------------------------
@@ -535,7 +535,7 @@ impl RealInstance {
                         }
                     }
                 }
-                self.queues.waiting.push_back(st);
+                self.queues.push_waiting(st);
             }
             Msg::Offer(o) => self.inbound.push(*o),
             Msg::Pull(p) => self.serve_pull(p),
@@ -568,11 +568,7 @@ impl RealInstance {
                 // step 4: target confirmed receipt; free everything local
                 self.release_caches(r.req_id);
                 self.data.remove(&r.req_id.0);
-                if let Some(pos) =
-                    self.queues.running.iter().position(|x| x.spec.id == r.req_id)
-                {
-                    self.queues.running.remove(pos);
-                }
+                self.queues.remove_running(r.req_id);
             }
         }
         true
@@ -606,7 +602,7 @@ impl RealInstance {
     /// missing (delta transfer).
     fn serve_pull(&mut self, p: Pull) {
         let id = p.req_id;
-        let Some(state) = self.queues.running.iter().find(|r| r.spec.id == id) else {
+        let Some(state) = self.queues.get_running(id) else {
             return;
         };
         let kind = if state.prefill_remaining() > 0 {
@@ -619,8 +615,10 @@ impl RealInstance {
                 let img_embed = if p.img_have {
                     None // target-side cache hit: nothing to ship
                 } else {
-                    let slots = self.img.slot_mapping(id).expect("img allocated");
-                    Some(self.img_store.gather(0, &slots))
+                    self.img
+                        .slot_mapping_into(id, &mut self.scratch_slots)
+                        .expect("img allocated");
+                    Some(self.img_store.gather(0, &self.scratch_slots))
                 };
                 Payload {
                     req_id: id,
@@ -635,12 +633,13 @@ impl RealInstance {
                 let d = self.data.get(&id.0).expect("data present");
                 let valid = d.ctx_len;
                 let from = p.kv_have_tokens.min(valid);
-                let table = self.kv.table(id).expect("kv allocated").clone();
-                let slots: Vec<u32> = (from..valid)
-                    .map(|pos| table.slot_of(pos, self.kv.block_size()).unwrap())
-                    .collect();
+                let bs = self.kv.block_size();
+                let table = self.kv.table(id).expect("kv allocated");
+                self.scratch_slots.clear();
+                self.scratch_slots
+                    .extend((from..valid).map(|pos| table.slot_of(pos, bs).unwrap()));
                 let planes = (0..self.kv_store.num_planes())
-                    .map(|pl| self.kv_store.gather(pl, &slots))
+                    .map(|pl| self.kv_store.gather(pl, &self.scratch_slots))
                     .collect();
                 Payload {
                     req_id: id,
@@ -674,9 +673,11 @@ impl RealInstance {
             MigrationKind::EncodeToPrefill => {
                 // None = our cache already held the embedding (delta pull)
                 if let Some(embed) = pl.img_embed {
-                    let slots = self.img.slot_mapping(id).expect("img reserved at admit");
+                    self.img
+                        .slot_mapping_into(id, &mut self.scratch_slots)
+                        .expect("img reserved at admit");
                     let h = self.img_store.hidden();
-                    for (i, &slot) in slots.iter().enumerate() {
+                    for (i, &slot) in self.scratch_slots.iter().enumerate() {
                         self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
                     }
                 }
@@ -687,15 +688,16 @@ impl RealInstance {
             MigrationKind::PrefillToDecode => {
                 let planes = pl.kv_planes.expect("pd payload has kv");
                 ctx_len = pl.kv_tokens;
-                let table = self.kv.table(id).expect("kv reserved at admit").clone();
+                let bs = self.kv.block_size();
+                let table = self.kv.table(id).expect("kv reserved at admit");
                 // positions below kv_from were a local cache hit and were
                 // never transferred
                 let from = pl.kv_from.min(ctx_len);
-                let slots: Vec<u32> = (from..ctx_len)
-                    .map(|pos| table.slot_of(pos, self.kv.block_size()).unwrap())
-                    .collect();
+                self.scratch_slots.clear();
+                self.scratch_slots
+                    .extend((from..ctx_len).map(|pos| table.slot_of(pos, bs).unwrap()));
                 for (p, plane) in planes.into_iter().enumerate() {
-                    self.kv_store.scatter(p, &slots, &plane);
+                    self.kv_store.scatter(p, &self.scratch_slots, &plane);
                 }
                 // the prompt-prefix KV now lives here: publish it
                 let new = self.kv.commit_hashes(id, &offer.kv_block_hashes);
@@ -717,17 +719,17 @@ impl RealInstance {
                 img_hashes: offer.img_block_hashes,
             },
         );
-        self.queues.running.push(state);
+        self.queues.push_running(state);
         // step 4: tell the source to release
         let _ = self.peers[offer.src].0.send(Msg::Release(Release { req_id: id }));
     }
 
     /// Hand a request whose next stage we don't serve to a peer (step 1).
     fn migrate_out(&mut self, id: RequestId) {
-        let Some(pos) = self.queues.running.iter().position(|r| r.spec.id == id) else {
+        let Some(state) = self.queues.get_running(id) else {
             return;
         };
-        let state = self.queues.running[pos].clone();
+        let state = state.clone();
         let next = state.stage();
         let candidates: Vec<usize> = self
             .peers
@@ -744,7 +746,7 @@ impl RealInstance {
         } else {
             MigrationKind::PrefillToDecode
         };
-        self.queues.running[pos].migrating = true;
+        self.queues.find_running(id).expect("looked up above").migrating = true;
         let d = self.data.get(&id.0).expect("data present");
         let offer = Offer {
             req: {
@@ -803,8 +805,8 @@ impl RealInstance {
         };
         self.sched = sched;
 
-        for i in 0..self.queues.running.len() {
-            let r = self.queues.running[i].clone();
+        for i in 0..self.queues.running_len() {
+            let r = self.queues.running()[i].clone();
             self.reserve(&r);
         }
 
@@ -833,17 +835,19 @@ impl RealInstance {
             let mut k = 0;
             let now = self.now();
             for (id, n) in &encode_items {
-                let slots = self.img.slot_mapping(*id).expect("img reserved");
+                self.img
+                    .slot_mapping_into(*id, &mut self.scratch_slots)
+                    .expect("img reserved");
                 let h = self.img_store.hidden();
                 let embed = &embeds[k];
-                for (i, &slot) in slots.iter().enumerate() {
+                for (i, &slot) in self.scratch_slots.iter().enumerate() {
                     self.img_store.write_token(0, slot, &embed[i * h..(i + 1) * h]);
                 }
                 k += n;
                 // publish the fresh embedding for cross-request reuse
-                let img_hashes =
-                    self.data.get(&id.0).map(|d| d.img_hashes.clone()).unwrap_or_default();
-                let new = self.img.commit_hashes(*id, &img_hashes);
+                let img_hashes: &[BlockHash] =
+                    self.data.get(&id.0).map_or(&[], |d| d.img_hashes.as_slice());
+                let new = self.img.commit_hashes(*id, img_hashes);
                 self.publish_content(Plane::Img, new);
                 let d = self.data.get_mut(&id.0).unwrap();
                 d.lifecycle.add_phase(Phase::EncodeQueue, (started - d.ready_since).max(0.0));
@@ -874,8 +878,8 @@ impl RealInstance {
                 (r.spec.clone(), r.spec.has_image())
             };
             let img_embed = if has_image {
-                let slots = self.img.slot_mapping(*id)?;
-                Some(self.img_store.gather(0, &slots))
+                self.img.slot_mapping_into(*id, &mut self.scratch_slots)?;
+                Some(self.img_store.gather(0, &self.scratch_slots))
             } else {
                 None
             };
@@ -884,20 +888,21 @@ impl RealInstance {
             let now = self.now();
 
             // scatter KV into our paged store
-            let table = self.kv.table(*id).expect("kv reserved").clone();
-            let slots: Vec<u32> = (0..out.valid_len)
-                .map(|p| table.slot_of(p, self.kv.block_size()).unwrap())
-                .collect();
+            let bs = self.kv.block_size();
+            let table = self.kv.table(*id).expect("kv reserved");
+            self.scratch_slots.clear();
+            self.scratch_slots
+                .extend((0..out.valid_len).map(|p| table.slot_of(p, bs).unwrap()));
             let layers = self.device.cfg().layers;
             for (l, (k, v)) in out.k.iter().zip(out.v.iter()).enumerate() {
-                self.kv_store.scatter(l, &slots, k);
-                self.kv_store.scatter(layers + l, &slots, v);
+                self.kv_store.scatter(l, &self.scratch_slots, k);
+                self.kv_store.scatter(layers + l, &self.scratch_slots, v);
             }
 
             // the prompt-region KV is final: publish it for prefix reuse
-            let kv_hashes =
-                self.data.get(&id.0).map(|d| d.kv_hashes.clone()).unwrap_or_default();
-            let new = self.kv.commit_hashes(*id, &kv_hashes);
+            let kv_hashes: &[BlockHash] =
+                self.data.get(&id.0).map_or(&[], |d| d.kv_hashes.as_slice());
+            let new = self.kv.commit_hashes(*id, kv_hashes);
             self.publish_content(Plane::Kv, new);
 
             // first output token comes from the prefill logits
@@ -983,7 +988,7 @@ impl RealInstance {
         }
 
         // ---------------- post-batch transitions ----------------
-        let ids: Vec<RequestId> = self.queues.running.iter().map(|r| r.spec.id).collect();
+        let ids: Vec<RequestId> = self.queues.running().iter().map(|r| r.spec.id).collect();
         for id in ids {
             let Some(r) = self.queues.find_running(id) else { continue };
             if r.migrating {
@@ -1003,8 +1008,8 @@ impl RealInstance {
     /// Caches are fixed-size pools in real mode, so no resize is needed.
     fn maybe_flip(&mut self) {
         let Some(to) = self.drain_to else { return };
-        let empty = self.queues.waiting.is_empty()
-            && self.queues.running.is_empty()
+        let empty = self.queues.waiting_is_empty()
+            && self.queues.running_is_empty()
             && self.inbound.is_empty()
             && self.pending_in.is_empty()
             && self.fetch_parked.is_empty();
@@ -1041,42 +1046,49 @@ impl RealInstance {
         if self.ctrl.is_none() {
             return; // static layout: masks never change, nothing can strand
         }
-        let mut i = 0;
-        while i < self.queues.waiting.len() {
-            let stage = self.queues.waiting[i].stage();
-            if self.mask.serves(stage) {
-                i += 1;
-                continue;
-            }
-            let candidates: Vec<usize> = self
-                .peers
-                .iter()
-                .enumerate()
-                .filter(|(j, (_, m))| *j != self.idx && m.serves(stage))
-                .map(|(j, _)| j)
-                .collect();
-            if candidates.is_empty() {
-                i += 1; // incomplete cluster: nowhere better to send it
-                continue;
-            }
-            let Some(dst) = pick_peer(&mut self.router, &candidates, &self.peer_draining)
-            else {
-                i += 1;
-                continue;
-            };
-            let r = self.queues.waiting.remove(i).unwrap();
-            // drop any cache prefix pinned at submit before it leaves
-            self.release_caches(r.spec.id);
-            let Some(d) = self.data.remove(&r.spec.id.0) else { continue };
-            // a waiting request has made no progress: re-submit it whole
-            let prepared = PreparedRequest {
-                spec: r.spec,
-                tokens: d.tokens,
-                pixels: d.pixels,
-                sampling: d.sampler.params().clone(),
-            };
-            let _ = self.peers[dst].0.send(Msg::Submit(Box::new(prepared)));
-        }
+        let Self {
+            queues,
+            mask,
+            peers,
+            peer_draining,
+            router,
+            idx,
+            data,
+            kv,
+            img,
+            ..
+        } = self;
+        let (mask, idx) = (*mask, *idx);
+        queues.reroute_unserved(
+            |stage| mask.serves(stage),
+            |r| {
+                let stage = r.stage();
+                let candidates: Vec<usize> = peers
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, (_, m))| *j != idx && m.serves(stage))
+                    .map(|(j, _)| j)
+                    .collect();
+                if candidates.is_empty() {
+                    return Some(r); // incomplete cluster: keep waiting here
+                }
+                let Some(dst) = pick_peer(router, &candidates, peer_draining) else {
+                    return Some(r);
+                };
+                // drop any cache prefix pinned at submit before it leaves
+                release_cache_pair(kv, img, r.spec.id);
+                let Some(d) = data.remove(&r.spec.id.0) else { return None };
+                // a waiting request has made no progress: re-submit it whole
+                let prepared = PreparedRequest {
+                    spec: r.spec,
+                    tokens: d.tokens,
+                    pixels: d.pixels,
+                    sampling: d.sampler.params().clone(),
+                };
+                let _ = peers[dst].0.send(Msg::Submit(Box::new(prepared)));
+                None
+            },
+        );
     }
 
     /// Periodic queue-depth sample for the controller's estimator.
@@ -1093,9 +1105,8 @@ impl RealInstance {
         // migrating requests are counted at the pulling side
         for r in self
             .queues
-            .waiting
-            .iter()
-            .chain(self.queues.running.iter().filter(|r| !r.migrating))
+            .iter_waiting()
+            .chain(self.queues.running().iter().filter(|r| !r.migrating))
         {
             s.add_req(r);
         }
@@ -1114,10 +1125,9 @@ impl RealInstance {
     }
 
     fn finish(&mut self, id: RequestId) {
-        let Some(pos) = self.queues.running.iter().position(|r| r.spec.id == id) else {
+        if self.queues.remove_running(id).is_none() {
             return;
-        };
-        self.queues.running.remove(pos);
+        }
         self.release_caches(id);
         if let Some(mut d) = self.data.remove(&id.0) {
             d.lifecycle.finished_at = Some(self.now());
@@ -1221,6 +1231,18 @@ fn pick_peer_affinity(
     router.pick(&raw).map(|p| candidates[p])
 }
 
+/// Free a request's holdings on both cache planes (free function over the
+/// split-borrowed pair so the post-flip reroute closure shares the exact
+/// same release path as [`RealInstance`]'s method).
+fn release_cache_pair(kv: &mut PagedCache, img: &mut PagedCache, id: RequestId) {
+    if kv.has_request(id) {
+        kv.free(id).unwrap();
+    }
+    if img.has_request(id) {
+        img.free(id).unwrap();
+    }
+}
+
 fn kv_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
     if !(mask.prefill || mask.decode) {
         return 0;
@@ -1264,7 +1286,7 @@ pub struct RealCluster {
     /// re-routes by the plain policy, spreading a hot key across
     /// instances (whose caches then warm via peer-pull) instead of
     /// herding unboundedly onto one.
-    affinity_streak: HashMap<u64, u32>,
+    affinity_streak: FxHashMap<u64, u32>,
     /// Elastic control plane (None = static layout).
     control: Option<Arc<Mutex<ControlShared>>>,
     ctrl_stop: Arc<AtomicBool>,
@@ -1362,15 +1384,16 @@ impl RealCluster {
                 kv_store: CacheStore::new(planes, cfg.pool_blocks, cfg.block_size, cfg.hidden),
                 img,
                 img_store: CacheStore::new(1, 64, cfg.img_tokens, cfg.hidden),
-                data: HashMap::new(),
+                data: FxHashMap::default(),
                 inbound: Vec::new(),
-                pending_in: HashMap::new(),
+                pending_in: FxHashMap::default(),
                 dir_kv: ContentDirectory::new(masks.len()),
                 dir_img: ContentDirectory::new(masks.len()),
                 shared_dir: Arc::clone(&directory),
-                fetch_parked: HashMap::new(),
+                fetch_parked: FxHashMap::default(),
                 router: Router::new(RoutePolicy::RoundRobin, idx as u64),
                 tokenizer: Tokenizer::new(),
+                scratch_slots: Vec::new(),
             };
             joins.push(
                 std::thread::Builder::new()
@@ -1406,7 +1429,7 @@ impl RealCluster {
             epoch,
             next_id: 0,
             directory,
-            affinity_streak: HashMap::new(),
+            affinity_streak: FxHashMap::default(),
             control,
             ctrl_stop,
             ctrl_join,

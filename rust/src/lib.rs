@@ -40,6 +40,31 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; the serving binary is self-contained afterwards.
+//!
+//! # Perf invariants (the scheduling layer must cost ~nothing)
+//!
+//! The paper's throughput claims only hold if routing + scheduling are
+//! negligible next to kernel time, so the coordinator obeys three rules
+//! enforced by `bench_micro_hotpath`, `bench_sim_hotpath`, and the
+//! golden-determinism suite:
+//!
+//! * **Hash once** — a request's content-hash chains
+//!   ([`cache::HashChains`]) are derived exactly once and shared via
+//!   `Arc`; "equal hash ⇒ identical left context" stays load-bearing, so
+//!   a borrowed chain answers routing, commits, migration targeting, and
+//!   fetch planning without rehashing.
+//! * **Allocation-free event loop** — the simulator reuses scratch
+//!   buffers (candidates, affinity, directory sweeps, slot mappings) and
+//!   indexes queues by request id (`scheduler::Queues`) instead of
+//!   scanning; hot maps use the deterministic in-crate Fx hasher
+//!   (`util::fxhash`), which also pins seeded-trace behaviour
+//!   bit-for-bit across processes.
+//! * **Tracked baseline** — `cargo bench --bench bench_sim_hotpath`
+//!   writes `BENCH_sim_hotpath.json` (events/sec, requests/sec,
+//!   allocation counters, behaviour digests); CI's bench-smoke job
+//!   uploads it per commit so perf changes show up in the trajectory,
+//!   and [`simulator::SimResult::digest`] separates "slower" from
+//!   "different".
 
 pub mod util;
 pub mod config;

@@ -39,33 +39,56 @@ impl Router {
     /// e.g. an instance mid-drain during a role reconfiguration — and it
     /// is never picked under any policy. Returns None when `loads` is
     /// empty or no candidate is eligible.
+    ///
+    /// Allocation-free: this runs once per routed request and once per
+    /// migration target pick, so it must never heap-allocate.
     pub fn pick(&mut self, loads: &[f64]) -> Option<usize> {
-        let eligible: Vec<usize> = loads
-            .iter()
-            .enumerate()
-            .filter(|(_, l)| l.is_finite())
-            .map(|(i, _)| i)
-            .collect();
-        if eligible.is_empty() {
+        let eligible = loads.iter().filter(|l| l.is_finite()).count();
+        if eligible == 0 {
             return None;
         }
-        Some(match self.policy {
+        match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = eligible[self.rr % eligible.len()];
+                let k = self.rr % eligible;
                 self.rr += 1;
-                i
+                Self::nth_eligible(loads, k)
             }
-            RoutePolicy::Random => eligible[self.rng.below(eligible.len())],
+            RoutePolicy::Random => Self::nth_eligible(loads, self.rng.below(eligible)),
             RoutePolicy::LeastLoaded => {
-                let mut best = eligible[0];
-                for &i in &eligible {
-                    if loads[i] < loads[best] {
-                        best = i;
+                let mut best: Option<usize> = None;
+                for (i, l) in loads.iter().enumerate() {
+                    if !l.is_finite() {
+                        continue;
+                    }
+                    // strict `<` keeps the first minimum, matching the old
+                    // collect-then-scan behaviour exactly
+                    if best.map_or(true, |b| *l < loads[b]) {
+                        best = Some(i);
                     }
                 }
                 best
             }
-        })
+        }
+    }
+
+    /// Index of the k-th (0-based) finite-load candidate.
+    fn nth_eligible(loads: &[f64], k: usize) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_finite())
+            .nth(k)
+            .map(|(i, _)| i)
+    }
+
+    /// Load ceiling used by [`Router::pick_affinity`]: an affinity
+    /// candidate only wins while its load stays within this band of the
+    /// least-loaded eligible candidate (a cached copy is worth a
+    /// moderately longer queue, not an unbounded one). Exposed so callers
+    /// that pre-filter candidates (the simulator's affinity early-exit)
+    /// apply the exact same rule.
+    pub fn affinity_load_cap(min_load: f64) -> f64 {
+        4.0 + 2.0 * min_load
     }
 
     /// Cache-affinity pick: among eligible candidates (finite load),
@@ -85,9 +108,7 @@ impl Router {
             .copied()
             .filter(|l| l.is_finite())
             .fold(f64::INFINITY, f64::min);
-        // a cached copy is worth a moderately longer queue, not an
-        // unbounded one
-        let load_cap = 4.0 + 2.0 * min_load;
+        let load_cap = Router::affinity_load_cap(min_load);
         let mut best: Option<usize> = None;
         for (i, l) in loads.iter().enumerate() {
             if !l.is_finite() || affinity[i] <= 0.0 || *l > load_cap {

@@ -15,6 +15,7 @@ pub use budget::{compute_image_budget, compute_token_budget, BudgetProfile};
 use std::collections::VecDeque;
 
 use crate::core::{RequestId, RequestSpec, Stage};
+use crate::util::fxhash::FxHashMap;
 
 /// Scheduler-visible request state (progress through the stage pipeline).
 ///
@@ -143,19 +144,190 @@ impl Batch {
 }
 
 /// The queues a scheduler draws from. `running` holds admitted requests
-/// (cache reserved); `waiting` holds requests not yet admitted.
+/// (cache reserved); waiting requests are not yet admitted.
+///
+/// Hot-path layout (the O(n) structural costs of the old
+/// `VecDeque<ReqState>` + `Vec<ReqState>` pair are gone):
+///
+/// * **Waiting** requests are segregated into one FIFO per needed stage.
+///   A waiting request's stage never changes (progress only advances
+///   while running), so "first waiting request needing stage S" — the
+///   only question schedulers ever ask — is the front of S's queue
+///   instead of an O(waiting) scan, and removal is `pop_front` instead
+///   of an O(n) `remove(pos)` shift. A global sequence number preserves
+///   exact cross-stage FCFS order, so every selection is bit-identical
+///   to the old linear scans.
+/// * **Running** requests keep their `Vec` (schedulers iterate it in
+///   admission order) plus an id → slot index, making `find_running` —
+///   called once per batch item per event — O(1) instead of O(running).
 #[derive(Debug, Default)]
 pub struct Queues {
-    pub waiting: VecDeque<ReqState>,
-    pub running: Vec<ReqState>,
+    /// Per-stage waiting FIFOs (Encode / Prefill / Decode), entries
+    /// tagged with a global arrival sequence number.
+    waiting: [VecDeque<(u64, ReqState)>; 3],
+    next_seq: u64,
+    running: Vec<ReqState>,
+    /// Request id -> position in `running` (kept exact on every mutation).
+    running_pos: FxHashMap<u64, usize>,
+}
+
+/// Waiting-queue slot for a stage (Migrate never waits: the flag is only
+/// set on running requests).
+#[inline]
+fn waiting_slot(s: Stage) -> usize {
+    match s {
+        Stage::Encode => 0,
+        Stage::Prefill => 1,
+        _ => 2,
+    }
+}
+
+#[inline]
+fn slot_stage(slot: usize) -> Stage {
+    [Stage::Encode, Stage::Prefill, Stage::Decode][slot]
 }
 
 impl Queues {
     pub fn total(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting_len() + self.running.len()
     }
+
+    // ---- waiting ---------------------------------------------------------
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.iter().map(|q| q.len()).sum()
+    }
+    pub fn waiting_is_empty(&self) -> bool {
+        self.waiting.iter().all(|q| q.is_empty())
+    }
+
+    /// Enqueue a request (FCFS position = this call's order).
+    pub fn push_waiting(&mut self, r: ReqState) {
+        debug_assert!(!r.migrating, "migrating requests never wait");
+        let slot = waiting_slot(r.stage());
+        self.waiting[slot].push_back((self.next_seq, r));
+        self.next_seq += 1;
+    }
+
+    /// Every waiting request, grouped by stage (use the peek/pop API for
+    /// global-FCFS selection; this order is per-stage FIFO only).
+    pub fn iter_waiting(&self) -> impl Iterator<Item = &ReqState> {
+        self.waiting.iter().flat_map(|q| q.iter().map(|(_, r)| r))
+    }
+
+    /// Global-FCFS first waiting request whose stage satisfies `pred`
+    /// (exactly what the old `waiting.iter().position(...)` scans
+    /// selected, without the scan).
+    pub fn peek_waiting(&self, pred: impl Fn(Stage) -> bool) -> Option<&ReqState> {
+        self.waiting_front(pred).map(|slot| &self.waiting[slot].front().unwrap().1)
+    }
+
+    /// Remove and return what [`Queues::peek_waiting`] would select.
+    pub fn pop_waiting(&mut self, pred: impl Fn(Stage) -> bool) -> Option<ReqState> {
+        let slot = self.waiting_front(pred)?;
+        Some(self.waiting[slot].pop_front().unwrap().1)
+    }
+
+    /// Slot holding the minimum-sequence front among stages `pred` admits.
+    fn waiting_front(&self, pred: impl Fn(Stage) -> bool) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for slot in 0..self.waiting.len() {
+            if !pred(slot_stage(slot)) {
+                continue;
+            }
+            if let Some((seq, _)) = self.waiting[slot].front() {
+                if best.map_or(true, |(bs, _)| *seq < bs) {
+                    best = Some((*seq, slot));
+                }
+            }
+        }
+        best.map(|(_, slot)| slot)
+    }
+
+    /// Offer every waiting request whose stage `serves` rejects to
+    /// `route`, in **global FIFO order** (routers are stateful —
+    /// round-robin peer assignment must see requests in the same order
+    /// the old flat-queue scan produced); `route` consumes rerouted
+    /// requests (returns `None`) or hands back ones it could not place,
+    /// which keep their original queue position. Used by the elastic
+    /// control plane after role flips.
+    pub fn reroute_unserved(
+        &mut self,
+        serves: impl Fn(Stage) -> bool,
+        mut route: impl FnMut(ReqState) -> Option<ReqState>,
+    ) {
+        let mut kept: [VecDeque<(u64, ReqState)>; 3] = Default::default();
+        loop {
+            // min-seq front among the unserved stage queues
+            let mut best: Option<(u64, usize)> = None;
+            for slot in 0..self.waiting.len() {
+                if serves(slot_stage(slot)) {
+                    continue;
+                }
+                if let Some((seq, _)) = self.waiting[slot].front() {
+                    if best.map_or(true, |(bs, _)| *seq < bs) {
+                        best = Some((*seq, slot));
+                    }
+                }
+            }
+            let Some((seq, slot)) = best else { break };
+            let (_, r) = self.waiting[slot].pop_front().unwrap();
+            if let Some(back) = route(r) {
+                kept[slot].push_back((seq, back));
+            }
+        }
+        // unserved queues were fully drained in seq order, so appending
+        // the kept entries (original seqs, original relative order)
+        // restores their exact positions
+        for (slot, q) in kept.into_iter().enumerate() {
+            for item in q {
+                self.waiting[slot].push_back(item);
+            }
+        }
+    }
+
+    // ---- running ---------------------------------------------------------
+
+    /// Admitted requests, in admission order.
+    pub fn running(&self) -> &[ReqState] {
+        &self.running
+    }
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+    pub fn running_is_empty(&self) -> bool {
+        self.running.is_empty()
+    }
+
+    /// Admit a request (appends — iteration order is admission order).
+    pub fn push_running(&mut self, r: ReqState) {
+        let prev = self.running_pos.insert(r.spec.id.0, self.running.len());
+        debug_assert!(prev.is_none(), "request {} admitted twice", r.spec.id);
+        self.running.push(r);
+    }
+
+    /// O(1) lookup by id.
     pub fn find_running(&mut self, id: RequestId) -> Option<&mut ReqState> {
-        self.running.iter_mut().find(|r| r.spec.id == id)
+        let pos = *self.running_pos.get(&id.0)?;
+        self.running.get_mut(pos)
+    }
+
+    /// O(1) shared lookup by id.
+    pub fn get_running(&self, id: RequestId) -> Option<&ReqState> {
+        let pos = *self.running_pos.get(&id.0)?;
+        self.running.get(pos)
+    }
+
+    /// Remove by id, preserving the order of the remaining requests
+    /// (order drives batch composition, so a swap-remove would change
+    /// scheduling decisions).
+    pub fn remove_running(&mut self, id: RequestId) -> Option<ReqState> {
+        let pos = self.running_pos.remove(&id.0)?;
+        let r = self.running.remove(pos);
+        for later in &self.running[pos..] {
+            *self.running_pos.get_mut(&later.spec.id.0).unwrap() -= 1;
+        }
+        Some(r)
     }
 }
 
@@ -182,9 +354,9 @@ impl Default for Budgets {
 
 /// A batch-building policy.
 pub trait Scheduler: Send {
-    /// Build the next iteration's batch. May admit from `q.waiting` into
-    /// `q.running` (subject to `admit`). Returns an empty batch if there
-    /// is nothing to do.
+    /// Build the next iteration's batch. May admit waiting requests into
+    /// the running set (subject to `admit`). Returns an empty batch if
+    /// there is nothing to do.
     fn build_batch(&mut self, q: &mut Queues, budgets: &Budgets, admit: &mut AdmitFn) -> Batch;
 
     fn name(&self) -> &'static str;
@@ -268,7 +440,7 @@ impl Scheduler for StageLevelScheduler {
         // (1) ongoing decodes
         if self.mask.decode {
             let mut n_d = 0;
-            for r in q.running.iter() {
+            for r in q.running() {
                 if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
                     batch.items.push((
                         r.spec.id,
@@ -282,7 +454,7 @@ impl Scheduler for StageLevelScheduler {
 
         // (2) ongoing prefills (chunked within budget)
         if self.mask.prefill {
-            for r in q.running.iter() {
+            for r in q.running() {
                 if r.stage() == Stage::Prefill && n_t < budgets.token_budget {
                     let chunk = r.prefill_remaining().min(budgets.token_budget - n_t);
                     if chunk == 0 {
@@ -297,30 +469,24 @@ impl Scheduler for StageLevelScheduler {
             }
             // new prefill-ready requests from the waiting queue
             while n_t < budgets.token_budget {
-                let Some(pos) = q
-                    .waiting
-                    .iter()
-                    .position(|r| r.stage() == Stage::Prefill)
-                else {
-                    break;
-                };
-                if !admit(&q.waiting[pos]) {
+                let Some(r) = q.peek_waiting(|s| s == Stage::Prefill) else { break };
+                if !admit(r) {
                     break; // cache pressure: stop admitting
                 }
-                let r = q.waiting.remove(pos).unwrap();
+                let r = q.pop_waiting(|s| s == Stage::Prefill).unwrap();
                 let chunk = r.prefill_remaining().min(budgets.token_budget - n_t);
                 has_prefill = true;
                 batch
                     .items
                     .push((r.spec.id, TaskWork::PrefillChunk { ctx: r.prefilled, tokens: chunk }));
                 n_t += chunk;
-                q.running.push(r);
+                q.push_running(r);
             }
         }
 
         // (3) encode only when no prefill work is in flight (Alg. 1 line 20)
         if self.mask.encode && !has_prefill {
-            for r in q.running.iter() {
+            for r in q.running() {
                 if r.stage() == Stage::Encode && n_e < budgets.image_budget {
                     let images = r.encode_remaining().min(budgets.image_budget - n_e);
                     batch.items.push((r.spec.id, TaskWork::Encode { images }));
@@ -328,26 +494,20 @@ impl Scheduler for StageLevelScheduler {
                 }
             }
             while n_e < budgets.image_budget {
-                let Some(pos) = q
-                    .waiting
-                    .iter()
-                    .position(|r| r.stage() == Stage::Encode)
-                else {
-                    break;
-                };
-                if !admit(&q.waiting[pos]) {
+                let Some(r) = q.peek_waiting(|s| s == Stage::Encode) else { break };
+                if !admit(r) {
                     break;
                 }
-                let r = q.waiting.remove(pos).unwrap();
+                let r = q.pop_waiting(|s| s == Stage::Encode).unwrap();
                 let images = r.encode_remaining().min(budgets.image_budget - n_e);
                 batch.items.push((r.spec.id, TaskWork::Encode { images }));
                 n_e += images;
-                q.running.push(r);
+                q.push_running(r);
             }
         }
 
         // (4) migrate-stage requests ride along in every batch
-        for r in q.running.iter() {
+        for r in q.running() {
             if r.migrating {
                 batch.items.push((r.spec.id, TaskWork::Migrate));
             }
@@ -386,20 +546,20 @@ impl Scheduler for PrefillFirstScheduler {
         let mut batch = Batch::default();
 
         // admit waiting requests FCFS while capacity lasts
-        while let Some(front) = q.waiting.front() {
+        while let Some(front) = q.peek_waiting(|_| true) {
             if !self.mask.serves(front.stage()) || front.stage() == Stage::Decode {
                 break;
             }
             if !admit(front) {
                 break;
             }
-            let r = q.waiting.pop_front().unwrap();
-            q.running.push(r);
+            let r = q.pop_waiting(|_| true).unwrap();
+            q.push_running(r);
         }
 
         // full encode+prefill for every non-decode running request
         let mut tokens = 0usize;
-        for r in q.running.iter() {
+        for r in q.running() {
             match r.stage() {
                 Stage::Encode if self.mask.encode => {
                     // serial "ep": encode all images AND the full prefill
@@ -431,7 +591,7 @@ impl Scheduler for PrefillFirstScheduler {
         // prefill-first: decodes run only when no prefill work was scheduled
         if batch.is_empty() && self.mask.decode {
             let mut n_d = 0;
-            for r in q.running.iter() {
+            for r in q.running() {
                 if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
                     batch
                         .items
@@ -440,7 +600,7 @@ impl Scheduler for PrefillFirstScheduler {
                 }
             }
         }
-        for r in q.running.iter() {
+        for r in q.running() {
             if r.migrating {
                 batch.items.push((r.spec.id, TaskWork::Migrate));
             }
@@ -476,7 +636,7 @@ impl Scheduler for DecodeFirstScheduler {
         let mut batch = Batch::default();
         if self.mask.decode {
             let mut n_d = 0;
-            for r in q.running.iter() {
+            for r in q.running() {
                 if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
                     batch
                         .items
@@ -487,7 +647,7 @@ impl Scheduler for DecodeFirstScheduler {
         }
         // ongoing encode/prefill work continues
         let mut busy = false;
-        for r in q.running.iter() {
+        for r in q.running() {
             match r.stage() {
                 Stage::Encode if self.mask.encode => {
                     batch
@@ -507,13 +667,11 @@ impl Scheduler for DecodeFirstScheduler {
         }
         // admit one new request per iteration
         if !busy {
-            if let Some(pos) = q
-                .waiting
-                .iter()
-                .position(|r| self.mask.serves(r.stage()) && r.stage() != Stage::Decode)
-            {
-                if admit(&q.waiting[pos]) {
-                    let r = q.waiting.remove(pos).unwrap();
+            let mask = self.mask;
+            let served = |s: Stage| mask.serves(s) && s != Stage::Decode;
+            if let Some(r) = q.peek_waiting(served) {
+                if admit(r) {
+                    let r = q.pop_waiting(served).unwrap();
                     match r.stage() {
                         Stage::Encode => {
                             batch
@@ -531,11 +689,11 @@ impl Scheduler for DecodeFirstScheduler {
                         }
                         _ => {}
                     }
-                    q.running.push(r);
+                    q.push_running(r);
                 }
             }
         }
-        for r in q.running.iter() {
+        for r in q.running() {
             if r.migrating {
                 batch.items.push((r.spec.id, TaskWork::Migrate));
             }
@@ -573,7 +731,7 @@ impl Scheduler for ChunkedPrefillScheduler {
 
         if self.mask.decode {
             let mut n_d = 0;
-            for r in q.running.iter() {
+            for r in q.running() {
                 if r.stage() == Stage::Decode && n_d < budgets.max_decode_batch {
                     batch
                         .items
@@ -585,28 +743,24 @@ impl Scheduler for ChunkedPrefillScheduler {
         }
 
         // admit so there is chunkable work
+        let mask = self.mask;
+        let served = |s: Stage| mask.serves(s) && s != Stage::Decode;
         while q
-            .running
+            .running()
             .iter()
             .filter(|r| matches!(r.stage(), Stage::Encode | Stage::Prefill))
             .count()
             < 2
         {
-            let Some(pos) = q
-                .waiting
-                .iter()
-                .position(|r| self.mask.serves(r.stage()) && r.stage() != Stage::Decode)
-            else {
-                break;
-            };
-            if !admit(&q.waiting[pos]) {
+            let Some(r) = q.peek_waiting(served) else { break };
+            if !admit(r) {
                 break;
             }
-            let r = q.waiting.remove(pos).unwrap();
-            q.running.push(r);
+            let r = q.pop_waiting(served).unwrap();
+            q.push_running(r);
         }
 
-        for r in q.running.iter() {
+        for r in q.running() {
             if n_t >= budgets.token_budget {
                 break;
             }
@@ -640,7 +794,7 @@ impl Scheduler for ChunkedPrefillScheduler {
                 _ => {}
             }
         }
-        for r in q.running.iter() {
+        for r in q.running() {
             if r.migrating {
                 batch.items.push((r.spec.id, TaskWork::Migrate));
             }
@@ -733,8 +887,8 @@ mod tests {
         let mut q = Queues::default();
         let mut d = ReqState::new(spec(1, 0, 4, 10));
         d.prefilled = 4; // decoding
-        q.running.push(d);
-        q.waiting.push_back(ReqState::new(spec(2, 1, 8, 4))); // new mm request
+        q.push_running(d);
+        q.push_waiting(ReqState::new(spec(2, 1, 8, 4))); // new mm request
         let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
         assert_eq!(b.num_decode(), 1);
         // no prefill-ready request (img not encoded) -> encode work scheduled
@@ -748,8 +902,8 @@ mod tests {
         let mut q = Queues::default();
         let mut p = ReqState::new(spec(1, 0, 100, 4));
         p.prefilled = 10; // mid-prefill
-        q.running.push(p);
-        q.waiting.push_back(ReqState::new(spec(2, 1, 8, 4)));
+        q.push_running(p);
+        q.push_waiting(ReqState::new(spec(2, 1, 8, 4)));
         let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
         assert!(b.has_prefill());
         assert_eq!(b.num_encode_images(), 0, "encode must wait behind prefill");
@@ -763,9 +917,9 @@ mod tests {
             let mut r = ReqState::new(spec(i, 0, 400, 4));
             r.prefilled = if i == 0 { 1 } else { 0 }; // one mid-prefill
             if i == 0 {
-                q.running.push(r);
+                q.push_running(r);
             } else {
-                q.waiting.push_back(r);
+                q.push_waiting(r);
             }
         }
         let budgets = Budgets { token_budget: 512, ..Default::default() };
@@ -778,7 +932,7 @@ mod tests {
         let mut s = StageLevelScheduler::new(StageMask::E);
         let mut q = Queues::default();
         for i in 0..5 {
-            q.waiting.push_back(ReqState::new(spec(i, 3, 8, 4)));
+            q.push_waiting(ReqState::new(spec(i, 3, 8, 4)));
         }
         let budgets = Budgets { image_budget: 7, ..Default::default() };
         let b = s.build_batch(&mut q, &budgets, &mut *always_admit());
@@ -792,8 +946,8 @@ mod tests {
         let mut q = Queues::default();
         let mut d = ReqState::new(spec(1, 0, 4, 10));
         d.prefilled = 4;
-        q.running.push(d);
-        q.waiting.push_back(ReqState::new(spec(2, 0, 64, 4)));
+        q.push_running(d);
+        q.push_waiting(ReqState::new(spec(2, 0, 64, 4)));
         let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
         assert!(b.has_prefill());
         assert_eq!(b.num_decode(), 0, "vLLM-v0 stalls decodes during prefill");
@@ -805,8 +959,8 @@ mod tests {
         let mut q = Queues::default();
         let mut d = ReqState::new(spec(1, 0, 4, 10));
         d.prefilled = 4;
-        q.running.push(d);
-        q.waiting.push_back(ReqState::new(spec(2, 0, 64, 4)));
+        q.push_running(d);
+        q.push_waiting(ReqState::new(spec(2, 0, 64, 4)));
         let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
         assert_eq!(b.num_decode(), 1, "decodes continue");
         assert!(b.has_prefill(), "one admission co-batched");
@@ -818,8 +972,8 @@ mod tests {
         let mut q = Queues::default();
         let mut d = ReqState::new(spec(1, 0, 4, 10));
         d.prefilled = 4;
-        q.running.push(d);
-        q.waiting.push_back(ReqState::new(spec(2, 2, 600, 4)));
+        q.push_running(d);
+        q.push_waiting(ReqState::new(spec(2, 2, 600, 4)));
         let budgets = Budgets { token_budget: 128, ..Default::default() };
         let b = s.build_batch(&mut q, &budgets, &mut *always_admit());
         assert_eq!(b.num_decode(), 1);
@@ -831,13 +985,13 @@ mod tests {
     fn admission_denial_stops_admitting() {
         let mut s = StageLevelScheduler::new(StageMask::EPD);
         let mut q = Queues::default();
-        q.waiting.push_back(ReqState::new(spec(1, 0, 32, 4)));
-        q.waiting.push_back(ReqState::new(spec(2, 0, 32, 4)));
+        q.push_waiting(ReqState::new(spec(1, 0, 32, 4)));
+        q.push_waiting(ReqState::new(spec(2, 0, 32, 4)));
         let mut deny = |_: &ReqState| false;
         let b = s.build_batch(&mut q, &Budgets::default(), &mut deny);
         assert!(b.is_empty());
-        assert_eq!(q.waiting.len(), 2);
-        assert!(q.running.is_empty());
+        assert_eq!(q.waiting_len(), 2);
+        assert!(q.running_is_empty());
     }
 
     #[test]
@@ -854,7 +1008,7 @@ mod tests {
 
         let mut s = StageLevelScheduler::new(StageMask::EPD);
         let mut q = Queues::default();
-        q.waiting.push_back(r);
+        q.push_waiting(r);
         let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
         assert_eq!(b.num_encode_images(), 0, "encode skipped on cache hit");
         let (_, w) = &b.items[0];
@@ -886,13 +1040,111 @@ mod tests {
     }
 
     #[test]
+    fn queues_waiting_is_global_fcfs_per_predicate() {
+        // interleave encode- and prefill-stage arrivals; selection must
+        // match the old linear `position(|r| r.stage() == S)` scans:
+        // per-stage order is arrival order, and the any-stage front is
+        // the global FCFS front
+        let mut q = Queues::default();
+        let mk = |id: u64, images: usize| ReqState::new(spec(id, images, 8, 2));
+        q.push_waiting(mk(1, 1)); // encode
+        q.push_waiting(mk(2, 0)); // prefill
+        q.push_waiting(mk(3, 1)); // encode
+        q.push_waiting(mk(4, 0)); // prefill
+        assert_eq!(q.waiting_len(), 4);
+        assert_eq!(q.peek_waiting(|_| true).unwrap().spec.id, RequestId(1));
+        assert_eq!(
+            q.peek_waiting(|s| s == Stage::Prefill).unwrap().spec.id,
+            RequestId(2)
+        );
+        assert_eq!(q.pop_waiting(|s| s == Stage::Prefill).unwrap().spec.id, RequestId(2));
+        assert_eq!(q.pop_waiting(|_| true).unwrap().spec.id, RequestId(1));
+        assert_eq!(q.pop_waiting(|_| true).unwrap().spec.id, RequestId(3));
+        assert!(q.pop_waiting(|s| s == Stage::Encode).is_none());
+        assert_eq!(q.pop_waiting(|_| true).unwrap().spec.id, RequestId(4));
+        assert!(q.waiting_is_empty());
+    }
+
+    #[test]
+    fn queues_running_index_survives_ordered_removal() {
+        let mut q = Queues::default();
+        for i in 0..6 {
+            q.push_running(ReqState::new(spec(i, 0, 8, 2)));
+        }
+        // remove from the middle: order of the rest is preserved and the
+        // id -> slot index stays exact
+        let r = q.remove_running(RequestId(2)).unwrap();
+        assert_eq!(r.spec.id, RequestId(2));
+        let order: Vec<u64> = q.running().iter().map(|r| r.spec.id.0).collect();
+        assert_eq!(order, vec![0, 1, 3, 4, 5]);
+        for id in [0u64, 1, 3, 4, 5] {
+            assert_eq!(q.find_running(RequestId(id)).unwrap().spec.id.0, id);
+            assert_eq!(q.get_running(RequestId(id)).unwrap().spec.id.0, id);
+        }
+        assert!(q.find_running(RequestId(2)).is_none());
+        assert!(q.remove_running(RequestId(2)).is_none());
+        assert_eq!(q.remove_running(RequestId(5)).unwrap().spec.id.0, 5);
+        assert_eq!(q.remove_running(RequestId(0)).unwrap().spec.id.0, 0);
+        assert_eq!(q.running_len(), 3);
+        assert_eq!(q.total(), 3);
+    }
+
+    #[test]
+    fn queues_reroute_unserved_keeps_unroutable_requests_in_place() {
+        let mut q = Queues::default();
+        q.push_waiting(ReqState::new(spec(1, 1, 8, 2))); // encode
+        q.push_waiting(ReqState::new(spec(2, 0, 8, 2))); // prefill
+        q.push_waiting(ReqState::new(spec(3, 1, 8, 2))); // encode
+        let mut routed = Vec::new();
+        // this instance no longer serves encode; request 1 routes away,
+        // request 3 cannot (route hands it back) and keeps its position
+        q.reroute_unserved(
+            |s| s == Stage::Prefill,
+            |r| {
+                if r.spec.id.0 == 1 {
+                    routed.push(r.spec.id.0);
+                    None
+                } else {
+                    Some(r)
+                }
+            },
+        );
+        assert_eq!(routed, vec![1]);
+        assert_eq!(q.waiting_len(), 2);
+        assert_eq!(q.peek_waiting(|_| true).unwrap().spec.id, RequestId(2));
+        assert_eq!(q.peek_waiting(|s| s == Stage::Encode).unwrap().spec.id, RequestId(3));
+    }
+
+    #[test]
+    fn queues_reroute_unserved_offers_in_global_fifo_order() {
+        // a flip that drops two stages at once must offer the stranded
+        // requests in arrival order, not stage-grouped order — stateful
+        // (round-robin) routers assign peers by offer order
+        let mut q = Queues::default();
+        q.push_waiting(ReqState::new(spec(1, 1, 8, 2))); // encode
+        q.push_waiting(ReqState::new(spec(2, 0, 8, 2))); // prefill
+        q.push_waiting(ReqState::new(spec(3, 1, 8, 2))); // encode
+        q.push_waiting(ReqState::new(spec(4, 0, 8, 2))); // prefill
+        let mut offered = Vec::new();
+        q.reroute_unserved(
+            |s| s == Stage::Decode, // serves decode only: E and P both strand
+            |r| {
+                offered.push(r.spec.id.0);
+                None
+            },
+        );
+        assert_eq!(offered, vec![1, 2, 3, 4], "arrival order, not stage order");
+        assert!(q.waiting_is_empty());
+    }
+
+    #[test]
     fn e_only_instance_never_schedules_lm_work() {
         let mut s = StageLevelScheduler::new(StageMask::E);
         let mut q = Queues::default();
-        q.waiting.push_back(ReqState::new(spec(1, 1, 32, 4)));
+        q.push_waiting(ReqState::new(spec(1, 1, 32, 4)));
         let mut d = ReqState::new(spec(2, 0, 4, 10));
         d.prefilled = 4;
-        q.running.push(d); // decode-stage request stuck here (mis-routed)
+        q.push_running(d); // decode-stage request stuck here (mis-routed)
         let b = s.build_batch(&mut q, &Budgets::default(), &mut *always_admit());
         assert_eq!(b.num_decode(), 0);
         assert!(!b.has_prefill());

@@ -6,6 +6,7 @@
 //! independently unit-tested.
 
 pub mod cli;
+pub mod fxhash;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -1,0 +1,114 @@
+//! Golden determinism suite — the hot-path refactor's safety net.
+//!
+//! For every scheduling policy × cluster shape, a seeded 120-request
+//! trace is simulated twice and its [`SimResult::digest`] is
+//! (a) asserted identical across the two runs (run-to-run determinism —
+//! the Fx-hashed maps make iteration order a pure function of the
+//! insertion sequence, so this holds across processes and machines too),
+//! and (b) compared against the digests committed in
+//! `tests/golden/sim_digests.json`. Any engine change that alters
+//! scheduling behaviour on these traces fails here; pure perf refactors
+//! must keep every digest bit-identical.
+//!
+//! Regenerating the golden file (after an *intentional* behaviour
+//! change — say why in the commit message):
+//!
+//! ```text
+//! GOLDEN_WRITE=1 cargo test --test golden_determinism -- --nocapture
+//! ```
+//!
+//! Entries missing from the committed file are reported (and printed so
+//! CI logs carry the values) but do not fail the test — that is how the
+//! file gets seeded on a machine/toolchain that can actually execute the
+//! suite.
+
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig, SimResult};
+use hydrainfer::util::json;
+use hydrainfer::workload::{Dataset, PoissonGenerator};
+
+const SHAPES: [&str; 4] = ["8EPD", "1E3P4D", "2EP6D", "1E1P1D"];
+const TRACE_N: usize = 120;
+const TRACE_RATE: f64 = 6.0;
+const TRACE_SEED: u64 = 42;
+
+fn run(cluster: &str, policy: Policy) -> SimResult {
+    let model = ModelSpec::llava15_7b();
+    let cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse(cluster).unwrap(),
+        policy,
+        SloSpec::new(0.25, 0.04),
+    );
+    let reqs = PoissonGenerator::new(Dataset::textcaps(), TRACE_RATE, TRACE_SEED)
+        .generate(&model, TRACE_N);
+    simulate(&cfg, &reqs)
+}
+
+#[test]
+fn seeded_digests_are_deterministic_and_match_the_golden_file() {
+    let committed = json::parse(include_str!("golden/sim_digests.json"))
+        .expect("golden file parses");
+    let digests = committed.get("digests").and_then(|d| d.as_obj()).unwrap_or(&[]);
+    let lookup = |key: &str| {
+        digests
+            .iter()
+            .find(|(k, _)| k.as_str() == key)
+            .and_then(|(_, v)| v.as_str())
+            .map(|s| s.to_string())
+    };
+
+    let mut computed: Vec<(String, String)> = Vec::new();
+    let mut missing = 0usize;
+    for policy in Policy::ALL {
+        for cluster in SHAPES {
+            let key = format!("{}/{}", policy.name(), cluster);
+            let a = run(cluster, policy);
+            let b = run(cluster, policy);
+            assert_eq!(
+                a.digest(),
+                b.digest(),
+                "{key}: seeded runs must be bit-identical"
+            );
+            assert!(a.events > 0 && a.metrics.num_finished() > 0, "{key}: trace ran");
+            let hex = format!("{:016x}", a.digest());
+            match lookup(&key) {
+                Some(want) => assert_eq!(
+                    hex, want,
+                    "{key}: behaviour diverged from the committed golden digest — if \
+                     intentional, regenerate with GOLDEN_WRITE=1"
+                ),
+                None => missing += 1,
+            }
+            computed.push((key, hex));
+        }
+    }
+
+    if missing > 0 || std::env::var_os("GOLDEN_WRITE").is_some() {
+        let body = render_golden(&computed);
+        println!("{missing} golden digests missing; computed values:\n{body}");
+        if std::env::var_os("GOLDEN_WRITE").is_some() {
+            std::fs::write("tests/golden/sim_digests.json", body)
+                .expect("write golden file");
+            println!("wrote tests/golden/sim_digests.json");
+        }
+    }
+}
+
+fn render_golden(computed: &[(String, String)]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(
+        "  \"_doc\": \"Golden SimResult digests for seeded traces (policy x cluster; \
+         textcaps rate=6 seed=42 n=120, default SimConfig). Regenerate ONLY on an \
+         intentional behaviour change: GOLDEN_WRITE=1 cargo test --test \
+         golden_determinism\",\n",
+    );
+    s.push_str("  \"digests\": {\n");
+    for (i, (k, v)) in computed.iter().enumerate() {
+        let comma = if i + 1 == computed.len() { "" } else { "," };
+        s.push_str(&format!("    \"{k}\": \"{v}\"{comma}\n"));
+    }
+    s.push_str("  }\n}\n");
+    s
+}

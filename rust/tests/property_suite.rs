@@ -439,15 +439,15 @@ fn prop_stage_level_batch_respects_budgets() {
                     1 => {
                         r.encoded_images = imgs;
                         r.prefilled = r.spec.prefill_tokens() / 2;
-                        q.running.push(r);
+                        q.push_running(r);
                     }
                     2 => {
                         r.encoded_images = imgs;
                         r.prefilled = r.spec.prefill_tokens();
                         r.decoded = 1;
-                        q.running.push(r);
+                        q.push_running(r);
                     }
-                    _ => q.waiting.push_back(r),
+                    _ => q.push_waiting(r),
                 }
             }
             let budgets = Budgets {
