@@ -102,7 +102,7 @@ def make_golden(params):
     """
     import numpy as np
 
-    from .model import decode_step, encode, prefill_mm
+    from .model import decode_step, encode, prefill_kv, prefill_mm
 
     c = CFG
     h, t, l = c["hidden"], c["img_tokens"], c["layers"]
@@ -149,6 +149,28 @@ def make_golden(params):
         "argmax": int(dl[0].argmax()),
         "k_new_sum": float(kn.sum()),
         "v_new_sum": float(vn.sum()),
+    }
+
+    # prefill_kv_s16 (resumed prefill): prefix = 32 ramp-filled pool rows
+    # behind an identity block table, suffix = tokens 40..52 — exactly the
+    # artifact the rust-side plan picks for a 12-token suffix
+    kv_ids = np.zeros((1, 16), np.int32)
+    kv_ids[0, :12] = np.arange(40, 52)
+    rl, rk, rv = prefill_kv(
+        params,
+        kv_ids,
+        np.int32(12),
+        np.int32(32),
+        pool,
+        -pool,
+        bt,
+    )
+    rl, rk, rv = np.asarray(rl), np.asarray(rk), np.asarray(rv)
+    out["prefill_kv_s16"] = {
+        "logits_head": [float(x) for x in rl[:8]],
+        "argmax": int(rl.argmax()),
+        "k_sfx_sum": float(rk[:, :12].sum()),
+        "v_sfx_sum": float(rv[:, :12].sum()),
     }
     return out
 

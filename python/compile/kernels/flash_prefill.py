@@ -64,3 +64,75 @@ def flash_prefill(q, k, v, valid_len, *, block_q: int = 16):
         out_shape=jax.ShapeDtypeStruct((s, nh, dh), q.dtype),
         interpret=True,
     )(q, k, v, valid)
+
+
+def _flash_prefill_kv_kernel(
+    q_ref, pk_ref, pv_ref, sk_ref, sv_ref, lens_ref, out_ref, *, bq: int
+):
+    qb = pl.program_id(0)
+    q = q_ref[:, 0, :]  # [BQ, dh]  suffix queries
+    pk = pk_ref[:, 0, :]  # [P, dh]  cached-prefix strip (block-table order)
+    pv = pv_ref[:, 0, :]
+    sk = sk_ref[:, 0, :]  # [S, dh]  suffix keys
+    sv = sv_ref[:, 0, :]
+    p_total, dh = pk.shape
+    s_total = sk.shape[0]
+    p_len = lens_ref[0]
+    s_len = lens_ref[1]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    qi = qb * bq + jnp.arange(bq)  # suffix-local query positions
+    # prefix keys: global positions [0, p_len) — always before every query
+    pj = jnp.arange(p_total)
+    ps = (q @ pk.T) * scale  # [BQ, P]
+    ps = jnp.where((pj[None, :] < p_len), ps, -1e30)
+    # suffix keys: global position p_len + j — causal against p_len + qi,
+    # which reduces to the suffix-local comparison j <= qi
+    sj = jnp.arange(s_total)
+    ss = (q @ sk.T) * scale  # [BQ, S]
+    ss = jnp.where((sj[None, :] <= qi[:, None]) & (sj[None, :] < s_len), ss, -1e30)
+    scores = jnp.concatenate([ps, ss], axis=1)  # joint softmax over both
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = p @ jnp.concatenate([pv, sv], axis=0)  # [BQ, dh]
+    rowvalid = (qi < s_len)[:, None]
+    out_ref[:, 0, :] = jnp.where(rowvalid, out, 0.0)
+
+
+def flash_prefill_kv(
+    q, prefix_k, prefix_v, sfx_k, sfx_v, prefix_len, suffix_len, *, block_q: int = 16
+):
+    """Resumed-prefill attention: suffix queries over [cached prefix ; suffix].
+
+    q, sfx_k, sfx_v [S,nh,dh] (padded suffix); prefix_k/prefix_v [P,nh,dh]
+    (the pool strip gathered in block-table order — rows >= prefix_len are
+    garbage and masked). Query i sits at global position prefix_len + i, so
+    it attends every valid prefix key plus suffix keys j <= i; suffix rows
+    >= suffix_len are masked as keys and zeroed as outputs. S must be a
+    multiple of block_q.
+    """
+    s, nh, dh = q.shape
+    p = prefix_k.shape[0]
+    assert s % block_q == 0, (s, block_q)
+    assert prefix_k.shape == prefix_v.shape == (p, nh, dh)
+    lens = jnp.stack(
+        [
+            jnp.asarray(prefix_len, dtype=jnp.int32).reshape(()),
+            jnp.asarray(suffix_len, dtype=jnp.int32).reshape(()),
+        ]
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_prefill_kv_kernel, bq=block_q),
+        grid=(s // block_q, nh),
+        in_specs=[
+            pl.BlockSpec((block_q, 1, dh), lambda qb, h: (qb, h, 0)),
+            pl.BlockSpec((p, 1, dh), lambda qb, h: (0, h, 0)),
+            pl.BlockSpec((p, 1, dh), lambda qb, h: (0, h, 0)),
+            pl.BlockSpec((s, 1, dh), lambda qb, h: (0, h, 0)),
+            pl.BlockSpec((s, 1, dh), lambda qb, h: (0, h, 0)),
+            pl.BlockSpec((2,), lambda qb, h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, dh), lambda qb, h: (qb, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, nh, dh), q.dtype),
+        interpret=True,
+    )(q, prefix_k, prefix_v, sfx_k, sfx_v, lens)

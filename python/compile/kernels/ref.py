@@ -56,6 +56,31 @@ def ref_flash_prefill(q, k, v, valid_len):
     return jnp.where(rowvalid, out, 0.0)
 
 
+def ref_flash_prefill_kv(q, prefix_k, prefix_v, sfx_k, sfx_v, prefix_len, suffix_len):
+    """Resumed-prefill attention: suffix queries over [prefix ; suffix].
+
+    q, sfx_k, sfx_v: [S, nh, dh] padded suffix; prefix_k/prefix_v: [P, nh, dh]
+    with rows >= prefix_len garbage. Query i has global position
+    prefix_len + i: it attends every prefix key < prefix_len plus suffix
+    keys j <= i (j < suffix_len). Rows >= suffix_len zeroed.
+    """
+    s, nh, dh = q.shape
+    p = prefix_k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    k = jnp.concatenate([prefix_k, sfx_k], axis=0).transpose(1, 0, 2)  # [nh,P+S,dh]
+    v = jnp.concatenate([prefix_v, sfx_v], axis=0).transpose(1, 0, 2)
+    qt = q.transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qt, k) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(p + s)[None, :]
+    prefix_ok = (j < p) & (j < prefix_len)
+    suffix_ok = (j >= p) & (j - p <= i) & (j - p < suffix_len)
+    scores = jnp.where((prefix_ok | suffix_ok)[None], scores, -1e30)
+    out = jnp.einsum("hqk,hkd->hqd", _softmax(scores), v).transpose(1, 0, 2)
+    rowvalid = (jnp.arange(s) < suffix_len)[:, None, None]
+    return jnp.where(rowvalid, out, 0.0)
+
+
 def ref_paged_attention(q, k_pool, v_pool, block_tables, seq_lens, new_k, new_v):
     """Single-token decode attention over a paged KV pool.
 

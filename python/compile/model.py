@@ -19,7 +19,10 @@ Conventions shared with the rust side (see artifacts/manifest.json):
     prefix only;
   * decode seq_lens[b] counts tokens already in the pool; the new token
     sits at position seq_lens[b] and its KV is returned for the rust-side
-    slot write (mirroring the cache_write kernel semantics).
+    slot write (mirroring the cache_write kernel semantics);
+  * prefill_kv (resumed prefill) reads a block-aligned cached prefix from
+    the paged pool via a block table and computes ONLY the suffix: buckets
+    size the suffix, and the returned KV covers suffix rows only.
 """
 
 from __future__ import annotations
@@ -30,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernels.patch_embed import patch_embed
-from .kernels.flash_prefill import flash_prefill
+from .kernels.flash_prefill import flash_prefill, flash_prefill_kv
 from .kernels.paged_attention import paged_attention_gathered
 
 # ---- model configuration (single source of truth; exported to manifest) ----
@@ -188,6 +191,47 @@ def prefill_txt(params, token_ids, txt_len):
     return _lm_prefill(params, embeds, txt_len)
 
 
+def prefill_kv(params, token_ids, suffix_len, prefix_len, k_pool, v_pool, block_table):
+    """Resumed (prefill-with-prefix) prefill: compute only the prompt SUFFIX
+    on top of a cached KV prefix already living in the paged pool.
+
+    token_ids [1,S_sfx] int32 (padded suffix token ids); suffix_len scalar
+    (valid suffix tokens); prefix_len scalar (positions already cached —
+    block-aligned by the rust side, and covering the image region when the
+    prompt is multimodal, so the suffix is pure text and needs no image
+    embeds); k_pool/v_pool [L,NB,BLK,H]; block_table [1,MAXB] int32 with
+    the prefix rows at positions [0, prefix_len) in block-table order.
+
+    -> (logits [V] of the last valid suffix token,
+        k [L,S_sfx,H], v [L,S_sfx,H] — SUFFIX rows only; the rust side
+        scatters them at positions [prefix_len, prefix_len+suffix_len))
+    """
+    c = CFG
+    s = token_ids.shape[1]
+    h, nh, dh = c["hidden"], c["heads"], c["head_dim"]
+    x = params["tok_emb"][token_ids[0]] + params["pos_emb"][prefix_len + jnp.arange(s)]
+    bt = block_table[0]
+    ks, vs = [], []
+    for li, blk in enumerate(params["blocks"]):
+        xn = _ln(x, blk["ln1_g"], blk["ln1_b"])
+        q = (xn @ blk["wq"]).reshape(s, nh, dh)
+        k = (xn @ blk["wk"]).reshape(s, nh, dh)
+        v = (xn @ blk["wv"]).reshape(s, nh, dh)
+        ks.append(k.reshape(s, h))
+        vs.append(v.reshape(s, h))
+        # block-table gather outside the kernel (same rationale as decode:
+        # one XLA gather == the HBM->VMEM DMA a BlockSpec would issue)
+        gk = k_pool[li][bt].reshape(-1, nh, dh)  # [MAXB*BLK, nh, dh]
+        gv = v_pool[li][bt].reshape(-1, nh, dh)
+        attn = flash_prefill_kv(q, gk, gv, k, v, prefix_len, suffix_len).reshape(s, h)
+        x = x + attn @ blk["wo"]
+        x = x + _ffn(_ln(x, blk["ln2_g"], blk["ln2_b"]), blk)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    last = jax.lax.dynamic_slice(x, (suffix_len - 1, 0), (1, h))[0]
+    logits = last @ params["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
 # --------------------------------------------------------------------------
 # decode
 # --------------------------------------------------------------------------
@@ -253,6 +297,18 @@ def make_entries(params):
         entries[f"prefill_txt_s{s}"] = (
             functools.partial(prefill_txt, params),
             (sds((1, s), i32), sds((), i32)),
+        )
+    # resumed prefill (prefill-with-prefix): buckets size the SUFFIX, so a
+    # request whose cached prefix covers most of the prompt dispatches a
+    # much smaller artifact than a full prefill would
+    for s in (16, 32, 64):
+        entries[f"prefill_kv_s{s}"] = (
+            functools.partial(prefill_kv, params),
+            (
+                sds((1, s), i32), sds((), i32), sds((), i32),
+                sds((l, nb, blk, h), f32), sds((l, nb, blk, h), f32),
+                sds((1, maxb), i32),
+            ),
         )
     for b in (1, 2, 4, 8):
         entries[f"decode_b{b}"] = (

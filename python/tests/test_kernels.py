@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref
 from compile.kernels.cache_write import cache_write
-from compile.kernels.flash_prefill import flash_prefill
+from compile.kernels.flash_prefill import flash_prefill, flash_prefill_kv
 from compile.kernels.paged_attention import paged_attention, paged_attention_gathered
 from compile.kernels.patch_embed import patch_embed
 
@@ -98,6 +98,74 @@ def test_flash_prefill_padding_invariance():
     out2 = np.asarray(flash_prefill(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), valid))
     np.testing.assert_allclose(out1[:valid], out2[:valid], rtol=1e-6)
     assert np.all(out2[valid:] == 0.0)
+
+
+# ----------------------------------------------------------- flash_prefill_kv
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 4),
+    pblocks=st.integers(1, 4),
+    nh=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_flash_prefill_kv_matches_ref(nblocks, pblocks, nh, dh, seed, data):
+    s = 16 * nblocks
+    p = 16 * pblocks
+    prefix_len = data.draw(st.integers(0, p))
+    suffix_len = data.draw(st.integers(1, s))
+    r = _rng(seed)
+    q, sk, sv = (
+        jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32)) for _ in range(3)
+    )
+    pk, pv = (
+        jnp.asarray(r.standard_normal((p, nh, dh), dtype=np.float32)) for _ in range(2)
+    )
+    got = flash_prefill_kv(q, pk, pv, sk, sv, prefix_len, suffix_len)
+    want = ref.ref_flash_prefill_kv(q, pk, pv, sk, sv, prefix_len, suffix_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_kv_equals_full_prefill_rows():
+    """Splitting a sequence at a block boundary and resuming must reproduce
+    the full causal prefill's suffix rows exactly — the law the rust-side
+    resumed-prefill dispatch relies on."""
+    r = _rng(5)
+    s_total, nh, dh, prefix = 64, 2, 8, 32
+    q = jnp.asarray(r.standard_normal((s_total, nh, dh), dtype=np.float32))
+    k = jnp.asarray(r.standard_normal((s_total, nh, dh), dtype=np.float32))
+    v = jnp.asarray(r.standard_normal((s_total, nh, dh), dtype=np.float32))
+    full = np.asarray(flash_prefill(q, k, v, s_total))
+    resumed = np.asarray(
+        flash_prefill_kv(
+            q[prefix:], k[:prefix], v[:prefix], k[prefix:], v[prefix:],
+            prefix, s_total - prefix,
+        )
+    )
+    np.testing.assert_allclose(resumed, full[prefix:], rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_kv_masks_prefix_garbage():
+    """Pool rows >= prefix_len are garbage (unreferenced strip tail) and
+    must not leak into any output row."""
+    r = _rng(6)
+    s, p, nh, dh, prefix_len, suffix_len = 32, 48, 2, 8, 17, 20
+    q = jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    sk = jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    sv = jnp.asarray(r.standard_normal((s, nh, dh), dtype=np.float32))
+    pk = np.asarray(r.standard_normal((p, nh, dh), dtype=np.float32))
+    pv = np.asarray(r.standard_normal((p, nh, dh), dtype=np.float32))
+    base = np.asarray(
+        flash_prefill_kv(q, jnp.asarray(pk), jnp.asarray(pv), sk, sv, prefix_len, suffix_len)
+    )
+    pk[prefix_len:] = 1e6
+    pv[prefix_len:] = -1e6
+    out = np.asarray(
+        flash_prefill_kv(q, jnp.asarray(pk), jnp.asarray(pv), sk, sv, prefix_len, suffix_len)
+    )
+    np.testing.assert_allclose(out, base, rtol=1e-6)
+    assert np.all(out[suffix_len:] == 0.0)
 
 
 # ------------------------------------------------------------ paged_attention

@@ -16,6 +16,7 @@ from compile.model import (
     encode,
     init_params,
     make_entries,
+    prefill_kv,
     prefill_mm,
     prefill_txt,
 )
@@ -150,6 +151,70 @@ def test_decode_batch_rows_independent(params):
     np.testing.assert_allclose(np.asarray(kb)[1], np.asarray(k1)[0], rtol=1e-4, atol=1e-5)
 
 
+def test_prefill_kv_resume_matches_full_prefill(params):
+    """The prefill-with-prefix law: resuming the suffix against a pool
+    filled with the full prefill's prefix KV must reproduce the full
+    prefill's logits AND its suffix KV rows — this is what lets the rust
+    side compute only the suffix when the prefix is cached."""
+    c = CFG
+    t, h = c["img_tokens"], c["hidden"]
+    rng = np.random.default_rng(11)
+    ie = rng.standard_normal((1, t, h)).astype(np.float32) * 0.1
+    n_txt = 28
+    prompt = rng.integers(0, 255, n_txt).astype(np.int32)
+    ids = np.zeros((1, 32), np.int32)
+    ids[0, :n_txt] = prompt
+    logits_full, k, v = prefill_mm(params, ie, ids, n_txt)
+    valid = t + n_txt  # 44 positions
+
+    # cached prefix: 2 blocks = 32 positions (covers the 16 image tokens)
+    prefix = 2 * c["block_size"]
+    k_pool = _fill_pool(k, prefix)
+    v_pool = _fill_pool(v, prefix)
+    bt = np.arange(c["max_blocks_per_seq"], dtype=np.int32).reshape(1, -1)
+    sfx_len = valid - prefix  # 12 text tokens
+    sfx_ids = np.zeros((1, 16), np.int32)
+    sfx_ids[0, :sfx_len] = prompt[prefix - t : n_txt]
+    lg, rk, rv = prefill_kv(
+        params, sfx_ids, np.int32(sfx_len), np.int32(prefix), k_pool, v_pool, bt
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(logits_full), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(rk)[:, :sfx_len], np.asarray(k)[:, prefix:valid], rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(rv)[:, :sfx_len], np.asarray(v)[:, prefix:valid], rtol=2e-4, atol=2e-4
+    )
+
+
+def test_prefill_kv_padding_invariance(params):
+    """Same suffix at different bucket paddings -> identical logits."""
+    c = CFG
+    rng = np.random.default_rng(12)
+    n_txt = 30
+    prompt = rng.integers(0, 255, n_txt).astype(np.int32)
+    ids = np.zeros((1, 32), np.int32)
+    ids[0, :n_txt] = prompt
+    _, k, v = prefill_txt(params, ids, n_txt)
+    prefix = c["block_size"]  # 16
+    k_pool = _fill_pool(k, prefix)
+    v_pool = _fill_pool(v, prefix)
+    bt = np.arange(c["max_blocks_per_seq"], dtype=np.int32).reshape(1, -1)
+    sfx_len = n_txt - prefix
+    short = np.zeros((1, 16), np.int32)
+    long = np.full((1, 32), 99, np.int32)  # poison tail
+    short[0, :sfx_len] = prompt[prefix:]
+    long[0, :sfx_len] = prompt[prefix:]
+    l1, k1, _ = prefill_kv(params, short, np.int32(sfx_len), np.int32(prefix), k_pool, v_pool, bt)
+    l2, k2, _ = prefill_kv(params, long, np.int32(sfx_len), np.int32(prefix), k_pool, v_pool, bt)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(k1)[:, :sfx_len], np.asarray(k2)[:, :sfx_len], rtol=1e-4, atol=1e-5
+    )
+
+
 def test_make_entries_buckets(params):
     entries = make_entries(params)
     names = set(entries)
@@ -157,7 +222,14 @@ def test_make_entries_buckets(params):
     assert {"decode_b1", "decode_b2", "decode_b4", "decode_b8"} <= names
     assert {"prefill_mm_s48", "prefill_mm_s80"} <= names
     assert {"prefill_txt_s32", "prefill_txt_s64"} <= names
+    assert {"prefill_kv_s16", "prefill_kv_s32", "prefill_kv_s64"} <= names
     # example args shape sanity
     fn, args = entries["decode_b8"]
     assert args[0].shape == (8,)
     assert args[2].shape[0] == CFG["layers"]
+    fn, args = entries["prefill_kv_s16"]
+    assert args[0].shape == (1, 16)
+    assert args[3].shape == (
+        CFG["layers"], CFG["pool_blocks"], CFG["block_size"], CFG["hidden"],
+    )
+    assert args[5].shape == (1, CFG["max_blocks_per_seq"])

@@ -196,17 +196,37 @@ impl ContentDirectory {
     /// the lowest instance index (deterministic). `None` when nobody holds
     /// even the first block.
     pub fn best_holder(&mut self, hashes: &[BlockHash], exclude: usize) -> Option<(usize, usize)> {
+        self.best_holder_by(hashes, exclude, |_| 0.0)
+    }
+
+    /// [`ContentDirectory::best_holder`] with a per-instance load score:
+    /// among the **maximal-prefix** holders, prefer the least-loaded one
+    /// (a longer prefix always wins — it replaces more recompute — but a
+    /// hot holder should not also serve every fetch when an equally good
+    /// cold one exists). Ties on load break toward the lowest instance
+    /// index, so a constant `load_of` reproduces `best_holder` exactly.
+    pub fn best_holder_by(
+        &mut self,
+        hashes: &[BlockHash],
+        exclude: usize,
+        load_of: impl Fn(usize) -> f64,
+    ) -> Option<(usize, usize)> {
         let prefix = self.prefix_blocks(hashes);
-        let mut best: Option<(usize, usize)> = None;
+        let mut best: Option<(usize, usize, f64)> = None;
         for (i, &blocks) in prefix.iter().enumerate() {
             if i == exclude || blocks == 0 {
                 continue;
             }
-            if best.map_or(true, |(_, b)| blocks > b) {
-                best = Some((i, blocks));
+            let load = load_of(i);
+            let better = match best {
+                None => true,
+                Some((_, b, bl)) => blocks > b || (blocks == b && load < bl),
+            };
+            if better {
+                best = Some((i, blocks, load));
             }
         }
-        best
+        best.map(|(i, blocks, _)| (i, blocks))
     }
 
     /// All advertised (hash, holder mask) pairs — ground-truth audits.
@@ -278,6 +298,26 @@ mod tests {
         assert_eq!(d.best_holder(&chain, 0), Some((2, 3)), "longest, lowest idx");
         assert_eq!(d.best_holder(&chain, 2), Some((3, 3)));
         assert_eq!(d.best_holder(&[555], 0), None);
+
+        // load-aware variant: among maximal-prefix holders the LEAST
+        // loaded wins, even at a higher index...
+        let loads = [0.0, 0.0, 9.0, 1.0];
+        assert_eq!(
+            d.best_holder_by(&chain, 0, |i| loads[i]),
+            Some((3, 3)),
+            "equal prefixes: least-loaded holder preferred"
+        );
+        // ...but a longer prefix still beats a lower load (it replaces
+        // more recompute than any load imbalance costs)
+        assert_eq!(
+            d.best_holder_by(&chain, 0, |i| if i == 1 { 0.0 } else { 5.0 }),
+            Some((2, 3)),
+            "prefix length dominates load"
+        );
+        // equal prefix AND equal load: lowest index, i.e. best_holder's
+        // deterministic tie-break is the constant-load special case
+        assert_eq!(d.best_holder_by(&chain, 0, |_| 2.5), Some((2, 3)));
+        assert_eq!(d.best_holder_by(&[555], 0, |i| loads[i]), None);
     }
 
     #[test]

@@ -12,7 +12,10 @@ pub mod multistream;
 pub mod ops;
 
 pub use multistream::{parallel_time, sequential_time};
-pub use ops::{decode_cost, encode_cost, iteration_cost, prefill_cost, table2_cost, Op, StageShape};
+pub use ops::{
+    decode_cost, encode_cost, iteration_cost, prefill_cost, prefill_resume_cost, table2_cost, Op,
+    StageShape,
+};
 
 use crate::config::DeviceSpec;
 

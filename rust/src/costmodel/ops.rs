@@ -169,6 +169,21 @@ pub fn prefill_cost(m: &ModelSpec, chunks: &[(usize, usize)]) -> Cost {
     }
 }
 
+/// Resumed (prefill-with-prefix) prefill: `suffix` new tokens on top of
+/// `prefix` tokens whose KV is already cached — the op the
+/// `prefill_kv_s*` artifacts execute and the §4.5 prefix cache enables.
+/// By construction this is exactly one prefill chunk `(prefix, suffix)`:
+/// linear FLOPs scale with the suffix only, while causal attention still
+/// reads the cached prefix KV. The router, fetch pricing, and benches use
+/// this named form so "resumed prefill is cheaper than full prefill" is a
+/// property of the cost model, not an accident of call sites.
+pub fn prefill_resume_cost(m: &ModelSpec, prefix: usize, suffix: usize) -> Cost {
+    if suffix == 0 {
+        return Cost::ZERO;
+    }
+    prefill_cost(m, &[(prefix, suffix)])
+}
+
 /// Decode stage: one token for each request, given per-request context
 /// lengths (tokens already cached).
 pub fn decode_cost(m: &ModelSpec, context_lens: &[usize]) -> Cost {
@@ -329,6 +344,28 @@ mod tests {
         assert_eq!(encode_cost(&m, 0), Cost::ZERO);
         assert_eq!(prefill_cost(&m, &[]), Cost::ZERO);
         assert_eq!(decode_cost(&m, &[]), Cost::ZERO);
+        assert_eq!(prefill_resume_cost(&m, 512, 0), Cost::ZERO);
+    }
+
+    #[test]
+    fn resumed_prefill_is_cheaper_than_full_and_monotone_in_suffix() {
+        let m = ModelSpec::llava15_7b();
+        let d = crate::config::DeviceSpec::h800();
+        let full = crate::costmodel::exec_time(prefill_cost(&m, &[(0, 640)]), &d);
+        let resumed =
+            crate::costmodel::exec_time(prefill_resume_cost(&m, 512, 128), &d);
+        assert!(
+            resumed < full,
+            "128-token suffix on a 512 prefix must beat a 640 full prefill: \
+             {resumed} vs {full}"
+        );
+        // more cached prefix (smaller suffix) never costs more
+        let less_cached = prefill_resume_cost(&m, 256, 384);
+        let more_cached = prefill_resume_cost(&m, 512, 128);
+        assert!(more_cached.flops < less_cached.flops);
+        assert!(more_cached.bytes < less_cached.bytes);
+        // and the chunk form is definitionally one prefill chunk
+        assert_eq!(prefill_resume_cost(&m, 512, 128), prefill_cost(&m, &[(512, 128)]));
     }
 
     #[test]

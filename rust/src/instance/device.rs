@@ -5,11 +5,14 @@
 //! node (DESIGN.md §2).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{DecodeInput, DecodeOut, Engine, PrefillOut, VlmConfig};
+use crate::runtime::{
+    plan_resume, DecodeInput, DecodeOut, Engine, PrefillOut, ResumeOut, ResumePlan, VlmConfig,
+};
 
 /// RPC messages to the device thread.
 pub enum ExecCall {
@@ -21,6 +24,18 @@ pub enum ExecCall {
         tokens: Vec<u32>,
         img_embed: Option<Vec<f32>>,
         reply: Sender<Result<PrefillOut>>,
+    },
+    /// Resumed (prefill-with-prefix) prefill: only the suffix computes;
+    /// the cached prefix is read from the pools via the block table. The
+    /// pools travel as `Arc` so one per-batch snapshot serves every
+    /// resumed request in the batch without re-copying megabytes per item.
+    PrefillResume {
+        plan: ResumePlan,
+        suffix: Vec<u32>,
+        block_table: Vec<u32>,
+        k_pool: Arc<Vec<f32>>,
+        v_pool: Arc<Vec<f32>>,
+        reply: Sender<Result<ResumeOut>>,
     },
     Decode {
         reqs: Vec<DecodeInput>,
@@ -36,11 +51,32 @@ pub enum ExecCall {
 pub struct DeviceHandle {
     tx: Sender<ExecCall>,
     cfg: VlmConfig,
+    /// Resumed-prefill suffix buckets, snapshotted at spawn so instances
+    /// plan dispatches locally without an RPC round-trip (empty = the
+    /// artifacts cannot resume mid-prompt and callers must full-prefill).
+    prefill_kv_buckets: Vec<usize>,
 }
 
 impl DeviceHandle {
     pub fn cfg(&self) -> &VlmConfig {
         &self.cfg
+    }
+
+    /// Can the loaded artifacts ever dispatch a resumed prefill?
+    pub fn supports_prefill_resume(&self) -> bool {
+        !self.prefill_kv_buckets.is_empty()
+    }
+
+    /// Plan a resumed prefill (same bookkeeping as
+    /// [`Engine::plan_prefill_resume`], answered from the snapshotted
+    /// bucket list — no RPC). `None` always means "run a full prefill".
+    pub fn plan_prefill_resume(
+        &self,
+        prefix_len: usize,
+        total_tokens: usize,
+        has_image: bool,
+    ) -> Option<ResumePlan> {
+        plan_resume(&self.prefill_kv_buckets, &self.cfg, prefix_len, total_tokens, has_image)
     }
 
     pub fn encode(&self, images: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
@@ -55,6 +91,21 @@ impl DeviceHandle {
         let (tx, rx) = channel();
         self.tx
             .send(ExecCall::Prefill { tokens, img_embed, reply: tx })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread gone"))?
+    }
+
+    pub fn prefill_resume(
+        &self,
+        plan: ResumePlan,
+        suffix: Vec<u32>,
+        block_table: Vec<u32>,
+        k_pool: Arc<Vec<f32>>,
+        v_pool: Arc<Vec<f32>>,
+    ) -> Result<ResumeOut> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ExecCall::PrefillResume { plan, suffix, block_table, k_pool, v_pool, reply: tx })
             .map_err(|_| anyhow!("device thread gone"))?;
         rx.recv().map_err(|_| anyhow!("device thread gone"))?
     }
@@ -82,13 +133,13 @@ impl DeviceHandle {
 pub fn spawn_device(artifacts_dir: &str) -> Result<(DeviceHandle, JoinHandle<()>)> {
     let dir = artifacts_dir.to_string();
     let (tx, rx): (Sender<ExecCall>, Receiver<ExecCall>) = channel();
-    let (ready_tx, ready_rx) = channel::<Result<VlmConfig>>();
+    let (ready_tx, ready_rx) = channel::<Result<(VlmConfig, Vec<usize>)>>();
     let join = std::thread::Builder::new()
         .name("hydra-device".into())
         .spawn(move || {
             let engine = match Engine::load(&dir) {
                 Ok(e) => {
-                    let _ = ready_tx.send(Ok(*e.cfg()));
+                    let _ = ready_tx.send(Ok((*e.cfg(), e.prefill_kv_buckets().to_vec())));
                     e
                 }
                 Err(e) => {
@@ -104,6 +155,22 @@ pub fn spawn_device(artifacts_dir: &str) -> Result<(DeviceHandle, JoinHandle<()>
                     ExecCall::Prefill { tokens, img_embed, reply } => {
                         let _ = reply.send(engine.prefill(&tokens, img_embed.as_deref()));
                     }
+                    ExecCall::PrefillResume {
+                        plan,
+                        suffix,
+                        block_table,
+                        k_pool,
+                        v_pool,
+                        reply,
+                    } => {
+                        let _ = reply.send(engine.prefill_resume(
+                            &plan,
+                            &suffix,
+                            &block_table,
+                            k_pool.as_slice(),
+                            v_pool.as_slice(),
+                        ));
+                    }
                     ExecCall::Decode { reqs, k_pool, v_pool, reply } => {
                         let _ = reply.send(engine.decode(&reqs, &k_pool, &v_pool));
                     }
@@ -112,8 +179,8 @@ pub fn spawn_device(artifacts_dir: &str) -> Result<(DeviceHandle, JoinHandle<()>
             }
         })
         .expect("spawn device thread");
-    let cfg = ready_rx
+    let (cfg, prefill_kv_buckets) = ready_rx
         .recv()
         .map_err(|_| anyhow!("device thread died during startup"))??;
-    Ok((DeviceHandle { tx, cfg }, join))
+    Ok((DeviceHandle { tx, cfg, prefill_kv_buckets }, join))
 }

@@ -6,6 +6,17 @@
 //! over these channels. Compute goes through the shared [`DeviceHandle`]
 //! (PJRT executables compiled once from the AOT artifacts). Python is
 //! never involved — this is the self-contained serving binary.
+//!
+//! Cached KV prefixes save real compute here, not just transfer bytes:
+//! when the artifacts ship `prefill_kv_s*` suffix buckets, `submit` pins
+//! the longest cached prompt prefix (`PagedCache::acquire_prefix`) and
+//! pre-advances the request's `prefilled` progress, so the scheduler
+//! charges only the suffix against its token budget and the prefill step
+//! dispatches a suffix-sized resumed prefill
+//! (`DeviceHandle::prefill_resume`) over the pinned pool rows; a
+//! migrated-in request applies the KV its cache already held the same
+//! way. Without those buckets nothing is advanced and behaviour is
+//! bit-identical to full prefill.
 
 pub mod device;
 
@@ -172,8 +183,10 @@ struct RealInstance {
     data: FxHashMap<u64, ReqData>,
     /// Offers waiting for local capacity (pull-based backpressure).
     inbound: Vec<Offer>,
-    /// Offers admitted, transfer in flight (we sent Pull, awaiting Payload).
-    pending_in: FxHashMap<u64, Offer>,
+    /// Offers admitted, transfer in flight (we sent Pull, awaiting
+    /// Payload), plus the KV tokens our own cache already held at admit
+    /// time — the resumed-prefill credit applied when the payload lands.
+    pending_in: FxHashMap<u64, (Offer, usize)>,
     /// Local content-directory replica: own commits applied directly,
     /// peers' via `Msg::{PublishContent, RetractContent}` gossip. Drives
     /// the peer-pull decision without touching the shared lock.
@@ -297,6 +310,22 @@ impl RealInstance {
 
     fn release_caches(&mut self, id: RequestId) {
         release_cache_pair(&mut self.kv, &mut self.img, id);
+    }
+
+    /// Snapshot the LM KV pools in the `[layers, pool_blocks, block_size,
+    /// hidden]` layout `Engine::{decode, prefill_resume}` expect (K planes
+    /// are backing-store planes `0..L`, V planes `L..2L`).
+    fn lm_pools(&self) -> (Vec<f32>, Vec<f32>) {
+        let layers = self.device.cfg().layers;
+        let mut k_pool = Vec::with_capacity(layers * self.kv_store.plane(0).len());
+        let mut v_pool = Vec::with_capacity(k_pool.capacity());
+        for l in 0..layers {
+            k_pool.extend_from_slice(self.kv_store.plane(l));
+        }
+        for l in 0..layers {
+            v_pool.extend_from_slice(self.kv_store.plane(layers + l));
+        }
+        (k_pool, v_pool)
     }
 
     // ---- content directory ------------------------------------------------
@@ -493,6 +522,43 @@ impl RealInstance {
                         st.encoded_images = st.encoded_images.max(imgs);
                     }
                 }
+                // KV-prefix reuse in COMPUTE: when the artifacts can resume
+                // mid-prompt (`prefill_kv_s*` buckets), pin the cached
+                // prompt prefix now and pre-advance prefill past it — the
+                // prefill exec path then dispatches a suffix-sized resumed
+                // prefill over the pinned pool rows. Without resume
+                // support nothing is pinned or advanced here, keeping
+                // behaviour bit-identical to full prefill (the prefix is
+                // still pinned later at reserve() for delta migration).
+                let mut resume_ctx = 0usize;
+                if self.mask.prefill
+                    && self.device.supports_prefill_resume()
+                    && !self.kv.has_request(st.spec.id)
+                {
+                    if let Ok(cached) = self.kv.acquire_prefix(
+                        st.spec.id,
+                        &kv_hashes,
+                        st.spec.prefill_tokens().saturating_sub(1),
+                    ) {
+                        if cached > 0
+                            && self
+                                .device
+                                .plan_prefill_resume(
+                                    cached,
+                                    st.spec.prefill_tokens(),
+                                    st.spec.has_image(),
+                                )
+                                .is_some()
+                        {
+                            // the pinned rows are live in the pool: prefill
+                            // starts mid-prompt, and only the suffix counts
+                            // against the scheduler's token budget
+                            st.cached_prefill = cached;
+                            st.prefilled = cached;
+                            resume_ctx = cached;
+                        }
+                    }
+                }
                 self.data.insert(
                     p.spec.id.0,
                     ReqData {
@@ -501,7 +567,7 @@ impl RealInstance {
                         sampler: Sampler::new(p.sampling.clone()),
                         generated: Vec::new(),
                         lifecycle: lc,
-                        ctx_len: 0,
+                        ctx_len: resume_ctx,
                         ready_since: now,
                         kv_hashes,
                         img_hashes: img_hashes.clone(),
@@ -585,7 +651,7 @@ impl RealInstance {
                 let (kv_have_tokens, img_have) = self.reserve_offer(&offer);
                 let src = offer.src;
                 let req_id = offer.req.spec.id;
-                self.pending_in.insert(req_id.0, offer);
+                self.pending_in.insert(req_id.0, (offer, kv_have_tokens));
                 let _ = self.peers[src].0.send(Msg::Pull(Pull {
                     req_id,
                     dst: self.idx,
@@ -657,7 +723,7 @@ impl RealInstance {
     /// Step 3 receive + step 4 (we are the target).
     fn receive_payload(&mut self, pl: Payload) {
         let id = pl.req_id;
-        let Some(offer) = self.pending_in.remove(&id.0) else { return };
+        let Some((offer, kv_have)) = self.pending_in.remove(&id.0) else { return };
         let now = self.now();
         let mut lc = offer.lifecycle;
         let phase = match pl.kind {
@@ -684,6 +750,26 @@ impl RealInstance {
                 // the embedding now lives here: publish it for reuse
                 let new = self.img.commit_hashes(id, &offer.img_block_hashes);
                 self.publish_content(Plane::Img, new);
+                // the KV-prefix blocks our cache held at admit time become
+                // real compute savings: when the artifacts can resume
+                // mid-prompt, prefill starts after the cached prefix
+                // instead of re-running the whole prompt (this is where
+                // the directory's KV delta pays off in FLOPs, not just
+                // transfer bytes)
+                if kv_have > 0
+                    && self
+                        .device
+                        .plan_prefill_resume(
+                            kv_have,
+                            state.spec.prefill_tokens(),
+                            state.spec.has_image(),
+                        )
+                        .is_some()
+                {
+                    state.cached_prefill = state.cached_prefill.max(kv_have);
+                    state.prefilled = state.prefilled.max(kv_have);
+                    ctx_len = kv_have;
+                }
             }
             MigrationKind::PrefillToDecode => {
                 let planes = pl.kv_planes.expect("pd payload has kv");
@@ -869,35 +955,87 @@ impl RealInstance {
                 _ => None,
             })
             .collect();
+        // pool snapshot shared by every resumed prefill in this batch,
+        // taken lazily: a resume plan only exists for prefix content
+        // committed BEFORE this batch (submit/admit-time acquire), so the
+        // rows it reads cannot be written by this loop — one copy serves
+        // all items instead of a multi-MB copy per request
+        let mut resume_pools: Option<(Arc<Vec<f32>>, Arc<Vec<f32>>)> = None;
         for (id, _tokens) in &prefill_items {
-            let (spec, has_image) = {
+            let (spec, has_image, ctx) = {
                 let r = self
                     .queues
                     .find_running(*id)
                     .ok_or_else(|| anyhow!("prefill req {id} missing"))?;
-                (r.spec.clone(), r.spec.has_image())
+                (r.spec.clone(), r.spec.has_image(), r.prefilled)
             };
-            let img_embed = if has_image {
-                self.img.slot_mapping_into(*id, &mut self.scratch_slots)?;
-                Some(self.img_store.gather(0, &self.scratch_slots))
+            // prefill-with-prefix: a cached context (pinned at submit /
+            // payload-landing) resumes mid-prompt — only the SUFFIX is
+            // computed and scattered, against a suffix-sized artifact
+            // bucket. `ctx == 0` or no feasible plan = full prefill,
+            // bit-identical to the pre-resume engine.
+            let resume = if ctx > 0 {
+                self.device.plan_prefill_resume(ctx, spec.prefill_tokens(), has_image)
             } else {
                 None
             };
-            let tokens = self.data.get(&id.0).unwrap().tokens.clone();
-            let out = self.device.prefill(tokens, img_embed)?;
+            let (logits, valid_len) = if let Some(plan) = resume {
+                // suffix text tokens: position ctx maps to prompt token
+                // ctx - image_tokens (the plan guarantees the prefix
+                // covers the image region, so no embedding is needed)
+                let suffix: Vec<u32> = {
+                    let d = self.data.get(&id.0).ok_or_else(|| anyhow!("no data for {id}"))?;
+                    d.tokens[ctx - spec.image_tokens()..].to_vec()
+                };
+                // suffix slots computed up front so only the block list —
+                // not the whole table — needs an owned copy for the RPC
+                let bs = self.kv.block_size();
+                let blocks: Vec<u32> = {
+                    let table = self.kv.table(*id).expect("kv reserved");
+                    self.scratch_slots.clear();
+                    self.scratch_slots.extend(
+                        (ctx..ctx + plan.suffix_len).map(|p| table.slot_of(p, bs).unwrap()),
+                    );
+                    table.blocks.clone()
+                };
+                let (k_pool, v_pool) = resume_pools
+                    .get_or_insert_with(|| {
+                        let (k, v) = self.lm_pools();
+                        (Arc::new(k), Arc::new(v))
+                    })
+                    .clone();
+                let out = self.device.prefill_resume(plan, suffix, blocks, k_pool, v_pool)?;
+                // scatter ONLY the suffix rows; the prefix rows are the
+                // shared cached blocks, already live in the pool
+                let layers = self.device.cfg().layers;
+                for (l, (k, v)) in out.k_suffix.iter().zip(out.v_suffix.iter()).enumerate() {
+                    self.kv_store.scatter(l, &self.scratch_slots, k);
+                    self.kv_store.scatter(layers + l, &self.scratch_slots, v);
+                }
+                (out.logits, ctx + out.suffix_len)
+            } else {
+                let img_embed = if has_image {
+                    self.img.slot_mapping_into(*id, &mut self.scratch_slots)?;
+                    Some(self.img_store.gather(0, &self.scratch_slots))
+                } else {
+                    None
+                };
+                let tokens = self.data.get(&id.0).unwrap().tokens.clone();
+                let out = self.device.prefill(tokens, img_embed)?;
+                // scatter KV into our paged store
+                let bs = self.kv.block_size();
+                let table = self.kv.table(*id).expect("kv reserved");
+                self.scratch_slots.clear();
+                self.scratch_slots
+                    .extend((0..out.valid_len).map(|p| table.slot_of(p, bs).unwrap()));
+                let layers = self.device.cfg().layers;
+                for (l, (k, v)) in out.k.iter().zip(out.v.iter()).enumerate() {
+                    self.kv_store.scatter(l, &self.scratch_slots, k);
+                    self.kv_store.scatter(layers + l, &self.scratch_slots, v);
+                }
+                (out.logits, out.valid_len)
+            };
             let now = self.now();
-
-            // scatter KV into our paged store
-            let bs = self.kv.block_size();
-            let table = self.kv.table(*id).expect("kv reserved");
-            self.scratch_slots.clear();
-            self.scratch_slots
-                .extend((0..out.valid_len).map(|p| table.slot_of(p, bs).unwrap()));
-            let layers = self.device.cfg().layers;
-            for (l, (k, v)) in out.k.iter().zip(out.v.iter()).enumerate() {
-                self.kv_store.scatter(l, &self.scratch_slots, k);
-                self.kv_store.scatter(layers + l, &self.scratch_slots, v);
-            }
 
             // the prompt-region KV is final: publish it for prefix reuse
             let kv_hashes: &[BlockHash] =
@@ -907,9 +1045,9 @@ impl RealInstance {
 
             // first output token comes from the prefill logits
             let d = self.data.get_mut(&id.0).unwrap();
-            let tok = d.sampler.sample(&out.logits);
+            let tok = d.sampler.sample(&logits);
             d.generated.push(tok);
-            d.ctx_len = out.valid_len;
+            d.ctx_len = valid_len;
             d.lifecycle.add_phase(Phase::PrefillQueue, (started - d.ready_since).max(0.0));
             d.lifecycle.add_phase(Phase::PrefillExec, now - started);
             d.lifecycle.record_token(now);
@@ -948,15 +1086,7 @@ impl RealInstance {
                 });
             }
             let layers = self.device.cfg().layers;
-            let mut k_pool =
-                Vec::with_capacity(layers * self.kv_store.plane(0).len());
-            let mut v_pool = Vec::with_capacity(k_pool.capacity());
-            for l in 0..layers {
-                k_pool.extend_from_slice(self.kv_store.plane(l));
-            }
-            for l in 0..layers {
-                v_pool.extend_from_slice(self.kv_store.plane(layers + l));
-            }
+            let (k_pool, v_pool) = self.lm_pools();
             let out = self.device.decode(inputs, k_pool, v_pool)?;
             let now = self.now();
             for (i, id) in decode_ids.iter().enumerate() {
@@ -1113,7 +1243,7 @@ impl RealInstance {
         for o in &self.inbound {
             s.add_req(&o.req);
         }
-        for o in self.pending_in.values() {
+        for (o, _) in self.pending_in.values() {
             s.add_req(&o.req);
         }
         for (st, _) in self.fetch_parked.values() {

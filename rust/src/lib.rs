@@ -25,7 +25,18 @@
 //!   affinity in one hash-chain sweep, and a request routed away from a
 //!   holder **fetches** the content over the link instead of recomputing
 //!   it whenever the cost model prices the transfer cheaper
-//!   (fetch-over-recompute). On top of the static planner sits an
+//!   (fetch-over-recompute; fetch plans are re-validated against the
+//!   *current* directory when they land — a holder that evicted
+//!   mid-flight redirects the fetch to a surviving, least-loaded holder
+//!   before falling back to recompute). Cached KV prefixes are real
+//!   compute savings in BOTH planes: the `prefill_kv_s*` artifact family
+//!   resumes a prompt mid-way ([`runtime::Engine::prefill_resume`]
+//!   computes only the suffix, padded to a suffix-sized bucket, reading
+//!   the prefix out of the paged pool via the block table), the real
+//!   scheduler pre-advances `prefilled` past the pinned prefix at
+//!   submit so token budgets charge the suffix only, and
+//!   [`costmodel::prefill_resume_cost`] prices the op. On top of the
+//!   static planner sits an
 //!   **elastic control plane** (`controller`): a stage-load estimator
 //!   over windowed queue depths and TTFT/TPOT tails (fed in real mode by
 //!   finished-request lifecycles), a hysteresis reconfiguration policy,

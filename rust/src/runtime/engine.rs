@@ -11,7 +11,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::xla;
-use crate::runtime::{pick_bucket, Manifest, VlmConfig};
+use crate::runtime::{pick_bucket, plan_resume, Manifest, ResumePlan, VlmConfig};
 
 /// Inputs for one request's slot in a decode batch.
 #[derive(Debug, Clone)]
@@ -46,6 +46,19 @@ pub struct PrefillOut {
     pub valid_len: usize,
 }
 
+/// Outputs of a resumed prefill ([`Engine::prefill_resume`]): the SUFFIX
+/// rows only — the prefix KV already lives in the caller's paged pool.
+#[derive(Debug)]
+pub struct ResumeOut {
+    /// Logits of the last valid suffix token [vocab].
+    pub logits: Vec<f32>,
+    /// Suffix K per layer: k_suffix[layer] is [suffix_len * hidden],
+    /// covering positions [prefix_len, prefix_len + suffix_len).
+    pub k_suffix: Vec<Vec<f32>>,
+    pub v_suffix: Vec<Vec<f32>>,
+    pub suffix_len: usize,
+}
+
 /// Compiled artifact registry over one PJRT client.
 pub struct Engine {
     cfg: VlmConfig,
@@ -53,6 +66,10 @@ pub struct Engine {
     encode_buckets: Vec<usize>,
     prefill_mm_buckets: Vec<usize>,
     prefill_txt_buckets: Vec<usize>,
+    /// Resumed-prefill (prefill-with-prefix) SUFFIX buckets; empty on
+    /// manifests predating the `prefill_kv_s*` family — every caller must
+    /// then fall back to full prefill, bit-identically to before.
+    prefill_kv_buckets: Vec<usize>,
     decode_buckets: Vec<usize>,
 }
 
@@ -72,14 +89,26 @@ impl Engine {
                 .map_err(|e| anyhow!("compile {}: {e:?}", a.name))?;
             exes.insert(a.name.clone(), exe);
         }
-        Ok(Engine {
+        let mut engine = Engine::from_manifest_unloaded(&manifest);
+        engine.exes = exes;
+        Ok(engine)
+    }
+
+    /// An `Engine` over a manifest with **no compiled executables** —
+    /// every bucket-bookkeeping path (`max_text_tokens`,
+    /// [`Engine::plan_prefill_resume`], marshalling validation) works, but
+    /// any actual execution fails. Used by benches and tests that exercise
+    /// dispatch decisions on machines without artifacts or PJRT.
+    pub fn from_manifest_unloaded(manifest: &Manifest) -> Engine {
+        Engine {
             cfg: manifest.config,
             encode_buckets: manifest.buckets("encode_b"),
             prefill_mm_buckets: manifest.buckets("prefill_mm_s"),
             prefill_txt_buckets: manifest.buckets("prefill_txt_s"),
+            prefill_kv_buckets: manifest.buckets("prefill_kv_s"),
             decode_buckets: manifest.buckets("decode_b"),
-            exes,
-        })
+            exes: HashMap::new(),
+        }
     }
 
     pub fn cfg(&self) -> &VlmConfig {
@@ -90,6 +119,27 @@ impl Engine {
     }
     pub fn encode_buckets(&self) -> &[usize] {
         &self.encode_buckets
+    }
+    /// Resumed-prefill suffix buckets (empty = the manifest cannot resume
+    /// mid-prompt and callers must full-prefill).
+    pub fn prefill_kv_buckets(&self) -> &[usize] {
+        &self.prefill_kv_buckets
+    }
+    /// Can this manifest ever dispatch a resumed prefill?
+    pub fn supports_prefill_resume(&self) -> bool {
+        !self.prefill_kv_buckets.is_empty()
+    }
+
+    /// Plan a resumed prefill at `prefix_len` cached positions of a
+    /// `total_tokens`-position prompt (see [`plan_resume`] for the exact
+    /// fallback conditions). Pure bookkeeping: never touches PJRT.
+    pub fn plan_prefill_resume(
+        &self,
+        prefix_len: usize,
+        total_tokens: usize,
+        has_image: bool,
+    ) -> Option<ResumePlan> {
+        plan_resume(&self.prefill_kv_buckets, &self.cfg, prefix_len, total_tokens, has_image)
     }
     /// Max text tokens a prefill bucket can hold for a request with/without
     /// an image. A manifest with no multimodal buckets (text-only model)
@@ -211,6 +261,119 @@ impl Engine {
         Ok(PrefillOut { logits, k: take(&k_all), v: take(&v_all), valid_len })
     }
 
+    /// Resumed (prefill-with-prefix) prefill: compute only the prompt
+    /// SUFFIX on top of a block-aligned cached KV prefix that already
+    /// lives in the paged pools. Marshalling mirrors `decode`: pools in
+    /// `[layers, pool_blocks, block_size, hidden]` layout, the request's
+    /// block table padded to `max_blocks_per_seq`, and the position
+    /// offset (`plan.prefix_len`) passed as a scalar so the artifact
+    /// embeds the suffix at positions `[prefix_len, prefix_len +
+    /// suffix_len)`. The suffix — not the full prompt — is padded to the
+    /// smallest fitting `prefill_kv_s{bucket}` artifact.
+    ///
+    /// `suffix_tokens` are the text tokens past the cached prefix; for a
+    /// multimodal prompt the plan guarantees the prefix covers the image
+    /// region, so no image embedding is needed. The caller scatters the
+    /// returned suffix KV rows at positions `prefix_len..` of its pool.
+    pub fn prefill_resume(
+        &self,
+        plan: &ResumePlan,
+        suffix_tokens: &[u32],
+        block_table: &[u32],
+        k_pool: &[f32],
+        v_pool: &[f32],
+    ) -> Result<ResumeOut> {
+        let cfg = &self.cfg;
+        if suffix_tokens.len() != plan.suffix_len {
+            bail!(
+                "suffix token count {} != planned suffix_len {}",
+                suffix_tokens.len(),
+                plan.suffix_len
+            );
+        }
+        if !self.prefill_kv_buckets.contains(&plan.bucket) {
+            bail!("no prefill_kv_s{} artifact in this manifest", plan.bucket);
+        }
+        if plan.suffix_len > plan.bucket {
+            // a hand-built plan could otherwise silently truncate the
+            // suffix at `ids.resize` below and return wrong logits
+            bail!(
+                "suffix_len {} exceeds bucket {} (inconsistent plan)",
+                plan.suffix_len,
+                plan.bucket
+            );
+        }
+        let maxb = cfg.max_blocks_per_seq;
+        if block_table.len() > maxb {
+            bail!("block table {} > max {maxb}", block_table.len());
+        }
+        // the strip gathered through the table must cover the prefix rows
+        if block_table.len() * cfg.block_size < plan.prefix_len {
+            bail!(
+                "block table covers {} positions < prefix_len {}",
+                block_table.len() * cfg.block_size,
+                plan.prefix_len
+            );
+        }
+        if plan.prefix_len + plan.suffix_len > cfg.max_seq {
+            bail!(
+                "resume to {} positions exceeds max_seq {}",
+                plan.prefix_len + plan.suffix_len,
+                cfg.max_seq
+            );
+        }
+        let pool_len = cfg.layers * cfg.pool_blocks * cfg.block_size * cfg.hidden;
+        if k_pool.len() != pool_len || v_pool.len() != pool_len {
+            bail!("pool len {} != expected {pool_len}", k_pool.len());
+        }
+
+        let mut ids: Vec<i32> = suffix_tokens.iter().map(|&x| x as i32).collect();
+        ids.resize(plan.bucket, 0);
+        let ids_lit = xla::Literal::vec1(&ids)
+            .reshape(&[1, plan.bucket as i64])
+            .context("reshape suffix ids")?;
+        let sfx_lit = xla::Literal::from(plan.suffix_len as i32);
+        let pfx_lit = xla::Literal::from(plan.prefix_len as i32);
+        let pool_dims = [
+            cfg.layers as i64,
+            cfg.pool_blocks as i64,
+            cfg.block_size as i64,
+            cfg.hidden as i64,
+        ];
+        let mut bt: Vec<i32> = block_table.iter().map(|&b| b as i32).collect();
+        bt.resize(maxb, 0);
+        let inputs = [
+            ids_lit,
+            sfx_lit,
+            pfx_lit,
+            xla::Literal::vec1(k_pool).reshape(&pool_dims).context("reshape k_pool")?,
+            xla::Literal::vec1(v_pool).reshape(&pool_dims).context("reshape v_pool")?,
+            xla::Literal::vec1(&bt)
+                .reshape(&[1, maxb as i64])
+                .context("reshape block table")?,
+        ];
+        let out = self.run(&format!("prefill_kv_s{}", plan.bucket), &inputs)?;
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let k_all = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let v_all = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        // k_all is [L, bucket, H]; keep only the valid suffix per layer
+        let (l, h, s_total) = (cfg.layers, cfg.hidden, plan.bucket);
+        let take = |all: &[f32]| -> Vec<Vec<f32>> {
+            (0..l)
+                .map(|li| {
+                    let base = li * s_total * h;
+                    all[base..base + plan.suffix_len * h].to_vec()
+                })
+                .collect()
+        };
+        Ok(ResumeOut {
+            logits,
+            k_suffix: take(&k_all),
+            v_suffix: take(&v_all),
+            suffix_len: plan.suffix_len,
+        })
+    }
+
     // ------------------------------------------------------------- decode
 
     /// One decode iteration over the paged pools. `k_pool`/`v_pool` are the
@@ -313,14 +476,7 @@ mod tests {
     /// for the bucket-bookkeeping paths that never touch PJRT.
     fn engine_from_manifest(json: &str) -> Engine {
         let manifest = Manifest::from_json(&parse(json).unwrap()).unwrap();
-        Engine {
-            cfg: manifest.config,
-            encode_buckets: manifest.buckets("encode_b"),
-            prefill_mm_buckets: manifest.buckets("prefill_mm_s"),
-            prefill_txt_buckets: manifest.buckets("prefill_txt_s"),
-            decode_buckets: manifest.buckets("decode_b"),
-            exes: HashMap::new(),
-        }
+        Engine::from_manifest_unloaded(&manifest)
     }
 
     const CFG: &str = r#""config": {"vocab": 272, "hidden": 128, "layers": 2, "heads": 4,
@@ -361,5 +517,122 @@ mod tests {
             ]}}"#
         ));
         assert_eq!(e.max_text_tokens(true), 0);
+    }
+
+    // ---- resumed-prefill bucket bookkeeping (no PJRT) ----------------------
+
+    /// Manifest with the full prefill_kv_s{16,32,64} suffix family.
+    fn resume_engine() -> Engine {
+        engine_from_manifest(&format!(
+            r#"{{{CFG}, "artifacts": [
+                {{"name": "prefill_txt_s64", "file": "x", "stage": "prefill", "bucket": 64}},
+                {{"name": "prefill_kv_s16", "file": "x", "stage": "prefill", "bucket": 16}},
+                {{"name": "prefill_kv_s32", "file": "x", "stage": "prefill", "bucket": 32}},
+                {{"name": "prefill_kv_s64", "file": "x", "stage": "prefill", "bucket": 64}}
+            ]}}"#
+        ))
+    }
+
+    #[test]
+    fn resume_plan_picks_smallest_suffix_bucket() {
+        let e = resume_engine();
+        assert!(e.supports_prefill_resume());
+        assert_eq!(e.prefill_kv_buckets(), &[16, 32, 64]);
+        // 44-position prompt with 32 cached: 12-token suffix -> s16, not
+        // the s64 a full-prompt pick would need
+        let p = e.plan_prefill_resume(32, 44, false).unwrap();
+        assert_eq!((p.bucket, p.suffix_len, p.prefix_len), (16, 12, 32));
+        // exactly-fitting suffix
+        let p = e.plan_prefill_resume(16, 80, false).unwrap();
+        assert_eq!((p.bucket, p.suffix_len, p.prefix_len), (64, 64, 16));
+        // one past a bucket boundary climbs to the next bucket
+        let p = e.plan_prefill_resume(16, 33, false).unwrap();
+        assert_eq!((p.bucket, p.suffix_len), (32, 17));
+    }
+
+    #[test]
+    fn resume_plan_zero_length_suffix_short_circuits() {
+        let e = resume_engine();
+        assert_eq!(e.plan_prefill_resume(32, 32, false), None, "empty suffix");
+        assert_eq!(e.plan_prefill_resume(48, 44, false), None, "prefix past the prompt");
+        assert_eq!(e.plan_prefill_resume(0, 44, false), None, "nothing cached");
+    }
+
+    #[test]
+    fn resume_plan_falls_back_without_kv_buckets() {
+        // a manifest predating the prefill_kv_s* family must never plan a
+        // resume — behaviour stays bit-identical to full prefill
+        let e = engine_from_manifest(&format!(
+            r#"{{{CFG}, "artifacts": [
+                {{"name": "prefill_txt_s64", "file": "x", "stage": "prefill", "bucket": 64}},
+                {{"name": "prefill_mm_s80", "file": "x", "stage": "prefill", "bucket": 80}}
+            ]}}"#
+        ));
+        assert!(!e.supports_prefill_resume());
+        assert_eq!(e.plan_prefill_resume(32, 44, false), None);
+        assert_eq!(e.plan_prefill_resume(16, 80, true), None);
+    }
+
+    #[test]
+    fn resume_plan_requires_alignment_image_coverage_and_fit() {
+        let e = resume_engine();
+        // prefix not block-aligned: the pool strip gathers whole blocks
+        assert_eq!(e.plan_prefill_resume(20, 44, false), None);
+        // multimodal prefix covering the 16-token image region resumes...
+        assert!(e.plan_prefill_resume(16, 44, true).is_some());
+        // ...but a sub-image prefix would need image embeds the text-only
+        // artifact cannot take (block_size 8 makes 8 an aligned prefix)
+        let cfg8 = CFG.replace(r#""block_size": 16"#, r#""block_size": 8"#);
+        let e8 = engine_from_manifest(&format!(
+            r#"{{{cfg8}, "artifacts": [
+                {{"name": "prefill_kv_s16", "file": "x", "stage": "prefill", "bucket": 16}}
+            ]}}"#
+        ));
+        assert_eq!(e8.plan_prefill_resume(8, 44, true), None, "image region uncovered");
+        assert!(e8.plan_prefill_resume(8, 20, false).is_some(), "text-only is fine");
+        // suffix past the largest bucket falls back to full prefill
+        assert_eq!(e.plan_prefill_resume(16, 96, false), None, "80-token suffix");
+        // total past the model context falls back too
+        assert_eq!(e.plan_prefill_resume(96, 129, false), None);
+    }
+
+    #[test]
+    fn prefill_resume_marshals_and_dispatches_the_suffix_bucket() {
+        // no executables are loaded, so a fully valid call must fail at
+        // artifact dispatch — with the SUFFIX-sized bucket in the name,
+        // proving bucket selection + marshalling validation both ran
+        let e = resume_engine();
+        let pool = vec![0.0f32; 2 * 128 * 16 * 128]; // [L, NB, BLK, H]
+        let plan = e.plan_prefill_resume(32, 44, false).unwrap();
+        let err = e
+            .prefill_resume(&plan, &[7; 12], &[0, 1], &pool, &pool)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("prefill_kv_s16"), "dispatched wrong artifact: {err}");
+    }
+
+    #[test]
+    fn prefill_resume_rejects_bad_marshalling() {
+        let e = resume_engine();
+        let pool = vec![0.0f32; 2 * 128 * 16 * 128];
+        let plan = e.plan_prefill_resume(32, 44, false).unwrap();
+        // suffix token count must match the plan
+        let err = e.prefill_resume(&plan, &[7; 11], &[0, 1], &pool, &pool).unwrap_err();
+        assert!(err.to_string().contains("suffix token count"));
+        // the block table must cover every prefix position
+        let err = e.prefill_resume(&plan, &[7; 12], &[0], &pool, &pool).unwrap_err();
+        assert!(err.to_string().contains("block table covers"), "{err}");
+        // pool length is validated like decode
+        let err = e.prefill_resume(&plan, &[7; 12], &[0, 1], &pool[1..], &pool).unwrap_err();
+        assert!(err.to_string().contains("pool len"));
+        // a plan for a bucket the manifest lacks is rejected up front
+        let alien = ResumePlan { bucket: 128, suffix_len: 12, prefix_len: 32 };
+        let err = e.prefill_resume(&alien, &[7; 12], &[0, 1], &pool, &pool).unwrap_err();
+        assert!(err.to_string().contains("no prefill_kv_s128"));
+        // an inconsistent plan whose suffix overflows its bucket must
+        // error, not silently truncate the prompt
+        let bad = ResumePlan { bucket: 16, suffix_len: 20, prefix_len: 32 };
+        let err = e.prefill_resume(&bad, &[7; 20], &[0, 1, 2, 3], &pool, &pool).unwrap_err();
+        assert!(err.to_string().contains("exceeds bucket"), "{err}");
     }
 }

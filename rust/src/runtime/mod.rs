@@ -6,6 +6,13 @@
 //! `manifest.json`; [`Engine::load`] compiles them all once at startup and
 //! the request path only marshals literals. Python never runs here.
 //!
+//! Buckets size the unit of work, not the request: full prefill pads the
+//! whole prompt to a `prefill_{txt,mm}_s*` bucket, while the
+//! prefill-with-prefix family (`prefill_kv_s*`) pads only the **suffix**
+//! past a block-aligned cached KV prefix ([`Engine::prefill_resume`],
+//! planned by [`plan_resume`]) — the compute side of §4.5 cross-request
+//! prefix reuse. Manifests without `prefill_kv_s*` simply never resume.
+//!
 //! Interchange is HLO *text*: jax >= 0.5 emits protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
@@ -13,7 +20,7 @@
 pub mod engine;
 pub mod xla;
 
-pub use engine::{DecodeInput, DecodeOut, Engine, PrefillOut};
+pub use engine::{DecodeInput, DecodeOut, Engine, PrefillOut, ResumeOut};
 
 use std::collections::HashMap;
 
@@ -127,6 +134,62 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
     buckets.iter().copied().find(|&b| b >= n)
 }
 
+/// A resumed-prefill dispatch decision (pure bucket bookkeeping, no PJRT):
+/// which `prefill_kv_s{bucket}` artifact to run, and the position split it
+/// encodes. `None` from [`plan_resume`] always means "run a full prefill
+/// instead" — resumed prefill is an optimization, never a requirement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResumePlan {
+    /// Suffix bucket — the artifact computes `bucket` padded positions
+    /// instead of the full prompt.
+    pub bucket: usize,
+    /// Valid suffix tokens (`<= bucket`).
+    pub suffix_len: usize,
+    /// Cached positions the suffix resumes after (the position offset
+    /// passed to the artifact; block-aligned).
+    pub prefix_len: usize,
+}
+
+/// Decide whether a prefill can resume at `prefix_len` cached positions of
+/// a `total_tokens`-position prompt using the `prefill_kv_s*` suffix
+/// buckets. Returns `None` (fall back to full prefill) when:
+///
+/// * nothing is cached, or the manifest ships no `prefill_kv_s*` buckets
+///   (behaviour must stay bit-identical to full prefill);
+/// * the suffix is empty — the cache cap (`prefill_tokens - 1`) normally
+///   prevents this, but a zero-length suffix has no last-token logits to
+///   emit, so it short-circuits here too;
+/// * the prefix is not block-aligned (the pool strip is gathered in whole
+///   blocks; a mid-block resume would read garbage rows);
+/// * the prompt is multimodal and the prefix does not cover the image
+///   region — the suffix would need image embeddings, which the text-only
+///   `prefill_kv` artifacts do not take;
+/// * the suffix exceeds the largest suffix bucket, or the total exceeds
+///   the model context.
+pub fn plan_resume(
+    kv_buckets: &[usize],
+    cfg: &VlmConfig,
+    prefix_len: usize,
+    total_tokens: usize,
+    has_image: bool,
+) -> Option<ResumePlan> {
+    if prefix_len == 0 || kv_buckets.is_empty() {
+        return None;
+    }
+    if prefix_len % cfg.block_size != 0 {
+        return None;
+    }
+    if has_image && prefix_len < cfg.img_tokens {
+        return None;
+    }
+    if total_tokens <= prefix_len || total_tokens > cfg.max_context() {
+        return None;
+    }
+    let suffix_len = total_tokens - prefix_len;
+    let bucket = pick_bucket(kv_buckets, suffix_len)?;
+    Some(ResumePlan { bucket, suffix_len, prefix_len })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,9 +240,10 @@ mod tests {
     fn real_manifest_loads_if_built() {
         if std::path::Path::new("artifacts/manifest.json").exists() {
             let m = Manifest::load("artifacts").unwrap();
-            assert_eq!(m.artifacts.len(), 11);
+            assert_eq!(m.artifacts.len(), 14);
             assert_eq!(m.buckets("decode_b"), vec![1, 2, 4, 8]);
             assert_eq!(m.buckets("prefill_mm_s"), vec![48, 80]);
+            assert_eq!(m.buckets("prefill_kv_s"), vec![16, 32, 64]);
         }
     }
 }

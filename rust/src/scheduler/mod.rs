@@ -1022,6 +1022,34 @@ mod tests {
     }
 
     #[test]
+    fn resumed_prefill_charges_only_the_suffix_against_the_budget() {
+        // two prompts that together exceed the token budget, but whose
+        // cached prefixes leave suffixes that both fit: suffix accounting
+        // (prefilled pre-advanced by the cache) must admit both whole in
+        // one iteration — full-prompt accounting would chunk the second
+        let mut s = StageLevelScheduler::new(StageMask::EPD);
+        let mut q = Queues::default();
+        for i in 0..2 {
+            let mut r = ReqState::new(spec(i, 0, 400, 4));
+            r.prefilled = 368; // cached prefix: only a 32-token suffix left
+            r.cached_prefill = 368;
+            q.push_waiting(r);
+        }
+        let budgets = Budgets { token_budget: 64, ..Default::default() };
+        let b = s.build_batch(&mut q, &budgets, &mut *always_admit());
+        assert_eq!(q.running_len(), 2, "both suffixes fit the budget");
+        assert_eq!(b.prefill_tokens(), 64);
+        for (_, w) in &b.items {
+            match w {
+                TaskWork::PrefillChunk { ctx, tokens } => {
+                    assert_eq!((*ctx, *tokens), (368, 32), "suffix-only chunks");
+                }
+                other => panic!("unexpected work {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn stage_mask_labels() {
         assert_eq!(StageMask::EPD.label(), "EPD");
         assert_eq!(StageMask::EP.label(), "EP");

@@ -32,7 +32,8 @@ use crate::controller::{
 };
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, Stage};
 use crate::costmodel::{
-    encode_cost, exec_time, iteration_cost, parallel_time, prefill_cost, sequential_time, Cost,
+    encode_cost, exec_time, iteration_cost, parallel_time, prefill_resume_cost, sequential_time,
+    Cost,
 };
 use crate::metrics::RunMetrics;
 use crate::cache::{
@@ -128,6 +129,16 @@ struct PendingFetch {
     /// Peer shipping the KV prefix, and the prefix length (tokens, block
     /// aligned) the fetch extends the local cached prefix to.
     kv_src: Option<(usize, usize)>,
+    /// The plan was already re-validated once after a stale landing
+    /// (holder evicted mid-flight) and redirected to a surviving holder.
+    /// One redirect per fetch: a second stale landing falls back to
+    /// recompute instead of chasing a churning directory.
+    redirected: bool,
+    /// This fetch already contributed to `stale_fetches` (an abandoned
+    /// part on an earlier landing); a later landing must not count it
+    /// again — `stale_fetches` stays at most one per fetch, mirroring
+    /// `fetches`.
+    stale_counted: bool,
 }
 
 /// The cluster-wide content directory pair (KV + image planes) plus the
@@ -297,9 +308,16 @@ pub struct DirectoryReport {
     pub fetched_images: usize,
     /// KV prefix tokens served by peer fetch (prefill shortened).
     pub fetched_kv_tokens: usize,
-    /// Fetches that landed after the advertised holder evicted the
-    /// content — the request fell back to recomputing (staleness).
+    /// Fetch landings that abandoned at least one part because the
+    /// advertised holder evicted the content AND no surviving holder
+    /// remained (or the fetch was already redirected once) — the request
+    /// fell back to recomputing that part (staleness).
     pub stale_fetches: usize,
+    /// Stale landings rescued by re-validating the plan against the
+    /// *current* directory and redirecting to a surviving holder — each
+    /// of these would have been a `stale_fetches` recompute before the
+    /// landing-time re-validation existed.
+    pub redirected_fetches: usize,
 }
 
 impl CacheReport {
@@ -389,6 +407,7 @@ impl SimResult {
             self.cache.directory.fetched_kv_tokens as u64,
             self.cache.directory.fetched_images as u64,
             self.cache.directory.stale_fetches as u64,
+            self.cache.directory.redirected_fetches as u64,
         ] {
             h = mix(h, v);
         }
@@ -530,32 +549,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         report: DirectoryReport::default(),
     });
 
-    let mut instances: Vec<SimInstance> = masks
-        .iter()
-        .enumerate()
-        .map(|(id, &mask)| {
-            let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, mask);
-            let mut kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
-            let mut img =
-                PagedCache::new(img_blocks, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
-            if dirs.is_some() {
-                kv.set_eviction_tracking(true);
-                img.set_eviction_tracking(true);
-            }
-            SimInstance {
-                id,
-                mask,
-                sched: cfg.policy.make(mask),
-                queues: Queues::default(),
-                kv,
-                img,
-                current: None,
-                inbox: Vec::new(),
-                incoming: FxHashMap::default(),
-                fetching: FxHashMap::default(),
-            }
-        })
-        .collect();
+    let mut instances = build_instances(cfg, &masks, dirs.is_some());
 
     let mut state = EngineState {
         cfg,
@@ -731,55 +725,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
             }
 
             EvKind::FetchDone { dst, req } => {
-                let Some(f) = instances[dst].fetching.remove(&req.0) else { continue };
-                let mut r = f.req;
-                let ch = state.chains_for(&r.spec);
-                let mut any_stale = false;
-                // image part: validate against the source's actual cache —
-                // an eviction mid-flight makes the advertisement stale and
-                // the request falls back to encoding locally
-                if let Some(src) = f.img_src {
-                    let needed = img_blocks_for(r.spec.image_tokens());
-                    if instances[src].img.lookup_prefix(&ch.img) >= needed {
-                        let fetched = r.spec.num_images - r.encoded_images;
-                        let new = instances[dst].img.commit_hashes(req, &ch.img);
-                        let d = state.dirs.as_mut().expect("fetches require the directory");
-                        d.img.publish(dst, &new);
-                        r.cached_images = r.spec.num_images;
-                        r.encoded_images = r.spec.num_images;
-                        d.report.fetched_images += fetched;
-                    } else {
-                        any_stale = true;
-                    }
-                }
-                // KV-prefix part
-                if let Some((src, to_tokens)) = f.kv_src {
-                    let blocks = to_tokens / KV_BLOCK;
-                    if instances[src].kv.lookup_prefix(&ch.kv[..blocks]) >= blocks {
-                        let new = instances[dst].kv.commit_hashes(req, &ch.kv[..blocks]);
-                        let d = state.dirs.as_mut().expect("fetches require the directory");
-                        d.kv.publish(dst, &new);
-                        d.report.fetched_kv_tokens += to_tokens.saturating_sub(r.prefilled);
-                        r.cached_prefill = r.cached_prefill.max(to_tokens);
-                        r.prefilled = r.prefilled.max(to_tokens);
-                    } else {
-                        any_stale = true;
-                    }
-                }
-                // a fetch counts stale at most once, mirroring `fetches`
-                // (one combined transfer per request)
-                if any_stale {
-                    let d = state.dirs.as_mut().expect("fetches require the directory");
-                    d.report.stale_fetches += 1;
-                }
-                // resume the normal dispatch path with the credit applied
-                let stage = r.stage();
-                if instances[dst].mask.serves(stage) {
-                    instances[dst].queues.push_waiting(r);
-                } else {
-                    instances[dst].queues.push_running(r);
-                    start_migration(&mut instances, dst, req, stage, now, &mut state);
-                }
+                handle_fetch_done(&mut instances, dst, req, now, &mut state);
                 process_inboxes(&mut instances, now, &mut state);
                 for i in 0..instances.len() {
                     try_start(&mut instances, i, now, &mut state);
@@ -905,6 +851,38 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
     }
 }
 
+/// Build the per-instance state for a cluster layout (shared by
+/// [`simulate`] and the engine's unit tests, which drive event handlers
+/// directly against the same instances the production loop uses).
+fn build_instances(cfg: &SimConfig, masks: &[StageMask], track_evictions: bool) -> Vec<SimInstance> {
+    masks
+        .iter()
+        .enumerate()
+        .map(|(id, &mask)| {
+            let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, mask);
+            let mut kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
+            let mut img =
+                PagedCache::new(img_blocks, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
+            if track_evictions {
+                kv.set_eviction_tracking(true);
+                img.set_eviction_tracking(true);
+            }
+            SimInstance {
+                id,
+                mask,
+                sched: cfg.policy.make(mask),
+                queues: Queues::default(),
+                kv,
+                img,
+                current: None,
+                inbox: Vec::new(),
+                incoming: FxHashMap::default(),
+                fetching: FxHashMap::default(),
+            }
+        })
+        .collect()
+}
+
 /// Fill `scratch.affinity` (parallel to `scratch.candidates`) with each
 /// candidate's cache-affinity score for the memoized chains `ch`.
 /// `with_img` gates the image plane (migration targeting for a PD hop
@@ -1012,57 +990,30 @@ fn maybe_start_fetch(
     let mut kv_src = None;
     let mut bytes = 0.0f64;
 
-    // image embedding: only whole-embedding hits are useful (encode runs
-    // per image; a partial block set cannot shorten it)
-    if st.encoded_images < st.spec.num_images && st.spec.image_hash.is_some() {
+    // image embedding part (pricing + holder in the shared helper; the
+    // capacity check is planning-time only — a redirect re-plans with the
+    // blocks already reserved)
+    if let Some((src, fetch_bytes)) = img_fetch_source(instances, dirs, cfg, target, &st, ch) {
         let needed = img_blocks_for(st.spec.image_tokens());
-        if let Some((src, blocks)) = dirs.img.best_holder(&ch.img, target) {
-            if blocks >= needed {
-                let remaining = st.spec.num_images - st.encoded_images;
-                let miss_tokens = remaining * st.spec.tokens_per_image;
-                let fetch_bytes =
-                    crate::costmodel::ops::image_payload_bytes(&cfg.model, miss_tokens);
-                let fetch_t = link_lat + fetch_bytes / link_bw;
-                let recompute_t =
-                    exec_time(encode_cost(&cfg.model, remaining), &cfg.device)
-                        + cfg.engine_overhead;
-                let img_need = needed
-                    .saturating_sub(instances[target].img.held_blocks(id));
-                if fetch_t < recompute_t
-                    && instances[target].img_blocks_needed(&st) > 0
-                    && img_need <= instances[target].img.available_blocks()
-                {
-                    img_src = Some(src);
-                    bytes += fetch_bytes;
-                }
-            }
+        let img_need = needed.saturating_sub(instances[target].img.held_blocks(id));
+        if instances[target].img_blocks_needed(&st) > 0
+            && img_need <= instances[target].img.available_blocks()
+        {
+            img_src = Some(src);
+            bytes += fetch_bytes;
         }
     }
 
-    // KV prefix: fetch only the delta past what the local cache served,
-    // block-aligned and leaving >= 1 token for prefill to emit from
-    if instances[target].kv_tokens_needed(&st) > 0 && st.prefill_remaining() > 0 {
-        let cap_blocks = st.spec.prefill_tokens().saturating_sub(1) / KV_BLOCK;
-        if let Some((src, blocks)) = dirs.kv.best_holder(&ch.kv, target) {
-            let to_tokens = blocks.min(cap_blocks) * KV_BLOCK;
-            if to_tokens > st.prefilled {
-                let delta = to_tokens - st.prefilled;
-                let fetch_bytes = crate::costmodel::ops::kv_delta_payload_bytes(
-                    &cfg.model,
-                    to_tokens,
-                    st.prefilled,
-                );
-                let fetch_t = link_lat + fetch_bytes / link_bw;
-                let recompute_t =
-                    exec_time(prefill_cost(&cfg.model, &[(st.prefilled, delta)]), &cfg.device)
-                        + cfg.engine_overhead;
-                let kv_need = kv_blocks_for(to_tokens)
-                    .saturating_sub(instances[target].kv.held_blocks(id));
-                if fetch_t < recompute_t && kv_need <= instances[target].kv.available_blocks()
-                {
-                    kv_src = Some((src, to_tokens));
-                    bytes += fetch_bytes;
-                }
+    // KV-prefix part
+    if instances[target].kv_tokens_needed(&st) > 0 {
+        if let Some((src, to_tokens, fetch_bytes)) =
+            kv_fetch_source(instances, dirs, cfg, target, &st, ch)
+        {
+            let kv_need = kv_blocks_for(to_tokens)
+                .saturating_sub(instances[target].kv.held_blocks(id));
+            if kv_need <= instances[target].kv.available_blocks() {
+                kv_src = Some((src, to_tokens));
+                bytes += fetch_bytes;
             }
         }
     }
@@ -1087,8 +1038,185 @@ fn maybe_start_fetch(
     dirs.report.fetches += 1;
     let dur = link_lat + bytes / link_bw;
     state.push(now + dur, EvKind::FetchDone { dst: target, req: id });
-    instances[target].fetching.insert(id.0, PendingFetch { req: st, img_src, kv_src });
+    instances[target].fetching.insert(
+        id.0,
+        PendingFetch { req: st, img_src, kv_src, redirected: false, stale_counted: false },
+    );
     None
+}
+
+/// The image-embedding part of a fetch plan: the best current holder of
+/// the WHOLE embedding (among maximal holders, the least-loaded — a hot
+/// holder should not also serve every fetch), when pulling it is priced
+/// below re-encoding. Returns `(source, payload bytes)`. Pricing and
+/// holder choice only — capacity is the caller's concern (checked when
+/// first planning; already reserved when a landing re-validates).
+fn img_fetch_source(
+    instances: &[SimInstance],
+    dirs: &mut DirState,
+    cfg: &SimConfig,
+    target: usize,
+    st: &ReqState,
+    ch: &HashChains,
+) -> Option<(usize, f64)> {
+    // only whole-embedding hits are useful (encode runs per image; a
+    // partial block set cannot shorten it)
+    if st.encoded_images >= st.spec.num_images || st.spec.image_hash.is_none() {
+        return None;
+    }
+    let needed = img_blocks_for(st.spec.image_tokens());
+    let (src, blocks) = dirs.img.best_holder_by(&ch.img, target, |i| instances[i].load())?;
+    if blocks < needed {
+        return None;
+    }
+    let (link_lat, link_bw) = cfg.link();
+    let remaining = st.spec.num_images - st.encoded_images;
+    let miss_tokens = remaining * st.spec.tokens_per_image;
+    let fetch_bytes = crate::costmodel::ops::image_payload_bytes(&cfg.model, miss_tokens);
+    let fetch_t = link_lat + fetch_bytes / link_bw;
+    let recompute_t =
+        exec_time(encode_cost(&cfg.model, remaining), &cfg.device) + cfg.engine_overhead;
+    (fetch_t < recompute_t).then_some((src, fetch_bytes))
+}
+
+/// The KV-prefix part of a fetch plan: fetch only the delta past what the
+/// local cache already served, block-aligned and leaving >= 1 token for
+/// prefill to emit from. Recompute is priced as a *resumed* prefill of
+/// the missing delta ([`prefill_resume_cost`]) — the real plane now
+/// executes exactly that op, so the fetch decision and the compute it
+/// replaces stay in the same currency. Returns
+/// `(source, prefix tokens fetched to, payload bytes)`.
+fn kv_fetch_source(
+    instances: &[SimInstance],
+    dirs: &mut DirState,
+    cfg: &SimConfig,
+    target: usize,
+    st: &ReqState,
+    ch: &HashChains,
+) -> Option<(usize, usize, f64)> {
+    if st.prefill_remaining() == 0 {
+        return None;
+    }
+    let cap_blocks = st.spec.prefill_tokens().saturating_sub(1) / KV_BLOCK;
+    let (src, blocks) = dirs.kv.best_holder_by(&ch.kv, target, |i| instances[i].load())?;
+    let to_tokens = blocks.min(cap_blocks) * KV_BLOCK;
+    if to_tokens <= st.prefilled {
+        return None;
+    }
+    let delta = to_tokens - st.prefilled;
+    let (link_lat, link_bw) = cfg.link();
+    let fetch_bytes =
+        crate::costmodel::ops::kv_delta_payload_bytes(&cfg.model, to_tokens, st.prefilled);
+    let fetch_t = link_lat + fetch_bytes / link_bw;
+    let recompute_t =
+        exec_time(prefill_resume_cost(&cfg.model, st.prefilled, delta), &cfg.device)
+            + cfg.engine_overhead;
+    (fetch_t < recompute_t).then_some((src, to_tokens, fetch_bytes))
+}
+
+/// Apply a landed cache fetch. The plan was decided when the request
+/// arrived; by landing/service time the advertised holder may have
+/// evicted the content (the arrival→service staleness window). Each part
+/// is validated against the source's **actual** cache; a part that went
+/// stale is re-validated against the **current** directory and redirected
+/// to a surviving holder (one redirect per fetch — a second stale landing
+/// means the directory is churning), and only when no priced-worthwhile
+/// holder remains does the request fall back to recomputing that part,
+/// counted in `stale_fetches`. Parts that landed keep their credit either
+/// way.
+fn handle_fetch_done(
+    instances: &mut [SimInstance],
+    dst: usize,
+    req: RequestId,
+    now: f64,
+    state: &mut EngineState,
+) {
+    let Some(mut f) = instances[dst].fetching.remove(&req.0) else { return };
+    let ch = state.chains_for(&f.req.spec);
+    let cfg = state.cfg;
+    let (link_lat, link_bw) = cfg.link();
+    let mut any_stale = false;
+    let mut retry = false;
+    let mut retry_bytes = 0.0f64;
+    {
+        let dirs = state.dirs.as_mut().expect("fetches require the directory");
+        // image part: validate against the source's actual cache — an
+        // eviction mid-flight makes the advertisement stale
+        if let Some(src) = f.img_src.take() {
+            let needed = img_blocks_for(f.req.spec.image_tokens());
+            if instances[src].img.lookup_prefix(&ch.img) >= needed {
+                let fetched = f.req.spec.num_images - f.req.encoded_images;
+                let new = instances[dst].img.commit_hashes(req, &ch.img);
+                dirs.img.publish(dst, &new);
+                f.req.cached_images = f.req.spec.num_images;
+                f.req.encoded_images = f.req.spec.num_images;
+                dirs.report.fetched_images += fetched;
+            } else if !f.redirected {
+                // stale: re-validate against the current directory (the
+                // blocks are already reserved locally, so only holder +
+                // pricing are re-checked)
+                match img_fetch_source(instances, dirs, cfg, dst, &f.req, &ch) {
+                    Some((src2, bytes)) => {
+                        f.img_src = Some(src2);
+                        retry_bytes += bytes;
+                        retry = true;
+                    }
+                    None => any_stale = true,
+                }
+            } else {
+                any_stale = true;
+            }
+        }
+        // KV-prefix part
+        if let Some((src, to_tokens)) = f.kv_src.take() {
+            let blocks = to_tokens / KV_BLOCK;
+            if instances[src].kv.lookup_prefix(&ch.kv[..blocks]) >= blocks {
+                let new = instances[dst].kv.commit_hashes(req, &ch.kv[..blocks]);
+                dirs.kv.publish(dst, &new);
+                dirs.report.fetched_kv_tokens += to_tokens.saturating_sub(f.req.prefilled);
+                f.req.cached_prefill = f.req.cached_prefill.max(to_tokens);
+                f.req.prefilled = f.req.prefilled.max(to_tokens);
+            } else if !f.redirected {
+                match kv_fetch_source(instances, dirs, cfg, dst, &f.req, &ch) {
+                    Some((src2, to2, bytes)) => {
+                        f.kv_src = Some((src2, to2));
+                        retry_bytes += bytes;
+                        retry = true;
+                    }
+                    None => any_stale = true,
+                }
+            } else {
+                any_stale = true;
+            }
+        }
+        if retry {
+            dirs.report.redirected_fetches += 1;
+        }
+        // a FETCH counts stale at most once, mirroring `fetches` (one
+        // combined transfer per request) — even when its parts are
+        // abandoned across different landings (e.g. img part gives up on
+        // landing 1 while the kv part redirects and fails on landing 2)
+        if any_stale && !f.stale_counted {
+            dirs.report.stale_fetches += 1;
+            f.stale_counted = true;
+        }
+    }
+    if retry {
+        f.redirected = true;
+        let dur = link_lat + retry_bytes / link_bw;
+        state.push(now + dur, EvKind::FetchDone { dst, req });
+        instances[dst].fetching.insert(req.0, f);
+        return;
+    }
+    // resume the normal dispatch path with whatever credit landed
+    let r = f.req;
+    let stage = r.stage();
+    if instances[dst].mask.serves(stage) {
+        instances[dst].queues.push_waiting(r);
+    } else {
+        instances[dst].queues.push_running(r);
+        start_migration(instances, dst, req, stage, now, state);
+    }
 }
 
 /// Route among `scratch.candidates` (affinity scores already built by
@@ -1927,6 +2055,225 @@ mod tests {
             "fetching must not hurt TTFT: on={} off={}",
             res.metrics.ttft().mean(),
             off.metrics.ttft().mean()
+        );
+    }
+
+    // ---- fetch-plan re-validation under eviction races ---------------------
+
+    /// Engine state for handler-level tests (same construction as
+    /// `simulate`, directory on).
+    fn handler_state(cfg: &SimConfig, n: usize) -> EngineState<'_> {
+        EngineState {
+            cfg,
+            budgets: Budgets::default(),
+            router: Router::new(RoutePolicy::LeastLoaded, cfg.seed),
+            tracker: DrainTracker::new(n),
+            dirs: Some(DirState {
+                kv: ContentDirectory::new(n),
+                img: ContentDirectory::new(n),
+                report: DirectoryReport::default(),
+            }),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            events: 0,
+            migrations: 0,
+            batches: 0,
+            dropped: 0,
+            report: CacheReport::default(),
+            lifecycles: FxHashMap::default(),
+            ready_since: FxHashMap::default(),
+            chains: FxHashMap::default(),
+            no_chains: Arc::new(HashChains::empty()),
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Text-only spec sharing a hot 512-token prefix.
+    fn prefix_spec(id: u64, prompt: usize) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            arrival: 0.0,
+            num_images: 0,
+            tokens_per_image: 0,
+            prompt_tokens: prompt,
+            output_tokens: 4,
+            image_hash: None,
+            shared_prefix_tokens: 512,
+            prefix_hash: 0xFE7C,
+        }
+    }
+
+    /// Give `inst` a small KV pool, seed `tokens` of the shared prefix as
+    /// unreferenced cached blocks, and advertise them in the directory —
+    /// a holder whose content a later filler allocation can evict.
+    fn seed_evictable_prefix(
+        inst: &mut SimInstance,
+        dirs: &mut DirState,
+        ch: &HashChains,
+        tokens: usize,
+        seeder: u64,
+    ) {
+        let blocks = tokens / KV_BLOCK;
+        inst.kv = PagedCache::new(blocks + 4, KV_BLOCK, 1024);
+        inst.kv.set_eviction_tracking(true);
+        let rid = RequestId(seeder);
+        inst.kv.allocate(rid, tokens).unwrap();
+        let published = inst.kv.commit_hashes(rid, &ch.kv[..blocks]);
+        assert_eq!(published.len(), blocks);
+        dirs.kv.publish(inst.id, &published);
+        inst.kv.free(rid).unwrap(); // refs drop: cached + evictable
+    }
+
+    /// Fill `inst`'s whole small pool so every cached prefix block evicts.
+    fn evict_prefix(inst: &mut SimInstance, dirs: &mut DirState, filler: u64) {
+        let n = inst.kv.num_blocks();
+        inst.kv.allocate(RequestId(filler), n * KV_BLOCK).unwrap();
+        dirs.sync_evictions(inst);
+    }
+
+    #[test]
+    fn stale_fetch_redirects_to_a_surviving_holder() {
+        // Holder eviction between fetch planning (arrival) and landing
+        // (service) used to burn the fetch: the landing validated against
+        // the planned source only, counted `stale_fetches`, and
+        // re-prefilled 512 tokens the cluster still held on ANOTHER
+        // instance. Landing-time re-validation against the current
+        // directory must redirect there instead — strictly fewer stale
+        // fetches on this race (1 before, 0 now).
+        let cfg = SimConfig::new(
+            ModelSpec::llava15_7b(),
+            ClusterSpec::parse("3PD").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        let mut instances = build_instances(&cfg, &cfg.cluster.instance_masks(), true);
+        let mut state = handler_state(&cfg, 3);
+        let spec = prefix_spec(1, 600);
+        let ch = Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK));
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            seed_evictable_prefix(&mut instances[0], dirs, &ch, 512, 100);
+            seed_evictable_prefix(&mut instances[1], dirs, &ch, 512, 101);
+        }
+
+        // arrival at instance 2: plan the fetch (lowest-index holder on
+        // equal loads -> source 0), park the request
+        let mut st = ReqState::new(spec.clone());
+        state.chains.insert(1, ch.clone());
+        instances[2].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
+        let parked = maybe_start_fetch(&mut instances, 2, st, &ch, 0.0, &mut state);
+        assert!(parked.is_none(), "a worthwhile fetch parks the request");
+        assert_eq!(instances[2].fetching[&1].kv_src, Some((0, 512)));
+        assert_eq!(state.dirs.as_ref().unwrap().report.fetches, 1);
+
+        // the race: holder 0 evicts the prefix before the fetch lands
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            evict_prefix(&mut instances[0], dirs, 900);
+        }
+        assert_eq!(instances[0].kv.lookup_prefix(&ch.kv[..32]), 0, "content gone");
+
+        // landing: stale source, but holder 1 survives -> redirect
+        let ev = state.heap.pop().expect("landing scheduled");
+        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
+        let d = state.dirs.as_ref().unwrap().report;
+        assert_eq!(d.stale_fetches, 0, "re-validation rescued the fetch");
+        assert_eq!(d.redirected_fetches, 1);
+        assert_eq!(
+            instances[2].fetching[&1].kv_src,
+            Some((1, 512)),
+            "redirected to the surviving holder"
+        );
+
+        // second landing commits from the survivor and resumes dispatch
+        let ev = state.heap.pop().expect("redirect scheduled a new landing");
+        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
+        assert!(instances[2].fetching.is_empty());
+        let d = state.dirs.as_ref().unwrap().report;
+        assert_eq!(d.stale_fetches, 0);
+        assert_eq!(d.fetched_kv_tokens, 512);
+        let r = instances[2].queues.peek_waiting(|_| true).expect("request dispatched");
+        assert_eq!(r.prefilled, 512, "prefill resumes at the fetched prefix");
+    }
+
+    #[test]
+    fn stale_fetch_with_no_surviving_holder_falls_back_to_recompute() {
+        let cfg = SimConfig::new(
+            ModelSpec::llava15_7b(),
+            ClusterSpec::parse("3PD").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        let mut instances = build_instances(&cfg, &cfg.cluster.instance_masks(), true);
+        let mut state = handler_state(&cfg, 3);
+        let spec = prefix_spec(1, 600);
+        let ch = Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK));
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            seed_evictable_prefix(&mut instances[0], dirs, &ch, 512, 100);
+        }
+        let mut st = ReqState::new(spec.clone());
+        state.chains.insert(1, ch.clone());
+        instances[2].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
+        assert!(maybe_start_fetch(&mut instances, 2, st, &ch, 0.0, &mut state).is_none());
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            evict_prefix(&mut instances[0], dirs, 900);
+        }
+        let ev = state.heap.pop().unwrap();
+        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
+        let d = state.dirs.as_ref().unwrap().report;
+        assert_eq!(d.stale_fetches, 1, "no holder left: doomed fetch recomputes");
+        assert_eq!(d.redirected_fetches, 0);
+        assert_eq!(d.fetched_kv_tokens, 0);
+        assert!(instances[2].fetching.is_empty(), "request not stuck parked");
+        let r = instances[2].queues.peek_waiting(|_| true).expect("request dispatched");
+        assert_eq!(r.prefilled, 0, "full recompute from scratch");
+    }
+
+    #[test]
+    fn one_redirect_cap_prevents_chasing_a_churning_directory() {
+        let cfg = SimConfig::new(
+            ModelSpec::llava15_7b(),
+            ClusterSpec::parse("3PD").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        let mut instances = build_instances(&cfg, &cfg.cluster.instance_masks(), true);
+        let mut state = handler_state(&cfg, 3);
+        let spec = prefix_spec(1, 600);
+        let ch = Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK));
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            seed_evictable_prefix(&mut instances[0], dirs, &ch, 512, 100);
+            seed_evictable_prefix(&mut instances[1], dirs, &ch, 512, 101);
+        }
+        let mut st = ReqState::new(spec.clone());
+        state.chains.insert(1, ch.clone());
+        instances[2].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
+        assert!(maybe_start_fetch(&mut instances, 2, st, &ch, 0.0, &mut state).is_none());
+        // both holders churn away, one before each landing
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            evict_prefix(&mut instances[0], dirs, 900);
+        }
+        let ev = state.heap.pop().unwrap();
+        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
+        assert_eq!(state.dirs.as_ref().unwrap().report.redirected_fetches, 1);
+        {
+            let dirs = state.dirs.as_mut().unwrap();
+            evict_prefix(&mut instances[1], dirs, 901);
+        }
+        let ev = state.heap.pop().unwrap();
+        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
+        let d = state.dirs.as_ref().unwrap().report;
+        assert_eq!(d.stale_fetches, 1, "second stale landing gives up");
+        assert_eq!(d.redirected_fetches, 1, "no second redirect");
+        assert!(instances[2].fetching.is_empty());
+        assert_eq!(
+            instances[2].queues.peek_waiting(|_| true).unwrap().prefilled,
+            0,
+            "recompute from scratch"
         );
     }
 

@@ -109,6 +109,46 @@ fn golden_outputs_match() {
     assert_eq!(argmax as i64, want.req_f64("argmax").unwrap() as i64);
     let k_sum: f64 = out.k_new[0].iter().map(|&x| x as f64).sum();
     assert!(close(k_sum, want.req_f64("k_new_sum").unwrap(), 1e-3), "k_new {k_sum}");
+
+    // ---- prefill_kv_s16 (resumed prefill): ramp pool, identity table ----
+    // Gated on the golden key so artifacts predating the prefill_kv_s*
+    // family still pass the rest of this test.
+    if let Some(want) = g.get("prefill_kv_s16") {
+        assert!(engine.supports_prefill_resume(), "artifacts ship kv buckets");
+        let plan = engine
+            .plan_prefill_resume(32, 44, false)
+            .expect("12-token suffix on a 32-token cached prefix");
+        assert_eq!(plan.bucket, 16, "12-token suffix fits the smallest bucket");
+        let suffix: Vec<u32> = (40..52).collect();
+        let bt: Vec<u32> = (0..cfg.max_blocks_per_seq as u32).collect();
+        let out = engine
+            .prefill_resume(&plan, &suffix, &bt, &k_pool, &v_pool)
+            .expect("resumed prefill runs");
+        assert_eq!(out.suffix_len, 12);
+        let head = want.get("logits_head").unwrap().as_arr().unwrap();
+        for (i, h) in head.iter().enumerate() {
+            assert!(
+                close(out.logits[i] as f64, h.as_f64().unwrap(), 1e-4),
+                "resume logits[{i}]: got {}, want {}",
+                out.logits[i],
+                h.as_f64().unwrap()
+            );
+        }
+        let argmax = out
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax as i64, want.req_f64("argmax").unwrap() as i64);
+        let k_sum: f64 = out.k_suffix.iter().flatten().map(|&x| x as f64).sum();
+        let v_sum: f64 = out.v_suffix.iter().flatten().map(|&x| x as f64).sum();
+        assert!(close(k_sum, want.req_f64("k_sfx_sum").unwrap(), 1e-3), "k_sfx {k_sum}");
+        assert!(close(v_sum, want.req_f64("v_sfx_sum").unwrap(), 1e-3), "v_sfx {v_sum}");
+    } else {
+        eprintln!("golden.json predates prefill_kv_s*: resumed-prefill check skipped");
+    }
 }
 
 #[test]
