@@ -98,13 +98,25 @@ struct RunResult {
 }
 
 fn run_trace(label: &str, cluster: &str, reqs_n: usize, rate: f64, shared: bool) -> RunResult {
+    run_trace_cfg(label, cluster, reqs_n, rate, shared, false)
+}
+
+fn run_trace_cfg(
+    label: &str,
+    cluster: &str,
+    reqs_n: usize,
+    rate: f64,
+    shared: bool,
+    trace: bool,
+) -> RunResult {
     let model = ModelSpec::llava15_7b();
-    let cfg = SimConfig::new(
+    let mut cfg = SimConfig::new(
         model.clone(),
         ClusterSpec::parse(cluster).unwrap(),
         Policy::StageLevel,
         SloSpec::new(0.25, 0.04),
     );
+    cfg.trace = trace;
     let reqs = if shared {
         // hot-content trace: 32 unique images + a shared system prompt,
         // exercising the directory / fetch-over-recompute machinery
@@ -155,6 +167,16 @@ fn main() {
     }
     // one hot-content trace: reuse + directory + fetch paths stay fast too
     runs.push(run_trace("shared-image/1E3P4D", "1E3P4D", n / 2, rate, true));
+    // flight recorder on: the tracing-off rows above are the "zero cost
+    // when disabled" proof (their alloc counters must match the pre-obs
+    // baseline); this row prices tracing ON, and its digest must equal
+    // the untraced 8EPD row — observation never reschedules
+    runs.push(run_trace_cfg("poisson/8EPD/traced", "8EPD", n, rate, false, true));
+    assert_eq!(
+        runs.last().unwrap().digest,
+        runs[0].digest,
+        "tracing on must not change scheduling (digest mismatch vs untraced 8EPD)"
+    );
 
     let widths = [22, 10, 12, 14, 12, 12, 20];
     benchkit::header(
@@ -236,4 +258,20 @@ fn main() {
     ]);
     std::fs::write(&out_path, format!("{json}\n")).expect("write bench json");
     println!("\nwrote {out_path}");
+
+    // small sample Perfetto trace, uploaded as a CI artifact so a reviewer
+    // can open a real flight-recorder dump without running anything
+    let model = ModelSpec::llava15_7b();
+    let mut cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E3P4D").unwrap(),
+        Policy::StageLevel,
+        SloSpec::new(0.25, 0.04),
+    );
+    cfg.trace = true;
+    let reqs = PoissonGenerator::new(Dataset::textcaps(), 20.0, 42).generate(&model, 200);
+    let res = simulate(&cfg, &reqs);
+    std::fs::write("BENCH_trace_sample.json", format!("{}\n", res.trace_json()))
+        .expect("write sample trace");
+    println!("wrote BENCH_trace_sample.json ({} spans)", res.trace.len());
 }

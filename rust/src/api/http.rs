@@ -68,18 +68,30 @@ pub fn read_request<S: Read>(stream: &mut S) -> Result<HttpRequest> {
     })
 }
 
-/// Write a JSON response.
-pub fn write_response<S: Write>(stream: &mut S, status: u16, body: &str) -> Result<()> {
+/// Content type of the JSON API responses.
+pub const CT_JSON: &str = "application/json";
+/// Prometheus text exposition format (the `/metrics` scrape).
+pub const CT_PROMETHEUS: &str = "text/plain; version=0.0.4";
+
+/// Write a response with an explicit content type (`CT_JSON` for the
+/// API, `CT_PROMETHEUS` for the metrics scrape).
+pub fn write_response<S: Write>(
+    stream: &mut S,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
     write!(
         stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )?;
     stream.flush()?;
@@ -123,10 +135,20 @@ mod tests {
     #[test]
     fn response_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, "{\"ok\":true}").unwrap();
+        write_response(&mut out, 200, CT_JSON, "{\"ok\":true}").unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Type: application/json\r\n"));
         assert!(s.contains("Content-Length: 11"));
         assert!(s.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn response_content_type_and_new_statuses() {
+        let mut out = Vec::new();
+        write_response(&mut out, 503, CT_PROMETHEUS, "overloaded\n").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{s}");
+        assert!(s.contains("Content-Type: text/plain; version=0.0.4\r\n"));
     }
 }

@@ -8,7 +8,17 @@
 //!                            "temperature": float, "image": bool|seed int}
 //!   GET  /health          — liveness
 //!   GET  /status          — live instance layout + elastic-controller
-//!                           state (roles, draining flags, flip count)
+//!                           state (roles, draining flags, flip count) +
+//!                           the metrics-registry snapshot
+//!   GET  /metrics         — Prometheus text exposition (0.0.4) from the
+//!                           cluster's `obs::Registry`: TTFT/TPOT
+//!                           histograms, queue-depth gauges, directory /
+//!                           reconfig / admission counters
+//!   GET  /trace           — flight-recorder snapshot as Chrome
+//!                           trace-event JSON (open in Perfetto)
+//!
+//! Requests the cluster cannot take (no instance serving the first stage,
+//! instance mailbox down) answer 503; malformed input answers 400.
 //!
 //! Built directly on `std::net::TcpListener` (no HTTP deps offline); a
 //! dispatcher thread routes [`ServeResult`]s back to per-request waiters.
@@ -30,7 +40,7 @@ use crate::instance::{RealCluster, ServeResult};
 use crate::util::json::{parse, Json};
 use crate::vision::Image;
 
-use http::{read_request, write_response, HttpRequest};
+use http::{read_request, write_response, HttpRequest, CT_JSON, CT_PROMETHEUS};
 
 type Waiters = Arc<Mutex<HashMap<u64, Sender<ServeResult>>>>;
 
@@ -126,17 +136,31 @@ fn handle_conn(
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;
     let req = read_request(&mut stream)?;
-    let (status, body) = route(&req, cluster, waiters);
-    write_response(&mut stream, status, &body.to_string())?;
+    let (status, content_type, body) = route(&req, cluster, waiters);
+    write_response(&mut stream, status, content_type, &body)?;
     Ok(())
 }
 
-fn route(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &Waiters) -> (u16, Json) {
+/// A rendered response body with its content type.
+fn json(status: u16, body: Json) -> (u16, &'static str, String) {
+    (status, CT_JSON, body.to_string())
+}
+
+fn route(
+    req: &HttpRequest,
+    cluster: &Arc<Mutex<RealCluster>>,
+    waiters: &Waiters,
+) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => (200, Json::obj(vec![("status", Json::str("ok"))])),
-        ("GET", "/status") => (200, cluster.lock().unwrap().status()),
-        ("POST", "/v1/completions") => completions(req, cluster, waiters),
-        _ => (404, Json::obj(vec![("error", Json::str("not found"))])),
+        ("GET", "/health") => json(200, Json::obj(vec![("status", Json::str("ok"))])),
+        ("GET", "/status") => json(200, cluster.lock().unwrap().status()),
+        ("GET", "/metrics") => (200, CT_PROMETHEUS, cluster.lock().unwrap().metrics_text()),
+        ("GET", "/trace") => json(200, cluster.lock().unwrap().trace_json()),
+        ("POST", "/v1/completions") => {
+            let (status, body) = completions(req, cluster, waiters);
+            json(status, body)
+        }
+        _ => json(404, Json::obj(vec![("error", Json::str("not found"))])),
     }
 }
 
@@ -177,7 +201,13 @@ fn completions(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &W
             Ok(id) => id,
             Err(e) => {
                 waiters.lock().unwrap().remove(&next);
-                return (400, Json::obj(vec![("error", Json::str(format!("{e:#}")))]));
+                // malformed input is the client's fault (400); a cluster
+                // that cannot take the request right now — no instance
+                // serving the first stage mid-reconfiguration, a dead
+                // mailbox — is overload/unavailability (503)
+                let msg = format!("{e:#}");
+                let status = if msg.contains("prompt too long") { 400 } else { 503 };
+                return (status, Json::obj(vec![("error", Json::str(msg))]));
             }
         }
     };

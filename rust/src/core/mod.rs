@@ -135,6 +135,12 @@ impl Phase {
         Phase::DecodeExec,
     ];
 
+    /// Number of phases, derived from `ALL` — per-phase arrays
+    /// (`Lifecycle::phase_time`, `RunMetrics::phase_breakdown`) size
+    /// themselves from this so adding a phase can never silently
+    /// truncate the Fig. 13 breakdown.
+    pub const COUNT: usize = Phase::ALL.len();
+
     pub fn name(&self) -> &'static str {
         match self {
             Phase::EncodeQueue => "encode_queue",
@@ -154,7 +160,7 @@ impl Phase {
 pub struct Lifecycle {
     pub arrival: f64,
     /// Accumulated seconds per phase.
-    pub phase_time: [f64; 8],
+    pub phase_time: [f64; Phase::COUNT],
     /// Time the first output token became available.
     pub first_token_at: Option<f64>,
     /// Completion time of every output token (TPOT = diffs).

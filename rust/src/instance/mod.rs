@@ -38,6 +38,8 @@ use crate::controller::{
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, SamplingParams, Stage};
 use crate::core::sampling::Sampler;
 use crate::migrate::{MigrationKind, Offer, Payload, Pull, Release};
+use crate::obs::registry::{Counter, Gauge, Registry, StreamHist};
+use crate::obs::trace::{chrome_trace_json, mask_bits, Span, SpanKind, Tracer};
 use crate::router::{RoutePolicy, Router};
 use crate::runtime::DecodeInput;
 use crate::scheduler::{Budgets, Policy, Queues, ReqState, Scheduler, StageMask, TaskWork};
@@ -158,6 +160,43 @@ struct ReqData {
     img_hashes: Vec<u64>,
 }
 
+/// Per-instance observability handles, created once at boot so the hot
+/// serving loop touches atomics and its own (uncontended) flight-recorder
+/// ring — never the registry's name map. TTFT/TPOT histograms and the
+/// admission/finish counters are shared cluster-wide (same registry name
+/// resolves to the same instrument); queue-depth and occupancy gauges are
+/// per-instance labeled series.
+struct InstanceObs {
+    /// Backlog by stage: `[encode, prefill, decode]` waiting+running items.
+    queue_depth: [Arc<Gauge>; 3],
+    /// Items in the batch the last `step` dispatched.
+    batch_occupancy: Arc<Gauge>,
+    ttft: Arc<Mutex<StreamHist>>,
+    tpot: Arc<Mutex<StreamHist>>,
+    finished: Arc<Counter>,
+    migrations: Arc<Counter>,
+    /// This instance's flight recorder (the cluster merges snapshots for
+    /// `/trace`; only the owning thread writes, so the lock is free).
+    tracer: Arc<Mutex<Tracer>>,
+}
+
+impl InstanceObs {
+    fn new(reg: &Registry, idx: usize, tracer: Arc<Mutex<Tracer>>) -> InstanceObs {
+        let depth = |stage: &str| {
+            reg.gauge(&format!("hydra_queue_depth{{instance=\"{idx}\",stage=\"{stage}\"}}"))
+        };
+        InstanceObs {
+            queue_depth: [depth("encode"), depth("prefill"), depth("decode")],
+            batch_occupancy: reg.gauge(&format!("hydra_batch_occupancy{{instance=\"{idx}\"}}")),
+            ttft: reg.histogram("hydra_ttft_seconds"),
+            tpot: reg.histogram("hydra_tpot_seconds"),
+            finished: reg.counter("hydra_requests_finished_total"),
+            migrations: reg.counter("hydra_migrations_total"),
+            tracer,
+        }
+    }
+}
+
 struct RealInstance {
     idx: usize,
     mask: StageMask,
@@ -205,6 +244,8 @@ struct RealInstance {
     /// per-batch gather/scatter paths must not allocate a fresh `Vec` per
     /// request.
     scratch_slots: Vec<u32>,
+    /// Metrics handles + flight recorder (`obs`).
+    obs: InstanceObs,
 }
 
 impl RealInstance {
@@ -730,7 +771,17 @@ impl RealInstance {
             MigrationKind::EncodeToPrefill => Phase::EpMigration,
             MigrationKind::PrefillToDecode => Phase::PdMigration,
         };
-        lc.add_phase(phase, offer.offered_at.elapsed().as_secs_f64());
+        let dur = offer.offered_at.elapsed().as_secs_f64();
+        lc.add_phase(phase, dur);
+        self.obs.tracer.lock().unwrap().span(
+            SpanKind::from_phase(phase),
+            self.idx,
+            id.0,
+            now - dur,
+            now,
+            kv_have as u64,
+        );
+        self.obs.migrations.inc();
 
         let mut state = offer.req;
         state.migrating = false;
@@ -898,6 +949,7 @@ impl RealInstance {
 
         let started = self.now();
         let mut did_work = false;
+        self.obs.batch_occupancy.set(batch.items.len() as f64);
 
         // ---------------- encode (vision stream) ----------------
         let encode_items: Vec<(RequestId, usize)> = batch
@@ -936,9 +988,15 @@ impl RealInstance {
                 let new = self.img.commit_hashes(*id, img_hashes);
                 self.publish_content(Plane::Img, new);
                 let d = self.data.get_mut(&id.0).unwrap();
-                d.lifecycle.add_phase(Phase::EncodeQueue, (started - d.ready_since).max(0.0));
+                let rs = d.ready_since;
+                d.lifecycle.add_phase(Phase::EncodeQueue, (started - rs).max(0.0));
                 d.lifecycle.add_phase(Phase::EncodeExec, now - started);
                 d.ready_since = now;
+                {
+                    let mut t = self.obs.tracer.lock().unwrap();
+                    t.span(SpanKind::EncodeQueue, self.idx, id.0, rs.min(started), started, 0);
+                    t.span(SpanKind::EncodeExec, self.idx, id.0, started, now, *n as u64);
+                }
                 if let Some(r) = self.queues.find_running(*id) {
                     r.encoded_images += n;
                 }
@@ -1048,10 +1106,16 @@ impl RealInstance {
             let tok = d.sampler.sample(&logits);
             d.generated.push(tok);
             d.ctx_len = valid_len;
-            d.lifecycle.add_phase(Phase::PrefillQueue, (started - d.ready_since).max(0.0));
+            let rs = d.ready_since;
+            d.lifecycle.add_phase(Phase::PrefillQueue, (started - rs).max(0.0));
             d.lifecycle.add_phase(Phase::PrefillExec, now - started);
             d.lifecycle.record_token(now);
             d.ready_since = now;
+            {
+                let mut t = self.obs.tracer.lock().unwrap();
+                t.span(SpanKind::PrefillQueue, self.idx, id.0, rs.min(started), started, 0);
+                t.span(SpanKind::PrefillExec, self.idx, id.0, started, now, valid_len as u64);
+            }
 
             // image embeddings consumed
             if self.img.has_request(*id) {
@@ -1107,10 +1171,16 @@ impl RealInstance {
                 let tok = d.sampler.sample(&out.logits[i]);
                 d.generated.push(tok);
                 d.ctx_len += 1;
-                d.lifecycle.add_phase(Phase::DecodeQueue, (started - d.ready_since).max(0.0));
+                let rs = d.ready_since;
+                d.lifecycle.add_phase(Phase::DecodeQueue, (started - rs).max(0.0));
                 d.lifecycle.add_phase(Phase::DecodeExec, now - started);
                 d.lifecycle.record_token(now);
                 d.ready_since = now;
+                {
+                    let mut t = self.obs.tracer.lock().unwrap();
+                    t.span(SpanKind::DecodeQueue, self.idx, id.0, rs.min(started), started, 0);
+                    t.span(SpanKind::DecodeExec, self.idx, id.0, started, now, 1);
+                }
                 let r = self.queues.find_running(*id).unwrap();
                 r.decoded += 1;
             }
@@ -1150,6 +1220,11 @@ impl RealInstance {
         self.mask = to;
         self.sched = self.policy.make(to);
         self.drain_to = None;
+        self.obs
+            .tracer
+            .lock()
+            .unwrap()
+            .mark(SpanKind::RoleFlip, self.idx, self.now(), mask_bits(to));
         crate::util::logging::log(
             crate::util::logging::Level::Info,
             "instance",
@@ -1221,11 +1296,9 @@ impl RealInstance {
         );
     }
 
-    /// Periodic queue-depth sample for the controller's estimator.
+    /// Periodic queue-depth sample: per-stage backlog gauges always, plus
+    /// the controller's estimator feed when the elastic plane is on.
     fn maybe_sample(&mut self) {
-        if self.ctrl.is_none() {
-            return;
-        }
         let now = self.now();
         if now - self.last_sample < 0.05 {
             return;
@@ -1249,6 +1322,9 @@ impl RealInstance {
         for (st, _) in self.fetch_parked.values() {
             s.add_req(st);
         }
+        self.obs.queue_depth[0].set(s.encode_backlog);
+        self.obs.queue_depth[1].set(s.prefill_backlog);
+        self.obs.queue_depth[2].set(s.decode_backlog);
         if let Some(tx) = &self.ctrl {
             let _ = tx.send(ControlEvent::Sample { idx: self.idx, sample: s });
         }
@@ -1261,6 +1337,16 @@ impl RealInstance {
         self.release_caches(id);
         if let Some(mut d) = self.data.remove(&id.0) {
             d.lifecycle.finished_at = Some(self.now());
+            if let Some(t) = d.lifecycle.ttft() {
+                self.obs.ttft.lock().unwrap().record(t);
+            }
+            {
+                let mut h = self.obs.tpot.lock().unwrap();
+                for t in d.lifecycle.tpots() {
+                    h.record(t);
+                }
+            }
+            self.obs.finished.inc();
             // tee the finished latencies into the controller's estimator
             // (the results channel alone never reaches it)
             if let Some(tx) = &self.ctrl {
@@ -1421,6 +1507,15 @@ pub struct RealCluster {
     control: Option<Arc<Mutex<ControlShared>>>,
     ctrl_stop: Arc<AtomicBool>,
     ctrl_join: Option<JoinHandle<()>>,
+    /// Live metrics registry (`/metrics` renders it; instances hold
+    /// pre-created handles). Per-cluster, not process-global, so parallel
+    /// test clusters never share instruments.
+    registry: Arc<Registry>,
+    /// Per-instance flight recorders; `/trace` merges their snapshots.
+    tracers: Vec<Arc<Mutex<Tracer>>>,
+    /// Admission counters (see `submit`).
+    submitted: Arc<Counter>,
+    rejected: Arc<Counter>,
 }
 
 impl RealCluster {
@@ -1481,6 +1576,14 @@ impl RealCluster {
             stale_pulls: 0,
         }));
 
+        // flight recorder: always on in real mode (the ring is tiny and
+        // wall-clock spans are the whole point of the ops surface)
+        let registry = Arc::new(Registry::new());
+        let tracers: Vec<Arc<Mutex<Tracer>>> = masks
+            .iter()
+            .map(|_| Arc::new(Mutex::new(Tracer::with_capacity(1 << 14))))
+            .collect();
+
         let mut joins = Vec::new();
         for (idx, rx) in receivers.into_iter().enumerate() {
             let mask = masks[idx];
@@ -1524,6 +1627,7 @@ impl RealCluster {
                 router: Router::new(RoutePolicy::RoundRobin, idx as u64),
                 tokenizer: Tokenizer::new(),
                 scratch_slots: Vec::new(),
+                obs: InstanceObs::new(&registry, idx, Arc::clone(&tracers[idx])),
             };
             joins.push(
                 std::thread::Builder::new()
@@ -1563,6 +1667,10 @@ impl RealCluster {
             control,
             ctrl_stop,
             ctrl_join,
+            submitted: registry.counter("hydra_requests_total"),
+            rejected: registry.counter("hydra_requests_rejected_total"),
+            registry,
+            tracers,
         })
     }
 
@@ -1584,6 +1692,7 @@ impl RealCluster {
         sampling: SamplingParams,
     ) -> Result<RequestId> {
         let cfg = *self.device.cfg();
+        self.submitted.inc();
         let tokens = self.tokenizer.apply_chat_template(prompt, image.is_some());
         let max_txt = if image.is_some() {
             // largest mm bucket minus image tokens
@@ -1592,6 +1701,7 @@ impl RealCluster {
             64
         };
         if tokens.len() > max_txt {
+            self.rejected.inc();
             anyhow::bail!("prompt too long: {} tokens > {max_txt}", tokens.len());
         }
         let pixels = image.map(|img| img.preprocess(cfg.img_size));
@@ -1667,8 +1777,11 @@ impl RealCluster {
         } else {
             affinity
         };
-        let target = pick_peer_affinity(&mut self.router, &candidates, &draining, &affinity)
-            .ok_or_else(|| anyhow!("no instance serves {first:?}"))?;
+        let Some(target) = pick_peer_affinity(&mut self.router, &candidates, &draining, &affinity)
+        else {
+            self.rejected.inc();
+            anyhow::bail!("no instance serves {first:?}");
+        };
         // the streak advances only when the CHOSEN target actually rode
         // affinity — a submit routed away from a (e.g. draining) holder
         // is already spread and must not burn re-balance rounds
@@ -1684,9 +1797,13 @@ impl RealCluster {
             let next = if rode_affinity && streak < AFFINITY_STREAK { streak + 1 } else { 0 };
             self.affinity_streak.insert(k, next);
         }
-        self.senders[target]
+        if self.senders[target]
             .send(Msg::Submit(Box::new(PreparedRequest { spec, tokens, pixels, sampling })))
-            .map_err(|_| anyhow!("instance {target} is down"))?;
+            .is_err()
+        {
+            self.rejected.inc();
+            anyhow::bail!("instance {target} is down");
+        }
         Ok(id)
     }
 
@@ -1760,7 +1877,58 @@ impl RealCluster {
             ("reconfigs", Json::num(reconfigs as f64)),
             ("directory", dir),
             ("instances", Json::arr(instances)),
+            ("metrics", self.registry.snapshot_json()),
         ])
+    }
+
+    /// Prometheus text exposition (the `/metrics` scrape body): the live
+    /// registry — TTFT/TPOT histograms, per-stage queue-depth gauges,
+    /// admission/finish/migration counters — plus directory and
+    /// reconfiguration state sampled at scrape time.
+    pub fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = self.registry.render_prometheus();
+        let (kv_entries, img_entries, publishes, retractions, peer_pulls, stale_pulls) = {
+            let d = self.directory.lock().unwrap();
+            (
+                d.kv.len(),
+                d.img.len(),
+                d.kv.stats().publishes + d.img.stats().publishes,
+                d.kv.stats().retractions + d.img.stats().retractions,
+                d.peer_pulls,
+                d.stale_pulls,
+            )
+        };
+        let reconfigs = self.control.as_ref().map_or(0, |c| c.lock().unwrap().reconfigs);
+        let _ = write!(
+            out,
+            "# TYPE hydra_directory_entries gauge\n\
+             hydra_directory_entries{{plane=\"kv\"}} {kv_entries}\n\
+             hydra_directory_entries{{plane=\"img\"}} {img_entries}\n\
+             # TYPE hydra_directory_publishes_total counter\n\
+             hydra_directory_publishes_total {publishes}\n\
+             # TYPE hydra_directory_retractions_total counter\n\
+             hydra_directory_retractions_total {retractions}\n\
+             # TYPE hydra_peer_pulls_total counter\n\
+             hydra_peer_pulls_total {peer_pulls}\n\
+             # TYPE hydra_stale_pulls_total counter\n\
+             hydra_stale_pulls_total {stale_pulls}\n\
+             # TYPE hydra_reconfigs_total counter\n\
+             hydra_reconfigs_total {reconfigs}\n"
+        );
+        out
+    }
+
+    /// Flight-recorder snapshot as Chrome trace-event JSON (the `/trace`
+    /// endpoint's body — open it in Perfetto / `chrome://tracing`). Merges
+    /// every instance's ring, oldest-first by wall-clock start.
+    pub fn trace_json(&self) -> Json {
+        let mut spans: Vec<Span> = Vec::new();
+        for t in &self.tracers {
+            spans.extend(t.lock().unwrap().snapshot());
+        }
+        spans.sort_by(|a, b| a.start.total_cmp(&b.start));
+        chrome_trace_json(&spans)
     }
 
     /// Graceful shutdown: stop instances, the controller, then the device.

@@ -76,6 +76,21 @@
 //!   uploads it per commit so perf changes show up in the trajectory,
 //!   and [`simulator::SimResult::digest`] separates "slower" from
 //!   "different".
+//!
+//! # Observability (`obs`)
+//!
+//! The paper argues in telemetry terms (per-stage breakdowns, p90 SLO
+//! attainment, stage imbalance), so both planes feed a first-class
+//! observability layer: a stage-span **flight recorder**
+//! ([`obs::trace`] — preallocated span ring, exported as Chrome
+//! trace-event JSON via [`simulator::SimResult::trace`], the
+//! `--trace-out` CLI flag, and `GET /trace`) and a **streaming metrics
+//! registry** ([`obs::registry`] — counters, gauges, log-bucketed
+//! histograms with bounded-error quantiles, scraped as Prometheus text
+//! by `GET /metrics` and embedded in `/status`). The contract extends
+//! the perf invariants: recording costs one branch and zero allocations
+//! when disabled, and enabling it leaves the golden digests
+//! bit-identical — observation never reschedules.
 
 pub mod util;
 pub mod config;
@@ -86,6 +101,7 @@ pub mod cache;
 pub mod costmodel;
 pub mod scheduler;
 pub mod workload;
+pub mod obs;
 pub mod metrics;
 pub mod simulator;
 pub mod planner;

@@ -62,6 +62,7 @@ fn print_usage() {
          simulate  --model llava-1.5-7b --dataset textcaps --cluster 1E3P4D\n\
          \x20         --rate 8 --requests 200 --policy stage-level [--goodput]\n\
          \x20         [--elastic]  (online role reconfiguration)\n\
+         \x20         [--trace-out trace.json]  (Perfetto flight-recorder dump)\n\
          plan      --model llava-next-7b --dataset textcaps --gpus 8\n\
          budgets   --model llava-1.5-7b --tpot 0.04\n\
          workload  --model llava-1.5-7b --dataset mme --rate 4 --n 500\n\
@@ -113,6 +114,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /v1/completions {{\"prompt\": \"hi\", \"max_tokens\": 8, \"image\": true}}");
     println!("  GET  /health");
     println!("  GET  /status");
+    println!("  GET  /metrics   (Prometheus text exposition)");
+    println!("  GET  /trace     (Chrome trace-event JSON — open in Perfetto)");
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -134,6 +137,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if args.flag("elastic") {
         cfg.controller = Some(hydrainfer::config::ControllerConfig::default());
     }
+    // --trace-out PATH: record the stage-span flight recorder and write a
+    // Perfetto-loadable Chrome trace of the run (tracing never reschedules:
+    // digests are bit-identical on or off)
+    let trace_out = args.str_opt("trace-out").map(str::to_string);
+    cfg.trace = trace_out.is_some();
     if args.flag("goodput") {
         let g = goodput_search(
             |r| {
@@ -224,6 +232,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let bd = m.phase_breakdown();
     for p in hydrainfer::core::Phase::ALL {
         println!("    {:>14}: {:.4}", p.name(), bd[p as usize]);
+    }
+    if let Some(path) = trace_out {
+        std::fs::write(&path, res.trace_json().to_string())?;
+        println!(
+            "  wrote {} trace spans to {path} ({} overwritten) — load in Perfetto",
+            res.trace.len(),
+            res.trace_dropped
+        );
     }
     Ok(())
 }

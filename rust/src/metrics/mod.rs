@@ -1,10 +1,18 @@
 //! Serving metrics: TTFT/TPOT summaries, SLO attainment, goodput search,
 //! latency breakdown (paper §2.3 and §5.5).
+//!
+//! Two sample stores, by access pattern: offline reports keep the exact
+//! store-all-samples [`Summary`]; the online window the elastic
+//! controller polls every tick ([`WindowStats`]) uses the O(1)-memory
+//! streaming [`StreamHist`] from `obs::registry` — the estimator only
+//! consumes p90 tails, which the histogram bounds to one bucket factor
+//! without per-tick sample vectors or sorting.
 
 use std::collections::HashMap;
 
 use crate::config::SloSpec;
 use crate::core::{Lifecycle, Phase, RequestId};
+use crate::obs::registry::StreamHist;
 use crate::util::stats::Summary;
 
 /// All finished-request lifecycles of one experiment run.
@@ -117,9 +125,11 @@ impl RunMetrics {
         window_stats(self.lifecycles.values(), since)
     }
 
-    /// Mean seconds spent in each of the eight phases (Fig. 13 bars).
-    pub fn phase_breakdown(&self) -> [f64; 8] {
-        let mut out = [0.0; 8];
+    /// Mean seconds spent in each phase (Fig. 13 bars); arity follows
+    /// [`Phase::ALL`], so a new phase kind grows the report instead of
+    /// silently truncating it.
+    pub fn phase_breakdown(&self) -> [f64; Phase::COUNT] {
+        let mut out = [0.0; Phase::COUNT];
         let n = self.num_finished().max(1) as f64;
         for lc in self.finished() {
             for p in Phase::ALL {
@@ -136,10 +146,16 @@ impl RunMetrics {
 /// Windowed latency tails: the subset of [`RunMetrics`] the elastic
 /// controller sees — only requests that *finished* inside the window, so a
 /// drifting workload shows up in the tails within one window length.
+///
+/// Backed by streaming histograms (fixed memory, no sort-on-query): the
+/// controller polls this every tick on the hot online path, where the
+/// exact `Summary` would re-grow and re-sort a sample vector per tick.
+/// The p90s are upper-bounded within one histogram bucket factor (≤ ~19%
+/// at the default layout) — hysteresis thresholds, not exact reports.
 #[derive(Debug, Default)]
 pub struct WindowStats {
-    pub ttft: Summary,
-    pub tpot: Summary,
+    pub ttft: StreamHist,
+    pub tpot: StreamHist,
     /// Requests that finished inside the window.
     pub finished: usize,
 }
@@ -147,11 +163,11 @@ pub struct WindowStats {
 impl WindowStats {
     /// p90 TTFT, if any request finished in the window.
     pub fn ttft_p90(&self) -> Option<f64> {
-        if self.ttft.is_empty() { None } else { Some(self.ttft.p90()) }
+        self.ttft.p90()
     }
     /// p90 inter-token latency, if any multi-token request finished.
     pub fn tpot_p90(&self) -> Option<f64> {
-        if self.tpot.is_empty() { None } else { Some(self.tpot.p90()) }
+        self.tpot.p90()
     }
 }
 
@@ -169,9 +185,11 @@ pub fn window_stats<'a>(
         }
         w.finished += 1;
         if let Some(t) = lc.ttft() {
-            w.ttft.add(t);
+            w.ttft.record(t);
         }
-        w.tpot.extend(&lc.tpots());
+        for t in lc.tpots() {
+            w.tpot.record(t);
+        }
     }
     w
 }
@@ -279,10 +297,13 @@ mod tests {
         m.insert(RequestId(3), unfinished);
         let w = m.window(5.0);
         assert_eq!(w.finished, 1, "only the late request is in the window");
-        assert_eq!(w.ttft.len(), 1);
-        assert!((w.ttft.mean() - 0.4).abs() < 1e-9);
-        assert_eq!(w.tpot.len(), 4);
-        assert!((w.tpot_p90().unwrap() - 0.05).abs() < 1e-9);
+        assert_eq!(w.ttft.count(), 1);
+        assert!((w.ttft.mean() - 0.4).abs() < 1e-9, "count/sum stay exact");
+        assert_eq!(w.tpot.count(), 4);
+        // streaming p90 is bounded to one bucket factor above the exact 0.05
+        let p90 = w.tpot_p90().unwrap();
+        let factor = w.tpot.config().factor;
+        assert!(p90 >= 0.05 - 1e-12 && p90 <= 0.05 * factor + 1e-12, "p90 = {p90}");
         // the whole run
         let all = m.window(0.0);
         assert_eq!(all.finished, 2);

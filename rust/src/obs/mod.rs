@@ -1,0 +1,29 @@
+//! Observability: the flight recorder and the streaming metrics registry.
+//!
+//! The paper argues in observability terms — per-stage latency breakdowns
+//! (Fig. 13), p90 SLO attainment, stage load imbalance — so the system
+//! carries a first-class telemetry layer instead of post-hoc summaries:
+//!
+//! - [`trace`]: stage-span flight recorder. Both planes (simulator engine
+//!   and real instance threads) emit the same span vocabulary — queue and
+//!   exec segments per stage, migration legs, wire transfers/fetches,
+//!   role-flip marks — into a preallocated ring, exported as Chrome
+//!   trace-event JSON for Perfetto (`SimResult::trace`, `--trace-out`,
+//!   `GET /trace`).
+//! - [`registry`]: counters, gauges, and log-bucketed [`StreamHist`]
+//!   histograms (O(1) memory, mergeable, quantiles exact to one bucket
+//!   factor) behind a named-instrument registry, scraped as Prometheus
+//!   text by `GET /metrics` and embedded in `/status`.
+//!
+//! The standing contract (ROADMAP perf invariants): recording is behind
+//! an enable switch that costs one branch and zero allocations when off
+//! — `bench_sim_hotpath`'s allocation counters are the proof — and
+//! enabling it never reschedules: the golden digests stay bit-identical
+//! with tracing on, because observation only copies timestamps the engine
+//! already computed.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, HistConfig, Registry, StreamHist};
+pub use trace::{chrome_trace_json, Span, SpanKind, TraceRecorder, Tracer};

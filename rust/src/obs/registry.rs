@@ -1,0 +1,552 @@
+//! Streaming metrics registry: counters, gauges, and log-bucketed
+//! histograms with a Prometheus text exposition.
+//!
+//! The design constraint comes from the hot online paths: the controller
+//! estimator asks for windowed p90s every tick and the real instances
+//! record TTFT/TPOT per finished request, so the store-all-samples
+//! [`Summary`](crate::util::stats::Summary) (O(n) memory, sort-on-query)
+//! is the wrong shape online. [`StreamHist`] replaces it there: a fixed
+//! array of log-spaced buckets — O(1) memory, O(1) record, mergeable by
+//! bucket-count addition — whose quantiles are exact to within one bucket
+//! factor (the default config bounds p50/p90/p99 to ≤ ~19% relative
+//! error, `exact ≤ approx ≤ exact · factor`). Offline reports keep the
+//! exact `Summary`.
+//!
+//! [`Registry`] is the named-instrument directory the ops surface scrapes:
+//! `GET /metrics` renders [`Registry::render_prometheus`] (text exposition
+//! format 0.0.4) and `/status` embeds [`Registry::snapshot_json`].
+//! Instruments are `Arc`-shared: call sites resolve their handle once at
+//! construction and then update lock-free atomics (counters/gauges) or a
+//! short-critical-section mutex (histograms).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+// ------------------------------------------------------------- instruments
+
+/// Monotonic counter (lock-free).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (lock-free, stored as bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// -------------------------------------------------------------- histogram
+
+/// Log-spaced bucket layout. Bucket 0 holds `(-inf, min]`; bucket `i`
+/// holds `(min·factor^(i-1), min·factor^i]`; the last bucket additionally
+/// absorbs everything above the top edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistConfig {
+    /// Upper edge of the first bucket (finest resolution floor).
+    pub min: f64,
+    /// Ratio between consecutive bucket edges (> 1); bounds the relative
+    /// quantile error.
+    pub factor: f64,
+    /// Number of buckets (fixes memory at `buckets * 8` bytes).
+    pub buckets: usize,
+}
+
+impl Default for HistConfig {
+    /// Latency-tuned: 100µs floor, 2^(1/4) spacing (≤ ~19% relative
+    /// error), 96 buckets spanning 100µs .. ~23 minutes.
+    fn default() -> HistConfig {
+        HistConfig { min: 1e-4, factor: 1.189_207_115_002_721, buckets: 96 }
+    }
+}
+
+/// Streaming histogram: O(1) memory and record time, mergeable, with
+/// nearest-rank quantiles matching `Summary::percentile`'s rank rule but
+/// returning the containing bucket's upper edge.
+#[derive(Debug, Clone)]
+pub struct StreamHist {
+    cfg: HistConfig,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl StreamHist {
+    pub fn new(cfg: HistConfig) -> StreamHist {
+        assert!(cfg.min > 0.0 && cfg.factor > 1.0 && cfg.buckets >= 1, "degenerate HistConfig");
+        StreamHist { cfg, counts: vec![0; cfg.buckets], count: 0, sum: 0.0 }
+    }
+
+    pub fn config(&self) -> HistConfig {
+        self.cfg
+    }
+
+    /// Upper edge of bucket `i` (the value a quantile query returns).
+    pub fn upper_edge(&self, i: usize) -> f64 {
+        self.cfg.min * self.cfg.factor.powi(i as i32)
+    }
+
+    /// Smallest bucket whose upper edge is >= v, clamped to the last
+    /// bucket. The log gives the neighbourhood; the nudge loops make the
+    /// invariant exact despite float rounding in `ln`.
+    fn bucket_of(&self, v: f64) -> usize {
+        if v <= self.cfg.min {
+            return 0;
+        }
+        let approx = ((v / self.cfg.min).ln() / self.cfg.factor.ln()).ceil();
+        let mut i = if approx < 0.0 { 0 } else { approx as usize };
+        while i < self.cfg.buckets - 1 && self.upper_edge(i) < v {
+            i += 1;
+        }
+        while i > 0 && self.upper_edge(i - 1) >= v {
+            i -= 1;
+        }
+        i.min(self.cfg.buckets - 1)
+    }
+
+    /// Record one sample. NaN is skipped (mirrors `Summary`'s tolerance:
+    /// a NaN must not poison the whole distribution).
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.counts[self.bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Nearest-rank quantile, p in [0, 100]: the upper edge of the bucket
+    /// holding the rank-`ceil(p/100·n)` sample — same rank rule as
+    /// `Summary::percentile`, so `exact ≤ approx ≤ exact·factor` (values
+    /// under `min` report `min`; values above the top edge report it).
+    pub fn quantile(&self, p: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(self.upper_edge(i));
+            }
+        }
+        Some(self.upper_edge(self.cfg.buckets - 1))
+    }
+
+    pub fn p50(&self) -> Option<f64> {
+        self.quantile(50.0)
+    }
+    pub fn p90(&self) -> Option<f64> {
+        self.quantile(90.0)
+    }
+    pub fn p99(&self) -> Option<f64> {
+        self.quantile(99.0)
+    }
+
+    /// Merge another histogram in (bucket-count addition — associative
+    /// and commutative). Layouts must match.
+    pub fn merge(&mut self, other: &StreamHist) {
+        assert!(self.cfg == other.cfg, "merging histograms with different layouts");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Non-empty buckets as `(upper_edge, cumulative_count)` — the sparse
+    /// form Prometheus `_bucket{le=...}` lines are rendered from.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((self.upper_edge(i), cum));
+            }
+        }
+        out
+    }
+}
+
+impl Default for StreamHist {
+    fn default() -> StreamHist {
+        StreamHist::new(HistConfig::default())
+    }
+}
+
+// --------------------------------------------------------------- registry
+
+/// Instrument name helpers: a full name is `base` or `base{label="v",...}`.
+fn base_name(full: &str) -> &str {
+    full.split('{').next().unwrap_or(full)
+}
+
+/// Splice a `le` label into a full name's label set for histogram bucket
+/// lines: `h` → `h_bucket{le="x"}`, `h{a="b"}` → `h_bucket{a="b",le="x"}`.
+fn bucket_line(full: &str, le: &str) -> String {
+    match full.split_once('{') {
+        Some((base, rest)) => {
+            let labels = rest.trim_end_matches('}');
+            format!("{base}_bucket{{{labels},le=\"{le}\"}}")
+        }
+        None => format!("{full}_bucket{{le=\"{le}\"}}"),
+    }
+}
+
+/// Suffix a base-part of a full name: `h{a="b"}` + `_sum` → `h_sum{a="b"}`.
+fn suffixed(full: &str, suffix: &str) -> String {
+    match full.split_once('{') {
+        Some((base, rest)) => format!("{base}{suffix}{{{rest}"),
+        None => format!("{full}{suffix}"),
+    }
+}
+
+#[derive(Default)]
+struct Instruments {
+    counters: Vec<(String, Arc<Counter>)>,
+    gauges: Vec<(String, Arc<Gauge>)>,
+    hists: Vec<(String, Arc<Mutex<StreamHist>>)>,
+}
+
+/// Named-instrument directory. Handles are resolved once (get-or-create
+/// under a short lock) and updated without touching the registry again.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Instruments>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, c)) = inner.counters.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::default());
+        inner.counters.push((name.to_string(), c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, g)) = inner.gauges.iter().find(|(n, _)| n == name) {
+            return g.clone();
+        }
+        let g = Arc::new(Gauge::default());
+        inner.gauges.push((name.to_string(), g.clone()));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Mutex<StreamHist>> {
+        self.histogram_with(name, HistConfig::default())
+    }
+
+    pub fn histogram_with(&self, name: &str, cfg: HistConfig) -> Arc<Mutex<StreamHist>> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, h)) = inner.hists.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        let h = Arc::new(Mutex::new(StreamHist::new(cfg)));
+        inner.hists.push((name.to_string(), h.clone()));
+        h
+    }
+
+    /// Prometheus text exposition (content type
+    /// `text/plain; version=0.0.4`). Histograms render the sparse
+    /// non-empty cumulative buckets plus the mandatory `+Inf`, `_sum`
+    /// and `_count` series. Output is sorted by name so scrapes are
+    /// deterministic regardless of registration order.
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+
+        let mut counters: Vec<(&String, &Arc<Counter>)> =
+            inner.counters.iter().map(|(n, c)| (n, c)).collect();
+        counters.sort_by(|a, b| a.0.cmp(b.0));
+        let mut last_base = "";
+        for (name, c) in counters {
+            let base = base_name(name);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} counter\n"));
+                last_base = base;
+            }
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+
+        let mut gauges: Vec<(&String, &Arc<Gauge>)> =
+            inner.gauges.iter().map(|(n, g)| (n, g)).collect();
+        gauges.sort_by(|a, b| a.0.cmp(b.0));
+        last_base = "";
+        for (name, g) in gauges {
+            let base = base_name(name);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} gauge\n"));
+                last_base = base;
+            }
+            out.push_str(&format!("{name} {}\n", g.get()));
+        }
+
+        let mut hists: Vec<(&String, &Arc<Mutex<StreamHist>>)> =
+            inner.hists.iter().map(|(n, h)| (n, h)).collect();
+        hists.sort_by(|a, b| a.0.cmp(b.0));
+        last_base = "";
+        for (name, h) in hists {
+            let base = base_name(name);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} histogram\n"));
+                last_base = base;
+            }
+            let h = h.lock().unwrap();
+            for (le, cum) in h.cumulative_buckets() {
+                out.push_str(&format!("{} {cum}\n", bucket_line(name, &format!("{le}"))));
+            }
+            out.push_str(&format!("{} {}\n", bucket_line(name, "+Inf"), h.count()));
+            out.push_str(&format!("{} {}\n", suffixed(name, "_sum"), h.sum()));
+            out.push_str(&format!("{} {}\n", suffixed(name, "_count"), h.count()));
+        }
+        out
+    }
+
+    /// JSON snapshot for `/status`: every instrument with its current
+    /// value (histograms as count/sum/mean/p50/p90/p99).
+    pub fn snapshot_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::num);
+        let counters = Json::obj(
+            inner.counters.iter().map(|(n, c)| (n.as_str(), Json::num(c.get() as f64))).collect(),
+        );
+        let gauges = Json::obj(
+            inner.gauges.iter().map(|(n, g)| (n.as_str(), Json::num(g.get()))).collect(),
+        );
+        let hists = Json::obj(
+            inner
+                .hists
+                .iter()
+                .map(|(n, h)| {
+                    let h = h.lock().unwrap();
+                    (
+                        n.as_str(),
+                        Json::obj(vec![
+                            ("count", Json::num(h.count() as f64)),
+                            ("sum", Json::num(h.sum())),
+                            ("mean", if h.is_empty() { Json::Null } else { Json::num(h.mean()) }),
+                            ("p50", opt(h.p50())),
+                            ("p90", opt(h.p90())),
+                            ("p99", opt(h.p99())),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("gauges", gauges), ("histograms", hists)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("hydra_requests_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(r.counter("hydra_requests_total").get(), 5, "get-or-create shares");
+        let g = r.gauge("hydra_queue_depth{instance=\"0\",stage=\"decode\"}");
+        g.set(7.5);
+        assert_eq!(r.gauge("hydra_queue_depth{instance=\"0\",stage=\"decode\"}").get(), 7.5);
+    }
+
+    #[test]
+    fn hist_bucket_edges_are_exact() {
+        let h = StreamHist::default();
+        let cfg = h.config();
+        // a value exactly on an edge lands in that bucket, epsilon above
+        // lands in the next — despite ln() rounding either way
+        for i in 0..(cfg.buckets - 1) {
+            let edge = h.upper_edge(i);
+            assert_eq!(h.bucket_of(edge), i, "edge value stays in bucket {i}");
+            assert_eq!(h.bucket_of(edge * (1.0 + 1e-12)), i + 1);
+        }
+        assert_eq!(h.bucket_of(0.0), 0);
+        assert_eq!(h.bucket_of(f64::INFINITY), cfg.buckets - 1, "overflow clamps");
+    }
+
+    #[test]
+    fn quantiles_match_summary_within_bucket_error() {
+        // property: for random sample sets, every quantile satisfies
+        // exact <= approx <= max(exact, min) * factor (nearest-rank rule
+        // on both sides, hist reports the containing bucket's upper edge)
+        let mut rng = Rng::new(7);
+        for case in 0..40 {
+            let n = 1 + rng.below(400);
+            let mut hist = StreamHist::default();
+            let mut exact = Summary::new();
+            for _ in 0..n {
+                // log-uniform over ~[10µs, 100s]: crosses the sub-`min`
+                // floor and several decades of buckets
+                let v = 1e-5 * 10f64.powf(rng.f64() * 7.0);
+                hist.record(v);
+                exact.add(v);
+            }
+            let cfg = hist.config();
+            for p in [1.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+                let a = hist.quantile(p).unwrap();
+                let e = exact.percentile(p);
+                assert!(
+                    e <= a * (1.0 + 1e-9),
+                    "case {case} p{p}: approx {a} below exact {e}"
+                );
+                assert!(
+                    a <= e.max(cfg.min) * cfg.factor * (1.0 + 1e-9),
+                    "case {case} p{p}: approx {a} above error bound for exact {e}"
+                );
+            }
+            assert_eq!(hist.count(), n as u64);
+            assert!((hist.mean() - exact.mean()).abs() <= 1e-9 * exact.mean().abs());
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_combined() {
+        let mut rng = Rng::new(11);
+        let mk = |rng: &mut Rng, n: usize| {
+            let mut h = StreamHist::default();
+            for _ in 0..n {
+                h.record(1e-4 * 10f64.powf(rng.f64() * 5.0));
+            }
+            h
+        };
+        let (a, b, c) = (mk(&mut rng, 50), mk(&mut rng, 80), mk(&mut rng, 30));
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.count(), right.count());
+        assert!((left.sum() - right.sum()).abs() < 1e-9);
+        for p in [50.0, 90.0, 99.0] {
+            assert_eq!(left.quantile(p), right.quantile(p), "identical buckets ⇒ identical q");
+        }
+    }
+
+    #[test]
+    fn quantile_rank_rule_matches_summary_on_exact_edges() {
+        // samples placed exactly on bucket edges: hist and Summary agree
+        // bit-for-bit, proving the rank rule is the same
+        let mut hist = StreamHist::default();
+        let mut exact = Summary::new();
+        let edges: Vec<f64> = (0..20).map(|i| hist.upper_edge(i)).collect();
+        for &e in &edges {
+            hist.record(e);
+            exact.add(e);
+        }
+        for p in [10.0, 50.0, 90.0, 100.0] {
+            assert_eq!(hist.quantile(p).unwrap(), exact.percentile(p));
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("hydra_reconfigs_total").add(2);
+        r.gauge("hydra_queue_depth{instance=\"1\",stage=\"encode\"}").set(3.0);
+        let h = r.histogram("hydra_ttft_seconds");
+        h.lock().unwrap().record(0.12);
+        h.lock().unwrap().record(0.25);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE hydra_reconfigs_total counter\n"));
+        assert!(text.contains("hydra_reconfigs_total 2\n"));
+        assert!(text.contains("# TYPE hydra_queue_depth gauge\n"));
+        assert!(text.contains("hydra_queue_depth{instance=\"1\",stage=\"encode\"} 3\n"));
+        assert!(text.contains("# TYPE hydra_ttft_seconds histogram\n"));
+        assert!(text.contains("hydra_ttft_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("hydra_ttft_seconds_count 2\n"));
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("hydra_ttft_seconds_sum"))
+            .expect("sum series present");
+        let v: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((v - 0.37).abs() < 1e-9);
+        // cumulative bucket counts are monotone and end at count
+        let cums: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("hydra_ttft_seconds_bucket"))
+            .map(|l| l.split_whitespace().nth(1).unwrap().parse().unwrap())
+            .collect();
+        assert!(cums.windows(2).all(|w| w[0] <= w[1]), "{cums:?}");
+        assert_eq!(*cums.last().unwrap(), 2);
+        // labeled histogram bucket lines splice `le` into the label set
+        let h2 = r.histogram("hydra_batch_seconds{instance=\"0\"}");
+        h2.lock().unwrap().record(0.01);
+        let text = r.render_prometheus();
+        assert!(
+            text.contains("hydra_batch_seconds_bucket{instance=\"0\",le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("hydra_batch_seconds_sum{instance=\"0\"} 0.01\n"));
+    }
+
+    #[test]
+    fn snapshot_json_carries_all_instruments() {
+        let r = Registry::new();
+        r.counter("c").inc();
+        r.gauge("g").set(2.0);
+        r.histogram("h").lock().unwrap().record(0.5);
+        let snap = r.snapshot_json();
+        assert_eq!(snap.get("counters").unwrap().get("c").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("gauges").unwrap().get("g").unwrap().as_f64(), Some(2.0));
+        let h = snap.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(1));
+        assert!(h.get("p90").unwrap().as_f64().unwrap() >= 0.5);
+    }
+}

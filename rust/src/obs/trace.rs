@@ -1,0 +1,406 @@
+//! Stage-span flight recorder: a preallocated ring of `Span`s fed by both
+//! execution planes, exported as Chrome trace-event JSON.
+//!
+//! Both the simulator engine and the real instance threads emit the same
+//! span vocabulary — one [`SpanKind`] per [`Phase`](crate::core::Phase)
+//! segment (queue wait and execution for encode/prefill/decode, the two
+//! migration legs) plus wire-level `Transfer`/`Fetch` spans and
+//! `RoleFlip`/`Drop` instant marks. The recorder is a fixed-capacity ring:
+//! recording never allocates after construction, and once full the oldest
+//! spans are overwritten (the `dropped` counter says how many) — exactly a
+//! flight recorder, the recent past survives no matter how long the run.
+//!
+//! The disabled path is [`Tracer::off`]: a `None` recorder, so every
+//! `span()` call is a single branch on an already-resident field and no
+//! allocation ever happens. The golden-digest suite proves the enabled
+//! path never reschedules: observation reads timestamps the engine already
+//! computed and writes them into the ring, nothing more.
+//!
+//! Export is [`chrome_trace_json`]: the `{"traceEvents": [...]}` format
+//! Perfetto and `chrome://tracing` load directly. Every span lands on the
+//! per-instance track (pid 1, one thread row per instance) and, when it
+//! belongs to a request, is mirrored onto the per-request track (pid 2,
+//! one thread row per request) — so both "what did instance 3 do" and
+//! "where did request 17's latency go" are one click.
+
+use crate::core::Phase;
+use crate::util::json::Json;
+
+/// Sentinel request id for spans that belong to an instance, not a
+/// request (role flips, for example).
+pub const NO_REQ: u64 = u64::MAX;
+
+/// Sentinel instance id for cluster-level spans (e.g. an admission drop
+/// before any instance was chosen) — rendered as the "cluster" track.
+pub const NO_INSTANCE: u32 = u32::MAX;
+
+/// Pack a stage mask into a `RoleFlip` mark's `detail` field
+/// (bit 0 = encode, bit 1 = prefill, bit 2 = decode).
+pub fn mask_bits(mask: crate::scheduler::StageMask) -> u64 {
+    u64::from(mask.encode) | u64::from(mask.prefill) << 1 | u64::from(mask.decode) << 2
+}
+
+/// What a span measures. The first eight mirror [`Phase`] one-to-one;
+/// the rest are observability-only segments with no `RunMetrics` phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    EncodeQueue = 0,
+    EncodeExec = 1,
+    EpMigration = 2,
+    PrefillQueue = 3,
+    PrefillExec = 4,
+    PdMigration = 5,
+    DecodeQueue = 6,
+    DecodeExec = 7,
+    /// Wire time of a migration payload (detail = bytes).
+    Transfer = 8,
+    /// Wire time of a directory content fetch (detail = bytes).
+    Fetch = 9,
+    /// Instant mark: instance changed its stage mask (detail = new mask
+    /// bits, encode|prefill<<1|decode<<2).
+    RoleFlip = 10,
+    /// Instant mark: request rejected at admission (no serving instance).
+    Drop = 11,
+}
+
+impl SpanKind {
+    pub fn from_phase(p: Phase) -> SpanKind {
+        match p {
+            Phase::EncodeQueue => SpanKind::EncodeQueue,
+            Phase::EncodeExec => SpanKind::EncodeExec,
+            Phase::EpMigration => SpanKind::EpMigration,
+            Phase::PrefillQueue => SpanKind::PrefillQueue,
+            Phase::PrefillExec => SpanKind::PrefillExec,
+            Phase::PdMigration => SpanKind::PdMigration,
+            Phase::DecodeQueue => SpanKind::DecodeQueue,
+            Phase::DecodeExec => SpanKind::DecodeExec,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::EncodeQueue => "encode_queue",
+            SpanKind::EncodeExec => "encode_exec",
+            SpanKind::EpMigration => "ep_migration",
+            SpanKind::PrefillQueue => "prefill_queue",
+            SpanKind::PrefillExec => "prefill_exec",
+            SpanKind::PdMigration => "pd_migration",
+            SpanKind::DecodeQueue => "decode_queue",
+            SpanKind::DecodeExec => "decode_exec",
+            SpanKind::Transfer => "transfer",
+            SpanKind::Fetch => "fetch",
+            SpanKind::RoleFlip => "role_flip",
+            SpanKind::Drop => "drop",
+        }
+    }
+
+    /// Instant marks have no duration and render as trace "i" events.
+    pub fn is_mark(self) -> bool {
+        matches!(self, SpanKind::RoleFlip | SpanKind::Drop)
+    }
+}
+
+/// One recorded segment. `Copy` and 40 bytes: the ring is a flat buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Instance the segment happened on.
+    pub instance: u32,
+    /// Request id, or [`NO_REQ`] for instance-level marks.
+    pub request: u64,
+    /// Segment start, seconds (sim clock or wall clock since cluster start).
+    pub start: f64,
+    /// Segment end; equals `start` for instant marks.
+    pub end: f64,
+    /// Kind-specific payload (bytes moved, mask bits, token counts).
+    pub detail: u64,
+}
+
+/// Fixed-capacity span ring. All memory is allocated up front; `record`
+/// is push-or-overwrite and never allocates.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    buf: Vec<Span>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+    /// Spans overwritten after the ring filled.
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    pub fn with_capacity(capacity: usize) -> TraceRecorder {
+        TraceRecorder { buf: Vec::with_capacity(capacity.max(1)), head: 0, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, span: Span) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(span);
+        } else {
+            self.buf[self.head] = span;
+            self.head = (self.head + 1) % self.buf.len();
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Spans in recording order (oldest surviving span first).
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// The enable switch both planes record through. Disabled is the default
+/// and costs one branch per call site — no recorder, no allocation.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    rec: Option<TraceRecorder>,
+}
+
+impl Tracer {
+    /// A disabled tracer: every `span`/`mark` is a no-op branch.
+    pub fn off() -> Tracer {
+        Tracer { rec: None }
+    }
+
+    /// An enabled tracer with a preallocated ring of `capacity` spans.
+    pub fn with_capacity(capacity: usize) -> Tracer {
+        Tracer { rec: Some(TraceRecorder::with_capacity(capacity)) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// Record a duration span. Inlined so the disabled path is a single
+    /// `None` check at the call site.
+    #[inline]
+    pub fn span(
+        &mut self,
+        kind: SpanKind,
+        instance: usize,
+        request: u64,
+        start: f64,
+        end: f64,
+        detail: u64,
+    ) {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.record(Span { kind, instance: instance as u32, request, start, end, detail });
+        }
+    }
+
+    /// Record an instance-level instant mark (no request, no duration).
+    #[inline]
+    pub fn mark(&mut self, kind: SpanKind, instance: usize, t: f64, detail: u64) {
+        self.span(kind, instance, NO_REQ, t, t, detail);
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.rec.as_ref().map_or(0, |r| r.dropped())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rec.as_ref().map_or(0, |r| r.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain the ring into a chronologically ordered span list.
+    pub fn take_spans(&mut self) -> Vec<Span> {
+        match self.rec.take() {
+            Some(rec) => {
+                let spans = rec.spans();
+                self.rec = Some(TraceRecorder::with_capacity(rec.buf.capacity()));
+                spans
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Snapshot without draining (the live `/trace` endpoint).
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.rec.as_ref().map_or_else(Vec::new, |r| r.spans())
+    }
+}
+
+/// Render spans as Chrome trace-event JSON (`{"traceEvents": [...]}`),
+/// loadable in Perfetto / `chrome://tracing`. pid 1 carries one thread
+/// row per instance; pid 2 mirrors request-owned spans onto one thread
+/// row per request. Timestamps are microseconds.
+pub fn chrome_trace_json(spans: &[Span]) -> Json {
+    const PID_INSTANCES: f64 = 1.0;
+    const PID_REQUESTS: f64 = 2.0;
+
+    let mut instances: Vec<u32> = spans.iter().map(|s| s.instance).collect();
+    instances.sort_unstable();
+    instances.dedup();
+    let mut requests: Vec<u64> =
+        spans.iter().filter(|s| s.request != NO_REQ).map(|s| s.request).collect();
+    requests.sort_unstable();
+    requests.dedup();
+
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() * 2 + instances.len() + 4);
+    let meta = |name: &str, pid: f64, tid: Option<f64>, label: String| {
+        let mut kv = vec![
+            ("name", Json::str(name)),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid)),
+            ("args", Json::obj(vec![("name", Json::str(label))])),
+        ];
+        if let Some(tid) = tid {
+            kv.insert(3, ("tid", Json::num(tid)));
+        }
+        Json::obj(kv)
+    };
+    events.push(meta("process_name", PID_INSTANCES, None, "instances".to_string()));
+    events.push(meta("process_name", PID_REQUESTS, None, "requests".to_string()));
+    for &i in &instances {
+        let label =
+            if i == NO_INSTANCE { "cluster".to_string() } else { format!("instance {i}") };
+        events.push(meta("thread_name", PID_INSTANCES, Some(i as f64), label));
+    }
+    for &r in &requests {
+        events.push(meta("thread_name", PID_REQUESTS, Some(r as f64), format!("request {r}")));
+    }
+
+    let span_event = |s: &Span, pid: f64, tid: f64| {
+        let mut kv = vec![
+            ("name", Json::str(s.kind.name())),
+            ("pid", Json::num(pid)),
+            ("tid", Json::num(tid)),
+            ("ts", Json::num(s.start * 1e6)),
+        ];
+        if s.kind.is_mark() {
+            kv.push(("ph", Json::str("i")));
+            kv.push(("s", Json::str("t")));
+        } else {
+            kv.push(("ph", Json::str("X")));
+            kv.push(("dur", Json::num((s.end - s.start).max(0.0) * 1e6)));
+        }
+        let mut args = vec![("detail", Json::num(s.detail as f64))];
+        if s.request != NO_REQ {
+            args.insert(0, ("request", Json::num(s.request as f64)));
+        }
+        args.push(("instance", Json::num(s.instance as f64)));
+        kv.push(("args", Json::obj(args)));
+        Json::obj(kv)
+    };
+    for s in spans {
+        events.push(span_event(s, PID_INSTANCES, s.instance as f64));
+        if s.request != NO_REQ {
+            events.push(span_event(s, PID_REQUESTS, s.request as f64));
+        }
+    }
+
+    Json::obj(vec![("traceEvents", Json::arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, inst: usize, req: u64, start: f64, end: f64) -> Span {
+        Span { kind, instance: inst as u32, request: req, start, end, detail: 0 }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::off();
+        t.span(SpanKind::EncodeExec, 0, 1, 0.0, 1.0, 0);
+        t.mark(SpanKind::RoleFlip, 0, 2.0, 0);
+        assert!(!t.enabled());
+        assert!(t.is_empty());
+        assert!(t.take_spans().is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut rec = TraceRecorder::with_capacity(3);
+        for i in 0..5u64 {
+            rec.record(span(SpanKind::DecodeExec, 0, i, i as f64, i as f64 + 0.5));
+        }
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.dropped(), 2);
+        let reqs: Vec<u64> = rec.spans().iter().map(|s| s.request).collect();
+        assert_eq!(reqs, vec![2, 3, 4], "oldest spans overwritten, order preserved");
+    }
+
+    #[test]
+    fn take_spans_drains_and_rearms() {
+        let mut t = Tracer::with_capacity(8);
+        t.span(SpanKind::PrefillExec, 1, 7, 0.0, 0.25, 128);
+        let spans = t.take_spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, SpanKind::PrefillExec);
+        assert!(t.enabled(), "draining keeps the tracer armed");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn phase_mapping_is_total_and_named() {
+        for p in crate::core::Phase::ALL {
+            let k = SpanKind::from_phase(p);
+            assert_eq!(k.name(), p.name(), "span kinds mirror phase names");
+            assert!(!k.is_mark());
+        }
+        assert!(SpanKind::RoleFlip.is_mark());
+        assert!(SpanKind::Drop.is_mark());
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let spans = vec![
+            span(SpanKind::EncodeExec, 0, 5, 0.1, 0.2),
+            Span {
+                kind: SpanKind::RoleFlip,
+                instance: 1,
+                request: NO_REQ,
+                start: 0.3,
+                end: 0.3,
+                detail: 0b101,
+            },
+        ];
+        let j = chrome_trace_json(&spans);
+        let events = j.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 2 process metas + 2 thread metas (instance 0, 1) + 1 request meta
+        // + encode span on both tracks + role-flip mark on instance track
+        assert_eq!(events.len(), 2 + 2 + 1 + 2 + 1);
+        let durations: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(durations.len(), 2, "request span mirrored on both tracks");
+        for d in &durations {
+            assert_eq!(d.get("name").and_then(|n| n.as_str()), Some("encode_exec"));
+            assert!((d.get("ts").unwrap().as_f64().unwrap() - 1e5).abs() < 1e-6);
+            assert!((d.get("dur").unwrap().as_f64().unwrap() - 1e5).abs() < 1e-6);
+        }
+        let marks: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+            .collect();
+        assert_eq!(marks.len(), 1, "instance mark stays off the request tracks");
+        assert_eq!(marks[0].get("s").and_then(|s| s.as_str()), Some("t"));
+        // serialized form parses back (valid JSON end to end)
+        let text = j.to_string();
+        assert!(crate::util::json::parse(&text).is_ok());
+        assert!(text.starts_with("{\"traceEvents\":"));
+    }
+}

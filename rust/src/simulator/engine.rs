@@ -36,6 +36,7 @@ use crate::costmodel::{
     Cost,
 };
 use crate::metrics::RunMetrics;
+use crate::obs::trace::{mask_bits, SpanKind, Tracer};
 use crate::cache::{
     BlockHash, CacheStats, ContentDirectory, HashChains, PagedCache, COST_IMAGE,
 };
@@ -361,6 +362,12 @@ pub struct SimResult {
     pub reconfig_events: Vec<ReconfigEvent>,
     /// Content-addressed cache reuse accounting.
     pub cache: CacheReport,
+    /// Flight-recorder spans (empty unless `SimConfig::trace`); export
+    /// with [`SimResult::trace_json`]. Excluded from [`SimResult::digest`]
+    /// — observation must never look like a behaviour change.
+    pub trace: Vec<crate::obs::trace::Span>,
+    /// Spans overwritten in the ring (0 = the whole run fit).
+    pub trace_dropped: u64,
 }
 
 impl SimResult {
@@ -413,6 +420,11 @@ impl SimResult {
         }
         h
     }
+
+    /// The recorded spans as Chrome trace-event JSON (Perfetto-loadable).
+    pub fn trace_json(&self) -> crate::util::json::Json {
+        crate::obs::trace::chrome_trace_json(&self.trace)
+    }
 }
 
 /// Scratch buffers reused across events — the event loop's guarantee of
@@ -463,6 +475,10 @@ struct EngineState<'a> {
     /// Shared empty chains for content-cache-off runs (no hashing at all).
     no_chains: Arc<HashChains>,
     scratch: Scratch,
+    /// Stage-span flight recorder. Off (`Tracer::off`) unless
+    /// `SimConfig::trace`: every emission below is then a single `None`
+    /// branch, and recording never feeds back into scheduling.
+    tracer: Tracer,
 }
 
 impl EngineState<'_> {
@@ -569,6 +585,11 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         chains: FxHashMap::default(),
         no_chains: Arc::new(HashChains::empty()),
         scratch: Scratch::default(),
+        tracer: if cfg.trace {
+            Tracer::with_capacity(cfg.trace_capacity)
+        } else {
+            Tracer::off()
+        },
     };
 
     for (i, r) in requests.iter().enumerate() {
@@ -624,9 +645,19 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     // behind (a stale Lifecycle + ready_since entry used
                     // to leak here)
                     state.dropped += 1;
+                    crate::log_trace!("t={now:.6} drop req={} (no instance serves {first:?})", spec.id.0);
+                    state.tracer.span(
+                        SpanKind::Drop,
+                        crate::obs::trace::NO_INSTANCE as usize,
+                        spec.id.0,
+                        now,
+                        now,
+                        0,
+                    );
                     continue;
                 };
                 let rid = spec.id;
+                crate::log_trace!("t={now:.6} arrival req={} -> inst{target}", rid.0);
                 state.lifecycles.insert(rid.0, Lifecycle::new(spec.arrival));
                 state.ready_since.insert(rid.0, now);
                 if cfg.content_cache {
@@ -671,6 +702,10 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     .take()
                     .expect("BatchDone for idle instance");
                 let dur = now - started;
+                crate::log_trace!(
+                    "t={now:.6} batch done inst{iid} items={} dur={dur:.6}",
+                    batch.items.len()
+                );
                 apply_batch(&mut instances, iid, &batch, started, dur, now, &mut state);
                 // wake everyone: migrations may have unblocked peers
                 process_inboxes(&mut instances, now, &mut state);
@@ -715,7 +750,16 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                     if let Some(lc) = state.lifecycles.get_mut(&req.0) {
                         lc.add_phase(pull.phase, now - pull.created);
                     }
+                    state.tracer.span(
+                        SpanKind::from_phase(pull.phase),
+                        dst,
+                        req.0,
+                        pull.created,
+                        now,
+                        pull.kv_cached as u64,
+                    );
                     state.ready_since.insert(req.0, now);
+                    crate::log_trace!("t={now:.6} transfer done req={} inst{src}->inst{dst}", req.0);
                     instances[dst].queues.push_running(r);
                 }
                 process_inboxes(&mut instances, now, &mut state);
@@ -725,6 +769,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
             }
 
             EvKind::FetchDone { dst, req } => {
+                crate::log_trace!("t={now:.6} fetch landed req={} at inst{dst}", req.0);
                 handle_fetch_done(&mut instances, dst, req, now, &mut state);
                 process_inboxes(&mut instances, now, &mut state);
                 for i in 0..instances.len() {
@@ -768,6 +813,8 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
                         && inst.fetching.is_empty();
                     if empty {
                         let to = state.tracker.complete(now, iid, inst.mask);
+                        crate::log_trace!("t={now:.6} role flip inst{iid} -> {}", to.label());
+                        state.tracer.mark(SpanKind::RoleFlip, iid, now, mask_bits(to));
                         let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, to);
                         let inst = &mut instances[iid];
                         inst.mask = to;
@@ -817,6 +864,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         dropped,
         mut report,
         lifecycles,
+        mut tracer,
         ..
     } = state;
     let mut metrics = RunMetrics::default();
@@ -838,6 +886,7 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         dr.retractions = d.kv.stats().retractions + d.img.stats().retractions;
         report.directory = dr;
     }
+    let trace_dropped = tracer.dropped();
     SimResult {
         metrics,
         migrations,
@@ -848,6 +897,8 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         reconfigs: tracker.num_reconfigs(),
         reconfig_events: tracker.events,
         cache: report,
+        trace: tracer.take_spans(),
+        trace_dropped,
     }
 }
 
@@ -1038,6 +1089,7 @@ fn maybe_start_fetch(
     dirs.report.fetches += 1;
     let dur = link_lat + bytes / link_bw;
     state.push(now + dur, EvKind::FetchDone { dst: target, req: id });
+    state.tracer.span(SpanKind::Fetch, target, id.0, now, now + dur, bytes as u64);
     instances[target].fetching.insert(
         id.0,
         PendingFetch { req: st, img_src, kv_src, redirected: false, stale_counted: false },
@@ -1205,6 +1257,7 @@ fn handle_fetch_done(
         f.redirected = true;
         let dur = link_lat + retry_bytes / link_bw;
         state.push(now + dur, EvKind::FetchDone { dst, req });
+        state.tracer.span(SpanKind::Fetch, dst, req.0, now, now + dur, retry_bytes as u64);
         instances[dst].fetching.insert(req.0, f);
         return;
     }
@@ -1517,6 +1570,8 @@ fn apply_batch(
                 lc.add_phase(Phase::EncodeQueue, (started - rs).max(0.0));
                 lc.add_phase(Phase::EncodeExec, dur);
                 *rs_slot = now;
+                state.tracer.span(SpanKind::EncodeQueue, iid, id.0, rs.min(started), started, 0);
+                state.tracer.span(SpanKind::EncodeExec, iid, id.0, started, now, *images as u64);
                 if r.encode_remaining() == 0 {
                     let rid = *id;
                     // publish the finished embedding for cross-request reuse
@@ -1542,6 +1597,8 @@ fn apply_batch(
                 lc.add_phase(Phase::PrefillQueue, (started - rs).max(0.0));
                 lc.add_phase(Phase::PrefillExec, dur);
                 *rs_slot = now;
+                state.tracer.span(SpanKind::PrefillQueue, iid, id.0, rs.min(started), started, 0);
+                state.tracer.span(SpanKind::PrefillExec, iid, id.0, started, now, *tokens as u64);
                 if r.prefill_remaining() == 0 {
                     // prefill emits the first output token
                     r.decoded = 1;
@@ -1580,6 +1637,8 @@ fn apply_batch(
                 lc.add_phase(Phase::DecodeExec, dur);
                 lc.record_token(now);
                 *rs_slot = now;
+                state.tracer.span(SpanKind::DecodeQueue, iid, id.0, rs.min(started), started, 0);
+                state.tracer.span(SpanKind::DecodeExec, iid, id.0, started, now, 1);
                 if r.finished() {
                     to_finish.push(*id);
                 }
@@ -1659,6 +1718,7 @@ fn process_inboxes(instances: &mut [SimInstance], now: f64, state: &mut EngineSt
                     now + dur,
                     EvKind::TransferDone { src: pull.src, dst: iid, req: r.spec.id },
                 );
+                state.tracer.span(SpanKind::Transfer, iid, r.spec.id.0, now, now + dur, bytes as u64);
                 instances[iid].incoming.insert(r.spec.id.0, pull);
             } else {
                 i += 1; // blocked: backpressure (source keeps its blocks)
@@ -2085,6 +2145,7 @@ mod tests {
             chains: FxHashMap::default(),
             no_chains: Arc::new(HashChains::empty()),
             scratch: Scratch::default(),
+            tracer: Tracer::off(),
         }
     }
 

@@ -155,6 +155,16 @@ pub struct SimConfig {
     /// bit-for-bit; on, traces with no repeated content are also
     /// bit-identical (an empty directory never fetches).
     pub cache_directory: bool,
+    /// Stage-span flight recorder (`obs::trace`): when on, the engine
+    /// records a span for every queue/exec/migration/transfer/fetch
+    /// segment and role-flip mark into a preallocated ring, surfaced as
+    /// [`SimResult::trace`]. Guaranteed not to reschedule: digests are
+    /// bit-identical on or off (golden suite), and off costs one branch
+    /// per emission site and zero allocations (`bench_sim_hotpath`).
+    pub trace: bool,
+    /// Ring capacity (spans) when `trace` is on; the oldest spans are
+    /// overwritten once full — flight-recorder semantics.
+    pub trace_capacity: usize,
 }
 
 impl SimConfig {
@@ -173,6 +183,8 @@ impl SimConfig {
             controller: None,
             content_cache: true,
             cache_directory: true,
+            trace: false,
+            trace_capacity: 1 << 16,
         }
     }
 

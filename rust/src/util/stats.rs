@@ -6,6 +6,12 @@
 //! sample vector per query was the hot spot). Ordering uses
 //! [`f64::total_cmp`], so NaN samples (e.g. a ratio over an empty window)
 //! sort to the end instead of panicking inside `partial_cmp(..).unwrap()`.
+//!
+//! `Summary` stores every sample — exact quantiles, unbounded memory.
+//! Long-lived online paths (windowed controller stats, the `/metrics`
+//! registry) use `crate::obs::registry::StreamHist` instead: O(1)
+//! log-bucketed memory, mergeable, quantiles exact to one bucket factor
+//! (its property tests compare it against `Summary` on random samples).
 
 use std::cell::RefCell;
 

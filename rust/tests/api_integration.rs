@@ -82,5 +82,28 @@ fn api_serves_completions_and_errors() {
     assert!(post(&addr, "/v1/completions", r#"{"max_tokens": 1}"#).contains("400"));
     assert!(get(&addr, "/nope").contains("404"));
 
+    // ops surface: /metrics is Prometheus text exposition fed by the
+    // completions above (finished requests -> TTFT/TPOT histograms)
+    let m = get(&addr, "/metrics");
+    assert!(m.contains("200 OK"), "{m}");
+    assert!(m.contains("Content-Type: text/plain; version=0.0.4"), "{m}");
+    assert!(m.contains("# TYPE hydra_ttft_seconds histogram"), "{m}");
+    assert!(m.contains("hydra_ttft_seconds_bucket{le=\"+Inf\"}"), "{m}");
+    assert!(m.contains("hydra_requests_total 4"), "{m}");
+    assert!(m.contains("hydra_requests_finished_total 4"), "{m}");
+    assert!(m.contains("# TYPE hydra_queue_depth gauge"), "{m}");
+    assert!(m.contains("hydra_reconfigs_total 0"), "{m}");
+
+    // /status carries the registry snapshot alongside the layout
+    let st = get(&addr, "/status");
+    assert!(st.contains("\"metrics\":"), "{st}");
+
+    // ops surface: /trace is Chrome trace-event JSON with real spans
+    let t = get(&addr, "/trace");
+    assert!(t.contains("200 OK"), "{t}");
+    assert!(t.contains("Content-Type: application/json"), "{t}");
+    assert!(t.contains("\"traceEvents\":["), "{t}");
+    assert!(t.contains("prefill_exec"), "{t}");
+
     server.shutdown();
 }

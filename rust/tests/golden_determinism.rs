@@ -96,6 +96,41 @@ fn seeded_digests_are_deterministic_and_match_the_golden_file() {
     }
 }
 
+/// The flight recorder is an observer, not a participant: turning it on
+/// must leave every scheduling decision — and therefore the digest —
+/// bit-identical, while actually capturing spans. This is the obs
+/// subsystem's core contract (`SimConfig::trace` docs).
+#[test]
+fn tracing_on_is_digest_identical_and_captures_spans() {
+    let model = ModelSpec::llava15_7b();
+    for cluster in ["8EPD", "1E3P4D"] {
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse(cluster).unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), TRACE_RATE, TRACE_SEED)
+            .generate(&model, TRACE_N);
+        let off = simulate(&cfg, &reqs);
+        cfg.trace = true;
+        let on = simulate(&cfg, &reqs);
+        assert_eq!(
+            off.digest(),
+            on.digest(),
+            "{cluster}: enabling the flight recorder must not reschedule"
+        );
+        assert!(off.trace.is_empty(), "{cluster}: tracing off records nothing");
+        assert!(!on.trace.is_empty(), "{cluster}: tracing on captures spans");
+        assert_eq!(on.trace_dropped, 0, "{cluster}: default ring holds the whole run");
+        let rendered = on.trace_json().to_string();
+        assert!(rendered.starts_with("{\"traceEvents\":"), "chrome trace shape");
+        let parsed = json::parse(&rendered).expect("trace JSON parses");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(events.len() >= on.trace.len(), "metadata + mirrored events");
+    }
+}
+
 fn render_golden(computed: &[(String, String)]) -> String {
     let mut s = String::from("{\n");
     s.push_str(
