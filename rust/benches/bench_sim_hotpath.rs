@@ -2,33 +2,45 @@
 //!
 //! Runs seeded traces through `simulate` across the EPD cluster shapes
 //! and reports **engine** speed (events/sec, requests/sec), allocation
-//! pressure (via a counting global allocator), and a peak-RSS proxy
-//! (`VmHWM` on Linux), then writes everything to a JSON file
+//! pressure (via a counting global allocator with per-thread counters —
+//! a sharded run's worker threads are its shards, so the per-thread
+//! counts are per-shard counts), and a peak-RSS proxy (`VmHWM` on
+//! Linux), then writes everything to a JSON file
 //! (`BENCH_sim_hotpath.json` by default) so each commit's numbers land in
 //! the perf trajectory. Behaviour digests (`SimResult::digest`) ride
 //! along so a perf regression hunt can immediately tell "slower" apart
-//! from "different".
+//! from "different" — and every sharded row's digest is asserted against
+//! its unsharded twin right here, making the bench a correctness gate
+//! for the parallel engine too.
 //!
 //! Modes:
 //!   cargo bench --bench bench_sim_hotpath                 # full: 100k-request traces
+//!                                                         #  + 1000-instance / 1M-request
+//!                                                         #  diurnal + flash-crowd rows
 //!   cargo bench --bench bench_sim_hotpath -- --small      # CI smoke: ~2k requests, <30s
+//!                                                         #  + 64-instance --shards 4 row
 //!   ... -- --out PATH                                     # where to write the JSON
 //!
 //! The events/sec on the 100k-request `8EPD` trace is the headline number
-//! perf PRs must not regress (and the hot-path overhaul must improve ≥3x
-//! over the pre-overhaul engine).
+//! perf PRs must not regress; the cluster-scale story is the
+//! `diurnal/100E300P600D` pair — events/sec must scale >1x from
+//! `shards=1` to `shards=4` on the multi-million-event trace.
 
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use hydrainfer::benchkit;
 use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::core::RequestSpec;
 use hydrainfer::scheduler::Policy;
 use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig};
 use hydrainfer::util::cli::Args;
 use hydrainfer::util::json::Json;
-use hydrainfer::workload::{shared_image_trace, Dataset, PoissonGenerator};
+use hydrainfer::workload::{
+    diurnal_trace, flash_crowd_trace, shared_image_trace, Dataset, PoissonGenerator,
+};
 
 // ---------------------------------------------------------------- allocator
 
@@ -37,14 +49,45 @@ static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
 static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
 static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
 
+// Per-thread allocation counts. Every thread grabs a fresh slot the first
+// time it allocates; the engine spawns its shard workers per `simulate`
+// call, so the slots claimed during one run ARE that run's shards. Slot 0
+// is the main thread (setup + barrier phases).
+const MAX_THREADS: usize = 64;
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static THREAD_ALLOCS: [AtomicU64; MAX_THREADS] = [ZERO; MAX_THREADS];
+static NEXT_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+#[inline]
+fn thread_slot() -> usize {
+    // `try_with`: allocation can happen while this thread's TLS is being
+    // torn down — fold those stragglers into the last slot
+    SLOT.try_with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT_SLOT.fetch_add(1, Ordering::Relaxed).min(MAX_THREADS - 1);
+            s.set(v);
+        }
+        v
+    })
+    .unwrap_or(MAX_THREADS - 1)
+}
+
 /// System allocator wrapped with relaxed counters: total allocation count
-/// and bytes (the "allocation-free event loop" regression detector) plus
-/// a live/peak watermark (heap-side RSS proxy).
+/// and bytes (the "allocation-free event loop" regression detector), a
+/// live/peak watermark (heap-side RSS proxy), and per-thread counts (the
+/// per-shard breakdown for parallel runs).
 struct CountingAlloc;
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        THREAD_ALLOCS[thread_slot()].fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         let live = LIVE_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed)
             + layout.size() as u64;
@@ -86,6 +129,7 @@ fn vm_hwm_kb() -> u64 {
 struct RunResult {
     label: String,
     cluster: String,
+    shards: usize,
     requests: usize,
     events: u64,
     finished: usize,
@@ -94,11 +138,15 @@ struct RunResult {
     reqs_per_s: f64,
     allocs: u64,
     alloc_bytes: u64,
+    /// Allocation counts of the worker threads this run spawned — one
+    /// entry per shard (empty for the serial `shards=1` path, where the
+    /// window loop runs on the main thread).
+    worker_allocs: Vec<u64>,
     digest: u64,
 }
 
 fn run_trace(label: &str, cluster: &str, reqs_n: usize, rate: f64, shared: bool) -> RunResult {
-    run_trace_cfg(label, cluster, reqs_n, rate, shared, false)
+    run_trace_cfg(label, cluster, reqs_n, rate, shared, false, 1)
 }
 
 fn run_trace_cfg(
@@ -108,15 +156,9 @@ fn run_trace_cfg(
     rate: f64,
     shared: bool,
     trace: bool,
+    shards: usize,
 ) -> RunResult {
     let model = ModelSpec::llava15_7b();
-    let mut cfg = SimConfig::new(
-        model.clone(),
-        ClusterSpec::parse(cluster).unwrap(),
-        Policy::StageLevel,
-        SloSpec::new(0.25, 0.04),
-    );
-    cfg.trace = trace;
     let reqs = if shared {
         // hot-content trace: 32 unique images + a shared system prompt,
         // exercising the directory / fetch-over-recompute machinery
@@ -124,14 +166,36 @@ fn run_trace_cfg(
     } else {
         PoissonGenerator::new(Dataset::textcaps(), rate, 42).generate(&model, reqs_n)
     };
+    let mut cfg = base_cfg(cluster);
+    cfg.trace = trace;
+    cfg.shards = shards;
+    run_with(label, cluster, &cfg, &reqs)
+}
+
+fn base_cfg(cluster: &str) -> SimConfig {
+    SimConfig::new(
+        ModelSpec::llava15_7b(),
+        ClusterSpec::parse(cluster).unwrap(),
+        Policy::StageLevel,
+        SloSpec::new(0.25, 0.04),
+    )
+}
+
+fn run_with(label: &str, cluster: &str, cfg: &SimConfig, reqs: &[RequestSpec]) -> RunResult {
     let (a0, b0, _) = alloc_snapshot();
+    let slot0 = NEXT_SLOT.load(Ordering::Relaxed);
     let t0 = Instant::now();
-    let res = simulate(&cfg, &reqs);
+    let res = simulate(cfg, reqs);
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     let (a1, b1, _) = alloc_snapshot();
+    let slot1 = NEXT_SLOT.load(Ordering::Relaxed).min(MAX_THREADS);
+    let worker_allocs: Vec<u64> = (slot0.min(MAX_THREADS)..slot1)
+        .map(|i| THREAD_ALLOCS[i].load(Ordering::Relaxed))
+        .collect();
     RunResult {
         label: label.to_string(),
         cluster: cluster.to_string(),
+        shards: cfg.shards,
         requests: reqs.len(),
         events: res.events,
         finished: res.metrics.num_finished(),
@@ -140,8 +204,43 @@ fn run_trace_cfg(
         reqs_per_s: reqs.len() as f64 / wall,
         allocs: a1 - a0,
         alloc_bytes: b1 - b0,
+        worker_allocs,
         digest: res.digest(),
     }
+}
+
+/// Run one big-trace workload at `shards` ∈ {1, 4}, assert the digests
+/// are bit-identical (the bench doubles as the cluster-scale correctness
+/// gate), and return both rows.
+fn run_scaling_pair(
+    label: &str,
+    cluster: &str,
+    reqs: &[RequestSpec],
+) -> (RunResult, RunResult) {
+    // 1000 instances: the content directory caps at 64 holders, and the
+    // cluster-scale rows measure raw engine + merge throughput — content
+    // machinery has its own rows above
+    let mut cfg = base_cfg(cluster);
+    cfg.content_cache = false;
+    cfg.cache_directory = false;
+    cfg.shards = 1;
+    let serial = run_with(&format!("{label}/shards1"), cluster, &cfg, reqs);
+    cfg.shards = 4;
+    let sharded = run_with(&format!("{label}/shards4"), cluster, &cfg, reqs);
+    assert_eq!(
+        serial.digest, sharded.digest,
+        "{label}: shards=4 moved the digest on the {cluster} trace"
+    );
+    let speedup = sharded.events_per_s / serial.events_per_s.max(1e-9);
+    println!(
+        "{label}: {:.2}Mev serial {:.2}s, sharded {:.2}s -> {speedup:.2}x events/s \
+         (worker allocs: {:?})",
+        serial.events as f64 / 1e6,
+        serial.wall_s,
+        sharded.wall_s,
+        sharded.worker_allocs,
+    );
+    (serial, sharded)
 }
 
 fn main() {
@@ -171,16 +270,58 @@ fn main() {
     // when disabled" proof (their alloc counters must match the pre-obs
     // baseline); this row prices tracing ON, and its digest must equal
     // the untraced 8EPD row — observation never reschedules
-    runs.push(run_trace_cfg("poisson/8EPD/traced", "8EPD", n, rate, false, true));
+    runs.push(run_trace_cfg("poisson/8EPD/traced", "8EPD", n, rate, false, true, 1));
     assert_eq!(
         runs.last().unwrap().digest,
         runs[0].digest,
         "tracing on must not change scheduling (digest mismatch vs untraced 8EPD)"
     );
 
-    let widths = [22, 10, 12, 14, 12, 12, 20];
+    // sharded smoke pair: 64 colocated instances, shards=1 vs shards=4 on
+    // the same trace — the digest assert runs in every CI smoke job
+    let model = ModelSpec::llava15_7b();
+    let smoke_reqs =
+        PoissonGenerator::new(Dataset::textcaps(), rate, 42).generate(&model, n.min(4_000));
+    {
+        let mut cfg = base_cfg("64EPD");
+        cfg.shards = 1;
+        let serial = run_with("poisson/64EPD/shards1", "64EPD", &cfg, &smoke_reqs);
+        cfg.shards = 4;
+        let sharded = run_with("poisson/64EPD/shards4", "64EPD", &cfg, &smoke_reqs);
+        assert_eq!(
+            serial.digest, sharded.digest,
+            "64EPD: shards=4 moved the digest — the parallel merge is broken"
+        );
+        runs.push(serial);
+        runs.push(sharded);
+    }
+
+    // cluster-scale rows (full mode): 1000 instances, ~1M requests, load
+    // that breathes (diurnal) or spikes (flash crowd). Each pair is run at
+    // shards=1 and shards=4 with the digests asserted identical — the
+    // headline scaling number for the parallel engine.
+    let mut scaling: Vec<(String, f64)> = Vec::new();
+    if !small {
+        let cluster = "100E300P600D"; // 1000 instances, disaggregated:
+                                      // migrations constantly cross shards
+        let diurnal = diurnal_trace(&model, &Dataset::pope(), 10_000.0, 0.6, 60.0, 1_000_000, 42);
+        let (a, b) = run_scaling_pair("diurnal/100E300P600D", cluster, &diurnal);
+        scaling.push(("diurnal".into(), b.events_per_s / a.events_per_s.max(1e-9)));
+        runs.push(a);
+        runs.push(b);
+        drop(diurnal);
+
+        let crowd =
+            flash_crowd_trace(&model, &Dataset::pope(), 8_000.0, 800_000, 10, 80_000.0, 0.25, 42);
+        let (a, b) = run_scaling_pair("flash-crowd/100E300P600D", cluster, &crowd);
+        scaling.push(("flash-crowd".into(), b.events_per_s / a.events_per_s.max(1e-9)));
+        runs.push(a);
+        runs.push(b);
+    }
+
+    let widths = [26, 7, 10, 12, 14, 12, 12, 20];
     benchkit::header(
-        &["trace", "requests", "events", "events/s", "reqs/s", "wall s", "digest"],
+        &["trace", "shards", "requests", "events", "events/s", "reqs/s", "wall s", "digest"],
         &widths,
     );
     for r in &runs {
@@ -189,6 +330,7 @@ fn main() {
             benchkit::row(
                 &[
                     r.label.clone(),
+                    r.shards.to_string(),
                     r.requests.to_string(),
                     r.events.to_string(),
                     format!("{:.0}", r.events_per_s),
@@ -213,7 +355,7 @@ fn main() {
     let total_events: u64 = runs.iter().map(|r| r.events).sum();
     let total_wall: f64 = runs.iter().map(|r| r.wall_s).sum();
     let json = Json::obj(vec![
-        ("schema", Json::num(1.0)),
+        ("schema", Json::num(2.0)),
         ("bench", Json::str("sim_hotpath")),
         ("mode", Json::str(if small { "small" } else { "full" })),
         ("requests_per_trace", Json::num(n as f64)),
@@ -223,6 +365,7 @@ fn main() {
                 Json::obj(vec![
                     ("trace", Json::str(r.label.clone())),
                     ("cluster", Json::str(r.cluster.clone())),
+                    ("shards", Json::num(r.shards as f64)),
                     ("requests", Json::num(r.requests as f64)),
                     ("events", Json::num(r.events as f64)),
                     ("finished", Json::num(r.finished as f64)),
@@ -231,7 +374,20 @@ fn main() {
                     ("requests_per_s", Json::num(r.reqs_per_s)),
                     ("allocs", Json::num(r.allocs as f64)),
                     ("alloc_bytes", Json::num(r.alloc_bytes as f64)),
+                    (
+                        "worker_allocs",
+                        Json::arr(r.worker_allocs.iter().map(|&a| Json::num(a as f64))),
+                    ),
                     ("digest", Json::str(format!("{:016x}", r.digest))),
+                ])
+            })),
+        ),
+        (
+            "shard_scaling",
+            Json::arr(scaling.iter().map(|(w, s)| {
+                Json::obj(vec![
+                    ("workload", Json::str(w.clone())),
+                    ("events_per_s_speedup_shards4", Json::num(*s)),
                 ])
             })),
         ),
@@ -261,13 +417,7 @@ fn main() {
 
     // small sample Perfetto trace, uploaded as a CI artifact so a reviewer
     // can open a real flight-recorder dump without running anything
-    let model = ModelSpec::llava15_7b();
-    let mut cfg = SimConfig::new(
-        model.clone(),
-        ClusterSpec::parse("1E3P4D").unwrap(),
-        Policy::StageLevel,
-        SloSpec::new(0.25, 0.04),
-    );
+    let mut cfg = base_cfg("1E3P4D");
     cfg.trace = true;
     let reqs = PoissonGenerator::new(Dataset::textcaps(), 20.0, 42).generate(&model, 200);
     let res = simulate(&cfg, &reqs);

@@ -164,6 +164,14 @@ impl ContentDirectory {
     /// fresh `Vec` per routing decision.
     pub fn prefix_blocks_into(&mut self, hashes: &[BlockHash], out: &mut Vec<usize>) {
         self.stats.queries += 1;
+        self.prefix_blocks_into_ro(hashes, out);
+    }
+
+    /// Read-only [`ContentDirectory::prefix_blocks_into`]: same sweep, no
+    /// stats bump. The sharded simulator's workers query a frozen
+    /// directory concurrently mid-window and account their query counts
+    /// per shard, so the shared view must not be mutated.
+    pub fn prefix_blocks_into_ro(&self, hashes: &[BlockHash], out: &mut Vec<usize>) {
         out.clear();
         out.resize(self.n, 0);
         if self.n == 0 {
@@ -211,7 +219,21 @@ impl ContentDirectory {
         exclude: usize,
         load_of: impl Fn(usize) -> f64,
     ) -> Option<(usize, usize)> {
-        let prefix = self.prefix_blocks(hashes);
+        self.stats.queries += 1;
+        self.best_holder_by_ro(hashes, exclude, load_of)
+    }
+
+    /// Read-only [`ContentDirectory::best_holder_by`]: no stats bump.
+    /// Sharded-simulator workers plan fetches against a frozen directory;
+    /// they count queries per shard and merge at the end of the run.
+    pub fn best_holder_by_ro(
+        &self,
+        hashes: &[BlockHash],
+        exclude: usize,
+        load_of: impl Fn(usize) -> f64,
+    ) -> Option<(usize, usize)> {
+        let mut prefix = Vec::new();
+        self.prefix_blocks_into_ro(hashes, &mut prefix);
         let mut best: Option<(usize, usize, f64)> = None;
         for (i, &blocks) in prefix.iter().enumerate() {
             if i == exclude || blocks == 0 {
@@ -227,6 +249,23 @@ impl ContentDirectory {
             }
         }
         best.map(|(i, blocks, _)| (i, blocks))
+    }
+
+    /// Leading blocks of `hashes` that `holder` advertises (read-only, no
+    /// stats bump) — the sharded fetch-landing validation: a worker checks
+    /// "does the planned source still advertise the prefix?" against the
+    /// window-frozen directory instead of peeking into a peer's cache it
+    /// no longer shares an address space with.
+    pub fn holder_prefix_blocks(&self, holder: usize, hashes: &[BlockHash]) -> usize {
+        let bit = 1u64 << holder;
+        let mut n = 0;
+        for h in hashes {
+            if self.holder_mask(h) & bit == 0 {
+                break;
+            }
+            n += 1;
+        }
+        n
     }
 
     /// All advertised (hash, holder mask) pairs — ground-truth audits.

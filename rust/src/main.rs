@@ -63,6 +63,8 @@ fn print_usage() {
          \x20         --rate 8 --requests 200 --policy stage-level [--goodput]\n\
          \x20         [--elastic]  (online role reconfiguration)\n\
          \x20         [--trace-out trace.json]  (Perfetto flight-recorder dump)\n\
+         \x20         [--shards 4]  (parallel event shards; digest-invariant)\n\
+         \x20         [--window 0.002]  (cross-shard merge window, seconds)\n\
          plan      --model llava-next-7b --dataset textcaps --gpus 8\n\
          budgets   --model llava-1.5-7b --tpot 0.04\n\
          workload  --model llava-1.5-7b --dataset mme --rate 4 --n 500\n\
@@ -134,6 +136,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let mut cfg = SimConfig::new(model.clone(), cluster.clone(), policy, slo);
     cfg.seed = seed;
+    // --shards N: run the event engine on N parallel shards. Pure execution
+    // strategy — the digest is bit-identical for any shard count.
+    cfg.shards = args.usize_or("shards", 1)?.max(1);
+    // --window SECONDS: override the conservative merge window (default:
+    // the cost model's minimum link latency).
+    cfg.window = args.f64_or("window", 0.0)?;
     if args.flag("elastic") {
         cfg.controller = Some(hydrainfer::config::ControllerConfig::default());
     }
@@ -170,11 +178,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let res = simulate(&cfg, &reqs);
     let m = &res.metrics;
     println!(
-        "model={} dataset={} cluster={} policy={} rate={rate} req/s n={n}",
+        "model={} dataset={} cluster={} policy={} rate={rate} req/s n={n}{}",
         model.name,
         dataset.name,
         cluster.label(),
-        policy.name()
+        policy.name(),
+        if cfg.shards > 1 { format!("  shards={}", cfg.shards) } else { String::new() }
     );
     println!(
         "  finished {}/{}  batches={}  migrations={}  dropped={}  reconfigs={}",

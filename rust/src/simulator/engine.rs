@@ -1,19 +1,42 @@
-//! The discrete-event engine: instances, migrations, and the event loop.
+//! The discrete-event engine: instances, migrations, and the event loop —
+//! sharded by instance group and run on parallel worker threads with a
+//! deterministic cross-shard merge.
+//!
+//! # Sharding contract (the `--shards` / [`SimConfig::shards`] knob)
+//!
+//! Simulated time is cut into windows `[kΔ, (k+1)Δ)` where Δ =
+//! [`SimConfig::effective_window`] (conservative lookahead derived from
+//! the cost model's minimum link latency). Each shard owns a contiguous
+//! instance range ([`crate::simulator::shard_of`]) — its event heap,
+//! `Queues`, `Scratch`, and `PagedCache` state — and runs one window at a
+//! time touching **only** its own instances plus a frozen read-only view
+//! of the cluster (`Ctx`). Every cross-instance effect — migration
+//! retargets, EP/PD transfer landings releasing the source, cache-fetch
+//! sourcing, directory publish/retract gossip, controller ticks, arrival
+//! routing — is a boundary message delivered at the window barrier in
+//! canonical `(t, instance, seq)` order.
+//!
+//! The non-negotiable invariant: **the barrier protocol runs at every
+//! shard count, including 1**, so `shards = N` is bit-identical to
+//! `shards = 1` — [`SimResult::digest`] never moves with the shard count.
+//! Δ is a *fidelity* knob (how stale the routing view may be), not a
+//! correctness knob. The golden-determinism suite sweeps `shards ∈
+//! {1, 2, 4}` over every pinned shape × policy as the safety net for the
+//! parallelization itself.
 //!
 //! # Hot-path invariants (the `bench_sim_hotpath` contract)
 //!
-//! The event loop is the substrate every figure-level bench and scaling
-//! experiment runs on, so its per-event cost must stay O(1)-ish and
-//! allocation-free:
-//!
 //! * **Hash once.** A request's content-hash chains ([`HashChains`]) are
-//!   derived exactly once, when it enters the system, and shared via
-//!   `Arc` — routing, commits, migration targeting, and fetch planning
-//!   all borrow the same chains. Never call `content::spec_*_hashes`
-//!   from event handlers; go through `EngineState::chains_for`.
+//!   derived exactly once, when it is routed, and shared via `Arc` —
+//!   routing, commits, migration targeting, and fetch planning all borrow
+//!   the same chains (they move shard-to-shard with the request). Never
+//!   call `content::spec_*_hashes` from event handlers; go through
+//!   `chains_entry`.
 //! * **Reuse scratch.** Candidate lists, affinity scores, and directory
-//!   prefix sweeps write into `Scratch` buffers that live for the whole
-//!   run. Event handlers must not allocate per event.
+//!   prefix sweeps write into per-run scratch buffers (`Scratch` per
+//!   shard, `RouteScratch` at the barrier). The steady-state worker loop
+//!   allocates nothing per event; boundary messages reuse the `Vec`s the
+//!   cache layer already returns (`commit_hashes`, `drain_evicted`).
 //! * **Index, don't scan.** Queue membership questions go through the
 //!   `Queues` id → slot index and per-stage FIFOs; hot maps use the
 //!   in-crate Fx hasher (`util::fxhash`), which also makes iteration
@@ -24,8 +47,13 @@
 //! of this file can prove themselves behaviour-preserving.
 
 use std::collections::BinaryHeap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
 
+use crate::cache::{
+    BlockHash, CacheStats, ContentDirectory, HashChains, PagedCache, COST_IMAGE,
+};
+use crate::config::ControllerConfig;
 use crate::controller::{
     ClusterSample, DrainTracker, InstanceSample, ReconfigEvent, ReconfigPolicy,
     StageLoadEstimator, StageRates,
@@ -37,45 +65,55 @@ use crate::costmodel::{
 };
 use crate::metrics::RunMetrics;
 use crate::obs::trace::{mask_bits, SpanKind, Tracer};
-use crate::cache::{
-    BlockHash, CacheStats, ContentDirectory, HashChains, PagedCache, COST_IMAGE,
-};
 use crate::router::{RoutePolicy, Router};
 use crate::scheduler::{
     compute_image_budget, compute_token_budget, Batch, BudgetProfile, Budgets, Queues, ReqState,
     Scheduler, StageMask, TaskWork,
 };
 use crate::simulator::{
-    cache_blocks, img_blocks_for, kv_blocks_for, SimConfig, IMG_BLOCK, KV_BLOCK,
+    cache_blocks, img_blocks_for, kv_blocks_for, shard_bounds, shard_of, SimConfig, IMG_BLOCK,
+    KV_BLOCK,
 };
 use crate::util::fxhash::FxHashMap;
 
 // ---------------------------------------------------------------- events
 
+/// Shard-local events. Every event belongs to exactly one instance (and
+/// therefore one shard); anything cross-instance travels as a [`Msg`]
+/// instead and re-enters a heap only at a window barrier.
 #[derive(Debug)]
 enum EvKind {
-    Arrival(usize),
-    BatchDone(usize),
-    TransferDone { src: usize, dst: usize, req: RequestId },
-    /// A standalone cache fetch (fetch-over-recompute) landed at `dst`:
-    /// the request parked in `SimInstance::fetching` resumes with the
-    /// fetched content credited, or falls back to recompute when the
-    /// advertised holder no longer has it (staleness).
-    FetchDone { dst: usize, req: RequestId },
-    /// Periodic elastic-controller evaluation (only when enabled).
-    ControllerTick,
+    /// `requests[i]` was routed to this instance at the barrier and
+    /// arrives here at its arrival time.
+    Deliver(usize),
+    /// The instance's current batch completes.
+    BatchDone,
+    /// An admitted migration pull lands (the target holds the data).
+    TransferLand { req: RequestId },
+    /// A standalone cache fetch (fetch-over-recompute) landed: the
+    /// request parked in `SimInstance::fetching` resumes with the fetched
+    /// content credited, or falls back to recompute when the advertised
+    /// holder's advertisement went stale mid-flight.
+    FetchDone { req: RequestId },
+    /// The migrated request's transfer landed at the target; this source
+    /// instance releases its queue slot and cache blocks.
+    SrcRelease { req: RequestId },
+    /// Barrier-injected nudge: admit pending pulls / start a batch.
+    Wake,
 }
 
 #[derive(Debug)]
 struct Ev {
     t: f64,
     seq: u64,
+    /// Global id of the instance this event belongs to.
+    inst: u32,
     kind: EvKind,
 }
 
-// Heap ordering only needs (t, seq) — `seq` is unique, so equality on the
-// key pair is a genuine equivalence and `EvKind` needs no `PartialEq`
-// (nor `Clone`: events are moved, never copied).
+// Heap ordering only needs (t, seq) — `seq` is unique within a shard, so
+// equality on the key pair is a genuine equivalence and `EvKind` needs no
+// `PartialEq` (nor `Clone`: events are moved, never copied).
 impl PartialEq for Ev {
     fn eq(&self, other: &Self) -> bool {
         self.seq == other.seq && self.t.total_cmp(&other.t).is_eq()
@@ -95,6 +133,48 @@ impl Ord for Ev {
             .total_cmp(&self.t)
             .then(other.seq.cmp(&self.seq))
     }
+}
+
+// ------------------------------------------------------------- messages
+
+/// Cross-shard boundary message payloads. Emitted by shard workers
+/// mid-window, applied by the barrier in canonical order.
+#[derive(Debug)]
+enum MsgKind {
+    /// The creator committed these KV block hashes: advertise them.
+    PublishKv(Vec<BlockHash>),
+    /// The creator committed these image-embedding block hashes.
+    PublishImg(Vec<BlockHash>),
+    /// The creator evicted these KV blocks: withdraw the advertisements.
+    RetractKv(Vec<BlockHash>),
+    /// The creator evicted these image-embedding blocks.
+    RetractImg(Vec<BlockHash>),
+    /// The creator wants `req` migrated to an instance serving `next`
+    /// (§4.3 step 1); the barrier routes it over the live cluster view.
+    MigrateReq { req: RequestId, next: Stage },
+    /// The creator (pull target) admitted `req` from `src` and scheduled
+    /// its transfer to land at `land`: the barrier tells `src` to release
+    /// the request's queue slot and cache blocks.
+    SrcRelease { src: usize, req: RequestId, land: f64 },
+}
+
+/// A boundary message. Barrier delivery order is `(t, inst, seq)` —
+/// time-sorted, creator-id tie-broken, per-creator creation order last —
+/// which is independent of how instances are partitioned into shards:
+/// the root of the shards=N ≡ shards=1 guarantee.
+#[derive(Debug)]
+struct Msg {
+    t: f64,
+    /// Global id of the creating instance.
+    inst: u32,
+    /// Per-shard monotone creation counter.
+    seq: u64,
+    kind: MsgKind,
+}
+
+fn emit_into(outbox: &mut Vec<Msg>, msg_seq: &mut u64, t: f64, inst: u32, kind: MsgKind) {
+    *msg_seq += 1;
+    outbox.push(Msg { t, inst, seq: *msg_seq, kind });
 }
 
 // -------------------------------------------------------------- instances
@@ -131,9 +211,9 @@ struct PendingFetch {
     /// aligned) the fetch extends the local cached prefix to.
     kv_src: Option<(usize, usize)>,
     /// The plan was already re-validated once after a stale landing
-    /// (holder evicted mid-flight) and redirected to a surviving holder.
-    /// One redirect per fetch: a second stale landing falls back to
-    /// recompute instead of chasing a churning directory.
+    /// (holder's advertisement withdrawn mid-flight) and redirected to a
+    /// surviving holder. One redirect per fetch: a second stale landing
+    /// falls back to recompute instead of chasing a churning directory.
     redirected: bool,
     /// This fetch already contributed to `stale_fetches` (an abandoned
     /// part on an earlier landing); a later landing must not count it
@@ -142,28 +222,13 @@ struct PendingFetch {
     stale_counted: bool,
 }
 
-/// The cluster-wide content directory pair (KV + image planes) plus the
-/// fetch counters accumulated while it drives decisions.
-struct DirState {
+/// The cluster-wide content directory pair (KV + image planes). Owned by
+/// the frozen window context: shard workers read it (`_ro` sweeps), only
+/// the barrier mutates it (publish/retract gossip applied in canonical
+/// message order), so every shard count sees the same directory history.
+struct DirPair {
     kv: ContentDirectory,
     img: ContentDirectory,
-    report: DirectoryReport,
-}
-
-impl DirState {
-    /// Drain an instance's eviction log into directory retractions. Must
-    /// run after every cache-mutating step so directory answers stay
-    /// exactly equal to the per-instance index scans they replace.
-    fn sync_evictions(&mut self, inst: &mut SimInstance) {
-        let kv = inst.kv.drain_evicted();
-        if !kv.is_empty() {
-            self.kv.retract(inst.id, &kv);
-        }
-        let img = inst.img.drain_evicted();
-        if !img.is_empty() {
-            self.img.retract(inst.id, &img);
-        }
-    }
 }
 
 struct SimInstance {
@@ -321,6 +386,19 @@ pub struct DirectoryReport {
     pub redirected_fetches: usize,
 }
 
+impl DirectoryReport {
+    fn absorb(&mut self, o: &DirectoryReport) {
+        self.queries += o.queries;
+        self.publishes += o.publishes;
+        self.retractions += o.retractions;
+        self.fetches += o.fetches;
+        self.fetched_images += o.fetched_images;
+        self.fetched_kv_tokens += o.fetched_kv_tokens;
+        self.stale_fetches += o.stale_fetches;
+        self.redirected_fetches += o.redirected_fetches;
+    }
+}
+
 impl CacheReport {
     /// Fraction of reuse-eligible prefill tokens served from cache.
     pub fn kv_hit_rate(&self) -> f64 {
@@ -337,6 +415,17 @@ impl CacheReport {
         } else {
             self.img_hit_images as f64 / self.img_total_images as f64
         }
+    }
+
+    fn absorb(&mut self, o: &CacheReport) {
+        self.kv_hit_tokens += o.kv_hit_tokens;
+        self.kv_lookup_tokens += o.kv_lookup_tokens;
+        self.img_hit_images += o.img_hit_images;
+        self.img_total_images += o.img_total_images;
+        self.migration_tokens_saved += o.migration_tokens_saved;
+        self.kv_stats.merge(&o.kv_stats);
+        self.img_stats.merge(&o.img_stats);
+        self.directory.absorb(&o.directory);
     }
 }
 
@@ -366,7 +455,7 @@ pub struct SimResult {
     /// with [`SimResult::trace_json`]. Excluded from [`SimResult::digest`]
     /// — observation must never look like a behaviour change.
     pub trace: Vec<crate::obs::trace::Span>,
-    /// Spans overwritten in the ring (0 = the whole run fit).
+    /// Spans overwritten in the rings (0 = the whole run fit).
     pub trace_dropped: u64,
 }
 
@@ -376,7 +465,9 @@ impl SimResult {
     /// in ascending request-id order, plus the run counters. Two runs are
     /// behaviourally identical iff their digests match — the golden
     /// determinism suite pins these for seeded traces, and perf refactors
-    /// of the engine must keep them bit-identical.
+    /// of the engine must keep them bit-identical. Since the sharded
+    /// engine landed, the suite also sweeps `shards ∈ {1, 2, 4}` — the
+    /// digest must not move with the shard count either.
     ///
     /// `events` is deliberately excluded: it fingerprints the *engine's
     /// internal step count*, not request-visible behaviour.
@@ -427,11 +518,23 @@ impl SimResult {
     }
 }
 
-/// Scratch buffers reused across events — the event loop's guarantee of
-/// allocation-free routing/affinity decisions. Each buffer is cleared by
-/// its producer before use; contents never survive an event.
+// ------------------------------------------------------- shards & barrier
+
+/// Per-shard scratch buffers reused across events — the worker loop's
+/// guarantee of allocation-free batch application. Cleared by the
+/// producer before use; contents never survive an event.
 #[derive(Default)]
 struct Scratch {
+    /// Requests finishing in the batch being applied.
+    to_finish: Vec<RequestId>,
+    /// Requests migrating out of the batch being applied.
+    to_migrate: Vec<(RequestId, Stage)>,
+}
+
+/// Barrier-side scratch for routing decisions (arrivals + migration
+/// retargets all route at the barrier, over the frozen cluster view).
+#[derive(Default)]
+struct RouteScratch {
     /// Instance ids eligible for the current routing decision.
     candidates: Vec<usize>,
     /// Cache-affinity score per candidate (parallel to `candidates`).
@@ -442,60 +545,120 @@ struct Scratch {
     kv_pfx: Vec<usize>,
     /// Directory sweep output, image plane.
     img_pfx: Vec<usize>,
-    /// Requests finishing in the batch being applied.
-    to_finish: Vec<RequestId>,
-    /// Requests migrating out of the batch being applied.
-    to_migrate: Vec<(RequestId, Stage)>,
 }
 
-/// All mutable engine state one event handler may touch, bundled so
-/// helpers take `(&mut [SimInstance], &mut EngineState)` instead of a
-/// dozen loose arguments, and so scratch buffers + memoized hash chains
-/// live for the whole run.
-struct EngineState<'a> {
-    cfg: &'a SimConfig,
-    budgets: Budgets,
-    router: Router,
-    tracker: DrainTracker,
-    /// Cluster-wide content directory (None = per-instance affinity).
-    dirs: Option<DirState>,
+/// One shard: a contiguous instance range plus every piece of mutable
+/// state its worker thread may touch mid-window. Nothing in here is
+/// visible to other shards until the barrier drains `outbox`.
+struct Shard {
+    /// Global id of `instances[0]` (the shard covers `lo..lo + len`).
+    lo: usize,
+    instances: Vec<SimInstance>,
     heap: BinaryHeap<Ev>,
+    /// Event sequence counter (unique within the shard; cross-shard
+    /// ordering never compares raw event seqs — only message order).
     seq: u64,
+    /// Boundary messages created this window, drained at the barrier.
+    outbox: Vec<Msg>,
+    /// Message sequence counter (per-creator creation order).
+    msg_seq: u64,
     events: u64,
-    migrations: usize,
     batches: usize,
-    dropped: usize,
     report: CacheReport,
+    /// Fetch-over-recompute counters banked shard-side; directory
+    /// publish/retract/query totals come from the directory itself.
+    dir_report: DirectoryReport,
+    /// Lifecycles of requests currently owned by this shard (they move
+    /// with the request on cross-shard migration; the barrier does the
+    /// move, so workers always find their own requests here).
     lifecycles: FxHashMap<u64, Lifecycle>,
+    /// When each in-flight request last became ready to be scheduled
+    /// (arrival or migration landing) — feeds queue-phase accounting.
     ready_since: FxHashMap<u64, f64>,
-    /// Hash-once memo: request id -> its content-hash chains. Entries are
-    /// inserted at arrival and dropped at finish; `chains_for` re-derives
-    /// on a miss so late touchpoints can never observe different hashes.
+    /// Hash-once memo: request id → its content-hash chains.
     chains: FxHashMap<u64, Arc<HashChains>>,
-    /// Shared empty chains for content-cache-off runs (no hashing at all).
+    /// Shared empty chain (content cache off ⇒ every request maps here).
     no_chains: Arc<HashChains>,
+    content_cache: bool,
+    /// Directory mode: publish/retract gossip must be emitted.
+    dirs_on: bool,
     scratch: Scratch,
-    /// Stage-span flight recorder. Off (`Tracer::off`) unless
-    /// `SimConfig::trace`: every emission below is then a single `None`
-    /// branch, and recording never feeds back into scheduling.
     tracer: Tracer,
 }
 
-impl EngineState<'_> {
-    fn push(&mut self, t: f64, kind: EvKind) {
+impl Shard {
+    /// Push a shard-local event (the only way events enter the heap
+    /// mid-window; barrier-injected events use the same counter, at the
+    /// barrier, so per-shard seq order is globally consistent).
+    fn push(&mut self, t: f64, inst: u32, kind: EvKind) {
         self.seq += 1;
-        self.heap.push(Ev { t, seq: self.seq, kind });
+        self.heap.push(Ev { t, seq: self.seq, inst, kind });
     }
 
-    /// The memoized hash chains for `spec` (hash-once rule). Off-cache
-    /// runs get the shared empty chains without touching the map.
-    fn chains_for(&mut self, spec: &RequestSpec) -> Arc<HashChains> {
-        chains_entry(&mut self.chains, self.cfg.content_cache, &self.no_chains, spec)
+    /// Emit a boundary message for barrier delivery.
+    fn emit(&mut self, t: f64, inst: u32, kind: MsgKind) {
+        emit_into(&mut self.outbox, &mut self.msg_seq, t, inst, kind);
     }
 }
 
-/// Field-level version of [`EngineState::chains_for`] for call sites that
-/// already hold disjoint borrows of other `EngineState` fields.
+/// Barrier-owned state: everything that represents the *cluster* rather
+/// than one shard — the router, drain tracker, controller, arrival
+/// cursor, and global counters. Only the barrier phase (single-threaded,
+/// between windows) touches this.
+struct Control {
+    router: Router,
+    tracker: DrainTracker,
+    controller: Option<(ControllerConfig, StageLoadEstimator, ReconfigPolicy)>,
+    /// Next controller tick time (INFINITY once the controller goes
+    /// quiescent or is absent).
+    next_tick: f64,
+    migrations: usize,
+    dropped: usize,
+    /// Barrier-side event count (controller ticks + drops); shard workers
+    /// count their own.
+    events: u64,
+    report: CacheReport,
+    tracer: Tracer,
+    /// Cursor into `order` (arrival-sorted request indices).
+    next_arrival: usize,
+    /// Request indices sorted by (arrival, index) — generator traces are
+    /// already sorted, but routing order must not depend on that.
+    order: Vec<u32>,
+    /// instance gid → shard index (stable for the whole run: role flips
+    /// never move an instance across shards — see tests/shard_partition.rs).
+    inst_shard: Vec<usize>,
+    /// Barrier message merge buffer (reused every window).
+    msgs: Vec<Msg>,
+    no_chains: Arc<HashChains>,
+    content_cache: bool,
+    /// Load routed to each instance this barrier but not yet visible in
+    /// its queues (arrivals all land within the window, so this clears
+    /// every barrier via `touched`).
+    pending: Vec<f64>,
+    touched: Vec<usize>,
+    rs: RouteScratch,
+}
+
+/// The frozen read-only cluster view shard workers see mid-window:
+/// window end, per-instance loads as of the barrier, and the content
+/// directory (barrier-mutated only, so its history is partition-free).
+struct Ctx {
+    /// Window end: workers process events strictly before `t1`.
+    t1: f64,
+    horizon: f64,
+    /// Per-instance load snapshot (directory mode only — fetch sourcing
+    /// breaks holder ties by load; empty otherwise).
+    loads: Vec<f64>,
+    dirs: Option<DirPair>,
+}
+
+/// Borrow an instance by global id across the shard slice.
+fn inst_ref<'a>(shards: &'a [Shard], inst_shard: &[usize], gid: usize) -> &'a SimInstance {
+    let s = inst_shard[gid];
+    &shards[s].instances[gid - shards[s].lo]
+}
+
+/// Hash-once chain lookup: derive on first touch, share the `Arc` after.
 fn chains_entry(
     chains: &mut FxHashMap<u64, Arc<HashChains>>,
     content_cache: bool,
@@ -509,6 +672,30 @@ fn chains_entry(
         .entry(spec.id.0)
         .or_insert_with(|| Arc::new(HashChains::of_spec(spec, KV_BLOCK, IMG_BLOCK)))
         .clone()
+}
+
+/// Emit retraction gossip for blocks the instance's caches just evicted.
+/// Must be called after every operation that can evict (reserve/grow);
+/// with the directory off the eviction log is not even tracked.
+fn emit_retractions(
+    inst: &mut SimInstance,
+    dirs_on: bool,
+    outbox: &mut Vec<Msg>,
+    msg_seq: &mut u64,
+    now: f64,
+) {
+    if !dirs_on {
+        return;
+    }
+    let gid = inst.id as u32;
+    let kv = inst.kv.drain_evicted();
+    if !kv.is_empty() {
+        emit_into(outbox, msg_seq, now, gid, MsgKind::RetractKv(kv));
+    }
+    let img = inst.img.drain_evicted();
+    if !img.is_empty() {
+        emit_into(outbox, msg_seq, now, gid, MsgKind::RetractImg(img));
+    }
 }
 
 /// Reserve blocks for an admitted request (must follow `can_admit`).
@@ -549,359 +736,6 @@ fn reserve_blocks(
     (kv_cached, img_cached)
 }
 
-/// Run the simulation over a request trace.
-pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
-    let masks = cfg.cluster.instance_masks();
-    let profile = BudgetProfile::default();
-    let token_budget = compute_token_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(64);
-    let image_budget = compute_image_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(1);
-    let budgets = Budgets { token_budget, image_budget, max_decode_batch: 512 };
-
-    // cluster-wide content directory (fetch-over-recompute) — requires the
-    // content cache; off reproduces per-instance affinity bit-for-bit
-    let dirs = (cfg.content_cache && cfg.cache_directory).then(|| DirState {
-        kv: ContentDirectory::new(masks.len()),
-        img: ContentDirectory::new(masks.len()),
-        report: DirectoryReport::default(),
-    });
-
-    let mut instances = build_instances(cfg, &masks, dirs.is_some());
-
-    let mut state = EngineState {
-        cfg,
-        budgets,
-        router: Router::new(RoutePolicy::LeastLoaded, cfg.seed),
-        tracker: DrainTracker::new(instances.len()),
-        dirs,
-        heap: BinaryHeap::new(),
-        seq: 0,
-        events: 0,
-        migrations: 0,
-        batches: 0,
-        dropped: 0,
-        report: CacheReport::default(),
-        lifecycles: FxHashMap::default(),
-        ready_since: FxHashMap::default(),
-        chains: FxHashMap::default(),
-        no_chains: Arc::new(HashChains::empty()),
-        scratch: Scratch::default(),
-        tracer: if cfg.trace {
-            Tracer::with_capacity(cfg.trace_capacity)
-        } else {
-            Tracer::off()
-        },
-    };
-
-    for (i, r) in requests.iter().enumerate() {
-        state.push(r.arrival, EvKind::Arrival(i));
-    }
-
-    // elastic control plane (estimator -> policy -> drain tracker)
-    let mut controller = cfg.controller.as_ref().map(|cc| {
-        let rates = StageRates::from_model(&cfg.model, &cfg.device);
-        (
-            cc.clone(),
-            StageLoadEstimator::new(cc.clone(), rates, Some(cfg.slo)),
-            ReconfigPolicy::new(cc.clone()),
-        )
-    });
-    if let Some((cc, _, _)) = &controller {
-        state.push(cc.tick, EvKind::ControllerTick);
-    }
-
-    while let Some(ev) = state.heap.pop() {
-        let now = ev.t;
-        if now > cfg.horizon {
-            break;
-        }
-        state.events += 1;
-        match ev.kind {
-            EvKind::Arrival(i) => {
-                let spec = requests[i].clone();
-                // route by request type (paper §4): first needed stage
-                let first = spec.first_stage();
-                state.scratch.candidates.clear();
-                for inst in instances.iter() {
-                    if inst.mask.serves(first) {
-                        state.scratch.candidates.push(inst.id);
-                    }
-                }
-                // content identity is derived exactly once, here (the
-                // hash-once rule); every later touchpoint borrows `ch`
-                let ch = if cfg.content_cache {
-                    Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK))
-                } else {
-                    state.no_chains.clone()
-                };
-                // cache affinity: prefer the candidate already holding
-                // this request's image embedding / KV prefix. With the
-                // directory, one sweep over the hash chain answers for
-                // every candidate at once; without it, each candidate's
-                // private index is scanned (PR 2 behaviour).
-                build_affinity(&instances, &mut state, &ch, true);
-                let Some(target) = route_among_affinity(&instances, &mut state) else {
-                    // no instance can serve this request type: count the
-                    // drop explicitly and leave no half-initialized state
-                    // behind (a stale Lifecycle + ready_since entry used
-                    // to leak here)
-                    state.dropped += 1;
-                    crate::log_trace!("t={now:.6} drop req={} (no instance serves {first:?})", spec.id.0);
-                    state.tracer.span(
-                        SpanKind::Drop,
-                        crate::obs::trace::NO_INSTANCE as usize,
-                        spec.id.0,
-                        now,
-                        now,
-                        0,
-                    );
-                    continue;
-                };
-                let rid = spec.id;
-                crate::log_trace!("t={now:.6} arrival req={} -> inst{target}", rid.0);
-                state.lifecycles.insert(rid.0, Lifecycle::new(spec.arrival));
-                state.ready_since.insert(rid.0, now);
-                if cfg.content_cache {
-                    state.chains.insert(rid.0, ch.clone());
-                }
-                let mut st = ReqState::new(spec);
-                if cfg.content_cache {
-                    instances[target].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
-                }
-                // fetch-over-recompute: the routed target lacks content a
-                // peer advertises, and pulling it is priced below
-                // recomputing — park the request until the transfer lands
-                if state.dirs.is_some() {
-                    match maybe_start_fetch(&mut instances, target, st, &ch, now, &mut state) {
-                        None => continue, // parked; FetchDone resumes it
-                        Some(back) => st = back,
-                    }
-                }
-                let stage = st.stage();
-                if instances[target].mask.serves(stage) {
-                    instances[target].queues.push_waiting(st);
-                } else {
-                    // cache hits advanced the request past every stage this
-                    // instance serves (e.g. a cached image on an E-only
-                    // node): admit it and hand it straight to the owner of
-                    // its next stage
-                    instances[target].queues.push_running(st);
-                    start_migration(&mut instances, target, rid, stage, now, &mut state);
-                    // no batch completion will wake the target on an
-                    // otherwise-idle cluster: admit the pull now
-                    process_inboxes(&mut instances, now, &mut state);
-                    for i in 0..instances.len() {
-                        try_start(&mut instances, i, now, &mut state);
-                    }
-                }
-                try_start(&mut instances, target, now, &mut state);
-            }
-
-            EvKind::BatchDone(iid) => {
-                let (batch, started) = instances[iid]
-                    .current
-                    .take()
-                    .expect("BatchDone for idle instance");
-                let dur = now - started;
-                crate::log_trace!(
-                    "t={now:.6} batch done inst{iid} items={} dur={dur:.6}",
-                    batch.items.len()
-                );
-                apply_batch(&mut instances, iid, &batch, started, dur, now, &mut state);
-                // wake everyone: migrations may have unblocked peers
-                process_inboxes(&mut instances, now, &mut state);
-                for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &mut state);
-                }
-            }
-
-            EvKind::TransferDone { src, dst, req } => {
-                // step 4: target holds the data; source releases resources
-                instances[src].queues.remove_running(req);
-                instances[src].release_all(req);
-                if let Some(pull) = instances[dst].incoming.remove(&req.0) {
-                    let mut r = pull.req;
-                    r.migrating = false;
-                    if pull.kv_cached > 0 {
-                        // prefill resumes at the prefix the target held
-                        r.cached_prefill = r.cached_prefill.max(pull.kv_cached);
-                        r.prefilled = r.prefilled.max(pull.kv_cached);
-                    }
-                    // the target now holds this content: publish it
-                    if cfg.content_cache {
-                        let ch = state.chains_for(&r.spec);
-                        match pull.phase {
-                            Phase::EpMigration => {
-                                if r.spec.image_hash.is_some() {
-                                    let new = instances[dst].img.commit_hashes(req, &ch.img);
-                                    if let Some(d) = state.dirs.as_mut() {
-                                        d.img.publish(dst, &new);
-                                    }
-                                }
-                            }
-                            _ => {
-                                let new =
-                                    instances[dst].kv.commit_hashes(req, ch.kv_commit());
-                                if let Some(d) = state.dirs.as_mut() {
-                                    d.kv.publish(dst, &new);
-                                }
-                            }
-                        }
-                    }
-                    if let Some(lc) = state.lifecycles.get_mut(&req.0) {
-                        lc.add_phase(pull.phase, now - pull.created);
-                    }
-                    state.tracer.span(
-                        SpanKind::from_phase(pull.phase),
-                        dst,
-                        req.0,
-                        pull.created,
-                        now,
-                        pull.kv_cached as u64,
-                    );
-                    state.ready_since.insert(req.0, now);
-                    crate::log_trace!("t={now:.6} transfer done req={} inst{src}->inst{dst}", req.0);
-                    instances[dst].queues.push_running(r);
-                }
-                process_inboxes(&mut instances, now, &mut state);
-                for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &mut state);
-                }
-            }
-
-            EvKind::FetchDone { dst, req } => {
-                crate::log_trace!("t={now:.6} fetch landed req={} at inst{dst}", req.0);
-                handle_fetch_done(&mut instances, dst, req, now, &mut state);
-                process_inboxes(&mut instances, now, &mut state);
-                for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &mut state);
-                }
-            }
-
-            EvKind::ControllerTick => {
-                // (1) a completed flip elsewhere may have orphaned a
-                // hand-off attempt: re-offer stranded requests first
-                retry_stranded(&mut instances, now, &mut state);
-                let Some((cc, est, pol)) = controller.as_mut() else { continue };
-
-                // (2) observe queue depths + windowed latency tails
-                let w = crate::metrics::window_stats(state.lifecycles.values(), now - cc.window);
-                est.observe(cluster_sample(&instances, &state.tracker, now, &w));
-
-                // (3) decide: at most one new drain per tick
-                if let Some(load) = est.snapshot() {
-                    let masks: Vec<StageMask> = instances.iter().map(|i| i.mask).collect();
-                    let draining = state.tracker.draining_flags();
-                    if let Some(d) = pol.decide(now, &load, &masks, &draining) {
-                        state.tracker.begin(now, d.instance, d.to);
-                    }
-                }
-
-                // (4) progress drains: cancel expired ones, flip emptied ones
-                for iid in 0..instances.len() {
-                    if !state.tracker.is_draining(iid) {
-                        continue;
-                    }
-                    if state.tracker.expired(now, iid, cc.drain_timeout) {
-                        state.tracker.cancel(iid);
-                        continue;
-                    }
-                    let inst = &instances[iid];
-                    let empty = inst.current.is_none()
-                        && inst.queues.total() == 0
-                        && inst.inbox.is_empty()
-                        && inst.incoming.is_empty()
-                        && inst.fetching.is_empty();
-                    if empty {
-                        let to = state.tracker.complete(now, iid, inst.mask);
-                        crate::log_trace!("t={now:.6} role flip inst{iid} -> {}", to.label());
-                        state.tracer.mark(SpanKind::RoleFlip, iid, now, mask_bits(to));
-                        let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, to);
-                        let inst = &mut instances[iid];
-                        inst.mask = to;
-                        inst.sched = cfg.policy.make(to);
-                        // the instance is empty: re-partition its HBM for
-                        // the new role's cache mix (cached content is
-                        // dropped — bank the old caches' counters first,
-                        // and retract every advertisement wholesale)
-                        state.report.kv_stats.merge(&inst.kv.stats());
-                        state.report.img_stats.merge(&inst.img.stats());
-                        inst.kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
-                        inst.img =
-                            PagedCache::new(img_blocks, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
-                        if let Some(d) = state.dirs.as_mut() {
-                            d.kv.retract_all(iid);
-                            d.img.retract_all(iid);
-                            inst.kv.set_eviction_tracking(true);
-                            inst.img.set_eviction_tracking(true);
-                        }
-                    }
-                }
-
-                // (5) wake the cluster (retries may have queued pulls)
-                process_inboxes(&mut instances, now, &mut state);
-                for i in 0..instances.len() {
-                    try_start(&mut instances, i, now, &mut state);
-                }
-
-                // (6) keep ticking while the run is live
-                let live = state.lifecycles.len() < requests.len()
-                    || state.lifecycles.values().any(|lc| lc.finished_at.is_none())
-                    || state.tracker.any_draining();
-                if live && now + cc.tick <= cfg.horizon {
-                    state.push(now + cc.tick, EvKind::ControllerTick);
-                }
-            }
-        }
-    }
-
-    // collect metrics
-    let EngineState {
-        tracker,
-        dirs,
-        events,
-        migrations,
-        batches,
-        dropped,
-        mut report,
-        lifecycles,
-        mut tracer,
-        ..
-    } = state;
-    let mut metrics = RunMetrics::default();
-    let mut unfinished = 0;
-    for (id, lc) in lifecycles {
-        if lc.finished_at.is_none() {
-            unfinished += 1;
-        }
-        metrics.insert(RequestId(id), lc);
-    }
-    for inst in &instances {
-        report.kv_stats.merge(&inst.kv.stats());
-        report.img_stats.merge(&inst.img.stats());
-    }
-    if let Some(d) = dirs {
-        let mut dr = d.report;
-        dr.queries = d.kv.stats().queries + d.img.stats().queries;
-        dr.publishes = d.kv.stats().publishes + d.img.stats().publishes;
-        dr.retractions = d.kv.stats().retractions + d.img.stats().retractions;
-        report.directory = dr;
-    }
-    let trace_dropped = tracer.dropped();
-    SimResult {
-        metrics,
-        migrations,
-        batches,
-        events,
-        unfinished,
-        dropped_requests: dropped,
-        reconfigs: tracker.num_reconfigs(),
-        reconfig_events: tracker.events,
-        cache: report,
-        trace: tracer.take_spans(),
-        trace_dropped,
-    }
-}
-
 /// Build the per-instance state for a cluster layout (shared by
 /// [`simulate`] and the engine's unit tests, which drive event handlers
 /// directly against the same instances the production loop uses).
@@ -934,10 +768,573 @@ fn build_instances(cfg: &SimConfig, masks: &[StageMask], track_evictions: bool) 
         .collect()
 }
 
-/// Fill `scratch.affinity` (parallel to `scratch.candidates`) with each
-/// candidate's cache-affinity score for the memoized chains `ch`.
-/// `with_img` gates the image plane (migration targeting for a PD hop
-/// only scores the KV plane, matching the payload it would ship).
+/// Partition built instances into shards (contiguous ranges matching
+/// [`shard_bounds`]); all other shard state starts empty.
+fn build_shards(cfg: &SimConfig, instances: Vec<SimInstance>, n_shards: usize) -> Vec<Shard> {
+    let n = instances.len();
+    let dirs_on = cfg.content_cache && cfg.cache_directory;
+    let no_chains = Arc::new(HashChains::empty());
+    let mut it = instances.into_iter();
+    shard_bounds(n, n_shards)
+        .into_iter()
+        .map(|(lo, hi)| Shard {
+            lo,
+            instances: (&mut it).take(hi - lo).collect(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            outbox: Vec::new(),
+            msg_seq: 0,
+            events: 0,
+            batches: 0,
+            report: CacheReport::default(),
+            dir_report: DirectoryReport::default(),
+            lifecycles: FxHashMap::default(),
+            ready_since: FxHashMap::default(),
+            chains: FxHashMap::default(),
+            no_chains: no_chains.clone(),
+            content_cache: cfg.content_cache,
+            dirs_on,
+            scratch: Scratch::default(),
+            tracer: if cfg.trace {
+                Tracer::with_capacity(cfg.trace_capacity)
+            } else {
+                Tracer::off()
+            },
+        })
+        .collect()
+}
+
+/// Run the simulation over a request trace.
+///
+/// Dispatches on [`SimConfig::shards`]: one shard runs the windowed loop
+/// inline on the calling thread; more shards run it on scoped worker
+/// threads synchronized per window. Both paths execute the *same*
+/// barrier protocol, so the digest is independent of the choice.
+pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
+    let masks = cfg.cluster.instance_masks();
+    let n = masks.len();
+    let n_shards = cfg.shards.clamp(1, n.max(1));
+    let profile = BudgetProfile::default();
+    let token_budget = compute_token_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(64);
+    let image_budget = compute_image_budget(&cfg.model, &cfg.device, &profile, cfg.slo.tpot).max(1);
+    let budgets = Budgets { token_budget, image_budget, max_decode_batch: 512 };
+
+    // cluster-wide content directory (fetch-over-recompute) — requires the
+    // content cache; off reproduces per-instance affinity bit-for-bit
+    let dirs = (cfg.content_cache && cfg.cache_directory).then(|| DirPair {
+        kv: ContentDirectory::new(n),
+        img: ContentDirectory::new(n),
+    });
+
+    let instances = build_instances(cfg, &masks, dirs.is_some());
+    let mut shards = build_shards(cfg, instances, n_shards);
+
+    // arrival routing order: by (arrival, index) — generator traces are
+    // already sorted, but the barrier must not depend on that
+    let mut order: Vec<u32> = (0..requests.len() as u32).collect();
+    order.sort_by(|&a, &b| {
+        requests[a as usize]
+            .arrival
+            .total_cmp(&requests[b as usize].arrival)
+            .then(a.cmp(&b))
+    });
+
+    // elastic control plane (estimator -> policy -> drain tracker)
+    let controller = cfg.controller.as_ref().map(|cc| {
+        let rates = StageRates::from_model(&cfg.model, &cfg.device);
+        (
+            cc.clone(),
+            StageLoadEstimator::new(cc.clone(), rates, Some(cfg.slo)),
+            ReconfigPolicy::new(cc.clone()),
+        )
+    });
+    let next_tick = controller.as_ref().map_or(f64::INFINITY, |(cc, _, _)| cc.tick);
+
+    let mut ctl = Control {
+        router: Router::new(RoutePolicy::LeastLoaded, cfg.seed),
+        tracker: DrainTracker::new(n),
+        controller,
+        next_tick,
+        migrations: 0,
+        dropped: 0,
+        events: 0,
+        report: CacheReport::default(),
+        tracer: if cfg.trace {
+            Tracer::with_capacity(cfg.trace_capacity)
+        } else {
+            Tracer::off()
+        },
+        next_arrival: 0,
+        order,
+        inst_shard: (0..n).map(|i| shard_of(i, n, n_shards)).collect(),
+        msgs: Vec::new(),
+        no_chains: Arc::new(HashChains::empty()),
+        content_cache: cfg.content_cache,
+        pending: vec![0.0; n],
+        touched: Vec::new(),
+        rs: RouteScratch::default(),
+    };
+
+    let mut ctx = Ctx { t1: 0.0, horizon: cfg.horizon, loads: Vec::new(), dirs };
+
+    if n_shards == 1 {
+        // serial path: same windowed protocol, no threads
+        let mut w = 0.0f64;
+        let mut next_k = 0u64;
+        while advance(&mut shards, &mut ctl, &mut ctx, &mut w, &mut next_k, cfg, requests) {
+            run_window(&mut shards[0], &ctx, cfg, &budgets, requests);
+        }
+    } else {
+        run_threaded(&mut shards, &mut ctl, &mut ctx, cfg, &budgets, requests);
+    }
+
+    assemble_result(shards, ctl, ctx, requests)
+}
+
+/// The threaded drive loop: one scoped worker per shard, two barriers per
+/// window (start/end), shard state handed back to the main thread at each
+/// barrier so it can run the single-threaded barrier phase.
+fn run_threaded(
+    shards: &mut Vec<Shard>,
+    ctl: &mut Control,
+    ctx: &mut Ctx,
+    cfg: &SimConfig,
+    budgets: &Budgets,
+    requests: &[RequestSpec],
+) {
+    let n_shards = shards.len();
+    let slots: Vec<Mutex<Option<Shard>>> =
+        shards.drain(..).map(|s| Mutex::new(Some(s))).collect();
+    let ctx_lock = RwLock::new(std::mem::replace(
+        ctx,
+        Ctx { t1: 0.0, horizon: cfg.horizon, loads: Vec::new(), dirs: None },
+    ));
+    let start = Barrier::new(n_shards + 1);
+    let end = Barrier::new(n_shards + 1);
+    let done = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        for sid in 0..n_shards {
+            let slots = &slots;
+            let ctx_lock = &ctx_lock;
+            let start = &start;
+            let end = &end;
+            let done = &done;
+            scope.spawn(move || loop {
+                start.wait();
+                if done.load(Ordering::Acquire) {
+                    break;
+                }
+                {
+                    let ctx = ctx_lock.read().unwrap();
+                    let mut slot = slots[sid].lock().unwrap();
+                    run_window(slot.as_mut().unwrap(), &ctx, cfg, budgets, requests);
+                }
+                end.wait();
+            });
+        }
+
+        let mut w = 0.0f64;
+        let mut next_k = 0u64;
+        loop {
+            // barrier phase: main thread holds every shard + the ctx
+            let live = {
+                let mut held: Vec<Option<Shard>> =
+                    slots.iter().map(|m| m.lock().unwrap().take()).collect();
+                let mut shards_now: Vec<Shard> =
+                    held.iter_mut().map(|s| s.take().unwrap()).collect();
+                let mut guard = ctx_lock.write().unwrap();
+                let live = advance(
+                    &mut shards_now, ctl, &mut guard, &mut w, &mut next_k, cfg, requests,
+                );
+                for (m, s) in slots.iter().zip(shards_now) {
+                    *m.lock().unwrap() = Some(s);
+                }
+                live
+            };
+            if !live {
+                done.store(true, Ordering::Release);
+                start.wait();
+                break;
+            }
+            start.wait(); // release workers into the window
+            end.wait(); // wait for every shard to finish it
+        }
+    });
+
+    *shards = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect();
+    *ctx = ctx_lock.into_inner().unwrap();
+}
+
+/// Merge shard + barrier state into the final [`SimResult`].
+fn assemble_result(
+    shards: Vec<Shard>,
+    ctl: Control,
+    ctx: Ctx,
+    requests: &[RequestSpec],
+) -> SimResult {
+    let _ = requests;
+    let Control {
+        tracker,
+        migrations,
+        dropped,
+        events,
+        mut report,
+        mut tracer,
+        ..
+    } = ctl;
+    let mut metrics = RunMetrics::default();
+    let mut unfinished = 0;
+    let mut total_events = events;
+    let mut batches = 0;
+    let mut dir_report = DirectoryReport::default();
+    let mut spans = tracer.take_spans();
+    let mut trace_dropped = tracer.dropped();
+    for shard in shards {
+        let Shard {
+            instances,
+            events,
+            batches: b,
+            report: srep,
+            dir_report: sdir,
+            lifecycles,
+            tracer: mut stracer,
+            ..
+        } = shard;
+        total_events += events;
+        batches += b;
+        report.absorb(&srep);
+        dir_report.absorb(&sdir);
+        for (id, lc) in lifecycles {
+            if lc.finished_at.is_none() {
+                unfinished += 1;
+            }
+            metrics.insert(RequestId(id), lc);
+        }
+        for inst in &instances {
+            report.kv_stats.merge(&inst.kv.stats());
+            report.img_stats.merge(&inst.img.stats());
+        }
+        trace_dropped += stracer.dropped();
+        spans.append(&mut stracer.take_spans());
+    }
+    if let Some(d) = ctx.dirs {
+        dir_report.queries += d.kv.stats().queries + d.img.stats().queries;
+        dir_report.publishes += d.kv.stats().publishes + d.img.stats().publishes;
+        dir_report.retractions += d.kv.stats().retractions + d.img.stats().retractions;
+        report.directory = dir_report;
+    }
+    // canonical span order: merged across rings, independent of sharding
+    spans.sort_by(|a, b| {
+        a.start
+            .total_cmp(&b.start)
+            .then(a.instance.cmp(&b.instance))
+            .then(a.request.cmp(&b.request))
+            .then(a.end.total_cmp(&b.end))
+            .then((a.kind as u8).cmp(&(b.kind as u8)))
+            .then(a.detail.cmp(&b.detail))
+    });
+    SimResult {
+        metrics,
+        migrations,
+        batches,
+        events: total_events,
+        unfinished,
+        dropped_requests: dropped,
+        reconfigs: tracker.num_reconfigs(),
+        reconfig_events: tracker.events,
+        cache: report,
+        trace: spans,
+        trace_dropped,
+    }
+}
+
+// ---------------------------------------------------------- barrier phase
+
+/// One barrier: apply last window's boundary messages in canonical order,
+/// run due controller ticks, pick the next window, route its arrivals,
+/// and freeze the read-only context. Returns false when the run is over
+/// (nothing left at or before the horizon).
+fn advance(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    ctx: &mut Ctx,
+    w: &mut f64,
+    next_k: &mut u64,
+    cfg: &SimConfig,
+    requests: &[RequestSpec],
+) -> bool {
+    barrier_phase(shards, ctl, &mut ctx.dirs, *w, cfg);
+    while ctl.next_tick <= *w {
+        controller_tick(shards, ctl, &mut ctx.dirs, *w, cfg, requests);
+    }
+
+    // earliest pending work anywhere: shard heaps, arrivals, next tick
+    let mut m = ctl.next_tick;
+    for s in shards.iter() {
+        if let Some(ev) = s.heap.peek() {
+            m = m.min(ev.t);
+        }
+    }
+    if ctl.next_arrival < ctl.order.len() {
+        m = m.min(requests[ctl.order[ctl.next_arrival] as usize].arrival);
+    }
+    if !(m.is_finite() && m <= cfg.horizon) {
+        return false;
+    }
+
+    // window index containing `m`. The `max(next_k)` guard absorbs FP
+    // edge cases where `m` quantizes back into the window just finished:
+    // at worst one empty window runs, never a skipped event.
+    let dt = cfg.effective_window();
+    let k = ((m / dt) as u64).max(*next_k);
+    *next_k = k + 1;
+    let t1 = (k + 1) as f64 * dt;
+
+    route_arrivals(shards, ctl, &mut ctx.dirs, t1, cfg, requests);
+
+    // freeze the window context workers will read
+    ctx.t1 = t1;
+    if ctx.dirs.is_some() {
+        ctx.loads.clear();
+        for gid in 0..ctl.inst_shard.len() {
+            ctx.loads.push(inst_ref(shards, &ctl.inst_shard, gid).load());
+        }
+    }
+    *w = t1;
+    true
+}
+
+/// Drain every shard's outbox and apply the messages in canonical
+/// `(t, creator, seq)` order — the single point where cross-shard effects
+/// become visible, and the reason the partition cannot influence anything.
+fn barrier_phase(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    w: f64,
+    cfg: &SimConfig,
+) {
+    {
+        let Control { pending, touched, .. } = &mut *ctl;
+        for i in touched.drain(..) {
+            pending[i] = 0.0;
+        }
+    }
+    let mut msgs = std::mem::take(&mut ctl.msgs);
+    msgs.clear();
+    for s in shards.iter_mut() {
+        msgs.append(&mut s.outbox);
+    }
+    msgs.sort_unstable_by(|a, b| {
+        a.t.total_cmp(&b.t).then(a.inst.cmp(&b.inst)).then(a.seq.cmp(&b.seq))
+    });
+    for msg in msgs.drain(..) {
+        let gid = msg.inst as usize;
+        match msg.kind {
+            MsgKind::PublishKv(h) => {
+                if let Some(d) = dirs.as_mut() {
+                    d.kv.publish(gid, &h);
+                }
+            }
+            MsgKind::PublishImg(h) => {
+                if let Some(d) = dirs.as_mut() {
+                    d.img.publish(gid, &h);
+                }
+            }
+            MsgKind::RetractKv(h) => {
+                if let Some(d) = dirs.as_mut() {
+                    d.kv.retract(gid, &h);
+                }
+            }
+            MsgKind::RetractImg(h) => {
+                if let Some(d) = dirs.as_mut() {
+                    d.img.retract(gid, &h);
+                }
+            }
+            MsgKind::MigrateReq { req, next } => {
+                barrier_migrate(shards, ctl, dirs, gid, req, next, msg.t, w, cfg);
+            }
+            MsgKind::SrcRelease { src, req, land } => {
+                let s = ctl.inst_shard[src];
+                shards[s].push(land.max(w), src as u32, EvKind::SrcRelease { req });
+            }
+        }
+    }
+    ctl.msgs = msgs;
+}
+
+/// §4.3 step 1, barrier side: snapshot the request at its source, pick a
+/// pull target for its next stage over the live (barrier-time) cluster
+/// view, enqueue the offer in the target's inbox, and move the request's
+/// per-shard ownership (lifecycle, ready time, chains) to the target's
+/// shard. `created` is when the source asked (message time), so migration
+/// phase accounting is unchanged by the deferred routing.
+#[allow(clippy::too_many_arguments)]
+fn barrier_migrate(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    src: usize,
+    id: RequestId,
+    next_stage: Stage,
+    created: f64,
+    w: f64,
+    cfg: &SimConfig,
+) {
+    let _ = cfg;
+    let ssrc = ctl.inst_shard[src];
+    let lsrc = src - shards[ssrc].lo;
+    let Some(r) = shards[ssrc].instances[lsrc].queues.find_running(id) else {
+        return;
+    };
+    r.migrating = true;
+    let snapshot = r.clone();
+    let phase = match next_stage {
+        Stage::Prefill => Phase::EpMigration,
+        _ => Phase::PdMigration,
+    };
+    let payload_tokens = match next_stage {
+        // EP migration carries the image-token embeddings
+        Stage::Prefill => snapshot.spec.image_tokens(),
+        // PD migration carries the prefix KV cache
+        _ => snapshot.spec.prefill_tokens(),
+    };
+    {
+        let Control { rs, inst_shard, .. } = &mut *ctl;
+        rs.candidates.clear();
+        for gid in 0..inst_shard.len() {
+            if gid != src && inst_ref(shards, inst_shard, gid).mask.serves(next_stage) {
+                rs.candidates.push(gid);
+            }
+        }
+    }
+    // cache affinity: a target already holding the payload's blocks needs
+    // (almost) nothing transferred. The directory answers for every
+    // candidate in one sweep; without it each private index is scanned.
+    let ch = chains_entry(
+        &mut shards[ssrc].chains,
+        ctl.content_cache,
+        &ctl.no_chains,
+        &snapshot.spec,
+    );
+    build_affinity2(shards, ctl, dirs, &ch, next_stage == Stage::Prefill);
+    match route_pick2(shards, ctl) {
+        Some(dst) => {
+            ctl.migrations += 1;
+            let sdst = ctl.inst_shard[dst];
+            if sdst != ssrc {
+                // per-request ownership follows the request across shards
+                if let Some(lc) = shards[ssrc].lifecycles.remove(&id.0) {
+                    shards[sdst].lifecycles.insert(id.0, lc);
+                }
+                if let Some(t) = shards[ssrc].ready_since.remove(&id.0) {
+                    shards[sdst].ready_since.insert(id.0, t);
+                }
+                if let Some(c) = shards[ssrc].chains.remove(&id.0) {
+                    shards[sdst].chains.insert(id.0, c);
+                }
+            }
+            let ldst = dst - shards[sdst].lo;
+            shards[sdst].instances[ldst].inbox.push(PendingPull {
+                req: snapshot,
+                src,
+                phase,
+                payload_tokens,
+                kv_cached: 0,
+                created,
+            });
+            ctl.pending[dst] += 1.0;
+            ctl.touched.push(dst);
+            // the target may be idle: make sure it looks at its inbox
+            shards[sdst].push(w, dst as u32, EvKind::Wake);
+        }
+        None => {
+            // nowhere to go (incomplete cluster): request is stuck; it
+            // will count as unfinished. Un-mark so we don't spin.
+            if let Some(r) = shards[ssrc].instances[lsrc].queues.find_running(id) {
+                r.migrating = false;
+            }
+        }
+    }
+}
+
+/// Route every arrival landing in the upcoming window `[w, t1)`. Routed
+/// requests get their lifecycle/chains planted in the owner shard and a
+/// `Deliver` event at their arrival time; unservable ones are dropped
+/// here (they never touch a shard).
+fn route_arrivals(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    t1: f64,
+    cfg: &SimConfig,
+    requests: &[RequestSpec],
+) {
+    while ctl.next_arrival < ctl.order.len() {
+        let idx = ctl.order[ctl.next_arrival] as usize;
+        let spec = &requests[idx];
+        let now = spec.arrival;
+        if !(now < t1 && now <= cfg.horizon) {
+            break;
+        }
+        ctl.next_arrival += 1;
+        // route by request type (paper §4): first needed stage
+        let first = spec.first_stage();
+        {
+            let Control { rs, inst_shard, .. } = &mut *ctl;
+            rs.candidates.clear();
+            for gid in 0..inst_shard.len() {
+                if inst_ref(shards, inst_shard, gid).mask.serves(first) {
+                    rs.candidates.push(gid);
+                }
+            }
+        }
+        // content identity is derived exactly once, here (the hash-once
+        // rule); every later touchpoint borrows the shard's memoized Arc
+        let ch = if ctl.content_cache {
+            Arc::new(HashChains::of_spec(spec, KV_BLOCK, IMG_BLOCK))
+        } else {
+            ctl.no_chains.clone()
+        };
+        build_affinity2(shards, ctl, dirs, &ch, true);
+        let Some(target) = route_pick2(shards, ctl) else {
+            // no instance can serve this request type: count the drop
+            // explicitly; it leaves no state behind anywhere
+            ctl.dropped += 1;
+            ctl.events += 1;
+            crate::log_trace!("t={now:.6} drop req={} (no instance serves {first:?})", spec.id.0);
+            ctl.tracer.span(
+                SpanKind::Drop,
+                crate::obs::trace::NO_INSTANCE as usize,
+                spec.id.0,
+                now,
+                now,
+                0,
+            );
+            continue;
+        };
+        let rid = spec.id;
+        crate::log_trace!("t={now:.6} arrival req={} -> inst{target}", rid.0);
+        let s = ctl.inst_shard[target];
+        shards[s].lifecycles.insert(rid.0, Lifecycle::new(spec.arrival));
+        shards[s].ready_since.insert(rid.0, now);
+        if ctl.content_cache {
+            shards[s].chains.insert(rid.0, ch);
+        }
+        shards[s].push(now, target as u32, EvKind::Deliver(idx));
+        ctl.pending[target] += 1.0;
+        ctl.touched.push(target);
+    }
+}
+
+/// Fill `rs.affinity` (parallel to `rs.candidates`) with each candidate's
+/// cache-affinity score for the chains `ch`. `with_img` gates the image
+/// plane (migration targeting for a PD hop only scores the KV plane,
+/// matching the payload it would ship).
 ///
 /// With the directory: one sweep per plane answers every candidate.
 /// Directory off (content cache still on): per-candidate private-index
@@ -949,374 +1346,150 @@ fn build_instances(cfg: &SimConfig, masks: &[StageMask], track_evictions: bool) 
 /// at *strictly lower* load (they might also hold the full chain). Only
 /// those are scanned; everything else is skipped with affinity 0, which
 /// cannot change the outcome because a full-affinity candidate is
-/// already on the board. Routing decisions are bit-identical to the old
-/// scan-everything code.
-fn build_affinity(
-    instances: &[SimInstance],
-    state: &mut EngineState,
+/// already on the board.
+///
+/// Loads include `pending` — work routed at this barrier that the owner
+/// shard has not delivered yet — so back-to-back routing decisions see
+/// each other exactly like consecutive arrivals used to.
+fn build_affinity2(
+    shards: &[Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
     ch: &HashChains,
     with_img: bool,
 ) {
-    let cfg = state.cfg;
-    state.scratch.affinity.clear();
-    if let Some(d) = state.dirs.as_mut() {
-        d.kv.prefix_blocks_into(&ch.kv, &mut state.scratch.kv_pfx);
+    let Control { rs, tracker, inst_shard, pending, content_cache, .. } = &mut *ctl;
+    rs.affinity.clear();
+    let n = inst_shard.len();
+    if let Some(d) = dirs.as_mut() {
+        d.kv.prefix_blocks_into(&ch.kv, &mut rs.kv_pfx);
         if with_img {
-            d.img.prefix_blocks_into(&ch.img, &mut state.scratch.img_pfx);
+            d.img.prefix_blocks_into(&ch.img, &mut rs.img_pfx);
         } else {
-            state.scratch.img_pfx.clear();
-            state.scratch.img_pfx.resize(instances.len(), 0);
+            rs.img_pfx.clear();
+            rs.img_pfx.resize(n, 0);
         }
-        for &c in &state.scratch.candidates {
-            state.scratch.affinity.push(
-                (state.scratch.kv_pfx[c] * KV_BLOCK + state.scratch.img_pfx[c] * IMG_BLOCK)
-                    as f64,
-            );
+        for &c in &rs.candidates {
+            rs.affinity
+                .push((rs.kv_pfx[c] * KV_BLOCK + rs.img_pfx[c] * IMG_BLOCK) as f64);
         }
-    } else if cfg.content_cache {
+    } else if *content_cache {
         let full_img = if with_img { ch.img.len() * IMG_BLOCK } else { 0 };
         let full = (ch.kv.len() * KV_BLOCK + full_img) as f64;
         // the same eligibility rule pick_affinity applies, precomputed so
         // the early-exit can never hide a holder the pick would still need
         let mut min_load = f64::INFINITY;
-        for &c in &state.scratch.candidates {
-            if !state.tracker.is_draining(c) {
-                min_load = min_load.min(instances[c].load());
+        for &c in &rs.candidates {
+            if !tracker.is_draining(c) {
+                min_load = min_load.min(inst_ref(shards, inst_shard, c).load() + pending[c]);
             }
         }
         let cap = Router::affinity_load_cap(min_load);
         // load of the winning routable full holder found so far
         let mut winner_load: Option<f64> = None;
-        for &c in &state.scratch.candidates {
-            let load = instances[c].load();
-            let routable = !state.tracker.is_draining(c) && load <= cap;
+        for &c in &rs.candidates {
+            let load = inst_ref(shards, inst_shard, c).load() + pending[c];
+            let routable = !tracker.is_draining(c) && load <= cap;
             if let Some(wl) = winner_load {
                 if !routable || load >= wl {
                     // cannot displace the current full holder: skip the
-                    // scan (a zero here never changes the pick — a
-                    // full-affinity candidate is already on the board,
-                    // and on equal load the earlier candidate wins the
-                    // tie anyway)
-                    state.scratch.affinity.push(0.0);
+                    // scan (a zero here never changes the pick)
+                    rs.affinity.push(0.0);
                     continue;
                 }
             }
-            let mut a = instances[c].kv.lookup_prefix(&ch.kv) * KV_BLOCK;
+            let inst = inst_ref(shards, inst_shard, c);
+            let mut a = inst.kv.lookup_prefix(&ch.kv) * KV_BLOCK;
             if with_img {
-                a += instances[c].img.lookup_prefix(&ch.img) * IMG_BLOCK;
+                a += inst.img.lookup_prefix(&ch.img) * IMG_BLOCK;
             }
             let a = a as f64;
-            state.scratch.affinity.push(a);
+            rs.affinity.push(a);
             if a >= full && full > 0.0 && routable {
                 winner_load = Some(load);
             }
         }
     } else {
-        state.scratch.affinity.resize(state.scratch.candidates.len(), 0.0);
+        rs.affinity.resize(rs.candidates.len(), 0.0);
     }
 }
 
-/// Decide whether the freshly routed request should **fetch** content a
-/// peer advertises instead of recomputing it (the §4.5 reuse extension,
-/// taken cluster-wide): the image-embedding and KV-prefix parts are priced
-/// independently against the cost model (encode vs. transfer bytes;
-/// prefill of the missing prefix vs. its KV bytes) and only taken when the
-/// link is cheaper. On a fetch, blocks are reserved now, the request parks
-/// in `fetching`, and one `FetchDone` event carries both parts. Returns
-/// the request back when nothing is worth fetching (including when the
-/// directory is off).
-fn maybe_start_fetch(
-    instances: &mut [SimInstance],
-    target: usize,
-    st: ReqState,
-    ch: &HashChains,
-    now: f64,
-    state: &mut EngineState,
-) -> Option<ReqState> {
-    let cfg = state.cfg;
-    let Some(dirs) = state.dirs.as_mut() else { return Some(st) };
-    let (link_lat, link_bw) = cfg.link();
-    let id = st.spec.id;
-    let mut img_src = None;
-    let mut kv_src = None;
-    let mut bytes = 0.0f64;
-
-    // image embedding part (pricing + holder in the shared helper; the
-    // capacity check is planning-time only — a redirect re-plans with the
-    // blocks already reserved)
-    if let Some((src, fetch_bytes)) = img_fetch_source(instances, dirs, cfg, target, &st, ch) {
-        let needed = img_blocks_for(st.spec.image_tokens());
-        let img_need = needed.saturating_sub(instances[target].img.held_blocks(id));
-        if instances[target].img_blocks_needed(&st) > 0
-            && img_need <= instances[target].img.available_blocks()
-        {
-            img_src = Some(src);
-            bytes += fetch_bytes;
-        }
-    }
-
-    // KV-prefix part
-    if instances[target].kv_tokens_needed(&st) > 0 {
-        if let Some((src, to_tokens, fetch_bytes)) =
-            kv_fetch_source(instances, dirs, cfg, target, &st, ch)
-        {
-            let kv_need = kv_blocks_for(to_tokens)
-                .saturating_sub(instances[target].kv.held_blocks(id));
-            if kv_need <= instances[target].kv.available_blocks() {
-                kv_src = Some((src, to_tokens));
-                bytes += fetch_bytes;
-            }
-        }
-    }
-
-    if img_src.is_none() && kv_src.is_none() {
-        return Some(st);
-    }
-
-    // reserve the blocks now (they are needed either way), park the
-    // request, and schedule the landing
-    let inst = &mut instances[target];
-    if img_src.is_some() {
-        let need = img_blocks_for(st.spec.image_tokens());
-        inst.img
-            .grow(id, need * IMG_BLOCK)
-            .expect("capacity checked for image fetch");
-    }
-    if let Some((_, to_tokens)) = kv_src {
-        inst.kv.grow(id, to_tokens).expect("capacity checked for kv fetch");
-    }
-    dirs.sync_evictions(inst);
-    dirs.report.fetches += 1;
-    let dur = link_lat + bytes / link_bw;
-    state.push(now + dur, EvKind::FetchDone { dst: target, req: id });
-    state.tracer.span(SpanKind::Fetch, target, id.0, now, now + dur, bytes as u64);
-    instances[target].fetching.insert(
-        id.0,
-        PendingFetch { req: st, img_src, kv_src, redirected: false, stale_counted: false },
-    );
-    None
-}
-
-/// The image-embedding part of a fetch plan: the best current holder of
-/// the WHOLE embedding (among maximal holders, the least-loaded — a hot
-/// holder should not also serve every fetch), when pulling it is priced
-/// below re-encoding. Returns `(source, payload bytes)`. Pricing and
-/// holder choice only — capacity is the caller's concern (checked when
-/// first planning; already reserved when a landing re-validates).
-fn img_fetch_source(
-    instances: &[SimInstance],
-    dirs: &mut DirState,
-    cfg: &SimConfig,
-    target: usize,
-    st: &ReqState,
-    ch: &HashChains,
-) -> Option<(usize, f64)> {
-    // only whole-embedding hits are useful (encode runs per image; a
-    // partial block set cannot shorten it)
-    if st.encoded_images >= st.spec.num_images || st.spec.image_hash.is_none() {
-        return None;
-    }
-    let needed = img_blocks_for(st.spec.image_tokens());
-    let (src, blocks) = dirs.img.best_holder_by(&ch.img, target, |i| instances[i].load())?;
-    if blocks < needed {
-        return None;
-    }
-    let (link_lat, link_bw) = cfg.link();
-    let remaining = st.spec.num_images - st.encoded_images;
-    let miss_tokens = remaining * st.spec.tokens_per_image;
-    let fetch_bytes = crate::costmodel::ops::image_payload_bytes(&cfg.model, miss_tokens);
-    let fetch_t = link_lat + fetch_bytes / link_bw;
-    let recompute_t =
-        exec_time(encode_cost(&cfg.model, remaining), &cfg.device) + cfg.engine_overhead;
-    (fetch_t < recompute_t).then_some((src, fetch_bytes))
-}
-
-/// The KV-prefix part of a fetch plan: fetch only the delta past what the
-/// local cache already served, block-aligned and leaving >= 1 token for
-/// prefill to emit from. Recompute is priced as a *resumed* prefill of
-/// the missing delta ([`prefill_resume_cost`]) — the real plane now
-/// executes exactly that op, so the fetch decision and the compute it
-/// replaces stay in the same currency. Returns
-/// `(source, prefix tokens fetched to, payload bytes)`.
-fn kv_fetch_source(
-    instances: &[SimInstance],
-    dirs: &mut DirState,
-    cfg: &SimConfig,
-    target: usize,
-    st: &ReqState,
-    ch: &HashChains,
-) -> Option<(usize, usize, f64)> {
-    if st.prefill_remaining() == 0 {
-        return None;
-    }
-    let cap_blocks = st.spec.prefill_tokens().saturating_sub(1) / KV_BLOCK;
-    let (src, blocks) = dirs.kv.best_holder_by(&ch.kv, target, |i| instances[i].load())?;
-    let to_tokens = blocks.min(cap_blocks) * KV_BLOCK;
-    if to_tokens <= st.prefilled {
-        return None;
-    }
-    let delta = to_tokens - st.prefilled;
-    let (link_lat, link_bw) = cfg.link();
-    let fetch_bytes =
-        crate::costmodel::ops::kv_delta_payload_bytes(&cfg.model, to_tokens, st.prefilled);
-    let fetch_t = link_lat + fetch_bytes / link_bw;
-    let recompute_t =
-        exec_time(prefill_resume_cost(&cfg.model, st.prefilled, delta), &cfg.device)
-            + cfg.engine_overhead;
-    (fetch_t < recompute_t).then_some((src, to_tokens, fetch_bytes))
-}
-
-/// Apply a landed cache fetch. The plan was decided when the request
-/// arrived; by landing/service time the advertised holder may have
-/// evicted the content (the arrival→service staleness window). Each part
-/// is validated against the source's **actual** cache; a part that went
-/// stale is re-validated against the **current** directory and redirected
-/// to a surviving holder (one redirect per fetch — a second stale landing
-/// means the directory is churning), and only when no priced-worthwhile
-/// holder remains does the request fall back to recomputing that part,
-/// counted in `stale_fetches`. Parts that landed keep their credit either
-/// way.
-fn handle_fetch_done(
-    instances: &mut [SimInstance],
-    dst: usize,
-    req: RequestId,
-    now: f64,
-    state: &mut EngineState,
-) {
-    let Some(mut f) = instances[dst].fetching.remove(&req.0) else { return };
-    let ch = state.chains_for(&f.req.spec);
-    let cfg = state.cfg;
-    let (link_lat, link_bw) = cfg.link();
-    let mut any_stale = false;
-    let mut retry = false;
-    let mut retry_bytes = 0.0f64;
-    {
-        let dirs = state.dirs.as_mut().expect("fetches require the directory");
-        // image part: validate against the source's actual cache — an
-        // eviction mid-flight makes the advertisement stale
-        if let Some(src) = f.img_src.take() {
-            let needed = img_blocks_for(f.req.spec.image_tokens());
-            if instances[src].img.lookup_prefix(&ch.img) >= needed {
-                let fetched = f.req.spec.num_images - f.req.encoded_images;
-                let new = instances[dst].img.commit_hashes(req, &ch.img);
-                dirs.img.publish(dst, &new);
-                f.req.cached_images = f.req.spec.num_images;
-                f.req.encoded_images = f.req.spec.num_images;
-                dirs.report.fetched_images += fetched;
-            } else if !f.redirected {
-                // stale: re-validate against the current directory (the
-                // blocks are already reserved locally, so only holder +
-                // pricing are re-checked)
-                match img_fetch_source(instances, dirs, cfg, dst, &f.req, &ch) {
-                    Some((src2, bytes)) => {
-                        f.img_src = Some(src2);
-                        retry_bytes += bytes;
-                        retry = true;
-                    }
-                    None => any_stale = true,
-                }
-            } else {
-                any_stale = true;
-            }
-        }
-        // KV-prefix part
-        if let Some((src, to_tokens)) = f.kv_src.take() {
-            let blocks = to_tokens / KV_BLOCK;
-            if instances[src].kv.lookup_prefix(&ch.kv[..blocks]) >= blocks {
-                let new = instances[dst].kv.commit_hashes(req, &ch.kv[..blocks]);
-                dirs.kv.publish(dst, &new);
-                dirs.report.fetched_kv_tokens += to_tokens.saturating_sub(f.req.prefilled);
-                f.req.cached_prefill = f.req.cached_prefill.max(to_tokens);
-                f.req.prefilled = f.req.prefilled.max(to_tokens);
-            } else if !f.redirected {
-                match kv_fetch_source(instances, dirs, cfg, dst, &f.req, &ch) {
-                    Some((src2, to2, bytes)) => {
-                        f.kv_src = Some((src2, to2));
-                        retry_bytes += bytes;
-                        retry = true;
-                    }
-                    None => any_stale = true,
-                }
-            } else {
-                any_stale = true;
-            }
-        }
-        if retry {
-            dirs.report.redirected_fetches += 1;
-        }
-        // a FETCH counts stale at most once, mirroring `fetches` (one
-        // combined transfer per request) — even when its parts are
-        // abandoned across different landings (e.g. img part gives up on
-        // landing 1 while the kv part redirects and fails on landing 2)
-        if any_stale && !f.stale_counted {
-            dirs.report.stale_fetches += 1;
-            f.stale_counted = true;
-        }
-    }
-    if retry {
-        f.redirected = true;
-        let dur = link_lat + retry_bytes / link_bw;
-        state.push(now + dur, EvKind::FetchDone { dst, req });
-        state.tracer.span(SpanKind::Fetch, dst, req.0, now, now + dur, retry_bytes as u64);
-        instances[dst].fetching.insert(req.0, f);
-        return;
-    }
-    // resume the normal dispatch path with whatever credit landed
-    let r = f.req;
-    let stage = r.stage();
-    if instances[dst].mask.serves(stage) {
-        instances[dst].queues.push_waiting(r);
-    } else {
-        instances[dst].queues.push_running(r);
-        start_migration(instances, dst, req, stage, now, state);
-    }
-}
-
-/// Route among `scratch.candidates` (affinity scores already built by
-/// [`build_affinity`] in `scratch.affinity`), treating mid-drain
-/// instances as ineligible (infinite load) and preferring cache affinity
-/// (reusable tokens already on each candidate): a candidate holding
+/// Route among `rs.candidates` (affinity scores already built by
+/// [`build_affinity2`]), treating mid-drain instances as ineligible
+/// (infinite load) and preferring cache affinity: a candidate holding
 /// cached content wins over a merely idle one; zero affinity everywhere
 /// degrades to the plain load policy. If *every* candidate is mid-drain,
 /// fall back to their raw loads: work is never dropped just because
 /// flips are in flight.
-fn route_among_affinity(instances: &[SimInstance], state: &mut EngineState) -> Option<usize> {
-    if state.scratch.candidates.is_empty() {
+fn route_pick2(shards: &[Shard], ctl: &mut Control) -> Option<usize> {
+    if ctl.rs.candidates.is_empty() {
         return None;
     }
-    state.scratch.gated.clear();
-    for &i in &state.scratch.candidates {
-        state.scratch.gated.push(if state.tracker.is_draining(i) {
+    let Control { rs, tracker, inst_shard, pending, router, .. } = &mut *ctl;
+    rs.gated.clear();
+    for &i in &rs.candidates {
+        rs.gated.push(if tracker.is_draining(i) {
             f64::INFINITY
         } else {
-            instances[i].load()
+            inst_ref(shards, inst_shard, i).load() + pending[i]
         });
     }
-    if let Some(p) = state.router.pick_affinity(&state.scratch.gated, &state.scratch.affinity) {
-        return Some(state.scratch.candidates[p]);
+    if let Some(p) = router.pick_affinity(&rs.gated, &rs.affinity) {
+        return Some(rs.candidates[p]);
     }
-    state.scratch.gated.clear();
-    for &i in &state.scratch.candidates {
-        state.scratch.gated.push(instances[i].load());
+    rs.gated.clear();
+    for &i in &rs.candidates {
+        rs.gated.push(inst_ref(shards, inst_shard, i).load() + pending[i]);
     }
-    state.router.pick(&state.scratch.gated).map(|p| state.scratch.candidates[p])
+    router.pick(&rs.gated).map(|p| rs.candidates[p])
+}
+
+/// Re-offer running requests whose next stage their host no longer serves
+/// and that own no in-flight migration — a role flip (or an earlier
+/// failed hand-off) can orphan them, and nothing else retries.
+fn retry_stranded(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    now: f64,
+    w: f64,
+    cfg: &SimConfig,
+) {
+    for gid in 0..ctl.inst_shard.len() {
+        let s = ctl.inst_shard[gid];
+        let li = gid - shards[s].lo;
+        let mask = shards[s].instances[li].mask;
+        let stranded: Vec<(RequestId, Stage)> = shards[s].instances[li]
+            .queues
+            .running()
+            .iter()
+            .filter(|r| !r.migrating && !mask.serves(r.stage()))
+            .map(|r| (r.spec.id, r.stage()))
+            .collect();
+        for (id, stage) in stranded {
+            barrier_migrate(shards, ctl, dirs, gid, id, stage, now, w, cfg);
+        }
+    }
 }
 
 /// One controller-tick observation: per-instance backlogs by next stage
-/// (queues + in-flight pulls) plus the windowed latency tails.
-fn cluster_sample(
-    instances: &[SimInstance],
+/// (queues + in-flight pulls) plus the windowed latency tails, gathered
+/// in global instance order across shards.
+fn cluster_sample_sharded(
+    shards: &[Shard],
+    inst_shard: &[usize],
     tracker: &DrainTracker,
     now: f64,
     w: &crate::metrics::WindowStats,
 ) -> ClusterSample {
     let mut out = ClusterSample {
         t: now,
-        instances: Vec::with_capacity(instances.len()),
+        instances: Vec::with_capacity(inst_shard.len()),
         ttft_p90: w.ttft_p90(),
         tpot_p90: w.tpot_p90(),
     };
-    for inst in instances {
+    for gid in 0..inst_shard.len() {
+        let inst = inst_ref(shards, inst_shard, gid);
         let mut s = InstanceSample::idle(inst.mask, tracker.is_draining(inst.id));
         s.batch_items = inst.current.as_ref().map_or(0, |(b, _)| b.items.len());
         // skip migrating requests at the source: the in-flight copy in the
@@ -1339,73 +1512,557 @@ fn cluster_sample(
     out
 }
 
-/// Re-offer running requests whose next stage their host no longer serves
-/// and that own no in-flight migration — a role flip (or an earlier
-/// failed hand-off) can orphan them, and nothing else retries.
-fn retry_stranded(instances: &mut [SimInstance], now: f64, state: &mut EngineState) {
-    for iid in 0..instances.len() {
-        let mask = instances[iid].mask;
-        let stranded: Vec<(RequestId, Stage)> = instances[iid]
-            .queues
-            .running()
-            .iter()
-            .filter(|r| !r.migrating && !mask.serves(r.stage()))
-            .map(|r| (r.spec.id, r.stage()))
+/// One elastic-controller tick, run at the barrier (the controller is
+/// cluster-global — observing and flipping from inside a shard window
+/// would make the result depend on the partition).
+fn controller_tick(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    w: f64,
+    cfg: &SimConfig,
+    requests: &[RequestSpec],
+) {
+    let now = ctl.next_tick;
+    ctl.events += 1;
+    // (1) a completed flip elsewhere may have orphaned a hand-off
+    // attempt: re-offer stranded requests first
+    retry_stranded(shards, ctl, dirs, now, w, cfg);
+    let Control { controller, tracker, inst_shard, tracer, report, next_tick, .. } = &mut *ctl;
+    let Some((cc, est, pol)) = controller.as_mut() else {
+        *next_tick = f64::INFINITY;
+        return;
+    };
+
+    // (2) observe queue depths + windowed latency tails (lifecycles are
+    // gathered across shards in ascending id order — canonical, so the
+    // observation cannot depend on the partition)
+    let mut refs: Vec<(&u64, &Lifecycle)> = Vec::new();
+    for s in shards.iter() {
+        refs.extend(s.lifecycles.iter());
+    }
+    refs.sort_unstable_by_key(|(id, _)| **id);
+    let wstats = crate::metrics::window_stats(refs.iter().map(|(_, lc)| *lc), now - cc.window);
+    est.observe(cluster_sample_sharded(shards, inst_shard, tracker, now, &wstats));
+    drop(refs);
+
+    // (3) decide: at most one new drain per tick
+    if let Some(load) = est.snapshot() {
+        let masks: Vec<StageMask> = (0..inst_shard.len())
+            .map(|gid| inst_ref(shards, inst_shard, gid).mask)
             .collect();
-        for (id, stage) in stranded {
-            start_migration(instances, iid, id, stage, now, state);
+        let draining = tracker.draining_flags();
+        if let Some(d) = pol.decide(now, &load, &masks, &draining) {
+            tracker.begin(now, d.instance, d.to);
+        }
+    }
+
+    // (4) progress drains: cancel expired ones, flip emptied ones
+    for gid in 0..inst_shard.len() {
+        if !tracker.is_draining(gid) {
+            continue;
+        }
+        if tracker.expired(now, gid, cc.drain_timeout) {
+            tracker.cancel(gid);
+            continue;
+        }
+        let s = inst_shard[gid];
+        let li = gid - shards[s].lo;
+        let inst = &shards[s].instances[li];
+        let empty = inst.current.is_none()
+            && inst.queues.total() == 0
+            && inst.inbox.is_empty()
+            && inst.incoming.is_empty()
+            && inst.fetching.is_empty();
+        if empty {
+            let to = tracker.complete(now, gid, inst.mask);
+            crate::log_trace!("t={now:.6} role flip inst{gid} -> {}", to.label());
+            tracer.mark(SpanKind::RoleFlip, gid, now, mask_bits(to));
+            let (kv_blocks, img_blocks) = cache_blocks(&cfg.model, &cfg.device, to);
+            let inst = &mut shards[s].instances[li];
+            inst.mask = to;
+            inst.sched = cfg.policy.make(to);
+            // the instance is empty: re-partition its HBM for the new
+            // role's cache mix (cached content is dropped — bank the old
+            // caches' counters first, and retract every advertisement
+            // wholesale)
+            report.kv_stats.merge(&inst.kv.stats());
+            report.img_stats.merge(&inst.img.stats());
+            inst.kv = PagedCache::new(kv_blocks, KV_BLOCK, 1024);
+            inst.img = PagedCache::new(img_blocks, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
+            if let Some(d) = dirs.as_mut() {
+                d.kv.retract_all(gid);
+                d.img.retract_all(gid);
+                inst.kv.set_eviction_tracking(true);
+                inst.img.set_eviction_tracking(true);
+            }
+        }
+    }
+
+    // (5) nudge instances with queued pulls (retries may have stranded
+    // them while their host was full); workers re-check admission on
+    // every local event, so one Wake per backed-up inbox suffices
+    for gid in 0..inst_shard.len() {
+        let s = inst_shard[gid];
+        let li = gid - shards[s].lo;
+        if !shards[s].instances[li].inbox.is_empty() {
+            shards[s].push(w, gid as u32, EvKind::Wake);
+        }
+    }
+
+    // (6) keep ticking while the run is live
+    let total: usize = shards.iter().map(|s| s.lifecycles.len()).sum();
+    let live = total < requests.len()
+        || shards
+            .iter()
+            .any(|s| s.lifecycles.values().any(|lc| lc.finished_at.is_none()))
+        || tracker.any_draining();
+    *next_tick = if live && now + cc.tick <= cfg.horizon {
+        now + cc.tick
+    } else {
+        f64::INFINITY
+    };
+}
+
+// ------------------------------------------------------------ worker side
+
+/// Run one shard through one window: process every owned event with
+/// `t < ctx.t1` (and within the horizon). Touches only this shard's state
+/// plus the frozen `ctx` — the whole function is data-race-free by
+/// construction, which is what lets windows run on parallel threads.
+fn run_window(
+    shard: &mut Shard,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+    budgets: &Budgets,
+    requests: &[RequestSpec],
+) {
+    loop {
+        let Some(top) = shard.heap.peek() else { break };
+        if !(top.t < ctx.t1 && top.t <= ctx.horizon) {
+            break;
+        }
+        let ev = shard.heap.pop().unwrap();
+        let now = ev.t;
+        shard.events += 1;
+        let li = ev.inst as usize - shard.lo;
+        match ev.kind {
+            EvKind::Deliver(i) => deliver(shard, ctx, cfg, budgets, li, i, now, requests),
+            EvKind::BatchDone => {
+                let (batch, started) = shard.instances[li]
+                    .current
+                    .take()
+                    .expect("BatchDone for idle instance");
+                let dur = now - started;
+                crate::log_trace!(
+                    "t={now:.6} batch done inst{} items={} dur={dur:.6}",
+                    ev.inst,
+                    batch.items.len()
+                );
+                apply_batch(shard, cfg, li, &batch, started, dur, now);
+                process_inbox(shard, cfg, li, now);
+                try_start(shard, cfg, budgets, li, now);
+            }
+            EvKind::TransferLand { req } => {
+                transfer_land(shard, li, req, now);
+                process_inbox(shard, cfg, li, now);
+                try_start(shard, cfg, budgets, li, now);
+            }
+            EvKind::FetchDone { req } => {
+                crate::log_trace!("t={now:.6} fetch landed req={} at inst{}", req.0, ev.inst);
+                handle_fetch_done(shard, ctx, cfg, li, req, now);
+                process_inbox(shard, cfg, li, now);
+                try_start(shard, cfg, budgets, li, now);
+            }
+            EvKind::SrcRelease { req } => {
+                // §4.3 step 4: target holds the data; source releases
+                shard.instances[li].queues.remove_running(req);
+                shard.instances[li].release_all(req);
+                process_inbox(shard, cfg, li, now);
+                try_start(shard, cfg, budgets, li, now);
+            }
+            EvKind::Wake => {
+                process_inbox(shard, cfg, li, now);
+                try_start(shard, cfg, budgets, li, now);
+            }
         }
     }
 }
 
-/// §4.3 step 1 for one request: snapshot it, pick a pull target for its
-/// next stage, and enqueue the offer in the target's inbox.
-fn start_migration(
-    instances: &mut [SimInstance],
-    iid: usize,
-    id: RequestId,
-    next_stage: Stage,
+/// A routed request reaches its instance (the barrier already planted its
+/// lifecycle/chains in this shard): attach cache hits, consider a
+/// fetch-over-recompute, then dispatch into the queues.
+#[allow(clippy::too_many_arguments)]
+fn deliver(
+    shard: &mut Shard,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+    budgets: &Budgets,
+    li: usize,
+    idx: usize,
     now: f64,
-    state: &mut EngineState,
+    requests: &[RequestSpec],
 ) {
-    let Some(r) = instances[iid].queues.find_running(id) else { return };
-    r.migrating = true;
-    let snapshot = r.clone();
-    let phase = match next_stage {
-        Stage::Prefill => Phase::EpMigration,
-        _ => Phase::PdMigration,
-    };
-    let payload_tokens = match next_stage {
-        // EP migration carries the image-token embeddings
-        Stage::Prefill => snapshot.spec.image_tokens(),
-        // PD migration carries the prefix KV cache
-        _ => snapshot.spec.prefill_tokens(),
-    };
-    state.scratch.candidates.clear();
-    for inst in instances.iter() {
-        if inst.id != iid && inst.mask.serves(next_stage) {
-            state.scratch.candidates.push(inst.id);
+    let spec = requests[idx].clone();
+    let ch = chains_entry(&mut shard.chains, shard.content_cache, &shard.no_chains, &spec);
+    let mut st = ReqState::new(spec);
+    if shard.content_cache {
+        let Shard { instances, report, .. } = &mut *shard;
+        instances[li].attach(&mut st, &ch.kv, &ch.img, report);
+    }
+    // fetch-over-recompute: the routed target lacks content a peer
+    // advertises, and pulling it is priced below recomputing — park the
+    // request until the transfer lands
+    if ctx.dirs.is_some() {
+        match maybe_start_fetch(shard, ctx, cfg, li, st, &ch, now) {
+            None => return, // parked; FetchDone resumes it
+            Some(back) => st = back,
         }
     }
-    // cache affinity: a target already holding the payload's blocks needs
-    // (almost) nothing transferred. The directory answers for every
-    // candidate in one sweep; without it each private index is scanned.
-    let ch = state.chains_for(&snapshot.spec);
-    build_affinity(instances, state, &ch, next_stage == Stage::Prefill);
-    if let Some(dst) = route_among_affinity(instances, state) {
-        state.migrations += 1;
-        instances[dst].inbox.push(PendingPull {
-            req: snapshot,
-            src: iid,
-            phase,
-            payload_tokens,
-            kv_cached: 0,
-            created: now,
-        });
-    } else if let Some(r) = instances[iid].queues.find_running(id) {
-        // nowhere to go (incomplete cluster): request is stuck; it will
-        // count as unfinished. Un-mark so we don't spin.
-        r.migrating = false;
+    let stage = st.stage();
+    if shard.instances[li].mask.serves(stage) {
+        shard.instances[li].queues.push_waiting(st);
+    } else {
+        // cache hits advanced the request past every stage this instance
+        // serves (e.g. a cached image on an E-only node): admit it and
+        // hand it straight to the owner of its next stage
+        let rid = st.spec.id;
+        shard.instances[li].queues.push_running(st);
+        request_migration(shard, li, rid, stage, now);
+    }
+    try_start(shard, cfg, budgets, li, now);
+}
+
+/// §4.3 step 1, worker side: mark the request migrating and ask the
+/// barrier to route the hand-off (targeting needs the cluster view).
+fn request_migration(shard: &mut Shard, li: usize, id: RequestId, next: Stage, now: f64) {
+    let gid = (shard.lo + li) as u32;
+    let Some(r) = shard.instances[li].queues.find_running(id) else {
+        return;
+    };
+    if r.migrating {
+        return; // hand-off already in flight
+    }
+    r.migrating = true;
+    shard.emit(now, gid, MsgKind::MigrateReq { req: id, next });
+}
+
+/// An admitted pull's transfer lands: credit the shipped state, publish
+/// the now-held content, and enter the normal scheduling path.
+fn transfer_land(shard: &mut Shard, li: usize, req: RequestId, now: f64) {
+    let gid = shard.lo + li;
+    let Some(pull) = shard.instances[li].incoming.remove(&req.0) else {
+        return;
+    };
+    let PendingPull { req: mut r, phase, kv_cached, created, .. } = pull;
+    r.migrating = false;
+    if kv_cached > 0 {
+        // prefill resumes at the prefix the target held
+        r.cached_prefill = r.cached_prefill.max(kv_cached);
+        r.prefilled = r.prefilled.max(kv_cached);
+    }
+    // the target now holds this content: publish it
+    if shard.content_cache {
+        let ch = chains_entry(&mut shard.chains, shard.content_cache, &shard.no_chains, &r.spec);
+        match phase {
+            Phase::EpMigration => {
+                if r.spec.image_hash.is_some() {
+                    let new = shard.instances[li].img.commit_hashes(req, &ch.img);
+                    if shard.dirs_on && !new.is_empty() {
+                        shard.emit(now, gid as u32, MsgKind::PublishImg(new));
+                    }
+                }
+            }
+            _ => {
+                let new = shard.instances[li].kv.commit_hashes(req, ch.kv_commit());
+                if shard.dirs_on && !new.is_empty() {
+                    shard.emit(now, gid as u32, MsgKind::PublishKv(new));
+                }
+            }
+        }
+    }
+    if let Some(lc) = shard.lifecycles.get_mut(&req.0) {
+        lc.add_phase(phase, now - created);
+    }
+    shard
+        .tracer
+        .span(SpanKind::from_phase(phase), gid, req.0, created, now, kv_cached as u64);
+    shard.ready_since.insert(req.0, now);
+    crate::log_trace!("t={now:.6} transfer done req={} -> inst{gid}", req.0);
+    shard.instances[li].queues.push_running(r);
+}
+
+/// Decide whether the freshly routed request should **fetch** content a
+/// peer advertises instead of recomputing it (the §4.5 reuse extension,
+/// taken cluster-wide): the image-embedding and KV-prefix parts are priced
+/// independently against the cost model (encode vs. transfer bytes;
+/// prefill of the missing prefix vs. its KV bytes) and only taken when the
+/// link is cheaper. On a fetch, blocks are reserved now, the request parks
+/// in `fetching`, and one `FetchDone` event carries both parts. Returns
+/// the request back when nothing is worth fetching (including when the
+/// directory is off).
+fn maybe_start_fetch(
+    shard: &mut Shard,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+    li: usize,
+    st: ReqState,
+    ch: &HashChains,
+    now: f64,
+) -> Option<ReqState> {
+    let Some(dirs) = ctx.dirs.as_ref() else { return Some(st) };
+    let (link_lat, link_bw) = cfg.link();
+    let gid = shard.lo + li;
+    let id = st.spec.id;
+    let mut img_src = None;
+    let mut kv_src = None;
+    let mut bytes = 0.0f64;
+
+    // image embedding part (pricing + holder in the shared helper; the
+    // capacity check is planning-time only — a redirect re-plans with the
+    // blocks already reserved)
+    if let Some((src, fetch_bytes)) =
+        img_fetch_source(dirs, &ctx.loads, cfg, gid, &st, ch, &mut shard.dir_report)
+    {
+        let needed = img_blocks_for(st.spec.image_tokens());
+        let inst = &shard.instances[li];
+        let img_need = needed.saturating_sub(inst.img.held_blocks(id));
+        if inst.img_blocks_needed(&st) > 0 && img_need <= inst.img.available_blocks() {
+            img_src = Some(src);
+            bytes += fetch_bytes;
+        }
+    }
+
+    // KV-prefix part
+    if shard.instances[li].kv_tokens_needed(&st) > 0 {
+        if let Some((src, to_tokens, fetch_bytes)) =
+            kv_fetch_source(dirs, &ctx.loads, cfg, gid, &st, ch, &mut shard.dir_report)
+        {
+            let inst = &shard.instances[li];
+            let kv_need =
+                kv_blocks_for(to_tokens).saturating_sub(inst.kv.held_blocks(id));
+            if kv_need <= inst.kv.available_blocks() {
+                kv_src = Some((src, to_tokens));
+                bytes += fetch_bytes;
+            }
+        }
+    }
+
+    if img_src.is_none() && kv_src.is_none() {
+        return Some(st);
+    }
+
+    // reserve the blocks now (they are needed either way), park the
+    // request, and schedule the landing
+    {
+        let inst = &mut shard.instances[li];
+        if img_src.is_some() {
+            let need = img_blocks_for(st.spec.image_tokens());
+            inst.img
+                .grow(id, need * IMG_BLOCK)
+                .expect("capacity checked for image fetch");
+        }
+        if let Some((_, to_tokens)) = kv_src {
+            inst.kv.grow(id, to_tokens).expect("capacity checked for kv fetch");
+        }
+    }
+    {
+        let Shard { instances, outbox, msg_seq, dirs_on, .. } = &mut *shard;
+        emit_retractions(&mut instances[li], *dirs_on, outbox, msg_seq, now);
+    }
+    shard.dir_report.fetches += 1;
+    let dur = link_lat + bytes / link_bw;
+    shard.push(now + dur, gid as u32, EvKind::FetchDone { req: id });
+    shard.tracer.span(SpanKind::Fetch, gid, id.0, now, now + dur, bytes as u64);
+    shard.instances[li].fetching.insert(
+        id.0,
+        PendingFetch { req: st, img_src, kv_src, redirected: false, stale_counted: false },
+    );
+    None
+}
+
+/// The image-embedding part of a fetch plan: the best current holder of
+/// the WHOLE embedding (among maximal holders, the least-loaded — a hot
+/// holder should not also serve every fetch), when pulling it is priced
+/// below re-encoding. Returns `(source, payload bytes)`. Pricing and
+/// holder choice only — capacity is the caller's concern (checked when
+/// first planning; already reserved when a landing re-validates). Loads
+/// come from the frozen window snapshot, so every shard count prices the
+/// same plan.
+fn img_fetch_source(
+    dirs: &DirPair,
+    loads: &[f64],
+    cfg: &SimConfig,
+    target: usize,
+    st: &ReqState,
+    ch: &HashChains,
+    dr: &mut DirectoryReport,
+) -> Option<(usize, f64)> {
+    // only whole-embedding hits are useful (encode runs per image; a
+    // partial block set cannot shorten it)
+    if st.encoded_images >= st.spec.num_images || st.spec.image_hash.is_none() {
+        return None;
+    }
+    let needed = img_blocks_for(st.spec.image_tokens());
+    dr.queries += 1;
+    let (src, blocks) = dirs.img.best_holder_by_ro(&ch.img, target, |i| loads[i])?;
+    if blocks < needed {
+        return None;
+    }
+    let (link_lat, link_bw) = cfg.link();
+    let remaining = st.spec.num_images - st.encoded_images;
+    let miss_tokens = remaining * st.spec.tokens_per_image;
+    let fetch_bytes = crate::costmodel::ops::image_payload_bytes(&cfg.model, miss_tokens);
+    let fetch_t = link_lat + fetch_bytes / link_bw;
+    let recompute_t =
+        exec_time(encode_cost(&cfg.model, remaining), &cfg.device) + cfg.engine_overhead;
+    (fetch_t < recompute_t).then_some((src, fetch_bytes))
+}
+
+/// The KV-prefix part of a fetch plan: fetch only the delta past what the
+/// local cache already served, block-aligned and leaving >= 1 token for
+/// prefill to emit from. Recompute is priced as a *resumed* prefill of
+/// the missing delta ([`prefill_resume_cost`]) — the real plane executes
+/// exactly that op, so the fetch decision and the compute it replaces
+/// stay in the same currency. Returns
+/// `(source, prefix tokens fetched to, payload bytes)`.
+fn kv_fetch_source(
+    dirs: &DirPair,
+    loads: &[f64],
+    cfg: &SimConfig,
+    target: usize,
+    st: &ReqState,
+    ch: &HashChains,
+    dr: &mut DirectoryReport,
+) -> Option<(usize, usize, f64)> {
+    if st.prefill_remaining() == 0 {
+        return None;
+    }
+    let cap_blocks = st.spec.prefill_tokens().saturating_sub(1) / KV_BLOCK;
+    dr.queries += 1;
+    let (src, blocks) = dirs.kv.best_holder_by_ro(&ch.kv, target, |i| loads[i])?;
+    let to_tokens = blocks.min(cap_blocks) * KV_BLOCK;
+    if to_tokens <= st.prefilled {
+        return None;
+    }
+    let delta = to_tokens - st.prefilled;
+    let (link_lat, link_bw) = cfg.link();
+    let fetch_bytes =
+        crate::costmodel::ops::kv_delta_payload_bytes(&cfg.model, to_tokens, st.prefilled);
+    let fetch_t = link_lat + fetch_bytes / link_bw;
+    let recompute_t = exec_time(prefill_resume_cost(&cfg.model, st.prefilled, delta), &cfg.device)
+        + cfg.engine_overhead;
+    (fetch_t < recompute_t).then_some((src, to_tokens, fetch_bytes))
+}
+
+/// Apply a landed cache fetch. The plan was decided when the request
+/// arrived; by landing time the advertised holder may have evicted the
+/// content (the arrival→service staleness window). Each part is validated
+/// against the holder's **directory** entry (barrier-synced, so every
+/// shard count sees the same history); a part that went stale is
+/// re-validated and redirected to a surviving holder (one redirect per
+/// fetch — a second stale landing means the directory is churning), and
+/// only when no priced-worthwhile holder remains does the request fall
+/// back to recomputing that part, counted in `stale_fetches`. Parts that
+/// landed keep their credit either way.
+fn handle_fetch_done(
+    shard: &mut Shard,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+    li: usize,
+    req: RequestId,
+    now: f64,
+) {
+    let gid = shard.lo + li;
+    let Some(mut f) = shard.instances[li].fetching.remove(&req.0) else { return };
+    let ch = chains_entry(&mut shard.chains, shard.content_cache, &shard.no_chains, &f.req.spec);
+    let (link_lat, link_bw) = cfg.link();
+    let mut any_stale = false;
+    let mut retry = false;
+    let mut retry_bytes = 0.0f64;
+    let dirs = ctx.dirs.as_ref().expect("fetches require the directory");
+    // image part: validate against the source's directory entry — an
+    // eviction mid-flight retracts it at the next barrier
+    if let Some(src) = f.img_src.take() {
+        let needed = img_blocks_for(f.req.spec.image_tokens());
+        if dirs.img.holder_prefix_blocks(src, &ch.img) >= needed {
+            let fetched = f.req.spec.num_images - f.req.encoded_images;
+            let new = shard.instances[li].img.commit_hashes(req, &ch.img);
+            if shard.dirs_on && !new.is_empty() {
+                shard.emit(now, gid as u32, MsgKind::PublishImg(new));
+            }
+            f.req.cached_images = f.req.spec.num_images;
+            f.req.encoded_images = f.req.spec.num_images;
+            shard.dir_report.fetched_images += fetched;
+        } else if !f.redirected {
+            // stale: re-validate against the current directory (the
+            // blocks are already reserved locally, so only holder +
+            // pricing are re-checked)
+            match img_fetch_source(dirs, &ctx.loads, cfg, gid, &f.req, &ch, &mut shard.dir_report)
+            {
+                Some((src2, bytes)) => {
+                    f.img_src = Some(src2);
+                    retry_bytes += bytes;
+                    retry = true;
+                }
+                None => any_stale = true,
+            }
+        } else {
+            any_stale = true;
+        }
+    }
+    // KV-prefix part
+    if let Some((src, to_tokens)) = f.kv_src.take() {
+        let blocks = to_tokens / KV_BLOCK;
+        if dirs.kv.holder_prefix_blocks(src, &ch.kv[..blocks]) >= blocks {
+            let new = shard.instances[li].kv.commit_hashes(req, &ch.kv[..blocks]);
+            if shard.dirs_on && !new.is_empty() {
+                shard.emit(now, gid as u32, MsgKind::PublishKv(new));
+            }
+            shard.dir_report.fetched_kv_tokens += to_tokens.saturating_sub(f.req.prefilled);
+            f.req.cached_prefill = f.req.cached_prefill.max(to_tokens);
+            f.req.prefilled = f.req.prefilled.max(to_tokens);
+        } else if !f.redirected {
+            match kv_fetch_source(dirs, &ctx.loads, cfg, gid, &f.req, &ch, &mut shard.dir_report)
+            {
+                Some((src2, to2, bytes)) => {
+                    f.kv_src = Some((src2, to2));
+                    retry_bytes += bytes;
+                    retry = true;
+                }
+                None => any_stale = true,
+            }
+        } else {
+            any_stale = true;
+        }
+    }
+    if retry {
+        shard.dir_report.redirected_fetches += 1;
+    }
+    // a fetch counts stale at most once, mirroring `fetches` (one
+    // combined transfer per request) — even when its parts are abandoned
+    // across different landings (e.g. img part gives up on landing 1
+    // while the kv part redirects and fails on landing 2)
+    if any_stale && !f.stale_counted {
+        shard.dir_report.stale_fetches += 1;
+        f.stale_counted = true;
+    }
+    if retry {
+        f.redirected = true;
+        let dur = link_lat + retry_bytes / link_bw;
+        shard.push(now + dur, gid as u32, EvKind::FetchDone { req });
+        shard.tracer.span(SpanKind::Fetch, gid, req.0, now, now + dur, retry_bytes as u64);
+        shard.instances[li].fetching.insert(req.0, f);
+        return;
+    }
+    // resume the normal dispatch path with whatever credit landed
+    let r = f.req;
+    let stage = r.stage();
+    if shard.instances[li].mask.serves(stage) {
+        shard.instances[li].queues.push_waiting(r);
+    } else {
+        shard.instances[li].queues.push_running(r);
+        request_migration(shard, li, req, stage, now);
     }
 }
 
@@ -1445,14 +2102,14 @@ fn batch_duration(batch: &Batch, cfg: &SimConfig) -> f64 {
     kernel_time + cfg.engine_overhead
 }
 
-fn try_start(instances: &mut [SimInstance], iid: usize, now: f64, state: &mut EngineState) {
-    if instances[iid].current.is_some() {
+fn try_start(shard: &mut Shard, cfg: &SimConfig, budgets: &Budgets, li: usize, now: f64) {
+    if shard.instances[li].current.is_some() {
         return;
     }
-    let cfg = state.cfg;
+    let gid = (shard.lo + li) as u32;
     // split-borrow: scheduler + queues + capacity checks live on the same
     // instance; temporarily move the scheduler out.
-    let inst = &mut instances[iid];
+    let inst = &mut shard.instances[li];
     let mut sched = std::mem::replace(&mut inst.sched, Box::new(NullSched));
     let batch = {
         let kv = &inst.kv;
@@ -1478,7 +2135,7 @@ fn try_start(instances: &mut [SimInstance], iid: usize, now: f64, state: &mut En
                 false
             }
         };
-        sched.build_batch(&mut inst.queues, &state.budgets, &mut admit)
+        sched.build_batch(&mut inst.queues, budgets, &mut admit)
     };
     inst.sched = sched;
 
@@ -1488,21 +2145,22 @@ fn try_start(instances: &mut [SimInstance], iid: usize, now: f64, state: &mut En
     // check — they keep only their pinned prefix until the pull lands).
     // Split borrow (queues shared / caches mut) so nothing is cloned.
     {
-        let SimInstance { queues, kv, img, mask, .. } = &mut instances[iid];
+        let Shard { instances, chains, no_chains, content_cache, .. } = &mut *shard;
+        let SimInstance { queues, kv, img, mask, .. } = &mut instances[li];
         let mask = *mask;
         for r in queues.running() {
             if r.migrating || !mask.serves(r.stage()) {
                 continue;
             }
-            let ch =
-                chains_entry(&mut state.chains, cfg.content_cache, &state.no_chains, &r.spec);
+            let ch = chains_entry(chains, *content_cache, no_chains, &r.spec);
             reserve_blocks(mask, kv, img, r, &ch);
         }
     }
     // reserving may have evicted cached blocks: retract them from the
     // cluster directory before anyone queries it again
-    if let Some(d) = state.dirs.as_mut() {
-        d.sync_evictions(&mut instances[iid]);
+    {
+        let Shard { instances, outbox, msg_seq, dirs_on, .. } = &mut *shard;
+        emit_retractions(&mut instances[li], *dirs_on, outbox, msg_seq, now);
     }
 
     let has_compute = batch
@@ -1513,9 +2171,9 @@ fn try_start(instances: &mut [SimInstance], iid: usize, now: f64, state: &mut En
         return;
     }
     let dur = batch_duration(&batch, cfg);
-    state.batches += 1;
-    instances[iid].current = Some((batch, now));
-    state.push(now + dur, EvKind::BatchDone(iid));
+    shard.batches += 1;
+    shard.instances[li].current = Some((batch, now));
+    shard.push(now + dur, gid, EvKind::BatchDone);
 }
 
 fn kv_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
@@ -1537,32 +2195,37 @@ fn img_blocks_needed_mask(mask: StageMask, r: &ReqState) -> usize {
 /// Apply a completed batch: advance request progress, record tokens,
 /// trigger migrations, finish requests.
 fn apply_batch(
-    instances: &mut [SimInstance],
-    iid: usize,
+    shard: &mut Shard,
+    cfg: &SimConfig,
+    li: usize,
     batch: &Batch,
     started: f64,
     dur: f64,
     now: f64,
-    state: &mut EngineState,
 ) {
-    let cfg = state.cfg;
+    let gid = shard.lo + li;
     // take the scratch accumulators so later helper calls can borrow
-    // `state` mutably (returned below — allocation-free after warmup)
-    let mut to_finish = std::mem::take(&mut state.scratch.to_finish);
-    let mut to_migrate = std::mem::take(&mut state.scratch.to_migrate);
+    // `shard` mutably (returned below — allocation-free after warmup)
+    let mut to_finish = std::mem::take(&mut shard.scratch.to_finish);
+    let mut to_migrate = std::mem::take(&mut shard.scratch.to_migrate);
     to_finish.clear();
     to_migrate.clear();
 
     for (id, work) in &batch.items {
-        let mask = instances[iid].mask;
-        let Some(r) = instances[iid].queues.find_running(*id) else {
-            continue; // migrated away mid-flight (migrate items)
+        if matches!(work, TaskWork::Migrate) {
+            // pure hand-off placeholder: no compute, and the request (and
+            // its lifecycle) may already live on another shard
+            continue;
+        }
+        let mask = shard.instances[li].mask;
+        let Some(r) = shard.instances[li].queues.find_running(*id) else {
+            continue; // migrated away mid-flight
         };
-        let lc = state.lifecycles.get_mut(&id.0).expect("lifecycle exists");
+        let lc = shard.lifecycles.get_mut(&id.0).expect("lifecycle exists");
         // single map access per item: read the ready timestamp and write
         // the new one through the same entry (always present — inserted
         // at arrival, removed only at finish)
-        let rs_slot = state.ready_since.entry(id.0).or_insert(started);
+        let rs_slot = shard.ready_since.entry(id.0).or_insert(started);
         let rs = *rs_slot;
         match work {
             TaskWork::Encode { images } => {
@@ -1570,21 +2233,22 @@ fn apply_batch(
                 lc.add_phase(Phase::EncodeQueue, (started - rs).max(0.0));
                 lc.add_phase(Phase::EncodeExec, dur);
                 *rs_slot = now;
-                state.tracer.span(SpanKind::EncodeQueue, iid, id.0, rs.min(started), started, 0);
-                state.tracer.span(SpanKind::EncodeExec, iid, id.0, started, now, *images as u64);
+                shard.tracer.span(SpanKind::EncodeQueue, gid, id.0, rs.min(started), started, 0);
+                shard.tracer.span(SpanKind::EncodeExec, gid, id.0, started, now, *images as u64);
                 if r.encode_remaining() == 0 {
                     let rid = *id;
                     // publish the finished embedding for cross-request reuse
-                    if cfg.content_cache && r.spec.image_hash.is_some() {
+                    if shard.content_cache && r.spec.image_hash.is_some() {
+                        let spec = r.spec.clone();
                         let ch = chains_entry(
-                            &mut state.chains,
-                            cfg.content_cache,
-                            &state.no_chains,
-                            &r.spec,
+                            &mut shard.chains,
+                            shard.content_cache,
+                            &shard.no_chains,
+                            &spec,
                         );
-                        let new = instances[iid].img.commit_hashes(rid, &ch.img);
-                        if let Some(d) = state.dirs.as_mut() {
-                            d.img.publish(iid, &new);
+                        let new = shard.instances[li].img.commit_hashes(rid, &ch.img);
+                        if shard.dirs_on && !new.is_empty() {
+                            shard.emit(now, gid as u32, MsgKind::PublishImg(new));
                         }
                     }
                     if !mask.prefill {
@@ -1597,33 +2261,34 @@ fn apply_batch(
                 lc.add_phase(Phase::PrefillQueue, (started - rs).max(0.0));
                 lc.add_phase(Phase::PrefillExec, dur);
                 *rs_slot = now;
-                state.tracer.span(SpanKind::PrefillQueue, iid, id.0, rs.min(started), started, 0);
-                state.tracer.span(SpanKind::PrefillExec, iid, id.0, started, now, *tokens as u64);
+                shard.tracer.span(SpanKind::PrefillQueue, gid, id.0, rs.min(started), started, 0);
+                shard.tracer.span(SpanKind::PrefillExec, gid, id.0, started, now, *tokens as u64);
                 if r.prefill_remaining() == 0 {
                     // prefill emits the first output token
                     r.decoded = 1;
                     lc.record_token(now);
                     let rid = *id;
+                    let spec = r.spec.clone();
                     // publish the shareable KV prefix for cross-request reuse
-                    if cfg.content_cache {
+                    if shard.content_cache {
                         let ch = chains_entry(
-                            &mut state.chains,
-                            cfg.content_cache,
-                            &state.no_chains,
-                            &r.spec,
+                            &mut shard.chains,
+                            shard.content_cache,
+                            &shard.no_chains,
+                            &spec,
                         );
-                        let new = instances[iid].kv.commit_hashes(rid, ch.kv_commit());
-                        if let Some(d) = state.dirs.as_mut() {
-                            d.kv.publish(iid, &new);
+                        let new = shard.instances[li].kv.commit_hashes(rid, ch.kv_commit());
+                        if shard.dirs_on && !new.is_empty() {
+                            shard.emit(now, gid as u32, MsgKind::PublishKv(new));
                         }
                     }
                     // image embeddings consumed: free image cache (tagged
                     // blocks stay evictable-cached for the next hit)
-                    let has_img = instances[iid].img.has_request(rid);
+                    let has_img = shard.instances[li].img.has_request(rid);
                     if has_img {
-                        instances[iid].img.free(rid).unwrap();
+                        shard.instances[li].img.free(rid).unwrap();
                     }
-                    let r = instances[iid].queues.find_running(rid).unwrap();
+                    let r = shard.instances[li].queues.find_running(rid).unwrap();
                     if r.finished() {
                         to_finish.push(rid);
                     } else if !mask.decode {
@@ -1637,93 +2302,92 @@ fn apply_batch(
                 lc.add_phase(Phase::DecodeExec, dur);
                 lc.record_token(now);
                 *rs_slot = now;
-                state.tracer.span(SpanKind::DecodeQueue, iid, id.0, rs.min(started), started, 0);
-                state.tracer.span(SpanKind::DecodeExec, iid, id.0, started, now, 1);
+                shard.tracer.span(SpanKind::DecodeQueue, gid, id.0, rs.min(started), started, 0);
+                shard.tracer.span(SpanKind::DecodeExec, gid, id.0, started, now, 1);
                 if r.finished() {
                     to_finish.push(*id);
                 }
             }
-            TaskWork::Migrate => {}
+            TaskWork::Migrate => unreachable!("skipped above"),
         }
     }
 
     for &id in &to_finish {
-        instances[iid].queues.remove_running(id);
-        instances[iid].release_all(id);
-        if let Some(lc) = state.lifecycles.get_mut(&id.0) {
+        shard.instances[li].queues.remove_running(id);
+        shard.instances[li].release_all(id);
+        if let Some(lc) = shard.lifecycles.get_mut(&id.0) {
             lc.finished_at = Some(now);
         }
         // finished: drop the per-request engine state (the lifecycle
         // stays — it IS the result)
-        state.ready_since.remove(&id.0);
-        state.chains.remove(&id.0);
+        shard.ready_since.remove(&id.0);
+        shard.chains.remove(&id.0);
     }
 
-    // paper §4.3 step 1: notify the target; it pulls when it has capacity
+    // paper §4.3 step 1: ask the barrier to route each hand-off
     for &(id, next_stage) in &to_migrate {
-        start_migration(instances, iid, id, next_stage, now, state);
+        request_migration(shard, li, id, next_stage, now);
     }
 
     to_finish.clear();
     to_migrate.clear();
-    state.scratch.to_finish = to_finish;
-    state.scratch.to_migrate = to_migrate;
+    shard.scratch.to_finish = to_finish;
+    shard.scratch.to_migrate = to_migrate;
 }
 
 /// Admit pending pulls wherever capacity allows (§4.3 step 2) and schedule
 /// their transfers (step 3). The transfer carries only the payload tokens
 /// the target's content-addressed cache does not already hold (delta
 /// transfer): reserving the pull shares any cached prefix blocks, and the
-/// remaining tokens price the link time.
-fn process_inboxes(instances: &mut [SimInstance], now: f64, state: &mut EngineState) {
-    let cfg = state.cfg;
+/// remaining tokens price the link time. The source's release travels as
+/// a boundary message — it lands at the transfer's landing time, barrier
+/// permitting.
+fn process_inbox(shard: &mut Shard, cfg: &SimConfig, li: usize, now: f64) {
     let (link_lat, link_bw) = cfg.link();
-    for iid in 0..instances.len() {
-        let mut i = 0;
-        while i < instances[iid].inbox.len() {
-            let can = instances[iid].can_admit(&instances[iid].inbox[i].req);
-            if can {
-                let mut pull = instances[iid].inbox.remove(i);
-                let r = pull.req.clone();
-                let ch =
-                    chains_entry(&mut state.chains, cfg.content_cache, &state.no_chains, &r.spec);
-                let (kv_cached, img_cached) = {
-                    let SimInstance { kv, img, mask, .. } = &mut instances[iid];
-                    reserve_blocks(*mask, kv, img, &r, &ch)
-                };
-                if let Some(d) = state.dirs.as_mut() {
-                    d.sync_evictions(&mut instances[iid]);
-                }
-                pull.kv_cached = kv_cached;
-                let cached = match pull.phase {
-                    Phase::EpMigration => img_cached,
-                    _ => kv_cached,
-                };
-                let cached = cached.min(pull.payload_tokens);
-                state.report.migration_tokens_saved += cached;
-                let bytes = match pull.phase {
-                    Phase::EpMigration => crate::costmodel::ops::image_delta_payload_bytes(
-                        &cfg.model,
-                        pull.payload_tokens,
-                        cached,
-                    ),
-                    _ => crate::costmodel::ops::kv_delta_payload_bytes(
-                        &cfg.model,
-                        pull.payload_tokens,
-                        cached,
-                    ),
-                };
-                let dur = link_lat + bytes / link_bw;
-                state.push(
-                    now + dur,
-                    EvKind::TransferDone { src: pull.src, dst: iid, req: r.spec.id },
-                );
-                state.tracer.span(SpanKind::Transfer, iid, r.spec.id.0, now, now + dur, bytes as u64);
-                instances[iid].incoming.insert(r.spec.id.0, pull);
-            } else {
-                i += 1; // blocked: backpressure (source keeps its blocks)
-            }
+    let gid = (shard.lo + li) as u32;
+    let mut i = 0;
+    while i < shard.instances[li].inbox.len() {
+        let can = shard.instances[li].can_admit(&shard.instances[li].inbox[i].req);
+        if !can {
+            i += 1; // blocked: backpressure (source keeps its blocks)
+            continue;
         }
+        let mut pull = shard.instances[li].inbox.remove(i);
+        let r = pull.req.clone();
+        let ch = chains_entry(&mut shard.chains, shard.content_cache, &shard.no_chains, &r.spec);
+        let (kv_cached, img_cached) = {
+            let SimInstance { kv, img, mask, .. } = &mut shard.instances[li];
+            reserve_blocks(*mask, kv, img, &r, &ch)
+        };
+        {
+            let Shard { instances, outbox, msg_seq, dirs_on, .. } = &mut *shard;
+            emit_retractions(&mut instances[li], *dirs_on, outbox, msg_seq, now);
+        }
+        pull.kv_cached = kv_cached;
+        let cached = match pull.phase {
+            Phase::EpMigration => img_cached,
+            _ => kv_cached,
+        };
+        let cached = cached.min(pull.payload_tokens);
+        shard.report.migration_tokens_saved += cached;
+        let bytes = match pull.phase {
+            Phase::EpMigration => crate::costmodel::ops::image_delta_payload_bytes(
+                &cfg.model,
+                pull.payload_tokens,
+                cached,
+            ),
+            _ => crate::costmodel::ops::kv_delta_payload_bytes(
+                &cfg.model,
+                pull.payload_tokens,
+                cached,
+            ),
+        };
+        let dur = link_lat + bytes / link_bw;
+        let land = now + dur;
+        shard.push(land, gid, EvKind::TransferLand { req: r.spec.id });
+        shard.emit(now, gid, MsgKind::SrcRelease { src: pull.src, req: r.spec.id, land });
+        shard.tracer.span(SpanKind::Transfer, gid as usize, r.spec.id.0, now, land, bytes as u64);
+        shard.instances[li].incoming.insert(r.spec.id.0, pull);
     }
 }
 
@@ -1746,7 +2410,7 @@ impl Scheduler for NullSched {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ModelSpec, SloSpec};
+    use crate::config::{ControllerConfig, ModelSpec, SloSpec};
     use crate::scheduler::Policy;
     use crate::simulator::ClusterSpec;
     use crate::workload::{Dataset, PoissonGenerator};
@@ -2120,33 +2784,24 @@ mod tests {
 
     // ---- fetch-plan re-validation under eviction races ---------------------
 
-    /// Engine state for handler-level tests (same construction as
-    /// `simulate`, directory on).
-    fn handler_state(cfg: &SimConfig, n: usize) -> EngineState<'_> {
-        EngineState {
-            cfg,
-            budgets: Budgets::default(),
-            router: Router::new(RoutePolicy::LeastLoaded, cfg.seed),
-            tracker: DrainTracker::new(n),
-            dirs: Some(DirState {
+    /// One shard owning the whole cluster plus a frozen window context
+    /// (same construction as `simulate`, directory on, window open to
+    /// infinity so handler calls never cross a barrier).
+    fn handler_shard(cfg: &SimConfig) -> (Shard, Ctx) {
+        let masks = cfg.cluster.instance_masks();
+        let n = masks.len();
+        let instances = build_instances(cfg, &masks, true);
+        let shard = build_shards(cfg, instances, 1).pop().unwrap();
+        let ctx = Ctx {
+            t1: f64::INFINITY,
+            horizon: f64::INFINITY,
+            loads: vec![0.0; n],
+            dirs: Some(DirPair {
                 kv: ContentDirectory::new(n),
                 img: ContentDirectory::new(n),
-                report: DirectoryReport::default(),
             }),
-            heap: BinaryHeap::new(),
-            seq: 0,
-            events: 0,
-            migrations: 0,
-            batches: 0,
-            dropped: 0,
-            report: CacheReport::default(),
-            lifecycles: FxHashMap::default(),
-            ready_since: FxHashMap::default(),
-            chains: FxHashMap::default(),
-            no_chains: Arc::new(HashChains::empty()),
-            scratch: Scratch::default(),
-            tracer: Tracer::off(),
-        }
+        };
+        (shard, ctx)
     }
 
     /// Text-only spec sharing a hot 512-token prefix.
@@ -2169,7 +2824,7 @@ mod tests {
     /// a holder whose content a later filler allocation can evict.
     fn seed_evictable_prefix(
         inst: &mut SimInstance,
-        dirs: &mut DirState,
+        dirs: &mut DirPair,
         ch: &HashChains,
         tokens: usize,
         seeder: u64,
@@ -2185,11 +2840,14 @@ mod tests {
         inst.kv.free(rid).unwrap(); // refs drop: cached + evictable
     }
 
-    /// Fill `inst`'s whole small pool so every cached prefix block evicts.
-    fn evict_prefix(inst: &mut SimInstance, dirs: &mut DirState, filler: u64) {
+    /// Fill `inst`'s whole small pool so every cached prefix block evicts,
+    /// and retract the evictions from the directory (what the barrier's
+    /// gossip drain does in a real run).
+    fn evict_prefix(inst: &mut SimInstance, dirs: &mut DirPair, filler: u64) {
         let n = inst.kv.num_blocks();
         inst.kv.allocate(RequestId(filler), n * KV_BLOCK).unwrap();
-        dirs.sync_evictions(inst);
+        let evicted = inst.kv.drain_evicted();
+        dirs.kv.retract(inst.id, &evicted);
     }
 
     #[test]
@@ -2207,53 +2865,53 @@ mod tests {
             Policy::StageLevel,
             SloSpec::new(0.25, 0.04),
         );
-        let mut instances = build_instances(&cfg, &cfg.cluster.instance_masks(), true);
-        let mut state = handler_state(&cfg, 3);
+        let (mut shard, mut ctx) = handler_shard(&cfg);
         let spec = prefix_spec(1, 600);
         let ch = Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK));
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            seed_evictable_prefix(&mut instances[0], dirs, &ch, 512, 100);
-            seed_evictable_prefix(&mut instances[1], dirs, &ch, 512, 101);
+            let dirs = ctx.dirs.as_mut().unwrap();
+            seed_evictable_prefix(&mut shard.instances[0], dirs, &ch, 512, 100);
+            seed_evictable_prefix(&mut shard.instances[1], dirs, &ch, 512, 101);
         }
 
         // arrival at instance 2: plan the fetch (lowest-index holder on
         // equal loads -> source 0), park the request
         let mut st = ReqState::new(spec.clone());
-        state.chains.insert(1, ch.clone());
-        instances[2].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
-        let parked = maybe_start_fetch(&mut instances, 2, st, &ch, 0.0, &mut state);
+        shard.chains.insert(1, ch.clone());
+        {
+            let Shard { instances, report, .. } = &mut shard;
+            instances[2].attach(&mut st, &ch.kv, &ch.img, report);
+        }
+        let parked = maybe_start_fetch(&mut shard, &ctx, &cfg, 2, st, &ch, 0.0);
         assert!(parked.is_none(), "a worthwhile fetch parks the request");
-        assert_eq!(instances[2].fetching[&1].kv_src, Some((0, 512)));
-        assert_eq!(state.dirs.as_ref().unwrap().report.fetches, 1);
+        assert_eq!(shard.instances[2].fetching[&1].kv_src, Some((0, 512)));
+        assert_eq!(shard.dir_report.fetches, 1);
 
         // the race: holder 0 evicts the prefix before the fetch lands
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            evict_prefix(&mut instances[0], dirs, 900);
+            let dirs = ctx.dirs.as_mut().unwrap();
+            evict_prefix(&mut shard.instances[0], dirs, 900);
         }
-        assert_eq!(instances[0].kv.lookup_prefix(&ch.kv[..32]), 0, "content gone");
+        assert_eq!(shard.instances[0].kv.lookup_prefix(&ch.kv[..32]), 0, "content gone");
 
         // landing: stale source, but holder 1 survives -> redirect
-        let ev = state.heap.pop().expect("landing scheduled");
-        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
-        let d = state.dirs.as_ref().unwrap().report;
-        assert_eq!(d.stale_fetches, 0, "re-validation rescued the fetch");
-        assert_eq!(d.redirected_fetches, 1);
+        let ev = shard.heap.pop().expect("landing scheduled");
+        handle_fetch_done(&mut shard, &ctx, &cfg, 2, RequestId(1), ev.t);
+        assert_eq!(shard.dir_report.stale_fetches, 0, "re-validation rescued the fetch");
+        assert_eq!(shard.dir_report.redirected_fetches, 1);
         assert_eq!(
-            instances[2].fetching[&1].kv_src,
+            shard.instances[2].fetching[&1].kv_src,
             Some((1, 512)),
             "redirected to the surviving holder"
         );
 
         // second landing commits from the survivor and resumes dispatch
-        let ev = state.heap.pop().expect("redirect scheduled a new landing");
-        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
-        assert!(instances[2].fetching.is_empty());
-        let d = state.dirs.as_ref().unwrap().report;
-        assert_eq!(d.stale_fetches, 0);
-        assert_eq!(d.fetched_kv_tokens, 512);
-        let r = instances[2].queues.peek_waiting(|_| true).expect("request dispatched");
+        let ev = shard.heap.pop().expect("redirect scheduled a new landing");
+        handle_fetch_done(&mut shard, &ctx, &cfg, 2, RequestId(1), ev.t);
+        assert!(shard.instances[2].fetching.is_empty());
+        assert_eq!(shard.dir_report.stale_fetches, 0);
+        assert_eq!(shard.dir_report.fetched_kv_tokens, 512);
+        let r = shard.instances[2].queues.peek_waiting(|_| true).expect("request dispatched");
         assert_eq!(r.prefilled, 512, "prefill resumes at the fetched prefix");
     }
 
@@ -2265,30 +2923,31 @@ mod tests {
             Policy::StageLevel,
             SloSpec::new(0.25, 0.04),
         );
-        let mut instances = build_instances(&cfg, &cfg.cluster.instance_masks(), true);
-        let mut state = handler_state(&cfg, 3);
+        let (mut shard, mut ctx) = handler_shard(&cfg);
         let spec = prefix_spec(1, 600);
         let ch = Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK));
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            seed_evictable_prefix(&mut instances[0], dirs, &ch, 512, 100);
+            let dirs = ctx.dirs.as_mut().unwrap();
+            seed_evictable_prefix(&mut shard.instances[0], dirs, &ch, 512, 100);
         }
         let mut st = ReqState::new(spec.clone());
-        state.chains.insert(1, ch.clone());
-        instances[2].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
-        assert!(maybe_start_fetch(&mut instances, 2, st, &ch, 0.0, &mut state).is_none());
+        shard.chains.insert(1, ch.clone());
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            evict_prefix(&mut instances[0], dirs, 900);
+            let Shard { instances, report, .. } = &mut shard;
+            instances[2].attach(&mut st, &ch.kv, &ch.img, report);
         }
-        let ev = state.heap.pop().unwrap();
-        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
-        let d = state.dirs.as_ref().unwrap().report;
-        assert_eq!(d.stale_fetches, 1, "no holder left: doomed fetch recomputes");
-        assert_eq!(d.redirected_fetches, 0);
-        assert_eq!(d.fetched_kv_tokens, 0);
-        assert!(instances[2].fetching.is_empty(), "request not stuck parked");
-        let r = instances[2].queues.peek_waiting(|_| true).expect("request dispatched");
+        assert!(maybe_start_fetch(&mut shard, &ctx, &cfg, 2, st, &ch, 0.0).is_none());
+        {
+            let dirs = ctx.dirs.as_mut().unwrap();
+            evict_prefix(&mut shard.instances[0], dirs, 900);
+        }
+        let ev = shard.heap.pop().unwrap();
+        handle_fetch_done(&mut shard, &ctx, &cfg, 2, RequestId(1), ev.t);
+        assert_eq!(shard.dir_report.stale_fetches, 1, "no holder left: doomed fetch recomputes");
+        assert_eq!(shard.dir_report.redirected_fetches, 0);
+        assert_eq!(shard.dir_report.fetched_kv_tokens, 0);
+        assert!(shard.instances[2].fetching.is_empty(), "request not stuck parked");
+        let r = shard.instances[2].queues.peek_waiting(|_| true).expect("request dispatched");
         assert_eq!(r.prefilled, 0, "full recompute from scratch");
     }
 
@@ -2300,39 +2959,40 @@ mod tests {
             Policy::StageLevel,
             SloSpec::new(0.25, 0.04),
         );
-        let mut instances = build_instances(&cfg, &cfg.cluster.instance_masks(), true);
-        let mut state = handler_state(&cfg, 3);
+        let (mut shard, mut ctx) = handler_shard(&cfg);
         let spec = prefix_spec(1, 600);
         let ch = Arc::new(HashChains::of_spec(&spec, KV_BLOCK, IMG_BLOCK));
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            seed_evictable_prefix(&mut instances[0], dirs, &ch, 512, 100);
-            seed_evictable_prefix(&mut instances[1], dirs, &ch, 512, 101);
+            let dirs = ctx.dirs.as_mut().unwrap();
+            seed_evictable_prefix(&mut shard.instances[0], dirs, &ch, 512, 100);
+            seed_evictable_prefix(&mut shard.instances[1], dirs, &ch, 512, 101);
         }
         let mut st = ReqState::new(spec.clone());
-        state.chains.insert(1, ch.clone());
-        instances[2].attach(&mut st, &ch.kv, &ch.img, &mut state.report);
-        assert!(maybe_start_fetch(&mut instances, 2, st, &ch, 0.0, &mut state).is_none());
+        shard.chains.insert(1, ch.clone());
+        {
+            let Shard { instances, report, .. } = &mut shard;
+            instances[2].attach(&mut st, &ch.kv, &ch.img, report);
+        }
+        assert!(maybe_start_fetch(&mut shard, &ctx, &cfg, 2, st, &ch, 0.0).is_none());
         // both holders churn away, one before each landing
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            evict_prefix(&mut instances[0], dirs, 900);
+            let dirs = ctx.dirs.as_mut().unwrap();
+            evict_prefix(&mut shard.instances[0], dirs, 900);
         }
-        let ev = state.heap.pop().unwrap();
-        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
-        assert_eq!(state.dirs.as_ref().unwrap().report.redirected_fetches, 1);
+        let ev = shard.heap.pop().unwrap();
+        handle_fetch_done(&mut shard, &ctx, &cfg, 2, RequestId(1), ev.t);
+        assert_eq!(shard.dir_report.redirected_fetches, 1);
         {
-            let dirs = state.dirs.as_mut().unwrap();
-            evict_prefix(&mut instances[1], dirs, 901);
+            let dirs = ctx.dirs.as_mut().unwrap();
+            evict_prefix(&mut shard.instances[1], dirs, 901);
         }
-        let ev = state.heap.pop().unwrap();
-        handle_fetch_done(&mut instances, 2, RequestId(1), ev.t, &mut state);
-        let d = state.dirs.as_ref().unwrap().report;
-        assert_eq!(d.stale_fetches, 1, "second stale landing gives up");
-        assert_eq!(d.redirected_fetches, 1, "no second redirect");
-        assert!(instances[2].fetching.is_empty());
+        let ev = shard.heap.pop().unwrap();
+        handle_fetch_done(&mut shard, &ctx, &cfg, 2, RequestId(1), ev.t);
+        assert_eq!(shard.dir_report.stale_fetches, 1, "second stale landing gives up");
+        assert_eq!(shard.dir_report.redirected_fetches, 1, "no second redirect");
+        assert!(shard.instances[2].fetching.is_empty());
         assert_eq!(
-            instances[2].queues.peek_waiting(|_| true).unwrap().prefilled,
+            shard.instances[2].queues.peek_waiting(|_| true).unwrap().prefilled,
             0,
             "recompute from scratch"
         );
@@ -2364,5 +3024,123 @@ mod tests {
         assert_eq!(on.metrics.num_finished(), off.metrics.num_finished());
         // no peers => no fetches either way, so even the digest agrees
         assert_eq!(on.digest(), off.digest());
+    }
+
+    // ---- sharded execution ------------------------------------------------
+
+    fn run_sharded(cluster: &str, rate: f64, n: usize, shards: usize) -> SimResult {
+        let model = ModelSpec::llava15_7b();
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse(cluster).unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        cfg.shards = shards;
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), rate, 42).generate(&model, n);
+        simulate(&cfg, &reqs)
+    }
+
+    #[test]
+    fn digest_is_bit_identical_across_shard_counts() {
+        // the tentpole contract: shards=N is a pure execution strategy —
+        // every counter and every lifecycle lands on the same bits
+        for cluster in ["8EPD", "1E3P4D"] {
+            let base = run_sharded(cluster, 6.0, 80, 1);
+            for shards in [2, 4] {
+                let res = run_sharded(cluster, 6.0, 80, shards);
+                assert_eq!(
+                    base.digest(),
+                    res.digest(),
+                    "{cluster}: shards={shards} moved the digest"
+                );
+                assert_eq!(base.events, res.events, "{cluster} shards={shards}");
+                assert_eq!(base.migrations, res.migrations, "{cluster} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_above_instance_count_is_clamped_and_identical() {
+        let base = run_sharded("1E2P1D", 5.0, 50, 1);
+        let over = run_sharded("1E2P1D", 5.0, 50, 64);
+        assert_eq!(base.digest(), over.digest());
+    }
+
+    #[test]
+    fn explicit_window_is_stable_across_shard_counts() {
+        // a coarser merge window changes fidelity deterministically, and
+        // identically for every shard count
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 6.0, 42).generate(&model, 60);
+        let digest = |shards: usize| {
+            let mut cfg = SimConfig::new(
+                model.clone(),
+                ClusterSpec::parse("1E3P4D").unwrap(),
+                Policy::StageLevel,
+                SloSpec::new(0.25, 0.04),
+            );
+            cfg.shards = shards;
+            cfg.window = 0.05;
+            simulate(&cfg, &reqs).digest()
+        };
+        let d1 = digest(1);
+        assert_eq!(d1, digest(2));
+        assert_eq!(d1, digest(4));
+    }
+
+    #[test]
+    fn sharded_digest_survives_the_controller() {
+        // role flips, drains, directory resets — all barrier-side, so the
+        // digest still must not move with the shard count
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 8.0, 42).generate(&model, 120);
+        let digest = |shards: usize| {
+            let mut cfg = SimConfig::new(
+                model.clone(),
+                ClusterSpec::parse("1E3P4D").unwrap(),
+                Policy::StageLevel,
+                SloSpec::new(0.25, 0.04),
+            );
+            cfg.controller = Some(ControllerConfig {
+                tick: 0.5,
+                window: 8.0,
+                min_samples: 4,
+                sustain_ticks: 3,
+                cooldown: 4.0,
+                ..Default::default()
+            });
+            cfg.shards = shards;
+            simulate(&cfg, &reqs).digest()
+        };
+        let d1 = digest(1);
+        assert_eq!(d1, digest(2), "controller run moved at shards=2");
+        assert_eq!(d1, digest(4), "controller run moved at shards=4");
+    }
+
+    #[test]
+    fn traced_sharded_run_matches_untraced_digest() {
+        // PR 6 invariant under parallelism: observation never reschedules,
+        // on any shard count
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 6.0, 42).generate(&model, 60);
+        let mk = |trace: bool, shards: usize| {
+            let mut cfg = SimConfig::new(
+                model.clone(),
+                ClusterSpec::parse("1E3P4D").unwrap(),
+                Policy::StageLevel,
+                SloSpec::new(0.25, 0.04),
+            );
+            cfg.trace = trace;
+            cfg.shards = shards;
+            simulate(&cfg, &reqs)
+        };
+        let plain = mk(false, 1);
+        let traced = mk(true, 4);
+        assert_eq!(plain.digest(), traced.digest(), "tracing moved a sharded digest");
+        assert!(!traced.trace.is_empty(), "tracing on captured spans");
+        // and the sharded trace is deterministic: same spans both times
+        let again = mk(true, 4);
+        assert_eq!(traced.trace.len(), again.trace.len());
     }
 }

@@ -12,6 +12,40 @@ pub mod engine;
 
 pub use engine::{simulate, CacheReport, DirectoryReport, SimResult};
 
+/// Shard owning instance `inst` when `n` instances are split into
+/// `shards` contiguous, near-equal groups (the first `n % shards` groups
+/// get one extra instance). A **pure function of the instance id and the
+/// cluster size** — deliberately independent of instance roles, so a
+/// controller role flip mid-run can never move an instance's state across
+/// shards (the property test in `tests/shard_partition.rs` pins this).
+pub fn shard_of(inst: usize, n: usize, shards: usize) -> usize {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let extra = n % shards; // first `extra` shards own `base + 1` instances
+    let big = extra * (base + 1);
+    if inst < big {
+        inst / (base + 1)
+    } else {
+        extra + (inst - big) / base.max(1)
+    }
+}
+
+/// `[lo, hi)` global-instance ranges per shard under [`shard_of`]'s
+/// contiguous partition.
+pub fn shard_bounds(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
 use crate::config::{ControllerConfig, DeviceSpec, ModelSpec, SloSpec};
 use crate::scheduler::{Policy, StageMask};
 use crate::util::ceil_div;
@@ -165,6 +199,22 @@ pub struct SimConfig {
     /// Ring capacity (spans) when `trace` is on; the oldest spans are
     /// overwritten once full — flight-recorder semantics.
     pub trace_capacity: usize,
+    /// Event-engine shards (parallel worker threads). The engine windows
+    /// simulated time and runs every shard's events for a window
+    /// concurrently; cross-shard effects (transfer landings, fetch
+    /// sources, directory gossip, migration retargets) are exchanged only
+    /// at window barriers. The window protocol is applied **at every
+    /// shard count, including 1**, so `SimResult::digest()` is
+    /// bit-identical for any `shards` value — the golden suite asserts
+    /// `shards ∈ {1, 2, 4}` agree on every pinned shape. Clamped to the
+    /// instance count.
+    pub shards: usize,
+    /// Barrier window length Δ in simulated seconds; `0.0` derives it
+    /// from the interconnect (`max(link latency, 2ms)`). Δ bounds how
+    /// stale the routing view and cross-shard messages may be — it is a
+    /// *fidelity* knob, not a correctness knob: digests never depend on
+    /// the shard count, only on Δ itself.
+    pub window: f64,
 }
 
 impl SimConfig {
@@ -185,6 +235,17 @@ impl SimConfig {
             cache_directory: true,
             trace: false,
             trace_capacity: 1 << 16,
+            shards: 1,
+            window: 0.0,
+        }
+    }
+
+    /// Effective barrier window Δ (resolves the `window == 0.0` default).
+    pub fn effective_window(&self) -> f64 {
+        if self.window > 0.0 {
+            self.window
+        } else {
+            self.link().0.max(0.002)
         }
     }
 
@@ -291,6 +352,41 @@ mod tests {
         assert_eq!(img_blocks_for(2880), 5); // LLaVA-NeXT max
         assert_eq!(kv_blocks_for(0), 0);
         assert_eq!(kv_blocks_for(17), 2);
+    }
+
+    #[test]
+    fn shard_partition_is_contiguous_balanced_and_total() {
+        for n in [1usize, 2, 3, 7, 8, 64, 1000] {
+            for shards in [1usize, 2, 3, 4, 16, 2000] {
+                let bounds = shard_bounds(n, shards);
+                let eff = shards.clamp(1, n);
+                assert_eq!(bounds.len(), eff);
+                assert_eq!(bounds[0].0, 0);
+                assert_eq!(bounds[eff - 1].1, n);
+                for w in bounds.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                let sizes: Vec<usize> = bounds.iter().map(|(l, h)| h - l).collect();
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "near-equal: {sizes:?}");
+                for inst in 0..n {
+                    let s = shard_of(inst, n, shards);
+                    let (lo, hi) = bounds[s];
+                    assert!(lo <= inst && inst < hi, "shard_of agrees with bounds");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn effective_window_floors_at_link_latency() {
+        let m = ModelSpec::llava15_7b();
+        let c = ClusterSpec::parse("8EPD").unwrap();
+        let mut cfg = SimConfig::new(m, c, Policy::StageLevel, SloSpec::new(0.25, 0.04));
+        assert!(cfg.effective_window() >= cfg.link().0);
+        assert!(cfg.effective_window() >= 0.002);
+        cfg.window = 0.25;
+        assert_eq!(cfg.effective_window(), 0.25);
     }
 
     #[test]

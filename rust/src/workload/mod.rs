@@ -275,6 +275,91 @@ pub fn shared_image_trace(
     out
 }
 
+/// Diurnal workload: a non-homogeneous Poisson process whose rate swings
+/// sinusoidally around `mean_rate` over a `period`-second day, i.e.
+/// `rate(t) = mean_rate * (1 + swing * sin(2*pi*t / period))`. Generated
+/// by thinning (candidates at the peak rate, accepted with probability
+/// `rate(t)/peak`), so the trace is deterministic from `seed` alone.
+/// This is the cluster-scale shape the sharded engine's big-trace bench
+/// rows run: load that breathes instead of holding one steady rate.
+pub fn diurnal_trace(
+    model: &ModelSpec,
+    dataset: &Dataset,
+    mean_rate: f64,
+    swing: f64,
+    period: f64,
+    n: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(mean_rate > 0.0 && period > 0.0);
+    assert!((0.0..=1.0).contains(&swing), "swing is a fraction of the mean");
+    let peak = mean_rate * (1.0 + swing);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0u64;
+    while out.len() < n {
+        t += rng.exp(peak);
+        let rate = mean_rate * (1.0 + swing * (2.0 * std::f64::consts::PI * t / period).sin());
+        if rng.f64() * peak <= rate {
+            let mut spec = dataset.sample(model, i, &mut rng);
+            spec.arrival = t;
+            out.push(spec);
+        }
+        // content identity advances per *candidate*, not per accept, so a
+        // different swing still draws from the same id stream
+        i += 1;
+    }
+    sort_and_reindex(out)
+}
+
+/// Flash-crowd workload: a steady baseline stream plus `bursts` seeded
+/// spikes — each spike picks a start time inside the baseline's span and
+/// pours `burst_rate` req/s into it for `burst_len` seconds (a trending
+/// image, a breaking-news page). Deterministic from `seed`; the merged
+/// trace is arrival-sorted with sequential ids.
+pub fn flash_crowd_trace(
+    model: &ModelSpec,
+    dataset: &Dataset,
+    base_rate: f64,
+    n_base: usize,
+    bursts: usize,
+    burst_rate: f64,
+    burst_len: f64,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(base_rate > 0.0 && burst_rate > 0.0 && burst_len > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_base);
+    let mut t = 0.0;
+    let mut i = 0u64;
+    for _ in 0..n_base {
+        t += rng.exp(base_rate);
+        let mut spec = dataset.sample(model, i, &mut rng);
+        spec.arrival = t;
+        out.push(spec);
+        i += 1;
+    }
+    let span = t;
+    for _ in 0..bursts {
+        // spikes start in the first 90% of the baseline span so they
+        // always land on live traffic, never past the last arrival
+        let start = rng.f64() * span * 0.9;
+        let mut bt = start;
+        loop {
+            bt += rng.exp(burst_rate);
+            if bt > start + burst_len {
+                break;
+            }
+            let mut spec = dataset.sample(model, i, &mut rng);
+            spec.arrival = bt;
+            out.push(spec);
+            i += 1;
+        }
+    }
+    sort_and_reindex(out)
+}
+
 /// Sort by arrival and hand out sequential ids (generators that interleave
 /// independent streams call this so ids follow arrival order).
 fn sort_and_reindex(mut reqs: Vec<RequestSpec>) -> Vec<RequestSpec> {
@@ -446,6 +531,74 @@ mod tests {
             cold.iter().filter_map(|r| r.image_hash).collect();
         assert!(cold_imgs.len() > 100);
         assert!(cold.iter().all(|r| r.shared_prefix_tokens == 0));
+    }
+
+    #[test]
+    fn diurnal_trace_breathes_and_is_deterministic() {
+        let m = ModelSpec::llava15_7b();
+        let reqs = diurnal_trace(&m, &Dataset::textcaps(), 8.0, 0.8, 40.0, 2000, 17);
+        assert_eq!(reqs.len(), 2000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id.0, i as u64);
+        }
+        // the mean rate survives the modulation
+        let span = reqs.last().unwrap().arrival;
+        let rate = 2000.0 / span;
+        assert!((rate - 8.0).abs() < 1.0, "empirical mean rate {rate}");
+        // the rate actually swings: count arrivals in the peak vs trough
+        // quarter of each period (peak quarter is centered on sin = +1)
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &reqs {
+            let ph = (r.arrival / 40.0).fract();
+            if (0.125..0.375).contains(&ph) {
+                peak += 1;
+            } else if (0.625..0.875).contains(&ph) {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "diurnal swing missing: peak={peak} trough={trough}"
+        );
+        // bit-deterministic from the seed
+        let again = diurnal_trace(&m, &Dataset::textcaps(), 8.0, 0.8, 40.0, 2000, 17);
+        assert_eq!(reqs, again);
+        let other = diurnal_trace(&m, &Dataset::textcaps(), 8.0, 0.8, 40.0, 2000, 18);
+        assert_ne!(reqs, other);
+    }
+
+    #[test]
+    fn flash_crowd_trace_spikes_over_the_baseline() {
+        let m = ModelSpec::llava15_7b();
+        let base = flash_crowd_trace(&m, &Dataset::textcaps(), 4.0, 400, 0, 50.0, 2.0, 23);
+        let crowd = flash_crowd_trace(&m, &Dataset::textcaps(), 4.0, 400, 3, 50.0, 2.0, 23);
+        assert_eq!(base.len(), 400);
+        assert!(
+            crowd.len() > 400 + 3 * 50,
+            "3 spikes at 50 req/s for 2s should add ~300, got {}",
+            crowd.len() - 400
+        );
+        for w in crowd.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for (i, r) in crowd.iter().enumerate() {
+            assert_eq!(r.id.0, i as u64);
+        }
+        // the spikes are actual bursts: somewhere a 1-second bucket holds
+        // way more than the baseline rate
+        let span = crowd.last().unwrap().arrival;
+        let mut buckets = vec![0usize; span as usize + 2];
+        for r in &crowd {
+            buckets[r.arrival as usize] += 1;
+        }
+        let max = buckets.iter().copied().max().unwrap();
+        assert!(max >= 30, "densest second {max} should dwarf the 4 req/s baseline");
+        // deterministic
+        let again = flash_crowd_trace(&m, &Dataset::textcaps(), 4.0, 400, 3, 50.0, 2.0, 23);
+        assert_eq!(crowd, again);
     }
 
     #[test]

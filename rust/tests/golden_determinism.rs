@@ -34,13 +34,18 @@ const TRACE_RATE: f64 = 6.0;
 const TRACE_SEED: u64 = 42;
 
 fn run(cluster: &str, policy: Policy) -> SimResult {
+    run_shards(cluster, policy, 1)
+}
+
+fn run_shards(cluster: &str, policy: Policy, shards: usize) -> SimResult {
     let model = ModelSpec::llava15_7b();
-    let cfg = SimConfig::new(
+    let mut cfg = SimConfig::new(
         model.clone(),
         ClusterSpec::parse(cluster).unwrap(),
         policy,
         SloSpec::new(0.25, 0.04),
     );
+    cfg.shards = shards;
     let reqs = PoissonGenerator::new(Dataset::textcaps(), TRACE_RATE, TRACE_SEED)
         .generate(&model, TRACE_N);
     simulate(&cfg, &reqs)
@@ -94,6 +99,66 @@ fn seeded_digests_are_deterministic_and_match_the_golden_file() {
             println!("wrote tests/golden/sim_digests.json");
         }
     }
+}
+
+/// The sharded engine's non-negotiable contract: the shard count is a
+/// pure execution strategy. Every policy × shape digest must land on the
+/// same bits for `shards ∈ {1, 2, 4}` — the same barrier protocol runs at
+/// every shard count, so parallelism cannot move a single decision.
+#[test]
+fn shard_sweep_digests_are_bit_identical() {
+    for policy in Policy::ALL {
+        for cluster in SHAPES {
+            let base = run_shards(cluster, policy, 1);
+            for shards in [2usize, 4] {
+                let res = run_shards(cluster, policy, shards);
+                assert_eq!(
+                    base.digest(),
+                    res.digest(),
+                    "{}/{cluster}: shards={shards} moved the digest",
+                    policy.name()
+                );
+                assert_eq!(
+                    base.events, res.events,
+                    "{}/{cluster}: shards={shards} moved the event count",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// PR 6's observation invariant must hold under parallelism too: a traced
+/// sharded run lands on the untraced, unsharded digest while still
+/// capturing spans from every shard.
+#[test]
+fn traced_sharded_run_matches_the_untraced_digest() {
+    let model = ModelSpec::llava15_7b();
+    let reqs = PoissonGenerator::new(Dataset::textcaps(), TRACE_RATE, TRACE_SEED)
+        .generate(&model, TRACE_N);
+    let mk = |trace: bool, shards: usize| {
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("1E3P4D").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        cfg.trace = trace;
+        cfg.shards = shards;
+        simulate(&cfg, &reqs)
+    };
+    let baseline = mk(false, 1);
+    let traced = mk(true, 4);
+    assert_eq!(
+        baseline.digest(),
+        traced.digest(),
+        "tracing a sharded run must not reschedule"
+    );
+    assert!(!traced.trace.is_empty(), "spans captured across shards");
+    assert_eq!(traced.trace_dropped, 0, "default rings hold the whole run");
+    // span streams from parallel shards merge deterministically
+    let again = mk(true, 4);
+    assert_eq!(traced.trace.len(), again.trace.len());
 }
 
 /// The flight recorder is an observer, not a participant: turning it on

@@ -1,0 +1,130 @@
+//! Shard partitioner properties — the structural half of the sharded
+//! engine's determinism contract.
+//!
+//! The engine computes `instance gid -> shard` exactly once, from
+//! `(instance count, shard count)` alone, and never again: a controller
+//! role flip rebuilds an instance's scheduler and caches *in place* but
+//! must not move its state to another shard (the worker threads' borrow
+//! ranges are fixed for the whole run). These tests pin both halves:
+//! the pure partition function, and an elastic end-to-end run where
+//! flips actually fire mid-run on every shard count.
+
+use hydrainfer::config::{ControllerConfig, ModelSpec, SloSpec};
+use hydrainfer::core::RequestSpec;
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{
+    shard_bounds, shard_of, simulate, ClusterSpec, SimConfig, SimResult,
+};
+use hydrainfer::workload::{phased_trace, Dataset, TokenDist};
+
+#[test]
+fn partition_is_contiguous_complete_and_balanced() {
+    for n in [1usize, 2, 3, 7, 8, 63, 64, 100, 1000] {
+        for shards in [1usize, 2, 3, 4, 7, 16, 64] {
+            let shards = shards.min(n);
+            let bounds = shard_bounds(n, shards);
+            assert_eq!(bounds.len(), shards, "n={n} shards={shards}");
+            // contiguous cover of 0..n, in order
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds[shards - 1].1, n);
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges abut: n={n} shards={shards}");
+            }
+            // balanced: sizes differ by at most one
+            let sizes: Vec<usize> = bounds.iter().map(|(lo, hi)| hi - lo).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "n={n} shards={shards} sizes={sizes:?}");
+            // shard_of agrees with the ranges for every instance
+            for inst in 0..n {
+                let s = shard_of(inst, n, shards);
+                let (lo, hi) = bounds[s];
+                assert!(
+                    lo <= inst && inst < hi,
+                    "n={n} shards={shards} inst={inst}: shard_of={s} outside {lo}..{hi}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn assignment_is_a_pure_function_of_counts() {
+    // the partition takes no role, mask, load, or time input — calling it
+    // again (or in any order) cannot move an instance. This is what makes
+    // a mid-run role flip structurally unable to cross shard boundaries.
+    for n in [8usize, 64, 1000] {
+        for shards in [2usize, 4, 16] {
+            let first: Vec<usize> = (0..n).map(|i| shard_of(i, n, shards)).collect();
+            let mut again: Vec<usize> = (0..n).rev().map(|i| shard_of(i, n, shards)).collect();
+            again.reverse();
+            assert_eq!(first, again);
+            // and assignments are monotone (contiguity, stated directly)
+            for w in first.windows(2) {
+                assert!(w[1] == w[0] || w[1] == w[0] + 1);
+            }
+        }
+    }
+}
+
+/// A text-only long-generation phase after an image-heavy phase — the
+/// shape that makes the elastic controller flip a prefill instance to
+/// decode (same workload the controller integration suite uses).
+fn flip_trace(model: &ModelSpec) -> Vec<RequestSpec> {
+    let text_heavy = Dataset {
+        name: "textheavy",
+        image_prob: 0.0,
+        prompt: TokenDist::new(3.9, 0.3, 16, 128),
+        output: TokenDist::new(4.4, 0.45, 64, 256),
+    };
+    phased_trace(model, &[(Dataset::pope(), 40.0, 600), (text_heavy, 40.0, 800)], 11)
+}
+
+fn elastic_run(shards: usize) -> SimResult {
+    let model = ModelSpec::llava15_7b();
+    let mut cfg = SimConfig::new(
+        model.clone(),
+        ClusterSpec::parse("1E2P1D").unwrap(),
+        Policy::StageLevel,
+        SloSpec::new(0.25, 0.04),
+    );
+    cfg.controller = Some(ControllerConfig {
+        tick: 0.5,
+        window: 8.0,
+        min_samples: 4,
+        sustain_ticks: 3,
+        cooldown: 4.0,
+        ..Default::default()
+    });
+    cfg.shards = shards;
+    let reqs = flip_trace(&model);
+    simulate(&cfg, &reqs)
+}
+
+#[test]
+fn role_flips_mid_run_cannot_move_instances_across_shards() {
+    let base = elastic_run(1);
+    assert!(
+        base.reconfigs >= 1,
+        "test needs an actual mid-run flip to be meaningful, got {}",
+        base.reconfigs
+    );
+    let n = 4; // 1E2P1D
+    for shards in [2usize, 4] {
+        let res = elastic_run(shards);
+        // the flip happened on the sharded run too, at the same times, on
+        // the same instances — and the digest proves no state moved or
+        // diverged while the flipped instance kept living on its shard
+        assert_eq!(base.reconfigs, res.reconfigs, "shards={shards}");
+        assert_eq!(base.digest(), res.digest(), "shards={shards} moved the digest");
+        for (a, b) in base.reconfig_events.iter().zip(&res.reconfig_events) {
+            assert_eq!(a.instance, b.instance, "shards={shards}: flip target moved");
+            assert!((a.t - b.t).abs() < 1e-12, "shards={shards}: flip time moved");
+            // the flipped instance's shard is the one the partition gave it
+            // at build time — a pure function of (n, shards), role-free
+            let s = shard_of(a.instance, n, shards);
+            let (lo, hi) = shard_bounds(n, shards)[s];
+            assert!(lo <= a.instance && a.instance < hi);
+        }
+        assert_eq!(base.unfinished, res.unfinished, "shards={shards}");
+    }
+}
