@@ -50,11 +50,13 @@ pub fn read_request<S: Read>(stream: &mut S) -> Result<HttpRequest> {
         }
     }
 
-    let len: usize = headers
-        .iter()
-        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
-        .and_then(|(_, v)| v.parse().ok())
-        .unwrap_or(0);
+    // A missing Content-Length means an empty body; a malformed one used
+    // to collapse to 0 via `.parse().ok()`, silently desyncing the
+    // connection right after the headers — reject it instead.
+    let len: usize = match headers.iter().find(|(k, _)| k.eq_ignore_ascii_case("content-length")) {
+        None => 0,
+        Some((_, v)) => v.parse().map_err(|e| anyhow!("bad Content-Length `{v}`: {e}"))?,
+    };
     if len > 16 * 1024 * 1024 {
         bail!("body too large: {len}");
     }
@@ -129,6 +131,19 @@ mod tests {
         let mut cursor = std::io::Cursor::new(b"\r\n".to_vec());
         assert!(read_request(&mut cursor).is_err());
         let mut cursor = std::io::Cursor::new(b"GET\r\n\r\n".to_vec());
+        assert!(read_request(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_content_length() {
+        // a bad length used to collapse to 0 via `.parse().ok()`, silently
+        // dropping the body and desyncing the connection
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n{}";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("bad Content-Length"), "{err}");
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: -2\r\n\r\n{}";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
         assert!(read_request(&mut cursor).is_err());
     }
 

@@ -44,6 +44,15 @@ use http::{read_request, write_response, HttpRequest, CT_JSON, CT_PROMETHEUS};
 
 type Waiters = Arc<Mutex<HashMap<u64, Sender<ServeResult>>>>;
 
+/// Invariant panic (kept, audited — PR 8 unwrap sweep): a poisoned lock
+/// means another handler thread already panicked while holding the shared
+/// API state, and serving requests over state of unknown consistency is
+/// worse than stopping. Every lock site funnels through here so the panic
+/// carries context instead of a bare `unwrap`.
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().expect("api state mutex poisoned: a handler thread panicked holding it")
+}
+
 /// A running API server.
 pub struct ApiServer {
     pub addr: SocketAddr,
@@ -74,7 +83,7 @@ impl ApiServer {
                     while !stop.load(Ordering::Relaxed) {
                         match results_rx.recv_timeout(Duration::from_millis(50)) {
                             Ok(r) => {
-                                if let Some(tx) = waiters.lock().unwrap().remove(&r.id.0) {
+                                if let Some(tx) = locked(&waiters).remove(&r.id.0) {
                                     let _ = tx.send(r);
                                 }
                             }
@@ -153,9 +162,9 @@ fn route(
 ) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => json(200, Json::obj(vec![("status", Json::str("ok"))])),
-        ("GET", "/status") => json(200, cluster.lock().unwrap().status()),
-        ("GET", "/metrics") => (200, CT_PROMETHEUS, cluster.lock().unwrap().metrics_text()),
-        ("GET", "/trace") => json(200, cluster.lock().unwrap().trace_json()),
+        ("GET", "/status") => json(200, locked(cluster).status()),
+        ("GET", "/metrics") => (200, CT_PROMETHEUS, locked(cluster).metrics_text()),
+        ("GET", "/trace") => json(200, locked(cluster).trace_json()),
         ("POST", "/v1/completions") => {
             let (status, body) = completions(req, cluster, waiters);
             json(status, body)
@@ -194,13 +203,13 @@ fn completions(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &W
     // register the waiter BEFORE submitting to avoid a result race
     let (tx, rx) = channel();
     let id = {
-        let mut c = cluster.lock().unwrap();
+        let mut c = locked(cluster);
         let next = c.peek_next_id();
-        waiters.lock().unwrap().insert(next, tx);
+        locked(waiters).insert(next, tx);
         match c.submit(prompt, image.as_ref(), sampling) {
             Ok(id) => id,
             Err(e) => {
-                waiters.lock().unwrap().remove(&next);
+                locked(waiters).remove(&next);
                 // malformed input is the client's fault (400); a cluster
                 // that cannot take the request right now — no instance
                 // serving the first stage mid-reconfiguration, a dead
@@ -246,7 +255,7 @@ fn completions(req: &HttpRequest, cluster: &Arc<Mutex<RealCluster>>, waiters: &W
             )
         }
         Err(_) => {
-            waiters.lock().unwrap().remove(&id.0);
+            locked(waiters).remove(&id.0);
             (504, Json::obj(vec![("error", Json::str("timed out"))]))
         }
     }

@@ -1,0 +1,71 @@
+//! CLI for the architecture-invariant analyzer: walk the given roots
+//! (default: the crate's `src/`), print findings as `file:line rule
+//! message`, and exit nonzero when any are found.
+//!
+//! ```text
+//! cargo run --bin invlint -- src            # from rust/
+//! cargo run --bin invlint -- rust/src       # path given from the repo root
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![default_root()]
+    } else {
+        args.iter().map(|a| resolve(a)).collect()
+    };
+
+    let mut findings = Vec::new();
+    for root in &roots {
+        match hydrainfer::invlint::lint_tree(root) {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("invlint: cannot read {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("invlint: clean ({} root(s))", roots.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("invlint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn default_root() -> PathBuf {
+    if PathBuf::from("src").is_dir() {
+        PathBuf::from("src")
+    } else {
+        PathBuf::from("rust/src")
+    }
+}
+
+/// Accept paths phrased from either the repo root or the crate dir: when
+/// `rust/src` does not exist but `src` does (cargo runs from `rust/`),
+/// strip the `rust/` prefix, and vice versa.
+fn resolve(arg: &str) -> PathBuf {
+    let p = PathBuf::from(arg);
+    if p.exists() {
+        return p;
+    }
+    if let Some(stripped) = arg.strip_prefix("rust/") {
+        let q = PathBuf::from(stripped);
+        if q.exists() {
+            return q;
+        }
+    }
+    let q = PathBuf::from("rust").join(arg);
+    if q.exists() {
+        return q;
+    }
+    p
+}

@@ -77,7 +77,7 @@ use std::collections::VecDeque;
 
 use crate::core::RequestId;
 use crate::util::ceil_div;
-use crate::util::fxhash::FxHashMap;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 
 /// Errors surfaced to the scheduler (cache pressure drives batching and
 /// migration backpressure decisions).
@@ -565,6 +565,7 @@ impl PagedCache {
     /// [`PagedCache::slot_mapping`] into a caller-owned scratch buffer
     /// (cleared first) — the hot paths reuse one buffer across calls
     /// instead of allocating a fresh `Vec` per request per batch.
+    // invlint: hot-path
     pub fn slot_mapping_into(&self, id: RequestId, out: &mut Vec<u32>) -> Result<(), CacheError> {
         let t = self.tables.get(&id.0).ok_or(CacheError::UnknownRequest(id.0))?;
         out.clear();
@@ -608,7 +609,7 @@ impl PagedCache {
         // refcount(b) == number of tables holding b
         let mut counted = vec![0u32; self.num_blocks];
         for (rid, t) in &self.tables {
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = FxHashSet::default();
             for &b in &t.blocks {
                 if !seen.insert(b) {
                     return Err(format!("table {rid} lists block {b} twice"));

@@ -1,0 +1,355 @@
+//! The `invlint` rule engine: each rule is a function over a scanned
+//! [`FileModel`] that appends [`Finding`]s. Rules are scoped by path (the
+//! sharded-engine invariants only bind the code that carries them), skip
+//! `#[cfg(test)]` blocks, and honor per-line `allow` sets with mandatory
+//! reasons. The catalog lives in `docs/static-analysis.md`; the prose
+//! invariants each rule mechanizes live in ROADMAP.md.
+
+use std::fmt;
+
+use super::scan::{FileModel, LineInfo};
+
+/// Every rule id `invlint: allow(...)` may name.
+pub const RULE_IDS: &[&str] = &[
+    "hash-once",
+    "hot-path-alloc",
+    "no-shard1-fastpath",
+    "summary-streamhist",
+    "no-wallclock",
+    "traced-guard",
+    "bad-annotation",
+];
+
+/// One violation, printed as `path:line rule message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every rule over one scanned file.
+pub fn check(fm: &FileModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (line, msg) in &fm.bad {
+        out.push(Finding {
+            path: fm.path.clone(),
+            line: *line,
+            rule: "bad-annotation",
+            msg: msg.clone(),
+        });
+    }
+    rule_hash_once(fm, &mut out);
+    rule_hot_path_alloc(fm, &mut out);
+    rule_no_shard1_fastpath(fm, &mut out);
+    rule_summary_streamhist(fm, &mut out);
+    rule_no_wallclock(fm, &mut out);
+    rule_traced_guard(fm, &mut out);
+    out.sort_by(|a, b| a.line.cmp(&b.line).then_with(|| a.rule.cmp(b.rule)));
+    out
+}
+
+// ------------------------------------------------------------ path scoping
+
+/// Is `path` under a directory component named `dir` (e.g. `simulator`)?
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.starts_with(&format!("{dir}/")) || path.contains(&format!("/{dir}/"))
+}
+
+/// Digest-folded deterministic code: everything the seeded golden digests
+/// fold, directly or through cache/scheduling decisions.
+fn digest_folded(path: &str) -> bool {
+    ["simulator", "cache", "scheduler", "router"].iter().any(|d| in_dir(path, d))
+}
+
+// ---------------------------------------------------------- token matching
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Substring search with identifier-boundary checks on whichever ends of
+/// `tok` are identifier characters — `HashMap` does not match `FxHashMap`,
+/// `.clone(` does not match `.cloned(`.
+pub(crate) fn has_token(code: &str, tok: &str) -> bool {
+    let first = tok.chars().next().map(is_ident).unwrap_or(false);
+    let last = tok.chars().next_back().map(is_ident).unwrap_or(false);
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(tok) {
+        let at = from + pos;
+        let pre_ok = !first || !code[..at].chars().next_back().map(is_ident).unwrap_or(false);
+        let post_ok =
+            !last || !code[at + tok.len()..].chars().next().map(is_ident).unwrap_or(false);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + code[at..].chars().next().map(char::len_utf8).unwrap_or(1);
+    }
+    false
+}
+
+fn allowed(li: &LineInfo, rule: &str) -> bool {
+    li.allows.iter().any(|a| a == rule)
+}
+
+fn push(out: &mut Vec<Finding>, fm: &FileModel, idx: usize, rule: &'static str, msg: String) {
+    out.push(Finding { path: fm.path.clone(), line: idx + 1, rule, msg });
+}
+
+// ------------------------------------------------------------------- rules
+
+/// Content-hash derivation calls: banned in simulator code outside
+/// `derive-once` regions (R1, the hash-once invariant).
+const HASH_DERIVE_TOKENS: &[&str] =
+    &["spec_kv_hashes(", "spec_kv_commit_hashes(", "spec_img_hashes(", "of_spec(", "chain_hashes("];
+
+fn rule_hash_once(fm: &FileModel, out: &mut Vec<Finding>) {
+    if !in_dir(&fm.path, "simulator") {
+        return;
+    }
+    for (i, li) in fm.lines.iter().enumerate() {
+        if li.test || li.derive || allowed(li, "hash-once") {
+            continue;
+        }
+        if let Some(tok) = HASH_DERIVE_TOKENS.iter().find(|t| has_token(&li.code, t)) {
+            push(
+                out,
+                fm,
+                i,
+                "hash-once",
+                format!(
+                    "`{}` re-derives content hashes inside simulator code — derive once at \
+                     arrival routing and share the Arc<HashChains> (see engine::chains_entry)",
+                    tok.trim_end_matches('(')
+                ),
+            );
+        }
+    }
+}
+
+/// Allocating constructs and std hash containers: banned inside
+/// `// invlint: hot-path` regions (R2). `util::fxhash` maps built outside
+/// the region and `Scratch`-style buffer reuse are the sanctioned shapes.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    ".to_vec(",
+    ".collect(",
+    "collect::<",
+    "format!",
+    "String::from(",
+    "String::new(",
+    ".to_string(",
+    ".to_owned(",
+    "Box::new(",
+    ".clone(",
+    "HashMap",
+    "HashSet",
+];
+
+fn rule_hot_path_alloc(fm: &FileModel, out: &mut Vec<Finding>) {
+    for (i, li) in fm.lines.iter().enumerate() {
+        if !li.hot || li.test || allowed(li, "hot-path-alloc") {
+            continue;
+        }
+        if let Some(tok) = ALLOC_TOKENS.iter().find(|t| has_token(&li.code, t)) {
+            push(
+                out,
+                fm,
+                i,
+                "hot-path-alloc",
+                format!(
+                    "`{tok}` inside a hot-path region — the event loop is allocation-free; \
+                     reuse a Scratch buffer, or use util::fxhash / Arc::clone for maps and \
+                     shared state"
+                ),
+            );
+        }
+    }
+}
+
+/// `shards == 1` conditionals in the engine (R3): the serial path must run
+/// the same windowed barrier protocol, never a structurally different one.
+fn rule_no_shard1_fastpath(fm: &FileModel, out: &mut Vec<Finding>) {
+    if !fm.path.ends_with("simulator/engine.rs") {
+        return;
+    }
+    for (i, li) in fm.lines.iter().enumerate() {
+        if li.test || allowed(li, "no-shard1-fastpath") {
+            continue;
+        }
+        let squeezed: String = li.code.chars().filter(|c| !c.is_whitespace()).collect();
+        for pat in ["shards==1", "shards!=1"] {
+            if let Some(at) = squeezed.find(pat) {
+                // boundary on the digit side only: `n_shards == 1` must
+                // match, `shards == 10` must not
+                if !squeezed[at + pat.len()..].chars().next().map(is_ident).unwrap_or(false) {
+                    push(
+                        out,
+                        fm,
+                        i,
+                        "no-shard1-fastpath",
+                        "shard-count-one conditional in the engine — shards=1 must run \
+                         the same windowed barrier protocol as shards=N (no serial fast \
+                         path; see ROADMAP sharding contract)"
+                            .into(),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// `Summary` construction (store-all samples) outside `report-region`
+/// blocks (R4): streaming paths must use `obs::registry::StreamHist`.
+fn rule_summary_streamhist(fm: &FileModel, out: &mut Vec<Finding>) {
+    if fm.path.ends_with("util/stats.rs") {
+        return; // the defining module
+    }
+    for (i, li) in fm.lines.iter().enumerate() {
+        if li.test || li.report || allowed(li, "summary-streamhist") {
+            continue;
+        }
+        if has_token(&li.code, "Summary::new(") || has_token(&li.code, "Summary::default(") {
+            push(
+                out,
+                fm,
+                i,
+                "summary-streamhist",
+                "store-all Summary built outside a report-region — polled/streaming \
+                 paths must use the O(1)-memory obs::registry::StreamHist"
+                    .into(),
+            );
+        }
+    }
+}
+
+/// Wall-clock reads and nondeterministically seeded hashers in
+/// digest-folded code (R5): both make the golden digests lie.
+const WALLCLOCK_TOKENS: &[&str] = &["Instant", "SystemTime"];
+const NONDET_HASH_TOKENS: &[&str] = &["DefaultHasher", "RandomState", "HashMap", "HashSet"];
+
+fn rule_no_wallclock(fm: &FileModel, out: &mut Vec<Finding>) {
+    if !digest_folded(&fm.path) {
+        return;
+    }
+    for (i, li) in fm.lines.iter().enumerate() {
+        if li.test || allowed(li, "no-wallclock") {
+            continue;
+        }
+        if let Some(tok) = WALLCLOCK_TOKENS.iter().find(|t| has_token(&li.code, t)) {
+            push(
+                out,
+                fm,
+                i,
+                "no-wallclock",
+                format!(
+                    "`{tok}` in digest-folded code — simulated time is the only clock \
+                     here; wall-clock reads desynchronize the golden digests"
+                ),
+            );
+            continue;
+        }
+        if let Some(tok) = NONDET_HASH_TOKENS.iter().find(|t| has_token(&li.code, t)) {
+            push(
+                out,
+                fm,
+                i,
+                "no-wallclock",
+                format!(
+                    "`{tok}` in digest-folded code — std's per-process hasher seed makes \
+                     iteration order nondeterministic; use util::fxhash::{{FxHashMap, \
+                     FxHashSet}}"
+                ),
+            );
+        }
+    }
+}
+
+/// Tokens that mean a tracer call argument allocates or hashes (R6):
+/// forbidden at emission sites unless a recorder-enabled guard dominates.
+const TRACE_COST_TOKENS: &[&str] = &[
+    "format!",
+    ".to_string(",
+    "String::from(",
+    ".collect(",
+    "vec!",
+    ".to_vec(",
+    ".clone(",
+    "of_spec(",
+    "spec_kv_hashes(",
+    "spec_img_hashes(",
+];
+
+/// A guard token in the lines just above an emission site means the cost is
+/// only paid with the recorder on.
+const TRACE_GUARD_TOKENS: &[&str] = &["enabled()", "is_some()", "if let Some"];
+
+/// How far above an emission site a guard is credited.
+const TRACE_GUARD_WINDOW: usize = 8;
+
+fn rule_traced_guard(fm: &FileModel, out: &mut Vec<Finding>) {
+    for (i, li) in fm.lines.iter().enumerate() {
+        if li.test || allowed(li, "traced-guard") {
+            continue;
+        }
+        for pat in [".span(", ".mark("] {
+            let Some(at) = li.code.find(pat) else { continue };
+            let args = gather_args(fm, i, at + pat.len());
+            let Some(tok) = TRACE_COST_TOKENS.iter().find(|t| has_token(&args, t)) else {
+                continue;
+            };
+            let lo = i.saturating_sub(TRACE_GUARD_WINDOW);
+            let guarded = fm.lines[lo..=i]
+                .iter()
+                .any(|l| TRACE_GUARD_TOKENS.iter().any(|g| l.code.contains(g)));
+            if !guarded {
+                push(
+                    out,
+                    fm,
+                    i,
+                    "traced-guard",
+                    format!(
+                        "tracer emission argument contains `{tok}` with no recorder-enabled \
+                         guard in sight — tracing off must cost nothing; gate on \
+                         Tracer::enabled() before allocating or hashing"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Collect the argument text of a call starting just past its `(`, across
+/// up to 30 lines, stopping at the balancing `)`.
+fn gather_args(fm: &FileModel, line: usize, col: usize) -> String {
+    let mut depth = 1usize;
+    let mut args = String::new();
+    for (n, li) in fm.lines[line..].iter().enumerate().take(30) {
+        let text: &str = if n == 0 { &li.code[col..] } else { &li.code };
+        for c in text.chars() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return args;
+                    }
+                }
+                _ => {}
+            }
+            args.push(c);
+        }
+        args.push(' ');
+    }
+    args
+}

@@ -1,0 +1,333 @@
+//! Source scanner for `invlint`: a line-oriented lexer that strips string
+//! literals and comments (so rule tokens never match inside either), tracks
+//! brace depth, and attaches `// invlint:` region/allow annotations to the
+//! code they govern.
+//!
+//! The scanner is deliberately *not* a Rust parser. Every invariant the rule
+//! engine checks is phrased over (a) code-only line text, (b) block regions
+//! opened by the first `{` after a region annotation, and (c) per-line allow
+//! sets — a vocabulary small enough that a few hundred lines of
+//! dependency-free lexing implements it faithfully. Known (accepted)
+//! approximations are documented in `docs/static-analysis.md`.
+//!
+//! Annotation grammar (line comments only, one annotation per comment):
+//!
+//! ```text
+//! // invlint: hot-path                       region: allocation-free code
+//! // invlint: report-region                  region: bounded per-run reports
+//! // invlint: derive-once                    region: sanctioned hash derivation
+//! // invlint: allow(<rule>) -- <reason>      suppress <rule> on one line
+//! ```
+//!
+//! A region annotation on its own line applies to the next `{ ... }` block
+//! (typically the body of the `fn`/`impl` declared right below it). An
+//! `allow` on a code line applies to that line; on its own line it applies
+//! to the next line that contains code. The reason after `--` is mandatory —
+//! an allow without one is itself reported (rule `bad-annotation`).
+
+/// Block-region kinds a `// invlint:` annotation can open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    /// Allocation-free code (rule `hot-path-alloc` applies inside).
+    HotPath,
+    /// Bounded per-run report code (`summary-streamhist` is lifted inside).
+    ReportRegion,
+    /// Sanctioned content-hash derivation site (`hash-once` is lifted).
+    DeriveOnce,
+}
+
+/// One source line after lexing: comment/string-stripped code text plus the
+/// region and allow context the rule engine consumes.
+#[derive(Debug, Default)]
+pub struct LineInfo {
+    /// The line with comments removed and every string literal collapsed to
+    /// `""` — rule tokens are matched against this, never the raw text.
+    pub code: String,
+    /// Inside a `// invlint: hot-path` block.
+    pub hot: bool,
+    /// Inside a `// invlint: report-region` block.
+    pub report: bool,
+    /// Inside a `// invlint: derive-once` block.
+    pub derive: bool,
+    /// Inside a `#[cfg(test)]` / `#[test]` block (all rules skip these).
+    pub test: bool,
+    /// Rule ids allowed on this line via `invlint: allow(...)`.
+    pub allows: Vec<String>,
+}
+
+/// A scanned file: per-line lexing results plus annotation diagnostics.
+#[derive(Debug)]
+pub struct FileModel {
+    /// Display path (as handed to [`scan`]), `/`-separated.
+    pub path: String,
+    /// Lines in order; index 0 is line 1.
+    pub lines: Vec<LineInfo>,
+    /// Malformed/dangling annotations as `(1-based line, message)` — the
+    /// rule engine reports each as a `bad-annotation` finding.
+    pub bad: Vec<(usize, String)>,
+}
+
+/// Flags a `{` pushes onto the region stack.
+#[derive(Debug, Clone, Copy, Default)]
+struct Frame {
+    hot: bool,
+    report: bool,
+    derive: bool,
+    test: bool,
+}
+
+/// Lexer mode carried across lines (strings and block comments span lines).
+enum Mode {
+    Code,
+    /// Inside a `"..."` literal.
+    Str,
+    /// Inside a raw string; closes at `"` followed by `hashes` `#`s.
+    RawStr { hashes: usize },
+    /// Inside `/* ... */`; Rust block comments nest.
+    Block { depth: usize },
+}
+
+/// What one `// invlint:` comment meant.
+enum Annot {
+    Region(Region),
+    Allow(String),
+    Bad(String),
+}
+
+/// Lex `src` (the contents of `path`) into a [`FileModel`].
+pub fn scan(path: &str, src: &str) -> FileModel {
+    let mut fm =
+        FileModel { path: path.replace('\\', "/"), lines: Vec::new(), bad: Vec::new() };
+    let mut stack: Vec<Frame> = Vec::new();
+    let (mut hot, mut report, mut derive, mut test) = (0usize, 0usize, 0usize, 0usize);
+    let mut pending_region: Option<(Region, usize)> = None;
+    let mut pending_test = false;
+    let mut pending_allows: Vec<(usize, String)> = Vec::new();
+    let mut mode = Mode::Code;
+
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let start = Frame { hot: hot > 0, report: report > 0, derive: derive > 0, test: test > 0 };
+        // `#[cfg(test)]` / `#[test]` marks the next block as test code. The
+        // raw text is checked before brace processing so a same-line `{`
+        // (e.g. `#[cfg(test)] mod tests {`) still lands inside the frame.
+        if matches!(mode, Mode::Code)
+            && (raw.contains("#[cfg(test)]") || raw.contains("#[test]"))
+        {
+            pending_test = true;
+        }
+        let mut code = String::new();
+        let mut comments: Vec<String> = Vec::new();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            match mode {
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        i += 2;
+                    } else {
+                        if chars[i] == '"' {
+                            mode = Mode::Code;
+                        }
+                        i += 1;
+                    }
+                }
+                Mode::RawStr { hashes } => {
+                    if chars[i] == '"' && tail_hashes(&chars, i + 1) >= hashes {
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Block { depth } => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::Block { depth: depth - 1 }
+                        };
+                        i += 2;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block { depth: depth + 1 };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '"' {
+                        code.push_str("\"\"");
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if let Some(h) = raw_string_open(&chars, i) {
+                        code.push_str("\"\"");
+                        mode = Mode::RawStr { hashes: h.1 };
+                        i = h.0;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comments.push(chars[i + 2..].iter().collect());
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block { depth: 1 };
+                        i += 2;
+                    } else if c == '\'' {
+                        i = consume_quote(&chars, i, &mut code);
+                    } else if c == '{' {
+                        let r = pending_region.take().map(|(r, _)| r);
+                        let f = Frame {
+                            hot: r == Some(Region::HotPath),
+                            report: r == Some(Region::ReportRegion),
+                            derive: r == Some(Region::DeriveOnce),
+                            test: pending_test,
+                        };
+                        pending_test = false;
+                        hot += f.hot as usize;
+                        report += f.report as usize;
+                        derive += f.derive as usize;
+                        test += f.test as usize;
+                        stack.push(f);
+                        code.push('{');
+                        i += 1;
+                    } else if c == '}' {
+                        if let Some(f) = stack.pop() {
+                            hot -= f.hot as usize;
+                            report -= f.report as usize;
+                            derive -= f.derive as usize;
+                            test -= f.test as usize;
+                        }
+                        code.push('}');
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+
+        let had_code = !code.trim().is_empty();
+        let mut allows: Vec<String> = if had_code {
+            pending_allows.drain(..).map(|(_, r)| r).collect()
+        } else {
+            Vec::new()
+        };
+        for text in comments {
+            match parse_annot(&text) {
+                None => {}
+                Some(Annot::Region(r)) => {
+                    if let Some((_, at)) = pending_region.replace((r, lineno)) {
+                        fm.bad.push((at, "region annotation never attached to a block".into()));
+                    }
+                }
+                Some(Annot::Allow(rule)) => {
+                    if had_code {
+                        allows.push(rule);
+                    } else {
+                        pending_allows.push((lineno, rule));
+                    }
+                }
+                Some(Annot::Bad(msg)) => fm.bad.push((lineno, msg)),
+            }
+        }
+        fm.lines.push(LineInfo {
+            code,
+            hot: start.hot,
+            report: start.report,
+            derive: start.derive,
+            test: start.test,
+            allows,
+        });
+    }
+
+    if let Some((_, at)) = pending_region {
+        fm.bad.push((at, "region annotation never attached to a block".into()));
+    }
+    for (at, _) in pending_allows {
+        fm.bad.push((at, "allow annotation not followed by any code line".into()));
+    }
+    fm
+}
+
+/// Number of consecutive `#` starting at `chars[from]`.
+fn tail_hashes(chars: &[char], from: usize) -> usize {
+    chars[from.min(chars.len())..].iter().take_while(|&&c| c == '#').count()
+}
+
+/// Detect `r"`, `r#"`, `br"`, ... at position `i` (not preceded by an
+/// identifier char). Returns `(index past the opening quote, hash count)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let c = chars[i];
+    if c != 'r' && c != 'b' {
+        return None;
+    }
+    if i > 0 && is_ident(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i + 1;
+    if c == 'b' {
+        if chars.get(j) != Some(&'r') {
+            // plain byte string b"..." — let the ordinary '"' arm lex it
+            return None;
+        }
+        j += 1;
+    }
+    let h = tail_hashes(chars, j);
+    if chars.get(j + h) == Some(&'"') {
+        Some((j + h + 1, h))
+    } else {
+        None
+    }
+}
+
+/// Consume a `'x'` / `'\n'` char literal, or pass a `'lifetime` through.
+/// Returns the index to resume at; pushes nothing for literals.
+fn consume_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // escaped char literal: skip to the closing quote
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' {
+            j += 1;
+        }
+        return (j + 1).min(chars.len());
+    }
+    if chars.get(i + 2) == Some(&'\'') {
+        return i + 3; // one-char literal, possibly '{' or '}'
+    }
+    code.push('\''); // lifetime: keep it, it cannot confuse brace tracking
+    i + 1
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Parse one line comment's text. `None` when it is not an invlint comment
+/// (doc comments `///`/`//!` never match: their text starts with `/` or `!`).
+fn parse_annot(text: &str) -> Option<Annot> {
+    let rest = text.trim().strip_prefix("invlint:")?.trim();
+    match rest {
+        "hot-path" => return Some(Annot::Region(Region::HotPath)),
+        "report-region" => return Some(Annot::Region(Region::ReportRegion)),
+        "derive-once" => return Some(Annot::Region(Region::DeriveOnce)),
+        _ => {}
+    }
+    if let Some(tail) = rest.strip_prefix("allow(") {
+        let Some(close) = tail.find(')') else {
+            return Some(Annot::Bad("malformed allow: missing `)`".into()));
+        };
+        let rule = tail[..close].trim();
+        if !super::rules::RULE_IDS.contains(&rule) {
+            return Some(Annot::Bad(format!("allow names unknown rule `{rule}`")));
+        }
+        let after = tail[close + 1..].trim();
+        let reason = after.strip_prefix("--").map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            return Some(Annot::Bad(format!(
+                "allow({rule}) requires a reason: `// invlint: allow({rule}) -- <why>`"
+            )));
+        }
+        return Some(Annot::Allow(rule.to_string()));
+    }
+    Some(Annot::Bad(format!("unknown invlint annotation `{rest}`")))
+}

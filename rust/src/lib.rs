@@ -113,3 +113,4 @@ pub mod router;
 pub mod api;
 pub mod testing;
 pub mod benchkit;
+pub mod invlint;

@@ -8,17 +8,21 @@
 //! consumes p90 tails, which the histogram bounds to one bucket factor
 //! without per-tick sample vectors or sorting.
 
-use std::collections::HashMap;
-
 use crate::config::SloSpec;
 use crate::core::{Lifecycle, Phase, RequestId};
 use crate::obs::registry::StreamHist;
+use crate::util::fxhash::FxHashMap;
 use crate::util::stats::Summary;
 
 /// All finished-request lifecycles of one experiment run.
+///
+/// Keyed with the deterministic Fx hasher: lifecycles are digest-folded
+/// (in sorted-id order), but everything *else* that iterates this map —
+/// summary accumulation, report rendering — must also be a pure function
+/// of the run, not of a per-process SipHash seed.
 #[derive(Debug, Default, Clone)]
 pub struct RunMetrics {
-    pub lifecycles: HashMap<u64, Lifecycle>,
+    pub lifecycles: FxHashMap<u64, Lifecycle>,
     /// Wall-clock span of the run (first arrival to last completion).
     pub makespan: f64,
 }
@@ -47,6 +51,7 @@ impl RunMetrics {
     }
 
     /// TTFT across finished requests.
+    // invlint: report-region
     pub fn ttft(&self) -> Summary {
         let mut s = Summary::new();
         for lc in self.finished() {
@@ -58,6 +63,7 @@ impl RunMetrics {
     }
 
     /// All inter-token intervals across finished requests.
+    // invlint: report-region
     pub fn tpot(&self) -> Summary {
         let mut s = Summary::new();
         for lc in self.finished() {
@@ -67,6 +73,7 @@ impl RunMetrics {
     }
 
     /// Per-request mean TPOT (the Fig. 11 y-axis).
+    // invlint: report-region
     pub fn tpot_per_request(&self) -> Summary {
         let mut s = Summary::new();
         for lc in self.finished() {
@@ -78,6 +85,7 @@ impl RunMetrics {
         s
     }
 
+    // invlint: report-region
     pub fn e2e(&self) -> Summary {
         let mut s = Summary::new();
         for lc in self.finished() {

@@ -42,6 +42,7 @@ impl Router {
     ///
     /// Allocation-free: this runs once per routed request and once per
     /// migration target pick, so it must never heap-allocate.
+    // invlint: hot-path
     pub fn pick(&mut self, loads: &[f64]) -> Option<usize> {
         let eligible = loads.iter().filter(|l| l.is_finite()).count();
         if eligible == 0 {
@@ -72,6 +73,7 @@ impl Router {
     }
 
     /// Index of the k-th (0-based) finite-load candidate.
+    // invlint: hot-path
     fn nth_eligible(loads: &[f64], k: usize) -> Option<usize> {
         loads
             .iter()
@@ -101,6 +103,7 @@ impl Router {
     /// queueing and the pick degrades to the plain load policy. With zero
     /// affinity everywhere this is exactly [`Router::pick`]. `affinity`
     /// must be at least as long as `loads`.
+    // invlint: hot-path
     pub fn pick_affinity(&mut self, loads: &[f64], affinity: &[f64]) -> Option<usize> {
         debug_assert!(affinity.len() >= loads.len(), "affinity per candidate");
         let min_load = loads

@@ -187,6 +187,7 @@ fn slot_stage(slot: usize) -> Stage {
     [Stage::Encode, Stage::Prefill, Stage::Decode][slot]
 }
 
+// invlint: hot-path
 impl Queues {
     pub fn total(&self) -> usize {
         self.waiting_len() + self.running.len()

@@ -48,7 +48,14 @@ impl Json {
         }
     }
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        // Input-hardened: negative or fractional numbers are not usizes.
+        // The old `as` cast silently saturated `-3.0` to `0` and truncated
+        // `1.7` to `1` — request-path inputs must fail loudly instead.
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n > usize::MAX as f64 {
+            return None;
+        }
+        Some(n as usize)
     }
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
@@ -85,7 +92,9 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/invalid number field `{key}`"))
     }
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
-        Ok(self.req_f64(key)? as usize)
+        self.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid non-negative integer field `{key}`"))
     }
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
@@ -298,7 +307,11 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // Invariant panic (kept, audited): the scanner above only ever
+        // advanced over ASCII digits, signs, `.`, and `e` — the slice
+        // cannot be invalid UTF-8 whatever bytes the request carried.
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .expect("number scanner slices pure-ASCII bytes");
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -412,5 +425,18 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn as_usize_rejects_negative_and_fractional() {
+        assert_eq!(parse("7").unwrap().as_usize(), Some(7));
+        assert_eq!(parse("0").unwrap().as_usize(), Some(0));
+        // the old `as` cast saturated -3 to 0 and truncated 1.7 to 1
+        assert_eq!(parse("-3").unwrap().as_usize(), None);
+        assert_eq!(parse("1.7").unwrap().as_usize(), None);
+        assert_eq!(parse("1e30").unwrap().as_usize(), None);
+        let obj = parse(r#"{"n": -3}"#).unwrap();
+        let err = obj.req_usize("n").unwrap_err().to_string();
+        assert!(err.contains("non-negative integer"), "{err}");
     }
 }

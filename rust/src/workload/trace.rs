@@ -130,6 +130,19 @@ mod tests {
     }
 
     #[test]
+    fn rejects_negative_and_fractional_numbers() {
+        // `id: -3` used to saturate to 0 through the old `as usize` cast;
+        // the hardened parser refuses negative / non-integral values loudly
+        let neg = r#"[{"id": -3, "arrival": 0.0, "images": 0,
+            "tokens_per_image": 0, "prompt": 4, "output": 1}]"#;
+        let err = Trace::from_json(&parse(neg).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("id"), "{err}");
+        let frac = r#"[{"id": 1, "arrival": 0.0, "images": 0,
+            "tokens_per_image": 0, "prompt": 4.5, "output": 1}]"#;
+        assert!(Trace::from_json(&parse(frac).unwrap()).is_err());
+    }
+
+    #[test]
     fn content_identity_roundtrips_losslessly() {
         // full-width 64-bit hashes must survive (hence hex, not f64)
         let m = ModelSpec::llava15_7b();

@@ -1,0 +1,9 @@
+//! NEGATIVE fixture for `bad-annotation`: well-formed annotations — every
+//! allow names a real rule and carries a reason, every region attaches.
+
+// invlint: hot-path
+fn run_window(scratch: &mut Vec<u32>) {
+    scratch.clear();
+    // invlint: allow(hot-path-alloc) -- one-time growth, amortized across the run
+    scratch.reserve(1024);
+}

@@ -1,0 +1,13 @@
+//! POSITIVE fixture for `bad-annotation`: an allow with no reason, an allow
+//! naming an unknown rule, and a region annotation that never attaches.
+
+fn simulate(n_shards: usize) {
+    // invlint: allow(no-shard1-fastpath)
+    if n_shards == 1 {
+        run_inline();
+    }
+    // invlint: allow(made-up-rule) -- not a rule id
+    step();
+}
+
+// invlint: hot-path

@@ -1,0 +1,19 @@
+//! NEGATIVE fixture for `hash-once`: derivation confined to a sanctioned
+//! `derive-once` region; handlers borrow the shared Arc.
+
+// invlint: derive-once
+fn chains_entry(spec: &RequestSpec) -> Arc<HashChains> {
+    Arc::new(HashChains::of_spec(spec, 16, 64))
+}
+
+fn handle_fetch_done(chains: &Arc<HashChains>) {
+    attach(Arc::clone(chains));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let _ = HashChains::of_spec(&spec(), 16, 64);
+    }
+}

@@ -1,0 +1,12 @@
+//! POSITIVE fixture for `hash-once`: a simulator event handler re-deriving
+//! content hashes per event instead of borrowing the arrival-time Arc.
+
+fn handle_fetch_done(spec: &RequestSpec) {
+    let chains = HashChains::of_spec(spec, 16, 64); // re-derives: must fire
+    attach(chains);
+}
+
+fn deliver(spec: &RequestSpec) {
+    let hashes = spec_kv_hashes(spec, 16); // must fire too
+    lookup(&hashes);
+}

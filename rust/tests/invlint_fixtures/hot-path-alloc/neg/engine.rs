@@ -1,0 +1,16 @@
+//! NEGATIVE fixture for `hot-path-alloc`: the sanctioned shapes — caller
+//! scratch reuse, Fx maps built elsewhere, `Arc::clone` for shared state.
+//! `Vec::new()` outside the region is fine.
+
+fn build() -> Vec<u32> {
+    Vec::new() // not a hot-path region: no finding
+}
+
+// invlint: hot-path
+fn run_window(shard: &mut Shard, scratch: &mut Vec<u32>, chains: &FxHashMap<u64, Arc<Chains>>) {
+    scratch.clear();
+    scratch.push(1);
+    if let Some(c) = chains.get(&7) {
+        attach(Arc::clone(c));
+    }
+}

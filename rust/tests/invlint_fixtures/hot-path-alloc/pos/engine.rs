@@ -1,0 +1,10 @@
+//! POSITIVE fixture for `hot-path-alloc`: heap allocation and a std hash
+//! container inside a declared hot-path region.
+
+// invlint: hot-path
+fn run_window(shard: &mut Shard) {
+    let mut slots: Vec<u32> = Vec::new(); // allocates per event: must fire
+    let mut seen: HashMap<u64, u32> = HashMap::default(); // std map: must fire
+    seen.insert(0, 0);
+    slots.push(1);
+}

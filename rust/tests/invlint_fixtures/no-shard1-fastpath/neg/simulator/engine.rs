@@ -1,0 +1,23 @@
+//! NEGATIVE fixture for `no-shard1-fastpath`: the annotated
+//! execution-strategy dispatch (same protocol inline), and shard-count
+//! comparisons against other values, are all fine.
+
+fn simulate(n_shards: usize, shards: usize) {
+    // invlint: allow(no-shard1-fastpath) -- same windowed barrier loop, run inline
+    if n_shards == 1 {
+        drive_windowed_protocol_inline();
+    } else {
+        run_threaded();
+    }
+    if shards == 10 {
+        tune_window(); // == 10 is not the banned == 1 pattern
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_compare_shard_counts() {
+        assert!(cfg.shards == 1 || cfg.shards == 4);
+    }
+}

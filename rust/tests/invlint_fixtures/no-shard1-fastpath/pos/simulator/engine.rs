@@ -1,0 +1,10 @@
+//! POSITIVE fixture for `no-shard1-fastpath`: a structural serial fast path
+//! keyed on the shard count.
+
+fn simulate(n_shards: usize) {
+    if n_shards == 1 {
+        run_serial_without_barriers(); // must fire: different protocol
+    } else {
+        run_threaded();
+    }
+}

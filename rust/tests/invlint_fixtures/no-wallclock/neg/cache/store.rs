@@ -1,0 +1,10 @@
+//! NEGATIVE fixture for `no-wallclock`: simulated time plus deterministic
+//! Fx maps — nothing to report.
+
+fn touch(&mut self, now: f64, id: u64) {
+    self.last = now; // simulated clock handed in by the engine
+}
+
+fn index() -> FxHashMap<u64, u32> {
+    FxHashMap::default()
+}

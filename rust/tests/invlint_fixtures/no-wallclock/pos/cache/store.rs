@@ -1,0 +1,11 @@
+//! POSITIVE fixture for `no-wallclock`: wall-clock reads and a
+//! default-seeded hasher in digest-folded cache code.
+
+fn touch(&mut self, id: u64) {
+    let stamp = Instant::now(); // wall clock in digest-folded code: must fire
+    self.last = stamp;
+}
+
+fn index() -> HashMap<u64, u32> {
+    HashMap::new() // per-process hash seed: must fire
+}

@@ -1,0 +1,15 @@
+//! NEGATIVE fixture for `summary-streamhist`: `Summary` inside a bounded
+//! per-run report region, `StreamHist` everywhere else.
+
+// invlint: report-region
+fn ttft_report(lifecycles: &[Lifecycle]) -> Summary {
+    let mut s = Summary::new(); // bounded end-of-run report: sanctioned
+    for lc in lifecycles {
+        s.add(lc.ttft);
+    }
+    s
+}
+
+fn window_tail(hist: &StreamHist) -> f64 {
+    hist.quantile(0.9)
+}

@@ -1,0 +1,10 @@
+//! POSITIVE fixture for `summary-streamhist`: a store-all `Summary` built
+//! on a polled path with no report-region annotation.
+
+fn window_tail(samples: &[f64]) -> f64 {
+    let mut s = Summary::new(); // unbounded store on a polled path: must fire
+    for &x in samples {
+        s.add(x);
+    }
+    s.p90()
+}

@@ -1,0 +1,10 @@
+//! NEGATIVE fixture for `traced-guard`: cheap scalar arguments need no
+//! guard, and allocating detail is gated on the recorder being enabled.
+
+fn apply_batch(&mut self, now: f64) {
+    self.step(now);
+    self.tracer.span(SpanKind::Batch, self.id, self.seq, now); // scalars: free
+    if self.tracer.enabled() {
+        self.tracer.span(SpanKind::Batch, self.id, format!("batch {}", self.seq), now);
+    }
+}

@@ -1,0 +1,7 @@
+//! POSITIVE fixture for `traced-guard`: a tracer emission paying for a
+//! `format!` allocation with no recorder-enabled guard anywhere near.
+
+fn apply_batch(&mut self, now: f64) {
+    self.step(now);
+    self.tracer.span(SpanKind::Batch, self.id, format!("batch {}", self.seq), now);
+}

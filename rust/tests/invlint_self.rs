@@ -1,0 +1,93 @@
+//! Self-test for the `invlint` architecture-invariant analyzer: every rule
+//! fires on its positive fixture, stays silent on its negative twin, a
+//! missing allow reason is itself reported — and the crate's own `src/`
+//! tree lands clean, so `cargo test` enforces the invariants even before
+//! the dedicated CI job runs the binary.
+
+use std::path::{Path, PathBuf};
+
+use hydrainfer::invlint::{lint_tree, Finding, RULE_IDS};
+
+fn fixture_dir(rule: &str, polarity: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/invlint_fixtures")
+        .join(rule)
+        .join(polarity)
+}
+
+fn lint_fixture(rule: &str, polarity: &str) -> Vec<Finding> {
+    let dir = fixture_dir(rule, polarity);
+    lint_tree(&dir).unwrap_or_else(|e| panic!("reading fixture {}: {e}", dir.display()))
+}
+
+/// Rules with a fixture pair (every rule the analyzer knows).
+fn fixture_rules() -> Vec<&'static str> {
+    RULE_IDS.to_vec()
+}
+
+#[test]
+fn every_rule_fires_on_its_positive_fixture() {
+    for rule in fixture_rules() {
+        let findings = lint_fixture(rule, "pos");
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "rule `{rule}` did not fire on its positive fixture; findings: {findings:?}"
+        );
+        for f in &findings {
+            assert!(f.line > 0, "findings carry 1-based lines: {f:?}");
+            let rendered = f.to_string();
+            assert!(
+                rendered.contains(&format!(":{} {}", f.line, f.rule)),
+                "finding renders as `file:line rule message`: {rendered}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_rule_is_silent_on_its_negative_fixture() {
+    for rule in fixture_rules() {
+        let findings = lint_fixture(rule, "neg");
+        assert!(
+            findings.is_empty(),
+            "negative fixture for `{rule}` produced findings: {findings:?}"
+        );
+    }
+}
+
+#[test]
+fn allow_without_a_reason_is_itself_an_error() {
+    let findings = lint_fixture("bad-annotation", "pos");
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "bad-annotation" && f.msg.contains("requires a reason")),
+        "missing allow reason not reported: {findings:?}"
+    );
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "bad-annotation" && f.msg.contains("unknown rule")),
+        "unknown rule name in allow not reported: {findings:?}"
+    );
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "bad-annotation" && f.msg.contains("never attached")),
+        "dangling region annotation not reported: {findings:?}"
+    );
+}
+
+/// The analyzer's reason to exist: the crate's own source tree carries the
+/// invariants it checks. A finding here is a real regression (or a new
+/// site that needs an `// invlint: allow(<rule>) -- <reason>`).
+#[test]
+fn crate_source_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_tree(&src).expect("walk src/");
+    assert!(
+        findings.is_empty(),
+        "invlint findings in src/ — fix or annotate with a reason:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
