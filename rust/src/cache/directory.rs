@@ -122,9 +122,11 @@ impl ContentDirectory {
         }
     }
 
-    /// Withdraw every advertisement of `holder` (role flip dropped its
-    /// whole cache).
-    pub fn retract_all(&mut self, holder: usize) {
+    /// Withdraw every advertisement of `holder` (a role flip dropped its
+    /// whole cache, or the fault plane tore the instance down). Returns
+    /// the number of advertisements retracted — the crash path reports it
+    /// so "how much cached content died with the instance" is observable.
+    pub fn retract_all(&mut self, holder: usize) -> usize {
         let bit = 1u64 << holder;
         let before = self.stats.retractions;
         self.holders.retain(|_, m| {
@@ -137,6 +139,7 @@ impl ContentDirectory {
         if self.stats.retractions != before {
             self.version += 1;
         }
+        self.stats.retractions - before
     }
 
     /// Does `holder` advertise `hash`?
@@ -364,11 +367,12 @@ mod tests {
         let mut d = ContentDirectory::new(3);
         d.publish(0, &[1, 2]);
         d.publish(1, &[2, 3]);
-        d.retract_all(0);
+        assert_eq!(d.retract_all(0), 2, "reports how many advertisements died");
         assert!(!d.holds(0, &1) && !d.holds(0, &2));
         assert!(d.holds(1, &2) && d.holds(1, &3));
         assert_eq!(d.len(), 2);
         let s = d.stats();
         assert_eq!(s.retractions, 2);
+        assert_eq!(d.retract_all(0), 0, "idempotent: nothing left to retract");
     }
 }

@@ -9,9 +9,11 @@
 
 pub mod controller;
 pub mod slo;
+pub mod supervisor;
 
 pub use controller::ControllerConfig;
 pub use slo::SloSpec;
+pub use supervisor::SupervisorConfig;
 
 use crate::util::json::Json;
 use crate::vision::ImageTokenRule;

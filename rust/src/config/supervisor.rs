@@ -1,0 +1,72 @@
+//! Supervision knobs for the real serving plane (PR 9).
+//!
+//! The real cluster runs a supervisor thread that scans per-instance
+//! heartbeats and marks instances dead when they go silent; dead
+//! instances stop receiving new work, their in-flight requests are
+//! re-dispatched to live peers (bounded by
+//! [`crate::faults::RetryPolicy`]), and requests with no live candidate
+//! left are dead-lettered with a structured error instead of dropped.
+
+use crate::faults::RetryPolicy;
+
+/// Configuration for the real plane's [`Supervisor`] loop.
+///
+/// [`Supervisor`]: crate::instance::RealCluster
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SupervisorConfig {
+    /// How often (seconds) the supervisor thread scans heartbeats.
+    pub heartbeat_interval: f64,
+    /// An instance whose last heartbeat is older than this (seconds) is
+    /// marked dead. Must comfortably exceed the longest single batch an
+    /// instance can execute, or healthy-but-busy instances flap; the
+    /// epoch/dedup machinery makes a false positive safe (duplicate
+    /// finishes are dropped), but it still costs a redundant dispatch.
+    pub dead_after: f64,
+    /// Backoff schedule shared by submit-side send retries, in-instance
+    /// batch retries, and cluster-side re-dispatch of work stranded on a
+    /// dead instance.
+    pub retry: RetryPolicy,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            heartbeat_interval: 0.05,
+            dead_after: 2.0,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl SupervisorConfig {
+    /// `heartbeat_interval` as a [`std::time::Duration`] for sleep calls.
+    pub fn scan_period(&self) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.heartbeat_interval.max(1e-3))
+    }
+
+    /// Heartbeat age (milliseconds) beyond which an instance is dead.
+    pub fn dead_after_ms(&self) -> u64 {
+        (self.dead_after.max(0.0) * 1e3) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = SupervisorConfig::default();
+        assert!(c.heartbeat_interval > 0.0);
+        assert!(c.dead_after > c.heartbeat_interval * 4.0, "scan must out-sample the deadline");
+        assert_eq!(c.dead_after_ms(), 2000);
+        assert_eq!(c.scan_period(), std::time::Duration::from_millis(50));
+        assert!(c.retry.max_attempts >= 1);
+    }
+
+    #[test]
+    fn scan_period_never_degenerates_to_zero() {
+        let c = SupervisorConfig { heartbeat_interval: 0.0, ..Default::default() };
+        assert!(c.scan_period() > std::time::Duration::ZERO);
+    }
+}

@@ -67,6 +67,9 @@ impl StageRates {
 #[derive(Debug, Clone, Default)]
 pub struct InstanceSample {
     pub mask: StageMask,
+    /// Unavailable for capacity: mid-drain, or (PR 9) crashed/dead. Its
+    /// backlog still counts as demand; its mask no longer counts as a
+    /// server — that asymmetry is what surfaces a failure as pressure.
     pub draining: bool,
     /// Images pending encode across the instance's queues.
     pub encode_backlog: f64,
@@ -124,7 +127,7 @@ pub struct StageLoad {
     /// Mean cluster-wide backlog per stage over the window, in seconds of
     /// single-instance service time.
     pub backlog_secs: [f64; 3],
-    /// Non-draining instances currently serving each stage.
+    /// Available (neither draining nor dead) instances serving each stage.
     pub servers: [usize; 3],
     /// backlog_secs / servers (infinite when a demanded stage has no
     /// server — an emergency the policy resolves immediately).

@@ -12,10 +12,14 @@
 //!   4. the cost-model prediction says the post-flip bottleneck pressure
 //!      drops below `accept_margin` x the current bottleneck.
 //!
-//! The donor keeps any stage that no other (non-draining) instance would
+//! The donor keeps any stage that no other *available* instance would
 //! cover — so flipping the only encode instance toward decode yields an
 //! ED hybrid (the paper's multi-stream colocation), never an uncovered
-//! stage. The cluster stays complete by construction.
+//! stage. The cluster stays complete by construction. "Available" means
+//! neither mid-drain nor crashed (PR 9): a dead instance cannot donate
+//! and does not count as coverage, so after a crash the policy re-plans
+//! the surviving roles around the hole instead of trusting a server
+//! that is not there.
 
 use crate::config::ControllerConfig;
 use crate::scheduler::StageMask;
@@ -71,14 +75,16 @@ impl ReconfigPolicy {
         ReconfigPolicy { cfg, last_change: 0.0, sustained: 0, last_imbalance: None }
     }
 
-    /// Evaluate one estimator snapshot. `masks`/`draining` describe the
-    /// current layout (draining instances are unavailable on both sides).
+    /// Evaluate one estimator snapshot. `masks`/`unavailable` describe
+    /// the current layout; `unavailable` marks instances that are
+    /// mid-drain *or* crashed — both are excluded on every side (donor
+    /// selection, stage coverage, capacity prediction).
     pub fn decide(
         &mut self,
         now: f64,
         load: &StageLoad,
         masks: &[StageMask],
-        draining: &[bool],
+        unavailable: &[bool],
     ) -> Option<ReconfigDecision> {
         // hottest and coldest stages by pressure
         let mut hot = 0;
@@ -127,7 +133,7 @@ impl ReconfigPolicy {
         // sole encode server became a hybrid, a lightly-loaded prefill
         // instance can still donate). Ties break by least own backlog.
         let eligible = |i: usize, m: &StageMask| -> bool {
-            !draining.get(i).copied().unwrap_or(false)
+            !unavailable.get(i).copied().unwrap_or(false)
                 && !serves(*m, hot)
                 && (0..3).all(|s| {
                     !serves(*m, s) || load.pressure[s] * self.cfg.imbalance_ratio <= hot_p
@@ -155,7 +161,7 @@ impl ReconfigPolicy {
                 continue;
             }
             let covered_elsewhere = masks.iter().enumerate().any(|(j, m)| {
-                j != donor && !draining.get(j).copied().unwrap_or(false) && serves(*m, s)
+                j != donor && !unavailable.get(j).copied().unwrap_or(false) && serves(*m, s)
             });
             if !covered_elsewhere {
                 to = with_stage(to, s);
@@ -363,6 +369,34 @@ mod tests {
             }
             t += 0.5;
         }
+    }
+
+    #[test]
+    fn crashed_instance_neither_donates_nor_counts_as_coverage() {
+        // 1E 1P 2D with one D crashed: prefill runs hot, decode cold, so
+        // the live D instance donates — but because its crashed twin is
+        // not real coverage, the donor must KEEP decode (PD hybrid), not
+        // flip to pure P. This is "re-plan roles around the hole".
+        let mut pol = ReconfigPolicy::new(cfg());
+        let l = load([0.1, 4.0, 0.05], [1, 1, 1]);
+        let masks = vec![StageMask::E, StageMask::P, StageMask::D, StageMask::D];
+        let unavailable = vec![false, false, true, false]; // 2 crashed
+        let mut t = 10.0;
+        let mut flip = None;
+        for _ in 0..6 {
+            flip = pol.decide(t, &l, &masks, &unavailable);
+            if flip.is_some() {
+                break;
+            }
+            t += 0.5;
+        }
+        let d = flip.expect("sustained prefill imbalance must flip");
+        assert_eq!(d.instance, 3, "the crashed D instance must not donate");
+        assert!(serves(d.to, PRE), "the flip serves the hot stage");
+        assert!(
+            serves(d.to, DEC),
+            "decode is only 'covered' by a corpse — the donor keeps it"
+        );
     }
 
     #[test]

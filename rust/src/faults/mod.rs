@@ -1,0 +1,281 @@
+//! Deterministic fault injection: failure as a first-class, seeded,
+//! schedulable event (PR 9).
+//!
+//! The simulator consumes a [`FaultPlan`] — a seeded schedule of instance
+//! crashes and recoveries, cluster-wide link degradation windows, and
+//! per-instance straggler slowdown factors. The engine applies due fault
+//! events at window barriers only (single-threaded, canonical order), so
+//! a faulty run's [`crate::simulator::engine::SimResult::digest`] is
+//! bit-identical for any shard count — the same contract every other
+//! cluster-global effect (routing, controller ticks, migration retargets)
+//! already rides.
+//!
+//! The real plane consumes [`RetryPolicy`] (bounded exponential backoff
+//! for message sends and batch retries) together with
+//! [`crate::config::SupervisorConfig`] (heartbeat liveness scanning).
+//!
+//! An empty plan is the default and must be behaviourally invisible: the
+//! golden-determinism digests pin that property.
+
+use crate::scheduler::StageMask;
+use crate::core::Stage;
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The instance dies: its current batch is lost, queues are drained
+    /// and salvaged (re-routed to surviving instances, resuming at the
+    /// longest cached prefix a survivor holds), its caches are dropped,
+    /// and the content directory retracts every advertisement it made.
+    Crash { instance: usize },
+    /// The instance rejoins with the role it held when it crashed
+    /// (fresh, empty caches). Parked requests waiting for this stage are
+    /// retried.
+    Recover { instance: usize },
+    /// Cluster-wide link degradation: migration-transfer and cache-fetch
+    /// durations multiply by `factor` from this point on (`1.0` restores
+    /// full speed — a degradation *window* is two events).
+    LinkDegrade { factor: f64 },
+    /// Per-instance compute slowdown: this instance's batch durations
+    /// multiply by `factor` from this point on (`1.0` restores it).
+    Straggler { instance: usize, factor: f64 },
+}
+
+/// A fault scheduled at simulated time `t` (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// A full fault schedule for one simulation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// When a salvaged request momentarily has no live instance serving
+    /// its stage, park it and retry on the next recovery (`true`, the
+    /// default) instead of counting it lost immediately (`false`).
+    pub retry: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { events: Vec::new(), retry: true }
+    }
+}
+
+impl FaultPlan {
+    /// No faults scheduled — the engine must behave exactly as if the
+    /// fault subsystem did not exist.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The schedule in canonical application order: ascending time,
+    /// crashes before recoveries at equal times (so a crash/recover pair
+    /// landing on the same barrier nets out to a restart), instance id
+    /// last. Deterministic regardless of how the plan was assembled.
+    pub fn sorted_events(&self) -> Vec<FaultEvent> {
+        let mut evs = self.events.clone();
+        evs.sort_by(|a, b| {
+            a.t.total_cmp(&b.t)
+                .then(kind_rank(&a.kind).cmp(&kind_rank(&b.kind)))
+                .then(kind_instance(&a.kind).cmp(&kind_instance(&b.kind)))
+        });
+        evs
+    }
+
+    /// Seeded per-stage-role chaos schedule: crash one instance serving
+    /// each of Encode / Prefill / Decode (staggered by `spacing` starting
+    /// at `t0`), recovering each after `down` seconds (`down <= 0` means
+    /// no recovery). The seeded pick never removes the last live server
+    /// of any stage, even across overlapping downtime windows — the
+    /// survivor guarantee the `lost_requests == 0` property test leans
+    /// on. Stages with no crashable candidate are skipped.
+    pub fn per_role_crashes(
+        masks: &[StageMask],
+        t0: f64,
+        spacing: f64,
+        down: f64,
+        seed: u64,
+    ) -> FaultPlan {
+        let mut state = seed ^ 0x9e3779b97f4a7c15;
+        let mut crashed: Vec<usize> = Vec::new();
+        let mut events = Vec::new();
+        let stages = [Stage::Encode, Stage::Prefill, Stage::Decode];
+        for (k, &stage) in stages.iter().enumerate() {
+            let candidates: Vec<usize> = (0..masks.len())
+                .filter(|&i| masks[i].serves(stage) && !crashed.contains(&i))
+                .collect();
+            if candidates.is_empty() {
+                continue;
+            }
+            let start = (splitmix64(&mut state) as usize) % candidates.len();
+            let pick = (0..candidates.len())
+                .map(|j| candidates[(start + j) % candidates.len()])
+                .find(|&c| survivors_remain(masks, &crashed, c));
+            let Some(inst) = pick else { continue };
+            crashed.push(inst);
+            let t = t0 + k as f64 * spacing;
+            events.push(FaultEvent { t, kind: FaultKind::Crash { instance: inst } });
+            if down > 0.0 {
+                events
+                    .push(FaultEvent { t: t + down, kind: FaultKind::Recover { instance: inst } });
+            }
+        }
+        FaultPlan { events, retry: true }
+    }
+}
+
+/// Canonical same-time ordering: crashes apply before recoveries.
+fn kind_rank(k: &FaultKind) -> u8 {
+    match k {
+        FaultKind::Crash { .. } => 0,
+        FaultKind::Recover { .. } => 1,
+        FaultKind::LinkDegrade { .. } => 2,
+        FaultKind::Straggler { .. } => 3,
+    }
+}
+
+fn kind_instance(k: &FaultKind) -> usize {
+    match k {
+        FaultKind::Crash { instance }
+        | FaultKind::Recover { instance }
+        | FaultKind::Straggler { instance, .. } => *instance,
+        FaultKind::LinkDegrade { .. } => 0,
+    }
+}
+
+/// Would crashing `next` (on top of `crashed`) still leave every stage
+/// with at least one live server? Conservative: treats every crash window
+/// as overlapping.
+fn survivors_remain(masks: &[StageMask], crashed: &[usize], next: usize) -> bool {
+    [Stage::Encode, Stage::Prefill, Stage::Decode].iter().all(|&s| {
+        (0..masks.len())
+            .any(|i| i != next && !crashed.contains(&i) && masks[i].serves(s))
+    })
+}
+
+/// Sebastiano Vigna's splitmix64 — the crate's seeded-generator idiom
+/// (no external RNG dependency, identical streams on every platform).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Bounded exponential backoff for the real plane: message sends that
+/// fail (instance channel closed) and batch steps that error retry at
+/// most `max_attempts` times, sleeping `delay_ms(attempt)` between tries,
+/// before the request is dead-lettered.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    pub max_attempts: usize,
+    pub base_delay_ms: u64,
+    pub backoff: f64,
+    pub max_delay_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, base_delay_ms: 2, backoff: 2.0, max_delay_ms: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before retry number `attempt` (0-based): capped exponential.
+    pub fn delay_ms(&self, attempt: usize) -> u64 {
+        let d = self.base_delay_ms as f64 * self.backoff.powi(attempt.min(63) as i32);
+        (d.min(self.max_delay_ms as f64)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_default_and_retries() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(p.retry);
+    }
+
+    #[test]
+    fn per_role_crashes_is_seed_deterministic() {
+        let masks = [StageMask::E, StageMask::E, StageMask::P, StageMask::P, StageMask::D,
+            StageMask::D, StageMask::D, StageMask::D];
+        let a = FaultPlan::per_role_crashes(&masks, 1.0, 0.5, 2.0, 7);
+        let b = FaultPlan::per_role_crashes(&masks, 1.0, 0.5, 2.0, 7);
+        assert_eq!(a, b);
+        // one crash + one recover per stage role
+        assert_eq!(a.events.len(), 6);
+    }
+
+    #[test]
+    fn per_role_crashes_always_leaves_a_survivor_per_stage() {
+        let shapes: [&[StageMask]; 3] = [
+            &[StageMask::E, StageMask::E, StageMask::P, StageMask::P, StageMask::D, StageMask::D],
+            &[StageMask::EPD, StageMask::EPD, StageMask::EPD],
+            &[StageMask::E, StageMask::EP, StageMask::PD, StageMask::D],
+        ];
+        for masks in shapes {
+            for seed in 0..32u64 {
+                let plan = FaultPlan::per_role_crashes(masks, 0.5, 0.25, 1.0, seed);
+                let crashed: Vec<usize> = plan
+                    .events
+                    .iter()
+                    .filter_map(|e| match e.kind {
+                        FaultKind::Crash { instance } => Some(instance),
+                        _ => None,
+                    })
+                    .collect();
+                for s in [Stage::Encode, Stage::Prefill, Stage::Decode] {
+                    let alive = (0..masks.len())
+                        .any(|i| !crashed.contains(&i) && masks[i].serves(s));
+                    assert!(alive, "seed {seed}: stage {s:?} lost its last server");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_server_stages_are_never_crashed() {
+        // 1E1P1D: crashing any instance would kill a stage outright
+        let masks = [StageMask::E, StageMask::P, StageMask::D];
+        for seed in 0..16u64 {
+            let plan = FaultPlan::per_role_crashes(&masks, 0.5, 0.25, 1.0, seed);
+            assert!(plan.is_empty(), "seed {seed} crashed a sole server");
+        }
+    }
+
+    #[test]
+    fn sorted_events_apply_crashes_before_recoveries() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent { t: 1.0, kind: FaultKind::Recover { instance: 0 } },
+                FaultEvent { t: 1.0, kind: FaultKind::Crash { instance: 1 } },
+                FaultEvent { t: 0.5, kind: FaultKind::Straggler { instance: 2, factor: 2.0 } },
+            ],
+            retry: true,
+        };
+        let evs = plan.sorted_events();
+        assert!(matches!(evs[0].kind, FaultKind::Straggler { .. }));
+        assert!(matches!(evs[1].kind, FaultKind::Crash { .. }));
+        assert!(matches!(evs[2].kind, FaultKind::Recover { .. }));
+    }
+
+    #[test]
+    fn retry_delay_grows_and_caps() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.delay_ms(0), 2);
+        assert_eq!(p.delay_ms(1), 4);
+        assert_eq!(p.delay_ms(2), 8);
+        assert!(p.delay_ms(10) <= p.max_delay_ms);
+        for a in 0..12 {
+            assert!(p.delay_ms(a + 1) >= p.delay_ms(a));
+        }
+    }
+}

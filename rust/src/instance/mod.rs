@@ -22,7 +22,7 @@ pub mod device;
 
 pub use device::{spawn_device, DeviceHandle};
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -31,7 +31,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::cache::{content, BlockHash, CacheStore, ContentDirectory, PagedCache, COST_IMAGE};
-use crate::config::ControllerConfig;
+use crate::config::{ControllerConfig, SupervisorConfig};
+use crate::faults::RetryPolicy;
 use crate::controller::{
     ClusterSample, DrainTracker, InstanceSample, ReconfigPolicy, StageLoadEstimator, StageRates,
 };
@@ -57,6 +58,12 @@ pub struct PreparedRequest {
     /// Normalized pixels, if multimodal.
     pub pixels: Option<Vec<f32>>,
     pub sampling: SamplingParams,
+    /// Dispatch epoch: 0 on first dispatch, bumped by the cluster each
+    /// time the request is re-dispatched after its target was marked
+    /// dead. Finish accounting stays exactly-once regardless of epochs:
+    /// the cluster accepts the first result per request id and drops
+    /// late duplicates from superseded dispatches.
+    pub epoch: u32,
 }
 
 /// A finished request.
@@ -66,6 +73,70 @@ pub struct ServeResult {
     pub tokens: Vec<u32>,
     pub text: String,
     pub lifecycle: Lifecycle,
+    /// `None` = clean finish. `Some` = the request was dead-lettered (a
+    /// repeatedly failing batch, or a dead instance with no live
+    /// replacement); `tokens`/`text` carry whatever was generated before
+    /// the failure. Structured error responses replace silent drops.
+    pub error: Option<String>,
+}
+
+/// Typed failure from [`RealCluster::collect`] — previously a timeout
+/// panicked (`expect`) and partial progress was silently discarded.
+#[derive(Debug)]
+pub enum CollectError {
+    /// The deadline passed (or every producer hung up) before all
+    /// `expected` results arrived; the results that did arrive are
+    /// returned in `partial` rather than dropped.
+    Timeout { partial: Vec<ServeResult>, expected: usize },
+    /// [`RealCluster::take_results`] moved the receiver out (API-server
+    /// mode); `collect` has nothing to read from.
+    ReceiverTaken,
+}
+
+impl std::fmt::Display for CollectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CollectError::Timeout { partial, expected } => write!(
+                f,
+                "collect timed out with {}/{} results",
+                partial.len(),
+                expected
+            ),
+            CollectError::ReceiverTaken => {
+                write!(f, "results receiver was taken (API-server mode)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CollectError {}
+
+/// Receive up to `n` results within `timeout`; `Ok` when all arrived,
+/// `Err(Timeout {{ partial, .. }})` otherwise (disconnection of every
+/// sender counts as a timeout — whatever arrived is still returned).
+/// The primitive under [`RealCluster::collect`], split out so the
+/// timeout contract has a cluster-free regression test.
+pub fn collect_results(
+    rx: &Receiver<ServeResult>,
+    n: usize,
+    timeout: Duration,
+) -> std::result::Result<Vec<ServeResult>, CollectError> {
+    let deadline = Instant::now() + timeout;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(CollectError::Timeout { partial: out, expected: n });
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => out.push(r),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(CollectError::Timeout { partial: out, expected: n })
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Which cache plane a directory/gossip message refers to.
@@ -175,6 +246,14 @@ struct InstanceObs {
     tpot: Arc<Mutex<StreamHist>>,
     finished: Arc<Counter>,
     migrations: Arc<Counter>,
+    /// Batch steps that returned an error (each failure also logs; after
+    /// `RetryPolicy::max_attempts` consecutive ones the batch's requests
+    /// are dead-lettered).
+    batch_failures: Arc<Counter>,
+    /// Requests answered with a structured error response instead of a
+    /// clean finish (shared instrument with the cluster-side dead-letter
+    /// path — same registry name).
+    dead_letters: Arc<Counter>,
     /// This instance's flight recorder (the cluster merges snapshots for
     /// `/trace`; only the owning thread writes, so the lock is free).
     tracer: Arc<Mutex<Tracer>>,
@@ -192,6 +271,8 @@ impl InstanceObs {
             tpot: reg.histogram("hydra_tpot_seconds"),
             finished: reg.counter("hydra_requests_finished_total"),
             migrations: reg.counter("hydra_migrations_total"),
+            batch_failures: reg.counter("hydra_batch_failures_total"),
+            dead_letters: reg.counter("hydra_dead_letters_total"),
             tracer,
         }
     }
@@ -244,6 +325,16 @@ struct RealInstance {
     /// per-batch gather/scatter paths must not allocate a fresh `Vec` per
     /// request.
     scratch_slots: Vec<u32>,
+    /// Milliseconds since cluster epoch, stamped at the top of every
+    /// serving-loop pass; the supervisor thread reads it to decide
+    /// liveness.
+    heartbeat: Arc<AtomicU64>,
+    /// Backoff schedule for consecutive batch failures.
+    retry: RetryPolicy,
+    /// Consecutive `step()` errors; reset on any success. At
+    /// `retry.max_attempts` the failing batch's requests are
+    /// dead-lettered instead of silently spinning forever.
+    failed_steps: usize,
     /// Metrics handles + flight recorder (`obs`).
     obs: InstanceObs,
 }
@@ -1289,6 +1380,7 @@ impl RealInstance {
                     tokens: d.tokens,
                     pixels: d.pixels,
                     sampling: d.sampler.params().clone(),
+                    epoch: 0,
                 };
                 let _ = peers[dst].0.send(Msg::Submit(Box::new(prepared)));
                 None
@@ -1358,12 +1450,50 @@ impl RealInstance {
                 tokens: d.generated,
                 text,
                 lifecycle: d.lifecycle,
+                error: None,
+            });
+        }
+    }
+
+    /// A batch failed `retry.max_attempts` times in a row: stop silently
+    /// spinning and dead-letter every non-migrating running request —
+    /// each gets a structured error response carrying whatever tokens it
+    /// generated before the failure, its caches are released, and the
+    /// scheduler forgets it. Waiting requests are untouched (they were
+    /// not in the failing batch) and migrating requests belong to their
+    /// pull target now.
+    fn dead_letter_running(&mut self, reason: &str) {
+        let ids: Vec<RequestId> = self
+            .queues
+            .running()
+            .iter()
+            .filter(|r| !r.migrating)
+            .map(|r| r.spec.id)
+            .collect();
+        for id in ids {
+            self.queues.remove_running(id);
+            self.release_caches(id);
+            let Some(mut d) = self.data.remove(&id.0) else { continue };
+            d.lifecycle.finished_at = Some(self.now());
+            self.obs.dead_letters.inc();
+            let text = self.tokenizer.decode(&d.generated);
+            let _ = self.results.send(ServeResult {
+                id,
+                tokens: d.generated,
+                text,
+                lifecycle: d.lifecycle,
+                error: Some(format!("instance {}: {reason}", self.idx)),
             });
         }
     }
 
     fn run(mut self, rx: Receiver<Msg>) {
         loop {
+            // liveness: the supervisor reads this stamp; one store per
+            // loop pass (a stalled or wedged thread goes silent and gets
+            // marked dead after `SupervisorConfig::dead_after`)
+            self.heartbeat
+                .store(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
             // drain everything pending
             loop {
                 match rx.try_recv() {
@@ -1380,13 +1510,35 @@ impl RealInstance {
             self.expire_fetches();
             self.maybe_sample();
             let worked = match self.step() {
-                Ok(w) => w,
+                Ok(w) => {
+                    self.failed_steps = 0;
+                    w
+                }
                 Err(e) => {
+                    self.obs.batch_failures.inc();
+                    self.failed_steps += 1;
                     crate::util::logging::log(
                         crate::util::logging::Level::Error,
                         "instance",
-                        format_args!("instance {} batch failed: {e:#}", self.idx),
+                        format_args!(
+                            "instance {} batch failed (attempt {}/{}): {e:#}",
+                            self.idx, self.failed_steps, self.retry.max_attempts
+                        ),
                     );
+                    if self.failed_steps >= self.retry.max_attempts {
+                        // the batch is not transient: answer its requests
+                        // with structured errors instead of spinning on
+                        // the same failure forever
+                        self.dead_letter_running(&format!(
+                            "batch failed {} times: {e:#}",
+                            self.failed_steps
+                        ));
+                        self.failed_steps = 0;
+                    } else {
+                        std::thread::sleep(Duration::from_millis(
+                            self.retry.delay_ms(self.failed_steps - 1),
+                        ));
+                    }
                     false
                 }
             };
@@ -1430,16 +1582,9 @@ fn pick_peer_affinity(
     if candidates.is_empty() {
         return None;
     }
-    let gated: Vec<f64> = candidates
-        .iter()
-        .map(|&j| {
-            if draining.get(j).copied().unwrap_or(false) {
-                f64::INFINITY
-            } else {
-                0.0
-            }
-        })
-        .collect();
+    let gated = Router::gated_loads(candidates.len(), |p| {
+        !draining.get(candidates[p]).copied().unwrap_or(false)
+    });
     if let Some(p) = router.pick_affinity(&gated, affinity) {
         return Some(candidates[p]);
     }
@@ -1479,6 +1624,17 @@ fn img_tokens_needed_mask(mask: StageMask, r: &ReqState) -> usize {
 // Cluster
 // ---------------------------------------------------------------------------
 
+/// Cluster-side record of one dispatched, unfinished request.
+struct Inflight {
+    prepared: PreparedRequest,
+    target: usize,
+    epoch: u32,
+    /// Already answered with a synthesized error result; kept in the map
+    /// (not removed) so `collect` accepts exactly one result for the id —
+    /// a zombie instance's late real finish is dropped as a duplicate.
+    dead_lettered: bool,
+}
+
 /// A running disaggregated serving cluster (real execution).
 pub struct RealCluster {
     senders: Vec<Sender<Msg>>,
@@ -1507,6 +1663,28 @@ pub struct RealCluster {
     control: Option<Arc<Mutex<ControlShared>>>,
     ctrl_stop: Arc<AtomicBool>,
     ctrl_join: Option<JoinHandle<()>>,
+    /// Supervision (PR 9): per-instance death flags maintained by the
+    /// supervisor thread from heartbeat ages. Routing skips dead
+    /// instances; `collect` re-dispatches their in-flight work.
+    dead: Vec<Arc<AtomicBool>>,
+    supervisor: SupervisorConfig,
+    sup_stop: Arc<AtomicBool>,
+    sup_join: Option<JoinHandle<()>>,
+    /// Kept so the cluster can synthesize dead-letter results onto the
+    /// same channel instances deliver real finishes on.
+    results_tx: Sender<ServeResult>,
+    /// Dispatched-but-unfinished requests: everything needed to
+    /// re-dispatch one if its target dies, plus the dispatch epoch.
+    /// First-result-wins: `collect` removes the entry when a result is
+    /// accepted and drops late duplicates from superseded dispatches
+    /// (exactly-once finish accounting). Only maintained while the
+    /// cluster still owns the results receiver — in API-server mode the
+    /// instance-side dead-letter path is the safety net.
+    inflight: FxHashMap<u64, Inflight>,
+    retries: Arc<Counter>,
+    redispatches: Arc<Counter>,
+    duplicates: Arc<Counter>,
+    dead_letters: Arc<Counter>,
     /// Live metrics registry (`/metrics` renders it; instances hold
     /// pre-created handles). Per-cluster, not process-global, so parallel
     /// test clusters never share instruments.
@@ -1584,6 +1762,13 @@ impl RealCluster {
             .map(|_| Arc::new(Mutex::new(Tracer::with_capacity(1 << 14))))
             .collect();
 
+        // supervision (PR 9): per-instance heartbeat stamps + death flags
+        let supervisor = SupervisorConfig::default();
+        let heartbeats: Vec<Arc<AtomicU64>> =
+            masks.iter().map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let dead: Vec<Arc<AtomicBool>> =
+            masks.iter().map(|_| Arc::new(AtomicBool::new(false))).collect();
+
         let mut joins = Vec::new();
         for (idx, rx) in receivers.into_iter().enumerate() {
             let mask = masks[idx];
@@ -1627,6 +1812,9 @@ impl RealCluster {
                 router: Router::new(RoutePolicy::RoundRobin, idx as u64),
                 tokenizer: Tokenizer::new(),
                 scratch_slots: Vec::new(),
+                heartbeat: Arc::clone(&heartbeats[idx]),
+                retry: supervisor.retry,
+                failed_steps: 0,
                 obs: InstanceObs::new(&registry, idx, Arc::clone(&tracers[idx])),
             };
             joins.push(
@@ -1645,11 +1833,30 @@ impl RealCluster {
                 rx,
                 shared,
                 senders.clone(),
+                dead.clone(),
                 epoch,
                 Arc::clone(&ctrl_stop),
             )),
             _ => None,
         };
+
+        let sup_stop = Arc::new(AtomicBool::new(false));
+        let up: Vec<Arc<Gauge>> = (0..masks.len())
+            .map(|i| {
+                let g = registry.gauge(&format!("hydra_instance_up{{instance=\"{i}\"}}"));
+                g.set(1.0);
+                g
+            })
+            .collect();
+        let sup_join = Some(spawn_supervisor_thread(
+            supervisor,
+            epoch,
+            heartbeats,
+            dead.clone(),
+            up,
+            registry.counter("hydra_instance_deaths_total"),
+            Arc::clone(&sup_stop),
+        ));
 
         Ok(RealCluster {
             senders,
@@ -1667,6 +1874,16 @@ impl RealCluster {
             control,
             ctrl_stop,
             ctrl_join,
+            dead,
+            supervisor,
+            sup_stop,
+            sup_join,
+            results_tx,
+            inflight: FxHashMap::default(),
+            retries: registry.counter("hydra_submit_retries_total"),
+            redispatches: registry.counter("hydra_redispatches_total"),
+            duplicates: registry.counter("hydra_duplicate_results_total"),
+            dead_letters: registry.counter("hydra_dead_letters_total"),
             submitted: registry.counter("hydra_requests_total"),
             rejected: registry.counter("hydra_requests_rejected_total"),
             registry,
@@ -1734,8 +1951,12 @@ impl RealCluster {
             }
             None => (self.masks.clone(), vec![false; self.masks.len()]),
         };
-        let candidates: Vec<usize> =
-            (0..masks.len()).filter(|&i| masks[i].serves(first)).collect();
+        // dead instances (supervisor-flagged) never receive new work;
+        // `pick_peer_affinity` falls back to draining peers when no one
+        // else serves the stage, so the dead must be excluded outright
+        let candidates: Vec<usize> = (0..masks.len())
+            .filter(|&i| masks[i].serves(first) && !self.dead[i].load(Ordering::Relaxed))
+            .collect();
         // cache affinity from the content directory: score every candidate
         // by the tokens of this request's content its cache actually
         // holds (image-embedding blocks + leading KV-prefix blocks) — the
@@ -1797,33 +2018,159 @@ impl RealCluster {
             let next = if rode_affinity && streak < AFFINITY_STREAK { streak + 1 } else { 0 };
             self.affinity_streak.insert(k, next);
         }
-        if self.senders[target]
-            .send(Msg::Submit(Box::new(PreparedRequest { spec, tokens, pixels, sampling })))
-            .is_err()
-        {
-            self.rejected.inc();
-            anyhow::bail!("instance {target} is down");
+        // bounded-retry dispatch: a closed mailbox means the worker is
+        // gone — mark it dead (so routing and the supervisor agree), back
+        // off, and retry on a surviving candidate instead of rejecting
+        let prepared = PreparedRequest { spec, tokens, pixels, sampling, epoch: 0 };
+        let mut target = target;
+        let mut attempt = 0usize;
+        loop {
+            if self.senders[target].send(Msg::Submit(Box::new(prepared.clone()))).is_ok() {
+                break;
+            }
+            self.dead[target].store(true, Ordering::Relaxed);
+            attempt += 1;
+            if attempt >= self.supervisor.retry.max_attempts {
+                self.rejected.inc();
+                anyhow::bail!("instance {target} is down (gave up after {attempt} attempts)");
+            }
+            self.retries.inc();
+            std::thread::sleep(Duration::from_millis(
+                self.supervisor.retry.delay_ms(attempt - 1),
+            ));
+            let live: Vec<usize> = candidates
+                .iter()
+                .copied()
+                .filter(|&i| !self.dead[i].load(Ordering::Relaxed))
+                .collect();
+            match pick_peer(&mut self.router, &live, &draining) {
+                Some(t) => target = t,
+                None => {
+                    self.rejected.inc();
+                    anyhow::bail!("no live instance serves {first:?}");
+                }
+            }
+        }
+        // track the dispatch for re-dispatch/dead-letter on target death
+        // (collect-mode only: API mode takes the receiver and relies on
+        // the instance-side dead-letter path)
+        if self.results_rx.is_some() {
+            self.inflight
+                .insert(id.0, Inflight { prepared, target, epoch: 0, dead_lettered: false });
         }
         Ok(id)
     }
 
-    /// Collect `n` results (blocking, with an overall timeout). Panics if
-    /// the results receiver was taken (API-server mode).
-    pub fn collect(&self, n: usize, timeout: Duration) -> Vec<ServeResult> {
-        let rx = self.results_rx.as_ref().expect("results receiver taken");
+    /// Move work stranded on dead instances: each in-flight request whose
+    /// target the supervisor marked dead is re-dispatched (bumped epoch)
+    /// to a live instance serving its first stage, or dead-lettered with
+    /// a structured error when none exists / the retry budget is spent.
+    /// Duplicate finishes from a merely-stalled "dead" instance are
+    /// handled by `collect`'s first-result-wins accounting.
+    fn redispatch_dead(&mut self) {
+        let n = self.senders.len();
+        let dead_now: Vec<bool> =
+            (0..n).map(|i| self.dead[i].load(Ordering::Relaxed)).collect();
+        if !dead_now.iter().any(|&d| d) {
+            return;
+        }
+        let ids: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, f)| !f.dead_lettered && dead_now[f.target])
+            .map(|(id, _)| *id)
+            .collect();
+        if ids.is_empty() {
+            return;
+        }
+        let (masks, draining) = match &self.control {
+            Some(c) => {
+                let s = c.lock().unwrap();
+                (s.masks.clone(), s.draining.clone())
+            }
+            None => (self.masks.clone(), vec![false; n]),
+        };
+        for id in ids {
+            let Some(mut f) = self.inflight.remove(&id) else { continue };
+            let first = f.prepared.spec.first_stage();
+            let from = f.target;
+            f.epoch += 1;
+            f.prepared.epoch = f.epoch;
+            let live: Vec<usize> = (0..n)
+                .filter(|&i| masks[i].serves(first) && !dead_now[i])
+                .collect();
+            let mut sent = false;
+            if (f.epoch as usize) <= self.supervisor.retry.max_attempts {
+                if let Some(t) = pick_peer(&mut self.router, &live, &draining) {
+                    if self.senders[t].send(Msg::Submit(Box::new(f.prepared.clone()))).is_ok()
+                    {
+                        f.target = t;
+                        self.redispatches.inc();
+                        sent = true;
+                    }
+                }
+            }
+            if !sent {
+                f.dead_lettered = true;
+                self.dead_letters.inc();
+                let _ = self.results_tx.send(ServeResult {
+                    id: RequestId(id),
+                    tokens: Vec::new(),
+                    text: String::new(),
+                    lifecycle: Lifecycle::new(f.prepared.spec.arrival),
+                    error: Some(format!(
+                        "instance {from} died; no live replacement serves {first:?}"
+                    )),
+                });
+            }
+            self.inflight.insert(id, f);
+        }
+    }
+
+    /// Collect `n` results (blocking, with an overall timeout). On
+    /// timeout the results that did arrive come back inside
+    /// [`CollectError::Timeout`] instead of being dropped (and instead of
+    /// the panic this used to be). Between receives, work stranded on
+    /// instances the supervisor marked dead is re-dispatched; duplicate
+    /// finishes from superseded dispatches are dropped (exactly-once per
+    /// request id).
+    pub fn collect(
+        &mut self,
+        n: usize,
+        timeout: Duration,
+    ) -> std::result::Result<Vec<ServeResult>, CollectError> {
+        if self.results_rx.is_none() {
+            return Err(CollectError::ReceiverTaken);
+        }
         let deadline = Instant::now() + timeout;
         let mut out = Vec::with_capacity(n);
         while out.len() < n {
+            self.redispatch_dead();
             let now = Instant::now();
             if now >= deadline {
-                break;
+                return Err(CollectError::Timeout { partial: out, expected: n });
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => out.push(r),
-                Err(_) => break,
+            // short receive slices so redispatch keeps running while idle
+            let step = (deadline - now).min(Duration::from_millis(50));
+            let rx = self.results_rx.as_ref().expect("checked above");
+            match rx.recv_timeout(step) {
+                Ok(r) => {
+                    if self.inflight.remove(&r.id.0).is_some() {
+                        out.push(r);
+                    } else {
+                        // late duplicate from a superseded dispatch epoch
+                        // (or a merely-stalled instance finishing a
+                        // request that was already dead-lettered)
+                        self.duplicates.inc();
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(CollectError::Timeout { partial: out, expected: n })
+                }
             }
         }
-        out
+        Ok(out)
     }
 
     /// Move the results receiver out (for a dispatcher thread, e.g. the
@@ -1850,6 +2197,7 @@ impl RealCluster {
                     ("idx", Json::num(i as f64)),
                     ("stages", Json::str(m.label())),
                     ("draining", Json::Bool(*d)),
+                    ("dead", Json::Bool(self.dead[i].load(Ordering::Relaxed))),
                 ])
             })
             .collect();
@@ -1931,8 +2279,14 @@ impl RealCluster {
         chrome_trace_json(&spans)
     }
 
-    /// Graceful shutdown: stop instances, the controller, then the device.
+    /// Graceful shutdown: stop the supervisor (instances going away on
+    /// purpose must not be scored as deaths), then instances, the
+    /// controller, and the device.
     pub fn shutdown(mut self) {
+        self.sup_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.sup_join.take() {
+            let _ = j.join();
+        }
         for tx in &self.senders {
             let _ = tx.send(Msg::Shutdown);
         }
@@ -1958,6 +2312,7 @@ fn spawn_controller_thread(
     rx: Receiver<ControlEvent>,
     shared: Arc<Mutex<ControlShared>>,
     senders: Vec<Sender<Msg>>,
+    dead: Vec<Arc<AtomicBool>>,
     epoch: Instant,
     stop: Arc<AtomicBool>,
 ) -> JoinHandle<()> {
@@ -2033,11 +2388,21 @@ fn spawn_controller_thread(
                     let s = shared.lock().unwrap();
                     (s.masks.clone(), s.draining.clone())
                 };
+                // supervisor-flagged dead instances are unavailable
+                // exactly like draining ones: their backlog still counts
+                // as demand, their capacity does not, and the policy
+                // neither picks them as donor nor counts them as stage
+                // coverage — the layout re-plans around the hole
+                let unavailable: Vec<bool> = (0..n)
+                    .map(|i| draining[i] || dead[i].load(Ordering::Relaxed))
+                    .collect();
                 let insts: Vec<InstanceSample> = (0..n)
                     .map(|i| {
-                        latest[i]
+                        let mut s = latest[i]
                             .clone()
-                            .unwrap_or_else(|| InstanceSample::idle(masks[i], draining[i]))
+                            .unwrap_or_else(|| InstanceSample::idle(masks[i], draining[i]));
+                        s.draining = unavailable[i];
+                        s
                     })
                     .collect();
                 // windowed latency tails from finished requests (tee'd via
@@ -2058,7 +2423,7 @@ fn spawn_controller_thread(
                     tpot_p90: w.tpot_p90(),
                 });
                 let Some(load) = est.snapshot() else { continue };
-                if let Some(d) = pol.decide(now, &load, &masks, &draining) {
+                if let Some(d) = pol.decide(now, &load, &masks, &unavailable) {
                     if tracker.begin(now, d.instance, d.to) {
                         shared.lock().unwrap().draining[d.instance] = true;
                         let _ = senders[d.instance].send(Msg::Reconfigure(d.to));
@@ -2068,4 +2433,121 @@ fn spawn_controller_thread(
             }
         })
         .expect("spawn controller")
+}
+
+/// The supervisor thread (PR 9): scans per-instance heartbeat stamps
+/// every `heartbeat_interval` and flips the shared death flags — an
+/// instance silent for longer than `dead_after` is marked dead (its
+/// `hydra_instance_up` gauge drops to 0 and `hydra_instance_deaths_total`
+/// counts it); a flagged instance that beats again is resurrected (it was
+/// stalled, not gone — the epoch/dedup machinery makes the false positive
+/// safe). Routing and `collect`-side re-dispatch consume the flags.
+fn spawn_supervisor_thread(
+    cfg: SupervisorConfig,
+    epoch: Instant,
+    heartbeats: Vec<Arc<AtomicU64>>,
+    dead: Vec<Arc<AtomicBool>>,
+    up: Vec<Arc<Gauge>>,
+    deaths: Arc<Counter>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("hydra-supervisor".into())
+        .spawn(move || {
+            let deadline_ms = cfg.dead_after_ms();
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let now_ms = epoch.elapsed().as_millis() as u64;
+                for i in 0..heartbeats.len() {
+                    let hb = heartbeats[i].load(Ordering::Relaxed);
+                    let alive = now_ms.saturating_sub(hb) <= deadline_ms;
+                    let was_dead = dead[i].load(Ordering::Relaxed);
+                    if !alive && !was_dead {
+                        dead[i].store(true, Ordering::Relaxed);
+                        up[i].set(0.0);
+                        deaths.inc();
+                        crate::util::logging::log(
+                            crate::util::logging::Level::Warn,
+                            "instance",
+                            format_args!(
+                                "supervisor: instance {i} silent for >{:.1}s, marked dead",
+                                cfg.dead_after
+                            ),
+                        );
+                    } else if alive && was_dead {
+                        dead[i].store(false, Ordering::Relaxed);
+                        up[i].set(1.0);
+                        crate::util::logging::log(
+                            crate::util::logging::Level::Info,
+                            "instance",
+                            format_args!("supervisor: instance {i} heartbeat resumed"),
+                        );
+                    }
+                }
+                std::thread::sleep(cfg.scan_period());
+            }
+        })
+        .expect("spawn supervisor")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(id: u64) -> ServeResult {
+        ServeResult {
+            id: RequestId(id),
+            tokens: vec![1, 2],
+            text: "ok".into(),
+            lifecycle: Lifecycle::new(0.0),
+            error: None,
+        }
+    }
+
+    #[test]
+    fn collect_times_out_with_partial_results_instead_of_panicking() {
+        let (tx, rx) = channel();
+        tx.send(dummy(0)).unwrap();
+        tx.send(dummy(1)).unwrap();
+        let err = collect_results(&rx, 3, Duration::from_millis(30)).unwrap_err();
+        match err {
+            CollectError::Timeout { partial, expected } => {
+                assert_eq!(expected, 3);
+                assert_eq!(partial.len(), 2);
+                assert_eq!(partial[0].id, RequestId(0));
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn collect_returns_ok_when_everything_arrives() {
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(dummy(i)).unwrap();
+        }
+        let out = collect_results(&rx, 3, Duration::from_secs(5)).unwrap();
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn sender_hangup_yields_partial_timeout_not_a_panic() {
+        let (tx, rx) = channel();
+        tx.send(dummy(7)).unwrap();
+        drop(tx);
+        let err = collect_results(&rx, 2, Duration::from_secs(5)).unwrap_err();
+        match err {
+            CollectError::Timeout { partial, expected: 2 } => assert_eq!(partial.len(), 1),
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn collect_error_display_is_structured() {
+        let e = CollectError::Timeout { partial: vec![dummy(0)], expected: 4 };
+        assert_eq!(e.to_string(), "collect timed out with 1/4 results");
+        assert!(CollectError::ReceiverTaken.to_string().contains("taken"));
+    }
 }

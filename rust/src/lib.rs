@@ -100,6 +100,7 @@ pub mod vision;
 pub mod cache;
 pub mod costmodel;
 pub mod scheduler;
+pub mod faults;
 pub mod workload;
 pub mod obs;
 pub mod metrics;

@@ -31,7 +31,7 @@ use hydrainfer::util::cli::Args;
 use hydrainfer::workload::{Dataset, PoissonGenerator, Trace};
 
 fn main() {
-    let args = Args::from_env(&["help", "verbose", "goodput", "elastic"]);
+    let args = Args::from_env(&["help", "verbose", "goodput", "elastic", "chaos"]);
     if args.flag("verbose") {
         hydrainfer::util::logging::set_level(hydrainfer::util::logging::Level::Debug);
     }
@@ -65,6 +65,9 @@ fn print_usage() {
          \x20         [--trace-out trace.json]  (Perfetto flight-recorder dump)\n\
          \x20         [--shards 4]  (parallel event shards; digest-invariant)\n\
          \x20         [--window 0.002]  (cross-shard merge window, seconds)\n\
+         \x20         [--chaos]  (seeded per-role crash/recover fault plan)\n\
+         \x20         [--chaos-seed 7] [--chaos-down 1.0]  (downtime seconds;\n\
+         \x20          <=0 = crashed instances stay dead)\n\
          plan      --model llava-next-7b --dataset textcaps --gpus 8\n\
          budgets   --model llava-1.5-7b --tpot 0.04\n\
          workload  --model llava-1.5-7b --dataset mme --rate 4 --n 500\n\
@@ -173,8 +176,31 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let gen = PoissonGenerator::new(dataset.clone(), rate, seed);
-    let reqs = gen.generate(&model, n);
+    // --chaos: lace the trace with a seeded per-stage-role crash/recover
+    // plan placed inside the arrival span (survivors per stage are
+    // guaranteed, so retries keep lost_requests at 0). One seed pins the
+    // whole scenario — trace and fault plan together.
+    let reqs = if args.flag("chaos") {
+        let chaos_seed = args.usize_or("chaos-seed", seed as usize)? as u64;
+        let down = args.f64_or("chaos-down", 1.0)?;
+        let (reqs, plan) = hydrainfer::workload::fault_laced_trace(
+            &model,
+            dataset.clone(),
+            rate,
+            n,
+            chaos_seed,
+            &cluster.instance_masks(),
+            down,
+        );
+        println!(
+            "chaos: {} fault events (seed {chaos_seed}, down {down}s)",
+            plan.events.len()
+        );
+        cfg.faults = plan;
+        reqs
+    } else {
+        PoissonGenerator::new(dataset.clone(), rate, seed).generate(&model, n)
+    };
     let res = simulate(&cfg, &reqs);
     let m = &res.metrics;
     println!(
@@ -194,6 +220,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         res.dropped_requests,
         res.reconfigs
     );
+    // machine-parseable: the chaos-smoke CI job asserts digest equality
+    // across shard counts and zero lost requests from these two lines
+    println!("  digest {:016x}", res.digest());
+    if res.fault_events > 0 {
+        println!(
+            "  faults: events={} crashes={} recovered={} lost={}",
+            res.fault_events, res.crashes, res.recovered_requests, res.lost_requests
+        );
+    }
     let d = res.cache.directory;
     if d.publishes > 0 || d.fetches > 0 {
         println!(

@@ -83,6 +83,16 @@ impl Router {
             .map(|(i, _)| i)
     }
 
+    /// Build a gated load vector: eligible slots get load `0.0`,
+    /// ineligible ones `f64::INFINITY` (which [`Router::pick`] never
+    /// selects under any policy). One gating idiom shared by the drain
+    /// path (mid-reconfiguration instances) and the fault path
+    /// (supervisor-flagged dead instances) — ineligibility is always
+    /// expressed as a non-finite load, never as a separate code path.
+    pub fn gated_loads(n: usize, eligible: impl Fn(usize) -> bool) -> Vec<f64> {
+        (0..n).map(|i| if eligible(i) { 0.0 } else { f64::INFINITY }).collect()
+    }
+
     /// Load ceiling used by [`Router::pick_affinity`]: an affinity
     /// candidate only wins while its load stays within this band of the
     /// least-loaded eligible candidate (a cached copy is worth a
@@ -217,6 +227,20 @@ mod tests {
         );
         // ...but a moderate queue is worth the cache hit
         assert_eq!(r.pick_affinity(&[3.0, 0.0, 0.5], &[576.0, 0.0, 0.0]), Some(0));
+    }
+
+    #[test]
+    fn gated_loads_mark_ineligible_slots_non_finite() {
+        let dead = [false, true, false, true];
+        let loads = Router::gated_loads(4, |i| !dead[i]);
+        assert_eq!(loads.len(), 4);
+        assert!(loads[0].is_finite() && loads[2].is_finite());
+        assert!(!loads[1].is_finite() && !loads[3].is_finite());
+        let mut r = Router::new(RoutePolicy::RoundRobin, 0);
+        for _ in 0..8 {
+            let p = r.pick(&loads).unwrap();
+            assert!(p == 0 || p == 2, "dead slots never picked");
+        }
     }
 
     #[test]

@@ -330,6 +330,23 @@ impl Queues {
         }
         Some(r)
     }
+
+    /// Take every queued request, leaving the queues empty: waiting
+    /// requests first in global arrival-sequence order, then running
+    /// requests in admission order. Crash salvage (fault injection) uses
+    /// this to re-route a dead instance's backlog — the canonical order
+    /// here is what keeps salvage routing shard-count-independent.
+    pub fn drain_all(&mut self) -> Vec<ReqState> {
+        let mut waiting: Vec<(u64, ReqState)> = Vec::new();
+        for q in &mut self.waiting {
+            waiting.extend(q.drain(..));
+        }
+        waiting.sort_by_key(|(seq, _)| *seq);
+        let mut out: Vec<ReqState> = waiting.into_iter().map(|(_, r)| r).collect();
+        self.running_pos.clear();
+        out.append(&mut self.running);
+        out
+    }
 }
 
 /// Admission callback: may the instance admit this request now? (cache
@@ -379,6 +396,10 @@ impl Default for StageMask {
 
 impl StageMask {
     pub const EPD: StageMask = StageMask { encode: true, prefill: true, decode: true };
+    /// Serves nothing — the mask of a crashed instance. `serves` is false
+    /// for every real stage, so routing/migration candidate filters skip
+    /// it without any extra "is it alive" plumbing.
+    pub const NONE: StageMask = StageMask { encode: false, prefill: false, decode: false };
     pub const E: StageMask = StageMask { encode: true, prefill: false, decode: false };
     pub const P: StageMask = StageMask { encode: false, prefill: true, decode: false };
     pub const D: StageMask = StageMask { encode: false, prefill: false, decode: true };
@@ -1164,6 +1185,31 @@ mod tests {
         );
         assert_eq!(offered, vec![1, 2, 3, 4], "arrival order, not stage order");
         assert!(q.waiting_is_empty());
+    }
+
+    #[test]
+    fn drain_all_returns_waiting_in_seq_order_then_running() {
+        let mut q = Queues::default();
+        q.push_waiting(ReqState::new(spec(1, 1, 8, 2))); // encode
+        q.push_waiting(ReqState::new(spec(2, 0, 8, 2))); // prefill
+        q.push_waiting(ReqState::new(spec(3, 1, 8, 2))); // encode
+        q.push_running(ReqState::new(spec(4, 0, 8, 2)));
+        q.push_running(ReqState::new(spec(5, 0, 8, 2)));
+        let drained: Vec<u64> = q.drain_all().iter().map(|r| r.spec.id.0).collect();
+        assert_eq!(drained, vec![1, 2, 3, 4, 5], "arrival order, then admission order");
+        assert_eq!(q.total(), 0);
+        assert!(q.find_running(RequestId(4)).is_none(), "running index cleared");
+        // the emptied queues stay usable
+        q.push_running(ReqState::new(spec(6, 0, 8, 2)));
+        assert_eq!(q.remove_running(RequestId(6)).unwrap().spec.id.0, 6);
+    }
+
+    #[test]
+    fn none_mask_serves_no_real_stage() {
+        assert!(!StageMask::NONE.serves(Stage::Encode));
+        assert!(!StageMask::NONE.serves(Stage::Prefill));
+        assert!(!StageMask::NONE.serves(Stage::Decode));
+        assert_eq!(StageMask::NONE.label(), "");
     }
 
     #[test]

@@ -59,6 +59,7 @@ use crate::controller::{
     StageLoadEstimator, StageRates,
 };
 use crate::core::{Lifecycle, Phase, RequestId, RequestSpec, Stage};
+use crate::faults::FaultKind;
 use crate::costmodel::{
     encode_cost, exec_time, iteration_cost, parallel_time, prefill_resume_cost, sequential_time,
     Cost,
@@ -100,6 +101,12 @@ enum EvKind {
     SrcRelease { req: RequestId },
     /// Barrier-injected nudge: admit pending pulls / start a batch.
     Wake,
+    /// A request salvaged from a crashed instance re-enters here (fault
+    /// plan only): attach cache hits on this instance — resuming at the
+    /// longest locally cached prefix — consider a fetch-over-recompute
+    /// from surviving holders, then dispatch into the queues exactly like
+    /// a fresh delivery.
+    Redeliver(Box<ReqState>),
 }
 
 #[derive(Debug)]
@@ -108,6 +115,12 @@ struct Ev {
     seq: u64,
     /// Global id of the instance this event belongs to.
     inst: u32,
+    /// Instance incarnation this event was scheduled against. A crash
+    /// bumps the instance's epoch (recovery does not), so events minted
+    /// before the crash — its in-flight `BatchDone`, parked `FetchDone`s —
+    /// are dropped by the pop-time guard instead of acting on the reborn
+    /// instance. Not part of the heap order: `(t, seq)` stays the key.
+    epoch: u32,
     kind: EvKind,
 }
 
@@ -234,6 +247,10 @@ struct DirPair {
 struct SimInstance {
     id: usize,
     mask: StageMask,
+    /// Incarnation counter: bumped by a fault-plan crash so stale heap
+    /// events (stamped with the old epoch at push) are discarded. Stays 0
+    /// for the whole run when no fault plan is active.
+    epoch: u32,
     sched: Box<dyn Scheduler>,
     queues: Queues,
     kv: PagedCache,
@@ -457,6 +474,20 @@ pub struct SimResult {
     pub trace: Vec<crate::obs::trace::Span>,
     /// Spans overwritten in the rings (0 = the whole run fit).
     pub trace_dropped: u64,
+    /// Fault-plan events actually applied (0 with an empty plan — and the
+    /// fault counters below are then excluded from [`SimResult::digest`],
+    /// so pinned no-fault digests never move).
+    pub fault_events: usize,
+    /// Instance crashes applied from the fault plan.
+    pub crashes: usize,
+    /// Requests salvaged off a crashed instance and successfully re-routed
+    /// to a surviving instance (including parked requests retried after a
+    /// recovery).
+    pub recovered_requests: usize,
+    /// Salvaged requests that never found a surviving instance for their
+    /// stage: parked forever (retries on) or abandoned outright (retries
+    /// off). Their lifecycles merge into the metrics as unfinished.
+    pub lost_requests: usize,
 }
 
 impl SimResult {
@@ -508,6 +539,19 @@ impl SimResult {
             self.cache.directory.redirected_fetches as u64,
         ] {
             h = mix(h, v);
+        }
+        // fault counters fold in only when the plan actually fired: an
+        // empty (or never-due) plan must reproduce the pinned golden
+        // digests bit-for-bit
+        if self.fault_events > 0 {
+            for v in [
+                self.fault_events as u64,
+                self.crashes as u64,
+                self.recovered_requests as u64,
+                self.lost_requests as u64,
+            ] {
+                h = mix(h, v);
+            }
         }
         h
     }
@@ -592,7 +636,8 @@ impl Shard {
     /// barrier, so per-shard seq order is globally consistent).
     fn push(&mut self, t: f64, inst: u32, kind: EvKind) {
         self.seq += 1;
-        self.heap.push(Ev { t, seq: self.seq, inst, kind });
+        let epoch = self.instances[inst as usize - self.lo].epoch;
+        self.heap.push(Ev { t, seq: self.seq, inst, epoch, kind });
     }
 
     /// Emit a boundary message for barrier delivery.
@@ -637,6 +682,58 @@ struct Control {
     pending: Vec<f64>,
     touched: Vec<usize>,
     rs: RouteScratch,
+    /// Fault-plan machinery (None with an empty plan: the engine then
+    /// behaves exactly as if the fault subsystem did not exist).
+    faults: Option<FaultState>,
+}
+
+/// Barrier-owned fault-plan state: the sorted schedule cursor, per-
+/// instance liveness, and the salvage/park accounting. Like everything
+/// else in [`Control`], only the single-threaded barrier phase touches it
+/// — fault application is cluster-global work, so digests stay
+/// partition-free with faults on.
+struct FaultState {
+    /// The plan in canonical order ([`FaultPlan::sorted_events`]).
+    events: Vec<crate::faults::FaultEvent>,
+    /// Cursor: `events[..idx]` have been applied.
+    idx: usize,
+    /// Park salvaged requests with no live candidate and retry them on
+    /// the next recovery, instead of abandoning them immediately.
+    retry: bool,
+    /// Which instances are currently crashed.
+    failed: Vec<bool>,
+    /// The role each crashed instance held at crash time (restored — with
+    /// fresh, empty caches — on recovery).
+    saved_masks: Vec<StageMask>,
+    /// Salvaged requests waiting for an instance serving their stage to
+    /// come back (retry mode only).
+    parked: Vec<Salvage>,
+    /// Lifecycles of abandoned requests (retry off), merged into the
+    /// metrics as unfinished at end of run.
+    dead: Vec<(u64, Lifecycle)>,
+    lost: usize,
+    recovered: usize,
+    crashes: usize,
+    applied: usize,
+}
+
+/// One request rescued off a crashed instance, with the per-request
+/// ownership that travels with it (its lifecycle and memoized chains).
+struct Salvage {
+    req: ReqState,
+    lc: Lifecycle,
+    ch: Option<Arc<HashChains>>,
+}
+
+/// Frozen per-window fault factors shard workers read (the mutable twin
+/// lives in [`FaultState`]-driven barrier updates): per-instance batch
+/// slowdown and the cluster-wide link degradation multiplier. `None` with
+/// an empty plan — the duration-scaling branches then cost nothing.
+struct FaultView {
+    /// Batch-duration multiplier per instance (1.0 = healthy).
+    slow: Vec<f64>,
+    /// Transfer/fetch-duration multiplier (1.0 = healthy).
+    link: f64,
 }
 
 /// The frozen read-only cluster view shard workers see mid-window:
@@ -650,6 +747,9 @@ struct Ctx {
     /// breaks holder ties by load; empty otherwise).
     loads: Vec<f64>,
     dirs: Option<DirPair>,
+    /// Straggler / link-degradation factors (fault plan only; barrier-
+    /// mutated, so every shard count scales the same durations).
+    faults: Option<FaultView>,
 }
 
 /// Borrow an instance by global id across the shard slice.
@@ -756,6 +856,7 @@ fn build_instances(cfg: &SimConfig, masks: &[StageMask], track_evictions: bool) 
             SimInstance {
                 id,
                 mask,
+                epoch: 0,
                 sched: cfg.policy.make(mask),
                 queues: Queues::default(),
                 kv,
@@ -874,9 +975,25 @@ pub fn simulate(cfg: &SimConfig, requests: &[RequestSpec]) -> SimResult {
         pending: vec![0.0; n],
         touched: Vec::new(),
         rs: RouteScratch::default(),
+        faults: (!cfg.faults.is_empty()).then(|| FaultState {
+            events: cfg.faults.sorted_events(),
+            idx: 0,
+            retry: cfg.faults.retry,
+            failed: vec![false; n],
+            saved_masks: vec![StageMask::NONE; n],
+            parked: Vec::new(),
+            dead: Vec::new(),
+            lost: 0,
+            recovered: 0,
+            crashes: 0,
+            applied: 0,
+        }),
     };
 
-    let mut ctx = Ctx { t1: 0.0, horizon: cfg.horizon, loads: Vec::new(), dirs };
+    let faults_view =
+        (!cfg.faults.is_empty()).then(|| FaultView { slow: vec![1.0; n], link: 1.0 });
+    let mut ctx =
+        Ctx { t1: 0.0, horizon: cfg.horizon, loads: Vec::new(), dirs, faults: faults_view };
 
     // invlint: allow(no-shard1-fastpath) -- execution-strategy dispatch, not a
     // protocol fork: this arm drives the identical advance()/run_window() windowed
@@ -911,7 +1028,7 @@ fn run_threaded(
         shards.drain(..).map(|s| Mutex::new(Some(s))).collect();
     let ctx_lock = RwLock::new(std::mem::replace(
         ctx,
-        Ctx { t1: 0.0, horizon: cfg.horizon, loads: Vec::new(), dirs: None },
+        Ctx { t1: 0.0, horizon: cfg.horizon, loads: Vec::new(), dirs: None, faults: None },
     ));
     let start = Barrier::new(n_shards + 1);
     let end = Barrier::new(n_shards + 1);
@@ -976,11 +1093,12 @@ fn run_threaded(
 /// Merge shard + barrier state into the final [`SimResult`].
 fn assemble_result(
     shards: Vec<Shard>,
-    ctl: Control,
+    mut ctl: Control,
     ctx: Ctx,
     requests: &[RequestSpec],
 ) -> SimResult {
     let _ = requests;
+    let fs = ctl.faults.take();
     let Control {
         tracker,
         migrations,
@@ -992,6 +1110,24 @@ fn assemble_result(
     } = ctl;
     let mut metrics = RunMetrics::default();
     let mut unfinished = 0;
+    let (mut fault_events, mut crashes, mut recovered, mut lost) = (0usize, 0usize, 0usize, 0usize);
+    if let Some(fs) = fs {
+        fault_events = fs.applied;
+        crashes = fs.crashes;
+        recovered = fs.recovered;
+        // still-parked requests never found a survivor: they are lost,
+        // and their lifecycles merge as unfinished (same for requests
+        // abandoned outright with retries off)
+        lost = fs.lost + fs.parked.len();
+        for s in fs.parked {
+            unfinished += 1;
+            metrics.insert(s.req.spec.id, s.lc);
+        }
+        for (id, lc) in fs.dead {
+            unfinished += 1;
+            metrics.insert(RequestId(id), lc);
+        }
+    }
     let mut total_events = events;
     let mut batches = 0;
     let mut dir_report = DirectoryReport::default();
@@ -1066,6 +1202,10 @@ fn assemble_result(
         cache: report,
         trace: spans,
         trace_dropped,
+        fault_events,
+        crashes,
+        recovered_requests: recovered,
+        lost_requests: lost,
     }
 }
 
@@ -1085,11 +1225,16 @@ fn advance(
     requests: &[RequestSpec],
 ) -> bool {
     barrier_phase(shards, ctl, &mut ctx.dirs, *w, cfg);
+    // due fault events apply here — after the message drain (so salvage
+    // sees a settled directory) and before controller ticks (so the
+    // controller observes the post-crash cluster)
+    apply_faults(shards, ctl, ctx, *w, cfg);
     while ctl.next_tick <= *w {
         controller_tick(shards, ctl, &mut ctx.dirs, *w, cfg, requests);
     }
 
-    // earliest pending work anywhere: shard heaps, arrivals, next tick
+    // earliest pending work anywhere: shard heaps, arrivals, next tick,
+    // next scheduled fault
     let mut m = ctl.next_tick;
     for s in shards.iter() {
         if let Some(ev) = s.heap.peek() {
@@ -1098,6 +1243,11 @@ fn advance(
     }
     if ctl.next_arrival < ctl.order.len() {
         m = m.min(requests[ctl.order[ctl.next_arrival] as usize].arrival);
+    }
+    if let Some(fs) = ctl.faults.as_ref() {
+        if fs.idx < fs.events.len() {
+            m = m.min(fs.events[fs.idx].t);
+        }
     }
     if !(m.is_finite() && m <= cfg.horizon) {
         return false;
@@ -1515,11 +1665,14 @@ fn retry_stranded(
 
 /// One controller-tick observation: per-instance backlogs by next stage
 /// (queues + in-flight pulls) plus the windowed latency tails, gathered
-/// in global instance order across shards.
+/// in global instance order across shards. Crashed instances sample as
+/// unavailable (same as draining): their capacity vanishes from the
+/// estimate, which is what lets the controller see the hole.
 fn cluster_sample_sharded(
     shards: &[Shard],
     inst_shard: &[usize],
     tracker: &DrainTracker,
+    failed: Option<&[bool]>,
     now: f64,
     w: &crate::metrics::WindowStats,
 ) -> ClusterSample {
@@ -1531,7 +1684,8 @@ fn cluster_sample_sharded(
     };
     for gid in 0..inst_shard.len() {
         let inst = inst_ref(shards, inst_shard, gid);
-        let mut s = InstanceSample::idle(inst.mask, tracker.is_draining(inst.id));
+        let down = tracker.is_draining(inst.id) || failed.is_some_and(|f| f[gid]);
+        let mut s = InstanceSample::idle(inst.mask, down);
         s.batch_items = inst.current.as_ref().map_or(0, |(b, _)| b.items.len());
         // skip migrating requests at the source: the in-flight copy in the
         // target's inbox/incoming already carries their backlog
@@ -1569,7 +1723,8 @@ fn controller_tick(
     // (1) a completed flip elsewhere may have orphaned a hand-off
     // attempt: re-offer stranded requests first
     retry_stranded(shards, ctl, dirs, now, w, cfg);
-    let Control { controller, tracker, inst_shard, tracer, report, next_tick, .. } = &mut *ctl;
+    let Control { controller, tracker, inst_shard, tracer, report, next_tick, faults, .. } =
+        &mut *ctl;
     let Some((cc, est, pol)) = controller.as_mut() else {
         *next_tick = f64::INFINITY;
         return;
@@ -1583,17 +1738,34 @@ fn controller_tick(
         refs.extend(s.lifecycles.iter());
     }
     refs.sort_unstable_by_key(|(id, _)| **id);
+    let failed = faults.as_ref().map(|f| f.failed.as_slice());
     let wstats = crate::metrics::window_stats(refs.iter().map(|(_, lc)| *lc), now - cc.window);
-    est.observe(cluster_sample_sharded(shards, inst_shard, tracker, now, &wstats));
+    est.observe(cluster_sample_sharded(shards, inst_shard, tracker, failed, now, &wstats));
     drop(refs);
 
-    // (3) decide: at most one new drain per tick
+    // (3) decide: at most one new drain per tick. Crashed instances are
+    // unavailable exactly like draining ones — the estimator stripped
+    // their server credit above, and the policy neither picks them as
+    // donor nor counts them as stage coverage — so the controller
+    // re-plans the surviving roles around the hole (and a crash/recover
+    // pair cannot fight a concurrent drain-and-flip on the same
+    // instance).
     if let Some(load) = est.snapshot() {
         let masks: Vec<StageMask> = (0..inst_shard.len())
             .map(|gid| inst_ref(shards, inst_shard, gid).mask)
             .collect();
-        let draining = tracker.draining_flags();
-        if let Some(d) = pol.decide(now, &load, &masks, &draining) {
+        let mut unavailable = tracker.draining_flags();
+        if let Some(f) = failed {
+            for (u, &down) in unavailable.iter_mut().zip(f) {
+                *u |= down;
+            }
+        }
+        if let Some(d) = pol.decide(now, &load, &masks, &unavailable) {
+            debug_assert!(
+                !failed.is_some_and(|f| f[d.instance]),
+                "policy picked crashed donor inst{} despite the unavailable flag",
+                d.instance
+            );
             tracker.begin(now, d.instance, d.to);
         }
     }
@@ -1665,6 +1837,359 @@ fn controller_tick(
     };
 }
 
+// ------------------------------------------------------------- fault plane
+
+/// Does this instance hold *any* copy of the request — live (queued or
+/// running), snapshotted (inbound pull, admitted transfer, parked fetch),
+/// or just its cache blocks (a migration source whose release has not
+/// landed yet)? Salvage routing must never hand such an instance a second
+/// copy: the queues' id index and the caches' per-request tables both
+/// assume one copy per instance.
+fn holds_copy(inst: &SimInstance, id: RequestId) -> bool {
+    inst.queues.running().iter().any(|r| r.spec.id == id)
+        || inst.queues.iter_waiting().any(|r| r.spec.id == id)
+        || inst.inbox.iter().any(|p| p.req.spec.id == id)
+        || inst.incoming.contains_key(&id.0)
+        || inst.fetching.contains_key(&id.0)
+        || inst.kv.has_request(id)
+        || inst.img.has_request(id)
+}
+
+/// Detach a rescued request's per-shard ownership (lifecycle, ready time,
+/// memoized chains) from the shard that owned it and bundle everything
+/// into a [`Salvage`] record for re-routing.
+fn take_salvage(shards: &mut [Shard], shard_idx: usize, req: ReqState, out: &mut Vec<Salvage>) {
+    let id = req.spec.id.0;
+    let lc = shards[shard_idx]
+        .lifecycles
+        .remove(&id)
+        .expect("salvaged request owns a lifecycle in its shard");
+    shards[shard_idx].ready_since.remove(&id);
+    let ch = shards[shard_idx].chains.remove(&id);
+    out.push(Salvage { req, lc, ch });
+}
+
+/// Tear down a crashed instance: bump its epoch (stale heap events die at
+/// pop), void its role, drop its in-flight batch, drain every queue, empty
+/// its caches, and retract all its directory advertisements. Rescuable
+/// requests are collected into `salvages` (live copies and inbound
+/// snapshots) or `pending_inbox` (un-admitted offers, classified later
+/// once every crash of this barrier is marked).
+#[allow(clippy::too_many_arguments)]
+fn crash_instance(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    gid: usize,
+    w: f64,
+    cfg: &SimConfig,
+    salvages: &mut Vec<Salvage>,
+    pending_inbox: &mut Vec<(usize, PendingPull)>,
+) {
+    let s = ctl.inst_shard[gid];
+    let li = gid - shards[s].lo;
+    ctl.tracker.cancel(gid);
+    ctl.tracer.mark(SpanKind::RoleFlip, gid, w, mask_bits(StageMask::NONE));
+    crate::log_trace!("t={w:.6} fault: crash inst{gid}");
+    let inst = &mut shards[s].instances[li];
+    inst.epoch += 1;
+    inst.mask = StageMask::NONE;
+    inst.sched = Box::new(NullSched);
+    // the executing batch is lost; its BatchDone was stamped with the old
+    // epoch and will be discarded at pop
+    inst.current = None;
+    let drained = inst.queues.drain_all();
+    let inbox = std::mem::take(&mut inst.inbox);
+    let mut incoming: Vec<(u64, PendingPull)> = inst.incoming.drain().collect();
+    incoming.sort_unstable_by_key(|(id, _)| *id);
+    let mut fetching: Vec<(u64, PendingFetch)> = inst.fetching.drain().collect();
+    fetching.sort_unstable_by_key(|(id, _)| *id);
+    // bank the dying caches' counters, then drop them: a crashed instance
+    // holds nothing (the NONE-mask capacity is zero blocks either plane)
+    ctl.report.kv_stats.merge(&inst.kv.stats());
+    ctl.report.img_stats.merge(&inst.img.stats());
+    let (kvb, imgb) = cache_blocks(&cfg.model, &cfg.device, StageMask::NONE);
+    inst.kv = PagedCache::new(kvb, KV_BLOCK, 1024);
+    inst.img = PagedCache::new(imgb, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
+    // the dead holder must vanish from the directory before any salvage
+    // routing or fetch re-validation consults it
+    if let Some(d) = dirs.as_mut() {
+        let dead_ads = d.kv.retract_all(gid) + d.img.retract_all(gid);
+        crate::log_trace!("t={w:.6} fault: inst{gid} took {dead_ads} cached advertisements down");
+        inst.kv.set_eviction_tracking(true);
+        inst.img.set_eviction_tracking(true);
+    }
+    for r in drained {
+        if r.migrating {
+            // the pull target owns the live snapshot; only the source
+            // copy dies with this instance
+            continue;
+        }
+        take_salvage(shards, s, r, salvages);
+    }
+    for (_, f) in fetching {
+        take_salvage(shards, s, f.req, salvages);
+    }
+    for (_, p) in incoming {
+        take_salvage(shards, s, p.req, salvages);
+    }
+    for p in inbox {
+        pending_inbox.push((gid, p));
+    }
+}
+
+/// Bring a crashed instance back with the role it held at crash time and
+/// fresh, empty caches (its cached content died with it — surviving
+/// holders re-seed it through the normal publish path).
+fn recover_instance(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    mask: StageMask,
+    gid: usize,
+    w: f64,
+    cfg: &SimConfig,
+) {
+    let s = ctl.inst_shard[gid];
+    let li = gid - shards[s].lo;
+    crate::log_trace!("t={w:.6} fault: recover inst{gid} as {}", mask.label());
+    ctl.tracer.mark(SpanKind::RoleFlip, gid, w, mask_bits(mask));
+    let (kvb, imgb) = cache_blocks(&cfg.model, &cfg.device, mask);
+    let inst = &mut shards[s].instances[li];
+    inst.mask = mask;
+    inst.sched = cfg.policy.make(mask);
+    inst.kv = PagedCache::new(kvb, KV_BLOCK, 1024);
+    inst.img = PagedCache::new(imgb, IMG_BLOCK, 64).with_cost_class(COST_IMAGE);
+    if dirs.is_some() {
+        inst.kv.set_eviction_tracking(true);
+        inst.img.set_eviction_tracking(true);
+    }
+}
+
+/// Route one salvaged request over the post-crash cluster. Local progress
+/// is reset (the crashed instance's compute is gone); pipeline progress is
+/// re-derived at redelivery from whatever surviving caches hold — attach
+/// resumes at the longest locally cached prefix, and fetch-over-recompute
+/// can pull content a surviving holder advertises. Cache affinity steers
+/// the pick toward exactly those holders. Returns the salvage back when no
+/// live instance can take it.
+fn route_salvage(
+    shards: &mut [Shard],
+    ctl: &mut Control,
+    dirs: &mut Option<DirPair>,
+    failed: &[bool],
+    mut s: Salvage,
+    w: f64,
+) -> Result<(), Salvage> {
+    s.req.encoded_images = 0;
+    s.req.cached_images = 0;
+    s.req.prefilled = 0;
+    s.req.cached_prefill = 0;
+    s.req.migrating = false;
+    let id = s.req.spec.id;
+    let stage = s.req.stage();
+    {
+        let Control { rs, inst_shard, .. } = &mut *ctl;
+        rs.candidates.clear();
+        for gid in 0..inst_shard.len() {
+            if failed[gid] {
+                continue;
+            }
+            let inst = inst_ref(shards, inst_shard, gid);
+            if inst.mask.serves(stage) && !holds_copy(inst, id) {
+                rs.candidates.push(gid);
+            }
+        }
+    }
+    let ch = s.ch.clone().unwrap_or_else(|| ctl.no_chains.clone());
+    build_affinity2(shards, ctl, dirs, &ch, true);
+    let Some(dst) = route_pick2(shards, ctl) else { return Err(s) };
+    crate::log_trace!("t={w:.6} salvage req={} -> inst{dst}", id.0);
+    let sdst = ctl.inst_shard[dst];
+    shards[sdst].lifecycles.insert(id.0, s.lc);
+    shards[sdst].ready_since.insert(id.0, w);
+    if let Some(c) = s.ch {
+        shards[sdst].chains.insert(id.0, c);
+    }
+    shards[sdst].push(w, dst as u32, EvKind::Redeliver(Box::new(s.req)));
+    ctl.pending[dst] += 1.0;
+    ctl.touched.push(dst);
+    Ok(())
+}
+
+/// Apply every fault event due at this barrier, in the plan's canonical
+/// order. Two-phase within the barrier: first every due event mutates
+/// liveness/factors (and crashes tear down and *collect* their rescuable
+/// requests), then — with the complete failure picture — orphaned
+/// transfers are swept, deferred inbox offers are classified, and every
+/// salvaged request routes over the surviving cluster. Single-threaded
+/// barrier work, so digests stay bit-identical for any shard count with
+/// faults on.
+fn apply_faults(shards: &mut [Shard], ctl: &mut Control, ctx: &mut Ctx, w: f64, cfg: &SimConfig) {
+    let due = ctl
+        .faults
+        .as_ref()
+        .is_some_and(|fs| fs.idx < fs.events.len() && fs.events[fs.idx].t <= w);
+    if !due {
+        return;
+    }
+    let mut fs = ctl.faults.take().expect("due implies present");
+    let Ctx { dirs, faults: view, .. } = &mut *ctx;
+    let mut salvages: Vec<Salvage> = Vec::new();
+    let mut pending_inbox: Vec<(usize, PendingPull)> = Vec::new();
+    let mut crashed_now: Vec<usize> = Vec::new();
+    let mut recovered_any = false;
+    while fs.idx < fs.events.len() && fs.events[fs.idx].t <= w {
+        let ev = fs.events[fs.idx];
+        fs.idx += 1;
+        fs.applied += 1;
+        match ev.kind {
+            FaultKind::Crash { instance } => {
+                if instance >= fs.failed.len() || fs.failed[instance] {
+                    continue; // out of range / already down: no-op
+                }
+                fs.failed[instance] = true;
+                fs.saved_masks[instance] = inst_ref(shards, &ctl.inst_shard, instance).mask;
+                fs.crashes += 1;
+                crashed_now.push(instance);
+                crash_instance(
+                    shards,
+                    ctl,
+                    dirs,
+                    instance,
+                    w,
+                    cfg,
+                    &mut salvages,
+                    &mut pending_inbox,
+                );
+            }
+            FaultKind::Recover { instance } => {
+                if instance >= fs.failed.len() || !fs.failed[instance] {
+                    continue; // never crashed: no-op
+                }
+                fs.failed[instance] = false;
+                recovered_any = true;
+                recover_instance(shards, ctl, dirs, fs.saved_masks[instance], instance, w, cfg);
+            }
+            FaultKind::LinkDegrade { factor } => {
+                if let Some(v) = view.as_mut() {
+                    v.link = factor.max(1e-6);
+                }
+            }
+            FaultKind::Straggler { instance, factor } => {
+                if let Some(v) = view.as_mut() {
+                    if instance < v.slow.len() {
+                        v.slow[instance] = factor.max(1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    // cross-sweep: work on LIVE instances whose source died this barrier.
+    // The payload those transfers would carry no longer exists, so the
+    // snapshots are salvaged (progress resets at routing).
+    if !crashed_now.is_empty() {
+        for gid in 0..ctl.inst_shard.len() {
+            if fs.failed[gid] {
+                continue;
+            }
+            let s = ctl.inst_shard[gid];
+            let li = gid - shards[s].lo;
+            // un-admitted offers from a dead source
+            let mut i = 0;
+            while i < shards[s].instances[li].inbox.len() {
+                if fs.failed[shards[s].instances[li].inbox[i].src] {
+                    let p = shards[s].instances[li].inbox.remove(i);
+                    take_salvage(shards, s, p.req, &mut salvages);
+                } else {
+                    i += 1;
+                }
+            }
+            // admitted transfers in flight from a dead source: release the
+            // blocks reserved at admit; the landing event no-ops (entry
+            // gone, `transfer_land` tolerates it)
+            let mut doomed: Vec<u64> = shards[s].instances[li]
+                .incoming
+                .iter()
+                .filter(|(_, p)| fs.failed[p.src])
+                .map(|(id, _)| *id)
+                .collect();
+            doomed.sort_unstable();
+            for id in doomed {
+                let p = shards[s].instances[li].incoming.remove(&id).expect("collected above");
+                shards[s].instances[li].release_all(RequestId(id));
+                take_salvage(shards, s, p.req, &mut salvages);
+            }
+            // parked fetches sourced from the dead holder self-heal: the
+            // crash retracted its advertisements, so the landing's
+            // directory re-validation redirects or recomputes
+        }
+    }
+
+    // offers queued at a dead target: if the source still holds its live
+    // copy (alive, and not crashed-then-recovered this barrier — a crash
+    // drains the queues either way), move the per-request ownership back
+    // and re-offer the migration over the post-crash cluster; otherwise
+    // the snapshot is all that is left — salvage it
+    for (dead_gid, p) in pending_inbox {
+        let src = p.src;
+        let sdead = ctl.inst_shard[dead_gid];
+        if !fs.failed[src] && !crashed_now.contains(&src) {
+            let ssrc = ctl.inst_shard[src];
+            let id = p.req.spec.id;
+            if sdead != ssrc {
+                if let Some(lc) = shards[sdead].lifecycles.remove(&id.0) {
+                    shards[ssrc].lifecycles.insert(id.0, lc);
+                }
+                if let Some(t) = shards[sdead].ready_since.remove(&id.0) {
+                    shards[ssrc].ready_since.insert(id.0, t);
+                }
+                if let Some(c) = shards[sdead].chains.remove(&id.0) {
+                    shards[ssrc].chains.insert(id.0, c);
+                }
+            }
+            let next = match p.phase {
+                Phase::EpMigration => Stage::Prefill,
+                _ => Stage::Decode,
+            };
+            barrier_migrate(shards, ctl, dirs, src, id, next, p.created, w, cfg);
+        } else {
+            take_salvage(shards, sdead, p.req, &mut salvages);
+        }
+    }
+
+    for s in salvages {
+        match route_salvage(shards, ctl, dirs, &fs.failed, s, w) {
+            Ok(()) => fs.recovered += 1,
+            Err(s) => {
+                if fs.retry {
+                    fs.parked.push(s);
+                } else {
+                    fs.lost += 1;
+                    fs.dead.push((s.req.spec.id.0, s.lc));
+                }
+            }
+        }
+    }
+    // a recovery may have brought back the stage some work was waiting
+    // for: re-offer requests stranded at their source (their earlier
+    // hand-off found no live target) and re-route parked salvages
+    if recovered_any {
+        retry_stranded(shards, ctl, dirs, w, w, cfg);
+        if !fs.parked.is_empty() {
+            let parked = std::mem::take(&mut fs.parked);
+            for s in parked {
+                match route_salvage(shards, ctl, dirs, &fs.failed, s, w) {
+                    Ok(()) => fs.recovered += 1,
+                    Err(s) => fs.parked.push(s),
+                }
+            }
+        }
+    }
+    ctl.faults = Some(fs);
+}
+
 // ------------------------------------------------------------ worker side
 
 /// Run one shard through one window: process every owned event with
@@ -1688,8 +2213,15 @@ fn run_window(
         let now = ev.t;
         shard.events += 1;
         let li = ev.inst as usize - shard.lo;
+        if ev.epoch != shard.instances[li].epoch {
+            // minted against a previous incarnation of this instance (a
+            // fault-plan crash bumped the epoch): the state it refers to
+            // died with that incarnation
+            continue;
+        }
         match ev.kind {
             EvKind::Deliver(i) => deliver(shard, ctx, cfg, budgets, li, i, now, requests),
+            EvKind::Redeliver(r) => redeliver(shard, ctx, cfg, budgets, li, *r, now),
             EvKind::BatchDone => {
                 let (batch, started) = shard.instances[li]
                     .current
@@ -1702,30 +2234,30 @@ fn run_window(
                     batch.items.len()
                 );
                 apply_batch(shard, cfg, li, &batch, started, dur, now);
-                process_inbox(shard, cfg, li, now);
-                try_start(shard, cfg, budgets, li, now);
+                process_inbox(shard, ctx, cfg, li, now);
+                try_start(shard, ctx, cfg, budgets, li, now);
             }
             EvKind::TransferLand { req } => {
                 transfer_land(shard, li, req, now);
-                process_inbox(shard, cfg, li, now);
-                try_start(shard, cfg, budgets, li, now);
+                process_inbox(shard, ctx, cfg, li, now);
+                try_start(shard, ctx, cfg, budgets, li, now);
             }
             EvKind::FetchDone { req } => {
                 crate::log_trace!("t={now:.6} fetch landed req={} at inst{}", req.0, ev.inst);
                 handle_fetch_done(shard, ctx, cfg, li, req, now);
-                process_inbox(shard, cfg, li, now);
-                try_start(shard, cfg, budgets, li, now);
+                process_inbox(shard, ctx, cfg, li, now);
+                try_start(shard, ctx, cfg, budgets, li, now);
             }
             EvKind::SrcRelease { req } => {
                 // §4.3 step 4: target holds the data; source releases
                 shard.instances[li].queues.remove_running(req);
                 shard.instances[li].release_all(req);
-                process_inbox(shard, cfg, li, now);
-                try_start(shard, cfg, budgets, li, now);
+                process_inbox(shard, ctx, cfg, li, now);
+                try_start(shard, ctx, cfg, budgets, li, now);
             }
             EvKind::Wake => {
-                process_inbox(shard, cfg, li, now);
-                try_start(shard, cfg, budgets, li, now);
+                process_inbox(shard, ctx, cfg, li, now);
+                try_start(shard, ctx, cfg, budgets, li, now);
             }
         }
     }
@@ -1772,7 +2304,44 @@ fn deliver(
         shard.instances[li].queues.push_running(st);
         request_migration(shard, li, rid, stage, now);
     }
-    try_start(shard, cfg, budgets, li, now);
+    try_start(shard, ctx, cfg, budgets, li, now);
+}
+
+/// A salvaged request reaches its rescue instance (the barrier already
+/// moved its lifecycle/chains into this shard and reset its local
+/// progress). Mirrors [`deliver`]'s tail: re-attach against the rescuer's
+/// caches — the request resumes at the longest prefix a surviving holder
+/// kept — then consider fetch-over-recompute and dispatch normally.
+fn redeliver(
+    shard: &mut Shard,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+    budgets: &Budgets,
+    li: usize,
+    mut st: ReqState,
+    now: f64,
+) {
+    crate::log_trace!("t={now:.6} redeliver req={} at inst{}", st.spec.id.0, shard.lo + li);
+    let ch = chains_entry(&mut shard.chains, shard.content_cache, &shard.no_chains, &st.spec);
+    if shard.content_cache {
+        let Shard { instances, report, .. } = &mut *shard;
+        instances[li].attach(&mut st, &ch.kv, &ch.img, report);
+    }
+    if ctx.dirs.is_some() {
+        match maybe_start_fetch(shard, ctx, cfg, li, st, &ch, now) {
+            None => return, // parked; FetchDone resumes it
+            Some(back) => st = back,
+        }
+    }
+    let stage = st.stage();
+    if shard.instances[li].mask.serves(stage) {
+        shard.instances[li].queues.push_waiting(st);
+    } else {
+        let rid = st.spec.id;
+        shard.instances[li].queues.push_running(st);
+        request_migration(shard, li, rid, stage, now);
+    }
+    try_start(shard, ctx, cfg, budgets, li, now);
 }
 
 /// §4.3 step 1, worker side: mark the request migrating and ask the
@@ -1913,7 +2482,11 @@ fn maybe_start_fetch(
         emit_retractions(&mut instances[li], *dirs_on, outbox, msg_seq, now);
     }
     shard.dir_report.fetches += 1;
-    let dur = link_lat + bytes / link_bw;
+    let mut dur = link_lat + bytes / link_bw;
+    if let Some(fv) = ctx.faults.as_ref() {
+        // fault-plan link degradation (1.0 when healthy — exact identity)
+        dur *= fv.link;
+    }
     shard.push(now + dur, gid as u32, EvKind::FetchDone { req: id });
     shard.tracer.span(SpanKind::Fetch, gid, id.0, now, now + dur, bytes as u64);
     shard.instances[li].fetching.insert(
@@ -2091,7 +2664,10 @@ fn handle_fetch_done(
     }
     if retry {
         f.redirected = true;
-        let dur = link_lat + retry_bytes / link_bw;
+        let mut dur = link_lat + retry_bytes / link_bw;
+        if let Some(fv) = ctx.faults.as_ref() {
+            dur *= fv.link;
+        }
         shard.push(now + dur, gid as u32, EvKind::FetchDone { req });
         shard.tracer.span(SpanKind::Fetch, gid, req.0, now, now + dur, retry_bytes as u64);
         shard.instances[li].fetching.insert(req.0, f);
@@ -2144,7 +2720,14 @@ fn batch_duration(batch: &Batch, cfg: &SimConfig) -> f64 {
     kernel_time + cfg.engine_overhead
 }
 
-fn try_start(shard: &mut Shard, cfg: &SimConfig, budgets: &Budgets, li: usize, now: f64) {
+fn try_start(
+    shard: &mut Shard,
+    ctx: &Ctx,
+    cfg: &SimConfig,
+    budgets: &Budgets,
+    li: usize,
+    now: f64,
+) {
     if shard.instances[li].current.is_some() {
         return;
     }
@@ -2212,7 +2795,11 @@ fn try_start(shard: &mut Shard, cfg: &SimConfig, budgets: &Budgets, li: usize, n
     if !has_compute {
         return;
     }
-    let dur = batch_duration(&batch, cfg);
+    let mut dur = batch_duration(&batch, cfg);
+    if let Some(fv) = ctx.faults.as_ref() {
+        // fault-plan straggler slowdown (1.0 when healthy — exact identity)
+        dur *= fv.slow[gid as usize];
+    }
     shard.batches += 1;
     shard.instances[li].current = Some((batch, now));
     shard.push(now + dur, gid, EvKind::BatchDone);
@@ -2306,9 +2893,14 @@ fn apply_batch(
                 shard.tracer.span(SpanKind::PrefillQueue, gid, id.0, rs.min(started), started, 0);
                 shard.tracer.span(SpanKind::PrefillExec, gid, id.0, started, now, *tokens as u64);
                 if r.prefill_remaining() == 0 {
-                    // prefill emits the first output token
-                    r.decoded = 1;
-                    lc.record_token(now);
+                    // prefill emits the first output token — unless this
+                    // is a salvaged request re-running prefill with decode
+                    // progress already banked (never reset decoded, never
+                    // double-record the first token)
+                    if r.decoded == 0 {
+                        r.decoded = 1;
+                        lc.record_token(now);
+                    }
                     let rid = *id;
                     let spec = r.spec.clone();
                     // publish the shareable KV prefix for cross-request reuse
@@ -2384,7 +2976,7 @@ fn apply_batch(
 /// remaining tokens price the link time. The source's release travels as
 /// a boundary message — it lands at the transfer's landing time, barrier
 /// permitting.
-fn process_inbox(shard: &mut Shard, cfg: &SimConfig, li: usize, now: f64) {
+fn process_inbox(shard: &mut Shard, ctx: &Ctx, cfg: &SimConfig, li: usize, now: f64) {
     let (link_lat, link_bw) = cfg.link();
     let gid = (shard.lo + li) as u32;
     let mut i = 0;
@@ -2424,7 +3016,11 @@ fn process_inbox(shard: &mut Shard, cfg: &SimConfig, li: usize, now: f64) {
                 cached,
             ),
         };
-        let dur = link_lat + bytes / link_bw;
+        let mut dur = link_lat + bytes / link_bw;
+        if let Some(fv) = ctx.faults.as_ref() {
+            // fault-plan link degradation (1.0 when healthy)
+            dur *= fv.link;
+        }
         let land = now + dur;
         shard.push(land, gid, EvKind::TransferLand { req: r.spec.id });
         shard.emit(now, gid, MsgKind::SrcRelease { src: pull.src, req: r.spec.id, land });
@@ -2842,6 +3438,7 @@ mod tests {
                 kv: ContentDirectory::new(n),
                 img: ContentDirectory::new(n),
             }),
+            faults: None,
         };
         (shard, ctx)
     }
@@ -3184,5 +3781,178 @@ mod tests {
         // and the sharded trace is deterministic: same spans both times
         let again = mk(true, 4);
         assert_eq!(traced.trace.len(), again.trace.len());
+    }
+
+    // ---- fault plane (PR 9) ----------------------------------------------
+
+    use crate::faults::{FaultEvent, FaultPlan};
+
+    fn fault_cfg(cluster: &str, plan: FaultPlan, shards: usize) -> SimConfig {
+        let mut cfg = SimConfig::new(
+            ModelSpec::llava15_7b(),
+            ClusterSpec::parse(cluster).unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        cfg.faults = plan;
+        cfg.shards = shards;
+        cfg
+    }
+
+    #[test]
+    fn empty_fault_plan_is_behaviourally_invisible() {
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 6.0, 42).generate(&model, 60);
+        let plain = simulate(&fault_cfg("1E3P4D", FaultPlan::default(), 1), &reqs);
+        let explicit =
+            simulate(&fault_cfg("1E3P4D", FaultPlan { events: vec![], retry: false }, 4), &reqs);
+        assert_eq!(plain.digest(), explicit.digest(), "empty plan moved the digest");
+        assert_eq!(plain.fault_events, 0);
+        assert_eq!(plain.crashes, 0);
+        assert_eq!(plain.lost_requests, 0);
+        assert_eq!(plain.recovered_requests, 0);
+    }
+
+    /// A long-decoding request with unique content (no cross-request
+    /// sharing): decodes span seconds, so a mid-run crash is guaranteed to
+    /// catch work in flight.
+    fn long_spec(id: u64, arrival: f64) -> RequestSpec {
+        RequestSpec {
+            id: RequestId(id),
+            arrival,
+            num_images: 1,
+            tokens_per_image: 576,
+            prompt_tokens: 32,
+            output_tokens: 600,
+            image_hash: Some(0xBEEF ^ id),
+            shared_prefix_tokens: 0,
+            prefix_hash: id,
+        }
+    }
+
+    #[test]
+    fn per_role_crash_trace_loses_nothing() {
+        // the PR 9 acceptance trace: one crash per stage role mid-run,
+        // each recovering later, survivors guaranteed by construction —
+        // every in-flight request must be salvaged and finish
+        let reqs: Vec<RequestSpec> = (0..24).map(|i| long_spec(i, i as f64 * 0.05)).collect();
+        let masks = ClusterSpec::parse("2E2P4D").unwrap().instance_masks();
+        let plan = FaultPlan::per_role_crashes(&masks, 1.0, 0.5, 1.0, 7);
+        assert_eq!(plan.events.len(), 6, "3 crashes + 3 recoveries");
+        let res = simulate(&fault_cfg("2E2P4D", plan, 1), &reqs);
+        assert_eq!(res.crashes, 3);
+        assert_eq!(res.fault_events, 6, "every due event applies exactly once");
+        assert_eq!(res.lost_requests, 0, "a survivor per stage means nothing is lost");
+        assert!(res.recovered_requests > 0, "crashes mid-run must salvage something");
+        assert_eq!(res.unfinished, 0, "salvaged requests must still finish");
+        assert_eq!(res.dropped_requests, 0);
+    }
+
+    #[test]
+    fn faulty_digest_is_stable_across_shard_counts() {
+        // crashes, recoveries, a straggler, and a link-degradation window,
+        // all riding the barrier protocol: shards=N must stay bit-identical
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 6.0, 42).generate(&model, 80);
+        let masks = ClusterSpec::parse("2E2P4D").unwrap().instance_masks();
+        let mut plan = FaultPlan::per_role_crashes(&masks, 0.5, 0.5, 1.0, 11);
+        plan.events.push(FaultEvent {
+            t: 0.25,
+            kind: FaultKind::Straggler { instance: 7, factor: 3.0 },
+        });
+        plan.events.push(FaultEvent { t: 0.75, kind: FaultKind::LinkDegrade { factor: 2.0 } });
+        plan.events.push(FaultEvent { t: 2.5, kind: FaultKind::LinkDegrade { factor: 1.0 } });
+        let d = |shards: usize| simulate(&fault_cfg("2E2P4D", plan.clone(), shards), &reqs);
+        let r1 = d(1);
+        assert!(r1.crashes >= 1);
+        assert_eq!(r1.digest(), d(2).digest(), "faulty run moved at shards=2");
+        assert_eq!(r1.digest(), d(4).digest(), "faulty run moved at shards=4");
+    }
+
+    #[test]
+    fn faulty_run_with_the_controller_stays_shard_stable() {
+        // the controller now observes the fault plane (crashed instances
+        // sample as unavailable and are excluded from decide()) — all of
+        // it barrier-side state, so faults + elastic control together
+        // must still be bit-identical at every shard count
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 6.0, 42).generate(&model, 80);
+        let masks = ClusterSpec::parse("2E2P4D").unwrap().instance_masks();
+        let plan = FaultPlan::per_role_crashes(&masks, 0.5, 0.5, 2.0, 11);
+        let d = |shards: usize| {
+            let mut cfg = fault_cfg("2E2P4D", plan.clone(), shards);
+            cfg.controller = Some(ControllerConfig {
+                tick: 0.5,
+                window: 8.0,
+                min_samples: 4,
+                sustain_ticks: 3,
+                cooldown: 4.0,
+                ..Default::default()
+            });
+            simulate(&cfg, &reqs)
+        };
+        let r1 = d(1);
+        assert!(r1.crashes >= 1);
+        assert_eq!(r1.lost_requests, 0, "controller + faults still lose nothing");
+        assert_eq!(r1.digest(), d(2).digest(), "controller+faults moved at shards=2");
+        assert_eq!(r1.digest(), d(4).digest(), "controller+faults moved at shards=4");
+    }
+
+    #[test]
+    fn straggler_and_link_degradation_slow_but_complete() {
+        let model = ModelSpec::llava15_7b();
+        let reqs = PoissonGenerator::new(Dataset::textcaps(), 4.0, 42).generate(&model, 40);
+        let mut plan = FaultPlan::default();
+        plan.events.push(FaultEvent {
+            t: 0.0,
+            kind: FaultKind::Straggler { instance: 0, factor: 5.0 },
+        });
+        plan.events.push(FaultEvent { t: 0.0, kind: FaultKind::LinkDegrade { factor: 4.0 } });
+        let slow = simulate(&fault_cfg("1E3P4D", plan, 1), &reqs);
+        let healthy = simulate(&fault_cfg("1E3P4D", FaultPlan::default(), 1), &reqs);
+        assert_eq!(slow.unfinished, 0, "slowdowns delay, never strand");
+        assert_eq!(slow.lost_requests, 0);
+        assert_eq!(slow.crashes, 0);
+        assert_eq!(slow.metrics.num_finished(), healthy.metrics.num_finished());
+        // instance 0 is the sole encoder: a 5x straggler must show in TTFT
+        assert!(
+            slow.metrics.ttft().mean() > healthy.metrics.ttft().mean(),
+            "straggler ttft {} vs healthy {}",
+            slow.metrics.ttft().mean(),
+            healthy.metrics.ttft().mean()
+        );
+    }
+
+    #[test]
+    fn retry_parks_across_a_stage_outage_and_retry_off_abandons() {
+        // crash the only decode server mid-decode: salvaged decode work
+        // has no live candidate until the recovery brings the stage back
+        let reqs: Vec<RequestSpec> = (0..16).map(|i| long_spec(i, i as f64 * 0.01)).collect();
+        let plan = |retry: bool| FaultPlan {
+            events: vec![
+                FaultEvent { t: 1.0, kind: FaultKind::Crash { instance: 2 } },
+                FaultEvent { t: 3.0, kind: FaultKind::Recover { instance: 2 } },
+            ],
+            retry,
+        };
+        let kept = simulate(&fault_cfg("1E1P1D", plan(true), 1), &reqs);
+        assert_eq!(kept.crashes, 1);
+        assert_eq!(kept.lost_requests, 0, "retry + recovery loses nothing");
+        assert!(kept.recovered_requests > 0);
+        assert_eq!(kept.unfinished, 0);
+        let abandoned = simulate(&fault_cfg("1E1P1D", plan(false), 1), &reqs);
+        assert!(
+            abandoned.lost_requests > 0,
+            "retries off: mid-outage salvage with no candidate is abandoned"
+        );
+        // conservation: every routed request ends finished or unfinished
+        // (lost ones are a subset of unfinished), none vanish
+        assert!(abandoned.lost_requests <= abandoned.unfinished);
+        assert_eq!(
+            abandoned.metrics.num_finished() + abandoned.unfinished
+                + abandoned.dropped_requests,
+            16,
+            "request conservation with retries off"
+        );
     }
 }

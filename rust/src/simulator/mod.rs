@@ -215,6 +215,13 @@ pub struct SimConfig {
     /// *fidelity* knob, not a correctness knob: digests never depend on
     /// the shard count, only on Δ itself.
     pub window: f64,
+    /// Deterministic fault schedule (`crate::faults`): seeded instance
+    /// crash/recover events, link degradation windows, and straggler
+    /// slowdowns, applied at window barriers in canonical order. The
+    /// default empty plan is behaviourally invisible — digests with an
+    /// empty plan are bit-identical to a build without the fault
+    /// subsystem (golden suite pins this).
+    pub faults: crate::faults::FaultPlan,
 }
 
 impl SimConfig {
@@ -237,6 +244,7 @@ impl SimConfig {
             trace_capacity: 1 << 16,
             shards: 1,
             window: 0.0,
+            faults: Default::default(),
         }
     }
 

@@ -380,6 +380,34 @@ pub struct WorkloadSummary {
     pub avg_output_tokens: f64,
 }
 
+/// Fault-laced trace (PR 9): a Poisson request trace plus a seeded
+/// per-stage-role crash/recover plan placed *inside* the arrival span —
+/// the first crash lands at 25% of the span and later ones stagger by 10%
+/// of it, so each role loses an instance while that stage still has live
+/// work in flight (crashes past the last arrival would test nothing).
+/// Each crashed instance recovers `down` seconds later (`down <= 0` = it
+/// stays dead; the plan never crashes a stage's sole server). The plan
+/// derives from the trace seed, so one `(dataset, rate, n, seed, masks,
+/// down)` tuple fully pins a chaos scenario — the CLI's `--chaos` flag
+/// and the chaos-smoke CI job both build their scenarios here.
+pub fn fault_laced_trace(
+    model: &ModelSpec,
+    dataset: Dataset,
+    rate: f64,
+    n: usize,
+    seed: u64,
+    masks: &[crate::scheduler::StageMask],
+    down: f64,
+) -> (Vec<RequestSpec>, crate::faults::FaultPlan) {
+    let reqs = PoissonGenerator::new(dataset, rate, seed).generate(model, n);
+    let span = reqs.last().map_or(0.0, |r| r.arrival);
+    let t0 = (span * 0.25).max(0.5);
+    let spacing = (span * 0.10).max(0.25);
+    let plan =
+        crate::faults::FaultPlan::per_role_crashes(masks, t0, spacing, down, seed ^ 0xFA17);
+    (reqs, plan)
+}
+
 pub fn summarize(specs: &[RequestSpec]) -> WorkloadSummary {
     let n = specs.len().max(1) as f64;
     WorkloadSummary {
@@ -420,6 +448,35 @@ mod tests {
         let span = reqs.last().unwrap().arrival;
         let rate = 2000.0 / span;
         assert!((rate - 8.0).abs() < 0.8, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn fault_laced_trace_is_deterministic_and_crashes_inside_the_span() {
+        use crate::faults::FaultKind;
+        use crate::scheduler::StageMask;
+        let m = ModelSpec::llava15_7b();
+        let masks =
+            [StageMask::E, StageMask::E, StageMask::P, StageMask::P, StageMask::D, StageMask::D];
+        let (reqs_a, plan_a) = fault_laced_trace(&m, Dataset::textcaps(), 6.0, 80, 11, &masks, 1.0);
+        let (reqs_b, plan_b) = fault_laced_trace(&m, Dataset::textcaps(), 6.0, 80, 11, &masks, 1.0);
+        assert_eq!(plan_a, plan_b, "same tuple, same scenario");
+        assert_eq!(reqs_a.len(), reqs_b.len());
+        // one crash per stage role, each before the last arrival
+        let span = reqs_a.last().unwrap().arrival;
+        let crashes: Vec<f64> = plan_a
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::Crash { .. }))
+            .map(|e| e.t)
+            .collect();
+        assert_eq!(crashes.len(), 3);
+        for t in crashes {
+            assert!(t < span, "crash at {t} past the trace span {span}");
+        }
+        // sole-server shape: nothing crashable, plan stays empty
+        let sole = [StageMask::E, StageMask::P, StageMask::D];
+        let (_, empty) = fault_laced_trace(&m, Dataset::pope(), 4.0, 40, 3, &sole, 1.0);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Fault-recovery invariants (PR 9) — the robustness suite.
+//!
+//! Three properties are pinned here at the integration level:
+//!
+//! 1. **Nothing is lost.** For any seeded per-role crash plan whose
+//!    construction guarantees a survivor per stage, `retry: true` means
+//!    `lost_requests == 0` and every request still finishes — crashed
+//!    instances' in-flight work is salvaged via the content directory
+//!    (resuming at the longest cached prefix a survivor holds) or
+//!    recomputed.
+//! 2. **Faults ride the barrier protocol.** A faulty run's digest is
+//!    bit-identical for any shard count, exactly like a healthy run's.
+//! 3. **The empty plan is invisible.** `FaultPlan::default()` leaves the
+//!    digest and every counter untouched — the fault subsystem costs
+//!    nothing when unused (the golden digests in
+//!    `tests/golden/sim_digests.json` enforce the same thing across every
+//!    policy × shape).
+//!
+//! The last test mirrors the CI `chaos-smoke` job's exact parameters so a
+//! CI failure reproduces locally as `cargo test --test fault_recovery`.
+
+use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::core::{RequestId, RequestSpec};
+use hydrainfer::faults::{FaultKind, FaultPlan};
+use hydrainfer::scheduler::Policy;
+use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig, SimResult};
+use hydrainfer::workload::{fault_laced_trace, Dataset, PoissonGenerator};
+
+fn cfg_with(cluster: &str, plan: FaultPlan, shards: usize) -> SimConfig {
+    let mut cfg = SimConfig::new(
+        ModelSpec::llava15_7b(),
+        ClusterSpec::parse(cluster).unwrap(),
+        Policy::StageLevel,
+        SloSpec::new(0.25, 0.04),
+    );
+    cfg.faults = plan;
+    cfg.shards = shards;
+    cfg
+}
+
+/// Long-decoding requests with unique content: decodes span seconds, so
+/// mid-run crashes reliably catch work in flight (a short trace could
+/// drain before the first crash fires and vacuously pass).
+fn long_specs(n: u64, gap: f64) -> Vec<RequestSpec> {
+    (0..n)
+        .map(|i| RequestSpec {
+            id: RequestId(i),
+            arrival: i as f64 * gap,
+            num_images: 1,
+            tokens_per_image: 576,
+            prompt_tokens: 32,
+            output_tokens: 500,
+            image_hash: Some(0xFA17 ^ i),
+            prefix_hash: i,
+            ..Default::default()
+        })
+        .collect()
+}
+
+/// Property: across many seeds, a per-role crash plan (survivor per stage
+/// by construction) with retries on never loses a request — and request
+/// conservation holds: finished + unfinished + dropped covers the trace.
+#[test]
+fn seeded_per_role_crashes_lose_nothing() {
+    let reqs = long_specs(24, 0.05);
+    let masks = ClusterSpec::parse("2E2P4D").unwrap().instance_masks();
+    for seed in 0..12u64 {
+        let plan = FaultPlan::per_role_crashes(&masks, 1.0, 0.5, 1.0, seed);
+        assert!(!plan.is_empty(), "seed {seed}: 2E2P4D always has crashable candidates");
+        let res = simulate(&cfg_with("2E2P4D", plan, 1), &reqs);
+        assert!(res.crashes >= 1, "seed {seed}: plan must crash someone");
+        assert_eq!(res.lost_requests, 0, "seed {seed}: survivors + retries lose nothing");
+        assert_eq!(res.unfinished, 0, "seed {seed}: salvaged requests still finish");
+        assert_eq!(
+            res.metrics.num_finished() + res.unfinished + res.dropped_requests,
+            reqs.len(),
+            "seed {seed}: request conservation"
+        );
+    }
+}
+
+/// The ISSUE acceptance trace: >= 2 crashes mid-run, one per stage role,
+/// each recovering later — completes with `lost_requests == 0`,
+/// `recovered_requests > 0`, and a digest that is bit-identical across
+/// shard counts {1, 2, 4}.
+#[test]
+fn acceptance_trace_recovers_everything_at_every_shard_count() {
+    let reqs = long_specs(24, 0.05);
+    let masks = ClusterSpec::parse("2E2P4D").unwrap().instance_masks();
+    let plan = FaultPlan::per_role_crashes(&masks, 1.0, 0.5, 1.0, 7);
+    let crashes: Vec<usize> = plan
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            FaultKind::Crash { instance } => Some(instance),
+            _ => None,
+        })
+        .collect();
+    assert!(crashes.len() >= 2, "acceptance needs at least two crashes");
+    // one crash per stage role: 2E2P4D gives exactly E, P, and D picks
+    assert_eq!(crashes.len(), 3);
+    let run = |shards: usize| -> SimResult {
+        simulate(&cfg_with("2E2P4D", plan.clone(), shards), &reqs)
+    };
+    let base = run(1);
+    assert_eq!(base.crashes, 3);
+    assert_eq!(base.lost_requests, 0);
+    assert!(base.recovered_requests > 0, "mid-run crashes must salvage in-flight work");
+    assert_eq!(base.unfinished, 0);
+    for shards in [2usize, 4] {
+        let res = run(shards);
+        assert_eq!(base.digest(), res.digest(), "shards={shards} moved the faulty digest");
+        assert_eq!(base.recovered_requests, res.recovered_requests);
+        assert_eq!(base.lost_requests, res.lost_requests);
+    }
+}
+
+/// An explicitly-empty plan must be indistinguishable from never touching
+/// `cfg.faults`: same digest, zero fault counters — on a seeded dataset
+/// trace, not just synthetic specs.
+#[test]
+fn empty_plan_matches_the_no_plan_digest() {
+    let model = ModelSpec::llava15_7b();
+    let reqs = PoissonGenerator::new(Dataset::textcaps(), 6.0, 42).generate(&model, 80);
+    let untouched = {
+        let mut cfg = SimConfig::new(
+            model.clone(),
+            ClusterSpec::parse("1E3P4D").unwrap(),
+            Policy::StageLevel,
+            SloSpec::new(0.25, 0.04),
+        );
+        cfg.shards = 1;
+        simulate(&cfg, &reqs)
+    };
+    let empty = simulate(
+        &cfg_with("1E3P4D", FaultPlan { events: vec![], retry: false }, 1),
+        &reqs,
+    );
+    assert_eq!(untouched.digest(), empty.digest(), "empty plan moved the digest");
+    assert_eq!(empty.fault_events, 0);
+    assert_eq!(empty.crashes, 0);
+    assert_eq!(empty.recovered_requests, 0);
+    assert_eq!(empty.lost_requests, 0);
+}
+
+/// Mirror of the CI `chaos-smoke` job (`.github/workflows/ci.yml`):
+/// `simulate --chaos --model llava-1.5-7b --dataset textcaps
+/// --cluster 2E2P4D --rate 8 --requests 160 --chaos-seed 7
+/// --chaos-down 1.0` across shards {1, 2, 4}. If the CI shell assertions
+/// trip, this test fails first with a real diagnostic.
+#[test]
+fn ci_chaos_smoke_scenario_holds() {
+    let model = ModelSpec::llava15_7b();
+    let spec = ClusterSpec::parse("2E2P4D").unwrap();
+    let (reqs, plan) =
+        fault_laced_trace(&model, Dataset::textcaps(), 8.0, 160, 7, &spec.instance_masks(), 1.0);
+    assert!(!plan.is_empty(), "the CI scenario must schedule faults");
+    let run = |shards: usize| simulate(&cfg_with("2E2P4D", plan.clone(), shards), &reqs);
+    let base = run(1);
+    assert!(base.crashes >= 2, "CI asserts a real chaos run: got {} crashes", base.crashes);
+    assert!(base.recovered_requests > 0, "CI asserts recovered > 0");
+    assert_eq!(base.lost_requests, 0, "CI asserts lost == 0");
+    for shards in [2usize, 4] {
+        assert_eq!(
+            base.digest(),
+            run(shards).digest(),
+            "CI asserts digest stability at shards={shards}"
+        );
+    }
+}

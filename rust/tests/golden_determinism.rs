@@ -23,6 +23,7 @@
 //! suite.
 
 use hydrainfer::config::{ModelSpec, SloSpec};
+use hydrainfer::faults::{FaultEvent, FaultKind, FaultPlan};
 use hydrainfer::scheduler::Policy;
 use hydrainfer::simulator::{simulate, ClusterSpec, SimConfig, SimResult};
 use hydrainfer::util::json;
@@ -124,6 +125,56 @@ fn shard_sweep_digests_are_bit_identical() {
                     policy.name()
                 );
             }
+        }
+    }
+}
+
+/// PR 9's fault plane must not weaken the shard contract: crashes,
+/// recoveries, a straggler, and a link-degradation window all apply at
+/// window barriers (single-threaded, canonical order), so a faulty run's
+/// digest — and its fault/recovery accounting — must land on the same
+/// bits for `shards ∈ {1, 2, 4}`. The golden digests above pin the dual
+/// property: an empty [`FaultPlan`] is behaviourally invisible.
+#[test]
+fn faulty_shard_sweep_digests_are_bit_identical() {
+    let model = ModelSpec::llava15_7b();
+    let reqs = PoissonGenerator::new(Dataset::textcaps(), TRACE_RATE, TRACE_SEED)
+        .generate(&model, TRACE_N);
+    for cluster in ["2E2P4D", "1E3P4D"] {
+        let spec = ClusterSpec::parse(cluster).unwrap();
+        let mut plan = FaultPlan::per_role_crashes(&spec.instance_masks(), 1.0, 0.5, 1.0, 11);
+        plan.events.push(FaultEvent {
+            t: 0.25,
+            kind: FaultKind::Straggler { instance: spec.instance_masks().len() - 1, factor: 3.0 },
+        });
+        plan.events.push(FaultEvent { t: 0.75, kind: FaultKind::LinkDegrade { factor: 2.0 } });
+        plan.events.push(FaultEvent { t: 4.0, kind: FaultKind::LinkDegrade { factor: 1.0 } });
+        let run = |shards: usize| {
+            let mut cfg = SimConfig::new(
+                model.clone(),
+                spec.clone(),
+                Policy::StageLevel,
+                SloSpec::new(0.25, 0.04),
+            );
+            cfg.faults = plan.clone();
+            cfg.shards = shards;
+            simulate(&cfg, &reqs)
+        };
+        let base = run(1);
+        assert!(base.crashes >= 1, "{cluster}: the chaos plan must actually crash someone");
+        assert_eq!(base.lost_requests, 0, "{cluster}: survivors + retries lose nothing");
+        for shards in [2usize, 4] {
+            let res = run(shards);
+            assert_eq!(
+                base.digest(),
+                res.digest(),
+                "{cluster}: shards={shards} moved the faulty digest"
+            );
+            assert_eq!(
+                (base.fault_events, base.crashes, base.recovered_requests, base.lost_requests),
+                (res.fault_events, res.crashes, res.recovered_requests, res.lost_requests),
+                "{cluster}: shards={shards} moved the fault accounting"
+            );
         }
     }
 }

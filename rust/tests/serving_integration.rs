@@ -32,7 +32,9 @@ fn run_cluster(spec: &str, prompts: &[(&str, bool, usize)]) -> Vec<(u64, Vec<u32
         rc.submit(prompt, if *with_image { Some(&img) } else { None }, greedy(*n))
             .unwrap();
     }
-    let results = rc.collect(prompts.len(), Duration::from_secs(120));
+    let results = rc
+        .collect(prompts.len(), Duration::from_secs(120))
+        .expect("all requests finish within the deadline");
     rc.shutdown();
     let mut out: Vec<(u64, Vec<u32>)> =
         results.into_iter().map(|r| (r.id.0, r.tokens)).collect();
@@ -84,10 +86,13 @@ fn ep_plus_d_serves_batch_with_lifecycle() {
         )
         .unwrap();
     }
-    let results = rc.collect(n, Duration::from_secs(120));
+    let results = rc
+        .collect(n, Duration::from_secs(120))
+        .expect("all requests finish within the deadline");
     rc.shutdown();
     assert_eq!(results.len(), n, "all requests complete");
     for r in &results {
+        assert!(r.error.is_none(), "clean finish, no dead-letter");
         assert_eq!(r.tokens.len(), 4, "exactly max_tokens generated");
         let lc = &r.lifecycle;
         assert!(lc.ttft().unwrap() > 0.0);
