@@ -1,22 +1,75 @@
 //! CLI for the architecture-invariant analyzer: walk the given roots
-//! (default: the crate's `src/`), print findings as `file:line rule
-//! message`, and exit nonzero when any are found.
+//! (default: the crate's `src/`), run the per-file and crate-wide rules,
+//! and report findings.
 //!
 //! ```text
-//! cargo run --bin invlint -- src            # from rust/
-//! cargo run --bin invlint -- rust/src       # path given from the repo root
+//! cargo run --bin invlint -- src              # from rust/
+//! cargo run --bin invlint -- rust/src         # path given from the repo root
+//! cargo run --bin invlint -- --json src       # machine-readable findings
+//! cargo run --bin invlint -- --github src     # ::error annotations for CI
 //! ```
+//!
+//! Exit codes: 0 clean, 1 findings reported, 2 usage or I/O error.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use hydrainfer::invlint::Finding;
+
+const HELP: &str = "\
+invlint — architecture-invariant static analyzer
+
+USAGE:
+    invlint [OPTIONS] [ROOT]...
+
+ARGS:
+    [ROOT]...    Files or directories to lint (default: the crate's src/).
+                 Paths may be phrased from the repo root (rust/src) or the
+                 crate dir (src); both resolve.
+
+OPTIONS:
+    --json       Print findings as a JSON array of
+                 {\"path\",\"line\",\"rule\",\"msg\"} objects (empty array when
+                 clean) instead of `path:line rule msg` lines.
+    --github     Print findings as GitHub Actions annotations
+                 (`::error file=...,line=...,title=invlint/<rule>::<msg>`)
+                 so they surface inline on the PR diff.
+    -h, --help   Show this help.
+
+EXIT CODES:
+    0  clean — no findings
+    1  findings reported
+    2  usage or I/O error
+";
+
+#[derive(Clone, Copy, PartialEq)]
+enum Format {
+    Text,
+    Json,
+    Github,
+}
+
 fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let roots: Vec<PathBuf> = if args.is_empty() {
-        vec![default_root()]
-    } else {
-        args.iter().map(|a| resolve(a)).collect()
-    };
+    let mut format = Format::Text;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => format = Format::Json,
+            "--github" => format = Format::Github,
+            "-h" | "--help" => {
+                print!("{HELP}");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("invlint: unknown flag `{other}` (see --help)");
+                return ExitCode::from(2);
+            }
+            other => roots.push(resolve(other)),
+        }
+    }
+    if roots.is_empty() {
+        roots.push(default_root());
+    }
 
     let mut findings = Vec::new();
     for root in &roots {
@@ -29,8 +82,24 @@ fn main() -> ExitCode {
         }
     }
 
-    for f in &findings {
-        println!("{f}");
+    match format {
+        Format::Text => {
+            for f in &findings {
+                println!("{f}");
+            }
+        }
+        Format::Json => println!("{}", to_json(&findings)),
+        Format::Github => {
+            for f in &findings {
+                println!(
+                    "::error file={},line={},title=invlint/{}::{}",
+                    f.path,
+                    f.line,
+                    f.rule,
+                    github_escape(&f.msg)
+                );
+            }
+        }
     }
     if findings.is_empty() {
         eprintln!("invlint: clean ({} root(s))", roots.len());
@@ -39,6 +108,52 @@ fn main() -> ExitCode {
         eprintln!("invlint: {} finding(s)", findings.len());
         ExitCode::FAILURE
     }
+}
+
+/// Render findings as a JSON array — std-only, no serde in this crate.
+fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"path\": {}, \"line\": {}, \"rule\": {}, \"msg\": {}}}",
+            json_str(&f.path),
+            f.line,
+            json_str(f.rule),
+            json_str(&f.msg)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// GitHub annotation message escaping: `%`, CR and LF must be URL-encoded
+/// per the workflow-command format.
+fn github_escape(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
 }
 
 fn default_root() -> PathBuf {

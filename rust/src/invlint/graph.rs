@@ -1,0 +1,571 @@
+//! Def/call graph over scanned [`FileModel`]s — the crate-wide layer the
+//! interprocedural rules (digest-taint, barrier-ownership, lock-order,
+//! accounted-failure) run on.
+//!
+//! Same deliberately-not-a-parser philosophy as [`super::scan`]: function
+//! item boundaries come from brace tracking over the comment/string-stripped
+//! line text, call sites from identifier-boundary token matching, and name
+//! resolution is heuristic — same-file candidates win, and a std-method
+//! stoplist keeps `.collect()` / `.push()` / `.lock()` from resolving to
+//! crate fns that happen to share the name. Known approximations (macro
+//! bodies are invisible, trait dispatch fans out to every same-named fn,
+//! closures inherit their enclosing fn, turbofish calls are missed) are
+//! documented in `docs/static-analysis.md`. They err toward *more* edges —
+//! over-approximate reachability — which is the conservative direction for
+//! every rule built on top.
+//!
+//! Everything here is deterministic by construction: functions are numbered
+//! in file-then-line order, edge lists are built in that order, and the
+//! closure worklist is FIFO — two scans of the same tree yield
+//! byte-identical findings.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::scan::{FileModel, LineInfo};
+
+/// Method names that never resolve to another file's fn: std-prelude and
+/// container methods that would otherwise alias crate fns of the same name.
+const STD_METHODS: &[&str] = &[
+    "abs", "add", "all", "and_then", "any", "append", "as_mut", "as_ref", "as_str",
+    "binary_search", "ceil", "chars", "clamp", "clear", "clone", "cloned", "cmp", "collect",
+    "contains", "contains_key", "copied", "count", "dedup", "drain", "entry", "enumerate", "eq",
+    "expect", "extend", "filter", "filter_map", "find", "first", "flat_map", "flatten", "floor",
+    "fold", "get", "get_mut", "get_or_insert_with", "insert", "into_iter", "is_empty", "is_err",
+    "is_finite", "is_nan", "is_none", "is_ok", "is_some", "iter", "iter_mut", "join", "keys",
+    "last", "len", "ln", "load", "lock", "map", "map_err", "map_or", "max", "min", "next",
+    "next_back", "or_default", "or_insert_with", "parse", "partial_cmp", "peek", "pop",
+    "position", "powf", "powi", "push", "push_str", "read", "recv", "remove", "repeat",
+    "replace", "resize", "retain", "rev", "round", "saturating_sub", "send", "set", "skip",
+    "sort", "sort_by", "sort_by_key", "sort_unstable_by", "split", "split_whitespace", "sqrt",
+    "starts_with", "store", "sub", "sum", "swap", "take", "take_while", "then", "to_owned",
+    "to_string", "to_vec", "total_cmp", "trim", "try_into", "unwrap", "unwrap_or",
+    "unwrap_or_default", "unwrap_or_else", "values", "wait", "windows", "with_capacity",
+    "wrapping_add", "wrapping_mul", "write", "zip",
+];
+
+/// Identifiers followed by `(` that are control flow or declarations, not
+/// calls.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "fn", "pub", "let", "else", "move",
+    "unsafe", "as", "in", "ref", "mut", "box", "where", "impl", "use", "mod", "crate", "super",
+    "self", "Self", "dyn", "break", "continue", "static", "const", "enum", "struct", "trait",
+    "type", "assert", "debug_assert",
+];
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// One `fn` item: where it lives, its body span, and the region-root flags
+/// read off the first body line.
+#[derive(Debug)]
+pub struct FnDef {
+    pub file: usize,
+    pub name: String,
+    /// 1-based line of the `fn` token.
+    pub line: usize,
+    /// 1-based line of the opening `{` (0 when no body was found).
+    pub body_start: usize,
+    /// 1-based line of the closing `}`.
+    pub body_end: usize,
+    pub test: bool,
+    /// Declared under `// invlint: worker-phase`.
+    pub worker: bool,
+    /// Declared under `// invlint: barrier-phase`.
+    pub barrier: bool,
+    /// Signature text: the `fn` line through the opening-brace line, joined.
+    pub sig: String,
+}
+
+/// One resolved call edge plus the statement span it occurs in and the
+/// trailing identifier of the first argument (for bare-lock substitution).
+#[derive(Debug)]
+pub struct CallSite {
+    pub callee: usize,
+    /// 1-based first line of the enclosing statement.
+    pub line: usize,
+    /// 1-based last line of the enclosing statement.
+    pub stmt_end: usize,
+    pub arg: Option<String>,
+}
+
+/// One `.lock()` acquisition: the receiver chain's last segment names the
+/// lock; `bare` means the chain was a single identifier (a local or generic
+/// parameter, subject to call-site argument substitution).
+#[derive(Debug)]
+pub struct LockSite {
+    pub name: String,
+    pub bare: bool,
+    /// 1-based first line of the acquiring statement.
+    pub line: usize,
+    /// 1-based last line of the acquiring statement.
+    pub stmt_end: usize,
+    /// `let`-bound guard (held to end of block) vs temporary (one statement).
+    pub binding: bool,
+}
+
+/// The crate-wide def/call graph.
+pub struct Graph<'a> {
+    pub files: &'a [FileModel],
+    pub fns: Vec<FnDef>,
+    /// `name -> fn ids` in creation (file-then-line) order.
+    by_name: BTreeMap<String, Vec<usize>>,
+    /// Per file, per 0-based line: brace depth at line start.
+    depth: Vec<Vec<usize>>,
+    /// Per file, per 0-based line: innermost fn owning the line at its
+    /// start (None outside every fn body).
+    owner: Vec<Vec<Option<usize>>>,
+    /// Per fn id: resolved outgoing calls, in source order.
+    pub calls: Vec<Vec<CallSite>>,
+    /// Per fn id: direct lock acquisitions, in source order.
+    pub locks: Vec<Vec<LockSite>>,
+}
+
+impl<'a> Graph<'a> {
+    pub fn build(files: &'a [FileModel]) -> Graph<'a> {
+        let mut g = Graph {
+            files,
+            fns: Vec::new(),
+            by_name: BTreeMap::new(),
+            depth: Vec::new(),
+            owner: Vec::new(),
+            calls: Vec::new(),
+            locks: Vec::new(),
+        };
+        g.build_defs();
+        g.fill_region_flags();
+        g.build_calls();
+        g
+    }
+
+    // ------------------------------------------------------------ fn defs
+
+    fn build_defs(&mut self) {
+        for (fi, fm) in self.files.iter().enumerate() {
+            let mut depths = vec![0usize; fm.lines.len()];
+            let mut owners: Vec<Option<usize>> = vec![None; fm.lines.len()];
+            let mut depth = 0usize;
+            // (fn id, depth its body opened at) — innermost fn is the top
+            let mut stack: Vec<(usize, usize)> = Vec::new();
+            // (fn id, paren depth): a declared fn waiting for its `{`
+            let mut pending: Option<(usize, usize)> = None;
+            for (idx, li) in fm.lines.iter().enumerate() {
+                depths[idx] = depth;
+                owners[idx] = stack.last().map(|&(fid, _)| fid);
+                let code: Vec<char> = li.code.chars().collect();
+                let mut j = 0usize;
+                while j < code.len() {
+                    match code[j] {
+                        '{' => {
+                            depth += 1;
+                            if let Some((fid, 0)) = pending {
+                                self.fns[fid].body_start = idx + 1;
+                                let sig_from = self.fns[fid].line - 1;
+                                self.fns[fid].sig = fm.lines[sig_from..=idx]
+                                    .iter()
+                                    .map(|l| l.code.as_str())
+                                    .collect::<Vec<_>>()
+                                    .join(" ");
+                                stack.push((fid, depth));
+                                pending = None;
+                            }
+                            j += 1;
+                        }
+                        '}' => {
+                            if let Some(&(fid, d)) = stack.last() {
+                                if d == depth {
+                                    self.fns[fid].body_end = idx + 1;
+                                    stack.pop();
+                                }
+                            }
+                            depth = depth.saturating_sub(1);
+                            j += 1;
+                        }
+                        '(' => {
+                            if let Some((fid, pd)) = pending {
+                                pending = Some((fid, pd + 1));
+                            }
+                            j += 1;
+                        }
+                        ')' => {
+                            if let Some((fid, pd)) = pending {
+                                pending = Some((fid, pd.saturating_sub(1)));
+                            }
+                            j += 1;
+                        }
+                        ';' => {
+                            if let Some((fid, 0)) = pending {
+                                // bodyless trait-method declaration: drop it
+                                debug_assert_eq!(fid + 1, self.fns.len());
+                                self.fns.pop();
+                                pending = None;
+                            }
+                            j += 1;
+                        }
+                        'f' if at_token(&code, j, "fn") => {
+                            let mut k = j + 2;
+                            while k < code.len() && code[k] == ' ' {
+                                k += 1;
+                            }
+                            let name_start = k;
+                            while k < code.len() && is_ident(code[k]) {
+                                k += 1;
+                            }
+                            if k > name_start {
+                                let name: String = code[name_start..k].iter().collect();
+                                self.fns.push(FnDef {
+                                    file: fi,
+                                    name,
+                                    line: idx + 1,
+                                    body_start: 0,
+                                    body_end: 0,
+                                    test: li.test,
+                                    worker: false,
+                                    barrier: false,
+                                    sig: String::new(),
+                                });
+                                pending = Some((self.fns.len() - 1, 0));
+                                j = k;
+                            } else {
+                                j += 1;
+                            }
+                        }
+                        _ => j += 1,
+                    }
+                }
+            }
+            self.depth.push(depths);
+            self.owner.push(owners);
+        }
+        for (id, f) in self.fns.iter_mut().enumerate() {
+            if f.body_end == 0 {
+                f.body_end = if f.body_start > 0 { f.body_start } else { f.line };
+            }
+            self.by_name.entry(f.name.clone()).or_default().push(id);
+        }
+    }
+
+    fn fill_region_flags(&mut self) {
+        for f in &mut self.fns {
+            let fm = &self.files[f.file];
+            // body_start is the 1-based `{` line, so as a 0-based index it
+            // names the next line — whose start-of-line flags are the
+            // region set the body opened
+            let nxt = f.body_start;
+            if nxt > 0 && nxt < fm.lines.len() {
+                f.worker = fm.lines[nxt].worker;
+                f.barrier = fm.lines[nxt].barrier;
+            }
+        }
+    }
+
+    // --------------------------------------------------------- statements
+
+    /// 0-based (start, end) line span of the statement containing `idx`:
+    /// grows backward while the previous line does not end with `;`/`{`/`}`
+    /// and forward until the current one does.
+    pub fn stmt_bounds(&self, fi: usize, idx: usize) -> (usize, usize) {
+        let fm = &self.files[fi];
+        let ends = |s: &str| {
+            let t = s.trim_end();
+            t.is_empty() || t.ends_with(';') || t.ends_with('{') || t.ends_with('}')
+        };
+        let mut start = idx;
+        while start > 0 && !ends(&fm.lines[start - 1].code) {
+            start -= 1;
+        }
+        let mut end = idx;
+        while end + 1 < fm.lines.len() && !ends(&fm.lines[end].code) {
+            end += 1;
+        }
+        (start, end)
+    }
+
+    /// 0-based index of the line ending the block that contains line `idx`
+    /// of `f` (the first later line whose start depth drops below `idx`'s).
+    pub fn block_end(&self, f: &FnDef, idx: usize) -> usize {
+        let depths = &self.depth[f.file];
+        let d = depths[idx];
+        let last = f.body_end.saturating_sub(1);
+        let mut j = idx + 1;
+        while j <= last && j < depths.len() {
+            if depths[j] < d {
+                return j;
+            }
+            j += 1;
+        }
+        last.min(depths.len().saturating_sub(1))
+    }
+
+    /// The body lines of fn `fid` that belong to it directly (not to a fn
+    /// nested inside it), as `(0-based index, line, effective code)`. The
+    /// opening-brace line contributes only its post-`{` tail.
+    pub fn fn_lines(&self, fid: usize) -> Vec<(usize, &LineInfo, String)> {
+        let f = &self.fns[fid];
+        let mut out = Vec::new();
+        if f.body_start == 0 {
+            return out;
+        }
+        let fm = &self.files[f.file];
+        let open_idx = f.body_start - 1;
+        if let Some(brace) = fm.lines[open_idx].code.find('{') {
+            let tail = &fm.lines[open_idx].code[brace + 1..];
+            if !tail.trim().is_empty() {
+                out.push((open_idx, &fm.lines[open_idx], tail.to_string()));
+            }
+        }
+        for idx in f.body_start..f.body_end.min(fm.lines.len()) {
+            if self.owner[f.file][idx] == Some(fid) {
+                out.push((idx, &fm.lines[idx], fm.lines[idx].code.clone()));
+            }
+        }
+        out
+    }
+
+    // --------------------------------------------------------- call sites
+
+    fn build_calls(&mut self) {
+        let mut calls = vec![Vec::new(); self.fns.len()];
+        let mut locks = vec![Vec::new(); self.fns.len()];
+        for fid in 0..self.fns.len() {
+            if self.fns[fid].test {
+                continue;
+            }
+            for (idx, li, code) in self.fn_lines(fid) {
+                if li.test {
+                    continue;
+                }
+                self.scan_line(fid, idx, &code, &mut calls[fid], &mut locks[fid]);
+            }
+        }
+        self.calls = calls;
+        self.locks = locks;
+    }
+
+    fn scan_line(
+        &self,
+        fid: usize,
+        idx: usize,
+        code: &str,
+        sites: &mut Vec<CallSite>,
+        locks: &mut Vec<LockSite>,
+    ) {
+        let fi = self.fns[fid].file;
+        let chars: Vec<char> = code.chars().collect();
+        let mut j = 0usize;
+        while j < chars.len() {
+            if !is_ident(chars[j]) || (j > 0 && is_ident(chars[j - 1])) {
+                j += 1;
+                continue;
+            }
+            let mut k = j;
+            while k < chars.len() && is_ident(chars[k]) {
+                k += 1;
+            }
+            let name: String = chars[j..k].iter().collect();
+            let mut m = k;
+            while m < chars.len() && chars[m] == ' ' {
+                m += 1;
+            }
+            if m >= chars.len() || chars[m] != '(' {
+                j = k;
+                continue;
+            }
+            if KEYWORDS.contains(&name.as_str())
+                || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+            {
+                j = k;
+                continue;
+            }
+            let is_method = j > 0 && chars[j - 1] == '.';
+            if name == "lock" && is_method {
+                let (recv, bare) = self.receiver(fid, idx, &chars[..j - 1]);
+                let (s, e) = self.stmt_bounds(fi, idx);
+                let binding = self.stmt_has_let(fi, s, e);
+                locks.push(LockSite { name: recv, bare, line: s + 1, stmt_end: e + 1, binding });
+                j = k;
+                continue;
+            }
+            let cand = self.resolve(fid, &name, is_method);
+            if !cand.is_empty() {
+                let (s, e) = self.stmt_bounds(fi, idx);
+                let arg = first_arg_ident(&chars, m);
+                for callee in cand {
+                    sites.push(CallSite {
+                        callee,
+                        line: s + 1,
+                        stmt_end: e + 1,
+                        arg: arg.clone(),
+                    });
+                }
+            }
+            j = k;
+        }
+    }
+
+    fn stmt_has_let(&self, fi: usize, s: usize, e: usize) -> bool {
+        let fm = &self.files[fi];
+        fm.lines[s..=e.min(fm.lines.len() - 1)]
+            .iter()
+            .any(|li| super::rules::has_token(&li.code, "let"))
+    }
+
+    /// Identifier chain ending at the `.` of `.lock(` — may span joined
+    /// continuation lines. Returns (last segment, bare?): bare means the
+    /// chain is a single identifier (a local whose identity the call site
+    /// decides, e.g. a generic helper's parameter).
+    fn receiver(&self, fid: usize, idx: usize, before_dot: &[char]) -> (String, bool) {
+        let f = &self.fns[fid];
+        let fm = &self.files[f.file];
+        let (s, _) = self.stmt_bounds(f.file, idx);
+        let mut text: String =
+            fm.lines[s..idx].iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join(" ");
+        text.push(' ');
+        text.extend(before_dot.iter());
+        let t: Vec<char> = text.chars().collect();
+        let mut end = t.len();
+        while end > 0 && t[end - 1] == ' ' {
+            end -= 1;
+        }
+        let mut i = end;
+        let mut depth = 0usize;
+        while i > 0 {
+            let c = t[i - 1];
+            if c == ']' {
+                depth += 1;
+                i -= 1;
+            } else if c == '[' {
+                depth = depth.saturating_sub(1);
+                i -= 1;
+            } else if depth > 0 {
+                i -= 1;
+            } else if is_ident(c) || c == '.' {
+                i -= 1;
+            } else if c == ':' && i > 1 && t[i - 2] == ':' {
+                i -= 2;
+            } else if c == ' '
+                && ((i > 1 && (t[i - 2] == '.' || t[i - 2] == ':'))
+                    || (i < end && t[i] == '.'))
+            {
+                // whitespace inside a chain split across joined lines:
+                // `self.obs\n.tracer\n.lock()`
+                i -= 1;
+            } else {
+                break;
+            }
+        }
+        let chain: String = t[i..end].iter().collect();
+        let joined = chain.trim().replace("::", ".");
+        let segs: Vec<String> = joined
+            .split('.')
+            .map(|p| p.trim().split('[').next().unwrap_or("").to_string())
+            .filter(|p| !p.is_empty())
+            .collect();
+        let seg = segs.last().cloned().unwrap_or_else(|| "?".to_string());
+        let bare = segs.len() <= 1;
+        (seg, bare)
+    }
+
+    fn resolve(&self, fid: usize, name: &str, is_method: bool) -> Vec<usize> {
+        let Some(ids) = self.by_name.get(name) else { return Vec::new() };
+        let file = self.fns[fid].file;
+        let same: Vec<usize> =
+            ids.iter().copied().filter(|&i| self.fns[i].file == file && i != fid).collect();
+        if is_method && STD_METHODS.contains(&name) {
+            return same;
+        }
+        if !same.is_empty() {
+            return same;
+        }
+        ids.iter().copied().filter(|&i| i != fid).collect()
+    }
+
+    // ------------------------------------------------------- reachability
+
+    /// BFS closure from `roots`. Returns the visited ids (sorted) and a
+    /// parent map for shortest-chain reporting.
+    pub fn closure(&self, roots: &[usize]) -> (Vec<usize>, BTreeMap<usize, Option<usize>>) {
+        let mut parent: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for &r in roots {
+            if let std::collections::btree_map::Entry::Vacant(e) = parent.entry(r) {
+                e.insert(None);
+                queue.push_back(r);
+            }
+        }
+        while let Some(fid) = queue.pop_front() {
+            for site in &self.calls[fid] {
+                if let std::collections::btree_map::Entry::Vacant(e) = parent.entry(site.callee) {
+                    e.insert(Some(fid));
+                    queue.push_back(site.callee);
+                }
+            }
+        }
+        (parent.keys().copied().collect(), parent)
+    }
+
+    /// Root-to-`fid` call chain as ` -> `-joined fn names, capped at
+    /// `limit` hops.
+    pub fn chain(
+        &self,
+        parent: &BTreeMap<usize, Option<usize>>,
+        fid: usize,
+        limit: usize,
+    ) -> String {
+        let mut names = Vec::new();
+        let mut cur = Some(fid);
+        while let Some(id) = cur {
+            if names.len() >= limit {
+                break;
+            }
+            names.push(self.fns[id].name.clone());
+            cur = parent.get(&id).copied().flatten();
+        }
+        names.reverse();
+        names.join(" -> ")
+    }
+}
+
+fn at_token(code: &[char], j: usize, tok: &str) -> bool {
+    let tchars: Vec<char> = tok.chars().collect();
+    if j + tchars.len() > code.len() || code[j..j + tchars.len()] != tchars[..] {
+        return false;
+    }
+    if j > 0 && is_ident(code[j - 1]) {
+        return false;
+    }
+    let k = j + tchars.len();
+    k >= code.len() || !is_ident(code[k])
+}
+
+/// Trailing identifier of a call's first argument: `locked(&self.obs.ttft)`
+/// yields `ttft`, `locked(cluster)` yields `cluster`.
+fn first_arg_ident(chars: &[char], open_paren: usize) -> Option<String> {
+    let mut depth = 1usize;
+    let mut end = open_paren + 1;
+    while end < chars.len() {
+        match chars[end] {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            ',' if depth == 1 => break,
+            _ => {}
+        }
+        end += 1;
+    }
+    let arg: String = chars[open_paren + 1..end].iter().collect();
+    let arg = arg.trim().trim_start_matches('&').replace("mut ", "");
+    let dotted = arg.replace("::", ".");
+    let seg = dotted.split('.').next_back().unwrap_or("");
+    let seg = seg.split('[').next().unwrap_or("");
+    let seg: String = seg.chars().filter(|&c| is_ident(c)).collect();
+    if seg.is_empty() {
+        None
+    } else {
+        Some(seg)
+    }
+}

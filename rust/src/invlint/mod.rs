@@ -20,6 +20,7 @@
 //! corpus lives in `tests/invlint_fixtures/` (one positive + one negative
 //! fixture per rule, exercised by `tests/invlint_self.rs`).
 
+pub mod graph;
 pub mod rules;
 pub mod scan;
 
@@ -29,25 +30,51 @@ use std::path::{Path, PathBuf};
 pub use rules::{Finding, RULE_IDS};
 pub use scan::FileModel;
 
-/// Lint one source text under a display path (the unit the self-test
-/// corpus drives). Path suffixes select which rules apply — fixtures mimic
-/// real layouts like `.../simulator/engine.rs`.
+/// Lint one source text under a display path: the per-file rules plus the
+/// crate-wide rules run over a one-file "crate". Path suffixes select which
+/// rules apply — fixtures mimic real layouts like `.../simulator/engine.rs`.
 pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
-    rules::check(&scan::scan(path, src))
+    lint_sources(&[(path, src)])
 }
 
-/// Lint every `.rs` file under `root` (recursively, sorted for
-/// deterministic output order).
-pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
-    let mut files = Vec::new();
-    collect_rs(root, &mut files)?;
-    files.sort();
+/// Lint a set of sources as one crate: per-file rules on each file, then
+/// the interprocedural rules (digest-taint, barrier-ownership, lock-order,
+/// accounted-failure) over the whole set. Findings are globally sorted by
+/// `(path, line, rule, msg)` — two scans of the same input are
+/// byte-identical.
+pub fn lint_sources(sources: &[(&str, &str)]) -> Vec<Finding> {
+    let files: Vec<FileModel> = sources.iter().map(|(path, src)| scan::scan(path, src)).collect();
     let mut out = Vec::new();
-    for p in &files {
-        let src = std::fs::read_to_string(p)?;
-        out.extend(lint_source(&p.display().to_string(), &src));
+    for fm in &files {
+        out.extend(rules::check(fm));
     }
-    Ok(out)
+    out.extend(rules::check_crate(&files));
+    sort_findings(&mut out);
+    out
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted) as one crate.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut sources = Vec::new();
+    for p in &paths {
+        sources.push((p.display().to_string(), std::fs::read_to_string(p)?));
+    }
+    let borrowed: Vec<(&str, &str)> =
+        sources.iter().map(|(p, s)| (p.as_str(), s.as_str())).collect();
+    Ok(lint_sources(&borrowed))
+}
+
+fn sort_findings(out: &mut [Finding]) {
+    out.sort_by(|a, b| {
+        a.path
+            .cmp(&b.path)
+            .then_with(|| a.line.cmp(&b.line))
+            .then_with(|| a.rule.cmp(b.rule))
+            .then_with(|| a.msg.cmp(&b.msg))
+    });
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {

@@ -5,8 +5,10 @@
 //! reasons. The catalog lives in `docs/static-analysis.md`; the prose
 //! invariants each rule mechanizes live in ROADMAP.md.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
+use super::graph::Graph;
 use super::scan::{FileModel, LineInfo};
 
 /// Every rule id `invlint: allow(...)` may name.
@@ -17,6 +19,10 @@ pub const RULE_IDS: &[&str] = &[
     "summary-streamhist",
     "no-wallclock",
     "traced-guard",
+    "digest-taint",
+    "barrier-ownership",
+    "lock-order",
+    "accounted-failure",
     "bad-annotation",
 ];
 
@@ -327,6 +333,448 @@ fn rule_traced_guard(fm: &FileModel, out: &mut Vec<Finding>) {
             }
         }
     }
+}
+
+// -------------------------------------------------- crate-wide (graph) rules
+
+/// Run the interprocedural rules over the whole scanned file set: build the
+/// def/call graph once, then digest-taint, barrier-ownership, lock-order,
+/// accounted-failure. Callers are expected to sort the combined per-file +
+/// crate-wide findings by `(path, line, rule, msg)` for deterministic output.
+pub fn check_crate(files: &[FileModel]) -> Vec<Finding> {
+    let g = Graph::build(files);
+    let mut out = Vec::new();
+    rule_digest_taint(&g, &mut out);
+    rule_barrier_ownership(&g, &mut out);
+    rule_lock_order(&g, &mut out);
+    rule_accounted_failure(&g, &mut out);
+    out
+}
+
+fn push_at(out: &mut Vec<Finding>, path: &str, idx: usize, rule: &'static str, msg: String) {
+    out.push(Finding { path: path.to_string(), line: idx + 1, rule, msg });
+}
+
+/// Nondeterminism sources for `digest-taint` (R7): each makes state that the
+/// golden digests fold depend on something outside the simulated world.
+const TAINT_TOKENS: &[(&str, &str)] = &[
+    ("Instant", "wall-clock read"),
+    ("SystemTime", "wall-clock read"),
+    ("DefaultHasher", "nondeterministically seeded hasher"),
+    ("RandomState", "nondeterministically seeded hasher"),
+    ("HashMap", "nondeterministic iteration order"),
+    ("HashSet", "nondeterministic iteration order"),
+    ("thread::current", "thread identity"),
+    ("ThreadId", "thread identity"),
+    ("as *const", "pointer value as identity"),
+    ("as *mut", "pointer value as identity"),
+];
+
+/// Any fn transitively reachable from the sim engine that touches a
+/// nondeterminism source is a finding (R7). Files already covered by the
+/// per-file `no-wallclock` (digest-folded paths) are skipped — this rule
+/// extends the same invariant across the call graph into everything else
+/// the engine reaches.
+fn rule_digest_taint(g: &Graph, out: &mut Vec<Finding>) {
+    let roots: Vec<usize> = g
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| !f.test && g.files[f.file].path.ends_with("simulator/engine.rs"))
+        .map(|(i, _)| i)
+        .collect();
+    let (seen, parent) = g.closure(&roots);
+    for &fid in &seen {
+        let f = &g.fns[fid];
+        let fm = &g.files[f.file];
+        if digest_folded(&fm.path) {
+            continue; // the per-file no-wallclock rule already binds here
+        }
+        for (idx, li, code) in g.fn_lines(fid) {
+            if li.test || allowed(li, "digest-taint") {
+                continue;
+            }
+            if let Some((tok, why)) = TAINT_TOKENS.iter().find(|(t, _)| has_token(&code, t)) {
+                push_at(
+                    out,
+                    &fm.path,
+                    idx,
+                    "digest-taint",
+                    format!(
+                        "`{tok}` ({why}) is reachable from the sim engine via `{}` — \
+                         nondeterminism here folds into the golden digests; use simulated \
+                         time / util::fxhash, or cut the call edge",
+                        g.chain(&parent, fid, 6)
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Cluster-global mutations only the barrier may perform (R8): directory
+/// publish/retract, controller ticks, cross-shard instance access.
+const BARRIER_TOKENS: &[&str] =
+    &[".publish(", ".retract(", ".retract_all(", "controller_tick(", "inst_ref("];
+
+/// Functions reachable from `worker-phase` roots but not from any
+/// `barrier-phase` root may not touch cluster-global state (R8): workers own
+/// their shard, the barrier owns the cluster — cross-shard effects travel as
+/// boundary messages. Fns reachable from both phases are exempt by design
+/// (shared helpers run under whichever phase called them).
+fn rule_barrier_ownership(g: &Graph, out: &mut Vec<Finding>) {
+    let w_roots: Vec<usize> = g
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.worker && !f.test)
+        .map(|(i, _)| i)
+        .collect();
+    if w_roots.is_empty() {
+        return;
+    }
+    let b_roots: Vec<usize> = g
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.barrier && !f.test)
+        .map(|(i, _)| i)
+        .collect();
+    let (w_seen, w_parent) = g.closure(&w_roots);
+    let (b_seen, _) = g.closure(&b_roots);
+    let b_set: BTreeSet<usize> = b_seen.into_iter().collect();
+    for &fid in &w_seen {
+        if b_set.contains(&fid) {
+            continue;
+        }
+        let f = &g.fns[fid];
+        let fm = &g.files[f.file];
+        for (idx, li, code) in g.fn_lines(fid) {
+            if li.test || allowed(li, "barrier-ownership") {
+                continue;
+            }
+            if let Some(tok) = BARRIER_TOKENS.iter().find(|t| has_token(&code, t)) {
+                push_at(
+                    out,
+                    &fm.path,
+                    idx,
+                    "barrier-ownership",
+                    format!(
+                        "`{tok}` in `{}`, which is reachable only from worker-phase code — \
+                         workers own their shard; cluster-global effects must travel as \
+                         boundary messages the barrier applies",
+                        g.chain(&w_parent, fid, 6)
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Real-plane modules whose lock acquisitions feed the lock-order graph.
+const LOCK_SCOPE_DIRS: &[&str] = &["instance", "obs", "api"];
+
+fn in_lock_scope(path: &str) -> bool {
+    LOCK_SCOPE_DIRS.iter().any(|d| in_dir(path, d))
+}
+
+/// Propagate held-lock sets along call edges and report any cycle in the
+/// resulting lock-order graph (R9). Locks are identified by the last
+/// segment of the receiver chain (`self.obs.tracer.lock()` -> `tracer`);
+/// bare single-identifier receivers inside a directly-called helper are
+/// substituted with the call site's first-argument identifier
+/// (`locked(cluster)` -> `cluster`), and bare names deeper than one call
+/// are dropped as alias noise. Same-name locks are assumed to be the same
+/// object; self-edges are suppressed (mostly cross-object name collisions).
+fn rule_lock_order(g: &Graph, out: &mut Vec<Finding>) {
+    // (held, acquired) -> representative (path, line, fn name, detail)
+    let mut edges: BTreeMap<(String, String), (String, usize, String, String)> = BTreeMap::new();
+    for (fid, f) in g.fns.iter().enumerate() {
+        let fm = &g.files[f.file];
+        if f.test || !in_lock_scope(&fm.path) {
+            continue;
+        }
+        let ranges = direct_lock_ranges(g, fid);
+        for (a, _ab, ai, ae, aallow) in &ranges {
+            if *aallow {
+                continue;
+            }
+            // a second direct acquisition while `a` is held
+            for (b, _bb, bi, _be, ballow) in &ranges {
+                if *ballow || bi <= ai || bi > ae || a == b {
+                    continue;
+                }
+                edges.entry((a.clone(), b.clone())).or_insert_with(|| {
+                    (
+                        fm.path.clone(),
+                        bi + 1,
+                        f.name.clone(),
+                        format!("`{}` acquires `{b}` while holding `{a}`", f.name),
+                    )
+                });
+            }
+            // calls into lock-taking callees while `a` is held
+            for site in &g.calls[fid] {
+                let ci = site.line - 1;
+                if ci <= *ai || ci > *ae {
+                    continue;
+                }
+                if allowed(&fm.lines[ci], "lock-order") {
+                    continue;
+                }
+                let callee = site.callee;
+                let mut inner: BTreeSet<String> = BTreeSet::new();
+                for ls in &g.locks[callee] {
+                    let name = if ls.bare { site.arg.clone() } else { Some(ls.name.clone()) };
+                    if let Some(n) = name {
+                        inner.insert(n);
+                    }
+                }
+                let mut seen = BTreeSet::new();
+                for (n, bare) in closure_locks(g, callee, 1, &mut seen) {
+                    if !bare {
+                        inner.insert(n);
+                    }
+                }
+                for b in inner {
+                    if *a == b {
+                        continue;
+                    }
+                    edges.entry((a.clone(), b.clone())).or_insert_with(|| {
+                        (
+                            fm.path.clone(),
+                            ci + 1,
+                            f.name.clone(),
+                            format!(
+                                "`{}` holds `{a}` across a call to `{}` which acquires `{b}`",
+                                f.name, g.fns[callee].name
+                            ),
+                        )
+                    });
+                }
+            }
+        }
+    }
+    let mut adj: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a.clone()).or_default().insert(b.clone());
+    }
+    for cyc in find_cycles(&adj) {
+        let rep = cyc.iter().min().cloned().unwrap_or_default();
+        let at = cyc.iter().position(|n| *n == rep).unwrap_or(0);
+        let ordered: Vec<String> = cyc[at..].iter().chain(cyc[..at].iter()).cloned().collect();
+        let mut sites = Vec::new();
+        for i in 0..ordered.len() {
+            let x = &ordered[i];
+            let y = &ordered[(i + 1) % ordered.len()];
+            if let Some(s) = edges.get(&(x.clone(), y.clone())) {
+                sites.push(s.clone());
+            }
+        }
+        sites.sort();
+        let Some((path, line, _fn, _d)) = sites.first().cloned() else { continue };
+        let detail: Vec<String> = sites.iter().map(|(_, _, _, d)| d.clone()).collect();
+        let mut cycle_str = ordered.join(" -> ");
+        cycle_str.push_str(" -> ");
+        cycle_str.push_str(&ordered[0]);
+        out.push(Finding {
+            path,
+            line,
+            rule: "lock-order",
+            msg: format!("lock-order cycle {cycle_str}: {}", detail.join("; ")),
+        });
+    }
+}
+
+/// `(name, bare, 0-based acquire idx, 0-based live-end idx, allowed?)` for
+/// fn `fid`'s own lock sites. A `let`-bound guard lives to the end of its
+/// block; a temporary guard lives for its statement.
+fn direct_lock_ranges(g: &Graph, fid: usize) -> Vec<(String, bool, usize, usize, bool)> {
+    let f = &g.fns[fid];
+    let fm = &g.files[f.file];
+    let mut out = Vec::new();
+    for ls in &g.locks[fid] {
+        let idx = ls.line - 1;
+        let end = if ls.binding { g.block_end(f, idx) } else { ls.stmt_end - 1 };
+        out.push((ls.name.clone(), ls.bare, idx, end, allowed(&fm.lines[idx], "lock-order")));
+    }
+    out
+}
+
+/// Lock names acquired anywhere in `fid`'s transitive closure, as
+/// `(name, bare)`. Bare names deeper than the direct callee are dropped —
+/// without the call site there is nothing to substitute them with.
+fn closure_locks(
+    g: &Graph,
+    fid: usize,
+    depth: usize,
+    seen: &mut BTreeSet<usize>,
+) -> Vec<(String, bool)> {
+    if seen.contains(&fid) {
+        return Vec::new();
+    }
+    seen.insert(fid);
+    let mut names: BTreeSet<(String, bool)> = BTreeSet::new();
+    for ls in &g.locks[fid] {
+        if ls.bare && depth > 0 {
+            continue;
+        }
+        names.insert((ls.name.clone(), ls.bare));
+    }
+    for site in &g.calls[fid] {
+        for (n, b) in closure_locks(g, site.callee, depth + 1, seen) {
+            if b && depth > 0 {
+                continue;
+            }
+            names.insert((n, b));
+        }
+    }
+    names.into_iter().collect()
+}
+
+/// Tarjan SCCs over the lock-name graph; every SCC of size > 1 (or with a
+/// self-loop) is returned, nodes sorted, list sorted — deterministic.
+fn find_cycles(adj: &BTreeMap<String, BTreeSet<String>>) -> Vec<Vec<String>> {
+    struct T<'g> {
+        adj: &'g BTreeMap<String, BTreeSet<String>>,
+        index: BTreeMap<String, usize>,
+        low: BTreeMap<String, usize>,
+        stack: Vec<String>,
+        on: BTreeSet<String>,
+        counter: usize,
+        sccs: Vec<Vec<String>>,
+    }
+    impl T<'_> {
+        fn strong(&mut self, v: &str) {
+            self.index.insert(v.to_string(), self.counter);
+            self.low.insert(v.to_string(), self.counter);
+            self.counter += 1;
+            self.stack.push(v.to_string());
+            self.on.insert(v.to_string());
+            if let Some(nexts) = self.adj.get(v) {
+                for w in nexts {
+                    if !self.index.contains_key(w) {
+                        self.strong(w);
+                        let lw = self.low[w];
+                        let lv = self.low.get_mut(v).expect("visited");
+                        *lv = (*lv).min(lw);
+                    } else if self.on.contains(w) {
+                        let iw = self.index[w];
+                        let lv = self.low.get_mut(v).expect("visited");
+                        *lv = (*lv).min(iw);
+                    }
+                }
+            }
+            if self.low[v] == self.index[v] {
+                let mut comp = Vec::new();
+                while let Some(w) = self.stack.pop() {
+                    self.on.remove(&w);
+                    let done = w == v;
+                    comp.push(w);
+                    if done {
+                        break;
+                    }
+                }
+                let self_loop = comp.len() == 1 && self.adj.get(v).is_some_and(|n| n.contains(v));
+                if comp.len() > 1 || self_loop {
+                    comp.sort();
+                    self.sccs.push(comp);
+                }
+            }
+        }
+    }
+    let mut nodes: BTreeSet<String> = adj.keys().cloned().collect();
+    for ws in adj.values() {
+        nodes.extend(ws.iter().cloned());
+    }
+    let mut t = T {
+        adj,
+        index: BTreeMap::new(),
+        low: BTreeMap::new(),
+        stack: Vec::new(),
+        on: BTreeSet::new(),
+        counter: 0,
+        sccs: Vec::new(),
+    };
+    for v in &nodes {
+        if !t.index.contains_key(v) {
+            t.strong(v);
+        }
+    }
+    t.sccs.sort();
+    t.sccs
+}
+
+/// Real-plane modules where a failure branch must be accounted for.
+const FAIL_SCOPE_DIRS: &[&str] = &["instance", "api"];
+
+/// Tokens that mean a fn handles a failure path.
+const FAILURE_TOKENS: &[&str] = &["RecvTimeoutError", "TryRecvError", ".is_err(", "ErrorKind"];
+
+/// Tokens that mean the failure is accounted: a registry counter bump, a
+/// dead-letter synthesis, or a typed collect error.
+const ACCOUNT_TOKENS: &[&str] =
+    &[".inc(", ".add(", "dead_letter", "CollectError::", "push_fault", "record_fault"];
+
+/// In real-plane modules, a fn that handles an `Err`/timeout/dead branch
+/// must either propagate a typed error (`Result<...>` return) or bump a
+/// counter / synthesize a dead-letter somewhere in its reachable body
+/// (R10) — the "exactly-once, never silent" robustness invariant.
+fn rule_accounted_failure(g: &Graph, out: &mut Vec<Finding>) {
+    for (fid, f) in g.fns.iter().enumerate() {
+        let fm = &g.files[f.file];
+        if f.test || !FAIL_SCOPE_DIRS.iter().any(|d| in_dir(&fm.path, d)) {
+            continue;
+        }
+        let mut hit: Option<(usize, &str)> = None;
+        'lines: for (idx, li, code) in g.fn_lines(fid) {
+            if li.test || allowed(li, "accounted-failure") {
+                continue;
+            }
+            for tok in FAILURE_TOKENS {
+                if has_token(&code, tok) {
+                    hit = Some((idx, tok));
+                    break 'lines;
+                }
+            }
+        }
+        let Some((idx, tok)) = hit else { continue };
+        if f.sig.contains("Result<") {
+            continue; // typed-error propagation is accounting
+        }
+        let mut seen = BTreeSet::new();
+        if body_closure_has_accounting(g, fid, &mut seen) {
+            continue;
+        }
+        push_at(
+            out,
+            &fm.path,
+            idx,
+            "accounted-failure",
+            format!(
+                "`{}` handles a failure path (`{tok}`) but neither returns Result nor bumps \
+                 a counter / dead-letters anywhere in its reachable body — failures must be \
+                 accounted, never silently dropped",
+                f.name
+            ),
+        );
+    }
+}
+
+fn body_closure_has_accounting(g: &Graph, fid: usize, seen: &mut BTreeSet<usize>) -> bool {
+    if seen.contains(&fid) {
+        return false;
+    }
+    seen.insert(fid);
+    for (_idx, li, code) in g.fn_lines(fid) {
+        if li.test {
+            continue;
+        }
+        if ACCOUNT_TOKENS.iter().any(|t| has_token(&code, t)) {
+            return true;
+        }
+    }
+    g.calls[fid].iter().any(|site| body_closure_has_accounting(g, site.callee, seen))
 }
 
 /// Collect the argument text of a call starting just past its `(`, across

@@ -16,14 +16,18 @@
 //! // invlint: hot-path                       region: allocation-free code
 //! // invlint: report-region                  region: bounded per-run reports
 //! // invlint: derive-once                    region: sanctioned hash derivation
+//! // invlint: worker-phase                   region: per-shard worker code (call-graph root)
+//! // invlint: barrier-phase                  region: barrier-owned cluster code (call-graph root)
 //! // invlint: allow(<rule>) -- <reason>      suppress <rule> on one line
 //! ```
 //!
 //! A region annotation on its own line applies to the next `{ ... }` block
-//! (typically the body of the `fn`/`impl` declared right below it). An
-//! `allow` on a code line applies to that line; on its own line it applies
-//! to the next line that contains code. The reason after `--` is mandatory —
-//! an allow without one is itself reported (rule `bad-annotation`).
+//! (typically the body of the `fn`/`impl` declared right below it). Several
+//! region annotations may stack above one block — `run_window` is both
+//! `hot-path` and `worker-phase`. An `allow` on a code line applies to that
+//! line; on its own line it applies to the next line that contains code.
+//! The reason after `--` is mandatory — an allow without one is itself
+//! reported (rule `bad-annotation`).
 
 /// Block-region kinds a `// invlint:` annotation can open.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,6 +38,11 @@ pub enum Region {
     ReportRegion,
     /// Sanctioned content-hash derivation site (`hash-once` is lifted).
     DeriveOnce,
+    /// Per-shard worker code: a reachability root for `barrier-ownership`.
+    WorkerPhase,
+    /// Barrier-owned cluster code: the sanctioned-callers root for
+    /// `barrier-ownership`.
+    BarrierPhase,
 }
 
 /// One source line after lexing: comment/string-stripped code text plus the
@@ -49,6 +58,10 @@ pub struct LineInfo {
     pub report: bool,
     /// Inside a `// invlint: derive-once` block.
     pub derive: bool,
+    /// Inside a `// invlint: worker-phase` block.
+    pub worker: bool,
+    /// Inside a `// invlint: barrier-phase` block.
+    pub barrier: bool,
     /// Inside a `#[cfg(test)]` / `#[test]` block (all rules skip these).
     pub test: bool,
     /// Rule ids allowed on this line via `invlint: allow(...)`.
@@ -73,6 +86,8 @@ struct Frame {
     hot: bool,
     report: bool,
     derive: bool,
+    worker: bool,
+    barrier: bool,
     test: bool,
 }
 
@@ -100,14 +115,23 @@ pub fn scan(path: &str, src: &str) -> FileModel {
         FileModel { path: path.replace('\\', "/"), lines: Vec::new(), bad: Vec::new() };
     let mut stack: Vec<Frame> = Vec::new();
     let (mut hot, mut report, mut derive, mut test) = (0usize, 0usize, 0usize, 0usize);
-    let mut pending_region: Option<(Region, usize)> = None;
+    let (mut worker, mut barrier) = (0usize, 0usize);
+    // every pending region attaches to the same next `{` — regions stack
+    let mut pending_regions: Vec<(Region, usize)> = Vec::new();
     let mut pending_test = false;
     let mut pending_allows: Vec<(usize, String)> = Vec::new();
     let mut mode = Mode::Code;
 
     for (idx, raw) in src.lines().enumerate() {
         let lineno = idx + 1;
-        let start = Frame { hot: hot > 0, report: report > 0, derive: derive > 0, test: test > 0 };
+        let start = Frame {
+            hot: hot > 0,
+            report: report > 0,
+            derive: derive > 0,
+            worker: worker > 0,
+            barrier: barrier > 0,
+            test: test > 0,
+        };
         // `#[cfg(test)]` / `#[test]` marks the next block as test code. The
         // raw text is checked before brace processing so a same-line `{`
         // (e.g. `#[cfg(test)] mod tests {`) still lands inside the frame.
@@ -174,17 +198,22 @@ pub fn scan(path: &str, src: &str) -> FileModel {
                     } else if c == '\'' {
                         i = consume_quote(&chars, i, &mut code);
                     } else if c == '{' {
-                        let r = pending_region.take().map(|(r, _)| r);
-                        let f = Frame {
-                            hot: r == Some(Region::HotPath),
-                            report: r == Some(Region::ReportRegion),
-                            derive: r == Some(Region::DeriveOnce),
-                            test: pending_test,
-                        };
+                        let mut f = Frame { test: pending_test, ..Frame::default() };
+                        for (r, _) in pending_regions.drain(..) {
+                            match r {
+                                Region::HotPath => f.hot = true,
+                                Region::ReportRegion => f.report = true,
+                                Region::DeriveOnce => f.derive = true,
+                                Region::WorkerPhase => f.worker = true,
+                                Region::BarrierPhase => f.barrier = true,
+                            }
+                        }
                         pending_test = false;
                         hot += f.hot as usize;
                         report += f.report as usize;
                         derive += f.derive as usize;
+                        worker += f.worker as usize;
+                        barrier += f.barrier as usize;
                         test += f.test as usize;
                         stack.push(f);
                         code.push('{');
@@ -194,6 +223,8 @@ pub fn scan(path: &str, src: &str) -> FileModel {
                             hot -= f.hot as usize;
                             report -= f.report as usize;
                             derive -= f.derive as usize;
+                            worker -= f.worker as usize;
+                            barrier -= f.barrier as usize;
                             test -= f.test as usize;
                         }
                         code.push('}');
@@ -216,8 +247,11 @@ pub fn scan(path: &str, src: &str) -> FileModel {
             match parse_annot(&text) {
                 None => {}
                 Some(Annot::Region(r)) => {
-                    if let Some((_, at)) = pending_region.replace((r, lineno)) {
-                        fm.bad.push((at, "region annotation never attached to a block".into()));
+                    if pending_regions.iter().any(|(p, _)| *p == r) {
+                        fm.bad
+                            .push((lineno, "duplicate region annotation before one block".into()));
+                    } else {
+                        pending_regions.push((r, lineno));
                     }
                 }
                 Some(Annot::Allow(rule)) => {
@@ -235,12 +269,14 @@ pub fn scan(path: &str, src: &str) -> FileModel {
             hot: start.hot,
             report: start.report,
             derive: start.derive,
+            worker: start.worker,
+            barrier: start.barrier,
             test: start.test,
             allows,
         });
     }
 
-    if let Some((_, at)) = pending_region {
+    for (_, at) in pending_regions {
         fm.bad.push((at, "region annotation never attached to a block".into()));
     }
     for (at, _) in pending_allows {
@@ -310,6 +346,8 @@ fn parse_annot(text: &str) -> Option<Annot> {
         "hot-path" => return Some(Annot::Region(Region::HotPath)),
         "report-region" => return Some(Annot::Region(Region::ReportRegion)),
         "derive-once" => return Some(Annot::Region(Region::DeriveOnce)),
+        "worker-phase" => return Some(Annot::Region(Region::WorkerPhase)),
+        "barrier-phase" => return Some(Annot::Region(Region::BarrierPhase)),
         _ => {}
     }
     if let Some(tail) = rest.strip_prefix("allow(") {

@@ -253,13 +253,30 @@ pub struct Registry {
     inner: Mutex<Instruments>,
 }
 
+/// Lock one histogram handle. Invariant panic (audited, same policy as
+/// `Registry::locked`): a poisoned histogram means a recording thread
+/// panicked mid-update and the partial state would corrupt every later
+/// percentile — stopping beats serving corrupt latency numbers.
+pub fn hist_locked(h: &Mutex<StreamHist>) -> std::sync::MutexGuard<'_, StreamHist> {
+    h.lock().expect("histogram mutex poisoned: a recording thread panicked mid-update")
+}
+
 impl Registry {
     pub fn new() -> Registry {
         Registry::default()
     }
 
+    /// Every registry lock site funnels through here. Invariant panic
+    /// (kept, audited — the PR 8 unwrap-sweep policy, same as
+    /// `api::locked`): a poisoned registry means another thread panicked
+    /// while mutating the instrument directory, and scraping metrics of
+    /// unknown consistency is worse than stopping.
+    fn locked(&self) -> std::sync::MutexGuard<'_, Instruments> {
+        self.inner.lock().expect("metrics registry mutex poisoned: a thread panicked mid-update")
+    }
+
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
         if let Some((_, c)) = inner.counters.iter().find(|(n, _)| n == name) {
             return c.clone();
         }
@@ -269,7 +286,7 @@ impl Registry {
     }
 
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
         if let Some((_, g)) = inner.gauges.iter().find(|(n, _)| n == name) {
             return g.clone();
         }
@@ -283,7 +300,7 @@ impl Registry {
     }
 
     pub fn histogram_with(&self, name: &str, cfg: HistConfig) -> Arc<Mutex<StreamHist>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.locked();
         if let Some((_, h)) = inner.hists.iter().find(|(n, _)| n == name) {
             return h.clone();
         }
@@ -298,7 +315,7 @@ impl Registry {
     /// and `_count` series. Output is sorted by name so scrapes are
     /// deterministic regardless of registration order.
     pub fn render_prometheus(&self) -> String {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.locked();
         let mut out = String::new();
 
         let mut counters: Vec<(&String, &Arc<Counter>)> =
@@ -337,7 +354,7 @@ impl Registry {
                 out.push_str(&format!("# TYPE {base} histogram\n"));
                 last_base = base;
             }
-            let h = h.lock().unwrap();
+            let h = hist_locked(h);
             for (le, cum) in h.cumulative_buckets() {
                 out.push_str(&format!("{} {cum}\n", bucket_line(name, &format!("{le}"))));
             }
@@ -351,7 +368,7 @@ impl Registry {
     /// JSON snapshot for `/status`: every instrument with its current
     /// value (histograms as count/sum/mean/p50/p90/p99).
     pub fn snapshot_json(&self) -> Json {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.locked();
         let opt = |v: Option<f64>| v.map_or(Json::Null, Json::num);
         let counters = Json::obj(
             inner.counters.iter().map(|(n, c)| (n.as_str(), Json::num(c.get() as f64))).collect(),
@@ -364,7 +381,7 @@ impl Registry {
                 .hists
                 .iter()
                 .map(|(n, h)| {
-                    let h = h.lock().unwrap();
+                    let h = hist_locked(h);
                     (
                         n.as_str(),
                         Json::obj(vec![

@@ -1215,6 +1215,7 @@ fn assemble_result(
 /// run due controller ticks, pick the next window, route its arrivals,
 /// and freeze the read-only context. Returns false when the run is over
 /// (nothing left at or before the horizon).
+// invlint: barrier-phase
 fn advance(
     shards: &mut [Shard],
     ctl: &mut Control,
@@ -2197,6 +2198,7 @@ fn apply_faults(shards: &mut [Shard], ctl: &mut Control, ctx: &mut Ctx, w: f64, 
 /// plus the frozen `ctx` — the whole function is data-race-free by
 /// construction, which is what lets windows run on parallel threads.
 // invlint: hot-path
+// invlint: worker-phase
 fn run_window(
     shard: &mut Shard,
     ctx: &Ctx,

@@ -1,0 +1,21 @@
+//! Negative twin: both accounting shapes the rule accepts — a counter
+//! bump on the swallowed failure, and typed `Result` propagation.
+
+pub fn drain_events(rx: &Receiver<u64>, dropped: &Counter) -> u64 {
+    let mut n = 0;
+    loop {
+        match rx.try_recv() {
+            Ok(v) => n += v,
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                dropped.inc();
+                break;
+            }
+        }
+    }
+    n
+}
+
+pub fn poll_once(rx: &Receiver<u64>) -> Result<u64, RecvTimeoutError> {
+    rx.recv_timeout(TICK)
+}

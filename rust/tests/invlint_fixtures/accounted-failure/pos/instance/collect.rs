@@ -1,0 +1,15 @@
+//! Positive fixture: `drain_events` swallows a channel disconnect — no
+//! `Result` in its signature, no counter bump, no dead-letter anywhere in
+//! its reachable body. The failure vanishes.
+
+pub fn drain_events(rx: &Receiver<u64>) -> u64 {
+    let mut n = 0;
+    loop {
+        match rx.try_recv() {
+            Ok(v) => n += v,
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    n
+}

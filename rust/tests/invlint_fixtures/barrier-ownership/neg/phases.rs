@@ -1,0 +1,22 @@
+//! Negative twin: workers only stage results locally; the one fn that
+//! publishes (`shared_commit`) is reachable from the barrier phase too,
+//! so it sits in the barrier's ownership closure and is exempt.
+
+// invlint: worker-phase
+pub fn run_window(d: &mut Directory) {
+    step_one(d);
+    shared_commit(d);
+}
+
+// invlint: barrier-phase
+pub fn advance(d: &mut Directory) {
+    shared_commit(d);
+}
+
+fn step_one(d: &mut Directory) {
+    d.stage(7);
+}
+
+fn shared_commit(d: &mut Directory) {
+    d.publish(7);
+}

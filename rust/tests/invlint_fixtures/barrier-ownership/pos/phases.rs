@@ -1,0 +1,21 @@
+//! Positive fixture: `step_one` is reachable from the worker phase but
+//! not from the barrier phase, yet it publishes to the shared directory —
+//! a write the barrier alone is supposed to own.
+
+// invlint: worker-phase
+pub fn run_window(d: &mut Directory) {
+    step_one(d);
+}
+
+// invlint: barrier-phase
+pub fn advance(d: &mut Directory) {
+    d.publish(commit_seq(d));
+}
+
+fn step_one(d: &mut Directory) {
+    d.publish(7);
+}
+
+fn commit_seq(_d: &Directory) -> u64 {
+    7
+}

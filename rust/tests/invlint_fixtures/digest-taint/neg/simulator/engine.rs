@@ -1,0 +1,12 @@
+//! Negative twin: same call shape, but the support helper is pure
+//! deterministic arithmetic — nothing to taint the digest.
+
+pub fn step_all(n: u64) -> u64 {
+    let mut acc = 0;
+    let mut i = 0;
+    while i < n {
+        acc += support_tick(i);
+        i += 1;
+    }
+    acc
+}

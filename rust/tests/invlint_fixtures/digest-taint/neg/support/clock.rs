@@ -1,0 +1,9 @@
+//! Helper module: deterministic — ordered map, no clock, no hashers.
+
+use std::collections::BTreeMap;
+
+pub fn support_tick(i: u64) -> u64 {
+    let mut m: BTreeMap<u64, u64> = BTreeMap::new();
+    m.insert(i, i * 3);
+    m.values().sum()
+}

@@ -1,0 +1,14 @@
+//! Positive fixture: the sim engine's step loop calls into a support
+//! module (outside the digest-folded dirs) that reads the wall clock.
+//! The taint is invisible to the per-file `no-wallclock` rule — only the
+//! call graph connects it back to the engine.
+
+pub fn step_all(n: u64) -> u64 {
+    let mut acc = 0;
+    let mut i = 0;
+    while i < n {
+        acc += support_tick(i);
+        i += 1;
+    }
+    acc
+}

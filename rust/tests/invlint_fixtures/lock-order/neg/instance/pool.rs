@@ -1,0 +1,21 @@
+//! Negative twin: every path acquires `alpha` before `beta` — the lock
+//! graph has one edge and no cycle.
+
+pub fn fill(p: &Pool) {
+    let a = p.alpha.lock().unwrap();
+    push_beta(p);
+    drop(a);
+}
+
+fn push_beta(p: &Pool) {
+    let mut b = p.beta.lock().unwrap();
+    b.push(1);
+}
+
+pub fn drain(p: &Pool) {
+    let a = p.alpha.lock().unwrap();
+    let b = p.beta.lock().unwrap();
+    consume(&a, &b);
+}
+
+fn consume(_a: &Vec<u64>, _b: &Vec<u64>) {}

@@ -1,0 +1,22 @@
+//! Positive fixture: `fill` holds `alpha` across a call into `push_beta`
+//! (which acquires `beta`), while `drain` acquires `beta` then `alpha`
+//! directly — an alpha -> beta -> alpha cycle across the call graph.
+
+pub fn fill(p: &Pool) {
+    let a = p.alpha.lock().unwrap();
+    push_beta(p);
+    drop(a);
+}
+
+fn push_beta(p: &Pool) {
+    let mut b = p.beta.lock().unwrap();
+    b.push(1);
+}
+
+pub fn drain(p: &Pool) {
+    let b = p.beta.lock().unwrap();
+    let a = p.alpha.lock().unwrap();
+    consume(&a, &b);
+}
+
+fn consume(_a: &Vec<u64>, _b: &Vec<u64>) {}

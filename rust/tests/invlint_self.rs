@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use hydrainfer::invlint::{lint_tree, Finding, RULE_IDS};
+use hydrainfer::invlint::{lint_sources, lint_tree, Finding, RULE_IDS};
 
 fn fixture_dir(rule: &str, polarity: &str) -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -23,6 +23,15 @@ fn lint_fixture(rule: &str, polarity: &str) -> Vec<Finding> {
 /// Rules with a fixture pair (every rule the analyzer knows).
 fn fixture_rules() -> Vec<&'static str> {
     RULE_IDS.to_vec()
+}
+
+fn render(fs: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in fs {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    out
 }
 
 #[test]
@@ -76,6 +85,39 @@ fn allow_without_a_reason_is_itself_an_error() {
             .any(|f| f.rule == "bad-annotation" && f.msg.contains("never attached")),
         "dangling region annotation not reported: {findings:?}"
     );
+}
+
+/// The interprocedural rules lint a *set* of files as one crate: a
+/// sim-engine fn in one file reaching a wall-clock read in another (a file
+/// the per-file `no-wallclock` rule never looks at) is reported, and the
+/// message cites the call chain that connects them.
+#[test]
+fn crate_wide_rules_link_files_and_cite_the_call_chain() {
+    let engine = "pub fn step() {\n    helper();\n}\n";
+    let helper = "pub fn helper() {\n    let _t = std::time::Instant::now();\n}\n";
+    let files = [("a/simulator/engine.rs", engine), ("a/support/h.rs", helper)];
+    let findings = lint_sources(&files);
+    let taint: Vec<&Finding> = findings.iter().filter(|f| f.rule == "digest-taint").collect();
+    assert_eq!(taint.len(), 1, "expected one digest-taint finding: {findings:?}");
+    assert_eq!(taint[0].path, "a/support/h.rs");
+    assert!(
+        taint[0].msg.contains("step -> helper"),
+        "message cites the call chain: {}",
+        taint[0].msg
+    );
+}
+
+/// Two scans of the same tree must be byte-identical — the analyzer runs
+/// in CI and a nondeterministic finding order would make its own output
+/// undiagnosable. The fixture tree is used because (unlike `src/`) it has
+/// findings to order.
+#[test]
+fn findings_are_deterministic() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/invlint_fixtures");
+    let first = render(&lint_tree(&root).expect("walk fixtures"));
+    let second = render(&lint_tree(&root).expect("walk fixtures"));
+    assert!(!first.is_empty(), "fixture tree should have findings to order");
+    assert_eq!(first, second, "two scans of the same tree diverged");
 }
 
 /// The analyzer's reason to exist: the crate's own source tree carries the
